@@ -1,0 +1,75 @@
+//! Quickstart: solve a Neural ODE and differentiate through it with MALI.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end to end on the paper's toy problem
+//! (`dz/dt = αz`, `L = z(T)²`, paper Eq. 6) where every quantity has a
+//! closed form — so you can see MALI's constant-memory gradient match the
+//! analytic one, first with native Rust dynamics and then through a real
+//! AOT-compiled HLO graph.
+
+use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::runtime::{Engine, HloDynamics};
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy};
+use mali_ode::util::mem::{fmt_bytes, MemTracker};
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let (alpha, t_end) = (0.4, 2.0);
+    let z0 = vec![1.0f32, -0.5, 0.8, 2.0];
+
+    // ---- 1. native dynamics: MALI vs the analytic gradient ---------------
+    let toy = LinearToy::new(alpha, z0.len());
+    let (gz_ref, ga_ref) = toy.analytic_grads(&z0, t_end);
+
+    let solver = solver_by_name("alf")?; // ALF: the invertible solver MALI needs
+    let mali = grad_by_name("mali")?;
+    let spec = IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-6);
+    let tracker = MemTracker::new();
+    let res = mali.grad(&toy, &*solver, &spec, &z0, &SquareLoss, tracker)?;
+
+    println!("toy problem  dz/dt = {alpha}·z,  L = z(T)²,  T = {t_end}");
+    println!("  loss                = {:.6}", res.loss);
+    println!("  dL/dz0 (MALI)       = {:?}", &res.grad_z0);
+    println!("  dL/dz0 (analytic)   = {:?}", &gz_ref);
+    println!("  dL/dα  (MALI)       = {:.5}  (analytic {:.5})", res.grad_theta[0], ga_ref);
+    println!(
+        "  forward steps N_t = {}, retained memory = {} (constant in N_t)",
+        res.stats.fwd.n_accepted,
+        fmt_bytes(res.stats.peak_mem_bytes),
+    );
+    let max_rel = res
+        .grad_z0
+        .iter()
+        .zip(&gz_ref)
+        .map(|(a, b)| ((a - b) / b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  max relative gradient error = {max_rel:.2e}");
+
+    // ---- 2. the same protocol through an AOT-compiled HLO graph ----------
+    let engine = Rc::new(Engine::from_env()?);
+    let mut hlo = HloDynamics::new(engine, "toy")?;
+    hlo.set_params(&[alpha as f32]);
+    let tracker = MemTracker::new();
+    let res_hlo = mali.grad(&hlo, &*solver, &spec, &z0, &SquareLoss, tracker)?;
+    println!("\nsame solve via the PJRT runtime (artifacts/toy.*.hlo.txt):");
+    println!("  dL/dz0 (MALI, HLO)  = {:?}", &res_hlo.grad_z0);
+    println!("  dL/dα  (MALI, HLO)  = {:.5}", res_hlo.grad_theta[0]);
+
+    // ---- 3. compare against the adjoint method's reverse error -----------
+    let dopri5 = solver_by_name("dopri5")?;
+    let adjoint = grad_by_name("adjoint")?;
+    let res_adj = adjoint.grad(&toy, &*dopri5, &spec, &z0, &SquareLoss, MemTracker::new())?;
+    let adj_rel = res_adj
+        .grad_z0
+        .iter()
+        .zip(&gz_ref)
+        .map(|(a, b)| ((a - b) / b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\nadjoint method on the same problem: max rel grad error = {adj_rel:.2e}");
+    println!("(MALI reconstructs the exact forward trajectory via ψ⁻¹; the adjoint\n re-solves it as a separate IVP and inherits that reverse-time error.)");
+    Ok(())
+}

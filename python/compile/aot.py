@@ -1,0 +1,108 @@
+"""AOT export: lower every L2 graph to HLO *text* and write the manifest.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (the version the published `xla` rust crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``  (via `make artifacts`).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides literals over a
+    # size threshold as `constant({...})`, which xla_extension 0.5.1's
+    # text parser silently zero-fills — gradients through any masked op
+    # (e.g. RealNVP coupling masks) would be zeroed.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text contains an elided literal ('{...}')")
+    return text
+
+
+def export_one(exp, out_dir):
+    # keep_unused: the manifest promises the full input list even when a
+    # graph ignores an arg (e.g. t for autonomous dynamics) — the Rust
+    # engine always supplies every declared buffer.
+    lowered = jax.jit(exp.fn, keep_unused=True).lower(*exp.args)
+    text = to_hlo_text(lowered)
+    fname = f"{exp.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # output arity from the traced avals
+    out_avals = jax.eval_shape(exp.fn, *exp.args)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    entry = {
+        "file": fname,
+        "doc": exp.doc,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in exp.args
+        ],
+        "outputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in out_avals
+        ],
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="prefix filter, e.g. 'img16' — NOTE: rewrites the manifest with "
+        "existing entries preserved for non-matching names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jax.config.update("jax_platform_name", "cpu")
+    exports, models = model.build()
+    if args.only:
+        exports = [e for e in exports if e.name.startswith(args.only)]
+
+    manifest = {"version": 1, "entries": {}, "models": models}
+    if args.only:
+        # partial regeneration must not clobber the other entries
+        prev = os.path.join(args.out_dir, "manifest.json")
+        if os.path.exists(prev):
+            with open(prev) as f:
+                manifest["entries"] = json.load(f).get("entries", {})
+    t0 = time.time()
+    for i, exp in enumerate(exports):
+        t1 = time.time()
+        manifest["entries"][exp.name] = export_one(exp, args.out_dir)
+        print(
+            f"[{i + 1:3}/{len(exports)}] {exp.name:32s} "
+            f"({time.time() - t1:5.1f}s)",
+            flush=True,
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(exports)} artifacts + manifest in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,749 @@
+"""L2 compute-graph families: for each dynamics family the standard
+executable set {f, f_vjp, alf_step, alf_inv, alf_vjp} plus model-specific
+stems/heads and the discrete baselines, all as pure functions of flat
+per-component parameter vectors.
+
+The Rust coordinator composes everything dynamic (solver loops, the four
+gradient protocols, optimizers) from these fixed-shape graphs; Python never
+runs after `make artifacts`.
+
+Forward-only graphs route through the L1 Pallas kernels
+(``kernels.alf_step``); vjp graphs differentiate the pure-jnp oracle
+(``kernels.ref``) — sound because kernel == oracle is enforced by the L1
+test suite.
+"""
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import alf_step as K
+from .kernels import ref as R
+
+# ---------------------------------------------------------------------------
+# Registry plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Export:
+    """One AOT artifact: a jax function plus its example input specs."""
+
+    name: str
+    fn: Callable
+    args: Sequence[jax.ShapeDtypeStruct]
+    doc: str = ""
+
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def param_spec(name, shape, init, **kw):
+    d = {"name": name, "shape": list(shape), "init": init}
+    d.update(kw)
+    return d
+
+
+def spec_len(specs):
+    n = 0
+    for s in specs:
+        k = 1
+        for d in s["shape"]:
+            k *= d
+        n += k
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Flat-θ (un)packing helpers
+# ---------------------------------------------------------------------------
+
+
+def unpack(theta, shapes):
+    """Split a flat θ into tensors of the given shapes (in order)."""
+    out = []
+    ofs = 0
+    for shp in shapes:
+        k = 1
+        for d in shp:
+            k *= d
+        out.append(theta[ofs : ofs + k].reshape(shp))
+        ofs += k
+    return out
+
+
+def mlp_shapes(d_in, h, d_out):
+    return [(d_in, h), (h,), (h, d_out), (d_out,)]
+
+
+def mlp_param_specs(d_in, h, d_out):
+    return [
+        param_spec("w1", (d_in, h), "glorot_uniform", fan_in=d_in, fan_out=h),
+        param_spec("b1", (h,), "zeros"),
+        param_spec("w2", (h, d_out), "glorot_uniform", fan_in=h, fan_out=d_out),
+        param_spec("b2", (d_out,), "zeros"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Generic dynamics-family builder
+#
+# A family provides f_ref(t, z, theta, *ctx) in pure jnp and optionally a
+# kernel-backed forward.  From that we derive the five standard executables.
+# ctx tensors (spline coefficients, Hutchinson probes) ride along unchanged.
+# ---------------------------------------------------------------------------
+
+
+def family_exports(
+    name,
+    batch,
+    dim,
+    theta_len,
+    f_ref,
+    f_fwd=None,
+    ctx_specs=(),
+    state_dim=None,
+):
+    """Build {f, f_vjp, step, inv, step_vjp} exports for one family.
+
+    state_dim: the solver-state width (equals dim unless the family augments
+    the state, e.g. CNF's [z, logp, ke, je]).
+    """
+    sd = state_dim or dim
+    f_fwd = f_fwd or f_ref
+    zspec = spec(batch, sd)
+    tspec = spec()
+    thspec = spec(theta_len)
+    ctx = list(ctx_specs)
+
+    def f_exec(t, z, *rest):
+        (*c, th) = rest
+        return (f_fwd(t, z, th, *c),)
+
+    def f_vjp_exec(t, z, *rest):
+        (*c, th, a) = rest
+
+        def g(zz, tt):
+            return f_ref(t, zz, tt, *c)
+
+        _, vjp = jax.vjp(g, z, th)
+        az, ath = vjp(a)
+        return az, ath
+
+    def step_exec(z, v, t, h, eta, *rest):
+        (*c, th) = rest
+        # Damped-ALF ψ with the step time t (families may be t-dependent:
+        # f is evaluated at s1 = t + h/2).
+        k1 = z + v * (h / 2.0)
+        u1 = f_fwd(t + h / 2.0, k1, th, *c)
+        v_out = (1.0 - 2.0 * eta) * v + 2.0 * eta * u1
+        z_out = k1 + v_out * (h / 2.0)
+        err = eta * h * (u1 - v)
+        return z_out, v_out, err
+
+    def inv_exec(z_out, v_out, t_out, h, eta, *rest):
+        (*c, th) = rest
+        k1 = z_out - v_out * (h / 2.0)
+        u1 = f_fwd(t_out - h / 2.0, k1, th, *c)
+        v_in = (v_out - 2.0 * eta * u1) / (1.0 - 2.0 * eta)
+        z_in = k1 - v_in * (h / 2.0)
+        return z_in, v_in
+
+    def step_vjp_exec(z, v, t, h, eta, *rest):
+        (*c, th, azo, avo) = rest
+
+        def g(zz, vv, tt):
+            k1 = zz + vv * (h / 2.0)
+            u1 = f_ref(t + h / 2.0, k1, tt, *c)
+            v_out = (1.0 - 2.0 * eta) * vv + 2.0 * eta * u1
+            z_out = k1 + v_out * (h / 2.0)
+            return z_out, v_out
+
+        _, vjp = jax.vjp(g, z, v, th)
+        az, av, ath = vjp((azo, avo))
+        return az, av, ath
+
+    def bwd_exec(z_out, v_out, t_out, h, eta, *rest):
+        """Fused MALI backward micro-step: ψ⁻¹ reconstruction followed by
+        the vjp through ψ at the reconstructed point — one executable
+        instead of two, halving the per-step PJRT round-trips of the
+        backward pass (EXPERIMENTS.md §Perf)."""
+        (*c, th, azo, avo) = rest
+        # ψ⁻¹ — written with f_ref (not the Pallas kernel) so XLA can CSE
+        # the shared k1/u1 computation with the vjp recomputation below;
+        # kernel == oracle is enforced by the L1 test suite.
+        k1 = z_out - v_out * (h / 2.0)
+        u1 = f_ref(t_out - h / 2.0, k1, th, *c)
+        v_in = (v_out - 2.0 * eta * u1) / (1.0 - 2.0 * eta)
+        z_in = k1 - v_in * (h / 2.0)
+
+        # vjp of ψ at (z_in, v_in); t = t_out − h
+        def g(zz, vv, tt):
+            kk1 = zz + vv * (h / 2.0)
+            uu1 = f_ref(t_out - h / 2.0, kk1, tt, *c)
+            vv_out = (1.0 - 2.0 * eta) * vv + 2.0 * eta * uu1
+            zz_out = kk1 + vv_out * (h / 2.0)
+            return zz_out, vv_out
+
+        _, vjp = jax.vjp(g, z_in, v_in, th)
+        az, av, ath = vjp((azo, avo))
+        return z_in, v_in, az, av, ath
+
+    # NOTE: mlpdyn() replaces entries by index (step = 2, inv = 3), so new
+    # exports must be appended at the END of this list.
+    return [
+        Export(f"{name}.f", f_exec, [tspec, zspec, *ctx, thspec], "dynamics eval"),
+        Export(
+            f"{name}.f_vjp",
+            f_vjp_exec,
+            [tspec, zspec, *ctx, thspec, zspec],
+            "dynamics vjp",
+        ),
+        Export(
+            f"{name}.step",
+            step_exec,
+            [zspec, zspec, tspec, tspec, tspec, *ctx, thspec],
+            "fused damped-ALF ψ",
+        ),
+        Export(
+            f"{name}.inv",
+            inv_exec,
+            [zspec, zspec, tspec, tspec, tspec, *ctx, thspec],
+            "fused ψ⁻¹",
+        ),
+        Export(
+            f"{name}.step_vjp",
+            step_vjp_exec,
+            [zspec, zspec, tspec, tspec, tspec, *ctx, thspec, zspec, zspec],
+            "vjp through ψ",
+        ),
+        Export(
+            f"{name}.bwd",
+            bwd_exec,
+            [zspec, zspec, tspec, tspec, tspec, *ctx, thspec, zspec, zspec],
+            "fused ψ⁻¹ + ψ-vjp (MALI backward micro-step)",
+        ),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# MLP-dynamics family (image classifiers, latent ODE): Pallas-kernel forward
+# ---------------------------------------------------------------------------
+
+
+def mlpdyn(name, batch, dim, hidden):
+    shapes = mlp_shapes(dim, hidden, dim)
+
+    def f_ref(t, z, theta):
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        return R.mlp_f(z, w1, b1, w2, b2)
+
+    def f_fwd(t, z, theta):
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        return K.mlp_f(z, w1, b1, w2, b2)
+
+    exports = family_exports(
+        name, batch, dim, spec_len(mlp_param_specs(dim, hidden, dim)), f_ref, f_fwd
+    )
+
+    # Replace the generic ψ/ψ⁻¹ with the fused Pallas kernels (exact same
+    # math; one kernel launch instead of composed HLO ops).
+    zspec, tspec = spec(batch, dim), spec()
+    thspec = spec(spec_len(mlp_param_specs(dim, hidden, dim)))
+
+    def step_kernel(z, v, t, h, eta, theta):
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        hs = jnp.reshape(h, (1,))
+        es = jnp.reshape(eta, (1,))
+        return K.alf_step(z, v, hs, es, w1, b1, w2, b2)
+
+    def inv_kernel(z_out, v_out, t_out, h, eta, theta):
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        hs = jnp.reshape(h, (1,))
+        es = jnp.reshape(eta, (1,))
+        return K.alf_inv(z_out, v_out, hs, es, w1, b1, w2, b2)
+
+    exports[2] = Export(
+        f"{name}.step",
+        step_kernel,
+        [zspec, zspec, tspec, tspec, tspec, thspec],
+        "fused damped-ALF ψ (Pallas)",
+    )
+    exports[3] = Export(
+        f"{name}.inv",
+        inv_kernel,
+        [zspec, zspec, tspec, tspec, tspec, thspec],
+        "fused ψ⁻¹ (Pallas)",
+    )
+    return exports
+
+
+def toy_family(name="toy", batch=1, dim=4):
+    """dz/dt = α·z with θ = [α] — runtime smoke tests against analytics."""
+
+    def f_ref(t, z, theta):
+        return theta[0] * z
+
+    return family_exports(name, batch, dim, 1, f_ref)
+
+
+# ---------------------------------------------------------------------------
+# Classification stems / heads (images + CDE)
+# ---------------------------------------------------------------------------
+
+
+def stem_exports(name, batch, d_in, d_out):
+    shapes = [(d_in, d_out), (d_out,)]
+    th = spec(d_in * d_out + d_out)
+
+    def fwd(x, theta):
+        w, b = unpack(theta, shapes)
+        return (jnp.tanh(x @ w + b),)
+
+    def vjp(x, theta, a):
+        def g(xx, tt):
+            w, b = unpack(tt, shapes)
+            return jnp.tanh(xx @ w + b)
+
+        _, pull = jax.vjp(g, x, theta)
+        ax, ath = pull(a)
+        return ax, ath
+
+    return [
+        Export(f"{name}.stem", fwd, [spec(batch, d_in), th], "stem x→z₀"),
+        Export(
+            f"{name}.stem_vjp",
+            vjp,
+            [spec(batch, d_in), th, spec(batch, d_out)],
+            "stem vjp (a_x for FGSM, a_θ)",
+        ),
+    ]
+
+
+def stem_param_specs(d_in, d_out):
+    return [
+        param_spec("w", (d_in, d_out), "glorot_uniform", fan_in=d_in, fan_out=d_out),
+        param_spec("b", (d_out,), "zeros"),
+    ]
+
+
+def head_exports(name, batch, d, classes):
+    shapes = [(d, classes), (classes,)]
+    th = spec(d * classes + classes)
+
+    def loss_fn(z, y1h, theta):
+        w, b = unpack(theta, shapes)
+        logits = z @ w + b
+        logp = jax.nn.log_softmax(logits, axis=1)
+        loss = -jnp.mean(jnp.sum(y1h * logp, axis=1))
+        return loss, logits
+
+    def loss_grad(z, y1h, theta):
+        (loss, logits), pull = jax.vjp(
+            lambda zz, tt: loss_fn(zz, y1h, tt), z, theta, has_aux=False
+        )
+        az, ath = pull((jnp.ones(()), jnp.zeros_like(logits)))
+        return loss, logits, az, ath
+
+    return [
+        Export(
+            f"{name}.head_loss_grad",
+            loss_grad,
+            [spec(batch, d), spec(batch, classes), th],
+            "fused softmax-CE loss + logits + (a_z, a_θ)",
+        )
+    ]
+
+
+def head_param_specs(d, classes):
+    return [
+        param_spec("w", (d, classes), "glorot_uniform", fan_in=d, fan_out=classes),
+        param_spec("b", (classes,), "zeros"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Discrete ResNet baseline sharing the ODE's f (paper §4.2: y = x + f(x))
+# ---------------------------------------------------------------------------
+
+
+def resnet_exports(name, batch, d_in, d, hidden, classes):
+    stem_shapes = [(d_in, d), (d,)]
+    f_shapes = mlp_shapes(d, hidden, d)
+    head_shapes = [(d, classes), (classes,)]
+    th_stem = spec(spec_len(stem_param_specs(d_in, d)))
+    th_f = spec(spec_len(mlp_param_specs(d, hidden, d)))
+    th_head = spec(spec_len(head_param_specs(d, classes)))
+
+    def forward(x, ts, tf, thd):
+        w, b = unpack(ts, stem_shapes)
+        z = jnp.tanh(x @ w + b)
+        w1, b1, w2, b2 = unpack(tf, f_shapes)
+        z = z + R.mlp_f(z, w1, b1, w2, b2)  # one-step-Euler residual block
+        wh, bh = unpack(thd, head_shapes)
+        return z @ wh + bh
+
+    def loss_of(x, y1h, ts, tf, thd):
+        logits = forward(x, ts, tf, thd)
+        logp = jax.nn.log_softmax(logits, axis=1)
+        return -jnp.mean(jnp.sum(y1h * logp, axis=1)), logits
+
+    def loss_grad(x, y1h, ts, tf, thd):
+        (loss, logits), pull = jax.vjp(
+            lambda a, bb, c: loss_of(x, y1h, a, bb, c), ts, tf, thd
+        )
+        gs, gf, gh = pull((jnp.ones(()), jnp.zeros_like(logits)))
+        return loss, logits, gs, gf, gh
+
+    def fwd_grad_x(x, y1h, ts, tf, thd):
+        """Loss + dL/dx — FGSM attack gradients for the ResNet."""
+        (loss, logits), pull = jax.vjp(lambda xx: loss_of(xx, y1h, ts, tf, thd), x)
+        (gx,) = pull((jnp.ones(()), jnp.zeros_like(logits)))
+        return loss, logits, gx
+
+    args = [spec(batch, d_in), spec(batch, classes), th_stem, th_f, th_head]
+    return [
+        Export(f"{name}.resnet_loss_grad", loss_grad, args, "discrete baseline loss+grads"),
+        Export(f"{name}.resnet_grad_x", fwd_grad_x, args, "FGSM input gradient"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Latent-ODE components (Table 4): GRU encoder + decoder + seq baselines
+# ---------------------------------------------------------------------------
+
+
+def gru_shapes(d_in, h):
+    # fused-gate GRU: Wz, Wr, Wh each (d_in + h, h); biases (h,)
+    return [((d_in + h), 3 * h), (3 * h,)]
+
+
+def gru_cell(x, hprev, w, b):
+    zru = jnp.concatenate([x, hprev], axis=1) @ w + b
+    h3 = zru.shape[1] // 3
+    zg = jax.nn.sigmoid(zru[:, :h3])
+    rg = jax.nn.sigmoid(zru[:, h3 : 2 * h3])
+    cand_in = jnp.concatenate([x, rg * hprev], axis=1)
+    # candidate re-uses the last third's weights applied to the gated state:
+    # a standard "fused" variant — the candidate weights live in w's last
+    # third of output columns.
+    hc = jnp.tanh(cand_in @ w[:, 2 * h3 :] + b[2 * h3 :])
+    return (1.0 - zg) * hprev + zg * hc
+
+
+def encoder_exports(name, batch, obs, t_len, h, latent):
+    wshapes = gru_shapes(obs, h)
+    out_shapes = [(h, 2 * latent), (2 * latent,)]
+    th_len = spec_len(encoder_param_specs(obs, h, latent))
+    th = spec(th_len)
+
+    def encode(seq, theta):
+        w, b, wo, bo = unpack(theta, wshapes + out_shapes)
+
+        def scan_fn(hprev, xt):
+            hnew = gru_cell(xt, hprev, w, b)
+            return hnew, None
+
+        h0 = jnp.zeros((batch, h), dtype=F32)
+        # run the GRU backwards in time (latent-ODE convention)
+        seq_t = jnp.flip(jnp.transpose(seq, (1, 0, 2)), axis=0)
+        h_last, _ = jax.lax.scan(scan_fn, h0, seq_t)
+        out = h_last @ wo + bo
+        return out[:, :latent], out[:, latent:]
+
+    def encode_vjp(seq, theta, a_mu, a_lv):
+        _, pull = jax.vjp(lambda tt: encode(seq, tt), theta)
+        (ath,) = pull((a_mu, a_lv))
+        return (ath,)
+
+    return [
+        Export(
+            f"{name}.enc",
+            encode,
+            [spec(batch, t_len, obs), th],
+            "GRU encoder → (μ, logσ²)",
+        ),
+        Export(
+            f"{name}.enc_vjp",
+            encode_vjp,
+            [spec(batch, t_len, obs), th, spec(batch, latent), spec(batch, latent)],
+            "encoder vjp",
+        ),
+    ]
+
+
+def encoder_param_specs(obs, h, latent):
+    return [
+        param_spec("gru_w", ((obs + h), 3 * h), "glorot_uniform", fan_in=obs + h, fan_out=3 * h),
+        param_spec("gru_b", (3 * h,), "zeros"),
+        param_spec("out_w", (h, 2 * latent), "glorot_uniform", fan_in=h, fan_out=2 * latent),
+        param_spec("out_b", (2 * latent,), "zeros"),
+    ]
+
+
+def decoder_exports(name, batch, latent, obs):
+    shapes = [(latent, obs), (obs,)]
+    th = spec(spec_len(decoder_param_specs(latent, obs)))
+
+    def dec(z, theta):
+        w, b = unpack(theta, shapes)
+        return (z @ w + b,)
+
+    def dec_vjp(z, theta, a):
+        def g(zz, tt):
+            w, b = unpack(tt, shapes)
+            return zz @ w + b
+
+        _, pull = jax.vjp(g, z, theta)
+        az, ath = pull(a)
+        return az, ath
+
+    return [
+        Export(f"{name}.dec", dec, [spec(batch, latent), th], "latent decoder"),
+        Export(
+            f"{name}.dec_vjp",
+            dec_vjp,
+            [spec(batch, latent), th, spec(batch, obs)],
+            "decoder vjp",
+        ),
+    ]
+
+
+def decoder_param_specs(latent, obs):
+    return [
+        param_spec("w", (latent, obs), "glorot_uniform", fan_in=latent, fan_out=obs),
+        param_spec("b", (obs,), "zeros"),
+    ]
+
+
+def seq_baseline_exports(name, batch, obs, t_in, t_out, h, cell):
+    """RNN / GRU sequence baselines (Table 4): encode the observed prefix,
+    roll out `t_out` predictions, fused MSE loss + grads."""
+    if cell == "gru":
+        wshapes = gru_shapes(obs, h)
+    else:
+        wshapes = [((obs + h), h), (h,)]
+    out_shapes = [(h, obs), (obs,)]
+    th_len = spec_len(seq_baseline_param_specs(obs, h, cell))
+    th = spec(th_len)
+
+    def run(seq, theta):
+        ws = unpack(theta, wshapes + out_shapes)
+        if cell == "gru":
+            w, b, wo, bo = ws
+
+            def step(hprev, xt):
+                return gru_cell(xt, hprev, w, b), None
+
+        else:
+            w, b, wo, bo = ws
+
+            def step(hprev, xt):
+                return jnp.tanh(jnp.concatenate([xt, hprev], axis=1) @ w + b), None
+
+        h0 = jnp.zeros((batch, h), dtype=F32)
+        seq_t = jnp.transpose(seq, (1, 0, 2))
+        hT, _ = jax.lax.scan(step, h0, seq_t)
+
+        # autoregressive rollout
+        def roll(carry, _):
+            hprev, xprev = carry
+            hnew = (
+                gru_cell(xprev, hprev, w, b)
+                if cell == "gru"
+                else jnp.tanh(jnp.concatenate([xprev, hprev], axis=1) @ w + b)
+            )
+            xnew = hnew @ wo + bo
+            return (hnew, xnew), xnew
+
+        x0 = seq[:, -1, :]
+        _, preds = jax.lax.scan(roll, (hT, x0), None, length=t_out)
+        return jnp.transpose(preds, (1, 0, 2))  # (B, t_out, obs)
+
+    def loss_grad(seq, target, theta):
+        def l(tt):
+            p = run(seq, tt)
+            return jnp.mean((p - target) ** 2)
+
+        loss, g = jax.value_and_grad(l)(theta)
+        return loss, g
+
+    return [
+        Export(
+            f"{name}.loss_grad",
+            loss_grad,
+            [spec(batch, t_in, obs), spec(batch, t_out, obs), th],
+            f"{cell} seq baseline fused loss+grad",
+        ),
+        Export(
+            f"{name}.predict",
+            lambda seq, theta: (run(seq, theta),),
+            [spec(batch, t_in, obs), th],
+            f"{cell} rollout predictions",
+        ),
+    ]
+
+
+def seq_baseline_param_specs(obs, h, cell):
+    mult = 3 if cell == "gru" else 1
+    return [
+        param_spec("w", ((obs + h), mult * h), "glorot_uniform", fan_in=obs + h, fan_out=mult * h),
+        param_spec("b", (mult * h,), "zeros"),
+        param_spec("out_w", (h, obs), "glorot_uniform", fan_in=h, fan_out=obs),
+        param_spec("out_b", (obs,), "zeros"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Neural-CDE dynamics (Table 5): dz = f_θ(z) · Ẋ(t), spline evaluated inside
+# ---------------------------------------------------------------------------
+
+
+def cde_family(name, batch, dim, hidden, channels, pieces, t_total):
+    """ctx = spline coefficients (B, channels, pieces, 4) over a uniform
+    grid on [0, t_total]; the graph evaluates Ẋ(t) by piece lookup."""
+    field_specs = mlp_param_specs(dim, hidden, dim * channels)
+    shapes = mlp_shapes(dim, hidden, dim * channels)
+    dt_piece = t_total / pieces
+
+    def xdot(t, coeffs):
+        # piece index and local offset
+        idx = jnp.clip(jnp.floor(t / dt_piece).astype(jnp.int32), 0, pieces - 1)
+        u = t - idx.astype(F32) * dt_piece
+        cf = coeffs[:, :, idx, :]  # (B, C, 4)
+        return cf[..., 1] + 2.0 * cf[..., 2] * u + 3.0 * cf[..., 3] * u * u  # (B, C)
+
+    def f_ref(t, z, theta, coeffs):
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        field = R.mlp_f(z, w1, b1, w2, b2)  # (B, dim*channels)
+        field = jnp.tanh(field).reshape(z.shape[0], dim, channels)
+        dx = xdot(t, coeffs)  # (B, C)
+        return jnp.einsum("bdc,bc->bd", field, dx)
+
+    ctx = [spec(batch, channels, pieces, 4)]
+    return family_exports(
+        name, batch, dim, spec_len(field_specs), f_ref, ctx_specs=ctx
+    )
+
+
+# ---------------------------------------------------------------------------
+# FFJORD / CNF dynamics (Table 6): state = [z, Δlogp, E_kin, E_jac]
+# ---------------------------------------------------------------------------
+
+
+def cnf_family(name, batch, dim, hidden):
+    """Time-conditioned MLP dynamics with Hutchinson divergence and the
+    RNODE regularizer integrands (kinetic energy, Jacobian-Frobenius
+    estimate).  ctx = the Rademacher probe (fixed per solve).
+    State layout: [z (dim) | Δlogp | ke | je] → state_dim = dim + 3."""
+    shapes = mlp_shapes(dim + 1, hidden, dim)
+    th_len = spec_len(cnf_param_specs(dim, hidden))
+
+    def f_ref(t, state, theta, eps):
+        z = state[:, :dim]
+        w1, b1, w2, b2 = unpack(theta, shapes)
+        tcol = jnp.full((z.shape[0], 1), t, dtype=F32)
+        zt = jnp.concatenate([z, tcol], axis=1)
+        pre = zt @ w1 + b1
+        hid = jnp.tanh(pre)
+        out = hid @ w2 + b2  # f(z, t): (B, dim)
+        gate = 1.0 - hid * hid
+        w1z = w1[:dim, :]  # z-rows of w1
+        left = eps @ w1z  # (B, H)
+        right = eps @ w2.T  # (B, H)
+        div = jnp.sum(left * gate * right, axis=1)  # εᵀJε
+        eta_row = left * gate  # εᵀ·(dhid/dpre-part)
+        jac_vec = eta_row @ w2  # εᵀ J (B, dim)
+        ke = jnp.sum(out * out, axis=1)
+        je = jnp.sum(jac_vec * jac_vec, axis=1)
+        return jnp.concatenate(
+            [out, -div[:, None], ke[:, None], je[:, None]], axis=1
+        )
+
+    ctx = [spec(batch, dim)]
+    return family_exports(
+        name,
+        batch,
+        dim,
+        th_len,
+        f_ref,
+        ctx_specs=ctx,
+        state_dim=dim + 3,
+    )
+
+
+def cnf_param_specs(dim, hidden):
+    return mlp_param_specs(dim + 1, hidden, dim)
+
+
+# ---------------------------------------------------------------------------
+# RealNVP discrete-flow baseline (Table 6)
+# ---------------------------------------------------------------------------
+
+
+def realnvp_exports(name, batch, dim, hidden, n_layers=4):
+    per = mlp_shapes(dim, hidden, 2 * dim)
+    layer_len = spec_len(mlp_param_specs(dim, hidden, 2 * dim))
+    th = spec(n_layers * layer_len)
+
+    def masks():
+        return [
+            jnp.asarray(
+                [(i + l) % 2 for i in range(dim)], dtype=F32
+            )
+            for l in range(n_layers)
+        ]
+
+    def flow(x, theta):
+        logdet = jnp.zeros((x.shape[0],), dtype=F32)
+        z = x
+        for l, m in enumerate(masks()):
+            tl = theta[l * layer_len : (l + 1) * layer_len]
+            w1, b1, w2, b2 = unpack(tl, per)
+            hcore = jnp.tanh((z * m) @ w1 + b1) @ w2 + b2
+            s = jnp.tanh(hcore[:, :dim]) * (1.0 - m)
+            t_shift = hcore[:, dim:] * (1.0 - m)
+            z = z * jnp.exp(s) + t_shift
+            logdet = logdet + jnp.sum(s, axis=1)
+        return z, logdet
+
+    def loss_grad(x, theta):
+        def l(tt):
+            z, logdet = flow(x, tt)
+            logp = -0.5 * jnp.sum(z * z, axis=1) - 0.5 * dim * jnp.log(2 * jnp.pi)
+            nll = -jnp.mean(logp + logdet)
+            # bits/dim
+            return nll / (dim * jnp.log(2.0))
+
+        loss, g = jax.value_and_grad(l)(theta)
+        return loss, g
+
+    def nll_eval(x, theta):
+        z, logdet = flow(x, theta)
+        logp = -0.5 * jnp.sum(z * z, axis=1) - 0.5 * dim * jnp.log(2 * jnp.pi)
+        bpd = -(logp + logdet) / (dim * jnp.log(2.0))
+        return (bpd,)
+
+    return [
+        Export(
+            f"{name}.loss_grad",
+            loss_grad,
+            [spec(batch, dim), th],
+            "RealNVP fused BPD loss + grad",
+        ),
+        Export(f"{name}.bpd", nll_eval, [spec(batch, dim), th], "per-sample BPD"),
+    ]
+
+
+def realnvp_param_specs(dim, hidden, n_layers=4):
+    out = []
+    for l in range(n_layers):
+        for s in mlp_param_specs(dim, hidden, 2 * dim):
+            out.append({**s, "name": f"l{l}_{s['name']}"})
+    return out

@@ -1,0 +1,231 @@
+"""L1 Pallas kernels: fused (damped) ALF step, its exact inverse, the plain
+MLP dynamics, and the CNF Hutchinson-divergence kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each kernel keeps the
+``(z, v)`` batch tile resident in VMEM across the k1 → f → update phases —
+one launch instead of the three HBM round-trips an eager CUDA port would
+make — and the MLP matmuls are expressed so Mosaic can tile them for the
+128×128 MXU with f32 accumulation.  ``BlockSpec`` partitions the batch
+across the grid, which is the threadblock-grid analogue.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+run Mosaic custom-calls, so interpret mode is the correctness (and the
+only runnable) path on this image; real-TPU efficiency is estimated in
+DESIGN.md §Perf from the BlockSpec footprint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: grid dimension 0 walks the batch in BM-row blocks.  64 rows of
+# f32 keeps the working set (z, v, k1, u1 tiles + both weight panels for the
+# sizes used here) well under 16 MiB of VMEM.
+BM = 64
+
+
+def _grid(b):
+    return (max(1, (b + BM - 1) // BM),)
+
+
+def _batch_tile(d):
+    """BlockSpec for a (B, D) operand tiled over the batch grid."""
+    return pl.BlockSpec((BM, d), lambda i: (i, 0))
+
+
+def _replicated(shape):
+    """BlockSpec for an operand every grid step sees in full (weights)."""
+    ndim = len(shape)
+    return pl.BlockSpec(shape, lambda i: (0,) * ndim)
+
+
+def _mlp(zblk, w1, b1, w2, b2):
+    # Two MXU matmuls with fp32 accumulation; tanh on the VPU.
+    hid = jnp.tanh(
+        jax.lax.dot_general(
+            zblk, w1, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b1
+    )
+    return (
+        jax.lax.dot_general(
+            hid, w2, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b2
+    )
+
+
+def _alf_step_kernel(h_ref, eta_ref, z_ref, v_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                     zo_ref, vo_ref, err_ref):
+    h = h_ref[0]
+    eta = eta_ref[0]
+    z = z_ref[...]
+    v = v_ref[...]
+    k1 = z + v * (h * 0.5)
+    u1 = _mlp(k1, w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...])
+    v_out = (1.0 - 2.0 * eta) * v + 2.0 * eta * u1
+    zo_ref[...] = k1 + v_out * (h * 0.5)
+    vo_ref[...] = v_out
+    err_ref[...] = eta * h * (u1 - v)
+
+
+def alf_step(z, v, h, eta, w1, b1, w2, b2):
+    """Fused damped-ALF step; drop-in for ``ref.alf_step``.
+
+    h, eta are shape-(1,) f32 arrays (scalar operands reach every grid step).
+    """
+    b, d = z.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((b, d), z.dtype),
+        jax.ShapeDtypeStruct((b, d), z.dtype),
+        jax.ShapeDtypeStruct((b, d), z.dtype),
+    ]
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _alf_step_kernel,
+        grid=_grid(b),
+        in_specs=[
+            scalar,
+            scalar,
+            _batch_tile(d),
+            _batch_tile(d),
+            _replicated(w1.shape),
+            _replicated(b1.shape),
+            _replicated(w2.shape),
+            _replicated(b2.shape),
+        ],
+        out_specs=[_batch_tile(d)] * 3,
+        out_shape=out_shape,
+        interpret=True,
+    )(h, eta, z, v, w1, b1, w2, b2)
+
+
+def _alf_inv_kernel(h_ref, eta_ref, z_ref, v_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                    zi_ref, vi_ref):
+    h = h_ref[0]
+    eta = eta_ref[0]
+    z_out = z_ref[...]
+    v_out = v_ref[...]
+    k1 = z_out - v_out * (h * 0.5)
+    u1 = _mlp(k1, w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...])
+    v_in = (v_out - 2.0 * eta * u1) / (1.0 - 2.0 * eta)
+    zi_ref[...] = k1 - v_in * (h * 0.5)
+    vi_ref[...] = v_in
+
+
+def alf_inv(z_out, v_out, h, eta, w1, b1, w2, b2):
+    """Fused exact inverse psi^-1; drop-in for ``ref.alf_inv``."""
+    b, d = z_out.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((b, d), z_out.dtype),
+        jax.ShapeDtypeStruct((b, d), z_out.dtype),
+    ]
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _alf_inv_kernel,
+        grid=_grid(b),
+        in_specs=[
+            scalar,
+            scalar,
+            _batch_tile(d),
+            _batch_tile(d),
+            _replicated(w1.shape),
+            _replicated(b1.shape),
+            _replicated(w2.shape),
+            _replicated(b2.shape),
+        ],
+        out_specs=[_batch_tile(d)] * 2,
+        out_shape=out_shape,
+        interpret=True,
+    )(h, eta, z_out, v_out, w1, b1, w2, b2)
+
+
+def _mlp_f_kernel(z_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    o_ref[...] = _mlp(z_ref[...], w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...])
+
+
+def mlp_f(z, w1, b1, w2, b2):
+    """Plain MLP dynamics eval (used by the RK baselines); matches
+    ``ref.mlp_f``."""
+    b, d = z.shape
+    return pl.pallas_call(
+        _mlp_f_kernel,
+        grid=_grid(b),
+        in_specs=[
+            _batch_tile(d),
+            _replicated(w1.shape),
+            _replicated(b1.shape),
+            _replicated(w2.shape),
+            _replicated(b2.shape),
+        ],
+        out_specs=_batch_tile(d),
+        out_shape=jax.ShapeDtypeStruct((b, d), z.dtype),
+        interpret=True,
+    )(z, w1, b1, w2, b2)
+
+
+def _hutch_kernel(z_ref, eps_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, div_ref):
+    z = z_ref[...]
+    eps = eps_ref[...]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    pre = (
+        jax.lax.dot_general(
+            z, w1, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b1_ref[...]
+    )
+    hid = jnp.tanh(pre)
+    o_ref[...] = (
+        jax.lax.dot_general(
+            hid, w2, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b2_ref[...]
+    )
+    gate = 1.0 - hid * hid
+    left = jax.lax.dot_general(
+        eps, w1, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    right = jax.lax.dot_general(
+        eps, w2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    div_ref[...] = jnp.sum(left * gate * right, axis=1, keepdims=True)
+
+
+def hutch_div(z, eps, w1, b1, w2, b2):
+    """Fused dynamics + Hutchinson divergence; matches ``ref.hutch_div``
+    (div returned as (B, 1) here, squeezed by the caller)."""
+    b, d = z.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((b, d), z.dtype),
+        jax.ShapeDtypeStruct((b, 1), z.dtype),
+    ]
+    out, div = pl.pallas_call(
+        _hutch_kernel,
+        grid=_grid(b),
+        in_specs=[
+            _batch_tile(d),
+            _batch_tile(d),
+            _replicated(w1.shape),
+            _replicated(b1.shape),
+            _replicated(w2.shape),
+            _replicated(b2.shape),
+        ],
+        out_specs=[_batch_tile(d), _batch_tile(1)],
+        out_shape=out_shape,
+        interpret=True,
+    )(z, eps, w1, b1, w2, b2)
+    return out, div[:, 0]
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(b, d, h):
+    """Estimated VMEM working set of one alf_step grid step (DESIGN §Perf):
+    four (BM, D) batch tiles + weight panels + hidden tile, f32."""
+    bm = min(BM, b)
+    tiles = 4 * bm * d  # z, v, k1/z_out, err
+    hidden = bm * h  # u1 / hid
+    weights = d * h * 2 + h + d
+    return 4 * (tiles + hidden + weights)

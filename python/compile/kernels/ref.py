@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness anchors).
+
+Each function here is the mathematical definition; the Pallas kernels in
+this package must match it to float tolerance (asserted by
+``python/tests/test_kernels.py`` with hypothesis sweeps over shapes/seeds).
+
+The vjp-producing graphs exported by ``aot.py`` differentiate *these*
+implementations (pallas_call under ``interpret=True`` is a black box to
+reverse-mode AD), which is sound because kernel == ref is separately
+enforced.
+
+Conventions (row-major batch):
+  z, v : (B, D)    w1 : (D, H)   b1 : (H,)   w2 : (H, D)   b2 : (D,)
+  MLP dynamics:  f(z) = tanh(z @ w1 + b1) @ w2 + b2
+"""
+
+import jax.numpy as jnp
+
+
+def mlp_f(z, w1, b1, w2, b2):
+    """The shared MLP ODE dynamics (autonomous)."""
+    return jnp.tanh(z @ w1 + b1) @ w2 + b2
+
+
+def mlp_f_t(t, z, w1, b1, w2, b2):
+    """Time-conditioned MLP dynamics: t is appended as an input feature.
+
+    w1 has shape (D + 1, H) in this variant.
+    """
+    b = z.shape[0]
+    tcol = jnp.full((b, 1), t, dtype=z.dtype)
+    zt = jnp.concatenate([z, tcol], axis=1)
+    return jnp.tanh(zt @ w1 + b1) @ w2 + b2
+
+
+def alf_step(z, v, h, eta, w1, b1, w2, b2):
+    """One damped-ALF step psi over the MLP dynamics (paper Algo. 2 / A.5).
+
+    Returns (z_out, v_out, err) with err = eta * h * (u1 - v), the embedded
+    (2,1) error estimate.
+    """
+    k1 = z + v * (h / 2.0)
+    u1 = mlp_f(k1, w1, b1, w2, b2)
+    v_out = (1.0 - 2.0 * eta) * v + 2.0 * eta * u1
+    z_out = k1 + v_out * (h / 2.0)
+    err = eta * h * (u1 - v)
+    return z_out, v_out, err
+
+
+def alf_inv(z_out, v_out, h, eta, w1, b1, w2, b2):
+    """Exact inverse psi^-1 (paper Algo. 3 / Eq. 49)."""
+    k1 = z_out - v_out * (h / 2.0)
+    u1 = mlp_f(k1, w1, b1, w2, b2)
+    v_in = (v_out - 2.0 * eta * u1) / (1.0 - 2.0 * eta)
+    z_in = k1 - v_in * (h / 2.0)
+    return z_in, v_in
+
+
+def hutch_div(z, eps, w1, b1, w2, b2):
+    """MLP dynamics + Hutchinson divergence estimate in one pass.
+
+    For f(z) = tanh(z@w1 + b1) @ w2 + b2 the Jacobian is
+    J = w1 · diag(1 - tanh²(pre)) · w2 (row convention), so
+    epsᵀ J eps = Σ_k (eps@w1)_k (1 − tanh²(pre)_k) (w2 epsᵀ)_k,
+    computable without materializing J.
+
+    Returns (f(z), div_est) with shapes ((B, D), (B,)).
+    """
+    pre = z @ w1 + b1
+    hid = jnp.tanh(pre)
+    out = hid @ w2 + b2
+    gate = 1.0 - hid * hid  # (B, H)
+    left = eps @ w1  # (B, H)
+    right = eps @ w2.T  # (B, H)
+    div = jnp.sum(left * gate * right, axis=1)  # (B,)
+    return out, div

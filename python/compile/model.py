@@ -1,0 +1,154 @@
+"""L2 model registry: assembles every experiment's executable set and the
+manifest the Rust runtime is driven by.
+
+Models (DESIGN.md §5):
+  toy     — dz/dt = α z, runtime smoke tests (Fig. 4 cross-check)
+  img16   — "Cifar10" stand-in classifier  (Fig. 5, Table 1)
+  img32   — "ImageNet" stand-in classifier (Fig. 6, Tables 2/3)
+  latent  — latent-ODE on hopper trajectories (Table 4) + RNN/GRU baselines
+  cde     — Neural CDE on synthetic speech commands (Table 5)
+  cnf*    — FFJORD on synth-MNIST / synth-CIFAR / 2-D densities (Table 6)
+  realnvp — discrete-flow baseline (Table 6)
+"""
+
+from . import families as F
+
+# ---------------------------------------------------------------------------
+# Model dimensions (kept CPU-feasible; every experiment config in Rust reads
+# these from the manifest, so there is a single source of truth).
+# ---------------------------------------------------------------------------
+
+DIMS = {
+    "toy": dict(batch=1, dim=4),
+    "img16": dict(batch=32, d_in=16 * 16 * 3, d=64, hidden=128, classes=10),
+    "img32": dict(batch=16, d_in=32 * 32 * 3, d=128, hidden=256, classes=100),
+    "latent": dict(batch=32, obs=8, t_len=32, gru_h=64, latent=16, f_hidden=64,
+                   t_out=16),
+    "cde": dict(batch=32, channels=6, pieces=39, t_total=1.0, d=32, hidden=64,
+                classes=10),
+    "cnf_mnist8": dict(batch=32, dim=64, hidden=128),
+    "cnf_cifar8": dict(batch=16, dim=192, hidden=192),
+    "cnf_density2d": dict(batch=64, dim=2, hidden=64),
+    "realnvp_mnist8": dict(batch=32, dim=64, hidden=128, n_layers=4),
+    "realnvp_cifar8": dict(batch=16, dim=192, hidden=192, n_layers=4),
+}
+
+
+def build():
+    """Returns (exports, manifest_models)."""
+    exports = []
+    models = {}
+
+    # ---- toy --------------------------------------------------------------
+    d = DIMS["toy"]
+    exports += F.toy_family("toy", d["batch"], d["dim"])
+    models["toy"] = {
+        **d,
+        "state_dim": d["dim"],
+        "components": {
+            "f": {"params": [F.param_spec("alpha", (1,), "ones")]},
+        },
+    }
+
+    # ---- image classifiers --------------------------------------------------
+    for key in ("img16", "img32"):
+        d = DIMS[key]
+        exports += F.mlpdyn(key, d["batch"], d["d"], d["hidden"])
+        exports += F.stem_exports(key, d["batch"], d["d_in"], d["d"])
+        exports += F.head_exports(key, d["batch"], d["d"], d["classes"])
+        exports += F.resnet_exports(
+            key, d["batch"], d["d_in"], d["d"], d["hidden"], d["classes"]
+        )
+        models[key] = {
+            **d,
+            "state_dim": d["d"],
+            "components": {
+                "stem": {"params": F.stem_param_specs(d["d_in"], d["d"])},
+                "f": {"params": F.mlp_param_specs(d["d"], d["hidden"], d["d"])},
+                "head": {"params": F.head_param_specs(d["d"], d["classes"])},
+            },
+        }
+
+    # ---- latent ODE ----------------------------------------------------------
+    d = DIMS["latent"]
+    exports += F.mlpdyn("latent", d["batch"], d["latent"], d["f_hidden"])
+    exports += F.encoder_exports(
+        "latent", d["batch"], d["obs"], d["t_len"], d["gru_h"], d["latent"]
+    )
+    exports += F.decoder_exports("latent", d["batch"], d["latent"], d["obs"])
+    exports += F.seq_baseline_exports(
+        "rnn", d["batch"], d["obs"], d["t_len"], d["t_out"], d["gru_h"], "rnn"
+    )
+    exports += F.seq_baseline_exports(
+        "gru", d["batch"], d["obs"], d["t_len"], d["t_out"], d["gru_h"], "gru"
+    )
+    models["latent"] = {
+        **d,
+        "state_dim": d["latent"],
+        "components": {
+            "enc": {"params": F.encoder_param_specs(d["obs"], d["gru_h"], d["latent"])},
+            "f": {"params": F.mlp_param_specs(d["latent"], d["f_hidden"], d["latent"])},
+            "dec": {"params": F.decoder_param_specs(d["latent"], d["obs"])},
+        },
+    }
+    models["rnn"] = {
+        "batch": d["batch"],
+        "components": {
+            "all": {"params": F.seq_baseline_param_specs(d["obs"], d["gru_h"], "rnn")}
+        },
+    }
+    models["gru"] = {
+        "batch": d["batch"],
+        "components": {
+            "all": {"params": F.seq_baseline_param_specs(d["obs"], d["gru_h"], "gru")}
+        },
+    }
+
+    # ---- Neural CDE -----------------------------------------------------------
+    d = DIMS["cde"]
+    exports += F.cde_family(
+        "cde", d["batch"], d["d"], d["hidden"], d["channels"], d["pieces"], d["t_total"]
+    )
+    exports += F.stem_exports("cde", d["batch"], d["channels"], d["d"])
+    exports += F.head_exports("cde", d["batch"], d["d"], d["classes"])
+    models["cde"] = {
+        **d,
+        "state_dim": d["d"],
+        "components": {
+            "stem": {"params": F.stem_param_specs(d["channels"], d["d"])},
+            "f": {"params": F.mlp_param_specs(d["d"], d["hidden"], d["d"] * d["channels"])},
+            "head": {"params": F.head_param_specs(d["d"], d["classes"])},
+        },
+    }
+
+    # ---- CNF / FFJORD -----------------------------------------------------------
+    for key in ("cnf_mnist8", "cnf_cifar8", "cnf_density2d"):
+        d = DIMS[key]
+        exports += F.cnf_family(key, d["batch"], d["dim"], d["hidden"])
+        models[key] = {
+            **d,
+            "state_dim": d["dim"] + 3,
+            "components": {
+                "f": {"params": F.cnf_param_specs(d["dim"], d["hidden"])},
+            },
+        }
+
+    # ---- RealNVP baselines ---------------------------------------------------
+    for key in ("realnvp_mnist8", "realnvp_cifar8"):
+        d = DIMS[key]
+        exports += F.realnvp_exports(key, d["batch"], d["dim"], d["hidden"], d["n_layers"])
+        models[key] = {
+            **d,
+            "components": {
+                "all": {
+                    "params": F.realnvp_param_specs(d["dim"], d["hidden"], d["n_layers"])
+                }
+            },
+        }
+
+    # annotate component lengths
+    for m in models.values():
+        for comp in m.get("components", {}).values():
+            comp["len"] = F.spec_len(comp["params"])
+
+    return exports, models

@@ -1,0 +1,157 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes and seeds with hypothesis.  This is the core correctness signal for
+the kernel layer — the exported vjp graphs differentiate the oracle, so
+kernel == oracle makes gradient and forward paths consistent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import alf_step as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def _weights(rng, d, h):
+    s = 1.0 / np.sqrt(max(d, h))
+    return (
+        _rand(rng, d, h) * s,
+        _rand(rng, h) * 0.1,
+        _rand(rng, h, d) * s,
+        _rand(rng, d) * 0.1,
+    )
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=96),  # batch (crosses the BM=64 tile)
+    st.integers(min_value=1, max_value=48),  # state dim
+    st.integers(min_value=1, max_value=64),  # hidden dim
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_mlp_f_matches_ref(shapes, seed):
+    b, d, h = shapes
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, d)
+    w = _weights(rng, d, h)
+    out = K.mlp_f(z, *w)
+    expect = R.mlp_f(z, *w)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shapes=shapes,
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    h_step=st.floats(min_value=0.01, max_value=0.5),
+    eta=st.floats(min_value=0.55, max_value=1.0),
+)
+def test_alf_step_matches_ref(shapes, seed, h_step, eta):
+    b, d, hid = shapes
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, d)
+    v = _rand(rng, b, d)
+    w = _weights(rng, d, hid)
+    hs = jnp.asarray([h_step], dtype=jnp.float32)
+    es = jnp.asarray([eta], dtype=jnp.float32)
+    zo, vo, err = K.alf_step(z, v, hs, es, *w)
+    zo_r, vo_r, err_r = R.alf_step(z, v, h_step, eta, *w)
+    np.testing.assert_allclose(zo, zo_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(vo, vo_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(err, err_r, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shapes=shapes,
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    h_step=st.floats(min_value=0.01, max_value=0.5),
+    eta=st.floats(min_value=0.55, max_value=1.0),
+)
+def test_alf_inv_matches_ref_and_roundtrips(shapes, seed, h_step, eta):
+    b, d, hid = shapes
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, d)
+    v = _rand(rng, b, d)
+    w = _weights(rng, d, hid)
+    hs = jnp.asarray([h_step], dtype=jnp.float32)
+    es = jnp.asarray([eta], dtype=jnp.float32)
+    zi, vi = K.alf_inv(z, v, hs, es, *w)
+    zi_r, vi_r = R.alf_inv(z, v, h_step, eta, *w)
+    np.testing.assert_allclose(zi, zi_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(vi, vi_r, rtol=1e-4, atol=1e-4)
+    # kernel-level roundtrip: psi(psi^-1(x)) == x
+    zo, vo, _ = K.alf_step(zi, vi, hs, es, *w)
+    np.testing.assert_allclose(zo, z, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(vo, v, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hutch_div_matches_ref(shapes, seed):
+    b, d, h = shapes
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, d)
+    eps = jnp.asarray(
+        rng.choice([-1.0, 1.0], size=(b, d)).astype(np.float32)
+    )
+    w = _weights(rng, d, h)
+    out, div = K.hutch_div(z, eps, *w)
+    out_r, div_r = R.hutch_div(z, eps, *w)
+    np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(div, div_r, rtol=1e-4, atol=1e-4)
+
+
+def test_hutch_div_is_unbiased_trace_estimate():
+    """E_eps[epsᵀJeps] = tr(J): average many probes against the dense
+    Jacobian trace."""
+    rng = np.random.default_rng(0)
+    b, d, h = 4, 6, 10
+    z = _rand(rng, b, d)
+    w = _weights(rng, d, h)
+
+    def f_single(zi):
+        return R.mlp_f(zi[None, :], *w)[0]
+
+    jac = jax.vmap(jax.jacobian(f_single))(z)  # (B, D, D)
+    trace = jnp.trace(jac, axis1=1, axis2=2)
+
+    n_probe = 4000
+    acc = np.zeros(b, dtype=np.float64)
+    for i in range(n_probe):
+        eps = jnp.asarray(
+            rng.choice([-1.0, 1.0], size=(b, d)).astype(np.float32)
+        )
+        _, div = R.hutch_div(z, eps, *w)
+        acc += np.asarray(div, dtype=np.float64)
+    est = acc / n_probe
+    np.testing.assert_allclose(est, trace, rtol=0.15, atol=0.05)
+
+
+def test_alf_step_order_vs_midpoint():
+    """One ALF step from a consistent (z, v=f(z)) equals one midpoint step
+    (they coincide when v is exact — §3.1 'Difference from midpoint')."""
+    rng = np.random.default_rng(1)
+    b, d, h = 2, 5, 7
+    z = _rand(rng, b, d)
+    w = _weights(rng, d, h)
+    v = R.mlp_f(z, *w)
+    hstep = 0.1
+    zo, _, _ = R.alf_step(z, v, hstep, 1.0, *w)
+    mid = z + hstep * R.mlp_f(z + 0.5 * hstep * v, *w)
+    np.testing.assert_allclose(zo, mid, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprint_estimate_reasonable():
+    bytes_ = K.vmem_footprint_bytes(64, 128, 256)
+    assert 0 < bytes_ < 16 * 1024 * 1024

@@ -1,0 +1,112 @@
+"""L2 structural tests: every registered export traces, its output shapes
+are consistent with the family contract, and gradient executables return
+cotangents of the right sizes.  These run at build time (no PJRT
+execution needed — `jax.eval_shape` only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import families as F
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def registry():
+    exports, models = M.build()
+    return {e.name: e for e in exports}, models
+
+
+def test_every_export_traces(registry):
+    exports, _ = registry
+    assert len(exports) >= 60
+    for name, e in exports.items():
+        out = jax.eval_shape(e.fn, *e.args)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        assert all(a.dtype == jnp.float32 for a in out), name
+
+
+@pytest.mark.parametrize("fam", ["toy", "img16", "img32", "latent", "cde",
+                                 "cnf_mnist8", "cnf_cifar8", "cnf_density2d"])
+def test_family_contract(registry, fam):
+    """{f, f_vjp, step, inv, step_vjp} exist with consistent shapes."""
+    exports, _ = registry
+    f = exports[f"{fam}.f"]
+    state = f.args[1].shape
+    # f: (t, z, *ctx, θ) → dz with dz.shape == z.shape
+    out = jax.eval_shape(f.fn, *f.args)
+    assert out[0].shape == state
+
+    step = exports[f"{fam}.step"]
+    zo, vo, err = jax.eval_shape(step.fn, *step.args)
+    assert zo.shape == state and vo.shape == state and err.shape == state
+
+    inv = exports[f"{fam}.inv"]
+    zi, vi = jax.eval_shape(inv.fn, *inv.args)
+    assert zi.shape == state and vi.shape == state
+
+    vjp = exports[f"{fam}.step_vjp"]
+    az, av, ath = jax.eval_shape(vjp.fn, *vjp.args)
+    theta_len = f.args[-1].shape
+    assert az.shape == state and av.shape == state
+    assert ath.shape == theta_len
+
+    fv = exports[f"{fam}.f_vjp"]
+    az2, ath2 = jax.eval_shape(fv.fn, *fv.args)
+    assert az2.shape == state and ath2.shape == theta_len
+
+
+def test_component_lengths_match_entries(registry):
+    """The manifest models' component lengths line up with the θ inputs of
+    the corresponding executables — the contract the Rust side trusts."""
+    exports, models = registry
+    for fam in ["toy", "img16", "img32", "latent", "cde"]:
+        f = exports[f"{fam}.f"]
+        theta_len = int(np.prod(f.args[-1].shape))
+        assert models[fam]["components"]["f"]["len"] == theta_len, fam
+
+
+def test_step_vjp_matches_autodiff_of_step():
+    """For one family, the exported ψ-vjp equals jax.vjp of the exported ψ
+    on concrete values (the two are built from the same f_ref, but this
+    guards the hand-assembled plumbing in family_exports)."""
+    exports, _ = M.build()
+    by_name = {e.name: e for e in exports}
+    step = by_name["toy.step"].fn
+    vjp = by_name["toy.step_vjp"].fn
+
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+    th = jnp.asarray([0.7], jnp.float32)
+    t, h, eta = jnp.float32(0.1), jnp.float32(0.3), jnp.float32(0.9)
+    azo = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+    avo = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+
+    az, av, ath = vjp(z, v, t, h, eta, th, azo, avo)
+
+    def fwd(zz, vv, tt):
+        zo, vo, _ = step(zz, vv, t, h, eta, tt)
+        return zo, vo
+
+    _, pull = jax.vjp(fwd, z, v, th)
+    az_r, av_r, ath_r = pull((azo, avo))
+    np.testing.assert_allclose(az, az_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(av, av_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ath, ath_r, rtol=1e-5, atol=1e-6)
+
+
+def test_cnf_state_layout():
+    """CNF families augment the state with [Δlogp, ke, je]."""
+    exports, models = M.build()
+    by_name = {e.name: e for e in exports}
+    for key in ["cnf_mnist8", "cnf_cifar8", "cnf_density2d"]:
+        dim = models[key]["dim"]
+        f = by_name[f"{key}.f"]
+        assert f.args[1].shape[1] == dim + 3, key
+        # ctx (the Hutchinson probe) is batch × dim
+        assert f.args[2].shape == (models[key]["batch"], dim), key

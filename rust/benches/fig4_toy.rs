@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Fig. 4 (a,b,c) (see DESIGN.md §5).
+//! Run with `cargo bench --bench fig4_toy` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_toy, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_toy::fig4(scale, 0).expect("fig4_toy");
+    mali_ode::coordinator::report::write_summary("runs", "fig4", &summary).expect("write summary");
+    println!("\nfig4_toy done in {:.1}s (runs/fig4.json written)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Fig. 5 (see DESIGN.md §5).
+//! Run with `cargo bench --bench fig5_cifar` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_images, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_images::fig5(scale, 0).expect("fig5_cifar");
+    mali_ode::coordinator::report::write_summary("runs", "fig5", &summary).expect("write summary");
+    println!("\nfig5_cifar done in {:.1}s (runs/fig5.json written)", t0.elapsed().as_secs_f64());
+}

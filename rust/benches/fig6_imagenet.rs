@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Fig. 6 (see DESIGN.md §5).
+//! Run with `cargo bench --bench fig6_imagenet` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_images, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_images::fig6(scale, 0).expect("fig6_imagenet");
+    mali_ode::coordinator::report::write_summary("runs", "fig6", &summary).expect("write summary");
+    println!("\nfig6_imagenet done in {:.1}s (runs/fig6.json written)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Appendix Fig. 1 (see DESIGN.md §5).
+//! Run with `cargo bench --bench figA1_stability` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_toy, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_toy::fig_a1(scale, 0).expect("figA1_stability");
+    mali_ode::coordinator::report::write_summary("runs", "figA1", &summary).expect("write summary");
+    println!("\nfigA1_stability done in {:.1}s (runs/figA1.json written)", t0.elapsed().as_secs_f64());
+}

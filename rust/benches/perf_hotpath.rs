@@ -1,0 +1,129 @@
+//! Hot-path micro-benchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): per-layer timings of everything on the MALI request path.
+//!
+//! * L1/L2 — one fused ALF ψ / ψ⁻¹ / ψ-vjp PJRT execute per model family
+//!   (the Pallas kernel inside the AOT graph), vs the host-composed path
+//!   (`f` + host algebra) it replaces.
+//! * L3 — full MALI gradient step for the img16 classifier (the Fig. 5
+//!   training hot loop) and the adaptive integration loop overhead on
+//!   native dynamics (pure coordinator cost, no PJRT).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::models::image::OdeImageClassifier;
+use mali_ode::models::SolveCfg;
+use mali_ode::runtime::{Engine, HloDynamics};
+use mali_ode::solvers::alf::AlfSolver;
+use mali_ode::solvers::dynamics::{Dynamics, MlpDynamics};
+use mali_ode::util::bench::{time_until, Table};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+use std::rc::Rc;
+
+fn main() {
+    let engine = Rc::new(Engine::from_env().expect("run `make artifacts`"));
+    let mut rng = Rng::new(7);
+    let mut table = Table::new(
+        "perf_hotpath: per-op / per-step wall time",
+        &["op", "mean", "min", "iters"],
+    );
+
+    // ---- L1/L2: fused ALF step vs host-composed, per family -------------
+    for family in ["img16", "img32", "latent"] {
+        let mut dynamics = HloDynamics::new(engine.clone(), family).unwrap();
+        dynamics.init_params(&mut rng).unwrap();
+        let n = dynamics.dim();
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 0.5);
+        let v = dynamics.f(0.0, &z);
+        let solver = AlfSolver::new(1.0);
+
+        let t = time_until(0.5, || {
+            let _ = solver.psi(&dynamics, 0.0, 0.25, &z, &v);
+        });
+        table.row(&[
+            format!("{family}.step (fused ψ)"),
+            t.fmt_ms(),
+            format!("{:.3}ms", t.min_s * 1e3),
+            t.iters.to_string(),
+        ]);
+
+        dynamics.use_fused = false;
+        let t = time_until(0.5, || {
+            let _ = solver.psi(&dynamics, 0.0, 0.25, &z, &v);
+        });
+        table.row(&[
+            format!("{family}.step (composed f)"),
+            t.fmt_ms(),
+            format!("{:.3}ms", t.min_s * 1e3),
+            t.iters.to_string(),
+        ]);
+        dynamics.use_fused = true;
+
+        let az = vec![1.0f32; n];
+        let av = vec![0.0f32; n];
+        let t = time_until(0.5, || {
+            let _ = solver.psi_vjp(&dynamics, 0.0, 0.25, &z, &v, &az, &av);
+        });
+        table.row(&[
+            format!("{family}.step_vjp (fused)"),
+            t.fmt_ms(),
+            format!("{:.3}ms", t.min_s * 1e3),
+            t.iters.to_string(),
+        ]);
+    }
+
+    // ---- L3: full MALI training step (img16) -----------------------------
+    {
+        let mut model = OdeImageClassifier::new(engine.clone(), "img16", &mut rng).unwrap();
+        let mut x = vec![0.0f32; model.batch * model.d_in];
+        rng.fill_uniform_sym(&mut x, 0.5);
+        let mut y1h = vec![0.0f32; model.batch * model.classes];
+        for b in 0..model.batch {
+            y1h[b * model.classes + b % model.classes] = 1.0;
+        }
+        let solver = mali_ode::solvers::by_name("alf").unwrap();
+        let method = grad_by_name("mali").unwrap();
+        let t = time_until(2.0, || {
+            let cfg = SolveCfg {
+                solver: &*solver,
+                spec: IvpSpec::fixed(0.0, 1.0, 0.25),
+                method: &*method,
+            };
+            let _ = model.step(&x, &y1h, &cfg, false).unwrap();
+        });
+        table.row(&[
+            "img16 full MALI train step".into(),
+            t.fmt_ms(),
+            format!("{:.3}ms", t.min_s * 1e3),
+            t.iters.to_string(),
+        ]);
+    }
+
+    // ---- L3: pure coordinator overhead (native dynamics, no PJRT) --------
+    {
+        let dynamics = MlpDynamics::new(32, 64, &mut rng);
+        let mut z = vec![0.0f32; 32];
+        rng.fill_uniform_sym(&mut z, 0.5);
+        let solver = mali_ode::solvers::by_name("alf").unwrap();
+        for (label, method_name) in [("mali", "mali"), ("aca", "aca"), ("adjoint", "adjoint")] {
+            let method = grad_by_name(method_name).unwrap();
+            let t = time_until(0.5, || {
+                let tracker = MemTracker::new();
+                let spec = IvpSpec::adaptive(0.0, 2.0, 1e-4, 1e-6);
+                let _ = method
+                    .grad(&dynamics, &*solver, &spec, &z, &SquareLoss, tracker)
+                    .unwrap();
+            });
+            table.row(&[
+                format!("native MLP-32 grad ({label})"),
+                t.fmt_ms(),
+                format!("{:.3}ms", t.min_s * 1e3),
+                t.iters.to_string(),
+            ]);
+        }
+    }
+
+    table.print();
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 1 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table1_complexity` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_toy, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_toy::table1(scale, 0).expect("table1_complexity");
+    mali_ode::coordinator::report::write_summary("runs", "table1", &summary).expect("write summary");
+    println!("\ntable1_complexity done in {:.1}s (runs/table1.json written)", t0.elapsed().as_secs_f64());
+}

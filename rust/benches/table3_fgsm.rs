@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 3 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table3_fgsm` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_images, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_images::table3(scale, 0).expect("table3_fgsm");
+    mali_ode::coordinator::report::write_summary("runs", "table3", &summary).expect("write summary");
+    println!("\ntable3_fgsm done in {:.1}s (runs/table3.json written)", t0.elapsed().as_secs_f64());
+}

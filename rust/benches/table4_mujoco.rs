@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 4 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table4_mujoco` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_series, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_series::table4(scale, 0).expect("table4_mujoco");
+    mali_ode::coordinator::report::write_summary("runs", "table4", &summary).expect("write summary");
+    println!("\ntable4_mujoco done in {:.1}s (runs/table4.json written)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 5 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table5_speech` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_series, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_series::table5(scale, 0).expect("table5_speech");
+    mali_ode::coordinator::report::write_summary("runs", "table5", &summary).expect("write summary");
+    println!("\ntable5_speech done in {:.1}s (runs/table5.json written)", t0.elapsed().as_secs_f64());
+}

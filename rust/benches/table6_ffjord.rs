@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 6 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table6_ffjord` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_flows, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_flows::table6(scale, 0).expect("table6_ffjord");
+    mali_ode::coordinator::report::write_summary("runs", "table6", &summary).expect("write summary");
+    println!("\ntable6_ffjord done in {:.1}s (runs/table6.json written)", t0.elapsed().as_secs_f64());
+}

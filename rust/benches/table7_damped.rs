@@ -1,0 +1,13 @@
+//! Bench target regenerating paper Table 7 (see DESIGN.md §5).
+//! Run with `cargo bench --bench table7_damped` (add `-- --full` for the
+//! EXPERIMENTS.md scale).
+use mali_ode::coordinator::{exp_series, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_series::table7(scale, 0).expect("table7_damped");
+    mali_ode::coordinator::report::write_summary("runs", "table7", &summary).expect("write summary");
+    println!("\ntable7_damped done in {:.1}s (runs/table7.json written)", t0.elapsed().as_secs_f64());
+}

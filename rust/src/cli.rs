@@ -1,0 +1,149 @@
+//! Hand-rolled CLI argument parsing (clap is not vendored offline).
+//!
+//! Grammar: `mali <command> [positional...] [--flag] [--key value]...`
+//! with `--set a.b=c` collected separately for config overrides.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    /// `--set key=value` config overrides, applied after the file loads.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if name == "set" {
+                    let Some(kv) = it.next() else {
+                        bail!("--set requires key=value");
+                    };
+                    let Some((k, v)) = kv.split_once('=') else {
+                        bail!("--set expects key=value, got '{kv}'");
+                    };
+                    args.overrides.push((k.to_string(), v.to_string()));
+                    continue;
+                }
+                // `--key=value` or `--key value` or boolean `--key`
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.options
+                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_empty() {
+                args.command = a.clone();
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize_opt(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_opt(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+mali — MALI (ICLR 2021) reproduction: memory-efficient reverse-accurate Neural-ODE integrator
+
+USAGE:
+    mali <COMMAND> [ARGS] [--set key=value]...
+
+COMMANDS:
+    list                       list registered experiments
+    run <experiment>           run an experiment from configs/<experiment>.json
+    train <config.json>        train a model from an explicit config path
+    toy                        quick toy-ODE gradient-accuracy demo (Fig. 4)
+    stability                  print damped-ALF A-stability region areas (App. Fig. 1)
+    smoke                      load + execute every artifact once (runtime check)
+    help                       show this message
+
+COMMON OPTIONS:
+    --artifacts <dir>          artifact directory (default: artifacts)
+    --runs <dir>               metrics output directory (default: runs)
+    --seed <u64>               RNG seed override
+    --set a.b=c                dotted-path config override (repeatable)
+    --verbose                  debug logging
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(&words.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let a = parse(&["run", "fig5", "extra"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.positional, vec!["fig5", "extra"]);
+    }
+
+    #[test]
+    fn parses_options_flags_sets() {
+        let a = parse(&[
+            "run", "fig5", "--seed", "42", "--verbose", "--rtol=0.1", "--set", "train.lr=0.05",
+            "--set", "solver.name=dopri5",
+        ]);
+        assert_eq!(a.opt("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_opt("rtol", 0.0), 0.1);
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("train.lr".to_string(), "0.05".to_string()),
+                ("solver.name".to_string(), "dopri5".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        let a = parse(&["toy", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.command, "toy");
+    }
+
+    #[test]
+    fn rejects_malformed_set() {
+        assert!(Args::parse(&["run".into(), "--set".into(), "noequals".into()]).is_err());
+        assert!(Args::parse(&["run".into(), "--set".into()]).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Experiment configuration system.
+//!
+//! Experiments are described by JSON files under `configs/` (serde/toml are
+//! not vendored offline).  A [`Config`] is the parsed file plus CLI
+//! `key=value` overrides with dotted-path addressing, e.g.
+//! `mali run fig5 --set train.lr=0.05 --set solver.rtol=1e-1`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    root: Json,
+    /// Name the config was loaded as (for run logs).
+    pub name: String,
+}
+
+impl Config {
+    pub fn from_json(name: &str, root: Json) -> Config {
+        Config {
+            root,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let root = Json::parse_file(path)
+            .map_err(|e| anyhow!("config {}: {e}", path.display()))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("config")
+            .to_string();
+        Ok(Config { root, name })
+    }
+
+    pub fn empty(name: &str) -> Config {
+        Config {
+            root: Json::Obj(BTreeMap::new()),
+            name: name.to_string(),
+        }
+    }
+
+    /// Apply a dotted-path override, parsing the value as JSON when possible
+    /// and falling back to a string.
+    pub fn set(&mut self, dotted: &str, raw: &str) -> Result<()> {
+        let value = Json::parse(raw).unwrap_or_else(|_| Json::Str(raw.to_string()));
+        let parts: Vec<&str> = dotted.split('.').collect();
+        if parts.is_empty() || parts.iter().any(|p| p.is_empty()) {
+            bail!("bad config path '{dotted}'");
+        }
+        let mut node = &mut self.root;
+        for (i, part) in parts.iter().enumerate() {
+            if !matches!(node, Json::Obj(_)) {
+                *node = Json::Obj(BTreeMap::new());
+            }
+            let Json::Obj(map) = node else { unreachable!() };
+            if i == parts.len() - 1 {
+                map.insert(part.to_string(), value);
+                return Ok(());
+            }
+            node = map
+                .entry(part.to_string())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        }
+        unreachable!()
+    }
+
+    fn lookup(&self, dotted: &str) -> &Json {
+        let mut node = &self.root;
+        for part in dotted.split('.') {
+            node = node.get(part);
+        }
+        node
+    }
+
+    pub fn has(&self, dotted: &str) -> bool {
+        !self.lookup(dotted).is_null()
+    }
+
+    // Typed getters with defaults ------------------------------------------
+
+    pub fn f64(&self, dotted: &str, default: f64) -> f64 {
+        self.lookup(dotted).as_f64().unwrap_or(default)
+    }
+
+    pub fn usize(&self, dotted: &str, default: usize) -> usize {
+        self.lookup(dotted).as_usize().unwrap_or(default)
+    }
+
+    pub fn u64(&self, dotted: &str, default: u64) -> u64 {
+        self.lookup(dotted)
+            .as_f64()
+            .map(|v| v as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, dotted: &str, default: bool) -> bool {
+        self.lookup(dotted).as_bool().unwrap_or(default)
+    }
+
+    pub fn str(&self, dotted: &str, default: &str) -> String {
+        self.lookup(dotted)
+            .as_str()
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Required string (errors if missing).
+    pub fn str_req(&self, dotted: &str) -> Result<String> {
+        self.lookup(dotted)
+            .as_str()
+            .map(str::to_string)
+            .with_context(|| format!("config '{}' missing required key '{dotted}'", self.name))
+    }
+
+    pub fn f64_list(&self, dotted: &str, default: &[f64]) -> Vec<f64> {
+        match self.lookup(dotted).as_arr() {
+            Some(items) => items.iter().filter_map(Json::as_f64).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn str_list(&self, dotted: &str, default: &[&str]) -> Vec<String> {
+        match self.lookup(dotted).as_arr() {
+            Some(items) => items
+                .iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn dump(&self) -> String {
+        self.root.pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Config {
+        let root = Json::parse(
+            r#"{"train": {"lr": 0.1, "epochs": 30}, "solver": {"name": "alf", "rtol": 0.1},
+                "seeds": [1, 2, 3], "methods": ["mali", "aca"]}"#,
+        )
+        .unwrap();
+        Config::from_json("sample", root)
+    }
+
+    #[test]
+    fn typed_getters() {
+        let c = sample();
+        assert_eq!(c.f64("train.lr", 0.0), 0.1);
+        assert_eq!(c.usize("train.epochs", 0), 30);
+        assert_eq!(c.str("solver.name", "x"), "alf");
+        assert_eq!(c.f64("missing.key", 7.5), 7.5);
+        assert_eq!(c.f64_list("seeds", &[]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.str_list("methods", &[]), vec!["mali", "aca"]);
+        assert!(c.has("solver.rtol"));
+        assert!(!c.has("solver.atol"));
+    }
+
+    #[test]
+    fn overrides_create_paths() {
+        let mut c = sample();
+        c.set("train.lr", "0.01").unwrap();
+        assert_eq!(c.f64("train.lr", 0.0), 0.01);
+        c.set("new.nested.flag", "true").unwrap();
+        assert!(c.bool("new.nested.flag", false));
+        c.set("solver.name", "dopri5").unwrap();
+        assert_eq!(c.str("solver.name", ""), "dopri5");
+        // non-JSON values become strings
+        c.set("run.tag", "hello-world").unwrap();
+        assert_eq!(c.str("run.tag", ""), "hello-world");
+    }
+
+    #[test]
+    fn required_key_errors() {
+        let c = sample();
+        assert!(c.str_req("solver.name").is_ok());
+        assert!(c.str_req("absent").is_err());
+    }
+}

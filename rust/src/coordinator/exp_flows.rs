@@ -1,0 +1,187 @@
+//! E8 — Table 6: continuous generative models (FFJORD) vs the discrete
+//! RealNVP baseline, BPD on the synthetic MNIST- / CIFAR-like corpora and
+//! the 2-D density task.
+//!
+//! Columns follow the paper: FFJORD trained with the adjoint ("vanilla"),
+//! with kinetic+Jacobian regularization ("rnode"), with the seminorm
+//! adjoint ("seminorm"), and with MALI; plus RealNVP as the discrete flow.
+//! Training uses each method's solver; evaluation always uses Dopri5 at
+//! rtol = atol = 1e-5 (the paper's protocol).
+
+use super::{report, Scale};
+use crate::data::density::{self, Density2D};
+use crate::grad::IvpSpec;
+use crate::models::cnf::Ffjord;
+use crate::models::realnvp::RealNvp;
+use crate::models::SolveCfg;
+use crate::opt::{by_name as opt_by_name, clip_grad_norm};
+use crate::runtime::Engine;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::logging::{log, Level};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// One FFJORD training variant.
+struct Variant {
+    name: &'static str,
+    method: &'static str,
+    solver: &'static str,
+    /// RNODE regularizer weights (0 = off, the paper's "vanilla").
+    lambda: f64,
+}
+
+const VARIANTS: [Variant; 4] = [
+    Variant { name: "vanilla", method: "adjoint", solver: "heun-euler", lambda: 0.0 },
+    Variant { name: "rnode", method: "adjoint", solver: "heun-euler", lambda: 0.05 },
+    Variant { name: "seminorm", method: "adjoint-seminorm", solver: "heun-euler", lambda: 0.0 },
+    Variant { name: "mali", method: "mali", solver: "alf", lambda: 0.05 },
+];
+
+/// Pixel batches for one corpus key.
+fn corpus(key: &str, n: usize, seed: u64) -> Vec<f32> {
+    match key {
+        "cnf_mnist8" | "realnvp_mnist8" => density::mnist8(n, seed).x,
+        "cnf_cifar8" | "realnvp_cifar8" => density::cifar8(n, seed).x,
+        other => panic!("not a pixel corpus: {other}"),
+    }
+}
+
+/// Train one FFJORD variant; returns held-out BPD evaluated with Dopri5.
+fn train_ffjord(
+    engine: &Rc<Engine>,
+    key: &str,
+    variant: &Variant,
+    scale: Scale,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut model = Ffjord::new(engine.clone(), key, &mut rng)?;
+    model.lambda_k = variant.lambda;
+    model.lambda_j = variant.lambda;
+
+    let steps = scale.pick(10, 100);
+    let solver = crate::solvers::by_name(variant.solver)?;
+    let grad = crate::grad::by_name(variant.method)?;
+    // train at the coarse tolerance (paper: adaptive, rtol 1e-2)
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+    let mut opt = opt_by_name("adam", 1e-3, model.param_count())?;
+
+    let is_2d = key == "cnf_density2d";
+    for step in 0..steps {
+        let x = if is_2d {
+            Density2D::Pinwheel.sample_n(model.batch, &mut rng)
+        } else {
+            let all = corpus(key, model.batch * 8, seed + 31);
+            let dim = model.dim;
+            let k = rng.below(8);
+            all[k * model.batch * dim..(k + 1) * model.batch * dim].to_vec()
+        };
+        let cfg = SolveCfg {
+            solver: &*solver,
+            spec: spec.clone(),
+            method: &*grad,
+        };
+        let out = model.step(&x, &cfg, &mut rng)?;
+        clip_grad_norm(&mut model.params.grad, 10.0);
+        let grad_copy = model.params.grad.clone();
+        opt.step(&mut model.params.value, &grad_copy);
+        if step % 20 == 0 {
+            log(
+                Level::Debug,
+                &format!("{key}/{}: step {step} loss {:.3}", variant.name, out.loss),
+            );
+        }
+    }
+
+    // evaluation: Dopri5, tight tolerance, regularizers off (BPD only)
+    model.lambda_k = 0.0;
+    model.lambda_j = 0.0;
+    let eval_solver = crate::solvers::by_name("dopri5")?;
+    let eval_method = crate::grad::by_name("mali")?; // unused in eval
+    let eval_cfg = SolveCfg {
+        solver: &*eval_solver,
+        spec: IvpSpec::adaptive(0.0, 1.0, 1e-5, 1e-5),
+        method: &*eval_method,
+    };
+    let mut eval_rng = Rng::new(seed + 99);
+    let x_test = if is_2d {
+        Density2D::Pinwheel.sample_n(model.batch, &mut eval_rng)
+    } else {
+        corpus(key, model.batch, seed + 77)
+    };
+    model.bpd(&x_test, &eval_cfg, &mut eval_rng)
+}
+
+/// Train the RealNVP baseline; returns held-out BPD.
+fn train_realnvp(engine: &Rc<Engine>, key: &str, scale: Scale, seed: u64) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut model = RealNvp::new(engine.clone(), key, &mut rng)?;
+    let steps = scale.pick(30, 300);
+    let mut opt = opt_by_name("adam", 1e-3, model.param_count())?;
+    let all = corpus(key, model.batch * 8, seed + 31);
+    let dim = model.dim;
+    for _ in 0..steps {
+        let k = rng.below(8);
+        let x = &all[k * model.batch * dim..(k + 1) * model.batch * dim];
+        model.step(x, &mut rng)?;
+        clip_grad_norm(&mut model.params.grad, 10.0);
+        let g = model.params.grad.clone();
+        opt.step(&mut model.params.value, &g);
+    }
+    let x_test = corpus(key, model.batch, seed + 77);
+    model.bpd(&x_test, &mut Rng::new(seed + 99))
+}
+
+/// Table 6 — BPD per dataset × model.
+pub fn table6(scale: Scale, seed: u64) -> Result<Json> {
+    let engine = Rc::new(Engine::from_env()?);
+    let datasets = [
+        ("synth-MNIST (8×8)", "cnf_mnist8", "realnvp_mnist8"),
+        ("synth-CIFAR (8×8×3)", "cnf_cifar8", "realnvp_cifar8"),
+    ];
+    let mut table = Table::new(
+        "Table 6: bits/dim, lower is better",
+        &["dataset", "vanilla", "rnode", "seminorm", "mali", "realnvp"],
+    );
+    let mut rows = Vec::new();
+    for (label, cnf_key, nvp_key) in datasets {
+        let mut cells = vec![label.to_string()];
+        for variant in &VARIANTS {
+            let bpd = train_ffjord(&engine, cnf_key, variant, scale, seed)?;
+            cells.push(format!("{bpd:.3}"));
+            rows.push(Json::obj(vec![
+                ("dataset", Json::Str(label.into())),
+                ("model", Json::Str(variant.name.into())),
+                ("bpd", Json::Num(bpd)),
+            ]));
+            log(Level::Info, &format!("table6 {label} {}: {bpd:.3}", variant.name));
+        }
+        let nvp = train_realnvp(&engine, nvp_key, scale, seed)?;
+        cells.push(format!("{nvp:.3}"));
+        rows.push(Json::obj(vec![
+            ("dataset", Json::Str(label.into())),
+            ("model", Json::Str("realnvp".into())),
+            ("bpd", Json::Num(nvp)),
+        ]));
+        table.row(&cells);
+    }
+
+    // 2-D density sanity row (MALI vs vanilla only — no pixel bookkeeping)
+    let mut cells = vec!["pinwheel (2-D)".to_string()];
+    for variant in &VARIANTS {
+        let bpd = train_ffjord(&engine, "cnf_density2d", variant, scale, seed)?;
+        cells.push(format!("{bpd:.3}"));
+        rows.push(Json::obj(vec![
+            ("dataset", Json::Str("pinwheel".into())),
+            ("model", Json::Str(variant.name.into())),
+            ("bpd", Json::Num(bpd)),
+        ]));
+    }
+    cells.push("-".into());
+    table.row(&cells);
+    table.print();
+
+    Ok(report::summary(rows, vec![("seed", Json::Num(seed as f64))]))
+}

@@ -1,0 +1,336 @@
+//! E6 / E7 / E9 — the time-series experiments:
+//!
+//! * **Table 4**: latent-ODE test MSE on hopper trajectories at 10/20/50 %
+//!   of the training data, vs RNN and GRU sequence baselines, for each
+//!   gradient method.
+//! * **Table 5**: Neural-CDE test accuracy on the synthetic speech-command
+//!   corpus for adjoint / SemiNorm / naive / ACA / MALI.
+//! * **Table 7**: damped-MALI η ablation on both tasks.
+
+use super::{report, Scale};
+use crate::data::speech::{self, SpeechSpec};
+use crate::data::SequenceDataset;
+use crate::grad::IvpSpec;
+use crate::models::cde::NeuralCde;
+use crate::models::latent::{LatentOde, SeqBaseline};
+use crate::models::SolveCfg;
+use crate::opt::by_name as opt_by_name;
+use crate::runtime::Engine;
+use crate::solvers::dynamics::Dynamics;
+use crate::sim::hopper;
+use crate::train::metrics::AccuracyMeter;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::logging::{log, Level};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::rc::Rc;
+
+fn solver_for(method: &str) -> &'static str {
+    match method {
+        "mali" => "alf",
+        _ => "heun-euler",
+    }
+}
+
+/// Train a latent ODE with one gradient method on a fraction of the data;
+/// returns test MSE.
+fn latent_ode_mse(
+    engine: &Rc<Engine>,
+    method: &str,
+    eta: f64,
+    train_frac: f64,
+    scale: Scale,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut model = LatentOde::new(engine.clone(), &mut rng)?;
+    let n_total = scale.pick(4, 12) * model.batch;
+    let n_test = scale.pick(1, 4) * model.batch;
+    let ds = hopper::generate(n_total + n_test, model.t_len, model.t_out, 3.0, seed + 11);
+    let n_train_max = n_total;
+    let n_train =
+        (((n_train_max as f64) * train_frac).round() as usize / model.batch).max(1) * model.batch;
+
+    let epochs = scale.pick(3, 12);
+    let solver = crate::solvers::by_name_eta(solver_for(method), eta)?;
+    let grad = crate::grad::by_name(method)?;
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+
+    let mut opt_enc = opt_by_name("adamax", 0.01, model.enc.len())?;
+    let mut opt_dec = opt_by_name("adamax", 0.01, model.dec.len())?;
+    let mut opt_dyn = opt_by_name("adamax", 0.01, model.dynamics.param_dim())?;
+
+    for epoch in 0..epochs {
+        // paper: lr ×0.999 per epoch
+        let lr = 0.01 * 0.999f64.powi(epoch as i32);
+        opt_enc.set_lr(lr);
+        opt_dec.set_lr(lr);
+        opt_dyn.set_lr(lr);
+        let mut order: Vec<usize> = (0..n_train).collect();
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(model.batch) {
+            if chunk.len() < model.batch {
+                continue;
+            }
+            let mut seq = Vec::new();
+            let mut tgt = Vec::new();
+            for &i in chunk {
+                seq.extend_from_slice(ds.observed(i, model.t_len));
+                tgt.extend_from_slice(ds.target(i, model.t_len, model.t_out));
+            }
+            let cfg = SolveCfg {
+                solver: &*solver,
+                spec: spec.clone(),
+                method: &*grad,
+            };
+            model.step(&seq, &tgt, &cfg, &mut rng)?;
+            opt_enc.step(&mut model.enc.value, &model.enc.grad);
+            opt_dec.step(&mut model.dec.value, &model.dec.grad);
+            let mut theta = model.dynamics.params().to_vec();
+            opt_dyn.step(&mut theta, &model.dyn_grad);
+            model.dynamics.set_params(&theta);
+        }
+    }
+
+    // test MSE over held-out trajectories (mean latent path)
+    let cfg = SolveCfg {
+        solver: &*solver,
+        spec,
+        method: &*grad,
+    };
+    let mut mse_sum = 0.0;
+    let mut batches = 0;
+    for start in (n_train_max..n_train_max + n_test).step_by(model.batch) {
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for i in start..start + model.batch {
+            seq.extend_from_slice(ds.observed(i, model.t_len));
+            tgt.extend_from_slice(ds.target(i, model.t_len, model.t_out));
+        }
+        let preds = model.predict(&seq, &cfg)?;
+        mse_sum += LatentOde::mse(&preds, &tgt);
+        batches += 1;
+    }
+    Ok(mse_sum / batches.max(1) as f64)
+}
+
+/// Train an RNN/GRU baseline on the same split; returns test MSE.
+fn seq_baseline_mse(
+    engine: &Rc<Engine>,
+    key: &str,
+    train_frac: f64,
+    scale: Scale,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let latent_model = LatentOde::new(engine.clone(), &mut rng)?;
+    let (batch, t_len, t_out) = (latent_model.batch, latent_model.t_len, latent_model.t_out);
+    let mut model = SeqBaseline::new(engine.clone(), key, &mut rng)?;
+    let n_total = scale.pick(4, 12) * batch;
+    let n_test = scale.pick(1, 4) * batch;
+    let ds = hopper::generate(n_total + n_test, t_len, t_out, 3.0, seed + 11);
+    let n_train = (((n_total as f64) * train_frac).round() as usize / batch).max(1) * batch;
+    let epochs = scale.pick(3, 12);
+    let mut opt = opt_by_name("adamax", 0.01, model.params.len())?;
+    for _ in 0..epochs {
+        let mut order: Vec<usize> = (0..n_train).collect();
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(batch) {
+            if chunk.len() < batch {
+                continue;
+            }
+            let mut seq = Vec::new();
+            let mut tgt = Vec::new();
+            for &i in chunk {
+                seq.extend_from_slice(ds.observed(i, t_len));
+                tgt.extend_from_slice(ds.target(i, t_len, t_out));
+            }
+            model.step(&seq, &tgt)?;
+            opt.step(&mut model.params.value, &model.params.grad);
+        }
+    }
+    let mut mse_sum = 0.0;
+    let mut batches = 0;
+    for start in (n_total..n_total + n_test).step_by(batch) {
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for i in start..start + batch {
+            seq.extend_from_slice(ds.observed(i, t_len));
+            tgt.extend_from_slice(ds.target(i, t_len, t_out));
+        }
+        let preds = model.predict(&seq)?;
+        mse_sum += preds
+            .iter()
+            .zip(&tgt)
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / preds.len() as f64;
+        batches += 1;
+    }
+    Ok(mse_sum / batches.max(1) as f64)
+}
+
+/// Table 4 — latent-ODE MSE × training-data fraction × method.
+pub fn table4(scale: Scale, seed: u64) -> Result<Json> {
+    let engine = Rc::new(Engine::from_env()?);
+    let fracs = [0.1, 0.2, 0.5];
+    let mut table = Table::new(
+        "Table 4: hopper test MSE ×0.01 (lower is better)",
+        &["% data", "rnn", "gru", "adjoint", "naive", "aca", "mali"],
+    );
+    let mut rows = Vec::new();
+    for &frac in &fracs {
+        let mut cells = vec![format!("{:.0}%", frac * 100.0)];
+        for key in ["rnn", "gru"] {
+            let mse = seq_baseline_mse(&engine, key, frac, scale, seed)?;
+            cells.push(format!("{:.2}", mse * 100.0));
+            rows.push(Json::obj(vec![
+                ("method", Json::Str(key.into())),
+                ("frac", Json::Num(frac)),
+                ("mse", Json::Num(mse)),
+            ]));
+        }
+        for method in ["adjoint", "naive", "aca", "mali"] {
+            let mse = latent_ode_mse(&engine, method, 1.0, frac, scale, seed)?;
+            cells.push(format!("{:.2}", mse * 100.0));
+            rows.push(Json::obj(vec![
+                ("method", Json::Str(method.into())),
+                ("frac", Json::Num(frac)),
+                ("mse", Json::Num(mse)),
+            ]));
+            log(
+                Level::Info,
+                &format!("table4 {method} @ {frac}: mse {mse:.5}"),
+            );
+        }
+        table.row(&cells);
+    }
+    table.print();
+    Ok(report::summary(rows, vec![("seed", Json::Num(seed as f64))]))
+}
+
+/// Train a Neural CDE with one gradient method; returns test accuracy.
+fn cde_accuracy(
+    engine: &Rc<Engine>,
+    method: &str,
+    eta: f64,
+    scale: Scale,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut model = NeuralCde::new(engine.clone(), &mut rng)?;
+    let n_train = scale.pick(4, 12) * model.batch;
+    let n_test = scale.pick(1, 3) * model.batch;
+    let ds = speech::generate(&SpeechSpec::commands10(), n_train + n_test, seed + 21);
+    let (train, test) = ds.split(n_test);
+
+    // paper App. B.2: fixed stepsize 0.25, 100 epochs, lr 0.004 — scaled
+    let epochs = scale.pick(4, 20);
+    let use_seminorm = method == "seminorm";
+    let grad_name = if use_seminorm { "adjoint-seminorm" } else { method };
+    let solver = crate::solvers::by_name_eta(solver_for(method), eta)?;
+    let grad = crate::grad::by_name(grad_name)?;
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+
+    let mut opt_stem = opt_by_name("adam", 0.01, model.stem.len())?;
+    let mut opt_head = opt_by_name("adam", 0.01, model.head.len())?;
+    let mut opt_dyn = opt_by_name("adam", 0.01, model.dynamics.param_dim())?;
+
+    for _ in 0..epochs {
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(model.batch) {
+            if chunk.len() < model.batch {
+                continue;
+            }
+            let (ctx, x0, y1h, _) = model.prepare_batch(&train, chunk);
+            let cfg = SolveCfg {
+                solver: &*solver,
+                spec: spec.clone(),
+                method: &*grad,
+            };
+            model.step(ctx, &x0, &y1h, &cfg)?;
+            opt_stem.step(&mut model.stem.value, &model.stem.grad);
+            opt_head.step(&mut model.head.value, &model.head.grad);
+            let mut theta = model.dynamics.params().to_vec();
+            opt_dyn.step(&mut theta, &model.dyn_grad);
+            model.dynamics.set_params(&theta);
+        }
+    }
+
+    let mut meter = AccuracyMeter::default();
+    let all: Vec<usize> = (0..test.len()).collect();
+    for chunk in all.chunks(model.batch) {
+        if chunk.len() < model.batch {
+            continue;
+        }
+        let (ctx, x0, _, y) = model.prepare_batch(&test, chunk);
+        let cfg = SolveCfg {
+            solver: &*solver,
+            spec: spec.clone(),
+            method: &*grad,
+        };
+        let logits = model.predict(ctx, &x0, &cfg)?;
+        let pred = crate::tensor::argmax_rows(&logits, model.batch, model.classes);
+        meter.add(&pred, &y);
+    }
+    Ok(meter.value())
+}
+
+/// Table 5 — Neural-CDE accuracy per gradient method.
+pub fn table5(scale: Scale, seed: u64) -> Result<Json> {
+    let engine = Rc::new(Engine::from_env()?);
+    let methods = ["adjoint", "seminorm", "naive", "aca", "mali"];
+    let mut table = Table::new(
+        "Table 5: synthetic speech-command test accuracy",
+        &["method", "accuracy"],
+    );
+    let mut rows = Vec::new();
+    for method in methods {
+        let acc = cde_accuracy(&engine, method, 1.0, scale, seed)?;
+        table.row(&[method.into(), format!("{acc:.3}")]);
+        rows.push(Json::obj(vec![
+            ("method", Json::Str(method.into())),
+            ("acc", Json::Num(acc)),
+        ]));
+        log(Level::Info, &format!("table5 {method}: acc {acc:.3}"));
+    }
+    table.print();
+    Ok(report::summary(rows, vec![("seed", Json::Num(seed as f64))]))
+}
+
+/// Table 7 — damped-MALI η ablation on the CDE accuracy and latent-ODE MSE.
+pub fn table7(scale: Scale, seed: u64) -> Result<Json> {
+    let engine = Rc::new(Engine::from_env()?);
+    let etas = [1.0, 0.95, 0.9, 0.85];
+    let mut table = Table::new(
+        "Table 7: damped MALI, η ablation",
+        &["eta", "cde acc", "latent mse ×0.01 (10%)", "latent mse ×0.01 (20%)"],
+    );
+    let mut rows = Vec::new();
+    for &eta in &etas {
+        let acc = cde_accuracy(&engine, "mali", eta, scale, seed)?;
+        let mse10 = latent_ode_mse(&engine, "mali", eta, 0.1, scale, seed)?;
+        let mse20 = latent_ode_mse(&engine, "mali", eta, 0.2, scale, seed)?;
+        table.row(&[
+            format!("{eta}"),
+            format!("{acc:.3}"),
+            format!("{:.2}", mse10 * 100.0),
+            format!("{:.2}", mse20 * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("eta", Json::Num(eta)),
+            ("cde_acc", Json::Num(acc)),
+            ("mse10", Json::Num(mse10)),
+            ("mse20", Json::Num(mse20)),
+        ]));
+    }
+    table.print();
+    Ok(report::summary(rows, vec![("seed", Json::Num(seed as f64))]))
+}
+
+/// Expose the speech corpus type for the bench wrappers.
+pub fn speech_corpus(n: usize, seed: u64) -> SequenceDataset {
+    speech::generate(&SpeechSpec::commands10(), n, seed)
+}

@@ -1,0 +1,258 @@
+//! The experiment coordinator: registry of every paper table/figure
+//! reproduction (E1–E11 in DESIGN.md §5), the job runner behind the CLI,
+//! and the report writer.
+//!
+//! Each experiment is a library function so the criterion-style bench
+//! targets (`rust/benches/*.rs`), the `mali run <exp>` CLI and the test
+//! suite all drive the same code with different scale knobs.
+
+pub mod exp_flows;
+pub mod exp_images;
+pub mod exp_series;
+pub mod exp_toy;
+pub mod report;
+
+use crate::cli::{Args, USAGE};
+use crate::util::logging::{log, set_level, Level};
+use anyhow::Result;
+
+/// Scale knob: `Quick` for CI-sized runs (seconds–minutes), `Full` for the
+/// EXPERIMENTS.md numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args) -> Scale {
+        if args.flag("full") {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+
+    /// Pick `q` under Quick, `f` under Full.
+    pub fn pick<T>(&self, q: T, f: T) -> T {
+        match self {
+            Scale::Quick => q,
+            Scale::Full => f,
+        }
+    }
+}
+
+/// Registered experiments: (name, paper artifact, runner).
+type Runner = fn(Scale, u64) -> Result<crate::util::json::Json>;
+
+pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
+    vec![
+        ("fig4", "Fig. 4 (a,b,c) toy gradient error + memory", exp_toy::fig4 as Runner),
+        ("table1", "Table 1 complexity accounting", exp_toy::table1 as Runner),
+        ("figA1", "App. Fig. 1 damped-ALF stability regions", exp_toy::fig_a1 as Runner),
+        ("fig5", "Fig. 5 Cifar-like: 4 methods + ResNet", exp_images::fig5 as Runner),
+        ("fig6", "Fig. 6 ImageNet-like: MALI vs adjoint", exp_images::fig6 as Runner),
+        ("table2", "Table 2 invariance to discretization", exp_images::table2 as Runner),
+        ("table3", "Table 3 FGSM robustness grid", exp_images::table3 as Runner),
+        ("table4", "Table 4 latent-ODE MSE on hopper", exp_series::table4 as Runner),
+        ("table5", "Table 5 Neural-CDE speech accuracy", exp_series::table5 as Runner),
+        ("table7", "Table 7 damped-MALI η ablation", exp_series::table7 as Runner),
+        ("table6", "Table 6 FFJORD BPD + RealNVP", exp_flows::table6 as Runner),
+    ]
+}
+
+/// CLI entry point (called from `main.rs`).
+pub fn cli_main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run_cli(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if args.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let seed = args.opt("seed").and_then(|s| s.parse().ok()).unwrap_or(0u64);
+    let scale = Scale::from_args(&args);
+
+    match args.command.as_str() {
+        "" | "help" => println!("{USAGE}"),
+        "list" => {
+            for (name, desc, _) in registry() {
+                println!("{name:10} {desc}");
+            }
+        }
+        "run" => {
+            let Some(name) = args.positional.first() else {
+                anyhow::bail!("usage: mali run <experiment> [--full] [--seed N]");
+            };
+            let reg = registry();
+            if name == "all" {
+                for (n, desc, runner) in &reg {
+                    log(Level::Info, &format!("=== {n}: {desc} ==="));
+                    let summary = runner(scale, seed)?;
+                    report::write_summary(&args.opt_or("runs", "runs"), n, &summary)?;
+                }
+            } else {
+                let Some((n, _, runner)) = reg.iter().find(|(n, _, _)| n == name) else {
+                    anyhow::bail!(
+                        "unknown experiment '{name}'; `mali list` shows the registry"
+                    );
+                };
+                let summary = runner(scale, seed)?;
+                report::write_summary(&args.opt_or("runs", "runs"), n, &summary)?;
+            }
+        }
+        "train" => {
+            let Some(path) = args.positional.first() else {
+                anyhow::bail!("usage: mali train <config.json> [--set a.b=c]");
+            };
+            let mut cfg = crate::config::Config::load(std::path::Path::new(path))?;
+            for (k, v) in &args.overrides {
+                cfg.set(k, v)?;
+            }
+            train_from_config(&cfg, &args.opt_or("runs", "runs"))?;
+        }
+        "smoke" => smoke()?,
+        "toy" => {
+            exp_toy::fig4(Scale::Quick, seed)?;
+        }
+        "stability" => {
+            exp_toy::fig_a1(Scale::Quick, seed)?;
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Train an image classifier from a `configs/*.json` file — the
+/// config-system entry point (`mali train configs/img16_mali.json`).
+pub fn train_from_config(cfg: &crate::config::Config, runs_dir: &str) -> Result<()> {
+    use crate::data::images::{generate, ImageSpec};
+    use crate::models::image::OdeImageClassifier;
+    use crate::train::trainer::{ImageTrainer, TrainCfg};
+    use crate::util::json::Json;
+
+    let model_key = cfg.str("model", "img16");
+    let spec = match model_key.as_str() {
+        "img16" => ImageSpec::cifar_like(),
+        "img32" => ImageSpec::imagenet_like(),
+        other => anyhow::bail!("config model must be img16|img32, got '{other}'"),
+    };
+    let n_train = cfg.usize("data.n_train", 1600);
+    let n_test = cfg.usize("data.n_test", 320);
+    let data_seed = cfg.u64("data.seed", 42);
+    let (train, test) = generate(&spec, n_train + n_test, data_seed).split(n_test);
+
+    let tc = TrainCfg {
+        epochs: cfg.usize("train.epochs", 6),
+        lr: cfg.f64("train.lr", 0.05),
+        momentum: cfg.f64("train.momentum", 0.9),
+        weight_decay: cfg.f64("train.weight_decay", 5e-4),
+        lr_drops: cfg
+            .f64_list("train.lr_drops", &[])
+            .into_iter()
+            .map(|v| v as usize)
+            .collect(),
+        optimizer: cfg.str("train.optimizer", "sgd"),
+        method: cfg.str("train.method", "mali"),
+        solver: cfg.str("train.solver", "alf"),
+        eta: cfg.f64("train.eta", 1.0),
+        h: cfg.f64("train.h", 0.0),
+        rtol: cfg.f64("train.rtol", 1e-1),
+        atol: cfg.f64("train.atol", 1e-2),
+        t_end: cfg.f64("train.t_end", 1.0),
+        seed: cfg.u64("train.seed", 0),
+    };
+    let engine = std::rc::Rc::new(crate::runtime::Engine::from_env()?);
+    let mut rng = crate::util::rng::Rng::new(tc.seed);
+    let mut model = OdeImageClassifier::new(engine, &model_key, &mut rng)?;
+    let report = ImageTrainer::new(tc).train_ode(&mut model, &train, &test)?;
+    println!(
+        "final accuracy {:.3} in {:.1}s (peak solver-state {})",
+        report.final_acc,
+        report.total_secs,
+        crate::util::mem::fmt_bytes(report.peak_mem_bytes)
+    );
+    let rows: Vec<Json> = report
+        .epochs
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("epoch", Json::Num(e.epoch as f64)),
+                ("train_loss", Json::Num(e.train_loss)),
+                ("test_acc", Json::Num(e.test_acc)),
+            ])
+        })
+        .collect();
+    report::write_summary(
+        runs_dir,
+        &format!("train_{}", cfg.name),
+        &report::summary(rows, vec![("final_acc", Json::Num(report.final_acc))]),
+    )?;
+    Ok(())
+}
+
+/// Load + execute every artifact once — the runtime health check.
+pub fn smoke() -> Result<()> {
+    use crate::runtime::Engine;
+    let engine = Engine::from_env()?;
+    let names: Vec<String> = engine.manifest.entries.keys().cloned().collect();
+    let mut ok = 0usize;
+    for name in &names {
+        let spec = engine.manifest.entry(name)?.clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|t| vec![0.1f32; t.len().max(1)])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        match engine.call(name, &refs) {
+            Ok(outs) => {
+                ok += 1;
+                log(
+                    Level::Debug,
+                    &format!("{name}: {} outputs OK", outs.len()),
+                );
+            }
+            Err(e) => anyhow::bail!("artifact '{name}' failed: {e:#}"),
+        }
+    }
+    println!("smoke OK: {ok}/{} artifacts execute", names.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let names: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
+        for required in [
+            "fig4", "fig5", "fig6", "table1", "table2", "table3", "table4", "table5",
+            "table6", "table7", "figA1",
+        ] {
+            assert!(names.contains(&required), "{required} missing from registry");
+        }
+    }
+
+    #[test]
+    fn scale_picks() {
+        assert_eq!(Scale::Quick.pick(1, 2), 1);
+        assert_eq!(Scale::Full.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cli(&["bogus".into()]).is_err());
+        assert!(run_cli(&["run".into(), "nope".into()]).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Run-summary persistence: every experiment writes a JSON summary under
+//! `runs/` so EXPERIMENTS.md numbers are regenerable and diffable.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Write `runs/<name>.json` (directory created on demand).
+pub fn write_summary(dir: &str, name: &str, summary: &Json) -> Result<()> {
+    let d = Path::new(dir);
+    fs::create_dir_all(d).with_context(|| format!("create {dir}"))?;
+    let path = d.join(format!("{name}.json"));
+    fs::write(&path, summary.pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Convenience: a `{"rows": [...], "meta": {...}}` summary object.
+pub fn summary(rows: Vec<Json>, meta: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("meta", Json::obj(meta)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_readable_json() {
+        let dir = std::env::temp_dir().join("mali_report_test");
+        let summary = summary(
+            vec![Json::obj(vec![("k", Json::Num(1.0))])],
+            vec![("seed", Json::Num(0.0))],
+        );
+        write_summary(dir.to_str().unwrap(), "unit", &summary).unwrap();
+        let back = Json::parse_file(&dir.join("unit.json")).unwrap();
+        assert_eq!(back.get("rows").idx(0).get("k").as_f64(), Some(1.0));
+        fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,282 @@
+//! Generative-modeling corpora (paper Table 6, DESIGN.md §4):
+//!
+//! * procedural 8×8 digit glyphs — the MNIST stand-in (`cnf_mnist8`);
+//! * 8×8×3 Gabor textures   — the CIFAR10 stand-in (`cnf_cifar8`), reusing
+//!   the classifier texture generator;
+//! * classic 2-D toy densities (pinwheel, moons, 8-gaussians,
+//!   checkerboard, spirals) for the density-estimation sanity experiment
+//!   (`cnf_density2d`).
+//!
+//! Pixel corpora come dequantized to `[0,1]`; the logit preprocessing and
+//! its BPD bookkeeping live with the CNF model (`models/cnf.rs`).
+
+use super::images::{generate as gen_images, ImageSpec};
+use super::Dataset;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// 8×8 digit glyphs
+// ---------------------------------------------------------------------------
+
+/// 5×7 bitmap font for digits 0–9, row-major, one bit per pixel.
+const GLYPHS: [[u8; 7]; 10] = [
+    // each row is 5 bits, MSB = leftmost column
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111], // 2
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b01110, 0b10000, 0b11110, 0b10001, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00001, 0b01110], // 9
+];
+
+/// Render one jittered 8×8 digit glyph: random sub-pixel shift, intensity
+/// scale, box blur and additive noise — enough variation that a flow has a
+/// real density to learn, while digits stay visually recognizable.
+fn render_glyph(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 64);
+    let glyph = &GLYPHS[digit];
+    // place the 5×7 glyph inside 8×8 with jittered offset
+    let ox = 1 + rng.below(2) as i32; // 1..=2
+    let oy = rng.below(2) as i32; // 0..=1
+    let intensity = 0.75 + 0.25 * rng.uniform() as f32 as f64;
+    let mut img = [0.0f32; 64];
+    for (r, bits) in glyph.iter().enumerate() {
+        for c in 0..5 {
+            if bits & (1 << (4 - c)) != 0 {
+                let x = c as i32 + ox;
+                let y = r as i32 + oy;
+                if (0..8).contains(&x) && (0..8).contains(&y) {
+                    img[(y * 8 + x) as usize] = intensity as f32;
+                }
+            }
+        }
+    }
+    // 3×3 box blur with small weight (anti-aliasing)
+    let blur_w = 0.15f32;
+    for y in 0..8i32 {
+        for x in 0..8i32 {
+            let mut acc = 0.0f32;
+            let mut cnt = 0;
+            for dy in -1..=1i32 {
+                for dx in -1..=1i32 {
+                    let (nx, ny) = (x + dx, y + dy);
+                    if (0..8).contains(&nx) && (0..8).contains(&ny) {
+                        acc += img[(ny * 8 + nx) as usize];
+                        cnt += 1;
+                    }
+                }
+            }
+            let base = img[(y * 8 + x) as usize];
+            let px = (1.0 - blur_w) * base + blur_w * acc / cnt as f32;
+            let noise = 0.03 * rng.normal() as f32;
+            out[(y * 8 + x) as usize] = (px + noise).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// The synth-MNIST corpus: `n` jittered glyphs, classes interleaved.
+pub fn mnist8(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n * 64];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = i % 10;
+        render_glyph(digit, &mut rng, &mut x[i * 64..(i + 1) * 64]);
+        y.push(digit);
+    }
+    Dataset {
+        x,
+        y,
+        d: 64,
+        classes: 10,
+    }
+}
+
+/// The synth-CIFAR corpus: 8×8×3 Gabor textures (dim 192).
+pub fn cifar8(n: usize, seed: u64) -> Dataset {
+    let spec = ImageSpec {
+        side: 8,
+        channels: 3,
+        classes: 10,
+        jitter: 0.35,
+    };
+    gen_images(&spec, n, seed)
+}
+
+// ---------------------------------------------------------------------------
+// 2-D toy densities
+// ---------------------------------------------------------------------------
+
+/// The classic flow-paper 2-D target densities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Density2D {
+    Pinwheel,
+    TwoMoons,
+    EightGaussians,
+    Checkerboard,
+    TwoSpirals,
+}
+
+impl Density2D {
+    pub fn by_name(name: &str) -> anyhow::Result<Density2D> {
+        Ok(match name {
+            "pinwheel" => Density2D::Pinwheel,
+            "moons" | "two-moons" => Density2D::TwoMoons,
+            "8gaussians" => Density2D::EightGaussians,
+            "checkerboard" => Density2D::Checkerboard,
+            "spirals" | "two-spirals" => Density2D::TwoSpirals,
+            other => anyhow::bail!("unknown 2-D density '{other}'"),
+        })
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> [f32; 2] {
+        match self {
+            Density2D::Pinwheel => {
+                let k = rng.below(5);
+                let rad = 0.3 + 0.05 * rng.normal();
+                let r = rad + rng.uniform() * 0.9;
+                let base = k as f64 * 2.0 * std::f64::consts::PI / 5.0;
+                let ang = base + 0.8 * (r - rad); // arms curve with radius
+                let (x, y) = (r * ang.cos(), r * ang.sin());
+                [
+                    (x + 0.05 * rng.normal()) as f32,
+                    (y + 0.05 * rng.normal()) as f32,
+                ]
+            }
+            Density2D::TwoMoons => {
+                let upper = rng.below(2) == 0;
+                let t = rng.uniform() * std::f64::consts::PI;
+                let (x, y) = if upper {
+                    (t.cos(), t.sin() - 0.25)
+                } else {
+                    (1.0 - t.cos(), -t.sin() + 0.25)
+                };
+                [
+                    (x - 0.5 + 0.08 * rng.normal()) as f32,
+                    (y + 0.08 * rng.normal()) as f32,
+                ]
+            }
+            Density2D::EightGaussians => {
+                let k = rng.below(8) as f64;
+                let ang = k * std::f64::consts::PI / 4.0;
+                [
+                    (2.0 * ang.cos() + 0.15 * rng.normal()) as f32,
+                    (2.0 * ang.sin() + 0.15 * rng.normal()) as f32,
+                ]
+            }
+            Density2D::Checkerboard => loop {
+                let x = rng.range(-2.0, 2.0);
+                let y = rng.range(-2.0, 2.0);
+                let (cx, cy) = ((x + 2.0).floor() as i64, (y + 2.0).floor() as i64);
+                if (cx + cy) % 2 == 0 {
+                    return [x as f32, y as f32];
+                }
+            },
+            Density2D::TwoSpirals => {
+                let arm = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                let t = (rng.uniform()).sqrt() * 3.0 * std::f64::consts::PI;
+                let r = t / (3.0 * std::f64::consts::PI) * 2.0;
+                [
+                    (arm * r * t.cos() + 0.05 * rng.normal()) as f32,
+                    (arm * r * t.sin() + 0.05 * rng.normal()) as f32,
+                ]
+            }
+        }
+    }
+
+    /// Draw `n` samples as a flat `n × 2` buffer.
+    pub fn sample_n(&self, n: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let [x, y] = self.sample(rng);
+            out.push(x);
+            out.push(y);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyphs_are_recognizable_bitmaps() {
+        let ds = mnist8(30, 4);
+        assert_eq!(ds.d, 64);
+        // ink fraction is moderate: neither empty nor full
+        for i in 0..10 {
+            let ink: f32 = ds.row(i).iter().filter(|&&p| p > 0.4).count() as f32 / 64.0;
+            assert!(
+                (0.08..0.6).contains(&ink),
+                "digit {} ink fraction {ink}",
+                ds.y[i]
+            );
+        }
+        // distinct digits differ
+        let d01: f32 = ds
+            .row(0)
+            .iter()
+            .zip(ds.row(1))
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(d01 > 1.0, "digit 0 vs 1 too similar: {d01}");
+    }
+
+    #[test]
+    fn mnist8_deterministic() {
+        assert_eq!(mnist8(10, 1).x, mnist8(10, 1).x);
+        assert_ne!(mnist8(10, 1).x, mnist8(10, 2).x);
+    }
+
+    #[test]
+    fn cifar8_has_expected_dim() {
+        let ds = cifar8(12, 1);
+        assert_eq!(ds.d, 192);
+        assert!(ds.x.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn densities_sample_bounded() {
+        let mut rng = Rng::new(7);
+        for d in [
+            Density2D::Pinwheel,
+            Density2D::TwoMoons,
+            Density2D::EightGaussians,
+            Density2D::Checkerboard,
+            Density2D::TwoSpirals,
+        ] {
+            let xs = d.sample_n(500, &mut rng);
+            assert_eq!(xs.len(), 1000);
+            for &v in &xs {
+                assert!(v.abs() < 6.0, "{d:?} sample out of range: {v}");
+            }
+            // non-degenerate spread
+            let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+            let var: f32 =
+                xs.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / xs.len() as f32;
+            assert!(var > 0.05, "{d:?} collapsed: var {var}");
+        }
+    }
+
+    #[test]
+    fn checkerboard_respects_parity() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let [x, y] = Density2D::Checkerboard.sample(&mut rng);
+            let (cx, cy) = ((x + 2.0).floor() as i64, (y + 2.0).floor() as i64);
+            assert_eq!((cx + cy) % 2, 0);
+        }
+    }
+
+    #[test]
+    fn density_name_lookup() {
+        assert!(Density2D::by_name("pinwheel").is_ok());
+        assert!(Density2D::by_name("nope").is_err());
+    }
+}

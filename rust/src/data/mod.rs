@@ -1,0 +1,200 @@
+//! Synthetic datasets — the substitutions for the paper's CIFAR-10 /
+//! ImageNet / Speech-Commands / MNIST corpora (DESIGN.md §4).
+//!
+//! Every generator is deterministic in its seed, produces a train/test
+//! split, and exercises exactly the code path the paper's dataset would:
+//! multi-epoch minibatch SGD through stem → ODE block → head for images,
+//! irregularly-sampled sequences → spline → CDE for speech, and
+//! dequantized bounded pixels → CNF for the generative experiments.
+
+pub mod density;
+pub mod images;
+pub mod speech;
+
+use crate::util::rng::Rng;
+
+/// A labelled classification dataset with flat f32 features.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major features, `n × d`.
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Split off the last `n_test` examples (generators interleave classes,
+    /// so the tail is class-balanced).
+    pub fn split(self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.len());
+        let n_train = self.len() - n_test;
+        let (d, classes) = (self.d, self.classes);
+        let test = Dataset {
+            x: self.x[n_train * d..].to_vec(),
+            y: self.y[n_train..].to_vec(),
+            d,
+            classes,
+        };
+        let train = Dataset {
+            x: self.x[..n_train * d].to_vec(),
+            y: self.y[..n_train].to_vec(),
+            d,
+            classes,
+        };
+        (train, test)
+    }
+
+    /// One-hot encode labels for rows `idx`.
+    pub fn one_hot(&self, idx: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0f32; idx.len() * self.classes];
+        for (r, &i) in idx.iter().enumerate() {
+            out[r * self.classes + self.y[i]] = 1.0;
+        }
+        out
+    }
+
+    /// Gather rows `idx` into a dense batch.
+    pub fn gather(&self, idx: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Shuffled epoch of fixed-size batches (drops the ragged tail, like
+    /// the reference training loops).
+    pub fn epoch_batches(&self, batch: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks(batch)
+            .filter(|c| c.len() == batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    /// Deterministic evaluation batches (padded by wrapping, so callers can
+    /// mask the duplicates and score every example exactly once).
+    pub fn eval_batches(&self, batch: usize) -> Vec<Vec<usize>> {
+        (0..self.len())
+            .collect::<Vec<_>>()
+            .chunks(batch)
+            .map(|c| {
+                let mut idx = c.to_vec();
+                while idx.len() < batch {
+                    idx.push(idx[idx.len() % c.len()]);
+                }
+                idx
+            })
+            .collect()
+    }
+}
+
+/// A set of irregularly-sampled multichannel sequences (speech / hopper).
+#[derive(Debug, Clone)]
+pub struct SequenceDataset {
+    /// Per-example observation times in `[0, 1]`, strictly increasing.
+    pub times: Vec<Vec<f64>>,
+    /// Per-example observations, `times[i].len() × channels`, row-major.
+    pub values: Vec<Vec<f32>>,
+    pub channels: usize,
+    pub y: Vec<usize>,
+    pub classes: usize,
+}
+
+impl SequenceDataset {
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn split(mut self, n_test: usize) -> (SequenceDataset, SequenceDataset) {
+        assert!(n_test < self.len());
+        let n_train = self.len() - n_test;
+        let test = SequenceDataset {
+            times: self.times.split_off(n_train),
+            values: self.values.split_off(n_train),
+            channels: self.channels,
+            y: self.y.split_off(n_train),
+            classes: self.classes,
+        };
+        (self, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: (0..20).map(|i| i as f32).collect(),
+            y: vec![0, 1, 0, 1, 0],
+            d: 4,
+            classes: 2,
+        }
+    }
+
+    #[test]
+    fn rows_and_gather() {
+        let d = tiny();
+        assert_eq!(d.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        let b = d.gather(&[0, 2]);
+        assert_eq!(b, vec![0.0, 1.0, 2.0, 3.0, 8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn one_hot_encoding() {
+        let d = tiny();
+        let oh = d.one_hot(&[0, 1]);
+        assert_eq!(oh, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let d = tiny();
+        let (tr, te) = d.clone().split(2);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 2);
+        assert_eq!(te.row(0), d.row(3));
+        assert_eq!(te.y, &d.y[3..]);
+    }
+
+    #[test]
+    fn epoch_batches_cover_without_ragged_tail() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        let bs = d.epoch_batches(2, &mut rng);
+        assert_eq!(bs.len(), 2); // 5 examples, batch 2 → 2 full batches
+        for b in &bs {
+            assert_eq!(b.len(), 2);
+        }
+    }
+
+    #[test]
+    fn eval_batches_pad_by_wrapping() {
+        let d = tiny();
+        let bs = d.eval_batches(3);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].len(), 3);
+        assert_eq!(bs[1].len(), 3); // padded from the 2 remaining
+        assert_eq!(bs[1][2], bs[1][0]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Synthetic spoken-command corpus — the Speech-Commands stand-in for the
+//! Neural-CDE experiment (paper Table 5, DESIGN.md §4).
+//!
+//! Each class is a distinct harmonic-chirp "word": a fundamental frequency,
+//! chirp rate, harmonic amplitude profile and amplitude-modulation rate.
+//! Observations are log filterbank energies (Goertzel band magnitudes over
+//! a short analysis window) taken at *irregular* times in [0, 1] — exactly
+//! the irregularly-sampled setting Neural CDEs are built for.  Channel
+//! layout: `[t, e_0 .. e_{C-2}]` — time is included as a channel, the
+//! standard Neural-CDE convention (Kidger et al. 2020).
+
+use super::SequenceDataset;
+use crate::util::rng::Rng;
+
+/// Parameters of the synthetic command corpus.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeechSpec {
+    pub classes: usize,
+    /// Total channels including the time channel.
+    pub channels: usize,
+    /// Observations per sequence.
+    pub n_obs: usize,
+    /// Samples per analysis window.
+    pub window: usize,
+    /// Waveform sample rate (samples per unit time).
+    pub sample_rate: f64,
+}
+
+impl SpeechSpec {
+    /// Matches the `cde` manifest model: 6 channels (1 time + 5 bands).
+    pub fn commands10() -> SpeechSpec {
+        SpeechSpec {
+            classes: 10,
+            channels: 6,
+            n_obs: 40,
+            window: 48,
+            sample_rate: 2048.0,
+        }
+    }
+}
+
+/// Class-deterministic "word" parameters.
+fn word_params(class: usize) -> (f64, f64, [f64; 4], f64) {
+    let g = 0.618_033_988_749_895;
+    let u = (class as f64 * g).fract();
+    let f0 = 60.0 + 300.0 * u; // fundamental
+    let chirp = -80.0 + 160.0 * ((class as f64 * g * 3.0).fract()); // Hz per unit t
+    // harmonic profile: each class emphasizes different overtones
+    let harm = [
+        1.0,
+        0.2 + 0.8 * ((class as f64 * g * 5.0).fract()),
+        0.1 + 0.6 * ((class as f64 * g * 11.0).fract()),
+        0.05 + 0.4 * ((class as f64 * g * 17.0).fract()),
+    ];
+    let am = 2.0 + 10.0 * ((class as f64 * g * 23.0).fract()); // AM rate
+    (f0, chirp, harm, am)
+}
+
+/// Waveform of `class` at time `t` with per-sample jitter baked into the
+/// passed parameters.
+fn waveform(t: f64, f0: f64, chirp: f64, harm: &[f64; 4], am: f64, phase: f64) -> f64 {
+    let inst = f0 * t + 0.5 * chirp * t * t; // integrated instantaneous freq
+    let env = 0.6 + 0.4 * (2.0 * std::f64::consts::PI * am * t).sin();
+    let mut w = 0.0;
+    for (k, &a) in harm.iter().enumerate() {
+        w += a * (2.0 * std::f64::consts::PI * (k + 1) as f64 * inst + phase).sin();
+    }
+    env * w
+}
+
+/// Goertzel-style band magnitude: `|Σ_n w(t_n) e^{-2πi f_b t_n}|` over a
+/// window of samples centred at `t_c`.
+fn band_energy(
+    t_c: f64,
+    f_band: f64,
+    spec: &SpeechSpec,
+    f0: f64,
+    chirp: f64,
+    harm: &[f64; 4],
+    am: f64,
+    phase: f64,
+    noise: &mut impl FnMut() -> f64,
+) -> f64 {
+    let dt = 1.0 / spec.sample_rate;
+    let half = spec.window / 2;
+    let (mut re, mut im) = (0.0f64, 0.0f64);
+    for n in 0..spec.window {
+        let t = t_c + (n as f64 - half as f64) * dt;
+        let w = waveform(t, f0, chirp, harm, am, phase) + 0.05 * noise();
+        let ang = -2.0 * std::f64::consts::PI * f_band * t;
+        re += w * ang.cos();
+        im += w * ang.sin();
+    }
+    let mag = (re * re + im * im).sqrt() / spec.window as f64;
+    (1e-4 + mag).ln()
+}
+
+/// Generate `n` irregularly-sampled sequences (classes interleaved).
+pub fn generate(spec: &SpeechSpec, n: usize, seed: u64) -> SequenceDataset {
+    let mut rng = Rng::new(seed);
+    let bands: Vec<f64> = (0..spec.channels - 1)
+        .map(|b| 80.0 * 2.0f64.powf(b as f64 * 0.8)) // log-spaced 80..~740 Hz
+        .collect();
+    let mut times = Vec::with_capacity(n);
+    let mut values = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % spec.classes;
+        let (f0_0, chirp0, harm, am0) = word_params(class);
+        // per-utterance jitter (speaker variation)
+        let f0 = f0_0 * (1.0 + rng.range(-0.06, 0.06));
+        let chirp = chirp0 * (1.0 + rng.range(-0.15, 0.15));
+        let am = am0 * (1.0 + rng.range(-0.1, 0.1));
+        let phase = rng.range(0.0, 2.0 * std::f64::consts::PI);
+
+        // irregular observation times: uniform jittered grid, sorted,
+        // endpoints pinned so the spline covers [0, 1]
+        let mut ts: Vec<f64> = (0..spec.n_obs)
+            .map(|k| {
+                let base = k as f64 / (spec.n_obs - 1) as f64;
+                (base + rng.range(-0.4, 0.4) / spec.n_obs as f64).clamp(0.0, 1.0)
+            })
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[0] = 0.0;
+        let last = ts.len() - 1;
+        ts[last] = 1.0;
+        // enforce strict monotonicity (spline requirement)
+        for k in 1..ts.len() {
+            if ts[k] <= ts[k - 1] {
+                ts[k] = ts[k - 1] + 1e-4;
+            }
+        }
+
+        let mut vals = Vec::with_capacity(spec.n_obs * spec.channels);
+        for &t in &ts {
+            vals.push(t as f32); // time channel
+            for &fb in &bands {
+                let mut noise = || rng.normal();
+                let e = band_energy(t, fb, spec, f0, chirp, &harm, am, phase, &mut noise);
+                vals.push(e as f32);
+            }
+        }
+        times.push(ts);
+        values.push(vals);
+        y.push(class);
+    }
+    SequenceDataset {
+        times,
+        values,
+        channels: spec.channels,
+        y,
+        classes: spec.classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SpeechSpec::commands10();
+        let a = generate(&spec, 12, 3);
+        let b = generate(&spec, 12, 3);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.len(), 12);
+        for i in 0..a.len() {
+            assert_eq!(a.times[i].len(), spec.n_obs);
+            assert_eq!(a.values[i].len(), spec.n_obs * spec.channels);
+        }
+    }
+
+    #[test]
+    fn times_strictly_increasing_and_span_unit() {
+        let spec = SpeechSpec::commands10();
+        let ds = generate(&spec, 8, 11);
+        for ts in &ds.times {
+            assert_eq!(ts[0], 0.0);
+            assert!((ts[ts.len() - 1] - 1.0).abs() < 1e-12);
+            for w in ts.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn time_channel_matches_times() {
+        let spec = SpeechSpec::commands10();
+        let ds = generate(&spec, 4, 5);
+        for i in 0..ds.len() {
+            for (k, &t) in ds.times[i].iter().enumerate() {
+                let stored = ds.values[i][k * spec.channels];
+                assert!((stored as f64 - t).abs() < 1e-6);
+            }
+        }
+    }
+
+    /// Different classes must produce separated filterbank trajectories —
+    /// mean band-energy vectors across classes should differ measurably.
+    #[test]
+    fn classes_are_separated() {
+        let spec = SpeechSpec::commands10();
+        let ds = generate(&spec, 40, 9);
+        let feat = |i: usize| -> Vec<f64> {
+            // average energies per band over the sequence
+            let mut acc = vec![0.0f64; spec.channels - 1];
+            for k in 0..spec.n_obs {
+                for b in 0..spec.channels - 1 {
+                    acc[b] += ds.values[i][k * spec.channels + 1 + b] as f64;
+                }
+            }
+            acc.iter().map(|a| a / spec.n_obs as f64).collect()
+        };
+        // same-class distance (examples 0 and 10 are both class 0) must be
+        // smaller than cross-class distance (0 vs 5) on average
+        let d = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        };
+        let same = d(&feat(0), &feat(10)) + d(&feat(1), &feat(11));
+        let cross = d(&feat(0), &feat(5)) + d(&feat(1), &feat(6));
+        assert!(
+            cross > same,
+            "classes not separated: same {same} cross {cross}"
+        );
+    }
+}

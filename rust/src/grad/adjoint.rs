@@ -1,0 +1,190 @@
+//! The adjoint method (Chen et al., 2018) — constant memory, but the
+//! reverse-time trajectory is *re-solved* as a separate IVP and therefore
+//! only approximates the forward trajectory (paper Thm. 2.1): numerical
+//! error in ẑ(τ) propagates into `dL/dθ` through Eq. (2).
+//!
+//! Backward dynamics over the augmented state `y = [z, a, g_θ]`:
+//!
+//! ```text
+//! dz/dt  = f(t, z)
+//! da/dt  = −aᵀ ∂f/∂z
+//! dg/dt  = −aᵀ ∂f/∂θ
+//! ```
+//!
+//! integrated from `T` down to `t₀` with `a(T) = ∂L/∂z_T`, `g(T) = 0`.
+//!
+//! The `seminorm` flag enables the adjoint-seminorm trick (Kidger et al.
+//! 2020a, the paper's "SemiNorm" baseline): the `g_θ` block is excluded
+//! from the adaptive error norm, which loosens step-size control where it
+//! does not matter and speeds the backward solve.
+
+use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use crate::solvers::dynamics::{Dynamics, EvalCounters};
+use crate::solvers::integrate::{integrate, ErrorNorm, StepMode};
+use crate::solvers::Solver;
+use crate::util::mem::{MemTracker, TrackedBuf};
+use anyhow::Result;
+use std::sync::Arc;
+
+#[derive(Default)]
+pub struct Adjoint {
+    pub seminorm: bool,
+}
+
+/// `[z, a, g_θ]` augmented reverse dynamics composed from the base model's
+/// `f` and `f_vjp`.
+struct AugmentedAdjoint<'a> {
+    base: &'a dyn Dynamics,
+    d: usize,
+    p: usize,
+    counters: EvalCounters,
+    empty: Vec<f32>,
+}
+
+impl<'a> AugmentedAdjoint<'a> {
+    fn new(base: &'a dyn Dynamics) -> Self {
+        AugmentedAdjoint {
+            d: base.dim(),
+            p: base.param_dim(),
+            base,
+            counters: EvalCounters::default(),
+            empty: Vec::new(),
+        }
+    }
+}
+
+impl Dynamics for AugmentedAdjoint<'_> {
+    fn dim(&self) -> usize {
+        2 * self.d + self.p
+    }
+
+    fn param_dim(&self) -> usize {
+        0
+    }
+
+    fn f(&self, t: f64, y: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let (z, rest) = y.split_at(self.d);
+        let (a, _g) = rest.split_at(self.d);
+        let dz = self.base.f(t, z);
+        let (az, ath) = self.base.f_vjp(t, z, a);
+        let mut out = Vec::with_capacity(self.dim());
+        out.extend_from_slice(&dz);
+        out.extend(az.iter().map(|&x| -x));
+        out.extend(ath.iter().map(|&x| -x));
+        out
+    }
+
+    fn f_vjp(&self, _t: f64, _z: &[f32], _a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        unimplemented!(
+            "second-order vjp through the adjoint's augmented dynamics is \
+             never required (the adjoint method does not backprop through \
+             its own reverse solve)"
+        )
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.empty
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {}
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+
+    fn depth_nf(&self) -> usize {
+        self.base.depth_nf()
+    }
+}
+
+impl GradMethod for Adjoint {
+    fn name(&self) -> &'static str {
+        if self.seminorm {
+            "adjoint-seminorm"
+        } else {
+            "adjoint"
+        }
+    }
+
+    fn grad(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        loss: &dyn LossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<GradResult> {
+        let c = dynamics.counters();
+        c.reset();
+        let (d, p) = (dynamics.dim(), dynamics.param_dim());
+
+        // ---- forward: discard trajectory, keep z(T) only ----------------
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let (s_end, fwd) = integrate(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut (),
+        )?;
+        let kept = TrackedBuf::new(s_end.z.clone(), tracker.clone());
+        let (loss_val, dl_dz) = loss.loss_grad(&kept.data);
+
+        // ---- backward: separate reverse-time IVP -------------------------
+        let aug = AugmentedAdjoint::new(dynamics);
+        let mut y = Vec::with_capacity(2 * d + p);
+        y.extend_from_slice(&kept.data);
+        y.extend_from_slice(&dl_dz);
+        y.extend(std::iter::repeat(0.0f32).take(p));
+
+        // Seminorm: mask the g_θ block out of the error norm.
+        let norm = if self.seminorm {
+            let mut mask = vec![true; 2 * d + p];
+            for m in mask.iter_mut().skip(2 * d) {
+                *m = false;
+            }
+            ErrorNorm::Semi(mask)
+        } else {
+            match &spec.norm {
+                ErrorNorm::Full => ErrorNorm::Full,
+                ErrorNorm::Semi(m) => {
+                    // extend a forward-state mask to the augmented layout
+                    let mut mask = vec![true; 2 * d + p];
+                    mask[..d].copy_from_slice(m);
+                    ErrorNorm::Semi(mask)
+                }
+            }
+        };
+        // Same solver family, reverse direction.
+        let ys0 = solver.init(&aug, spec.t1, &y);
+        let (y_end, bwd) = integrate(
+            solver, &aug, spec.t1, spec.t0, ys0, &reverse_mode(&spec.mode), &norm, &mut (),
+        )?;
+        let reconstructed_z0 = y_end.z[..d].to_vec();
+        let grad_z0 = y_end.z[d..2 * d].to_vec();
+        let grad_theta = y_end.z[2 * d..].to_vec();
+
+        let stats = GradStats {
+            bwd_steps: bwd.n_accepted,
+            // each augmented eval costs one base f + one base vjp
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * bwd.n_accepted.max(1),
+            fwd,
+        };
+        Ok(GradResult {
+            loss: loss_val,
+            z_final: kept.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(reconstructed_z0),
+            stats,
+        })
+    }
+}
+
+/// The reverse solve reuses the forward step policy (fixed h keeps its
+/// magnitude; adaptive keeps tolerances — direction is handled by the
+/// integrate loop).
+fn reverse_mode(mode: &StepMode) -> StepMode {
+    mode.clone()
+}

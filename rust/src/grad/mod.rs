@@ -1,0 +1,180 @@
+//! Gradient estimation for Neural ODEs — the paper's subject.
+//!
+//! Four protocols compute `dL/dθ` and `dL/dz₀` for
+//! `L = loss(z(T))`, `dz/dt = f(t, z; θ)`, `z(t₀) = z₀`:
+//!
+//! | method   | module       | trajectory for backward        | memory (Table 1)      |
+//! |----------|--------------|--------------------------------|-----------------------|
+//! | naive    | [`naive`]    | full tape incl. rejected trials| `N_z·N_f·N_t·m`       |
+//! | adjoint  | [`adjoint`]  | re-solved reverse-time IVP     | `N_z·N_f`             |
+//! | ACA      | [`aca`]      | checkpoints of accepted steps  | `N_z(N_f + N_t)`      |
+//! | **MALI** | [`mali`]     | ψ⁻¹-reconstructed (exact)      | `N_z(N_f + 1)`        |
+//!
+//! All four share the [`Solver`]/[`Dynamics`] abstractions, report
+//! [`GradStats`] (measured memory, evaluations, graph depth) and are
+//! interchangeable in the trainer — exactly how the paper swaps them across
+//! experiments.
+
+pub mod aca;
+pub mod adjoint;
+pub mod mali;
+pub mod naive;
+
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::{ErrorNorm, IntStats, StepMode};
+use crate::solvers::Solver;
+use crate::util::mem::MemTracker;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Loss head: maps the terminal state to `(loss, ∂L/∂z_T)`.
+pub trait LossHead {
+    fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>);
+}
+
+/// Closure adapter so tests and examples can pass lambdas.
+pub struct FnLoss<F: Fn(&[f32]) -> (f64, Vec<f32>)>(pub F);
+
+impl<F: Fn(&[f32]) -> (f64, Vec<f32>)> LossHead for FnLoss<F> {
+    fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>) {
+        (self.0)(z_t)
+    }
+}
+
+/// Sum-of-squares loss `L = Σ z_i²` — the paper's toy objective (Eq. 6).
+pub struct SquareLoss;
+
+impl LossHead for SquareLoss {
+    fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>) {
+        let loss: f64 = z_t.iter().map(|&z| (z as f64) * (z as f64)).sum();
+        let grad = z_t.iter().map(|&z| 2.0 * z).collect();
+        (loss, grad)
+    }
+}
+
+/// Shared configuration of one gradient computation.
+#[derive(Debug, Clone)]
+pub struct IvpSpec {
+    pub t0: f64,
+    pub t1: f64,
+    pub mode: StepMode,
+    pub norm: ErrorNorm,
+}
+
+impl IvpSpec {
+    pub fn fixed(t0: f64, t1: f64, h: f64) -> IvpSpec {
+        IvpSpec {
+            t0,
+            t1,
+            mode: StepMode::Fixed { h },
+            norm: ErrorNorm::Full,
+        }
+    }
+
+    pub fn adaptive(t0: f64, t1: f64, rtol: f64, atol: f64) -> IvpSpec {
+        IvpSpec {
+            t0,
+            t1,
+            mode: StepMode::adaptive(rtol, atol),
+            norm: ErrorNorm::Full,
+        }
+    }
+}
+
+/// Measured cost/fidelity statistics of one gradient computation — the
+/// empirical side of paper Table 1.
+#[derive(Debug, Clone, Default)]
+pub struct GradStats {
+    pub fwd: IntStats,
+    /// Backward-pass solver steps (reverse IVP steps for adjoint; local
+    /// replays for the others).
+    pub bwd_steps: usize,
+    /// Total `f` evaluations (forward + backward), including those inside
+    /// vjp computations.
+    pub f_evals: u64,
+    pub vjp_evals: u64,
+    /// Peak bytes of retained solver state (checkpoints/tapes) — the
+    /// quantity paper Fig. 4(c) plots.
+    pub peak_mem_bytes: usize,
+    /// Longest chain of `f`-applications any gradient flows through
+    /// (`N_f × N_t` for ACA/MALI, `N_f × N_t × m` for naive).
+    pub graph_depth: usize,
+}
+
+/// Result of one gradient computation.
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    pub loss: f64,
+    pub z_final: Vec<f32>,
+    pub grad_theta: Vec<f32>,
+    pub grad_z0: Vec<f32>,
+    /// Adjoint method only: its reconstruction ẑ(t₀) of the initial state —
+    /// the reverse-time-trajectory error the paper analyses (Thm. 2.1).
+    pub reconstructed_z0: Option<Vec<f32>>,
+    pub stats: GradStats,
+}
+
+/// One gradient-estimation protocol.
+pub trait GradMethod {
+    fn name(&self) -> &'static str;
+
+    /// Compute loss and gradients for the IVP.  `tracker` receives every
+    /// buffer the method retains between forward and backward.
+    fn grad(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        loss: &dyn LossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<GradResult>;
+}
+
+/// Method construction by config/CLI name.
+pub fn by_name(name: &str) -> Result<Box<dyn GradMethod>> {
+    Ok(match name {
+        "mali" => Box::new(mali::Mali),
+        "aca" => Box::new(aca::Aca),
+        "naive" => Box::new(naive::Naive),
+        "adjoint" => Box::new(adjoint::Adjoint::default()),
+        "adjoint-seminorm" | "seminorm" => Box::new(adjoint::Adjoint { seminorm: true }),
+        other => anyhow::bail!("unknown gradient method '{other}'"),
+    })
+}
+
+/// The forward-only pass (inference): integrate and apply the loss head.
+pub fn forward_loss(
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    spec: &IvpSpec,
+    z0: &[f32],
+    loss: &dyn LossHead,
+) -> Result<(f64, Vec<f32>, IntStats)> {
+    let s0 = solver.init(dynamics, spec.t0, z0);
+    let (sf, stats) = crate::solvers::integrate::integrate(
+        solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut (),
+    )?;
+    let (l, _) = loss.loss_grad(&sf.z);
+    Ok((l, sf.z, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_loss_grad() {
+        let (l, g) = SquareLoss.loss_grad(&[1.0, -2.0]);
+        assert_eq!(l, 5.0);
+        assert_eq!(g, vec![2.0, -4.0]);
+    }
+
+    #[test]
+    fn factory_covers_methods() {
+        for m in ["mali", "aca", "naive", "adjoint", "seminorm"] {
+            assert!(by_name(m).is_ok(), "{m}");
+        }
+        assert!(by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Naive backprop-through-the-solver.
+//!
+//! The whole computation graph — **including every rejected trial of the
+//! step-size search** — is kept in memory, exactly like calling
+//! `loss.backward()` on an ODE solve written in an eager autodiff
+//! framework.  Memory is `N_z·N_f·N_t·m` and the recorded graph depth is
+//! `N_f·N_t·m` (paper Table 1), which is what makes the naive method both
+//! the most expensive and the most vulnerable to exploding/vanishing
+//! gradients.
+//!
+//! Gradient *values* flow only through the accepted steps (a rejected
+//! trial's output is discarded by the control flow; step sizes are not
+//! differentiated — the standard autodiff semantics of adaptive solvers),
+//! so naive agrees numerically with ACA while paying the full tape.
+
+use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::{integrate, AcceptedStep, StepObserver};
+use crate::solvers::{Solver, State};
+use crate::tensor::axpy;
+use crate::util::mem::{MemTracker, TrackedBuf};
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct Naive;
+
+/// Tape of every trial (accepted or not): the naive autodiff graph.
+struct FullTape {
+    tracker: Arc<MemTracker>,
+    /// Accepted steps: (t, h, state-before).
+    accepted: Vec<(f64, f64, State)>,
+    /// All retained buffers, including rejected-trial outputs.  Each trial
+    /// retains its produced state **times N_f**: an eager framework holds
+    /// every layer's activation of `f` per trial — that per-layer factor
+    /// is exactly the `N_f` in the paper's `N_z·N_f·N_t·m` (Table 1).
+    bufs: Vec<TrackedBuf>,
+    /// `N_f` of the dynamics under differentiation.
+    nf: usize,
+    n_trials: usize,
+    /// Graph depth counted over *all* trials.
+    depth_units: usize,
+}
+
+impl StepObserver for FullTape {
+    fn on_accept(&mut self, step: &AcceptedStep) {
+        self.accepted
+            .push((step.t, step.h, step.before.clone()));
+    }
+
+    fn on_trial(&mut self, _t: f64, _h: f64, state_bytes: usize, _accepted: bool) {
+        // Retain the trial's materialized per-layer activations.
+        self.bufs.push(TrackedBuf::new(
+            vec![0.0f32; (state_bytes / 4) * self.nf],
+            self.tracker.clone(),
+        ));
+        self.n_trials += 1;
+        self.depth_units += 1;
+    }
+}
+
+impl GradMethod for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn grad(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        loss: &dyn LossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<GradResult> {
+        let c = dynamics.counters();
+        c.reset();
+
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut tape = FullTape {
+            tracker: tracker.clone(),
+            accepted: Vec::new(),
+            bufs: Vec::new(),
+            nf: dynamics.depth_nf(),
+            n_trials: 0,
+            depth_units: 0,
+        };
+        let (s_end, fwd) = integrate(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
+        )?;
+        let (loss_val, dl_dz) = loss.loss_grad(&s_end.z);
+
+        // Backward over the tape's accepted path (rejected branches carry
+        // zero cotangent — their outputs feed nothing).
+        let mut a = State {
+            z: dl_dz,
+            v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        for (t, h, before) in tape.accepted.iter().rev() {
+            let (a_prev, dth) = solver.step_vjp(dynamics, *t, *h, before, &a);
+            axpy(1.0, &dth, &mut grad_theta);
+            a = a_prev;
+        }
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let first_z = tape
+                    .accepted
+                    .first()
+                    .map(|(_, _, s)| s.z.as_slice())
+                    .unwrap_or(z0);
+                let (gz, gth) = dynamics.f_vjp(spec.t0, first_z, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let stats = GradStats {
+            bwd_steps: tape.accepted.len(),
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * tape.depth_units.max(1),
+            fwd,
+        };
+        Ok(GradResult {
+            loss: loss_val,
+            z_final: s_end.z,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+        })
+    }
+}

@@ -1,0 +1,37 @@
+//! # mali-ode
+//!
+//! A production-grade reproduction of **MALI: A memory efficient and reverse
+//! accurate integrator for Neural ODEs** (Zhuang et al., ICLR 2021) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1 (Pallas)** — fused asynchronous-leapfrog (ALF) step / inverse /
+//!   dynamics kernels, authored in `python/compile/kernels/` and validated
+//!   against pure-`jnp` oracles.
+//! * **L2 (JAX)** — per-model compute graphs (ψ, ψ⁻¹, ψ-vjp, augmented
+//!   adjoint dynamics, stems/heads, discrete baselines) AOT-lowered once to
+//!   HLO text by `make artifacts`.
+//! * **L3 (this crate)** — the paper's algorithmic contribution: adaptive
+//!   integration (Algo. 1), the four gradient-estimation protocols
+//!   (naive / adjoint / ACA / **MALI**, Algo. 4), training, datasets,
+//!   physics simulation, benchmarks.  Python never runs at request time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod cli;
+pub mod config;
+pub mod tensor;
+pub mod util;
+
+pub mod runtime;
+pub mod solvers;
+pub mod grad;
+
+pub mod data;
+pub mod models;
+pub mod opt;
+pub mod sim;
+pub mod spline;
+pub mod train;
+
+pub mod coordinator;

@@ -1,0 +1,1 @@
+fn main() { mali_ode::coordinator::cli_main(); }

@@ -1,0 +1,91 @@
+//! Experiment models: each binds manifest components to AOT executables and
+//! exposes `loss + gradients` steps the trainer drives (DESIGN.md §2/§5).
+//!
+//! | module      | paper experiment                         | manifest models |
+//! |-------------|------------------------------------------|-----------------|
+//! | [`image`]   | Fig. 5 / Fig. 6 / Tables 2–3 classifiers | `img16`, `img32`|
+//! | [`latent`]  | Table 4 latent-ODE + RNN/GRU baselines   | `latent`, `rnn`, `gru` |
+//! | [`cde`]     | Table 5 Neural CDE                       | `cde`           |
+//! | [`cnf`]     | Table 6 FFJORD                           | `cnf_*`         |
+//! | [`realnvp`] | Table 6 discrete-flow baseline           | `realnvp_*`     |
+//!
+//! Every model takes the gradient-estimation [`GradMethod`]
+//! (naive / adjoint / ACA / MALI) as a parameter — the experiments are
+//! *about* swapping that while the model stays fixed.
+
+pub mod cde;
+pub mod cnf;
+pub mod image;
+pub mod latent;
+pub mod realnvp;
+
+use crate::grad::GradMethod;
+use crate::solvers::Solver;
+
+/// A named flat parameter block plus its gradient accumulator — the unit
+/// the optimizer steps over.
+#[derive(Debug, Clone)]
+pub struct ParamBlock {
+    pub name: String,
+    pub value: Vec<f32>,
+    pub grad: Vec<f32>,
+}
+
+impl ParamBlock {
+    pub fn new(name: &str, value: Vec<f32>) -> ParamBlock {
+        let n = value.len();
+        ParamBlock {
+            name: name.to_string(),
+            value,
+            grad: vec![0.0; n],
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.iter_mut().for_each(|g| *g = 0.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.value.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.value.is_empty()
+    }
+}
+
+/// What one training step reports back to the trainer.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutput {
+    pub loss: f64,
+    /// Classification logits (empty for regression/likelihood models).
+    pub logits: Vec<f32>,
+    /// `dL/dx` when requested (FGSM); empty otherwise.
+    pub grad_x: Vec<f32>,
+    /// Peak retained-state bytes of the gradient method this step.
+    pub peak_mem_bytes: usize,
+    /// Forward accepted steps (N_t) and total f evaluations.
+    pub n_steps: usize,
+    pub f_evals: u64,
+}
+
+/// Solver + integration-spec bundle passed into every model step.
+pub struct SolveCfg<'a> {
+    pub solver: &'a dyn Solver,
+    pub spec: crate::grad::IvpSpec,
+    pub method: &'a dyn GradMethod,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_block_zeroes() {
+        let mut p = ParamBlock::new("w", vec![1.0, 2.0]);
+        p.grad = vec![3.0, 4.0];
+        p.zero_grad();
+        assert_eq!(p.grad, vec![0.0, 0.0]);
+        assert_eq!(p.len(), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! First-order optimizers and LR schedules — Rust owns all training state
+//! (parameters never exist on the Python side).
+//!
+//! The paper's recipes: SGD+momentum with step-decay for image recognition,
+//! Adamax with exponential decay for latent-ODE, Adam for FFJORD/CDE.
+
+use crate::tensor::axpy;
+
+/// Optimizer over one flat parameter vector.
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    fn set_lr(&mut self, lr: f64);
+    fn lr(&self) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// SGD with classical momentum and optional weight decay.
+pub struct Sgd {
+    lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64, weight_decay: f64, n: usize) -> Self {
+        Sgd {
+            lr,
+            momentum,
+            weight_decay,
+            velocity: vec![0.0; n],
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        let (lr, mu, wd) = (self.lr as f32, self.momentum as f32, self.weight_decay as f32);
+        for i in 0..params.len() {
+            let g = grad[i] + wd * params[i];
+            self.velocity[i] = mu * self.velocity[i] + g;
+            params[i] -= lr * self.velocity[i];
+        }
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64, n: usize) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let step = self.lr * bc2.sqrt() / bc1;
+        let wd = self.weight_decay as f32;
+        for i in 0..params.len() {
+            let g = grad[i] + wd * params[i];
+            self.m[i] = (b1 as f32) * self.m[i] + (1.0 - b1 as f32) * g;
+            self.v[i] = (b2 as f32) * self.v[i] + (1.0 - b2 as f32) * g * g;
+            params[i] -= (step as f32) * self.m[i] / (self.v[i].sqrt() + self.eps as f32);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Adamax (the ∞-norm variant of Adam) — the latent-ODE recipe.
+pub struct Adamax {
+    lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f32>,
+    u: Vec<f32>,
+    t: u64,
+}
+
+impl Adamax {
+    pub fn new(lr: f64, n: usize) -> Self {
+        Adamax {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            u: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adamax {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let step = (self.lr / bc1) as f32;
+        let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
+        for i in 0..params.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+            self.u[i] = (b2 * self.u[i]).max(grad[i].abs());
+            params[i] -= step * self.m[i] / (self.u[i] + self.eps as f32);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "adamax"
+    }
+}
+
+pub fn by_name(name: &str, lr: f64, n: usize) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sgd" => Box::new(Sgd::new(lr, 0.9, 0.0, n)),
+        "adam" => Box::new(Adam::new(lr, n)),
+        "adamax" => Box::new(Adamax::new(lr, n)),
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}
+
+/// Learning-rate schedules.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    Constant,
+    /// Multiply by `factor` at each epoch in `milestones` (the paper's
+    /// step-decay at epochs 30/60 with factor 0.1).
+    StepDecay { milestones: Vec<usize>, factor: f64 },
+    /// Multiply by `gamma` every epoch (latent-ODE's 0.999).
+    Exponential { gamma: f64 },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, base_lr: f64, epoch: usize) -> f64 {
+        match self {
+            Schedule::Constant => base_lr,
+            Schedule::StepDecay { milestones, factor } => {
+                let k = milestones.iter().filter(|&&m| epoch >= m).count();
+                base_lr * factor.powi(k as i32)
+            }
+            Schedule::Exponential { gamma } => base_lr * gamma.powi(epoch as i32),
+        }
+    }
+}
+
+/// Global-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grad_norm(grad: &mut [f32], max_norm: f64) -> f64 {
+    let norm = crate::tensor::nrm2(grad);
+    if norm > max_norm && norm > 0.0 {
+        let scale = (max_norm / norm) as f32;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+/// Polyak averaging helper (EMA of parameters) used by generative evals.
+pub struct Ema {
+    pub decay: f64,
+    pub shadow: Vec<f32>,
+    initialized: bool,
+}
+
+impl Ema {
+    pub fn new(decay: f64, n: usize) -> Self {
+        Ema {
+            decay,
+            shadow: vec![0.0; n],
+            initialized: false,
+        }
+    }
+
+    pub fn update(&mut self, params: &[f32]) {
+        if !self.initialized {
+            self.shadow.copy_from_slice(params);
+            self.initialized = true;
+            return;
+        }
+        let d = self.decay as f32;
+        for (s, &p) in self.shadow.iter_mut().zip(params) {
+            *s = d * *s + (1.0 - d) * p;
+        }
+    }
+}
+
+/// Convenience: accumulate `g` into `acc` (gradient accumulation across
+/// micro-batches).
+pub fn accumulate(acc: &mut [f32], g: &[f32]) {
+    axpy(1.0, g, acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All optimizers should descend a convex quadratic f(x) = ||x||².
+    #[test]
+    fn optimizers_descend_quadratic() {
+        for name in ["sgd", "adam", "adamax"] {
+            let mut p = vec![1.0f32, -2.0, 3.0];
+            let mut opt = by_name(name, 0.05, p.len()).unwrap();
+            for _ in 0..300 {
+                let g: Vec<f32> = p.iter().map(|&x| 2.0 * x).collect();
+                opt.step(&mut p, &g);
+            }
+            let norm = crate::tensor::nrm2(&p);
+            assert!(norm < 0.05, "{name}: ‖p‖ = {norm}");
+        }
+    }
+
+    #[test]
+    fn step_decay_schedule() {
+        let s = Schedule::StepDecay {
+            milestones: vec![30, 60],
+            factor: 0.1,
+        };
+        assert_eq!(s.lr_at(0.1, 0), 0.1);
+        assert!((s.lr_at(0.1, 30) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(0.1, 75) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exponential_schedule() {
+        let s = Schedule::Exponential { gamma: 0.999 };
+        let lr = s.lr_at(0.01, 100);
+        assert!((lr - 0.01 * 0.999f64.powi(100)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_caps_norm() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = clip_grad_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((crate::tensor::nrm2(&g) - 1.0).abs() < 1e-6);
+        // below the cap: untouched
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn ema_tracks_params() {
+        let mut ema = Ema::new(0.9, 2);
+        ema.update(&[1.0, 1.0]);
+        assert_eq!(ema.shadow, vec![1.0, 1.0]);
+        ema.update(&[0.0, 2.0]);
+        assert!((ema.shadow[0] - 0.9).abs() < 1e-6);
+        assert!((ema.shadow[1] - 1.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,276 @@
+//! The PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles each
+//! once on the CPU PJRT client, and executes with `Vec<f32>` host buffers.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids cleanly.  See
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`.
+
+use super::manifest::{EntrySpec, Manifest, TensorSpec};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Cumulative engine counters (the L3 perf pass reads these).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// A compiled executable plus its manifest signature.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: EntrySpec,
+}
+
+/// PJRT client + lazily-compiled executable cache, driven by the manifest.
+///
+/// The engine is deliberately single-threaded (`RefCell` caches): PJRT CPU
+/// execution already uses all cores internally, and the coordinator's
+/// parallelism lives at the experiment level where each job owns an engine.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, std::rc::Rc<Compiled>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (must contain
+    /// `manifest.json`; HLO files compile lazily on first call).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Default artifact location relative to the crate root, overridable via
+    /// `MALI_ARTIFACTS`.
+    pub fn artifacts_dir() -> std::path::PathBuf {
+        if let Ok(dir) = std::env::var("MALI_ARTIFACTS") {
+            return dir.into();
+        }
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Convenience constructor over [`Engine::artifacts_dir`].
+    pub fn from_env() -> Result<Engine> {
+        Engine::new(&Engine::artifacts_dir())
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) the named entry.
+    fn compiled(&self, name: &str) -> Result<std::rc::Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile '{name}'"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        let rc = std::rc::Rc::new(Compiled { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Eagerly compile every entry with the given name prefix (warmup).
+    pub fn precompile(&self, prefix: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        for n in &names {
+            self.compiled(n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn buffer_for(
+        &self,
+        spec: &TensorSpec,
+        data: &[f32],
+    ) -> Result<xla::PjRtBuffer> {
+        if spec.dtype != "float32" {
+            bail!("only float32 inputs are exported (got {})", spec.dtype);
+        }
+        if data.len() != spec.len() {
+            bail!(
+                "input length {} does not match shape {:?} ({} elements)",
+                data.len(),
+                spec.shape,
+                spec.len()
+            );
+        }
+        Ok(self
+            .client
+            .buffer_from_host_buffer(data, &spec.shape, None)?)
+    }
+
+    /// Execute entry `name` with flat f32 inputs (shaped per the manifest);
+    /// returns flat f32 outputs in manifest order.
+    ///
+    /// This is the request-path hot call: one host→device transfer per
+    /// input, one execute, one device→host per output.  Inputs go through
+    /// `buffer_from_host_buffer` + `execute_b` — the crate's literal-based
+    /// `execute` leaks its implicitly-created input device buffers
+    /// (~input-size bytes per call, DESIGN.md §9), while buffers we create
+    /// ourselves are freed by their `Drop`.
+    pub fn call(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let c = self.compiled(name)?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "'{name}' expects {} inputs, got {}",
+                c.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let buffers = inputs
+            .iter()
+            .zip(&c.spec.inputs)
+            .enumerate()
+            .map(|(i, (data, spec))| {
+                self.buffer_for(spec, data)
+                    .with_context(|| format!("'{name}' input {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+        let result = c
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("execute '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += t0.elapsed().as_secs_f64();
+        }
+
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "'{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                c.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .with_context(|| format!("'{name}' output {i}"))?;
+                let want = c.spec.outputs[i].len();
+                if v.len() != want {
+                    bail!("'{name}' output {i}: got {} elements, want {want}", v.len());
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Like [`Engine::call`] but asserts a single output and unwraps it.
+    pub fn call1(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let mut out = self.call(name, inputs)?;
+        if out.len() != 1 {
+            bail!("'{name}' has {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::from_env().expect("artifacts built? run `make artifacts`")
+    }
+
+    /// toy.f computes α·z — cross-check the whole load/compile/execute path
+    /// against arithmetic we can do by hand.
+    #[test]
+    fn toy_f_is_alpha_z() {
+        let e = engine();
+        let z = [1.0f32, -2.0, 0.5, 3.0];
+        let alpha = [0.75f32];
+        let out = e.call1("toy.f", &[&[0.3], &z, &alpha]).unwrap();
+        for (o, zi) in out.iter().zip(&z) {
+            assert!((o - 0.75 * zi).abs() < 1e-6, "{o} vs {}", 0.75 * zi);
+        }
+    }
+
+    #[test]
+    fn toy_step_matches_native_alf() {
+        use crate::solvers::alf::AlfSolver;
+        use crate::solvers::dynamics::{Dynamics, LinearToy};
+        let e = engine();
+        let toy = LinearToy::new(0.75, 4);
+        let z = [1.0f32, -2.0, 0.5, 3.0];
+        let v = toy.f(0.0, &z);
+        let (h, eta) = (0.2f64, 1.0f64);
+        let native = AlfSolver::new(eta).psi(&toy, 0.0, h, &z, &v);
+        let hlo = e
+            .call(
+                "toy.step",
+                &[&z, &v, &[0.0], &[h as f32], &[eta as f32], &[0.75]],
+            )
+            .unwrap();
+        for i in 0..4 {
+            assert!((native.0[i] - hlo[0][i]).abs() < 1e-5, "z[{i}]");
+            assert!((native.1[i] - hlo[1][i]).abs() < 1e-5, "v[{i}]");
+            assert!((native.2[i] - hlo[2][i]).abs() < 1e-5, "err[{i}]");
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let e = engine();
+        // wrong arity
+        assert!(e.call("toy.f", &[&[0.0]]).is_err());
+        // wrong input length
+        assert!(e.call("toy.f", &[&[0.0], &[1.0, 2.0], &[1.0]]).is_err());
+        // unknown entry
+        assert!(e.call("toy.bogus", &[]).is_err());
+    }
+
+    #[test]
+    fn cache_compiles_once() {
+        let e = engine();
+        let z = [0.0f32; 4];
+        e.call1("toy.f", &[&[0.0], &z, &[1.0]]).unwrap();
+        e.call1("toy.f", &[&[0.0], &z, &[1.0]]).unwrap();
+        let s = e.stats();
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.executions, 2);
+    }
+}

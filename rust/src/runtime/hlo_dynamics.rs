@@ -1,0 +1,377 @@
+//! [`HloDynamics`]: the [`Dynamics`] implementation backed by AOT-compiled
+//! HLO graphs — the production path where every `f` / ψ / ψ⁻¹ / ψ-vjp
+//! evaluation is one PJRT execute of an L2 graph (containing the L1 Pallas
+//! kernels), with Rust supplying only control flow.
+//!
+//! Each dynamics *family* (`toy`, `img16`, `img32`, `latent`, `cde`,
+//! `cnf_*`) exports the standard executable set (see `families.py`):
+//!
+//! | entry             | signature                                           |
+//! |-------------------|-----------------------------------------------------|
+//! | `<fam>.f`         | `(t, z, *ctx, θ) → dz`                              |
+//! | `<fam>.f_vjp`     | `(t, z, *ctx, θ, a) → (aᵀ∂f/∂z, aᵀ∂f/∂θ)`           |
+//! | `<fam>.step`      | `(z, v, t, h, η, *ctx, θ) → (z', v', err)`          |
+//! | `<fam>.inv`       | `(z', v', t', h, η, *ctx, θ) → (z, v)`              |
+//! | `<fam>.step_vjp`  | `(z, v, t, h, η, *ctx, θ, a_z', a_v') → (a_z, a_v, a_θ)` |
+//!
+//! `ctx` tensors (CDE spline coefficients, the CNF Hutchinson probe) ride
+//! along per solve and are not differentiated.
+
+use super::engine::Engine;
+use crate::solvers::dynamics::{Dynamics, EvalCounters};
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+pub struct HloDynamics {
+    engine: Rc<Engine>,
+    family: String,
+    /// Flattened state size (batch × state_dim).
+    dim: usize,
+    theta: Vec<f32>,
+    /// Context tensors in manifest order (between `z` and `θ` in `f`).
+    ctx: Vec<Vec<f32>>,
+    counters: EvalCounters,
+    nf: usize,
+    /// Route ψ/ψ⁻¹/ψ-vjp through the fused per-step executables (one PJRT
+    /// call) instead of composing them from `f` on the host.
+    pub use_fused: bool,
+}
+
+impl HloDynamics {
+    /// Bind to a family; θ starts at the manifest's init scheme if the
+    /// model declares an `f` component, else zeros.
+    pub fn new(engine: Rc<Engine>, family: &str) -> Result<HloDynamics> {
+        let f_entry = engine
+            .manifest
+            .entry(&format!("{family}.f"))
+            .with_context(|| format!("family '{family}'"))?;
+        // (t, z, *ctx, θ): at least 3 inputs
+        if f_entry.inputs.len() < 3 {
+            bail!("'{family}.f' has {} inputs, expected ≥ 3", f_entry.inputs.len());
+        }
+        let dim = f_entry.inputs[1].len();
+        let n_in = f_entry.inputs.len();
+        let ctx: Vec<Vec<f32>> = f_entry.inputs[2..n_in - 1]
+            .iter()
+            .map(|s| vec![0.0f32; s.len()])
+            .collect();
+        let theta_len = f_entry.inputs[n_in - 1].len();
+        // A family's "depth" N_f: 2 matmul layers for every exported MLP
+        // dynamics (Table-1 accounting).
+        let nf = 2;
+        Ok(HloDynamics {
+            engine,
+            family: family.to_string(),
+            dim,
+            theta: vec![0.0f32; theta_len],
+            ctx,
+            counters: EvalCounters::default(),
+            nf,
+            use_fused: true,
+        })
+    }
+
+    /// Initialize θ from the model's `f` component spec.
+    pub fn init_params(&mut self, rng: &mut crate::util::rng::Rng) -> Result<()> {
+        let comp = self
+            .engine
+            .manifest
+            .model(&self.family)?
+            .component("f")?
+            .clone();
+        if comp.len != self.theta.len() {
+            bail!(
+                "model '{}' f-component len {} vs entry θ len {}",
+                self.family,
+                comp.len,
+                self.theta.len()
+            );
+        }
+        self.theta = comp.init_params(rng);
+        Ok(())
+    }
+
+    pub fn engine(&self) -> &Rc<Engine> {
+        &self.engine
+    }
+
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    pub fn n_ctx(&self) -> usize {
+        self.ctx.len()
+    }
+
+    /// Replace context tensor `i` (length-checked).
+    pub fn set_ctx(&mut self, i: usize, data: Vec<f32>) -> Result<()> {
+        if i >= self.ctx.len() {
+            bail!("family '{}' has {} ctx tensors", self.family, self.ctx.len());
+        }
+        if data.len() != self.ctx[i].len() {
+            bail!(
+                "ctx {i}: got {} elements, want {}",
+                data.len(),
+                self.ctx[i].len()
+            );
+        }
+        self.ctx[i] = data;
+        Ok(())
+    }
+
+    fn entry(&self, suffix: &str) -> String {
+        format!("{}.{}", self.family, suffix)
+    }
+
+    /// Assemble `[fixed..., ctx..., tail...]` input lists.
+    fn with_ctx<'a>(&'a self, head: &[&'a [f32]], tail: &[&'a [f32]]) -> Vec<&'a [f32]> {
+        let mut v: Vec<&[f32]> = Vec::with_capacity(head.len() + self.ctx.len() + tail.len());
+        v.extend_from_slice(head);
+        for c in &self.ctx {
+            v.push(c.as_slice());
+        }
+        v.extend_from_slice(tail);
+        v
+    }
+}
+
+impl Dynamics for HloDynamics {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn param_dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn f(&self, t: f64, z: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let ts = [t as f32];
+        let inputs = self.with_ctx(&[&ts, z], &[&self.theta]);
+        self.engine
+            .call1(&self.entry("f"), &inputs)
+            .expect("HLO f eval")
+    }
+
+    fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        let ts = [t as f32];
+        let inputs = self.with_ctx(&[&ts, z], &[&self.theta, a]);
+        let mut out = self
+            .engine
+            .call(&self.entry("f_vjp"), &inputs)
+            .expect("HLO f_vjp eval");
+        let ath = out.pop().unwrap();
+        let az = out.pop().unwrap();
+        (az, ath)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+
+    fn depth_nf(&self) -> usize {
+        self.nf
+    }
+
+    fn fused_alf(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        if !self.use_fused {
+            return None;
+        }
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let (ts, hs, es) = ([t as f32], [h as f32], [eta as f32]);
+        let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta]);
+        let mut out = self
+            .engine
+            .call(&self.entry("step"), &inputs)
+            .expect("HLO fused ψ");
+        let err = out.pop().unwrap();
+        let v_out = out.pop().unwrap();
+        let z_out = out.pop().unwrap();
+        Some((z_out, v_out, err))
+    }
+
+    fn fused_alf_inv(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        if !self.use_fused {
+            return None;
+        }
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let (ts, hs, es) = ([t_out as f32], [h as f32], [eta as f32]);
+        let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta]);
+        let mut out = self
+            .engine
+            .call(&self.entry("inv"), &inputs)
+            .expect("HLO fused ψ⁻¹");
+        let v_in = out.pop().unwrap();
+        let z_in = out.pop().unwrap();
+        Some((z_in, v_in))
+    }
+
+    fn fused_alf_vjp(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        if !self.use_fused {
+            return None;
+        }
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        let (ts, hs, es) = ([t as f32], [h as f32], [eta as f32]);
+        let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta, az_out, av_out]);
+        let mut out = self
+            .engine
+            .call(&self.entry("step_vjp"), &inputs)
+            .expect("HLO fused ψ-vjp");
+        let ath = out.pop().unwrap();
+        let av = out.pop().unwrap();
+        let az = out.pop().unwrap();
+        Some((az, av, ath))
+    }
+
+    fn fused_alf_bwd(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        if !self.use_fused {
+            return None;
+        }
+        // one PJRT call covering ψ⁻¹ + ψ-vjp; fall back to the composed
+        // path when the artifact set predates the `.bwd` export
+        self.engine.manifest.entry(&self.entry("bwd")).ok()?;
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        let (ts, hs, es) = ([t_out as f32], [h as f32], [eta as f32]);
+        let inputs =
+            self.with_ctx(&[z_out, v_out, &ts, &hs, &es], &[&self.theta, az_out, av_out]);
+        let mut out = self
+            .engine
+            .call(&self.entry("bwd"), &inputs)
+            .expect("HLO fused MALI backward");
+        let ath = out.pop().unwrap();
+        let av = out.pop().unwrap();
+        let az = out.pop().unwrap();
+        let v_in = out.pop().unwrap();
+        let z_in = out.pop().unwrap();
+        Some((z_in, v_in, az, av, ath))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::alf::AlfSolver;
+    use crate::solvers::dynamics::LinearToy;
+
+    fn engine() -> Rc<Engine> {
+        Rc::new(Engine::from_env().expect("run `make artifacts` first"))
+    }
+
+    #[test]
+    fn toy_hlo_matches_native() {
+        let e = engine();
+        let mut d = HloDynamics::new(e, "toy").unwrap();
+        d.set_params(&[0.6]);
+        let native = LinearToy::new(0.6, 4);
+        let z = [1.0f32, 2.0, -0.5, 0.25];
+        let fh = d.f(0.0, &z);
+        let fn_ = native.f(0.0, &z);
+        for i in 0..4 {
+            assert!((fh[i] - fn_[i]).abs() < 1e-6);
+        }
+        // vjp
+        let a = [1.0f32, -1.0, 0.5, 2.0];
+        let (az_h, ath_h) = d.f_vjp(0.0, &z, &a);
+        let (az_n, ath_n) = native.f_vjp(0.0, &z, &a);
+        for i in 0..4 {
+            assert!((az_h[i] - az_n[i]).abs() < 1e-6);
+        }
+        assert!((ath_h[0] - ath_n[0]).abs() < 1e-5);
+    }
+
+    /// Fused ψ / ψ⁻¹ via HLO round-trips exactly like the native path —
+    /// the invertibility MALI rests on, through the real AOT artifacts.
+    #[test]
+    fn fused_step_roundtrip() {
+        let e = engine();
+        let mut d = HloDynamics::new(e, "toy").unwrap();
+        d.set_params(&[0.8]);
+        let solver = AlfSolver::new(1.0);
+        let z: Vec<f32> = vec![1.0, -0.5, 2.0, 0.1];
+        let v = d.f(0.0, &z);
+        let (z1, v1, _) = solver.psi(&d, 0.0, 0.25, &z, &v);
+        let (z0, v0) = solver.psi_inv(&d, 0.25, 0.25, &z1, &v1);
+        for i in 0..4 {
+            assert!((z0[i] - z[i]).abs() < 1e-5, "z[{i}]");
+            assert!((v0[i] - v[i]).abs() < 1e-5, "v[{i}]");
+        }
+    }
+
+    /// Fused ψ-vjp agrees with the host-composed vjp (which uses f_vjp).
+    #[test]
+    fn fused_vjp_matches_composed() {
+        let e = engine();
+        let mut d = HloDynamics::new(e, "toy").unwrap();
+        d.set_params(&[0.45]);
+        let solver = AlfSolver::new(0.9);
+        let z: Vec<f32> = vec![0.4, -0.8, 1.2, 0.05];
+        let v = d.f(0.0, &z);
+        let az_out = [1.0f32, 0.5, -0.25, 2.0];
+        let av_out = [0.1f32, -0.2, 0.3, 0.4];
+        let fused = solver.psi_vjp(&d, 0.1, 0.2, &z, &v, &az_out, &av_out);
+        d.use_fused = false;
+        let composed = solver.psi_vjp(&d, 0.1, 0.2, &z, &v, &az_out, &av_out);
+        for i in 0..4 {
+            assert!((fused.0[i] - composed.0[i]).abs() < 1e-5, "a_z[{i}]");
+            assert!((fused.1[i] - composed.1[i]).abs() < 1e-5, "a_v[{i}]");
+        }
+        assert!((fused.2[0] - composed.2[0]).abs() < 1e-4, "a_θ");
+    }
+
+    #[test]
+    fn ctx_validation() {
+        let e = engine();
+        let mut d = HloDynamics::new(e.clone(), "toy").unwrap();
+        assert_eq!(d.n_ctx(), 0);
+        assert!(d.set_ctx(0, vec![]).is_err());
+
+        // CNF family carries a probe ctx tensor
+        let mut c = HloDynamics::new(e, "cnf_density2d").unwrap();
+        assert_eq!(c.n_ctx(), 1);
+        let probe_len = 64 * 2; // batch × dim per the manifest
+        assert!(c.set_ctx(0, vec![1.0; probe_len]).is_ok());
+        assert!(c.set_ctx(0, vec![1.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,323 @@
+//! The artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py` is the single source of truth binding the Rust
+//! coordinator to the AOT-compiled HLO graphs — entry input/output shapes,
+//! per-model dimensions and parameter-component specs (shape + init scheme).
+
+use crate::util::json::Json;
+use crate::util::rng::{Init, Rng};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor spec missing 'shape'"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            shape,
+            dtype: j.get("dtype").as_str().unwrap_or("float32").to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (an `<name>.hlo.txt` file plus its signature).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub doc: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One trainable parameter component (e.g. `w1` of the dynamics MLP) with
+/// its initialization scheme — mirrored from `families.py::param_spec`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ParamSpec> {
+        let shape: Vec<usize> = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("param spec missing 'shape'"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let init = match j.get("init").as_str().unwrap_or("zeros") {
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            "glorot_uniform" => {
+                let fan_in = j.get("fan_in").as_usize().unwrap_or(1);
+                let fan_out = j.get("fan_out").as_usize().unwrap_or(1);
+                Init::GlorotUniform { fan_in, fan_out }
+            }
+            other => bail!("unknown init scheme '{other}'"),
+        };
+        Ok(ParamSpec {
+            name: j.get("name").as_str().unwrap_or("?").to_string(),
+            shape,
+            init,
+        })
+    }
+}
+
+/// A named group of parameters (stem / f / head / enc / dec / all).
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub params: Vec<ParamSpec>,
+    pub len: usize,
+}
+
+impl Component {
+    /// Initialize a flat parameter vector per the component's specs.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.len];
+        let mut ofs = 0;
+        for p in &self.params {
+            let n = p.len();
+            p.init.fill(rng, &mut theta[ofs..ofs + n]);
+            ofs += n;
+        }
+        theta
+    }
+}
+
+/// Per-model dimensions and components, from the manifest's `models` map.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dims: BTreeMap<String, f64>,
+    pub components: BTreeMap<String, Component>,
+}
+
+impl ModelSpec {
+    pub fn dim(&self, key: &str) -> Result<usize> {
+        self.dims
+            .get(key)
+            .map(|&v| v as usize)
+            .with_context(|| format!("model '{}' has no dim '{key}'", self.name))
+    }
+
+    pub fn dim_or(&self, key: &str, default: usize) -> usize {
+        self.dims.get(key).map(|&v| v as usize).unwrap_or(default)
+    }
+
+    pub fn component(&self, name: &str) -> Result<&Component> {
+        self.components
+            .get(name)
+            .with_context(|| format!("model '{}' has no component '{name}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let root = Json::parse_file(&path)
+            .map_err(|e| anyhow!("manifest {}: {e}", path.display()))?;
+
+        let mut entries = BTreeMap::new();
+        for (name, j) in root
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+        {
+            let inputs = j
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("entry '{name}' inputs"))?;
+            let outputs = j
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("entry '{name}' outputs"))?;
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: j
+                        .get("file")
+                        .as_str()
+                        .unwrap_or(&format!("{name}.hlo.txt"))
+                        .to_string(),
+                    doc: j.get("doc").as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(m) = root.get("models").as_obj() {
+            for (name, j) in m {
+                let mut dims = BTreeMap::new();
+                if let Some(obj) = j.as_obj() {
+                    for (k, v) in obj {
+                        if let Some(n) = v.as_f64() {
+                            dims.insert(k.clone(), n);
+                        }
+                    }
+                }
+                let mut components = BTreeMap::new();
+                if let Some(comps) = j.get("components").as_obj() {
+                    for (cname, cj) in comps {
+                        let params = cj
+                            .get("params")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(ParamSpec::from_json)
+                            .collect::<Result<Vec<_>>>()
+                            .with_context(|| format!("model '{name}' comp '{cname}'"))?;
+                        let len = cj
+                            .get("len")
+                            .as_usize()
+                            .unwrap_or_else(|| params.iter().map(ParamSpec::len).sum());
+                        components.insert(cname.clone(), Component { params, len });
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelSpec {
+                        name: name.clone(),
+                        dims,
+                        components,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+            models,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("manifest has no entry '{name}'"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model '{name}'"))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        // every family exports the standard executable set
+        for fam in ["toy", "img16", "img32", "latent", "cde"] {
+            for suffix in ["f", "f_vjp", "step", "inv", "step_vjp"] {
+                assert!(
+                    m.entries.contains_key(&format!("{fam}.{suffix}")),
+                    "{fam}.{suffix}"
+                );
+            }
+        }
+        // model specs carry component lengths
+        let img16 = m.model("img16").unwrap();
+        let f = img16.component("f").unwrap();
+        assert_eq!(f.len, f.params.iter().map(ParamSpec::len).sum::<usize>());
+        assert!(img16.dim("d").unwrap() > 0);
+    }
+
+    #[test]
+    fn entry_shapes_are_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let e = m.entry("toy.step").unwrap();
+        // (z, v, t, h, eta, theta) → (z', v', err)
+        assert_eq!(e.inputs.len(), 6);
+        assert_eq!(e.outputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, e.outputs[0].shape);
+        assert!(e.inputs[2].is_scalar());
+        // the HLO file exists on disk
+        assert!(m.hlo_path(e).exists(), "{:?}", m.hlo_path(e));
+    }
+
+    #[test]
+    fn component_init_respects_scheme() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let comp = m.model("toy").unwrap().component("f").unwrap();
+        let mut rng = Rng::new(1);
+        let theta = comp.init_params(&mut rng);
+        assert_eq!(theta, vec![1.0]); // toy α initialized to ones
+
+        let f = m.model("img16").unwrap().component("f").unwrap();
+        let theta = f.init_params(&mut rng);
+        assert_eq!(theta.len(), f.len);
+        // glorot weights are non-zero, biases zero: some of each
+        assert!(theta.iter().any(|&x| x != 0.0));
+        assert!(theta.iter().any(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn missing_entry_is_an_error() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.entry("nope.f").is_err());
+        assert!(m.model("nope").is_err());
+    }
+}

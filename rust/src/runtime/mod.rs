@@ -1,0 +1,16 @@
+//! The AOT runtime: PJRT client + compiled-executable cache ([`Engine`]),
+//! the manifest contract with `python/compile/aot.py` ([`Manifest`]), and
+//! the HLO-backed [`Dynamics`](crate::solvers::dynamics::Dynamics)
+//! implementation ([`HloDynamics`]).
+//!
+//! Python runs once at `make artifacts`; everything here is pure Rust over
+//! the `xla` crate's PJRT CPU client.  Reference wiring is documented in
+//! `/opt/xla-example/README.md`.
+
+pub mod engine;
+pub mod hlo_dynamics;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats};
+pub use hlo_dynamics::HloDynamics;
+pub use manifest::{Component, EntrySpec, Manifest, ModelSpec, ParamSpec, TensorSpec};

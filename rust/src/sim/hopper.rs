@@ -1,0 +1,409 @@
+//! Spring-Loaded Inverted Pendulum (SLIP) hopper — the Mujoco-"Hopper"
+//! stand-in that generates ground-truth trajectories for the latent-ODE
+//! experiment (paper Table 4).
+//!
+//! Model: a point-mass body on a massless springy leg.
+//!
+//! * **Flight**: ballistic — `ẍ = 0, z̈ = −g`; the leg swings to a fixed
+//!   touchdown angle α.  Touchdown when the foot reaches the ground:
+//!   `z ≤ l₀·cos α`.
+//! * **Stance**: the foot pins to the ground; the spring pushes the body
+//!   along the leg with `F = k(l₀ − l)`: `ẍ = (F/m)·(x−x_f)/l`,
+//!   `z̈ = (F/m)·z/l − g`.  Liftoff when `l ≥ l₀` again.
+//!
+//! The system is conservative (no damping), so hops are sustained over the
+//! simulated horizon; per-trajectory initial energy / touchdown angle vary
+//! with the seed, giving a family of distinct rhythms for the latent ODE
+//! to capture.  Dynamics are integrated with classic RK4 at a fine fixed
+//! step with bisection refinement of the contact events.
+
+use crate::util::rng::Rng;
+
+/// Physical parameters of the SLIP model.
+#[derive(Debug, Clone, Copy)]
+pub struct HopperSpec {
+    pub mass: f64,
+    pub g: f64,
+    /// Spring rest length l₀.
+    pub l0: f64,
+    /// Spring constant k.
+    pub k: f64,
+    /// Touchdown-angle offset added to the Raibert neutral point
+    /// (radians; small values shift the gait's asymmetry per trajectory).
+    pub alpha: f64,
+}
+
+impl Default for HopperSpec {
+    fn default() -> Self {
+        HopperSpec {
+            mass: 1.0,
+            g: 9.81,
+            l0: 1.0,
+            k: 300.0,
+            alpha: 0.0,
+        }
+    }
+}
+
+impl HopperSpec {
+    /// Raibert neutral-point touchdown angle for forward speed `vx`:
+    /// place the foot half a stance-sweep ahead, `sin α = vx·T_s / (2 l₀)`
+    /// with stance period `T_s ≈ π √(m/k)` — the classic controller that
+    /// makes SLIP hopping speed-stable (Raibert 1986).
+    pub fn touchdown_angle(&self, vx: f64) -> f64 {
+        let ts = std::f64::consts::PI * (self.mass / self.k).sqrt();
+        let s = (vx * ts / (2.0 * self.l0)).clamp(-0.45, 0.45);
+        s.asin() + self.alpha
+    }
+}
+
+/// Simulation phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Flight,
+    Stance,
+}
+
+/// Full simulator state.
+#[derive(Debug, Clone, Copy)]
+pub struct HopperState {
+    pub t: f64,
+    pub x: f64,
+    pub z: f64,
+    pub vx: f64,
+    pub vz: f64,
+    pub phase: Phase,
+    /// Foot anchor x-position (valid in stance).
+    pub foot_x: f64,
+}
+
+/// The number of observation channels [`SlipHopper::observe`] emits —
+/// matches the latent model's `obs` dim in the manifest.
+pub const OBS_DIM: usize = 8;
+
+pub struct SlipHopper {
+    pub spec: HopperSpec,
+}
+
+impl SlipHopper {
+    pub fn new(spec: HopperSpec) -> SlipHopper {
+        SlipHopper { spec }
+    }
+
+    /// Initial state: apex of flight at height `z0` with forward speed `vx0`.
+    pub fn init(&self, z0: f64, vx0: f64) -> HopperState {
+        HopperState {
+            t: 0.0,
+            x: 0.0,
+            z: z0,
+            vx: vx0,
+            vz: 0.0,
+            phase: Phase::Flight,
+            foot_x: 0.0,
+        }
+    }
+
+    /// Acceleration field of the current phase.
+    fn accel(&self, s: &HopperState) -> (f64, f64) {
+        match s.phase {
+            Phase::Flight => (0.0, -self.spec.g),
+            Phase::Stance => {
+                let dx = s.x - s.foot_x;
+                let l = (dx * dx + s.z * s.z).sqrt().max(1e-9);
+                let f = self.spec.k * (self.spec.l0 - l) / self.spec.mass;
+                (f * dx / l, f * s.z / l - self.spec.g)
+            }
+        }
+    }
+
+    /// One RK4 step of size `h` holding the phase fixed.
+    fn rk4(&self, s: &HopperState, h: f64) -> HopperState {
+        let deriv = |st: &HopperState| -> [f64; 4] {
+            let (ax, az) = self.accel(st);
+            [st.vx, st.vz, ax, az]
+        };
+        let apply = |st: &HopperState, d: &[f64; 4], dt: f64| -> HopperState {
+            HopperState {
+                t: st.t + dt,
+                x: st.x + d[0] * dt,
+                z: st.z + d[1] * dt,
+                vx: st.vx + d[2] * dt,
+                vz: st.vz + d[3] * dt,
+                ..*st
+            }
+        };
+        let k1 = deriv(s);
+        let k2 = deriv(&apply(s, &k1, h / 2.0));
+        let k3 = deriv(&apply(s, &k2, h / 2.0));
+        let k4 = deriv(&apply(s, &k3, h));
+        let combined = [
+            (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]) / 6.0,
+            (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]) / 6.0,
+            (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]) / 6.0,
+            (k1[3] + 2.0 * k2[3] + 2.0 * k3[3] + k4[3]) / 6.0,
+        ];
+        apply(s, &combined, h)
+    }
+
+    /// Event function: touchdown (flight) / liftoff (stance) crossing.
+    fn event(&self, s: &HopperState) -> f64 {
+        match s.phase {
+            // foot height: z − l₀·cos α; touchdown when ≤ 0 while falling
+            Phase::Flight => s.z - self.spec.l0 * self.spec.touchdown_angle(s.vx).cos(),
+            // spring extension: l − l₀; liftoff when ≥ 0 while extending
+            Phase::Stance => {
+                let dx = s.x - s.foot_x;
+                (dx * dx + s.z * s.z).sqrt() - self.spec.l0
+            }
+        }
+    }
+
+    /// Advance by exactly `h`, handling phase transitions with bisection.
+    pub fn step(&self, s: &HopperState, h: f64) -> HopperState {
+        // Degenerate flight: already at/below touchdown height and falling
+        // (a low-apex hop after an angled liftoff) — touch down immediately
+        // rather than waiting for a sign change that can never come.
+        if s.phase == Phase::Flight && self.event(s) <= 0.0 && s.vz < 0.0 {
+            let alpha = self.spec.touchdown_angle(s.vx);
+            let mut grounded = *s;
+            grounded.phase = Phase::Stance;
+            grounded.foot_x = s.x + self.spec.l0 * alpha.sin();
+            return self.step(&grounded, h);
+        }
+        let next = self.rk4(s, h);
+        // radial (leg-extension) velocity, for the liftoff guard
+        let radial = |st: &HopperState| -> f64 {
+            let dx = st.x - st.foot_x;
+            let l = (dx * dx + st.z * st.z).sqrt().max(1e-9);
+            (dx * st.vx + st.z * st.vz) / l
+        };
+        let crossing = match s.phase {
+            Phase::Flight => self.event(s) > 0.0 && self.event(&next) <= 0.0 && next.vz < 0.0,
+            Phase::Stance => self.event(s) < 0.0 && self.event(&next) >= 0.0 && radial(&next) > 0.0,
+        };
+        if !crossing {
+            return next;
+        }
+        // bisect the step to locate the event, then switch phase
+        let (mut lo, mut hi) = (0.0f64, h);
+        let mut mid_state = next;
+        for _ in 0..30 {
+            let mid = 0.5 * (lo + hi);
+            mid_state = self.rk4(s, mid);
+            let e = self.event(&mid_state);
+            let hit = match s.phase {
+                Phase::Flight => e <= 0.0,
+                Phase::Stance => e >= 0.0,
+            };
+            if hit {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        let mut switched = mid_state;
+        match s.phase {
+            Phase::Flight => {
+                switched.phase = Phase::Stance;
+                // foot lands ahead of the body at the Raibert neutral point
+                let alpha = self.spec.touchdown_angle(switched.vx);
+                switched.foot_x = switched.x + self.spec.l0 * alpha.sin();
+            }
+            Phase::Stance => {
+                switched.phase = Phase::Flight;
+                switched.foot_x = 0.0;
+            }
+        }
+        // finish the remainder of the step in the new phase
+        let remaining = s.t + h - switched.t;
+        if remaining > 1e-12 {
+            self.step(&switched, remaining)
+        } else {
+            switched
+        }
+    }
+
+    /// Observation vector (normalized to roughly O(1)):
+    /// `[z, vx, vz, leg length, leg dx, compression, contact, hop-phase]`.
+    pub fn observe(&self, s: &HopperState) -> [f32; OBS_DIM] {
+        let (l, dx, contact) = match s.phase {
+            Phase::Flight => (
+                self.spec.l0,
+                self.spec.l0 * self.spec.touchdown_angle(s.vx).sin(),
+                0.0,
+            ),
+            Phase::Stance => {
+                let dxx = s.x - s.foot_x;
+                ((dxx * dxx + s.z * s.z).sqrt(), dxx, 1.0)
+            }
+        };
+        let compression = (self.spec.l0 - l).max(0.0) / self.spec.l0;
+        [
+            s.z as f32,
+            (s.vx / 3.0) as f32,
+            (s.vz / 3.0) as f32,
+            l as f32,
+            dx as f32,
+            (compression * 5.0) as f32,
+            contact as f32,
+            (s.vz.atan2(s.vx.max(0.1)) / std::f64::consts::PI) as f32,
+        ]
+    }
+
+    /// Simulate and sample observations at the given times (must be
+    /// non-decreasing).  `dt_sim` is the internal integrator step.
+    pub fn trajectory(&self, s0: HopperState, times: &[f64], dt_sim: f64) -> Vec<f32> {
+        let mut out = Vec::with_capacity(times.len() * OBS_DIM);
+        let mut s = s0;
+        for &t_target in times {
+            while s.t < t_target - 1e-12 {
+                let h = dt_sim.min(t_target - s.t);
+                s = self.step(&s, h);
+            }
+            out.extend_from_slice(&self.observe(&s));
+        }
+        out
+    }
+}
+
+/// The Table-4 dataset: `n` hopper trajectories sampled at `t_len + t_out`
+/// regular times over `[0, horizon]`, with per-trajectory initial energy
+/// and touchdown angle drawn from the seed.  Returned flat:
+/// `n × (t_len+t_out) × OBS_DIM`.
+pub struct HopperDataset {
+    pub seqs: Vec<f32>,
+    pub n: usize,
+    pub t_total: usize,
+    pub obs: usize,
+}
+
+impl HopperDataset {
+    pub fn seq(&self, i: usize) -> &[f32] {
+        let stride = self.t_total * self.obs;
+        &self.seqs[i * stride..(i + 1) * stride]
+    }
+
+    /// First `t_len` frames of sequence `i` (encoder input).
+    pub fn observed(&self, i: usize, t_len: usize) -> &[f32] {
+        &self.seq(i)[..t_len * self.obs]
+    }
+
+    /// Frames `t_len..t_len+t_out` (prediction target).
+    pub fn target(&self, i: usize, t_len: usize, t_out: usize) -> &[f32] {
+        &self.seq(i)[t_len * self.obs..(t_len + t_out) * self.obs]
+    }
+}
+
+pub fn generate(n: usize, t_len: usize, t_out: usize, horizon: f64, seed: u64) -> HopperDataset {
+    let mut rng = Rng::new(seed);
+    let t_total = t_len + t_out;
+    let times: Vec<f64> = (0..t_total)
+        .map(|k| horizon * k as f64 / (t_total - 1) as f64)
+        .collect();
+    let mut seqs = Vec::with_capacity(n * t_total * OBS_DIM);
+    for _ in 0..n {
+        let spec = HopperSpec {
+            alpha: rng.range(-0.03, 0.03),
+            k: 250.0 + 150.0 * rng.uniform(),
+            ..HopperSpec::default()
+        };
+        let sim = SlipHopper::new(spec);
+        let s0 = sim.init(1.05 + 0.25 * rng.uniform(), 0.5 + 1.5 * rng.uniform());
+        seqs.extend_from_slice(&sim.trajectory(s0, &times, 1e-3));
+    }
+    HopperDataset {
+        seqs,
+        n,
+        t_total,
+        obs: OBS_DIM,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flight_is_ballistic() {
+        let sim = SlipHopper::new(HopperSpec::default());
+        let s0 = sim.init(2.0, 1.0);
+        let s1 = sim.step(&s0, 0.05);
+        // analytic ballistic update
+        assert!((s1.x - 0.05).abs() < 1e-9);
+        let z_exp = 2.0 - 0.5 * 9.81 * 0.05 * 0.05;
+        assert!((s1.z - z_exp).abs() < 1e-9, "{} vs {z_exp}", s1.z);
+        assert_eq!(s1.phase, Phase::Flight);
+    }
+
+    #[test]
+    fn hops_alternate_phases() {
+        let sim = SlipHopper::new(HopperSpec::default());
+        let mut s = sim.init(1.2, 1.0);
+        let mut transitions = 0;
+        let mut last = s.phase;
+        for _ in 0..4000 {
+            s = sim.step(&s, 1e-3);
+            if s.phase != last {
+                transitions += 1;
+                last = s.phase;
+            }
+        }
+        assert!(transitions >= 4, "only {transitions} phase transitions in 4s");
+        assert!(s.z > 0.2, "hopper collapsed: z = {}", s.z);
+    }
+
+    /// Conservative SLIP: total energy is preserved across many hops.
+    #[test]
+    fn energy_conserved() {
+        let spec = HopperSpec::default();
+        let sim = SlipHopper::new(spec);
+        let energy = |s: &HopperState| -> f64 {
+            let kinetic = 0.5 * spec.mass * (s.vx * s.vx + s.vz * s.vz);
+            let potential = spec.mass * spec.g * s.z;
+            let spring = match s.phase {
+                Phase::Flight => 0.0,
+                Phase::Stance => {
+                    let dx = s.x - s.foot_x;
+                    let l = (dx * dx + s.z * s.z).sqrt();
+                    0.5 * spec.k * (spec.l0 - l).powi(2)
+                }
+            };
+            kinetic + potential + spring
+        };
+        let mut s = sim.init(1.2, 1.5);
+        let e0 = energy(&s);
+        for _ in 0..3000 {
+            s = sim.step(&s, 1e-3);
+        }
+        let e1 = energy(&s);
+        assert!(
+            ((e1 - e0) / e0).abs() < 0.02,
+            "energy drifted: {e0} → {e1}"
+        );
+    }
+
+    #[test]
+    fn trajectory_shapes_and_determinism() {
+        let a = generate(4, 32, 16, 3.0, 9);
+        let b = generate(4, 32, 16, 3.0, 9);
+        assert_eq!(a.seqs, b.seqs);
+        assert_eq!(a.seqs.len(), 4 * 48 * OBS_DIM);
+        assert_eq!(a.observed(1, 32).len(), 32 * OBS_DIM);
+        assert_eq!(a.target(1, 32, 16).len(), 16 * OBS_DIM);
+        // observations stay bounded (normalization sane)
+        for &v in &a.seqs {
+            assert!(v.is_finite() && v.abs() < 10.0, "obs out of range: {v}");
+        }
+    }
+
+    #[test]
+    fn contact_flag_toggles_in_trajectory() {
+        let ds = generate(2, 32, 16, 3.0, 1);
+        for i in 0..2 {
+            let seq = ds.seq(i);
+            let contact: Vec<f32> = (0..48).map(|k| seq[k * OBS_DIM + 6]).collect();
+            assert!(contact.iter().any(|&c| c == 0.0), "never in flight");
+            assert!(contact.iter().any(|&c| c == 1.0), "never in stance");
+        }
+    }
+}

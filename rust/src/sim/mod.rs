@@ -1,0 +1,14 @@
+//! Physics simulation substrates.
+//!
+//! The paper's Table-4 experiment uses "Hopper" trajectories from the
+//! DeepMind control suite (Mujoco).  Mujoco is unavailable offline, so
+//! `hopper` implements the canonical reduced model of hopping locomotion —
+//! the Spring-Loaded Inverted Pendulum (SLIP) — as the trajectory source:
+//! smooth ballistic flight punctuated by stiff spring-stance contact
+//! dynamics, i.e. exactly the mixture of smooth segments and contact
+//! nonlinearity that makes hopper time series a meaningful latent-ODE
+//! benchmark (DESIGN.md §4).
+
+pub mod hopper;
+
+pub use hopper::{HopperSpec, HopperState, SlipHopper};

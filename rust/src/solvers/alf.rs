@@ -1,0 +1,412 @@
+//! The (damped) Asynchronous Leapfrog integrator — paper Algo. 2/3 and
+//! Appendix A.5 — plus its exact vjp.
+//!
+//! ALF advances the augmented state `(z, v)` where `v` approximates `dz/dt`:
+//!
+//! ```text
+//! s1 = t + h/2            k1 = z + v·h/2          u1 = f(k1, s1)
+//! v' = v + 2η(u1 − v)     z' = k1 + v'·h/2
+//! ```
+//!
+//! For η = 1 this is Mutze's ALF; η ∈ (0.5, 1) is the damped variant of
+//! Theorem 3.2 (η ≤ 0.5 would make the inverse singular: the `v` update has
+//! factor `1 − 2η`).  The step is **algebraically invertible** for free-form
+//! `f` (Algo. 3 / Eq. 49), which is what gives MALI its constant-memory
+//! accurate reverse trajectory.
+//!
+//! Embedded error estimate: `err = η·h·(u1 − v)` — the gap between ALF's
+//! update and the first-order prediction `z + h·v`; this is the `(2,1)`
+//! embedded pair driving the adaptive controller (order p = 2 for step-size
+//! selection), and it directly measures the `|f(z₀) − v₀|` drift term the
+//! truncation analysis (Thm. 3.1 / A.3) identifies.
+
+use super::dynamics::Dynamics;
+use super::{Solver, State};
+use crate::tensor::{add_scaled, axpy};
+
+#[derive(Debug, Clone, Copy)]
+pub struct AlfSolver {
+    /// Damping coefficient η ∈ (0.5, 1.0]; η = 1 is undamped ALF.
+    pub eta: f64,
+    /// Use the device-side fused step when the dynamics provides one.
+    pub prefer_fused: bool,
+}
+
+impl AlfSolver {
+    pub fn new(eta: f64) -> Self {
+        assert!(
+            eta > 0.5 && eta <= 1.0,
+            "damped ALF requires eta in (0.5, 1]; got {eta} (inverse is singular at 0.5)"
+        );
+        AlfSolver {
+            eta,
+            prefer_fused: true,
+        }
+    }
+
+    /// ψ: one (damped) ALF step composed from `f`.  Returns
+    /// `(z_out, v_out, err)`.
+    pub fn psi(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        z: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        if self.prefer_fused {
+            if let Some(out) = dynamics.fused_alf(z, v, t, h, self.eta) {
+                return out;
+            }
+        }
+        let eta = self.eta as f32;
+        let hf = h as f32;
+        let s1 = t + h / 2.0;
+        let k1 = add_scaled(z, hf / 2.0, v);
+        let u1 = dynamics.f(s1, &k1);
+        // v' = (1-2η) v + 2η u1
+        let mut v_out = vec![0.0f32; v.len()];
+        axpy(1.0 - 2.0 * eta, v, &mut v_out);
+        axpy(2.0 * eta, &u1, &mut v_out);
+        // z' = k1 + v'·h/2
+        let z_out = add_scaled(&k1, hf / 2.0, &v_out);
+        // err = η·h·(u1 − v)
+        let err: Vec<f32> = u1
+            .iter()
+            .zip(v)
+            .map(|(&u, &vi)| eta * hf * (u - vi))
+            .collect();
+        (z_out, v_out, err)
+    }
+
+    /// ψ⁻¹: exact inverse (Algo. 3 for η = 1; Eq. 49 in general).
+    pub fn psi_inv(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        z_out: &[f32],
+        v_out: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        if self.prefer_fused {
+            if let Some(out) = dynamics.fused_alf_inv(z_out, v_out, t_out, h, self.eta) {
+                return out;
+            }
+        }
+        let eta = self.eta as f32;
+        let hf = h as f32;
+        let s1 = t_out - h / 2.0;
+        // k1 = z' − v'·h/2
+        let k1 = add_scaled(z_out, -hf / 2.0, v_out);
+        let u1 = dynamics.f(s1, &k1);
+        // v = (v' − 2η u1) / (1 − 2η)
+        let denom = 1.0 - 2.0 * eta;
+        let v_in: Vec<f32> = v_out
+            .iter()
+            .zip(&u1)
+            .map(|(&vo, &u)| (vo - 2.0 * eta * u) / denom)
+            .collect();
+        // z = k1 − v·h/2
+        let z_in = add_scaled(&k1, -hf / 2.0, &v_in);
+        (z_in, v_in)
+    }
+
+    /// vjp through ψ: given cotangents `(a_z', a_v')` on the outputs,
+    /// return `(a_z, a_v, a_θ)` on the inputs.  This is the "local backward"
+    /// of MALI (Algo. 4), ACA and the naive method.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        z: &[f32],
+        v: &[f32],
+        az_out: &[f32],
+        av_out: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        if self.prefer_fused {
+            if let Some(out) = dynamics.fused_alf_vjp(z, v, t, h, self.eta, az_out, av_out) {
+                return out;
+            }
+        }
+        let eta = self.eta as f32;
+        let hf = h as f32;
+        let s1 = t + h / 2.0;
+        let k1 = add_scaled(z, hf / 2.0, v);
+        // z' = k1 + (h/2) v'  ⇒  a_k1 ← a_z',  a_v'_tot = a_v' + (h/2) a_z'
+        let av_tot = add_scaled(av_out, hf / 2.0, az_out);
+        // v' = (1−2η) v + 2η u1  ⇒  a_v += (1−2η) a_v'_tot,  a_u1 = 2η a_v'_tot
+        let mut a_v: Vec<f32> = av_tot.iter().map(|&x| (1.0 - 2.0 * eta) * x).collect();
+        let a_u1: Vec<f32> = av_tot.iter().map(|&x| 2.0 * eta * x).collect();
+        // u1 = f(k1, s1)
+        let (g_k1, a_theta) = dynamics.f_vjp(s1, &k1, &a_u1);
+        // a_k1 = a_z' + g_k1
+        let a_k1 = add_scaled(az_out, 1.0, &g_k1);
+        // k1 = z + (h/2) v  ⇒  a_z = a_k1,  a_v += (h/2) a_k1
+        axpy(hf / 2.0, &a_k1, &mut a_v);
+        (a_k1, a_v, a_theta)
+    }
+}
+
+impl Solver for AlfSolver {
+    fn name(&self) -> &'static str {
+        if self.eta == 1.0 {
+            "alf"
+        } else {
+            "alf-damped"
+        }
+    }
+
+    fn order(&self) -> usize {
+        2
+    }
+
+    fn has_error_estimate(&self) -> bool {
+        true
+    }
+
+    fn init(&self, dynamics: &dyn Dynamics, t0: f64, z0: &[f32]) -> State {
+        // Paper §3.1: v₀ = f(z₀, t₀).
+        let v0 = dynamics.f(t0, z0);
+        State {
+            z: z0.to_vec(),
+            v: Some(v0),
+        }
+    }
+
+    fn step(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+    ) -> (State, Option<Vec<f32>>) {
+        let v = s.v.as_ref().expect("ALF needs augmented state (z, v)");
+        let (z_out, v_out, err) = self.psi(dynamics, t, h, &s.z, v);
+        (
+            State {
+                z: z_out,
+                v: Some(v_out),
+            },
+            Some(err),
+        )
+    }
+
+    fn step_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+    ) -> (State, Vec<f32>) {
+        let v = s_in.v.as_ref().expect("ALF needs augmented state");
+        let zero;
+        let av_out = match &a_out.v {
+            Some(av) => av.as_slice(),
+            None => {
+                zero = vec![0.0f32; v.len()];
+                &zero
+            }
+        };
+        let (a_z, a_v, a_theta) =
+            self.psi_vjp(dynamics, t, h, &s_in.z, v, &a_out.z, av_out);
+        (
+            State {
+                z: a_z,
+                v: Some(a_v),
+            },
+            a_theta,
+        )
+    }
+
+    fn invert(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+    ) -> Option<State> {
+        let v = s_out.v.as_ref().expect("ALF needs augmented state");
+        let (z_in, v_in) = self.psi_inv(dynamics, t_out, h, &s_out.z, v);
+        Some(State {
+            z: z_in,
+            v: Some(v_in),
+        })
+    }
+
+    fn is_invertible(&self) -> bool {
+        true
+    }
+
+    fn invert_and_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+    ) -> Option<(State, State, Vec<f32>)> {
+        if self.prefer_fused {
+            let v_out = s_out.v.as_ref().expect("ALF needs augmented state");
+            let zero;
+            let av_out = match &a_out.v {
+                Some(av) => av.as_slice(),
+                None => {
+                    zero = vec![0.0f32; v_out.len()];
+                    &zero
+                }
+            };
+            if let Some((z_in, v_in, a_z, a_v, a_th)) = dynamics.fused_alf_bwd(
+                &s_out.z, v_out, t_out, h, self.eta, &a_out.z, av_out,
+            ) {
+                return Some((
+                    State {
+                        z: z_in,
+                        v: Some(v_in),
+                    },
+                    State {
+                        z: a_z,
+                        v: Some(a_v),
+                    },
+                    a_th,
+                ));
+            }
+        }
+        // host-composed fallback: ψ⁻¹ then vjp (two device calls)
+        let s_in = self.invert(dynamics, t_out, h, s_out)?;
+        let (a_in, a_theta) = self.step_vjp(dynamics, t_out - h, h, &s_in, a_out);
+        Some((s_in, a_in, a_theta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::dynamics::{LinearToy, MlpDynamics};
+    use crate::util::rng::Rng;
+
+    /// ψ⁻¹(ψ(x)) = x to float roundoff — the property MALI's constant-memory
+    /// reconstruction rests on (paper: "Invertibility of ALF").
+    #[test]
+    fn psi_inverse_roundtrip_exact() {
+        let mut rng = Rng::new(3);
+        let dynamics = MlpDynamics::new(6, 8, &mut rng);
+        for &eta in &[1.0, 0.9, 0.8, 0.7] {
+            let solver = AlfSolver::new(eta);
+            let z: Vec<f32> = (0..6).map(|i| 0.2 * i as f32 - 0.5).collect();
+            let v = dynamics.f(0.0, &z);
+            let (z1, v1, _) = solver.psi(&dynamics, 0.3, 0.17, &z, &v);
+            let (z0, v0) = solver.psi_inv(&dynamics, 0.3 + 0.17, 0.17, &z1, &v1);
+            for i in 0..6 {
+                assert!(
+                    (z0[i] - z[i]).abs() < 1e-5,
+                    "eta {eta} z[{i}]: {} vs {}",
+                    z0[i],
+                    z[i]
+                );
+                assert!((v0[i] - v[i]).abs() < 1e-5, "eta {eta} v[{i}]");
+            }
+        }
+    }
+
+    /// Local truncation error of z is O(h³) when v is consistent
+    /// (Theorem 3.1): halving h should cut the one-step error by ~8×.
+    #[test]
+    fn local_truncation_order_three() {
+        let toy = LinearToy::new(1.0, 1);
+        let solver = AlfSolver::new(1.0);
+        let z0 = [1.0f32];
+        let mut errs = Vec::new();
+        for &h in &[0.2f64, 0.1, 0.05] {
+            let v0 = toy.f(0.0, &z0);
+            let (z1, _, _) = solver.psi(&toy, 0.0, h, &z0, &v0);
+            let exact = (h).exp() as f32;
+            errs.push(((z1[0] - exact).abs()) as f64);
+        }
+        // ratio between consecutive errors ≈ 2³ = 8 (allow slack)
+        for w in errs.windows(2) {
+            let ratio = w[0] / w[1].max(1e-300);
+            assert!(ratio > 5.0, "expected ~8x decay, got {ratio} ({errs:?})");
+        }
+    }
+
+    /// vjp of ψ matches central finite differences on (z, v, θ).
+    #[test]
+    fn psi_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(5);
+        let mut dynamics = MlpDynamics::new(3, 5, &mut rng);
+        let solver = AlfSolver::new(0.9);
+        let (t, h) = (0.1, 0.23);
+        let z: Vec<f32> = vec![0.3, -0.2, 0.5];
+        let v = dynamics.f(t, &z);
+        let az_out: Vec<f32> = vec![1.0, -0.5, 0.25];
+        let av_out: Vec<f32> = vec![0.2, 0.4, -0.3];
+        let (a_z, a_v, a_th) = solver.psi_vjp(&dynamics, t, h, &z, &v, &az_out, &av_out);
+
+        let scalar = |zz: &[f32], vv: &[f32], d: &MlpDynamics| -> f64 {
+            let (z1, v1, _) = solver.psi(d, t, h, zz, vv);
+            z1.iter()
+                .zip(&az_out)
+                .chain(v1.iter().zip(&av_out))
+                .map(|(&x, &c)| x as f64 * c as f64)
+                .sum()
+        };
+        let eps = 1e-3;
+        for j in 0..z.len() {
+            let mut zp = z.clone();
+            zp[j] += eps as f32;
+            let mut zm = z.clone();
+            zm[j] -= eps as f32;
+            let fd = (scalar(&zp, &v, &dynamics) - scalar(&zm, &v, &dynamics)) / (2.0 * eps);
+            assert!((fd - a_z[j] as f64).abs() < 5e-3, "a_z[{j}]: {fd} vs {}", a_z[j]);
+        }
+        for j in 0..v.len() {
+            let mut vp = v.clone();
+            vp[j] += eps as f32;
+            let mut vm = v.clone();
+            vm[j] -= eps as f32;
+            let fd = (scalar(&z, &vp, &dynamics) - scalar(&z, &vm, &dynamics)) / (2.0 * eps);
+            assert!((fd - a_v[j] as f64).abs() < 5e-3, "a_v[{j}]: {fd} vs {}", a_v[j]);
+        }
+        let theta0 = dynamics.params().to_vec();
+        for &k in &[0usize, 7, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[k] += eps as f32;
+            dynamics.set_params(&tp);
+            let fp = scalar(&z, &v, &dynamics);
+            let mut tm = theta0.clone();
+            tm[k] -= eps as f32;
+            dynamics.set_params(&tm);
+            let fm = scalar(&z, &v, &dynamics);
+            dynamics.set_params(&theta0);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - a_th[k] as f64).abs() < 5e-3,
+                "a_θ[{k}]: {fd} vs {}",
+                a_th[k]
+            );
+        }
+    }
+
+    #[test]
+    fn damped_alf_reduces_to_alf_at_eta_one() {
+        let toy = LinearToy::new(-0.7, 2);
+        let z = [1.0f32, 2.0];
+        let v = toy.f(0.0, &z);
+        let a = AlfSolver::new(1.0).psi(&toy, 0.0, 0.1, &z, &v);
+        // η = 1 − 1e-12 ≈ 1
+        let b = AlfSolver::new(1.0 - 1e-12).psi(&toy, 0.0, 0.1, &z, &v);
+        for i in 0..2 {
+            assert!((a.0[i] - b.0[i]).abs() < 1e-5);
+            assert!((a.1[i] - b.1[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn eta_below_half_rejected() {
+        AlfSolver::new(0.4);
+    }
+}

@@ -1,0 +1,502 @@
+//! The [`Dynamics`] abstraction: the ODE right-hand side `f(t, z; θ)` and
+//! its vector-Jacobian products.
+//!
+//! Two families implement it:
+//! * [`NativeDynamics`] implementations in this file — closed-form or small
+//!   hand-differentiated models used by the toy experiment (paper Fig. 4)
+//!   and by the property-test suite;
+//! * `runtime::HloDynamics` — batched model graphs AOT-compiled from JAX
+//!   (L2) containing the Pallas kernels (L1), used by every real experiment.
+//!
+//! Gradient methods compose everything they need (ψ, ψ⁻¹, ψ-vjp, the
+//! adjoint's augmented dynamics) from `f` and `f_vjp`, so a single trait
+//! covers all four estimation protocols.  Fused per-step executables (the
+//! Pallas `alf_step` path) are an optional fast path — see
+//! [`Dynamics::fused_alf`].
+
+use std::cell::Cell;
+
+/// Evaluation counters, used by the Table-1 complexity validation and the
+/// computation-cost columns of the benches.
+#[derive(Debug, Default, Clone)]
+pub struct EvalCounters {
+    pub f_evals: Cell<u64>,
+    pub vjp_evals: Cell<u64>,
+}
+
+impl EvalCounters {
+    pub fn reset(&self) {
+        self.f_evals.set(0);
+        self.vjp_evals.set(0);
+    }
+}
+
+/// ODE right-hand side with parameters.
+pub trait Dynamics {
+    /// Flattened state dimension (batch × features for batched models).
+    fn dim(&self) -> usize;
+
+    /// Flattened parameter dimension of θ_f.
+    fn param_dim(&self) -> usize;
+
+    /// Evaluate `dz/dt = f(t, z; θ)`.
+    fn f(&self, t: f64, z: &[f32]) -> Vec<f32>;
+
+    /// Vector-Jacobian products: given cotangent `a`, return
+    /// `(aᵀ ∂f/∂z, aᵀ ∂f/∂θ)`.
+    fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>);
+
+    fn params(&self) -> &[f32];
+    fn set_params(&mut self, theta: &[f32]);
+
+    fn counters(&self) -> &EvalCounters;
+
+    /// Number of "layers" N_f for Table-1 style accounting (1 for toy).
+    fn depth_nf(&self) -> usize {
+        1
+    }
+
+    /// Optional fused damped-ALF step ψ executed device-side in one call
+    /// (the L1 Pallas kernel path).  Returns `(z_out, v_out, err_embedded)`.
+    /// Default: `None`, and the solver composes the step from [`Dynamics::f`].
+    fn fused_alf(
+        &self,
+        _z: &[f32],
+        _v: &[f32],
+        _t: f64,
+        _h: f64,
+        _eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        None
+    }
+
+    /// Optional fused ψ⁻¹ (see [`Dynamics::fused_alf`]); returns `(z_in, v_in)`.
+    fn fused_alf_inv(
+        &self,
+        _z: &[f32],
+        _v: &[f32],
+        _t_out: f64,
+        _h: f64,
+        _eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        None
+    }
+
+    /// Optional fused ψ-vjp; returns `(a_z, a_v, a_θ)` for cotangents on the
+    /// step outputs.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_vjp(
+        &self,
+        _z: &[f32],
+        _v: &[f32],
+        _t: f64,
+        _h: f64,
+        _eta: f64,
+        _az_out: &[f32],
+        _av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        None
+    }
+
+    /// Optional fused MALI backward micro-step: ψ⁻¹ reconstruction *and*
+    /// the vjp through ψ at the reconstructed point, in one device call —
+    /// halves the backward pass's PJRT round-trips.  Inputs are the step
+    /// *outputs* `(z_out, v_out)` at `t_out` and the output cotangents;
+    /// returns `(z_in, v_in, a_z, a_v, a_θ)`.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_bwd(
+        &self,
+        _z_out: &[f32],
+        _v_out: &[f32],
+        _t_out: f64,
+        _h: f64,
+        _eta: f64,
+        _az_out: &[f32],
+        _av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native dynamics #1: the paper's toy problem  dz/dt = α z  (Eq. 6).
+// ---------------------------------------------------------------------------
+
+/// `dz/dt = α z` with θ = [α].  Every quantity in paper Eq. (7) has a closed
+/// form, so this is the reference for gradient-error measurements (Fig. 4).
+#[derive(Debug)]
+pub struct LinearToy {
+    pub alpha: Vec<f32>, // length-1 param vector
+    pub n: usize,
+    counters: EvalCounters,
+}
+
+impl LinearToy {
+    pub fn new(alpha: f64, n: usize) -> Self {
+        LinearToy {
+            alpha: vec![alpha as f32],
+            n,
+            counters: EvalCounters::default(),
+        }
+    }
+
+    pub fn analytic_z(&self, z0: &[f32], t: f64) -> Vec<f32> {
+        let a = self.alpha[0] as f64;
+        z0.iter().map(|&z| (z as f64 * (a * t).exp()) as f32).collect()
+    }
+
+    /// Analytic `dL/dz0` and `dL/dα` for `L = z(T)²` (summed over
+    /// components), per paper Eq. (7).
+    pub fn analytic_grads(&self, z0: &[f32], t_end: f64) -> (Vec<f32>, f64) {
+        let a = self.alpha[0] as f64;
+        let e = (2.0 * a * t_end).exp();
+        let dz0: Vec<f32> = z0.iter().map(|&z| (2.0 * z as f64 * e) as f32).collect();
+        let dalpha: f64 = z0
+            .iter()
+            .map(|&z| 2.0 * t_end * (z as f64) * (z as f64) * e)
+            .sum();
+        (dz0, dalpha)
+    }
+}
+
+impl Dynamics for LinearToy {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn param_dim(&self) -> usize {
+        1
+    }
+
+    fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let a = self.alpha[0];
+        z.iter().map(|&zi| a * zi).collect()
+    }
+
+    fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        let alpha = self.alpha[0];
+        let az: Vec<f32> = a.iter().map(|&ai| alpha * ai).collect();
+        let datheta: f64 = a
+            .iter()
+            .zip(z)
+            .map(|(&ai, &zi)| ai as f64 * zi as f64)
+            .sum();
+        (az, vec![datheta as f32])
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.alpha
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.alpha.copy_from_slice(theta);
+    }
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native dynamics #2: small MLP  f(t, z) = W2 · tanh(W1 z + b1) + b2
+// with hand-written vjp — the finite-difference anchor for every gradient
+// method in the property-test suite.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct MlpDynamics {
+    pub d: usize,
+    pub hidden: usize,
+    /// θ layout: [W1 (h×d) | b1 (h) | W2 (d×h) | b2 (d)]
+    theta: Vec<f32>,
+    counters: EvalCounters,
+}
+
+impl MlpDynamics {
+    pub fn new(d: usize, hidden: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let n = hidden * d + hidden + d * hidden + d;
+        let mut theta = vec![0.0f32; n];
+        // modest init so trajectories stay tame over T ~ 1
+        rng.fill_normal(&mut theta, 0.4 / (d.max(hidden) as f64).sqrt());
+        MlpDynamics {
+            d,
+            hidden,
+            theta,
+            counters: EvalCounters::default(),
+        }
+    }
+
+    fn split(&self) -> (&[f32], &[f32], &[f32], &[f32]) {
+        let (d, h) = (self.d, self.hidden);
+        let w1 = &self.theta[0..h * d];
+        let b1 = &self.theta[h * d..h * d + h];
+        let w2 = &self.theta[h * d + h..h * d + h + d * h];
+        let b2 = &self.theta[h * d + h + d * h..];
+        (w1, b1, w2, b2)
+    }
+}
+
+impl Dynamics for MlpDynamics {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn param_dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let (w1, b1, w2, b2) = self.split();
+        let (d, h) = (self.d, self.hidden);
+        let mut hid = vec![0.0f32; h];
+        for i in 0..h {
+            let mut acc = b1[i];
+            for j in 0..d {
+                acc += w1[i * d + j] * z[j];
+            }
+            hid[i] = acc.tanh();
+        }
+        let mut out = vec![0.0f32; d];
+        for i in 0..d {
+            let mut acc = b2[i];
+            for j in 0..h {
+                acc += w2[i * h + j] * hid[j];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        let (w1, b1, w2, _b2) = self.split();
+        let (d, h) = (self.d, self.hidden);
+        // forward intermediates
+        let mut pre = vec![0.0f32; h];
+        for i in 0..h {
+            let mut acc = b1[i];
+            for j in 0..d {
+                acc += w1[i * d + j] * z[j];
+            }
+            pre[i] = acc;
+        }
+        let hid: Vec<f32> = pre.iter().map(|p| p.tanh()).collect();
+        // backward
+        // out_i = b2_i + Σ_j w2[i,j] hid_j  with cotangent a_i
+        let mut d_hid = vec![0.0f32; h];
+        let mut d_w2 = vec![0.0f32; d * h];
+        let d_b2 = a.to_vec();
+        for i in 0..d {
+            for j in 0..h {
+                d_w2[i * h + j] = a[i] * hid[j];
+                d_hid[j] += a[i] * w2[i * h + j];
+            }
+        }
+        // hid_j = tanh(pre_j)
+        let d_pre: Vec<f32> = d_hid
+            .iter()
+            .zip(&hid)
+            .map(|(&dh, &t)| dh * (1.0 - t * t))
+            .collect();
+        let mut d_w1 = vec![0.0f32; h * d];
+        let d_b1 = d_pre.clone();
+        let mut d_z = vec![0.0f32; d];
+        for i in 0..h {
+            for j in 0..d {
+                d_w1[i * d + j] = d_pre[i] * z[j];
+                d_z[j] += d_pre[i] * w1[i * d + j];
+            }
+        }
+        let mut d_theta = Vec::with_capacity(self.theta.len());
+        d_theta.extend_from_slice(&d_w1);
+        d_theta.extend_from_slice(&d_b1);
+        d_theta.extend_from_slice(&d_w2);
+        d_theta.extend_from_slice(&d_b2);
+        (d_z, d_theta)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+
+    fn depth_nf(&self) -> usize {
+        2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native dynamics #3: stiff linear test  dz/dt = σ z  with complex-σ
+// behaviour emulated by 2×2 rotation blocks — used by the stability tests.
+// ---------------------------------------------------------------------------
+
+/// Block-diagonal linear dynamics: each 2×2 block is `[[re, -im], [im, re]]`,
+/// i.e. eigenvalues `re ± i·im` — lets tests place Jacobian eigenvalues
+/// anywhere on the complex plane (Theorem 3.2).
+#[derive(Debug)]
+pub struct ComplexEigenDynamics {
+    /// (re, im) per block; θ is empty (not trained).
+    pub eigs: Vec<(f32, f32)>,
+    counters: EvalCounters,
+    empty: Vec<f32>,
+}
+
+impl ComplexEigenDynamics {
+    pub fn new(eigs: Vec<(f32, f32)>) -> Self {
+        ComplexEigenDynamics {
+            eigs,
+            counters: EvalCounters::default(),
+            empty: Vec::new(),
+        }
+    }
+}
+
+impl Dynamics for ComplexEigenDynamics {
+    fn dim(&self) -> usize {
+        self.eigs.len() * 2
+    }
+
+    fn param_dim(&self) -> usize {
+        0
+    }
+
+    fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        let mut out = vec![0.0f32; z.len()];
+        for (b, &(re, im)) in self.eigs.iter().enumerate() {
+            let (x, y) = (z[2 * b], z[2 * b + 1]);
+            out[2 * b] = re * x - im * y;
+            out[2 * b + 1] = im * x + re * y;
+        }
+        out
+    }
+
+    fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let _ = z;
+        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        // Jᵀ a for the block structure
+        let mut az = vec![0.0f32; a.len()];
+        for (b, &(re, im)) in self.eigs.iter().enumerate() {
+            let (ax, ay) = (a[2 * b], a[2 * b + 1]);
+            az[2 * b] = re * ax + im * ay;
+            az[2 * b + 1] = -im * ax + re * ay;
+        }
+        (az, Vec::new())
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.empty
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {}
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn toy_matches_analytic_derivative() {
+        let toy = LinearToy::new(0.5, 3);
+        let z = [1.0f32, 2.0, -1.0];
+        let fz = toy.f(0.0, &z);
+        assert_eq!(fz, vec![0.5, 1.0, -0.5]);
+        let (az, dth) = toy.f_vjp(0.0, &z, &[1.0, 1.0, 1.0]);
+        assert_eq!(az, vec![0.5, 0.5, 0.5]);
+        // dθ = Σ a_i z_i = 1 + 2 - 1 = 2
+        assert!((dth[0] - 2.0).abs() < 1e-6);
+    }
+
+    /// Finite-difference check of the hand-written MLP vjp — the anchor the
+    /// whole gradient-method test suite leans on.
+    #[test]
+    fn mlp_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(11);
+        let dyn_ = MlpDynamics::new(4, 6, &mut rng);
+        let z: Vec<f32> = (0..4).map(|i| 0.3 * (i as f32) - 0.4).collect();
+        let a: Vec<f32> = (0..4).map(|i| 1.0 - 0.2 * i as f32).collect();
+        let (az, atheta) = dyn_.f_vjp(0.0, &z, &a);
+
+        let eps = 1e-3f32;
+        // d/dz check
+        for j in 0..z.len() {
+            let mut zp = z.clone();
+            zp[j] += eps;
+            let mut zm = z.clone();
+            zm[j] -= eps;
+            let fp = dyn_.f(0.0, &zp);
+            let fm = dyn_.f(0.0, &zm);
+            let fd: f32 = fp
+                .iter()
+                .zip(&fm)
+                .zip(&a)
+                .map(|((p, m), ai)| (p - m) / (2.0 * eps) * ai)
+                .sum();
+            assert!(
+                (fd - az[j]).abs() < 2e-3,
+                "z[{j}]: fd {fd} vs vjp {}",
+                az[j]
+            );
+        }
+        // d/dθ spot check on a handful of random coordinates
+        let mut dyn_mut = dyn_;
+        let theta0 = dyn_mut.params().to_vec();
+        for &k in &[0usize, 5, 17, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[k] += eps;
+            dyn_mut.set_params(&tp);
+            let fp = dyn_mut.f(0.0, &z);
+            let mut tm = theta0.clone();
+            tm[k] -= eps;
+            dyn_mut.set_params(&tm);
+            let fm = dyn_mut.f(0.0, &z);
+            dyn_mut.set_params(&theta0);
+            let fd: f32 = fp
+                .iter()
+                .zip(&fm)
+                .zip(&a)
+                .map(|((p, m), ai)| (p - m) / (2.0 * eps) * ai)
+                .sum();
+            assert!(
+                (fd - atheta[k]).abs() < 2e-3,
+                "θ[{k}]: fd {fd} vs vjp {}",
+                atheta[k]
+            );
+        }
+    }
+
+    #[test]
+    fn complex_eigen_blocks_rotate() {
+        let d = ComplexEigenDynamics::new(vec![(0.0, 1.0)]);
+        // eigenvalues ±i → pure rotation: f([1,0]) = [0,1]
+        let out = d.f(0.0, &[1.0, 0.0]);
+        assert_eq!(out, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let toy = LinearToy::new(1.0, 1);
+        toy.f(0.0, &[1.0]);
+        toy.f(0.0, &[1.0]);
+        toy.f_vjp(0.0, &[1.0], &[1.0]);
+        assert_eq!(toy.counters().f_evals.get(), 2);
+        assert_eq!(toy.counters().vjp_evals.get(), 1);
+        toy.counters().reset();
+        assert_eq!(toy.counters().f_evals.get(), 0);
+    }
+}

@@ -1,0 +1,385 @@
+//! The numerical-integration driver (paper Algorithm 1): fixed-step and
+//! adaptive-step loops over any [`Solver`], with an observer hook that the
+//! four gradient protocols use to record exactly what they each need
+//! (nothing for MALI beyond the accepted grid, checkpoints for ACA, the
+//! full trial tape for naive).
+//!
+//! Supports reverse-time integration (`t1 < t0`) — the adjoint method's
+//! backward IVP runs through the same loop.
+
+use super::dynamics::Dynamics;
+use super::{Solver, State};
+use crate::tensor::{error_norm, error_seminorm};
+use anyhow::{bail, Result};
+
+/// Step-size policy.
+#[derive(Debug, Clone)]
+pub enum StepMode {
+    /// Fixed step of magnitude `h` (sign is derived from direction).
+    Fixed { h: f64 },
+    /// Adaptive control: accept when the scaled error norm ≤ 1.
+    Adaptive {
+        rtol: f64,
+        atol: f64,
+        h_init: f64,
+        h_min: f64,
+        h_max: f64,
+    },
+}
+
+impl StepMode {
+    pub fn adaptive(rtol: f64, atol: f64) -> StepMode {
+        StepMode::Adaptive {
+            rtol,
+            atol,
+            h_init: 0.25,
+            h_min: 1e-6,
+            h_max: 10.0,
+        }
+    }
+}
+
+/// Error-norm selection: `Semi` masks components out of the norm (the
+/// adjoint-seminorm trick of Kidger et al., used as the SemiNorm baseline).
+#[derive(Debug, Clone)]
+pub enum ErrorNorm {
+    Full,
+    Semi(Vec<bool>),
+}
+
+impl ErrorNorm {
+    fn eval(&self, err: &[f32], z0: &[f32], z1: &[f32], rtol: f64, atol: f64) -> f64 {
+        match self {
+            ErrorNorm::Full => error_norm(err, z0, z1, rtol, atol),
+            ErrorNorm::Semi(mask) => error_seminorm(err, z0, z1, mask, rtol, atol),
+        }
+    }
+}
+
+/// An accepted step, as seen by observers.
+pub struct AcceptedStep<'a> {
+    pub index: usize,
+    /// Step start time and (signed) size; the step ends at `t + h`.
+    pub t: f64,
+    pub h: f64,
+    pub before: &'a State,
+    pub after: &'a State,
+    /// Inner-loop iterations spent on this step (1 = accepted first try).
+    pub trials: usize,
+}
+
+/// Observer for the integration loop.  Default impls ignore everything, so
+/// plain inference passes `&mut ()`.
+pub trait StepObserver {
+    fn on_accept(&mut self, _step: &AcceptedStep) {}
+    /// Every trial (accepted or rejected) with the state bytes it
+    /// materialized — the naive method's tape accounting.
+    fn on_trial(&mut self, _t: f64, _h: f64, _state_bytes: usize, _accepted: bool) {}
+}
+
+impl StepObserver for () {}
+
+/// Statistics of one integration run.
+#[derive(Debug, Clone, Default)]
+pub struct IntStats {
+    pub n_accepted: usize,
+    pub n_trials: usize,
+    pub f_evals: u64,
+}
+
+impl IntStats {
+    /// Average inner iterations per accepted step — the paper's `m`.
+    pub fn m(&self) -> f64 {
+        if self.n_accepted == 0 {
+            0.0
+        } else {
+            self.n_trials as f64 / self.n_accepted as f64
+        }
+    }
+}
+
+/// Integrate from `t0` to `t1` (either direction) starting from `state0`.
+/// Returns the final state and stats; accepted steps stream to `obs`.
+pub fn integrate(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: State,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    obs: &mut dyn StepObserver,
+) -> Result<(State, IntStats)> {
+    let span = t1 - t0;
+    if span == 0.0 {
+        return Ok((state0, IntStats::default()));
+    }
+    let dir = span.signum();
+    let f0 = dynamics.counters().f_evals.get();
+    let mut stats = IntStats::default();
+    let mut state = state0;
+    let mut t = t0;
+
+    match *mode {
+        StepMode::Fixed { h } => {
+            if h <= 0.0 {
+                bail!("fixed step size must be positive, got {h}");
+            }
+            // land exactly on t1: n equal steps of |h'| ≤ h
+            let n = (span.abs() / h).ceil().max(1.0) as usize;
+            let hs = span / n as f64;
+            for i in 0..n {
+                let (next, _err) = solver.step(dynamics, t, hs, &state);
+                obs.on_trial(t, hs, next.bytes(), true);
+                obs.on_accept(&AcceptedStep {
+                    index: i,
+                    t,
+                    h: hs,
+                    before: &state,
+                    after: &next,
+                    trials: 1,
+                });
+                state = next;
+                t += hs;
+                stats.n_accepted += 1;
+                stats.n_trials += 1;
+            }
+        }
+        StepMode::Adaptive {
+            rtol,
+            atol,
+            h_init,
+            h_min,
+            h_max,
+        } => {
+            if !solver.has_error_estimate() {
+                bail!(
+                    "solver '{}' has no embedded error estimate; use StepMode::Fixed",
+                    solver.name()
+                );
+            }
+            let p = solver.order() as f64;
+            let mut h = h_init.abs().min(h_max).max(h_min) * dir;
+            let eps = 1e-12 * span.abs().max(1.0);
+            while (t1 - t) * dir > eps {
+                // clamp to not overshoot the end point
+                if (t + h - t1) * dir > 0.0 {
+                    h = t1 - t;
+                }
+                let mut trials = 0usize;
+                loop {
+                    trials += 1;
+                    stats.n_trials += 1;
+                    let (next, err) = solver.step(dynamics, t, h, &state);
+                    let en = norm.eval(
+                        err.as_deref().unwrap_or(&[]),
+                        &state.z,
+                        &next.z,
+                        rtol,
+                        atol,
+                    );
+                    obs.on_trial(t, h, next.bytes(), en <= 1.0);
+                    let at_floor = h.abs() <= h_min * 1.0000001;
+                    if en <= 1.0 || at_floor {
+                        // accept
+                        obs.on_accept(&AcceptedStep {
+                            index: stats.n_accepted,
+                            t,
+                            h,
+                            before: &state,
+                            after: &next,
+                            trials,
+                        });
+                        state = next;
+                        t += h;
+                        stats.n_accepted += 1;
+                        // grow for the next step (Hairer's controller)
+                        let factor = if en > 0.0 {
+                            (0.9 * en.powf(-1.0 / p)).clamp(0.2, 10.0)
+                        } else {
+                            10.0
+                        };
+                        h = (h.abs() * factor).clamp(h_min, h_max) * dir;
+                        break;
+                    }
+                    // reject: shrink (paper's DecayFactor with the standard
+                    // error-proportional rule)
+                    let factor = (0.9 * en.powf(-1.0 / p)).clamp(0.2, 0.9);
+                    h = (h.abs() * factor).max(h_min) * dir;
+                    if trials > 60 {
+                        bail!(
+                            "step-size search did not converge at t={t} (h={h}, err={en})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    stats.f_evals = dynamics.counters().f_evals.get() - f0;
+    Ok((state, stats))
+}
+
+/// Convenience: integrate and also record the accepted time grid — what
+/// MALI keeps from the forward pass (paper Algo. 4 "keep accepted
+/// discretized time points").
+pub struct GridRecorder {
+    /// Accepted step start times plus the final endpoint.
+    pub times: Vec<f64>,
+    pub trials_per_step: Vec<usize>,
+}
+
+impl GridRecorder {
+    pub fn new(t0: f64) -> Self {
+        GridRecorder {
+            times: vec![t0],
+            trials_per_step: Vec::new(),
+        }
+    }
+}
+
+impl StepObserver for GridRecorder {
+    fn on_accept(&mut self, step: &AcceptedStep) {
+        self.times.push(step.t + step.h);
+        self.trials_per_step.push(step.trials);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::by_name;
+    use crate::solvers::dynamics::LinearToy;
+
+    fn exp_err(solver: &str, mode: &StepMode) -> f64 {
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name(solver).unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        let (sf, _) = integrate(&*s, &toy, 0.0, 1.0, s0, mode, &ErrorNorm::Full, &mut ())
+            .unwrap();
+        ((sf.z[0] as f64) - 1f64.exp()).abs()
+    }
+
+    #[test]
+    fn fixed_step_converges_exp() {
+        let coarse = exp_err("rk4", &StepMode::Fixed { h: 0.25 });
+        let fine = exp_err("rk4", &StepMode::Fixed { h: 0.05 });
+        assert!(coarse < 1e-4);
+        assert!(fine < coarse);
+    }
+
+    #[test]
+    fn alf_global_order_two() {
+        // global error should drop ~4x when h halves
+        let e1 = exp_err("alf", &StepMode::Fixed { h: 0.1 });
+        let e2 = exp_err("alf", &StepMode::Fixed { h: 0.05 });
+        let ratio = e1 / e2.max(1e-300);
+        assert!(ratio > 2.8, "expected ~4x, got {ratio} ({e1} / {e2})");
+    }
+
+    #[test]
+    fn adaptive_meets_tolerance() {
+        for solver in ["alf", "heun-euler", "rk23", "dopri5"] {
+            let err = exp_err(solver, &StepMode::adaptive(1e-6, 1e-8));
+            assert!(err < 1e-4, "{solver}: err {err}");
+        }
+    }
+
+    #[test]
+    fn adaptive_tighter_tol_means_more_steps() {
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name("dopri5").unwrap();
+        let run = |rtol: f64| {
+            let s0 = s.init(&toy, 0.0, &[1.0]);
+            let (_, st) = integrate(
+                &*s,
+                &toy,
+                0.0,
+                5.0,
+                s0,
+                &StepMode::adaptive(rtol, rtol * 1e-2),
+                &ErrorNorm::Full,
+                &mut (),
+            )
+            .unwrap();
+            st.n_accepted
+        };
+        assert!(run(1e-8) > run(1e-3));
+    }
+
+    #[test]
+    fn reverse_time_integration() {
+        // integrate forward then backward with tight tolerance: round trip
+        let toy = LinearToy::new(0.8, 1);
+        let s = by_name("dopri5").unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        let mode = StepMode::adaptive(1e-9, 1e-11);
+        let (sf, _) =
+            integrate(&*s, &toy, 0.0, 2.0, s0, &mode, &ErrorNorm::Full, &mut ()).unwrap();
+        let (sb, _) =
+            integrate(&*s, &toy, 2.0, 0.0, sf, &mode, &ErrorNorm::Full, &mut ()).unwrap();
+        assert!((sb.z[0] - 1.0).abs() < 1e-4, "round trip {}", sb.z[0]);
+    }
+
+    #[test]
+    fn grid_recorder_lands_exactly_on_endpoint() {
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name("alf").unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        let mut rec = GridRecorder::new(0.0);
+        let (_, stats) = integrate(
+            &*s,
+            &toy,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::adaptive(1e-3, 1e-5),
+            &ErrorNorm::Full,
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(rec.times.len(), stats.n_accepted + 1);
+        assert!((rec.times.last().unwrap() - 1.0).abs() < 1e-12);
+        // strictly increasing grid
+        for w in rec.times.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        // m ≥ 1
+        assert!(stats.m() >= 1.0);
+    }
+
+    #[test]
+    fn fixed_mode_rejects_nonpositive_h() {
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name("euler").unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        assert!(integrate(
+            &*s,
+            &toy,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::Fixed { h: 0.0 },
+            &ErrorNorm::Full,
+            &mut ()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn euler_has_no_error_estimate() {
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name("euler").unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        assert!(integrate(
+            &*s,
+            &toy,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::adaptive(1e-3, 1e-5),
+            &ErrorNorm::Full,
+            &mut ()
+        )
+        .is_err());
+    }
+}

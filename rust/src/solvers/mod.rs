@@ -1,0 +1,152 @@
+//! Numerical ODE solvers: the (damped) ALF integrator at the heart of MALI
+//! plus the classical explicit RK family used as baselines and inference
+//! solvers, and the adaptive integration loop (paper Algo. 1).
+
+pub mod alf;
+pub mod dynamics;
+pub mod integrate;
+pub mod rk;
+pub mod stability;
+
+use dynamics::Dynamics;
+
+/// Solver state: plain `z` for RK methods, augmented `(z, v)` for ALF.
+#[derive(Debug, Clone, PartialEq)]
+pub struct State {
+    pub z: Vec<f32>,
+    pub v: Option<Vec<f32>>,
+}
+
+impl State {
+    pub fn from_z(z: Vec<f32>) -> State {
+        State { z, v: None }
+    }
+
+    /// Logical size in bytes (for MemTracker accounting).
+    pub fn bytes(&self) -> usize {
+        (self.z.len() + self.v.as_ref().map_or(0, |v| v.len())) * 4
+    }
+
+    /// Zero cotangent of the same shape.
+    pub fn zeros_like(&self) -> State {
+        State {
+            z: vec![0.0; self.z.len()],
+            v: self.v.as_ref().map(|v| vec![0.0; v.len()]),
+        }
+    }
+}
+
+/// One numerical integration method ψ (paper notation): everything the
+/// adaptive loop and the four gradient protocols need from a solver.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+
+    /// Classical order p (used for the step-size controller exponent).
+    fn order(&self) -> usize;
+
+    fn has_error_estimate(&self) -> bool;
+
+    /// Build the initial solver state from `z₀` (ALF also computes
+    /// `v₀ = f(z₀, t₀)`).
+    fn init(&self, dynamics: &dyn Dynamics, t0: f64, z0: &[f32]) -> State;
+
+    /// One step `ψ_h(t, s)`; returns the new state and (if available) the
+    /// embedded error-estimate vector.
+    fn step(&self, dynamics: &dyn Dynamics, t: f64, h: f64, s: &State)
+        -> (State, Option<Vec<f32>>);
+
+    /// Reverse-mode vjp through one step: cotangents on the outputs pulled
+    /// back to cotangents on the input state, plus `∂/∂θ` contributions.
+    fn step_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+    ) -> (State, Vec<f32>);
+
+    /// Exact step inverse ψ⁻¹ where one exists (ALF); `None` otherwise.
+    fn invert(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+    ) -> Option<State>;
+
+    fn is_invertible(&self) -> bool {
+        false
+    }
+
+    /// One MALI backward micro-step: reconstruct the step input via ψ⁻¹
+    /// and pull the cotangents through the step.  Returns
+    /// `(s_in, a_in, a_θ)`.  The default composes [`Solver::invert`] +
+    /// [`Solver::step_vjp`]; ALF overrides it with the fused device path
+    /// when the dynamics exports one.
+    fn invert_and_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+    ) -> Option<(State, State, Vec<f32>)> {
+        let s_in = self.invert(dynamics, t_out, h, s_out)?;
+        let (a_in, a_theta) = self.step_vjp(dynamics, t_out - h, h, &s_in, a_out);
+        Some((s_in, a_in, a_theta))
+    }
+}
+
+/// Named solver construction — the strings used in configs, CLI and the
+/// Table-2 / Table-3 grids.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Solver>> {
+    by_name_eta(name, 1.0)
+}
+
+/// Like [`by_name`] but with an explicit ALF damping coefficient (Table 7).
+pub fn by_name_eta(name: &str, eta: f64) -> anyhow::Result<Box<dyn Solver>> {
+    use rk::{RkSolver, Tableau};
+    Ok(match name {
+        "alf" | "mali" => Box::new(alf::AlfSolver::new(eta)),
+        "euler" => Box::new(RkSolver::new(Tableau::euler())),
+        "midpoint" | "rk2" => Box::new(RkSolver::new(Tableau::midpoint())),
+        "rk4" => Box::new(RkSolver::new(Tableau::rk4())),
+        "heun-euler" | "heun_euler" => Box::new(RkSolver::new(Tableau::heun_euler())),
+        "rk23" => Box::new(RkSolver::new(Tableau::rk23())),
+        "dopri5" => Box::new(RkSolver::new(Tableau::dopri5())),
+        other => anyhow::bail!("unknown solver '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use dynamics::LinearToy;
+
+    #[test]
+    fn factory_knows_all_solvers() {
+        for name in ["alf", "euler", "rk2", "rk4", "heun-euler", "rk23", "dopri5"] {
+            let s = by_name(name).unwrap();
+            assert!(!s.name().is_empty());
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn state_bytes_counts_augmented() {
+        let s = State {
+            z: vec![0.0; 10],
+            v: Some(vec![0.0; 10]),
+        };
+        assert_eq!(s.bytes(), 80);
+        assert_eq!(State::from_z(vec![0.0; 10]).bytes(), 40);
+    }
+
+    #[test]
+    fn alf_init_sets_v_to_f() {
+        let toy = LinearToy::new(2.0, 2);
+        let s = by_name("alf").unwrap().init(&toy, 0.0, &[1.0, 3.0]);
+        assert_eq!(s.v.unwrap(), vec![2.0, 6.0]);
+    }
+}

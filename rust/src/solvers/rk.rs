@@ -1,0 +1,444 @@
+//! Explicit Runge–Kutta solvers (tableau-driven) with embedded error
+//! estimates and a generic step-vjp.
+//!
+//! These are (a) the baselines MALI is compared against and (b) the
+//! inference solvers of the invariance-to-discretization experiment
+//! (paper Table 2): Euler, Midpoint(RK2), RK4, Heun–Euler 2(1),
+//! Bogacki–Shampine RK23 3(2) and Dormand–Prince Dopri5 5(4) — the
+//! `torchdiffeq` default the paper tests with.
+
+use super::dynamics::Dynamics;
+use super::{Solver, State};
+use crate::tensor::{axpy, lincomb};
+
+/// Butcher tableau of an explicit method, optionally with an embedded
+/// lower-order weight row for error estimation.
+#[derive(Debug, Clone)]
+pub struct Tableau {
+    pub name: &'static str,
+    pub order: usize,
+    pub c: Vec<f64>,
+    /// Strictly lower-triangular a[i][j], j < i.
+    pub a: Vec<Vec<f64>>,
+    pub b: Vec<f64>,
+    /// Embedded weights b̂ (error = h·Σ (b−b̂)·k); None for fixed-order use.
+    pub b_low: Option<Vec<f64>>,
+}
+
+impl Tableau {
+    pub fn euler() -> Tableau {
+        Tableau {
+            name: "euler",
+            order: 1,
+            c: vec![0.0],
+            a: vec![vec![]],
+            b: vec![1.0],
+            b_low: None,
+        }
+    }
+
+    /// Explicit midpoint — the integrator ALF is contrasted with in §3.1.
+    pub fn midpoint() -> Tableau {
+        Tableau {
+            name: "midpoint",
+            order: 2,
+            c: vec![0.0, 0.5],
+            a: vec![vec![], vec![0.5]],
+            b: vec![0.0, 1.0],
+            b_low: None,
+        }
+    }
+
+    pub fn rk4() -> Tableau {
+        Tableau {
+            name: "rk4",
+            order: 4,
+            c: vec![0.0, 0.5, 0.5, 1.0],
+            a: vec![vec![], vec![0.5], vec![0.0, 0.5], vec![0.0, 0.0, 1.0]],
+            b: vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+            b_low: None,
+        }
+    }
+
+    /// Heun–Euler 2(1) — ACA's training solver in the paper's Cifar10 setup.
+    pub fn heun_euler() -> Tableau {
+        Tableau {
+            name: "heun-euler",
+            order: 2,
+            c: vec![0.0, 1.0],
+            a: vec![vec![], vec![1.0]],
+            b: vec![0.5, 0.5],
+            b_low: Some(vec![1.0, 0.0]),
+        }
+    }
+
+    /// Bogacki–Shampine 3(2).
+    pub fn rk23() -> Tableau {
+        Tableau {
+            name: "rk23",
+            order: 3,
+            c: vec![0.0, 0.5, 0.75, 1.0],
+            a: vec![
+                vec![],
+                vec![0.5],
+                vec![0.0, 0.75],
+                vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0],
+            ],
+            b: vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0],
+            b_low: Some(vec![7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125]),
+        }
+    }
+
+    /// Dormand–Prince 5(4), the `torchdiffeq` default.
+    pub fn dopri5() -> Tableau {
+        Tableau {
+            name: "dopri5",
+            order: 5,
+            c: vec![0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+            a: vec![
+                vec![],
+                vec![0.2],
+                vec![3.0 / 40.0, 9.0 / 40.0],
+                vec![44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+                vec![
+                    19372.0 / 6561.0,
+                    -25360.0 / 2187.0,
+                    64448.0 / 6561.0,
+                    -212.0 / 729.0,
+                ],
+                vec![
+                    9017.0 / 3168.0,
+                    -355.0 / 33.0,
+                    46732.0 / 5247.0,
+                    49.0 / 176.0,
+                    -5103.0 / 18656.0,
+                ],
+                vec![
+                    35.0 / 384.0,
+                    0.0,
+                    500.0 / 1113.0,
+                    125.0 / 192.0,
+                    -2187.0 / 6784.0,
+                    11.0 / 84.0,
+                ],
+            ],
+            b: vec![
+                35.0 / 384.0,
+                0.0,
+                500.0 / 1113.0,
+                125.0 / 192.0,
+                -2187.0 / 6784.0,
+                11.0 / 84.0,
+                0.0,
+            ],
+            b_low: Some(vec![
+                5179.0 / 57600.0,
+                0.0,
+                7571.0 / 16695.0,
+                393.0 / 640.0,
+                -92097.0 / 339200.0,
+                187.0 / 2100.0,
+                1.0 / 40.0,
+            ]),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RkSolver {
+    pub tab: Tableau,
+}
+
+impl RkSolver {
+    pub fn new(tab: Tableau) -> Self {
+        RkSolver { tab }
+    }
+
+    /// Evaluate all stages `k_i` and stage inputs `y_i`.
+    fn stages(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        z: &[f32],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let s = self.tab.b.len();
+        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(s);
+        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(s);
+        for i in 0..s {
+            let mut y = z.to_vec();
+            for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                if aij != 0.0 {
+                    axpy((h * aij) as f32, &ks[j], &mut y);
+                }
+            }
+            let k = dynamics.f(t + self.tab.c[i] * h, &y);
+            ys.push(y);
+            ks.push(k);
+        }
+        (ks, ys)
+    }
+}
+
+impl Solver for RkSolver {
+    fn name(&self) -> &'static str {
+        self.tab.name
+    }
+
+    fn order(&self) -> usize {
+        self.tab.order
+    }
+
+    fn has_error_estimate(&self) -> bool {
+        self.tab.b_low.is_some()
+    }
+
+    fn init(&self, _dynamics: &dyn Dynamics, _t0: f64, z0: &[f32]) -> State {
+        State {
+            z: z0.to_vec(),
+            v: None,
+        }
+    }
+
+    fn step(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+    ) -> (State, Option<Vec<f32>>) {
+        let (ks, _ys) = self.stages(dynamics, t, h, &s.z);
+        let mut z1 = s.z.clone();
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            if bi != 0.0 {
+                axpy((h * bi) as f32, &ks[i], &mut z1);
+            }
+        }
+        let err = self.tab.b_low.as_ref().map(|bl| {
+            let terms: Vec<(f32, &[f32])> = self
+                .tab
+                .b
+                .iter()
+                .zip(bl)
+                .enumerate()
+                .map(|(i, (&b, &bh))| ((h * (b - bh)) as f32, ks[i].as_slice()))
+                .collect();
+            lincomb(&terms)
+        });
+        (State { z: z1, v: None }, err)
+    }
+
+    /// Reverse-mode through one RK step: cotangent `a_out.z` on `z'`
+    /// propagates back through every stage.  (The embedded error output is
+    /// control flow, not a differentiated quantity — matching ACA/MALI's
+    /// "backprop only through the accepted step".)
+    fn step_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+    ) -> (State, Vec<f32>) {
+        let (ks, ys) = self.stages(dynamics, t, h, &s_in.z);
+        let nstages = ks.len();
+        let az_out = &a_out.z;
+        // a_k[i] starts at h·b_i·a_z'
+        let mut a_k: Vec<Vec<f32>> = self
+            .tab
+            .b
+            .iter()
+            .map(|&bi| az_out.iter().map(|&a| (h * bi) as f32 * a).collect())
+            .collect();
+        let mut a_z = az_out.clone();
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        for i in (0..nstages).rev() {
+            if a_k[i].iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let (g_y, g_th) = dynamics.f_vjp(t + self.tab.c[i] * h, &ys[i], &a_k[i]);
+            axpy(1.0, &g_th, &mut a_theta);
+            // y_i = z + h Σ_j a_ij k_j
+            axpy(1.0, &g_y, &mut a_z);
+            for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                if aij != 0.0 {
+                    let coeff = (h * aij) as f32;
+                    for (akj, gy) in a_k[j].iter_mut().zip(&g_y) {
+                        *akj += coeff * gy;
+                    }
+                }
+            }
+        }
+        (State { z: a_z, v: None }, a_theta)
+    }
+
+    fn invert(
+        &self,
+        _dynamics: &dyn Dynamics,
+        _t_out: f64,
+        _h: f64,
+        _s_out: &State,
+    ) -> Option<State> {
+        None // RK steps have no closed-form inverse — that's MALI's point.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::dynamics::{LinearToy, MlpDynamics};
+    use crate::util::rng::Rng;
+
+    fn one_step_err(tab: Tableau, h: f64) -> f64 {
+        let toy = LinearToy::new(1.0, 1);
+        let solver = RkSolver::new(tab);
+        let s0 = solver.init(&toy, 0.0, &[1.0]);
+        let (s1, _) = solver.step(&toy, 0.0, h, &s0);
+        ((s1.z[0] as f64) - h.exp()).abs()
+    }
+
+    /// Empirical one-step convergence order: err(h)/err(h/2) ≈ 2^(p+1).
+    #[test]
+    fn convergence_orders() {
+        for (tab, p) in [
+            (Tableau::euler(), 1usize),
+            (Tableau::midpoint(), 2),
+            (Tableau::heun_euler(), 2),
+            (Tableau::rk23(), 3),
+            (Tableau::rk4(), 4),
+            (Tableau::dopri5(), 5),
+        ] {
+            let name = tab.name;
+            // High-order methods need larger h so the one-step error stays
+            // above the f32 roundoff floor.
+            let h = if p >= 4 { 0.8 } else { 0.2 };
+            let e1 = one_step_err(tab.clone(), h);
+            let e2 = one_step_err(tab, h / 2.0);
+            let ratio = e1 / e2.max(1e-300);
+            // Ideal one-step decay is 2^(p+1); with f32 state the high-order
+            // pairs sit near the roundoff floor, so accept clear separation
+            // from order p−1 instead of the asymptotic constant.
+            let expect = 2f64.powi(p as i32 + 1);
+            let floor = (expect * 0.5).min(2f64.powi(p as i32) * 0.8);
+            assert!(
+                ratio > floor,
+                "{name}: ratio {ratio:.2}, expected ≥ {floor:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn tableau_consistency() {
+        for tab in [
+            Tableau::euler(),
+            Tableau::midpoint(),
+            Tableau::rk4(),
+            Tableau::heun_euler(),
+            Tableau::rk23(),
+            Tableau::dopri5(),
+        ] {
+            let s = tab.b.len();
+            assert_eq!(tab.c.len(), s);
+            assert_eq!(tab.a.len(), s);
+            for (i, row) in tab.a.iter().enumerate() {
+                assert!(row.len() <= i, "{}: a not lower triangular", tab.name);
+                // c_i = Σ_j a_ij (stage consistency)
+                let ci: f64 = row.iter().sum();
+                assert!(
+                    (ci - tab.c[i]).abs() < 1e-12,
+                    "{}: c[{i}] {} vs Σa {}",
+                    tab.name,
+                    tab.c[i],
+                    ci
+                );
+            }
+            // Σ b = 1
+            assert!((tab.b.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            if let Some(bl) = &tab.b_low {
+                assert!((bl.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn embedded_error_scales_with_h() {
+        let toy = LinearToy::new(1.0, 1);
+        let solver = RkSolver::new(Tableau::dopri5());
+        let s0 = solver.init(&toy, 0.0, &[1.0]);
+        let (_, e1) = solver.step(&toy, 0.0, 0.2, &s0);
+        let (_, e2) = solver.step(&toy, 0.0, 0.1, &s0);
+        let (e1, e2) = (e1.unwrap()[0].abs() as f64, e2.unwrap()[0].abs() as f64);
+        assert!(e1 > e2, "error estimate should shrink with h: {e1} vs {e2}");
+    }
+
+    /// Generic RK step-vjp against central finite differences, for a
+    /// representative adaptive (dopri5) and fixed (rk4) tableau.
+    #[test]
+    fn step_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(17);
+        for tab in [Tableau::rk4(), Tableau::dopri5(), Tableau::heun_euler()] {
+            let name = tab.name;
+            let mut dynamics = MlpDynamics::new(3, 4, &mut rng);
+            let solver = RkSolver::new(tab);
+            let (t, h) = (0.2, 0.3);
+            let z = vec![0.1f32, -0.4, 0.6];
+            let az_out = vec![1.0f32, 0.5, -0.7];
+            let s_in = State {
+                z: z.clone(),
+                v: None,
+            };
+            let a_out = State {
+                z: az_out.clone(),
+                v: None,
+            };
+            let (a_in, a_th) = solver.step_vjp(&dynamics, t, h, &s_in, &a_out);
+
+            let scalar = |zz: &[f32], d: &MlpDynamics| -> f64 {
+                let (s1, _) = solver.step(
+                    d,
+                    t,
+                    h,
+                    &State {
+                        z: zz.to_vec(),
+                        v: None,
+                    },
+                );
+                s1.z.iter()
+                    .zip(&az_out)
+                    .map(|(&x, &c)| x as f64 * c as f64)
+                    .sum()
+            };
+            let eps = 1e-3;
+            for j in 0..z.len() {
+                let mut zp = z.clone();
+                zp[j] += eps as f32;
+                let mut zm = z.clone();
+                zm[j] -= eps as f32;
+                let fd = (scalar(&zp, &dynamics) - scalar(&zm, &dynamics)) / (2.0 * eps);
+                assert!(
+                    (fd - a_in.z[j] as f64).abs() < 5e-3,
+                    "{name} a_z[{j}]: {fd} vs {}",
+                    a_in.z[j]
+                );
+            }
+            let theta0 = dynamics.params().to_vec();
+            for &k in &[0usize, theta0.len() / 2, theta0.len() - 1] {
+                let mut tp = theta0.clone();
+                tp[k] += eps as f32;
+                dynamics.set_params(&tp);
+                let fp = scalar(&z, &dynamics);
+                let mut tm = theta0.clone();
+                tm[k] -= eps as f32;
+                dynamics.set_params(&tm);
+                let fm = scalar(&z, &dynamics);
+                dynamics.set_params(&theta0);
+                let fd = (fp - fm) / (2.0 * eps);
+                assert!(
+                    (fd - a_th[k] as f64).abs() < 5e-3,
+                    "{name} a_θ[{k}]: {fd} vs {}",
+                    a_th[k]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! A-stability analysis of the damped ALF integrator (paper Theorem 3.2,
+//! Appendix A.4/A.5 and Appendix Fig. 1).
+//!
+//! For Jacobian eigenvalue σ and step h, the one-step amplification factors
+//! of damped ALF are
+//!
+//! ```text
+//! λ±(w) = 1 + η(w − 1) ± sqrt( η·[2w + η(w − 1)²] ),    w = hσ ∈ ℂ
+//! ```
+//!
+//! The step is stable at `w` iff max(|λ₊|, |λ₋|) < 1.  At η = 1 the stable
+//! region is empty (boundary only on the imaginary segment [−i, i]); for
+//! η < 1 a non-empty region opens in the left half plane.
+
+/// Minimal complex arithmetic (no external crates offline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+
+    /// Principal square root.
+    pub fn sqrt(self) -> C64 {
+        let r = self.abs();
+        let re = ((r + self.re) / 2.0).max(0.0).sqrt();
+        let im_mag = ((r - self.re) / 2.0).max(0.0).sqrt();
+        C64::new(re, if self.im >= 0.0 { im_mag } else { -im_mag })
+    }
+}
+
+/// Amplification factors λ± of one damped-ALF step at `w = hσ`.
+pub fn alf_amplification(w: C64, eta: f64) -> (C64, C64) {
+    // base = 1 + η(w − 1)
+    let base = C64::new(1.0 - eta, 0.0).add(w.scale(eta));
+    // disc = η·(2w + η(w−1)²)
+    let wm1 = w.sub(C64::new(1.0, 0.0));
+    let disc = w.scale(2.0).add(wm1.mul(wm1).scale(eta)).scale(eta);
+    let root = disc.sqrt();
+    (base.add(root), base.sub(root))
+}
+
+/// True iff damped ALF is stable at `w = hσ`.
+pub fn is_stable(w: C64, eta: f64) -> bool {
+    let (lp, lm) = alf_amplification(w, eta);
+    lp.abs() < 1.0 && lm.abs() < 1.0
+}
+
+/// Stability-region scan over `[re_lo, re_hi] × [im_lo, im_hi]` with an
+/// `n × n` grid.  Returns `(area, mask)` where `mask[i*n+j]` marks stable
+/// grid cells — the data behind Appendix Fig. 1.
+pub fn stability_region(
+    eta: f64,
+    re_lo: f64,
+    re_hi: f64,
+    im_lo: f64,
+    im_hi: f64,
+    n: usize,
+) -> (f64, Vec<bool>) {
+    let mut mask = vec![false; n * n];
+    let cell = ((re_hi - re_lo) / n as f64) * ((im_hi - im_lo) / n as f64);
+    let mut count = 0usize;
+    for i in 0..n {
+        let im = im_lo + (im_hi - im_lo) * (i as f64 + 0.5) / n as f64;
+        for j in 0..n {
+            let re = re_lo + (re_hi - re_lo) * (j as f64 + 0.5) / n as f64;
+            if is_stable(C64::new(re, im), eta) {
+                mask[i * n + j] = true;
+                count += 1;
+            }
+        }
+    }
+    (count as f64 * cell, mask)
+}
+
+/// Render the region mask as an ASCII plot (rows = imaginary axis).
+pub fn ascii_region(mask: &[bool], n: usize) -> String {
+    let mut out = String::new();
+    for i in (0..n).rev() {
+        for j in 0..n {
+            out.push(if mask[i * n + j] { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::alf::AlfSolver;
+    use crate::solvers::dynamics::{ComplexEigenDynamics, Dynamics};
+
+    #[test]
+    fn complex_sqrt_identity() {
+        for &(re, im) in &[(3.0, 4.0), (-1.0, 2.0), (0.0, -5.0), (2.5, 0.0)] {
+            let w = C64::new(re, im);
+            let r = w.sqrt();
+            let back = r.mul(r);
+            assert!((back.re - re).abs() < 1e-10 && (back.im - im).abs() < 1e-10);
+        }
+    }
+
+    /// Theorem A.2: undamped ALF (η = 1) is nowhere strictly A-stable.
+    #[test]
+    fn eta_one_region_empty() {
+        let (area, _) = stability_region(1.0, -3.0, 0.5, -2.0, 2.0, 120);
+        assert_eq!(area, 0.0);
+    }
+
+    /// η < 1 opens a non-empty region, and the area shrinks as η → 1
+    /// (Appendix Fig. 1: η 0.25 > 0.7 > 0.8).
+    #[test]
+    fn area_decreases_with_eta() {
+        let area = |eta: f64| stability_region(eta, -3.0, 0.5, -2.0, 2.0, 120).0;
+        let (a25, a70, a80) = (area(0.25), area(0.7), area(0.8));
+        assert!(a25 > a70, "{a25} vs {a70}");
+        assert!(a70 > a80, "{a70} vs {a80}");
+        assert!(a80 > 0.0);
+    }
+
+    /// At η = 1 and w = hσ purely imaginary with |w| ≤ 1, the amplification
+    /// sits on the critical boundary |λ| = 1 (Theorem A.2).
+    #[test]
+    fn eta_one_imaginary_axis_critical() {
+        for &y in &[0.1, 0.5, 0.9] {
+            let (lp, lm) = alf_amplification(C64::new(0.0, y), 1.0);
+            assert!((lp.abs() - 1.0).abs() < 1e-9, "{}", lp.abs());
+            assert!((lm.abs() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    /// Empirical cross-check: integrating dz/dt = σz with damped ALF decays
+    /// when the theorem says stable and blows up when it says unstable.
+    #[test]
+    fn predicted_stability_matches_integration() {
+        let eta = 0.7;
+        let h = 1.0;
+        let cases = [(-0.8f64, 0.3f64), (-2.5, 0.0), (0.3, 0.5)];
+        for &(re, im) in &cases {
+            let w = C64::new(re * h, im * h);
+            let predicted = is_stable(w, eta);
+            let dynamics = ComplexEigenDynamics::new(vec![(re as f32, im as f32)]);
+            let solver = AlfSolver::new(eta);
+            let mut z = vec![1.0f32, 0.0];
+            let mut v = dynamics.f(0.0, &z);
+            let mut t = 0.0;
+            for _ in 0..200 {
+                let (z1, v1, _) = solver.psi(&dynamics, t, h, &z, &v);
+                z = z1;
+                v = v1;
+                t += h;
+                if z[0].abs() > 1e20 {
+                    break;
+                }
+            }
+            let norm = (z[0] as f64).hypot(z[1] as f64);
+            if predicted {
+                assert!(norm < 10.0, "σ={re}+{im}i predicted stable, norm {norm}");
+            } else {
+                assert!(norm > 10.0, "σ={re}+{im}i predicted unstable, norm {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let (_, mask) = stability_region(0.25, -3.0, 0.5, -2.0, 2.0, 20);
+        let art = ascii_region(&mask, 20);
+        assert_eq!(art.lines().count(), 20);
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,264 @@
+//! Natural cubic splines — the control-path substrate for Neural CDEs
+//! (Kidger et al. 2020b; paper Table 5).
+//!
+//! A Neural CDE consumes `dz = f_θ(z)·dX(t)` where `X(t)` interpolates the
+//! irregular observations.  The standard construction is a natural cubic
+//! spline per channel.  We fit coefficients here (tridiagonal solve on the
+//! host — this is data preparation, not model compute); the spline is
+//! *evaluated* inside the exported JAX graph on the device, and the two
+//! implementations are cross-checked in the integration tests.
+
+/// Natural cubic spline through `(xs[i], ys[i])`, `xs` strictly increasing.
+/// Piece `i` over `[x_i, x_{i+1}]`:
+/// `s_i(t) = a_i + b_i·u + c_i·u² + d_i·u³`, `u = t − x_i`.
+#[derive(Debug, Clone)]
+pub struct CubicSpline {
+    pub xs: Vec<f64>,
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+    pub d: Vec<f64>,
+}
+
+impl CubicSpline {
+    /// Fit a natural spline (second derivative zero at both ends).
+    pub fn fit(xs: &[f64], ys: &[f64]) -> CubicSpline {
+        let n = xs.len();
+        assert!(n >= 2, "spline needs at least two knots");
+        assert_eq!(xs.len(), ys.len());
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0], "spline knots must be strictly increasing");
+        }
+        if n == 2 {
+            // linear segment
+            let h = xs[1] - xs[0];
+            return CubicSpline {
+                xs: xs.to_vec(),
+                a: vec![ys[0]],
+                b: vec![(ys[1] - ys[0]) / h],
+                c: vec![0.0],
+                d: vec![0.0],
+            };
+        }
+        let m = n - 1; // number of pieces
+        let h: Vec<f64> = (0..m).map(|i| xs[i + 1] - xs[i]).collect();
+
+        // Solve for second derivatives σ at the knots: natural BCs σ₀ = σ_{n-1} = 0.
+        // Tridiagonal system over interior knots (Thomas algorithm).
+        let dim = n - 2;
+        let mut sigma = vec![0.0f64; n];
+        if dim > 0 {
+            let mut diag = vec![0.0f64; dim];
+            let mut upper = vec![0.0f64; dim];
+            let mut lower = vec![0.0f64; dim];
+            let mut rhs = vec![0.0f64; dim];
+            for i in 0..dim {
+                let k = i + 1; // knot index
+                diag[i] = 2.0 * (h[k - 1] + h[k]);
+                lower[i] = h[k - 1];
+                upper[i] = h[k];
+                rhs[i] = 6.0
+                    * ((ys[k + 1] - ys[k]) / h[k] - (ys[k] - ys[k - 1]) / h[k - 1]);
+            }
+            // forward sweep
+            for i in 1..dim {
+                let w = lower[i] / diag[i - 1];
+                diag[i] -= w * upper[i - 1];
+                rhs[i] -= w * rhs[i - 1];
+            }
+            // back substitution
+            sigma[dim] = rhs[dim - 1] / diag[dim - 1];
+            for i in (1..dim).rev() {
+                sigma[i] = (rhs[i - 1] - upper[i - 1] * sigma[i + 1]) / diag[i - 1];
+            }
+        }
+
+        let mut a = vec![0.0f64; m];
+        let mut b = vec![0.0f64; m];
+        let mut c = vec![0.0f64; m];
+        let mut d = vec![0.0f64; m];
+        for i in 0..m {
+            a[i] = ys[i];
+            c[i] = sigma[i] / 2.0;
+            d[i] = (sigma[i + 1] - sigma[i]) / (6.0 * h[i]);
+            b[i] = (ys[i + 1] - ys[i]) / h[i] - h[i] * (2.0 * sigma[i] + sigma[i + 1]) / 6.0;
+        }
+        CubicSpline {
+            xs: xs.to_vec(),
+            a,
+            b,
+            c,
+            d,
+        }
+    }
+
+    fn piece(&self, t: f64) -> usize {
+        let m = self.a.len();
+        // binary search for the piece containing t; clamp outside the domain
+        match self
+            .xs
+            .binary_search_by(|x| x.partial_cmp(&t).unwrap())
+        {
+            Ok(i) => i.min(m - 1),
+            Err(0) => 0,
+            Err(i) => (i - 1).min(m - 1),
+        }
+    }
+
+    /// Spline value X(t) (linear extrapolation outside the knot range).
+    pub fn eval(&self, t: f64) -> f64 {
+        let i = self.piece(t);
+        let u = t - self.xs[i];
+        self.a[i] + u * (self.b[i] + u * (self.c[i] + u * self.d[i]))
+    }
+
+    /// Spline derivative Ẋ(t) — the CDE driver.
+    pub fn deriv(&self, t: f64) -> f64 {
+        let i = self.piece(t);
+        let u = t - self.xs[i];
+        self.b[i] + u * (2.0 * self.c[i] + 3.0 * u * self.d[i])
+    }
+
+    /// Flatten per-piece coefficients `[a, b, c, d]` (row per piece) — the
+    /// ctx tensor layout consumed by the exported CDE graphs.
+    pub fn coeffs_flat(&self) -> Vec<f32> {
+        let m = self.a.len();
+        let mut out = Vec::with_capacity(4 * m);
+        for i in 0..m {
+            out.push(self.a[i] as f32);
+            out.push(self.b[i] as f32);
+            out.push(self.c[i] as f32);
+            out.push(self.d[i] as f32);
+        }
+        out
+    }
+}
+
+/// Multi-channel spline path X: ℝ → ℝ^C over a shared time grid.
+#[derive(Debug, Clone)]
+pub struct SplinePath {
+    pub channels: Vec<CubicSpline>,
+}
+
+impl SplinePath {
+    /// `ys[c]` is channel c's observations over the shared grid `xs`.
+    pub fn fit(xs: &[f64], ys: &[Vec<f64>]) -> SplinePath {
+        SplinePath {
+            channels: ys.iter().map(|y| CubicSpline::fit(xs, y)).collect(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn eval(&self, t: f64) -> Vec<f64> {
+        self.channels.iter().map(|s| s.eval(t)).collect()
+    }
+
+    pub fn deriv(&self, t: f64) -> Vec<f64> {
+        self.channels.iter().map(|s| s.deriv(t)).collect()
+    }
+
+    /// Stacked coefficient tensor: `[channels × pieces × 4]` flattened, the
+    /// layout the exported CDE dynamics graph indexes with `floor` lookup.
+    pub fn coeffs_flat(&self) -> Vec<f32> {
+        self.channels
+            .iter()
+            .flat_map(|c| c.coeffs_flat())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let xs = [0.0, 1.0, 2.5, 3.0, 4.2];
+        let ys = [1.0, -0.5, 2.0, 0.0, 1.5];
+        let s = CubicSpline::fit(&xs, &ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((s.eval(*x) - y).abs() < 1e-10, "at {x}");
+        }
+    }
+
+    #[test]
+    fn reproduces_linear_functions_exactly() {
+        let xs: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x - 2.0).collect();
+        let s = CubicSpline::fit(&xs, &ys);
+        for t in [0.3, 2.71, 5.9] {
+            assert!((s.eval(t) - (3.0 * t - 2.0)).abs() < 1e-9);
+            assert!((s.deriv(t) - 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn c1_continuity_at_knots() {
+        let xs = [0.0, 0.7, 1.3, 2.0, 3.1];
+        let ys = [0.0, 1.0, -1.0, 0.5, 2.0];
+        let s = CubicSpline::fit(&xs, &ys);
+        for &x in &xs[1..xs.len() - 1] {
+            let eps = 1e-7;
+            let dv_l = s.deriv(x - eps);
+            let dv_r = s.deriv(x + eps);
+            assert!((dv_l - dv_r).abs() < 1e-4, "kink at {x}: {dv_l} vs {dv_r}");
+        }
+    }
+
+    #[test]
+    fn natural_boundary_second_derivative_zero() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 2.0, -1.0, 1.0];
+        let s = CubicSpline::fit(&xs, &ys);
+        // numerical 2nd derivative at the ends ≈ 0
+        let dd = |t: f64| {
+            let e = 1e-4;
+            (s.eval(t + e) - 2.0 * s.eval(t) + s.eval(t - e)) / (e * e)
+        };
+        assert!(dd(xs[0] + 2e-4).abs() < 0.05, "{}", dd(xs[0] + 2e-4));
+        assert!(dd(xs[3] - 2e-4).abs() < 0.05);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let xs = [0.0, 0.5, 1.1, 2.0, 2.9, 4.0];
+        let ys = [0.3, -0.2, 0.8, 1.1, -0.4, 0.0];
+        let s = CubicSpline::fit(&xs, &ys);
+        for t in [0.2, 0.9, 1.7, 3.3] {
+            let e = 1e-6;
+            let fd = (s.eval(t + e) - s.eval(t - e)) / (2.0 * e);
+            assert!((s.deriv(t) - fd).abs() < 1e-4, "t={t}");
+        }
+    }
+
+    #[test]
+    fn multichannel_path() {
+        let xs: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let ys = vec![
+            xs.iter().map(|x| x.sin()).collect::<Vec<_>>(),
+            xs.iter().map(|x| x * x).collect::<Vec<_>>(),
+        ];
+        let p = SplinePath::fit(&xs, &ys);
+        assert_eq!(p.dim(), 2);
+        let v = p.eval(1.0);
+        assert!((v[0] - 1f64.sin()).abs() < 1e-10);
+        assert!((v[1] - 1.0).abs() < 1e-10);
+        assert_eq!(p.coeffs_flat().len(), 2 * 4 * 4);
+    }
+
+    #[test]
+    fn two_knot_fallback_is_linear() {
+        let s = CubicSpline::fit(&[0.0, 2.0], &[1.0, 5.0]);
+        assert!((s.eval(1.0) - 3.0).abs() < 1e-12);
+        assert!((s.deriv(1.7) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_decreasing_knots() {
+        CubicSpline::fit(&[0.0, 1.0, 0.5], &[0.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Host-side tensors and the vector math used by solver stage arithmetic.
+//!
+//! Device compute (the model's `f`, ψ, vjp graphs) runs through PJRT; what
+//! remains on the host is O(N_z) stage combination (`axpy`-style), error
+//! norms for the adaptive controller, and optimizer updates.  All f32 with
+//! f64 accumulation for reductions.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data/shape mismatch: {} vs {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+// ---- flat-slice vector ops -------------------------------------------------
+
+/// y += a * x
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// out = x + a * y   (allocating)
+pub fn add_scaled(x: &[f32], a: f32, y: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(xi, yi)| xi + a * yi).collect()
+}
+
+/// out = sum_i c_i * xs_i  (linear combination, allocating)
+pub fn lincomb(terms: &[(f32, &[f32])]) -> Vec<f32> {
+    let n = terms.first().map(|(_, x)| x.len()).unwrap_or(0);
+    let mut out = vec![0.0f32; n];
+    for &(c, x) in terms {
+        axpy(c, x, &mut out);
+    }
+    out
+}
+
+pub fn scale_in_place(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| a as f64 * b as f64)
+        .sum()
+}
+
+pub fn nrm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+pub fn max_abs(x: &[f32]) -> f64 {
+    x.iter().map(|v| v.abs() as f64).fold(0.0, f64::max)
+}
+
+/// Hairer-style scaled RMS error norm:
+/// `sqrt( mean_i ( e_i / (atol + rtol * max(|z0_i|, |z1_i|)) )^2 )`.
+/// Accept a step when this is <= 1.
+pub fn error_norm(err: &[f32], z0: &[f32], z1: &[f32], rtol: f64, atol: f64) -> f64 {
+    debug_assert_eq!(err.len(), z0.len());
+    debug_assert_eq!(err.len(), z1.len());
+    if err.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for i in 0..err.len() {
+        let sc = atol + rtol * (z0[i].abs().max(z1[i].abs()) as f64);
+        let r = err[i] as f64 / sc;
+        acc += r * r;
+    }
+    (acc / err.len() as f64).sqrt()
+}
+
+/// Seminorm variant (Kidger et al. 2020a, "Hey, that's not an ODE"): the
+/// error components belonging to the adjoint-parameter block are excluded
+/// from the norm (`mask[i] = false`), accelerating adjoint backward passes.
+pub fn error_seminorm(
+    err: &[f32],
+    z0: &[f32],
+    z1: &[f32],
+    mask: &[bool],
+    rtol: f64,
+    atol: f64,
+) -> f64 {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for i in 0..err.len() {
+        if !mask[i] {
+            continue;
+        }
+        let sc = atol + rtol * (z0[i].abs().max(z1[i].abs()) as f64);
+        let r = err[i] as f64 / sc;
+        acc += r * r;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (acc / n as f64).sqrt()
+    }
+}
+
+/// Naive matmul (m,k)x(k,n) for native-dynamics tests and tiny models; the
+/// real model matmuls run inside XLA.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// argmax of each row of a (rows, cols) matrix — classification decisions.
+pub fn argmax_rows(logits: &[f32], rows: usize, cols: usize) -> Vec<usize> {
+    assert_eq!(logits.len(), rows * cols);
+    (0..rows)
+        .map(|r| {
+            let row = &logits[r * cols..(r + 1) * cols];
+            // NaN-safe: a diverged solver (e.g. the re-discretized ResNet
+            // probe of Table 2) may emit NaN logits — rank them lowest so
+            // the prediction is simply wrong rather than a panic.
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1.partial_cmp(b.1)
+                        .unwrap_or_else(|| a.1.is_nan().cmp(&b.1.is_nan()).reverse())
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_survives_nan_rows() {
+        let logits = [f32::NAN, 1.0, 0.5, /* row 2 */ 2.0, f32::NAN, 0.0];
+        let picks = argmax_rows(&logits, 2, 3);
+        assert_eq!(picks, vec![1, 0]);
+        // an all-NaN row must not panic (pick is arbitrary)
+        let all_nan = [f32::NAN, f32::NAN];
+        assert_eq!(argmax_rows(&all_nan, 1, 2).len(), 1);
+    }
+
+    #[test]
+    fn axpy_and_lincomb() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+        let out = lincomb(&[(1.0, &x[..]), (0.5, &y[..])]);
+        assert_eq!(out, vec![7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0f32, 4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-12);
+        assert_eq!(max_abs(&[-7.0, 2.0]), 7.0);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_norm_accepts_small_errors() {
+        let z = [1.0f32, -2.0, 0.5];
+        let err_small = [1e-9f32, 1e-9, 1e-9];
+        let en = error_norm(&err_small, &z, &z, 1e-3, 1e-6);
+        assert!(en < 1.0, "{en}");
+        let err_big = [1.0f32, 1.0, 1.0];
+        assert!(error_norm(&err_big, &z, &z, 1e-3, 1e-6) > 1.0);
+    }
+
+    #[test]
+    fn seminorm_ignores_masked_components() {
+        let z = [1.0f32, 1.0];
+        let err = [0.0f32, 100.0];
+        let full = error_norm(&err, &z, &z, 1e-3, 1e-6);
+        let semi = error_seminorm(&err, &z, &z, &[true, false], 1e-3, 1e-6);
+        assert!(full > 1.0);
+        assert_eq!(semi, 0.0);
+    }
+
+    #[test]
+    fn matmul_identity_and_known() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let eye = [1.0f32, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a.to_vec());
+        let b = [1.0f32, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let logits = [0.1f32, 0.9, 0.0, 5.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 2, 3), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_checked() {
+        Tensor::new(vec![1.0, 2.0], vec![3]);
+    }
+}

@@ -1,0 +1,147 @@
+//! FGSM adversarial attack (Goodfellow et al. 2014) — paper Table 3.
+//!
+//! `x_adv = clamp(x + ε·sign(∂L/∂x))`.  Every gradient method already
+//! produces `dL/dx` (through the stem vjp), so the attack composes from
+//! model steps; since Neural ODEs are invariant to the discretization
+//! scheme, the paper derives the attack with one solver and evaluates on
+//! the perturbed images with another — the `attack_solver × eval_solver`
+//! grid this module reproduces.
+
+use crate::data::Dataset;
+use crate::models::image::{OdeImageClassifier, ResNetClassifier};
+use crate::models::SolveCfg;
+use crate::train::metrics::AccuracyMeter;
+use anyhow::Result;
+
+/// Perturb a batch along the gradient sign; pixels clamped to [0, 1].
+pub fn fgsm_perturb(x: &[f32], grad_x: &[f32], eps: f64) -> Vec<f32> {
+    x.iter()
+        .zip(grad_x)
+        .map(|(&xi, &g)| {
+            // sign(0) = 0 (f32::signum(0.0) is +1, which would perturb
+            // pixels the loss is flat in)
+            let s = if g == 0.0 { 0.0 } else { g.signum() };
+            (xi + eps as f32 * s).clamp(0.0, 1.0)
+        })
+        .collect()
+}
+
+/// Accuracy of the ODE model on FGSM examples: gradients from
+/// `attack_cfg`'s solver, inference with `eval_cfg`'s solver.
+pub fn ode_under_attack(
+    model: &mut OdeImageClassifier,
+    test: &Dataset,
+    eps: f64,
+    attack_cfg: &SolveCfg,
+    eval_cfg: &SolveCfg,
+) -> Result<f64> {
+    let mut meter = AccuracyMeter::default();
+    for idx in test.eval_batches(model.batch) {
+        let x = test.gather(&idx);
+        let y1h = test.one_hot(&idx);
+        let out = model.step(&x, &y1h, attack_cfg, true)?;
+        let x_adv = fgsm_perturb(&x, &out.grad_x, eps);
+        let logits = model.predict(&x_adv, eval_cfg)?;
+        let pred = crate::tensor::argmax_rows(&logits, model.batch, model.classes);
+        let truth: Vec<usize> = idx.iter().map(|&i| test.y[i]).collect();
+        let uniq = idx.iter().collect::<std::collections::BTreeSet<_>>().len();
+        meter.add_masked(&pred, &truth, uniq);
+    }
+    Ok(meter.value())
+}
+
+/// Accuracy of the ResNet baseline under FGSM (white-box, same model).
+pub fn resnet_under_attack(
+    model: &ResNetClassifier,
+    test: &Dataset,
+    eps: f64,
+) -> Result<f64> {
+    let mut meter = AccuracyMeter::default();
+    for idx in test.eval_batches(model.batch) {
+        let x = test.gather(&idx);
+        let y1h = test.one_hot(&idx);
+        let (_, _, gx) = model.grad_x(&x, &y1h)?;
+        let x_adv = fgsm_perturb(&x, &gx, eps);
+        let logits = model.predict(&x_adv)?;
+        let pred = crate::tensor::argmax_rows(&logits, model.batch, model.classes);
+        let truth: Vec<usize> = idx.iter().map(|&i| test.y[i]).collect();
+        let uniq = idx.iter().collect::<std::collections::BTreeSet<_>>().len();
+        meter.add_masked(&pred, &truth, uniq);
+    }
+    Ok(meter.value())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::{generate, ImageSpec};
+    use crate::grad::IvpSpec;
+    use crate::runtime::Engine;
+    use crate::solvers::by_name;
+    use crate::util::rng::Rng;
+    use std::rc::Rc;
+
+    #[test]
+    fn perturbation_bounded_and_directional() {
+        let x = vec![0.5f32, 0.0, 1.0, 0.3];
+        let g = vec![1.0f32, -2.0, 3.0, 0.0];
+        let adv = fgsm_perturb(&x, &g, 0.1);
+        assert_eq!(adv, vec![0.6, 0.0, 1.0, 0.3]); // clamped at bounds, 0-grad untouched
+    }
+
+    #[test]
+    fn attack_reduces_accuracy_of_trained_resnet() {
+        let e = Rc::new(Engine::from_env().expect("run `make artifacts`"));
+        let mut rng = Rng::new(4);
+        let mut model = ResNetClassifier::new(e, "img16", &mut rng).unwrap();
+        let ds = generate(&ImageSpec::cifar_like(), 224, 5);
+        let (train, test) = ds.split(64);
+        // brief training so there is accuracy to destroy
+        let mut opt = crate::opt::Sgd::new(0.05, 0.9, 0.0, model.f.len());
+        let mut opt_s = crate::opt::Sgd::new(0.05, 0.9, 0.0, model.stem.len());
+        let mut opt_h = crate::opt::Sgd::new(0.05, 0.9, 0.0, model.head.len());
+        use crate::opt::Optimizer;
+        for _ in 0..4 {
+            for idx in train.epoch_batches(model.batch, &mut rng) {
+                let x = train.gather(&idx);
+                let y1h = train.one_hot(&idx);
+                model.step(&x, &y1h).unwrap();
+                opt_s.step(&mut model.stem.value, &model.stem.grad);
+                opt.step(&mut model.f.value, &model.f.grad);
+                opt_h.step(&mut model.head.value, &model.head.grad);
+            }
+        }
+        let clean = resnet_under_attack(&model, &test, 0.0).unwrap();
+        let attacked = resnet_under_attack(&model, &test, 8.0 / 255.0).unwrap();
+        assert!(clean > 0.2, "baseline failed to train: {clean}");
+        assert!(
+            attacked < clean,
+            "FGSM did not reduce accuracy: {clean} → {attacked}"
+        );
+    }
+
+    #[test]
+    fn ode_attack_grid_runs() {
+        let e = Rc::new(Engine::from_env().expect("run `make artifacts`"));
+        let mut rng = Rng::new(6);
+        let mut model = OdeImageClassifier::new(e, "img16", &mut rng).unwrap();
+        let ds = generate(&ImageSpec::cifar_like(), 96, 9);
+        let (_, test) = ds.split(64);
+        let alf = by_name("alf").unwrap();
+        let heun = by_name("heun-euler").unwrap();
+        let method = crate::grad::by_name("mali").unwrap();
+        let attack_cfg = SolveCfg {
+            solver: &*alf,
+            spec: IvpSpec::fixed(0.0, 1.0, 0.25),
+            method: &*method,
+        };
+        let eval_cfg = SolveCfg {
+            solver: &*heun,
+            spec: IvpSpec::fixed(0.0, 1.0, 0.25),
+            method: &*method,
+        };
+        let acc = ode_under_attack(&mut model, &test, 1.0 / 255.0, &attack_cfg, &eval_cfg)
+            .unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

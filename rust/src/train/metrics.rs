@@ -1,0 +1,120 @@
+//! Aggregation helpers for the report tables: mean ± std across seeds,
+//! running loss averages, simple accuracy bookkeeping.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// `"m ± s"` with the given precision — the table-cell format.
+pub fn fmt_mean_std(xs: &[f64], prec: usize) -> String {
+    format!("{:.p$} ± {:.p$}", mean(xs), std_dev(xs), p = prec)
+}
+
+/// Exponentially-weighted running average (training-loss smoothing).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    pub value: f64,
+    alpha: f64,
+    initialized: bool,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma {
+            value: 0.0,
+            alpha,
+            initialized: false,
+        }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        if self.initialized {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+        self.value
+    }
+}
+
+/// Accumulates correct/total over batches.
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyMeter {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl AccuracyMeter {
+    pub fn add(&mut self, pred: &[usize], truth: &[usize]) {
+        debug_assert_eq!(pred.len(), truth.len());
+        self.correct += pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+        self.total += truth.len();
+    }
+
+    /// Add only the first `n` entries (masking eval-batch padding).
+    pub fn add_masked(&mut self, pred: &[usize], truth: &[usize], n: usize) {
+        self.add(&pred[..n], &truth[..n]);
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_matches_pattern() {
+        assert_eq!(fmt_mean_std(&[1.0, 2.0], 2), "1.50 ± 0.71");
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        e.update(10.0);
+        assert_eq!(e.value, 10.0);
+        for _ in 0..30 {
+            e.update(0.0);
+        }
+        assert!(e.value < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_meter_masks_padding() {
+        let mut m = AccuracyMeter::default();
+        m.add_masked(&[1, 2, 3, 0], &[1, 2, 9, 0], 3);
+        assert_eq!(m.correct, 2);
+        assert_eq!(m.total, 3);
+        assert!((m.value() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Training, evaluation and attack drivers over the models layer.
+//!
+//! * [`trainer`] — the image-classifier training loop (paper Fig. 5/6):
+//!   epochs of minibatch SGD, per-component optimizers, LR schedule,
+//!   test-set evaluation, wall-clock + memory telemetry.
+//! * [`attack`] — FGSM adversarial evaluation (paper Table 3).
+//! * [`metrics`] — mean/std aggregation across seeds for the report
+//!   tables.
+
+pub mod attack;
+pub mod metrics;
+pub mod trainer;
+
+pub use trainer::{ImageTrainer, TrainCfg, TrainReport};

@@ -1,0 +1,174 @@
+//! Micro/macro benchmark harness (criterion is not vendored offline).
+//!
+//! Provides (a) `time_it`: warmup + repeated timing with mean/std/min, and
+//! (b) `Table`: aligned ASCII tables so each `benches/*.rs` prints the same
+//! rows/series the paper's tables and figures report.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn fmt_ms(&self) -> String {
+        format!("{:.3} ms ± {:.3}", self.mean_s * 1e3, self.std_s * 1e3)
+    }
+}
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Adaptive variant: keeps timing until `min_time_s` of samples accumulate
+/// (at least 3 iterations) — matches criterion's behaviour loosely.
+pub fn time_until<F: FnMut()>(min_time_s: f64, mut f: F) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time_s || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(&samples)
+}
+
+fn summarize(samples: &[f64]) -> Timing {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Timing {
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters: samples.len(),
+    }
+}
+
+/// Aligned ASCII table writer used by every bench binary.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        println!("\n== {} ==", self.title);
+        println!("{sep}");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!(" {:<width$} ", s, width = widths[c]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("{sep}");
+    }
+}
+
+/// Print a (x, series...) line chart as aligned columns — the "figure"
+/// analogue for terminal output (series data also lands in runs/*.jsonl for
+/// real plotting).
+pub fn print_series(title: &str, x_label: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) {
+    let mut header = vec![x_label];
+    for (name, _) in series {
+        header.push(name);
+    }
+    let mut t = Table::new(title, &header);
+    for (i, &x) in xs.iter().enumerate() {
+        let mut row = vec![format!("{x:.4}")];
+        for (_, ys) in series {
+            row.push(
+                ys.get(i)
+                    .map(|y| format!("{y:.6e}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&row);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_positive() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.mean_s >= 0.0);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn table_roundtrip_does_not_panic() {
+        let mut t = Table::new("test", &["a", "bb"]);
+        t.row_strs(&["1", "2"]);
+        t.row(&["x".to_string(), "yyyy".to_string()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Run logging and metrics emission.
+//!
+//! Every experiment writes (a) human-readable progress to stderr and (b) a
+//! metrics JSONL stream (`runs/<name>.jsonl`) that EXPERIMENTS.md tables and
+//! figures are generated from.  No external logging crates in the offline
+//! image — this is the substrate.
+
+use crate::util::json::Json;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Verbosity levels for stderr output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+static MIN_LEVEL: Mutex<Level> = Mutex::new(Level::Info);
+
+pub fn set_level(level: Level) {
+    *MIN_LEVEL.lock().unwrap() = level;
+}
+
+pub fn log(level: Level, msg: &str) {
+    if level >= *MIN_LEVEL.lock().unwrap() {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug_ {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+/// A metrics sink: append-only JSONL, one record per event, with the
+/// wall-clock offset since run start stamped on every record.
+pub struct RunLog {
+    file: Mutex<File>,
+    pub path: PathBuf,
+    start: Instant,
+}
+
+impl RunLog {
+    /// Create `runs/<name>.jsonl` (truncating any previous run of the same
+    /// name) under `dir`.
+    pub fn create(dir: &str, name: &str) -> std::io::Result<RunLog> {
+        fs::create_dir_all(dir)?;
+        let path = PathBuf::from(dir).join(format!("{name}.jsonl"));
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(RunLog {
+            file: Mutex::new(file),
+            path,
+            start: Instant::now(),
+        })
+    }
+
+    /// Append one record; `fields` are merged with `t_wall` seconds.
+    pub fn emit(&self, event: &str, fields: Vec<(&str, Json)>) {
+        let mut pairs = vec![
+            ("event", Json::Str(event.to_string())),
+            ("t_wall", Json::Num(self.start.elapsed().as_secs_f64())),
+        ];
+        pairs.extend(fields);
+        let line = Json::obj(pairs).dump();
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runlog_writes_jsonl() {
+        let dir = std::env::temp_dir().join("mali_log_test");
+        let dir = dir.to_str().unwrap();
+        let log = RunLog::create(dir, "unit").unwrap();
+        log.emit("step", vec![("loss", Json::Num(1.5)), ("epoch", Json::Num(0.0))]);
+        log.emit("step", vec![("loss", Json::Num(1.2)), ("epoch", Json::Num(1.0))]);
+        let text = std::fs::read_to_string(&log.path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[1]).unwrap();
+        assert_eq!(rec.get("event").as_str(), Some("step"));
+        assert_eq!(rec.get("loss").as_f64(), Some(1.2));
+        assert!(rec.get("t_wall").as_f64().unwrap() >= 0.0);
+    }
+}

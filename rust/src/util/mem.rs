@@ -1,0 +1,149 @@
+//! Logical memory accounting for gradient methods.
+//!
+//! Paper Table 1 compares methods by the solver state they must keep alive:
+//! naive `N_z·N_f·N_t·m`, adjoint `N_z·N_f`, ACA `N_z(N_f+N_t)`, MALI
+//! `N_z(N_f+1)`.  `MemTracker` measures exactly that quantity empirically —
+//! every buffer a gradient method retains between the forward and backward
+//! pass registers its size here; the peak is reported in Fig-4(c) and the
+//! Table-1 validation bench, and enforced against the ImageNet-scale memory
+//! budget in the coordinator (the paper's "infeasible to train" gate).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe byte counter with peak tracking.
+#[derive(Debug, Default)]
+pub struct MemTracker {
+    live: AtomicUsize,
+    peak: AtomicUsize,
+    /// Cumulative bytes ever allocated (turnover diagnostics).
+    total: AtomicUsize,
+}
+
+impl MemTracker {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn alloc(&self, bytes: usize) {
+        let now = self.live.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.total.fetch_add(bytes, Ordering::Relaxed);
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: usize) {
+        let prev = self.live.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "MemTracker underflow: free {bytes} from {prev}");
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.live.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+        self.total.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII guard: a tracked buffer of `f32`s.  Gradient methods hold their
+/// checkpoints / tapes in these so accounting can't drift from reality.
+#[derive(Debug)]
+pub struct TrackedBuf {
+    pub data: Vec<f32>,
+    tracker: Arc<MemTracker>,
+}
+
+impl TrackedBuf {
+    pub fn new(data: Vec<f32>, tracker: Arc<MemTracker>) -> Self {
+        tracker.alloc(data.len() * 4);
+        TrackedBuf { data, tracker }
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        self.tracker.free(self.data.len() * 4);
+    }
+}
+
+/// Current process resident-set size in bytes (Linux), for the end-to-end
+/// runs recorded in EXPERIMENTS.md.  Returns 0 if /proc is unavailable.
+pub fn process_rss_bytes() -> usize {
+    let Ok(statm) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0;
+    };
+    let rss_pages: usize = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    rss_pages * 4096
+}
+
+/// Human-readable byte formatting for reports.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_live_and_peak() {
+        let t = MemTracker::new();
+        t.alloc(100);
+        t.alloc(50);
+        assert_eq!(t.live_bytes(), 150);
+        t.free(100);
+        assert_eq!(t.live_bytes(), 50);
+        assert_eq!(t.peak_bytes(), 150);
+        assert_eq!(t.total_bytes(), 150);
+    }
+
+    #[test]
+    fn tracked_buf_raii() {
+        let t = MemTracker::new();
+        {
+            let _b = TrackedBuf::new(vec![0f32; 256], t.clone());
+            assert_eq!(t.live_bytes(), 1024);
+            let _c = TrackedBuf::new(vec![0f32; 256], t.clone());
+            assert_eq!(t.live_bytes(), 2048);
+        }
+        assert_eq!(t.live_bytes(), 0);
+        assert_eq!(t.peak_bytes(), 2048);
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(process_rss_bytes() > 0);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

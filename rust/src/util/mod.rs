@@ -1,0 +1,10 @@
+//! Infrastructure substrates (offline image: hand-rolled, no external crates
+//! beyond `xla`/`anyhow`): JSON, RNG, memory accounting, logging, thread
+//! pool, bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod mem;
+pub mod pool;
+pub mod rng;

@@ -1,0 +1,105 @@
+//! Data-parallel helpers over std scoped threads.
+//!
+//! Neither tokio nor rayon is vendored in the offline image; training-time
+//! parallelism here is simple fork-join over batch shards.  The PJRT CPU
+//! client serializes device compute anyway, so the coordinator parallelizes
+//! the host-side work (data synthesis, metric reduction, multi-seed runs)
+//! and keeps device calls on the caller thread.
+
+/// Number of workers to use: respects `MALI_THREADS`, defaults to the
+/// available parallelism (min 1).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("MALI_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// `map` over `items` with up to [`num_threads`] workers, preserving order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (ci, (items_chunk, out_chunk)) in items
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .enumerate()
+        {
+            let f = &f;
+            let _ = ci;
+            scope.spawn(move || {
+                for (item, slot) in items_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Parallel for over index ranges (chunked), mutating disjoint slices.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let workers = num_threads();
+    if workers <= 1 || data.len() <= chunk {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..97).collect();
+        let out = par_map(&items, |&x| x * x);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |&x| x).is_empty());
+        assert_eq!(par_map(&[5u32], |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_all() {
+        let mut data = vec![0u32; 100];
+        par_chunks_mut(&mut data, 7, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+    }
+}

@@ -1,0 +1,254 @@
+//! Deterministic pseudo-random numbers and parameter initializers.
+//!
+//! The coordinator owns all stochastic state (dataset generation, parameter
+//! init, dequantization noise, Hutchinson probes, FGSM batches), so every
+//! experiment is reproducible from a single `u64` seed recorded in the run
+//! log.  Implementation: xoshiro256** seeded via SplitMix64 — fast, solid
+//! statistical quality, no external crates.
+
+/// xoshiro256** generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the 256-bit state; never
+        // produces the all-zero state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Derive an independent stream (for per-worker / per-component rngs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (n << 2^64 so modulo
+        // bias is negligible, but keep the multiply-shift trick anyway).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided: trig is fine).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Rademacher ±1 (Hutchinson probes).
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with iid N(0, std).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f64) {
+        for x in out.iter_mut() {
+            *x = (self.normal() * std) as f32;
+        }
+    }
+
+    /// Fill a slice with iid U(-a, a).
+    pub fn fill_uniform_sym(&mut self, out: &mut [f32], a: f64) {
+        for x in out.iter_mut() {
+            *x = self.range(-a, a) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle of indices.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Parameter init schemes, matching the manifest's `init` field emitted by
+/// `python/compile/aot.py`.  The python side never materializes parameters —
+/// Rust owns them end-to-end.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    /// He/Kaiming normal: N(0, sqrt(2 / fan_in)).
+    HeNormal { fan_in: usize },
+    /// Glorot/Xavier uniform: U(±sqrt(6 / (fan_in + fan_out))).
+    GlorotUniform { fan_in: usize, fan_out: usize },
+    /// Small normal with explicit std (e.g. final layers of flows).
+    Normal { std: f64 },
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    pub fn fill(&self, rng: &mut Rng, out: &mut [f32]) {
+        match *self {
+            Init::HeNormal { fan_in } => {
+                rng.fill_normal(out, (2.0 / fan_in.max(1) as f64).sqrt())
+            }
+            Init::GlorotUniform { fan_in, fan_out } => {
+                let a = (6.0 / (fan_in + fan_out).max(1) as f64).sqrt();
+                rng.fill_uniform_sym(out, a)
+            }
+            Init::Normal { std } => rng.fill_normal(out, std),
+            Init::Zeros => out.iter_mut().for_each(|x| *x = 0.0),
+            Init::Ones => out.iter_mut().for_each(|x| *x = 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(4);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Rng::new(5);
+        let picks = rng.choose_k(100, 30);
+        assert_eq!(picks.len(), 30);
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+    }
+
+    #[test]
+    fn he_init_variance() {
+        let mut rng = Rng::new(6);
+        let fan_in = 128;
+        let mut buf = vec![0f32; 100_000];
+        Init::HeNormal { fan_in }.fill(&mut rng, &mut buf);
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / buf.len() as f64;
+        let expect = 2.0 / fan_in as f64;
+        assert!((var / expect - 1.0).abs() < 0.05, "var {var} expect {expect}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,213 @@
+//! End-to-end system tests: short but complete training runs through all
+//! three layers for each experiment family, asserting learning actually
+//! happens and the paper's structural claims hold.
+
+use mali_ode::data::images::{generate, ImageSpec};
+use mali_ode::data::speech::{self, SpeechSpec};
+use mali_ode::grad::IvpSpec;
+use mali_ode::models::cde::NeuralCde;
+use mali_ode::models::image::OdeImageClassifier;
+use mali_ode::models::latent::LatentOde;
+use mali_ode::models::SolveCfg;
+use mali_ode::opt::by_name as opt_by_name;
+use mali_ode::runtime::Engine;
+use mali_ode::sim::hopper;
+use mali_ode::solvers::dynamics::Dynamics;
+use mali_ode::train::trainer::{ImageTrainer, TrainCfg};
+use mali_ode::util::rng::Rng;
+use std::rc::Rc;
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::from_env().expect("run `make artifacts`"))
+}
+
+/// Image classifier: a short MALI run learns the synthetic corpus well
+/// above chance, with constant solver-state memory.
+#[test]
+fn image_classifier_end_to_end() {
+    let e = engine();
+    let mut rng = Rng::new(1);
+    let mut model = OdeImageClassifier::new(e, "img16", &mut rng).unwrap();
+    let (train, test) = generate(&ImageSpec::cifar_like(), 320 + 96, 3).split(96);
+    let cfg = TrainCfg {
+        epochs: 4,
+        lr: 0.05,
+        lr_drops: vec![],
+        method: "mali".into(),
+        solver: "alf".into(),
+        h: 0.25,
+        seed: 1,
+        ..TrainCfg::default()
+    };
+    let report = ImageTrainer::new(cfg).train_ode(&mut model, &train, &test).unwrap();
+    assert!(report.final_acc > 0.5, "acc {}", report.final_acc);
+    // constant memory: one augmented state (z + v), batch 32 × d 64 × 4 B × 2
+    assert_eq!(report.peak_mem_bytes, 32 * 64 * 4 * 2);
+}
+
+/// Trained-once, evaluated-everywhere (Table 2 in miniature): the ODE
+/// keeps its accuracy under solvers it never saw in training.
+#[test]
+fn discretization_invariance_in_miniature() {
+    let e = engine();
+    let mut rng = Rng::new(2);
+    let mut model = OdeImageClassifier::new(e, "img16", &mut rng).unwrap();
+    let (train, test) = generate(&ImageSpec::cifar_like(), 480 + 96, 4).split(96);
+    let cfg = TrainCfg {
+        epochs: 6,
+        lr: 0.05,
+        lr_drops: vec![],
+        method: "mali".into(),
+        solver: "alf".into(),
+        h: 0.25,
+        seed: 2,
+        ..TrainCfg::default()
+    };
+    ImageTrainer::new(cfg).train_ode(&mut model, &train, &test).unwrap();
+    let method = mali_ode::grad::by_name("mali").unwrap();
+    let mut accs = Vec::new();
+    for solver_name in ["alf", "rk2", "rk4", "dopri5"] {
+        let solver = mali_ode::solvers::by_name(solver_name).unwrap();
+        let spec = if solver_name == "dopri5" {
+            IvpSpec::adaptive(0.0, 1.0, 1e-3, 1e-4)
+        } else {
+            IvpSpec::fixed(0.0, 1.0, 0.25)
+        };
+        let acc = ImageTrainer::evaluate(&model, &test, &*solver, &spec, &*method).unwrap();
+        accs.push(acc);
+    }
+    let base = accs[0];
+    assert!(base > 0.5, "model failed to train: {base}");
+    for (i, acc) in accs.iter().enumerate() {
+        assert!(
+            (acc - base).abs() < 0.15,
+            "solver {i}: accuracy {acc} far from training-solver accuracy {base}"
+        );
+    }
+}
+
+/// Latent ODE on hopper: a short MALI run beats the untrained model.
+#[test]
+fn latent_ode_end_to_end() {
+    let e = engine();
+    let mut rng = Rng::new(3);
+    let mut model = LatentOde::new(e, &mut rng).unwrap();
+    let ds = hopper::generate(3 * model.batch, model.t_len, model.t_out, 3.0, 5);
+    let solver = mali_ode::solvers::by_name("alf").unwrap();
+    let method = mali_ode::grad::by_name("mali").unwrap();
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+
+    let (batch, t_len, t_out) = (model.batch, model.t_len, model.t_out);
+    let batch_of = move |start: usize| {
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for i in start..start + batch {
+            seq.extend_from_slice(ds.observed(i, t_len));
+            tgt.extend_from_slice(ds.target(i, t_len, t_out));
+        }
+        (seq, tgt)
+    };
+    let (test_seq, test_tgt) = batch_of(2 * model.batch);
+    let cfg = SolveCfg {
+        solver: &*solver,
+        spec: spec.clone(),
+        method: &*method,
+    };
+    let before = LatentOde::mse(&model.predict(&test_seq, &cfg).unwrap(), &test_tgt);
+
+    let mut opt_enc = opt_by_name("adamax", 0.01, model.enc.len()).unwrap();
+    let mut opt_dec = opt_by_name("adamax", 0.01, model.dec.len()).unwrap();
+    let mut opt_dyn = opt_by_name("adamax", 0.01, model.dynamics.param_dim()).unwrap();
+    for _ in 0..12 {
+        for start in [0, model.batch] {
+            let (seq, tgt) = batch_of(start);
+            let cfg = SolveCfg {
+                solver: &*solver,
+                spec: spec.clone(),
+                method: &*method,
+            };
+            model.step(&seq, &tgt, &cfg, &mut rng).unwrap();
+            opt_enc.step(&mut model.enc.value, &model.enc.grad);
+            opt_dec.step(&mut model.dec.value, &model.dec.grad);
+            let mut theta = model.dynamics.params().to_vec();
+            opt_dyn.step(&mut theta, &model.dyn_grad);
+            model.dynamics.set_params(&theta);
+        }
+    }
+    let cfg = SolveCfg {
+        solver: &*solver,
+        spec,
+        method: &*method,
+    };
+    let after = LatentOde::mse(&model.predict(&test_seq, &cfg).unwrap(), &test_tgt);
+    assert!(
+        after < before,
+        "latent ODE did not improve: {before} → {after}"
+    );
+}
+
+/// Neural CDE on synthetic speech: accuracy after a short run beats chance.
+#[test]
+fn neural_cde_end_to_end() {
+    let e = engine();
+    let mut rng = Rng::new(4);
+    let mut model = NeuralCde::new(e, &mut rng).unwrap();
+    let ds = speech::generate(&SpeechSpec::commands10(), 5 * model.batch, 6);
+    let (train, test) = ds.split(model.batch);
+    let solver = mali_ode::solvers::by_name("alf").unwrap();
+    let method = mali_ode::grad::by_name("mali").unwrap();
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+
+    let mut opt_stem = opt_by_name("adam", 0.01, model.stem.len()).unwrap();
+    let mut opt_head = opt_by_name("adam", 0.01, model.head.len()).unwrap();
+    let mut opt_dyn = opt_by_name("adam", 0.01, model.dynamics.param_dim()).unwrap();
+    for _ in 0..16 {
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(model.batch) {
+            if chunk.len() < model.batch {
+                continue;
+            }
+            let (ctx, x0, y1h, _) = model.prepare_batch(&train, chunk);
+            let cfg = SolveCfg {
+                solver: &*solver,
+                spec: spec.clone(),
+                method: &*method,
+            };
+            model.step(ctx, &x0, &y1h, &cfg).unwrap();
+            opt_stem.step(&mut model.stem.value, &model.stem.grad);
+            opt_head.step(&mut model.head.value, &model.head.grad);
+            let mut theta = model.dynamics.params().to_vec();
+            opt_dyn.step(&mut theta, &model.dyn_grad);
+            model.dynamics.set_params(&theta);
+        }
+    }
+    let idx: Vec<usize> = (0..model.batch).collect();
+    let (ctx, x0, _, y) = model.prepare_batch(&test, &idx);
+    let cfg = SolveCfg {
+        solver: &*solver,
+        spec,
+        method: &*method,
+    };
+    let logits = model.predict(ctx, &x0, &cfg).unwrap();
+    let acc = model.accuracy(&logits, &y);
+    assert!(acc > 0.2, "CDE stuck at chance: {acc}");
+}
+
+/// The CLI surface works end to end: `run fig4` writes its summary.
+#[test]
+fn cli_run_fig4_writes_summary() {
+    let dir = std::env::temp_dir().join("mali_cli_test_runs");
+    std::fs::remove_dir_all(&dir).ok();
+    mali_ode::coordinator::run_cli(&[
+        "run".into(),
+        "fig4".into(),
+        "--runs".into(),
+        dir.to_str().unwrap().into(),
+    ])
+    .unwrap();
+    let summary =
+        mali_ode::util::json::Json::parse_file(&dir.join("fig4.json")).unwrap();
+    assert!(!summary.get("rows").as_arr().unwrap().is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,311 @@
+//! Integration tests over the four gradient protocols — the empirical heart
+//! of the reproduction: MALI must agree with ACA/naive to roundoff and with
+//! finite differences, while the adjoint method carries reverse-trajectory
+//! error; MALI/adjoint memory must be constant in N_t while ACA/naive grow.
+
+use mali_ode::grad::{by_name, forward_loss, FnLoss, IvpSpec, SquareLoss};
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
+use mali_ode::solvers::{by_name as solver_by_name, by_name_eta};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+
+fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Paper Eq. 6/7: every method should recover the analytic gradients of the
+/// toy problem.
+#[test]
+fn toy_analytic_gradients() {
+    let t_end = 2.0;
+    let toy = LinearToy::new(0.6, 2);
+    let z0 = [1.0f32, -0.5];
+    let (dz0_true, dalpha_true) = toy.analytic_grads(&z0, t_end);
+
+    let mut errs = std::collections::BTreeMap::new();
+    for method in ["mali", "aca", "naive", "adjoint"] {
+        let solver = if method == "adjoint" {
+            solver_by_name("dopri5").unwrap()
+        } else {
+            solver_by_name("alf").unwrap()
+        };
+        let spec = IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-6);
+        let m = by_name(method).unwrap();
+        let r = m
+            .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+            .unwrap();
+        let e_z0 = l2(&r.grad_z0, &dz0_true);
+        let e_alpha = (r.grad_theta[0] as f64 - dalpha_true).abs();
+        errs.insert(method, (e_z0, e_alpha));
+        // absolute sanity: right ballpark for all methods
+        let scale = dalpha_true.abs();
+        assert!(
+            e_alpha < 0.05 * scale,
+            "{method}: dα err {e_alpha} vs scale {scale}"
+        );
+    }
+}
+
+/// MALI == ACA == naive to float roundoff on the same ALF solve: all three
+/// backprop through the same accepted steps with exact states.
+#[test]
+fn mali_aca_naive_agree_exactly() {
+    let mut rng = Rng::new(42);
+    let dynamics = MlpDynamics::new(5, 7, &mut rng);
+    let z0: Vec<f32> = (0..5).map(|i| 0.25 * i as f32 - 0.5).collect();
+    let solver = solver_by_name("alf").unwrap();
+    let spec = IvpSpec::adaptive(0.0, 1.0, 1e-3, 1e-5);
+
+    let results: Vec<_> = ["mali", "aca", "naive"]
+        .iter()
+        .map(|m| {
+            by_name(m)
+                .unwrap()
+                .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+                .unwrap()
+        })
+        .collect();
+    for r in &results[1..] {
+        assert!(
+            l2(&r.grad_theta, &results[0].grad_theta) < 1e-4,
+            "θ-grad mismatch vs mali: {}",
+            l2(&r.grad_theta, &results[0].grad_theta)
+        );
+        assert!(l2(&r.grad_z0, &results[0].grad_z0) < 1e-4);
+        assert!((r.loss - results[0].loss).abs() < 1e-6);
+    }
+}
+
+/// Every method's θ-gradient on the MLP dynamics matches central finite
+/// differences of the end-to-end loss.
+#[test]
+fn all_methods_match_finite_differences() {
+    let mut rng = Rng::new(7);
+    let mut dynamics = MlpDynamics::new(3, 4, &mut rng);
+    let z0 = vec![0.4f32, -0.3, 0.2];
+    let spec = IvpSpec::fixed(0.0, 0.8, 0.1);
+
+    for method in ["mali", "aca", "naive", "adjoint"] {
+        let solver = if method == "adjoint" {
+            solver_by_name("rk4").unwrap()
+        } else {
+            solver_by_name("alf").unwrap()
+        };
+        let m = by_name(method).unwrap();
+        let r = m
+            .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+            .unwrap();
+
+        let theta0 = dynamics.params().to_vec();
+        let eps = 1e-2f32;
+        for &k in &[0usize, theta0.len() / 3, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[k] += eps;
+            dynamics.set_params(&tp);
+            let (lp, _, _) =
+                forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+            let mut tm = theta0.clone();
+            tm[k] -= eps;
+            dynamics.set_params(&tm);
+            let (lm, _, _) =
+                forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+            dynamics.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let got = r.grad_theta[k] as f64;
+            assert!(
+                (fd - got).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{method} θ[{k}]: fd {fd} vs {got}"
+            );
+        }
+        // dL/dz0 finite difference
+        for j in 0..z0.len() {
+            let mut zp = z0.clone();
+            zp[j] += eps;
+            let (lp, _, _) =
+                forward_loss(&dynamics, &*solver, &spec, &zp, &SquareLoss).unwrap();
+            let mut zm = z0.clone();
+            zm[j] -= eps;
+            let (lm, _, _) =
+                forward_loss(&dynamics, &*solver, &spec, &zm, &SquareLoss).unwrap();
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let got = r.grad_z0[j] as f64;
+            assert!(
+                (fd - got).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{method} z0[{j}]: fd {fd} vs {got}"
+            );
+        }
+    }
+}
+
+/// Paper Fig. 4(c) / Table 1: MALI and adjoint memory is flat in the step
+/// count; ACA grows ~N_t; naive grows at least as fast.
+#[test]
+fn memory_scaling_matches_table1() {
+    let toy = LinearToy::new(1.0, 64);
+    let z0 = vec![1.0f32; 64];
+    let peak = |method: &str, h: f64| -> usize {
+        let solver = solver_by_name("alf").unwrap();
+        let spec = IvpSpec::fixed(0.0, 4.0, h);
+        let tracker = MemTracker::new();
+        by_name(method)
+            .unwrap()
+            .grad(&toy, &*solver, &spec, &z0, &SquareLoss, tracker.clone())
+            .unwrap();
+        tracker.peak_bytes()
+    };
+    for method in ["mali", "adjoint"] {
+        let few = peak(method, 0.5); // 8 steps
+        let many = peak(method, 0.05); // 80 steps
+        assert!(
+            many <= few + 2048,
+            "{method}: memory grew {few} -> {many} with 10x steps"
+        );
+    }
+    for method in ["aca", "naive"] {
+        let few = peak(method, 0.5);
+        let many = peak(method, 0.05);
+        assert!(
+            many as f64 > few as f64 * 5.0,
+            "{method}: expected ~10x memory growth, got {few} -> {many}"
+        );
+    }
+    // ordering at fixed resolution: naive ≥ aca > mali
+    let (n, a, m) = (peak("naive", 0.1), peak("aca", 0.1), peak("mali", 0.1));
+    assert!(n >= a, "naive {n} < aca {a}");
+    assert!(a > m, "aca {a} <= mali {m}");
+}
+
+/// The adjoint's reverse-time trajectory drifts from the true initial state
+/// while MALI's ψ⁻¹ reconstruction is exact (paper Thm. 2.1 + §3.2).
+#[test]
+fn reverse_trajectory_error_adjoint_vs_mali() {
+    let toy = LinearToy::new(1.2, 4);
+    let z0 = vec![1.0f32, 0.5, -0.5, 2.0];
+    let t_end = 3.0;
+
+    // adjoint with a loose tolerance: visible reconstruction error
+    let solver = solver_by_name("heun-euler").unwrap();
+    let spec = IvpSpec::adaptive(0.0, t_end, 1e-2, 1e-3);
+    let adj = by_name("adjoint")
+        .unwrap()
+        .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let adj_err = l2(adj.reconstructed_z0.as_ref().unwrap(), &z0);
+
+    let alf = solver_by_name("alf").unwrap();
+    let mali = by_name("mali")
+        .unwrap()
+        .grad(&toy, &*alf, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let mali_err = l2(mali.reconstructed_z0.as_ref().unwrap(), &z0);
+
+    assert!(
+        mali_err < adj_err,
+        "MALI reconstruction {mali_err} should beat adjoint {adj_err}"
+    );
+    assert!(mali_err < 1e-2, "MALI reconstruction should be ~roundoff: {mali_err}");
+}
+
+/// MALI refuses non-invertible solvers instead of silently degrading.
+#[test]
+fn mali_requires_invertible_solver() {
+    let toy = LinearToy::new(1.0, 1);
+    let solver = solver_by_name("dopri5").unwrap();
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.1);
+    let err = by_name("mali")
+        .unwrap()
+        .grad(&toy, &*solver, &spec, &[1.0], &SquareLoss, MemTracker::new())
+        .unwrap_err();
+    assert!(err.to_string().contains("invertible"));
+}
+
+/// Damped MALI (η < 1) still matches finite differences — Table 7 support.
+#[test]
+fn damped_mali_gradients_correct() {
+    let mut rng = Rng::new(13);
+    let mut dynamics = MlpDynamics::new(3, 4, &mut rng);
+    let z0 = vec![0.2f32, -0.1, 0.3];
+    for &eta in &[0.95, 0.9, 0.85] {
+        let solver = by_name_eta("alf", eta).unwrap();
+        let spec = IvpSpec::fixed(0.0, 0.6, 0.1);
+        let r = by_name("mali")
+            .unwrap()
+            .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+            .unwrap();
+        let theta0 = dynamics.params().to_vec();
+        let eps = 1e-2f32;
+        let k = theta0.len() / 2;
+        let mut tp = theta0.clone();
+        tp[k] += eps;
+        dynamics.set_params(&tp);
+        let (lp, _, _) = forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+        let mut tm = theta0.clone();
+        tm[k] -= eps;
+        dynamics.set_params(&tm);
+        let (lm, _, _) = forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+        dynamics.set_params(&theta0);
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!(
+            (fd - r.grad_theta[k] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+            "eta {eta}: fd {fd} vs {}",
+            r.grad_theta[k]
+        );
+    }
+}
+
+/// Computation accounting sanity vs Table 1: naive trials ≥ accepted steps;
+/// MALI backward adds ~2 f-evals per accepted step over forward.
+#[test]
+fn computation_accounting() {
+    let toy = LinearToy::new(1.0, 8);
+    let z0 = vec![1.0f32; 8];
+    let solver = solver_by_name("alf").unwrap();
+    let spec = IvpSpec::adaptive(0.0, 5.0, 1e-4, 1e-6);
+
+    let mali = by_name("mali")
+        .unwrap()
+        .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let nt = mali.stats.fwd.n_accepted as u64;
+    let trials = mali.stats.fwd.n_trials as u64;
+    assert!(trials >= nt);
+    // forward ~ trials f-evals (+1 init); backward adds 1 ψ⁻¹ f-eval per
+    // step, plus the vjp's internal eval: total f_evals ≈ trials + 1 + N_t
+    assert!(
+        mali.stats.f_evals >= trials + nt,
+        "f_evals {} vs trials {trials} + steps {nt}",
+        mali.stats.f_evals
+    );
+    assert!(mali.stats.vjp_evals >= nt);
+
+    let naive = by_name("naive")
+        .unwrap()
+        .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    assert!(naive.stats.graph_depth >= mali.stats.graph_depth);
+}
+
+/// Loss heads are pluggable: a weighted-sum head propagates correctly.
+#[test]
+fn custom_loss_head() {
+    let toy = LinearToy::new(0.5, 2);
+    let z0 = [1.0f32, 2.0];
+    let solver = solver_by_name("alf").unwrap();
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.05);
+    let head = FnLoss(|z: &[f32]| {
+        let l = z[0] as f64 * 3.0 - z[1] as f64;
+        (l, vec![3.0, -1.0])
+    });
+    let r = by_name("mali")
+        .unwrap()
+        .grad(&toy, &*solver, &spec, &z0, &head, MemTracker::new())
+        .unwrap();
+    // analytic: z_i(T) = z0_i e^{0.5}; dL/dz0 = [3 e^{0.5}, −e^{0.5}]
+    let e = 0.5f64.exp();
+    assert!((r.grad_z0[0] as f64 - 3.0 * e).abs() < 1e-2);
+    assert!((r.grad_z0[1] as f64 + e).abs() < 1e-2);
+}

@@ -1,0 +1,282 @@
+//! Integration tests over the AOT runtime: every exported executable is
+//! loaded through the real PJRT client and cross-checked against native
+//! Rust implementations or mathematical identities.
+//!
+//! Requires `make artifacts` (the repo ships them built).
+
+use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::runtime::{Engine, HloDynamics};
+use mali_ode::solvers::alf::AlfSolver;
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+use std::rc::Rc;
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::from_env().expect("artifacts missing — run `make artifacts`"))
+}
+
+/// Every artifact in the manifest loads, compiles and executes with
+/// finite outputs.
+#[test]
+fn all_artifacts_execute() {
+    let e = engine();
+    let names: Vec<String> = e.manifest.entries.keys().cloned().collect();
+    assert!(names.len() >= 60, "expected the full artifact set, got {}", names.len());
+    for name in &names {
+        let spec = e.manifest.entry(name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|t| vec![0.05f32; t.len().max(1)])
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = e.call(name, &refs).unwrap_or_else(|err| panic!("{name}: {err:#}"));
+        assert_eq!(out.len(), spec.outputs.len(), "{name}");
+        for (i, o) in out.iter().enumerate() {
+            assert!(
+                o.iter().all(|v| v.is_finite()),
+                "{name} output {i} not finite"
+            );
+        }
+    }
+}
+
+/// The full gradient protocol through HLO toy dynamics matches the
+/// closed-form solution (paper Eq. 7) — the end-to-end numerical anchor
+/// of the runtime.
+#[test]
+fn mali_through_hlo_matches_analytic() {
+    let e = engine();
+    let alpha = 0.35f64;
+    let mut d = HloDynamics::new(e, "toy").unwrap();
+    d.set_params(&[alpha as f32]);
+    let native = LinearToy::new(alpha, 4);
+    let z0 = vec![1.0f32, -0.4, 0.7, 2.0];
+    let t_end = 1.5;
+    let (gz_ref, ga_ref) = native.analytic_grads(&z0, t_end);
+
+    let solver = solver_by_name("alf").unwrap();
+    let mali = grad_by_name("mali").unwrap();
+    let spec = IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-6);
+    let res = mali
+        .grad(&d, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    for (g, r) in res.grad_z0.iter().zip(&gz_ref) {
+        assert!(((g - r) / r).abs() < 1e-3, "dL/dz0: {g} vs {r}");
+    }
+    assert!(
+        ((res.grad_theta[0] as f64 - ga_ref) / ga_ref).abs() < 1e-3,
+        "dL/dα: {} vs {ga_ref}",
+        res.grad_theta[0]
+    );
+}
+
+/// All gradient methods agree on a real HLO model: MALI ≡ ACA exactly
+/// (same solver, reverse-exact trajectory), adjoint approximately.
+#[test]
+fn methods_agree_on_img16_hlo() {
+    let e = engine();
+    let mut rng = Rng::new(5);
+    let mut d = HloDynamics::new(e, "img16").unwrap();
+    d.init_params(&mut rng).unwrap();
+    let n = d.dim();
+    let mut z0 = vec![0.0f32; n];
+    rng.fill_uniform_sym(&mut z0, 0.5);
+
+    let alf = solver_by_name("alf").unwrap();
+    let heun = solver_by_name("heun-euler").unwrap();
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+
+    let mali = grad_by_name("mali")
+        .unwrap()
+        .grad(&d, &*alf, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let aca_alf = grad_by_name("aca")
+        .unwrap()
+        .grad(&d, &*alf, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let max_diff = mali
+        .grad_theta
+        .iter()
+        .zip(&aca_alf.grad_theta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "MALI vs ACA(ALF): {max_diff}");
+
+    // adjoint on a same-order solver: same direction, small deviation
+    let adj = grad_by_name("adjoint")
+        .unwrap()
+        .grad(&d, &*heun, &spec, &z0, &SquareLoss, MemTracker::new())
+        .unwrap();
+    let dot: f64 = mali
+        .grad_theta
+        .iter()
+        .zip(&adj.grad_theta)
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum();
+    let na: f64 = mali.grad_theta.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = adj.grad_theta.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = dot / (na * nb);
+    assert!(cos > 0.99, "adjoint gradient direction off: cos {cos}");
+}
+
+/// ψ⁻¹∘ψ = id through the fused HLO kernels for every ALF-exporting
+/// family, undamped and damped (paper Algo. 3 / Eq. 49).
+#[test]
+fn fused_roundtrip_all_families() {
+    let e = engine();
+    let mut rng = Rng::new(9);
+    for family in ["toy", "img16", "img32", "latent", "cnf_density2d"] {
+        let mut d = HloDynamics::new(e.clone(), family).unwrap();
+        if d.param_dim() > 1 {
+            d.init_params(&mut rng).unwrap();
+        } else {
+            d.set_params(&[0.5]);
+        }
+        if d.n_ctx() > 0 {
+            // CNF probe (batch × dim Rademacher); other families have no ctx
+            let len = e
+                .manifest
+                .entry(&format!("{family}.f"))
+                .unwrap()
+                .inputs[2]
+                .len();
+            let mut probe = vec![0.0f32; len];
+            for p in probe.iter_mut() {
+                *p = rng.rademacher();
+            }
+            d.set_ctx(0, probe).unwrap();
+        }
+        let n = d.dim();
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 0.4);
+        for &eta in &[1.0, 0.9] {
+            let solver = AlfSolver::new(eta);
+            let v = d.f(0.0, &z);
+            let (z1, v1, _) = solver.psi(&d, 0.0, 0.2, &z, &v);
+            let (z0b, v0b) = solver.psi_inv(&d, 0.2, 0.2, &z1, &v1);
+            let max_z = z.iter().zip(&z0b).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            let max_v = v.iter().zip(&v0b).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(max_z < 1e-4, "{family} η={eta}: z roundtrip {max_z}");
+            assert!(max_v < 1e-4, "{family} η={eta}: v roundtrip {max_v}");
+        }
+    }
+}
+
+/// The fused ψ (one PJRT call) and the composed path (`f` + host algebra)
+/// agree numerically on every family — the L1 kernel is a pure
+/// optimization, not a semantic change.
+#[test]
+fn fused_equals_composed() {
+    let e = engine();
+    let mut rng = Rng::new(11);
+    for family in ["img16", "latent"] {
+        let mut d = HloDynamics::new(e.clone(), family).unwrap();
+        d.init_params(&mut rng).unwrap();
+        let n = d.dim();
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 0.5);
+        let v = d.f(0.0, &z);
+        let solver = AlfSolver::new(1.0);
+        let fused = solver.psi(&d, 0.1, 0.3, &z, &v);
+        d.use_fused = false;
+        let composed = solver.psi(&d, 0.1, 0.3, &z, &v);
+        d.use_fused = true;
+        for i in 0..n {
+            assert!((fused.0[i] - composed.0[i]).abs() < 1e-4, "{family} z[{i}]");
+            assert!((fused.1[i] - composed.1[i]).abs() < 1e-4, "{family} v[{i}]");
+        }
+    }
+}
+
+/// The fused MALI backward micro-step (`<fam>.bwd`, one PJRT call) agrees
+/// with the composed ψ⁻¹ + ψ-vjp path it replaces.
+#[test]
+fn fused_bwd_equals_composed() {
+    use mali_ode::solvers::{Solver, State};
+    let e = engine();
+    let mut rng = Rng::new(13);
+    for family in ["img16", "latent"] {
+        let mut d = HloDynamics::new(e.clone(), family).unwrap();
+        d.init_params(&mut rng).unwrap();
+        let n = d.dim();
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 0.5);
+        let solver = AlfSolver::new(1.0);
+        let v = d.f(0.0, &z);
+        let (z1, v1, _) = solver.psi(&d, 0.0, 0.25, &z, &v);
+        let s_out = State {
+            z: z1,
+            v: Some(v1),
+        };
+        let mut az = vec![0.0f32; n];
+        let mut av = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut az, 1.0);
+        rng.fill_uniform_sym(&mut av, 1.0);
+        let a_out = State {
+            z: az,
+            v: Some(av),
+        };
+        let fused = solver
+            .invert_and_vjp(&d, 0.25, 0.25, &s_out, &a_out)
+            .unwrap();
+        d.use_fused = false;
+        let composed = solver
+            .invert_and_vjp(&d, 0.25, 0.25, &s_out, &a_out)
+            .unwrap();
+        d.use_fused = true;
+        for i in 0..n {
+            assert!((fused.0.z[i] - composed.0.z[i]).abs() < 1e-4, "{family} z_in[{i}]");
+            assert!((fused.1.z[i] - composed.1.z[i]).abs() < 1e-4, "{family} a_z[{i}]");
+        }
+        let max_th = fused
+            .2
+            .iter()
+            .zip(&composed.2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_th < 1e-3, "{family} a_θ diff {max_th}");
+    }
+}
+
+/// Engine determinism across instances (fresh compile, same artifacts).
+#[test]
+fn engine_is_deterministic_across_instances() {
+    let a = Engine::from_env().unwrap();
+    let b = Engine::from_env().unwrap();
+    let z = [0.3f32, -0.2, 0.9, 0.0];
+    let out_a = a.call1("toy.f", &[&[0.1], &z, &[0.7]]).unwrap();
+    let out_b = b.call1("toy.f", &[&[0.1], &z, &[0.7]]).unwrap();
+    assert_eq!(out_a, out_b);
+}
+
+/// Manifest hygiene: every referenced file exists; every component length
+/// matches its parameter specs.
+#[test]
+fn manifest_is_self_consistent() {
+    let e = engine();
+    for (name, entry) in &e.manifest.entries {
+        assert!(
+            e.manifest.hlo_path(entry).exists(),
+            "missing HLO file for {name}"
+        );
+        assert!(!entry.outputs.is_empty(), "{name} has no outputs");
+    }
+    for (mname, model) in &e.manifest.models {
+        for (cname, comp) in &model.components {
+            let total: usize = comp.params.iter().map(|p| p.len()).sum();
+            assert_eq!(comp.len, total, "{mname}.{cname} length mismatch");
+        }
+    }
+    // no elided literals may ever reach the parser (it zero-fills them)
+    for entry in e.manifest.entries.values() {
+        let text = std::fs::read_to_string(e.manifest.hlo_path(entry)).unwrap();
+        assert!(
+            !text.contains("{...}"),
+            "{}: elided literal in HLO text",
+            entry.name
+        );
+    }
+}

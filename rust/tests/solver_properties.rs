@@ -1,0 +1,272 @@
+//! Property-based tests over the solver layer: randomized dynamics, states,
+//! step sizes and damping coefficients (proptest is not vendored offline —
+//! `util::rng` drives seeded random sweeps with explicit case counts, which
+//! shrink-free but reproducible by seed).
+
+use mali_ode::grad::{by_name, IvpSpec, SquareLoss};
+use mali_ode::solvers::alf::AlfSolver;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
+use mali_ode::solvers::integrate::{integrate, ErrorNorm, GridRecorder, StepMode};
+use mali_ode::solvers::{by_name as solver_by_name, Solver, State};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+
+const CASES: usize = 40;
+
+/// ∀ (z, v, t, h, η): ψ⁻¹(ψ(z, v)) = (z, v) to roundoff — the invertibility
+/// property MALI is built on (paper §3.1 "Invertibility of ALF").
+#[test]
+fn prop_alf_roundtrip() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let d = 1 + rng.below(8);
+        let hidden = 2 + rng.below(8);
+        let dynamics = MlpDynamics::new(d, hidden, &mut rng);
+        let eta = rng.range(0.55, 1.0);
+        let solver = AlfSolver::new(eta);
+        let mut z = vec![0.0f32; d];
+        rng.fill_normal(&mut z, 1.0);
+        let mut v = vec![0.0f32; d];
+        rng.fill_normal(&mut v, 1.0);
+        let t = rng.range(-1.0, 1.0);
+        let h = rng.range(0.01, 0.5);
+        let (z1, v1, _) = solver.psi(&dynamics, t, h, &z, &v);
+        let (z0, v0) = solver.psi_inv(&dynamics, t + h, h, &z1, &v1);
+        for i in 0..d {
+            assert!(
+                (z0[i] - z[i]).abs() < 1e-3,
+                "case {case} (d={d}, η={eta:.3}, h={h:.3}): z[{i}] {} vs {}",
+                z0[i],
+                z[i]
+            );
+            assert!((v0[i] - v[i]).abs() < 1e-3, "case {case}: v[{i}]");
+        }
+    }
+}
+
+/// ∀ trajectories: reconstructing the whole trajectory backward from the end
+/// state (Eq. 5) recovers every forward state (paper Fig. 3).
+#[test]
+fn prop_full_trajectory_reconstruction() {
+    let mut rng = Rng::new(202);
+    for case in 0..12 {
+        let d = 2 + rng.below(5);
+        let dynamics = MlpDynamics::new(d, 6, &mut rng);
+        let solver = AlfSolver::new(1.0);
+        let mut z0 = vec![0.0f32; d];
+        rng.fill_normal(&mut z0, 0.8);
+        let s0 = solver.init(&dynamics, 0.0, &z0);
+
+        // forward adaptive run, recording the grid and all states
+        let mut rec = GridRecorder::new(0.0);
+        let mut states: Vec<State> = vec![s0.clone()];
+        struct Collect<'a> {
+            states: &'a mut Vec<State>,
+        }
+        impl mali_ode::solvers::integrate::StepObserver for Collect<'_> {
+            fn on_accept(&mut self, s: &mali_ode::solvers::integrate::AcceptedStep) {
+                self.states.push(s.after.clone());
+            }
+        }
+        let (s_end, _) = integrate(
+            &solver,
+            &dynamics,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::adaptive(1e-2, 1e-4),
+            &ErrorNorm::Full,
+            &mut Collect {
+                states: &mut states,
+            },
+        )
+        .unwrap();
+        // record grid with a second pass (deterministic)
+        let s0b = State {
+            z: states[0].z.clone(),
+            v: states[0].v.clone(),
+        };
+        let (_, _) = integrate(
+            &solver,
+            &dynamics,
+            0.0,
+            1.0,
+            s0b,
+            &StepMode::adaptive(1e-2, 1e-4),
+            &ErrorNorm::Full,
+            &mut rec,
+        )
+        .unwrap();
+
+        // walk backward from the end state
+        let mut cur = s_end;
+        let n = rec.times.len() - 1;
+        assert_eq!(states.len(), n + 1, "case {case}");
+        for i in (1..=n).rev() {
+            let h = rec.times[i] - rec.times[i - 1];
+            cur = solver.invert(&dynamics, rec.times[i], h, &cur).unwrap();
+            let expect = &states[i - 1];
+            for j in 0..d {
+                assert!(
+                    (cur.z[j] - expect.z[j]).abs() < 5e-3,
+                    "case {case} step {i} z[{j}]: {} vs {}",
+                    cur.z[j],
+                    expect.z[j]
+                );
+            }
+        }
+    }
+}
+
+/// ∀ random small MLPs: MALI's θ-gradient equals ACA's (exact agreement is
+/// the paper's central accuracy claim).
+#[test]
+fn prop_mali_equals_aca() {
+    let mut rng = Rng::new(303);
+    for case in 0..12 {
+        let d = 2 + rng.below(4);
+        let dynamics = MlpDynamics::new(d, 5, &mut rng);
+        let mut z0 = vec![0.0f32; d];
+        rng.fill_normal(&mut z0, 0.5);
+        let solver = solver_by_name("alf").unwrap();
+        let spec = if case % 2 == 0 {
+            IvpSpec::fixed(0.0, 0.7, 0.07)
+        } else {
+            IvpSpec::adaptive(0.0, 0.7, 1e-3, 1e-5)
+        };
+        let g_mali = by_name("mali")
+            .unwrap()
+            .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+            .unwrap();
+        let g_aca = by_name("aca")
+            .unwrap()
+            .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+            .unwrap();
+        let diff: f64 = g_mali
+            .grad_theta
+            .iter()
+            .zip(&g_aca.grad_theta)
+            .map(|(&a, &b)| ((a - b) as f64).abs())
+            .fold(0.0, f64::max);
+        let scale: f64 = g_aca
+            .grad_theta
+            .iter()
+            .map(|&x| (x as f64).abs())
+            .fold(1e-9, f64::max);
+        assert!(
+            diff / scale < 1e-2,
+            "case {case}: rel max diff {}",
+            diff / scale
+        );
+    }
+}
+
+/// ∀ tolerances: adaptive integration error decreases monotonically-ish with
+/// tighter tolerance, and the number of accepted steps grows.
+#[test]
+fn prop_tolerance_monotonicity() {
+    let toy = LinearToy::new(1.0, 1);
+    for solver_name in ["alf", "rk23", "dopri5", "heun-euler"] {
+        let solver = solver_by_name(solver_name).unwrap();
+        let mut last_steps = 0usize;
+        for (i, rtol) in [1e-2, 1e-4, 1e-6].iter().enumerate() {
+            let s0 = solver.init(&toy, 0.0, &[1.0]);
+            let (sf, st) = integrate(
+                &*solver,
+                &toy,
+                0.0,
+                3.0,
+                s0,
+                &StepMode::adaptive(*rtol, rtol * 1e-2),
+                &ErrorNorm::Full,
+                &mut (),
+            )
+            .unwrap();
+            let err = ((sf.z[0] as f64) - 3f64.exp()).abs() / 3f64.exp();
+            // loose absolute gate: relative error under ~100·rtol
+            assert!(
+                err < 100.0 * rtol,
+                "{solver_name} rtol {rtol}: rel err {err}"
+            );
+            if i > 0 {
+                assert!(
+                    st.n_accepted >= last_steps,
+                    "{solver_name}: steps should grow with tighter tol"
+                );
+            }
+            last_steps = st.n_accepted;
+        }
+    }
+}
+
+/// ∀ h: the fixed-step loop always lands exactly on T and the grid is
+/// uniform — required for MALI's reconstruction to be well-posed.
+#[test]
+fn prop_fixed_grid_exact() {
+    let toy = LinearToy::new(0.3, 2);
+    let solver = solver_by_name("alf").unwrap();
+    let mut rng = Rng::new(404);
+    for _ in 0..CASES {
+        let t1 = rng.range(0.3, 4.0);
+        let h = rng.range(0.01, 0.7);
+        let s0 = solver.init(&toy, 0.0, &[1.0, -1.0]);
+        let mut rec = GridRecorder::new(0.0);
+        integrate(
+            &*solver,
+            &toy,
+            0.0,
+            t1,
+            s0,
+            &StepMode::Fixed { h },
+            &ErrorNorm::Full,
+            &mut rec,
+        )
+        .unwrap();
+        assert!((rec.times.last().unwrap() - t1).abs() < 1e-9);
+        let n = rec.times.len() - 1;
+        let hs = t1 / n as f64;
+        for (i, w) in rec.times.windows(2).enumerate() {
+            assert!(
+                ((w[1] - w[0]) - hs).abs() < 1e-9,
+                "step {i}: {} vs {hs}",
+                w[1] - w[0]
+            );
+        }
+    }
+}
+
+/// Damping sweep: for every η ∈ (0.5, 1] the one-step error of damped ALF
+/// on the toy problem stays bounded and the roundtrip property holds; at
+/// η = 1 the error is smallest in the asymptotic regime (2nd vs 1st order).
+#[test]
+fn prop_damped_alf_error_ordering() {
+    let toy = LinearToy::new(1.0, 1);
+    let h = 0.02;
+    let mut errs = Vec::new();
+    for &eta in &[1.0, 0.9, 0.8, 0.7, 0.6] {
+        let solver = AlfSolver::new(eta);
+        let s0 = solver.init(&toy, 0.0, &[1.0]);
+        let (sf, _) = integrate(
+            &solver,
+            &toy,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::Fixed { h },
+            &ErrorNorm::Full,
+            &mut (),
+        )
+        .unwrap();
+        errs.push(((sf.z[0] as f64) - 1f64.exp()).abs());
+    }
+    // η = 1 (second order) should beat the damped (first order) variants at
+    // this small h
+    for (i, &e) in errs.iter().enumerate().skip(1) {
+        assert!(
+            errs[0] <= e,
+            "η=1 err {} should be ≤ damped err {} (idx {i})",
+            errs[0],
+            e
+        );
+    }
+}
