@@ -50,14 +50,23 @@ fn main() -> anyhow::Result<()> {
     println!("  max relative gradient error = {max_rel:.2e}");
 
     // ---- 2. the same protocol through an AOT-compiled HLO graph ----------
-    let engine = Rc::new(Engine::from_env()?);
-    let mut hlo = HloDynamics::new(engine, "toy")?;
-    hlo.set_params(&[alpha as f32]);
-    let tracker = MemTracker::new();
-    let res_hlo = mali.grad(&hlo, &*solver, &spec, &z0, &SquareLoss, tracker)?;
-    println!("\nsame solve via the PJRT runtime (artifacts/toy.*.hlo.txt):");
-    println!("  dL/dz0 (MALI, HLO)  = {:?}", &res_hlo.grad_z0);
-    println!("  dL/dα  (MALI, HLO)  = {:.5}", res_hlo.grad_theta[0]);
+    // Optional: needs the AOT artifacts and a PJRT runtime (the offline
+    // build stubs PJRT — see DESIGN.md §2); the native path above is the
+    // complete MALI demonstration either way.
+    match Engine::from_env() {
+        Ok(engine) => {
+            let mut hlo = HloDynamics::new(Rc::new(engine), "toy")?;
+            hlo.set_params(&[alpha as f32]);
+            let tracker = MemTracker::new();
+            let res_hlo = mali.grad(&hlo, &*solver, &spec, &z0, &SquareLoss, tracker)?;
+            println!("\nsame solve via the PJRT runtime (artifacts/toy.*.hlo.txt):");
+            println!("  dL/dz0 (MALI, HLO)  = {:?}", &res_hlo.grad_z0);
+            println!("  dL/dα  (MALI, HLO)  = {:.5}", res_hlo.grad_theta[0]);
+        }
+        Err(e) => {
+            println!("\n[skipping the HLO/PJRT section: {e:#}]");
+        }
+    }
 
     // ---- 3. compare against the adjoint method's reverse error -----------
     let dopri5 = solver_by_name("dopri5")?;

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 /// Loss head: maps the terminal state to `(loss, ∂L/∂z_T)`.
 pub trait LossHead {
+    /// Evaluate the loss and its gradient w.r.t. the terminal state `z(T)`.
     fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>);
 }
 
@@ -55,13 +56,18 @@ impl LossHead for SquareLoss {
 /// Shared configuration of one gradient computation.
 #[derive(Debug, Clone)]
 pub struct IvpSpec {
+    /// Integration start time.
     pub t0: f64,
+    /// Integration end time (may be < `t0` for reverse-time solves).
     pub t1: f64,
+    /// Step-size policy (fixed or adaptive).
     pub mode: StepMode,
+    /// Error-norm selection for the adaptive controller.
     pub norm: ErrorNorm,
 }
 
 impl IvpSpec {
+    /// Fixed-step IVP over `[t0, t1]` with step magnitude `h`.
     pub fn fixed(t0: f64, t1: f64, h: f64) -> IvpSpec {
         IvpSpec {
             t0,
@@ -71,6 +77,7 @@ impl IvpSpec {
         }
     }
 
+    /// Adaptive-step IVP over `[t0, t1]` with the given tolerances.
     pub fn adaptive(t0: f64, t1: f64, rtol: f64, atol: f64) -> IvpSpec {
         IvpSpec {
             t0,
@@ -85,6 +92,7 @@ impl IvpSpec {
 /// empirical side of paper Table 1.
 #[derive(Debug, Clone, Default)]
 pub struct GradStats {
+    /// Forward-pass integration statistics (accepted steps, trials, evals).
     pub fwd: IntStats,
     /// Backward-pass solver steps (reverse IVP steps for adjoint; local
     /// replays for the others).
@@ -104,18 +112,24 @@ pub struct GradStats {
 /// Result of one gradient computation.
 #[derive(Debug, Clone)]
 pub struct GradResult {
+    /// Loss value at the terminal state.
     pub loss: f64,
+    /// Terminal state `z(T)` of the forward solve.
     pub z_final: Vec<f32>,
+    /// `dL/dθ` over the dynamics parameters.
     pub grad_theta: Vec<f32>,
+    /// `dL/dz₀` over the initial state.
     pub grad_z0: Vec<f32>,
     /// Adjoint method only: its reconstruction ẑ(t₀) of the initial state —
     /// the reverse-time-trajectory error the paper analyses (Thm. 2.1).
     pub reconstructed_z0: Option<Vec<f32>>,
+    /// Measured cost statistics (paper Table 1, empirically).
     pub stats: GradStats,
 }
 
 /// One gradient-estimation protocol.
 pub trait GradMethod {
+    /// Stable identifier used in configs, CLI flags and report tables.
     fn name(&self) -> &'static str;
 
     /// Compute loss and gradients for the IVP.  `tracker` receives every

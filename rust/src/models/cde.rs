@@ -225,8 +225,8 @@ mod tests {
     use crate::grad::IvpSpec;
     use crate::solvers::by_name;
 
-    fn engine() -> Rc<Engine> {
-        Rc::new(Engine::from_env().expect("run `make artifacts`"))
+    fn engine() -> Option<Rc<Engine>> {
+        Engine::from_env_or_skip("model test")
     }
 
     #[test]
@@ -234,7 +234,7 @@ mod tests {
         // host spline derivative must agree with the device graph's
         // piecewise-cubic lookup: compare f eval via HLO against a host
         // computation using the same coefficients.
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(1);
         let mut m = NeuralCde::new(e, &mut rng).unwrap();
         let ds = speech::generate(&SpeechSpec::commands10(), m.batch, 2);
@@ -284,7 +284,7 @@ mod tests {
 
     #[test]
     fn cde_step_trains() {
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(3);
         let mut m = NeuralCde::new(e, &mut rng).unwrap();
         let ds = speech::generate(&SpeechSpec::commands10(), m.batch, 4);

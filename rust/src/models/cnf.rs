@@ -255,8 +255,8 @@ mod tests {
     use crate::grad::IvpSpec;
     use crate::solvers::by_name;
 
-    fn engine() -> Rc<Engine> {
-        Rc::new(Engine::from_env().expect("run `make artifacts`"))
+    fn engine() -> Option<Rc<Engine>> {
+        Engine::from_env_or_skip("model test")
     }
 
     fn cfg<'a>(
@@ -272,7 +272,7 @@ mod tests {
 
     #[test]
     fn terminal_loss_grad_matches_fd() {
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(1);
         let m = Ffjord::new(e, "cnf_density2d", &mut rng).unwrap();
         let sd = m.dim + 3;
@@ -296,7 +296,7 @@ mod tests {
 
     #[test]
     fn density2d_trains_and_bpd_drops() {
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(2);
         let mut m = Ffjord::new(e, "cnf_density2d", &mut rng).unwrap();
         m.lambda_k = 0.01;
@@ -322,7 +322,7 @@ mod tests {
 
     #[test]
     fn pixel_bpd_bookkeeping_in_sane_range() {
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(3);
         let mut m = Ffjord::new(e, "cnf_mnist8", &mut rng).unwrap();
         let ds = density::mnist8(m.batch, 4);
@@ -337,7 +337,7 @@ mod tests {
 
     #[test]
     fn sample_roundtrip_shapes() {
-        let e = engine();
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(5);
         let mut m = Ffjord::new(e, "cnf_density2d", &mut rng).unwrap();
         let solver = by_name("alf").unwrap();

@@ -266,9 +266,73 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// `None` (test skipped) only when the AOT artifacts have not been
+    /// built at all — the manifest is generated by `python/compile/aot.py`.
+    /// A *present but unloadable* manifest.json must fail loudly: catching
+    /// that is exactly what these tests are for.
+    fn manifest() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!(
+                "skipping manifest test: {} not built (run `make artifacts`)",
+                dir.join("manifest.json").display()
+            );
+            return None;
+        }
+        Some(Manifest::load(&dir).expect("artifacts/manifest.json exists but fails to load"))
+    }
+
+    /// Offline-runnable coverage of the parser: a miniature manifest with
+    /// one entry and one model round-trips through [`Manifest::load`].
+    #[test]
+    fn parses_minimal_manifest_from_disk() {
+        // pid-unique dir: concurrent `cargo test` runs must not collide
+        let dir = std::env::temp_dir()
+            .join(format!("mali_manifest_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "entries": {
+                "toy.f": {
+                  "file": "toy.f.hlo.txt",
+                  "doc": "dz = alpha*z",
+                  "inputs": [{"shape": [], "dtype": "float32"},
+                             {"shape": [4], "dtype": "float32"},
+                             {"shape": [1], "dtype": "float32"}],
+                  "outputs": [{"shape": [4], "dtype": "float32"}]
+                }
+              },
+              "models": {
+                "toy": {
+                  "d": 4,
+                  "components": {
+                    "f": {"params": [{"name": "alpha", "shape": [1], "init": "ones"}]}
+                  }
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("toy.f").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert!(e.inputs[0].is_scalar());
+        assert_eq!(e.outputs[0].len(), 4);
+        assert_eq!(m.hlo_path(e), dir.join("toy.f.hlo.txt"));
+        let model = m.model("toy").unwrap();
+        assert_eq!(model.dim("d").unwrap(), 4);
+        let comp = model.component("f").unwrap();
+        assert_eq!(comp.len, 1);
+        let mut rng = Rng::new(1);
+        assert_eq!(comp.init_params(&mut rng), vec![1.0]);
+        assert!(m.entry("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     #[test]
     fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = manifest() else { return };
         // every family exports the standard executable set
         for fam in ["toy", "img16", "img32", "latent", "cde"] {
             for suffix in ["f", "f_vjp", "step", "inv", "step_vjp"] {
@@ -287,7 +351,7 @@ mod tests {
 
     #[test]
     fn entry_shapes_are_consistent() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = manifest() else { return };
         let e = m.entry("toy.step").unwrap();
         // (z, v, t, h, eta, theta) → (z', v', err)
         assert_eq!(e.inputs.len(), 6);
@@ -300,7 +364,7 @@ mod tests {
 
     #[test]
     fn component_init_respects_scheme() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = manifest() else { return };
         let comp = m.model("toy").unwrap().component("f").unwrap();
         let mut rng = Rng::new(1);
         let theta = comp.init_params(&mut rng);
@@ -316,7 +380,7 @@ mod tests {
 
     #[test]
     fn missing_entry_is_an_error() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let Some(m) = manifest() else { return };
         assert!(m.entry("nope.f").is_err());
         assert!(m.model("nope").is_err());
     }

@@ -4,12 +4,16 @@
 //! implementation ([`HloDynamics`]).
 //!
 //! Python runs once at `make artifacts`; everything here is pure Rust over
-//! the `xla` crate's PJRT CPU client.  Reference wiring is documented in
-//! `/opt/xla-example/README.md`.
+//! the `xla` crate's PJRT CPU client.  In the offline build the PJRT
+//! bindings are provided by [`xla_stub`] (same surface, always-erroring
+//! constructors), so the whole layer compiles and everything above it is
+//! testable; [`Engine::new`] reports a descriptive error until the real
+//! `xla` crate is vendored (DESIGN.md §2).
 
 pub mod engine;
 pub mod hlo_dynamics;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::{Engine, EngineStats};
 pub use hlo_dynamics::HloDynamics;

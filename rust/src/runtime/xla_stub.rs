@@ -1,0 +1,160 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) crate surface that
+//! [`engine`](super::engine) compiles against.
+//!
+//! The build image does not vendor the `xla` crate or the `xla_extension`
+//! C++ runtime, so this module provides the exact API shape the engine
+//! uses — every constructor returns a descriptive error, making the L3
+//! coordinator fully compilable and testable while device execution is
+//! unavailable.  Code that needs a live runtime (engine/model tests, the
+//! HLO examples) detects the error and skips gracefully.
+//!
+//! Swapping back to the real backend is a two-line change: add the
+//! vendored `xla` crate to `Cargo.toml` and replace the
+//! `use super::xla_stub as xla;` import in `engine.rs` — no call-site
+//! changes (the signatures below mirror the real crate as used).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for every stubbed call; interoperates with `anyhow` via
+/// `std::error::Error`.
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError {
+        msg: format!(
+            "{what}: XLA/PJRT runtime unavailable — this build uses the offline \
+             stub (`runtime::xla_stub`); vendor the `xla` crate to enable \
+             device execution (DESIGN.md §2, docs/adr/001)"
+        ),
+    }
+}
+
+/// Stub of `xla::PjRtClient` (CPU PJRT client).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Real crate: create the CPU PJRT client.  Stub: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Real crate: compile an [`XlaComputation`] to a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    /// Real crate: copy a host `f32` buffer to a device buffer with the
+    /// given shape (`layout: None` = default row-major).
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _shape: &[usize],
+        _layout: Option<&[i64]>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Stub of `xla::HloModuleProto` (parsed HLO text).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Real crate: parse an `*.hlo.txt` file (reassigning instruction ids).
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Real crate: wrap a module proto as a compilable computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Real crate: execute with explicit device buffers; returns per-device
+    /// output buffer lists.
+    pub fn execute_b(&self, _buffers: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Stub of `xla::PjRtBuffer` (a device buffer).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Real crate: synchronously copy the device buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub of `xla::Literal` (a host tensor value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Real crate: destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Real crate: copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_calls_error_with_guidance() {
+        let err = PjRtClient::cpu().err().expect("stub must error");
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT runtime unavailable"), "{msg}");
+        assert!(msg.contains("xla_stub"), "{msg}");
+    }
+
+    #[test]
+    fn error_interops_with_anyhow() {
+        use anyhow::Context as _;
+        let r: anyhow::Result<PjRtClient> =
+            PjRtClient::cpu().context("PJRT CPU client");
+        let e = r.err().unwrap();
+        assert!(format!("{e:#}").starts_with("PJRT CPU client: "));
+    }
+}

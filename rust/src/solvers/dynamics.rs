@@ -2,9 +2,10 @@
 //! its vector-Jacobian products.
 //!
 //! Two families implement it:
-//! * [`NativeDynamics`] implementations in this file — closed-form or small
-//!   hand-differentiated models used by the toy experiment (paper Fig. 4)
-//!   and by the property-test suite;
+//! * native implementations in this file ([`LinearToy`], [`MlpDynamics`],
+//!   [`ComplexEigenDynamics`]) — closed-form or small hand-differentiated
+//!   models used by the toy experiment (paper Fig. 4) and by the
+//!   property-test suite;
 //! * `runtime::HloDynamics` — batched model graphs AOT-compiled from JAX
 //!   (L2) containing the Pallas kernels (L1), used by every real experiment.
 //!
@@ -20,11 +21,14 @@ use std::cell::Cell;
 /// computation-cost columns of the benches.
 #[derive(Debug, Default, Clone)]
 pub struct EvalCounters {
+    /// Number of `f(t, z)` evaluations since the last reset.
     pub f_evals: Cell<u64>,
+    /// Number of `f_vjp` evaluations since the last reset.
     pub vjp_evals: Cell<u64>,
 }
 
 impl EvalCounters {
+    /// Zero both counters (called at the start of each gradient pass).
     pub fn reset(&self) {
         self.f_evals.set(0);
         self.vjp_evals.set(0);
@@ -46,9 +50,13 @@ pub trait Dynamics {
     /// `(aᵀ ∂f/∂z, aᵀ ∂f/∂θ)`.
     fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>);
 
+    /// The flat parameter vector θ_f.
     fn params(&self) -> &[f32];
+
+    /// Replace θ_f (length must match [`Dynamics::param_dim`]).
     fn set_params(&mut self, theta: &[f32]);
 
+    /// Evaluation counters used by the Table-1 cost accounting.
     fn counters(&self) -> &EvalCounters;
 
     /// Number of "layers" N_f for Table-1 style accounting (1 for toy).

@@ -13,11 +13,14 @@ use dynamics::Dynamics;
 /// Solver state: plain `z` for RK methods, augmented `(z, v)` for ALF.
 #[derive(Debug, Clone, PartialEq)]
 pub struct State {
+    /// The ODE state `z(t)` (flattened batch × features).
     pub z: Vec<f32>,
+    /// ALF's auxiliary velocity `v ≈ dz/dt`; `None` for plain RK states.
     pub v: Option<Vec<f32>>,
 }
 
 impl State {
+    /// Wrap a plain (non-augmented) state vector.
     pub fn from_z(z: Vec<f32>) -> State {
         State { z, v: None }
     }
@@ -39,11 +42,14 @@ impl State {
 /// One numerical integration method ψ (paper notation): everything the
 /// adaptive loop and the four gradient protocols need from a solver.
 pub trait Solver {
+    /// Stable identifier used in configs, CLI flags and report tables.
     fn name(&self) -> &'static str;
 
     /// Classical order p (used for the step-size controller exponent).
     fn order(&self) -> usize;
 
+    /// Whether [`Solver::step`] returns an embedded error estimate —
+    /// required by the adaptive loop (`StepMode::Adaptive`).
     fn has_error_estimate(&self) -> bool;
 
     /// Build the initial solver state from `z₀` (ALF also computes
@@ -75,6 +81,8 @@ pub trait Solver {
         s_out: &State,
     ) -> Option<State>;
 
+    /// `true` iff [`Solver::invert`] is exact — the property MALI requires
+    /// of its training solver (paper §3.1).
     fn is_invertible(&self) -> bool {
         false
     }

