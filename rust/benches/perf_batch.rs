@@ -1,0 +1,161 @@
+//! perf_batch: batched-throughput baseline for the batch-first stack.
+//!
+//! Measures MALI steps/sec on the E1 toy problem (`dz/dt = αz`,
+//! `L = Σ z(T)²`) at B ∈ {1, 8, 64}, comparing
+//!
+//! * **loop**: B independent single-sample `grad` calls (the only
+//!   batching the pre-batch-first stack offered), vs
+//! * **batched**: one `grad_batched_pooled` call — vectorized `[B, N_z]`
+//!   row arithmetic, native dynamics sharded across `util::pool` workers
+//!   (`MALI_THREADS`).
+//!
+//! The acceptance bar for the refactor: batched MALI at B = 64 ≥ 4× the
+//! B = 1-style loop in steps/sec with `MALI_THREADS ≥ 4`.  A steps/sec
+//! figure here is forward *accepted row-steps* per wall second (each
+//! accepted step also pays its ψ⁻¹ + vjp on the backward pass, so the
+//! metric is proportional to end-to-end gradient throughput).
+//!
+//! Run: `cargo bench --bench perf_batch` (append `-- --full` for longer
+//! timing windows).
+
+use mali_ode::grad::batch_driver::grad_batched_pooled;
+use mali_ode::grad::mali::Mali;
+use mali_ode::grad::{GradMethod, IvpSpec, SquareLoss};
+use mali_ode::solvers::alf::AlfSolver;
+use mali_ode::solvers::batch::BatchSpec;
+use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::util::bench::{time_until, Table};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::pool;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let budget = if full { 2.0 } else { 0.4 };
+
+    // E1 toy setup: contracting scalar dynamics, N_z = 4 per sample.
+    let alpha = -0.3;
+    let n_z = 4usize;
+    let (t_end, h) = (5.0, 0.02);
+    let n_steps = (t_end / h_to_grid(h, t_end)).round() as usize; // per sample
+    let toy = LinearToy::new(alpha, n_z);
+    let solver = AlfSolver::new(1.0);
+    let method = Mali;
+    let spec = IvpSpec::fixed(0.0, t_end, h);
+
+    println!(
+        "perf_batch: MALI on E1 toy (n_z = {n_z}, {n_steps} steps/sample), {} worker threads",
+        pool::num_threads()
+    );
+    let mut table = Table::new(
+        "batched MALI throughput vs per-sample loop (fixed step)",
+        &["B", "loop steps/s", "batched steps/s", "speedup"],
+    );
+
+    let mut speedup_at_64 = 0.0f64;
+    for &bsz in &[1usize, 8, 64] {
+        let bspec = BatchSpec::new(bsz, n_z);
+        let mut z0 = Vec::with_capacity(bspec.flat_len());
+        for b in 0..bsz {
+            let scale = 1.0 + 0.01 * b as f32;
+            z0.extend([1.0 * scale, 0.5 * scale, -0.8 * scale, 1.5 * scale]);
+        }
+
+        // (a) the pre-refactor shape: one solo grad per sample
+        let t_loop = time_until(budget, || {
+            for b in 0..bsz {
+                let _ = method
+                    .grad(
+                        &toy,
+                        &solver,
+                        &spec,
+                        bspec.row(&z0, b),
+                        &SquareLoss,
+                        MemTracker::new(),
+                    )
+                    .unwrap();
+            }
+        });
+
+        // (b) one pooled batched call
+        let t_batch = time_until(budget, || {
+            let _ = grad_batched_pooled(
+                &method,
+                &toy,
+                &solver,
+                &spec,
+                &z0,
+                &bspec,
+                &SquareLoss,
+                MemTracker::new(),
+            )
+            .unwrap();
+        });
+
+        let row_steps = (bsz * n_steps) as f64;
+        let loop_sps = row_steps / t_loop.mean_s;
+        let batch_sps = row_steps / t_batch.mean_s;
+        let speedup = batch_sps / loop_sps;
+        if bsz == 64 {
+            speedup_at_64 = speedup;
+        }
+        table.row(&[
+            bsz.to_string(),
+            format!("{loop_sps:.0}"),
+            format!("{batch_sps:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nB=64 batched speedup over per-sample loop: {speedup_at_64:.2}x (target >= 4x with MALI_THREADS >= 4)"
+    );
+
+    // informative: adaptive mode, where the active mask lets early-converged
+    // rows stop consuming f evals
+    let aspec = IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-7);
+    let bspec = BatchSpec::new(64, n_z);
+    let mut z0 = Vec::with_capacity(bspec.flat_len());
+    for b in 0..64 {
+        let scale = 0.05 + 0.03 * b as f32; // widely spread → desynced grids
+        z0.extend([1.0 * scale, 0.5 * scale, -0.8 * scale, 1.5 * scale]);
+    }
+    let res = grad_batched_pooled(
+        &method,
+        &toy,
+        &solver,
+        &aspec,
+        &z0,
+        &bspec,
+        &SquareLoss,
+        MemTracker::new(),
+    )
+    .unwrap();
+    let t_adapt = time_until(budget, || {
+        let _ = grad_batched_pooled(
+            &method,
+            &toy,
+            &solver,
+            &aspec,
+            &z0,
+            &bspec,
+            &SquareLoss,
+            MemTracker::new(),
+        )
+        .unwrap();
+    });
+    let accepted: usize = res.per_sample_fwd.iter().map(|s| s.n_accepted).sum();
+    println!(
+        "adaptive B=64: {} accepted row-steps ({}..{} per sample), {:.0} steps/s",
+        accepted,
+        res.per_sample_fwd.iter().map(|s| s.n_accepted).min().unwrap_or(0),
+        res.per_sample_fwd.iter().map(|s| s.n_accepted).max().unwrap_or(0),
+        accepted as f64 / t_adapt.mean_s
+    );
+}
+
+/// The fixed-mode grid actually taken: n equal steps of |h'| ≤ h landing
+/// exactly on t_end (mirrors `integrate`'s grid construction).
+fn h_to_grid(h: f64, span: f64) -> f64 {
+    let n = (span.abs() / h).ceil().max(1.0);
+    span / n
+}

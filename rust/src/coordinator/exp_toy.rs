@@ -10,7 +10,9 @@
 //! * **App. Fig. 1**: damped-ALF A-stability regions.
 
 use super::Scale;
+use crate::grad::batch_driver::grad_batched;
 use crate::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::{LinearToy, MlpDynamics};
 use crate::solvers::stability::{ascii_region, stability_region};
 use crate::solvers::{by_name as solver_by_name, by_name_eta};
@@ -49,11 +51,17 @@ pub fn fig4(scale: Scale, _seed: u64) -> Result<Json> {
         let mut ez = Vec::new();
         let mut ea = Vec::new();
         for &t_end in &ts {
-            let toy = LinearToy::new(alpha, z0.len());
+            // batch-first path: each component of z0 is one sample of the
+            // scalar toy ODE (B = 4, n_z = 1) with its own step controller;
+            // dL/dα sums over the batch, matching Eq. 7's summed analytic
+            // gradient (analytic_grads reads only α and the passed z0).
+            let toy = LinearToy::new(alpha, 1);
             let (gz_ref, ga_ref) = toy.analytic_grads(&z0, t_end);
             let spec = IvpSpec::adaptive(0.0, t_end, rtol, atol);
+            let bspec = BatchSpec::new(z0.len(), 1);
             let tracker = MemTracker::new();
-            let res = m.grad(&toy, &*solver, &spec, &z0, &SquareLoss, tracker)?;
+            let res =
+                grad_batched(&*m, &toy, &*solver, &spec, &z0, &bspec, &SquareLoss, tracker)?;
             // relative error: the true gradients scale as e^{2αT}, so the
             // absolute error alone would just trace that envelope
             let ref_norm: f64 = gz_ref.iter().map(|&g| (g as f64).abs()).sum();
@@ -97,7 +105,16 @@ pub fn fig4(scale: Scale, _seed: u64) -> Result<Json> {
             rng.fill_uniform_sym(&mut z, 0.5);
             let spec = IvpSpec::adaptive(0.0, 5.0, tol, tol * 0.1);
             let tracker = MemTracker::new();
-            let res = m.grad(&mlp, &*solver, &spec, &z, &SquareLoss, tracker)?;
+            let res = grad_batched(
+                &*m,
+                &mlp,
+                &*solver,
+                &spec,
+                &z,
+                &BatchSpec::new(1, 16),
+                &SquareLoss,
+                tracker,
+            )?;
             mems.push(res.stats.peak_mem_bytes as f64);
             rows.push(Json::obj(vec![
                 ("method", Json::Str(method.into())),
@@ -136,18 +153,24 @@ pub fn fig4(scale: Scale, _seed: u64) -> Result<Json> {
     ))
 }
 
-/// Table 1: measured cost accounting per method on a fixed MLP problem,
-/// against the paper's formulas (N_z, N_f, N_t, m symbols measured live).
+/// Table 1: measured cost accounting per method on a mini-batch of MLP
+/// problems, against the paper's formulas (N_z, N_f, N_t, m symbols
+/// measured live).  Runs the batch-first path, so the memory law is
+/// checked with `N_z → B·N_z`: per-sample adaptive control gives each row
+/// its own `N_t`, and the table reports batch totals (`N_t` summed, `m`
+/// the batch mean, graph depth the longest per-sample chain).
 pub fn table1(scale: Scale, seed: u64) -> Result<Json> {
     let d = scale.pick(16, 64);
+    let batch = scale.pick(4, 8);
     let mut rng = crate::util::rng::Rng::new(seed);
     let mlp = MlpDynamics::new(d, 2 * d, &mut rng);
-    let mut z0 = vec![0.0f32; d];
+    let bspec = BatchSpec::new(batch, d);
+    let mut z0 = vec![0.0f32; bspec.flat_len()];
     rng.fill_uniform_sym(&mut z0, 0.5);
     let spec = IvpSpec::adaptive(0.0, 2.0, 1e-4, 1e-6);
 
     let mut table = Table::new(
-        "Table 1: empirical complexity per gradient method",
+        &format!("Table 1: empirical complexity per gradient method (B = {batch})"),
         &[
             "method", "f evals", "vjp evals", "N_t", "m", "peak mem", "graph depth",
         ],
@@ -160,7 +183,7 @@ pub fn table1(scale: Scale, seed: u64) -> Result<Json> {
         // order: ALF is order 2, so the non-MALI methods run Heun–Euler
         let solver = solver_by_name(if method == "mali" { "alf" } else { "heun-euler" })?;
         let tracker = MemTracker::new();
-        let res = m.grad(&mlp, &*solver, &spec, &z0, &SquareLoss, tracker)?;
+        let res = grad_batched(&*m, &mlp, &*solver, &spec, &z0, &bspec, &SquareLoss, tracker)?;
         let s = &res.stats;
         table.row(&[
             method.to_string(),
@@ -190,7 +213,13 @@ pub fn table1(scale: Scale, seed: u64) -> Result<Json> {
             && peak_by_method["aca"] > peak_by_method["mali"]
             && peak_by_method["adjoint"] <= peak_by_method["mali"]
     );
-    Ok(super::report::summary(rows, vec![("d", Json::Num(d as f64))]))
+    Ok(super::report::summary(
+        rows,
+        vec![
+            ("d", Json::Num(d as f64)),
+            ("batch", Json::Num(batch as f64)),
+        ],
+    ))
 }
 
 /// Appendix Fig. 1: damped-ALF stability-region areas + ASCII renders.
@@ -227,7 +256,7 @@ pub fn fig_a1(scale: Scale, _seed: u64) -> Result<Json> {
 }
 
 /// Damped-solver helper shared with Table 7: `alf` with explicit η.
-pub fn damped_solver(eta: f64) -> Result<Box<dyn crate::solvers::Solver>> {
+pub fn damped_solver(eta: f64) -> Result<Box<dyn crate::solvers::Solver + Send + Sync>> {
     by_name_eta("alf", eta)
 }
 

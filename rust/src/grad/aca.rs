@@ -10,9 +10,14 @@
 //! store grows linearly with the number of solver steps, which is what
 //! makes ImageNet-scale training infeasible for it (paper §4.2).
 
-use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use super::{
+    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+};
+use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
-use crate::solvers::integrate::{integrate, AcceptedStep, StepObserver};
+use crate::solvers::integrate::{
+    integrate, integrate_batch, AcceptedStep, BatchAcceptedStep, BatchStepObserver, StepObserver,
+};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -53,6 +58,114 @@ impl StepObserver for Checkpointer {
         self.steps
             .push((step.t, step.h, step.before.clone()));
     }
+}
+
+/// Batched checkpointer: one `(t, h, state-before)` list per sample — the
+/// `N_z(N_f + N_t)` store with `N_z → B·N_z` and per-sample `N_t`.
+struct BatchCheckpointer {
+    tracker: Arc<MemTracker>,
+    steps: Vec<Vec<(f64, f64, State)>>,
+    bufs: Vec<TrackedBuf>,
+}
+
+impl BatchCheckpointer {
+    fn new(tracker: Arc<MemTracker>, batch: usize) -> Self {
+        BatchCheckpointer {
+            tracker,
+            steps: vec![Vec::new(); batch],
+            bufs: Vec::new(),
+        }
+    }
+}
+
+impl BatchStepObserver for BatchCheckpointer {
+    fn on_accept(&mut self, step: &BatchAcceptedStep) {
+        let before = step.before_state();
+        self.bufs
+            .push(TrackedBuf::new(before.z.clone(), self.tracker.clone()));
+        if let Some(v) = &before.v {
+            self.bufs
+                .push(TrackedBuf::new(v.clone(), self.tracker.clone()));
+        }
+        self.steps[step.sample].push((step.t, step.h, before));
+    }
+}
+
+/// Shared by ACA and naive: replay the per-sample accepted steps backwards
+/// in lockstep (rows that run out of steps drop from the gathered
+/// sub-batch), accumulating the batch-summed θ-gradient into `grad_theta`
+/// and leaving the pulled-back cotangent in `a`.
+pub(super) fn replay_backward_batch(
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    steps: &[Vec<(f64, f64, State)>],
+    a: &mut BatchState,
+    grad_theta: &mut [f32],
+) {
+    let batch = steps.len();
+    let mut rem: Vec<usize> = steps.iter().map(|s| s.len()).collect();
+    loop {
+        let active: Vec<usize> = (0..batch).filter(|&b| rem[b] > 0).collect();
+        if active.is_empty() {
+            break;
+        }
+        let mut ts = Vec::with_capacity(active.len());
+        let mut hs = Vec::with_capacity(active.len());
+        let mut before = Vec::with_capacity(active.len());
+        for &b in &active {
+            let (t, h, s) = &steps[b][rem[b] - 1];
+            ts.push(*t);
+            hs.push(*h);
+            before.push(s);
+        }
+        let s_in_sub = BatchState::from_states(&before);
+        // skip the cotangent gather/scatter while every row is active
+        let full = active.len() == batch;
+        let (a_prev_sub, dth) = if full {
+            solver.step_vjp_batch(dynamics, &ts, &hs, &s_in_sub, a)
+        } else {
+            let a_sub = a.gather_rows(&active);
+            solver.step_vjp_batch(dynamics, &ts, &hs, &s_in_sub, &a_sub)
+        };
+        axpy(1.0, &dth, grad_theta);
+        if full {
+            *a = a_prev_sub;
+        } else {
+            a.scatter_rows(&a_prev_sub, &active);
+        }
+        for &b in &active {
+            rem[b] -= 1;
+        }
+    }
+}
+
+/// Shared by ACA and naive: the initialisation hop `v₀ = f(z₀, t₀)` for
+/// every row whose leftover `a_v(t₀)` carries cotangent (ALF only).
+pub(super) fn init_hop_batch(
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    a: &BatchState,
+    grad_z0: &mut [f32],
+    grad_theta: &mut [f32],
+) {
+    let Some(av) = &a.v else { return };
+    let hop: Vec<usize> = (0..bspec.batch)
+        .filter(|&b| bspec.row(&av.data, b).iter().any(|&x| x != 0.0))
+        .collect();
+    if hop.is_empty() {
+        return;
+    }
+    let sub = bspec.with_batch(hop.len());
+    let z_sub = bspec.gather(z0, &hop);
+    let av_sub = bspec.gather(&av.data, &hop);
+    let ts0 = vec![t0; hop.len()];
+    let (gz_sub, gth) = dynamics.f_vjp_batch(&ts0, &z_sub, &av_sub, &sub);
+    for (k, &b) in hop.iter().enumerate() {
+        axpy(1.0, sub.row(&gz_sub, k), bspec.row_mut(grad_z0, b));
+    }
+    axpy(1.0, &gth, grad_theta);
 }
 
 impl GradMethod for Aca {
@@ -122,6 +235,71 @@ impl GradMethod for Aca {
             grad_z0,
             reconstructed_z0: None,
             stats,
+        })
+    }
+
+    /// Batched ACA: per-sample checkpoints of the accepted steps (the
+    /// store grows as `B·N_z·N_t` — what makes large-scale training
+    /// infeasible for ACA, now visible at batch scale), then a lockstep
+    /// local replay over whichever rows still have checkpoints left.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        // ---- forward with per-sample checkpointing ---------------------
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut ckpt = BatchCheckpointer::new(tracker.clone(), bspec.batch);
+        let (s_end, fwd) = integrate_batch(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut ckpt,
+        )?;
+        let (losses, dl_dz) = loss.loss_grad_batch(&s_end.z.data, bspec);
+
+        // ---- backward: lockstep local replay ---------------------------
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::new(dl_dz, vec![bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        replay_backward_batch(dynamics, solver, &ckpt.steps, &mut a, &mut grad_theta);
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = ckpt.steps.iter().map(|s| s.len()).sum();
+        let n_max: usize = ckpt.steps.iter().map(|s| s.len()).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: losses.iter().sum(),
+            losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
         })
     }
 }

@@ -18,10 +18,14 @@
 //! from the adaptive error norm, which loosens step-size control where it
 //! does not matter and speeds the backward solve.
 
-use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use super::{
+    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+};
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::{Dynamics, EvalCounters};
-use crate::solvers::integrate::{integrate, ErrorNorm, StepMode};
+use crate::solvers::integrate::{integrate, integrate_batch, ErrorNorm, StepMode};
 use crate::solvers::Solver;
+use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
 use anyhow::Result;
 use std::sync::Arc;
@@ -29,6 +33,21 @@ use std::sync::Arc;
 #[derive(Default)]
 pub struct Adjoint {
     pub seminorm: bool,
+}
+
+/// One augmented-RHS row `[dz, −aᵀ∂f/∂z, −aᵀ∂f/∂θ]` composed from the
+/// base dynamics — shared by the solo and batched augmented systems so
+/// the composition cannot drift between them.
+fn augmented_rhs(base: &dyn Dynamics, d: usize, n_aug: usize, t: f64, y: &[f32]) -> Vec<f32> {
+    let (z, rest) = y.split_at(d);
+    let (a, _g) = rest.split_at(d);
+    let dz = base.f(t, z);
+    let (az, ath) = base.f_vjp(t, z, a);
+    let mut out = Vec::with_capacity(n_aug);
+    out.extend_from_slice(&dz);
+    out.extend(az.iter().map(|&x| -x));
+    out.extend(ath.iter().map(|&x| -x));
+    out
 }
 
 /// `[z, a, g_θ]` augmented reverse dynamics composed from the base model's
@@ -63,15 +82,99 @@ impl Dynamics for AugmentedAdjoint<'_> {
     }
 
     fn f(&self, t: f64, y: &[f32]) -> Vec<f32> {
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
-        let (z, rest) = y.split_at(self.d);
-        let (a, _g) = rest.split_at(self.d);
-        let dz = self.base.f(t, z);
-        let (az, ath) = self.base.f_vjp(t, z, a);
-        let mut out = Vec::with_capacity(self.dim());
-        out.extend_from_slice(&dz);
-        out.extend(az.iter().map(|&x| -x));
-        out.extend(ath.iter().map(|&x| -x));
+        self.counters.f_evals.add(1);
+        augmented_rhs(self.base, self.d, self.dim(), t, y)
+    }
+
+    fn f_vjp(&self, _t: f64, _z: &[f32], _a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        unimplemented!(
+            "second-order vjp through the adjoint's augmented dynamics is \
+             never required (the adjoint method does not backprop through \
+             its own reverse solve)"
+        )
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.empty
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {}
+
+    fn counters(&self) -> &EvalCounters {
+        &self.counters
+    }
+
+    fn depth_nf(&self) -> usize {
+        self.base.depth_nf()
+    }
+}
+
+/// Batched `[z, a, g_θ]` reverse dynamics: each row of width `2d + p` is
+/// one sample's augmented state.  `f_batch` gathers the `z` and `a` blocks
+/// of all rows and makes one batched `f` + one batched per-row vjp call on
+/// the base dynamics — each sample integrates its own `g_θ` block, so the
+/// per-row θ-cotangent variant is required.
+struct BatchAugmentedAdjoint<'a> {
+    base: &'a dyn Dynamics,
+    d: usize,
+    p: usize,
+    counters: EvalCounters,
+    empty: Vec<f32>,
+}
+
+impl<'a> BatchAugmentedAdjoint<'a> {
+    fn new(base: &'a dyn Dynamics, d: usize) -> Self {
+        BatchAugmentedAdjoint {
+            d,
+            p: base.param_dim(),
+            base,
+            counters: EvalCounters::default(),
+            empty: Vec::new(),
+        }
+    }
+
+    fn n_aug(&self) -> usize {
+        2 * self.d + self.p
+    }
+}
+
+impl Dynamics for BatchAugmentedAdjoint<'_> {
+    fn dim(&self) -> usize {
+        self.n_aug()
+    }
+
+    fn param_dim(&self) -> usize {
+        0
+    }
+
+    /// Single-row augmented RHS — the same shared composition as the solo
+    /// `AugmentedAdjoint::f`, used by per-row fallbacks.
+    fn f(&self, t: f64, y: &[f32]) -> Vec<f32> {
+        self.counters.f_evals.add(1);
+        augmented_rhs(self.base, self.d, self.n_aug(), t, y)
+    }
+
+    fn f_batch(&self, ts: &[f64], y: &[f32], spec: &BatchSpec) -> Vec<f32> {
+        debug_assert_eq!(spec.n_z, self.n_aug());
+        self.counters.f_evals.add(spec.batch as u64);
+        let (d, p) = (self.d, self.p);
+        let base_spec = BatchSpec::new(spec.batch, d);
+        // gather the z and a blocks of every row
+        let mut z_rows = Vec::with_capacity(spec.batch * d);
+        let mut a_rows = Vec::with_capacity(spec.batch * d);
+        for b in 0..spec.batch {
+            let row = spec.row(y, b);
+            z_rows.extend_from_slice(&row[..d]);
+            a_rows.extend_from_slice(&row[d..2 * d]);
+        }
+        let dz = self.base.f_batch(ts, &z_rows, &base_spec);
+        let (az, ath_rows) = self.base.f_vjp_batch_rows(ts, &z_rows, &a_rows, &base_spec);
+        let mut out = Vec::with_capacity(spec.flat_len());
+        for b in 0..spec.batch {
+            out.extend_from_slice(base_spec.row(&dz, b));
+            out.extend(base_spec.row(&az, b).iter().map(|&x| -x));
+            out.extend(ath_rows[b * p..(b + 1) * p].iter().map(|&x| -x));
+        }
         out
     }
 
@@ -133,7 +236,7 @@ impl GradMethod for Adjoint {
         let mut y = Vec::with_capacity(2 * d + p);
         y.extend_from_slice(&kept.data);
         y.extend_from_slice(&dl_dz);
-        y.extend(std::iter::repeat(0.0f32).take(p));
+        y.resize(y.len() + p, 0.0);
 
         // Seminorm: mask the g_θ block out of the error norm.
         let norm = if self.seminorm {
@@ -178,6 +281,109 @@ impl GradMethod for Adjoint {
             grad_z0,
             reconstructed_z0: Some(reconstructed_z0),
             stats,
+        })
+    }
+
+    /// Batched adjoint: one forward batched solve (trajectory discarded),
+    /// then one batched reverse-time solve of the per-row `[z, a, g_θ]`
+    /// augmented system under per-sample step control — every row carries
+    /// its own `g_θ` block, summed into the mini-batch θ-gradient at the
+    /// end.  Memory stays `B·N_z·N_f`, independent of step count.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+        let (d, p) = (bspec.n_z, dynamics.param_dim());
+
+        // ---- forward: discard trajectory, keep z(T) rows only ----------
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let (s_end, fwd) = integrate_batch(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut (),
+        )?;
+        let kept = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
+        let (losses, dl_dz) = loss.loss_grad_batch(&kept.data, bspec);
+
+        // ---- backward: batched reverse-time augmented IVP --------------
+        let aug = BatchAugmentedAdjoint::new(dynamics, d);
+        let n_aug = 2 * d + p;
+        let aug_spec = BatchSpec::new(bspec.batch, n_aug);
+        let mut y = Vec::with_capacity(aug_spec.flat_len());
+        for b in 0..bspec.batch {
+            y.extend_from_slice(bspec.row(&kept.data, b));
+            y.extend_from_slice(bspec.row(&dl_dz, b));
+            y.resize(y.len() + p, 0.0);
+        }
+
+        // Seminorm: mask the g_θ block out of each row's error norm.
+        let norm = if self.seminorm {
+            let mut mask = vec![true; n_aug];
+            for m in mask.iter_mut().skip(2 * d) {
+                *m = false;
+            }
+            ErrorNorm::Semi(mask)
+        } else {
+            match &spec.norm {
+                ErrorNorm::Full => ErrorNorm::Full,
+                ErrorNorm::Semi(m) => {
+                    // extend a forward-row mask to the augmented row layout
+                    let mut mask = vec![true; n_aug];
+                    mask[..d].copy_from_slice(m);
+                    ErrorNorm::Semi(mask)
+                }
+            }
+        };
+        let ys0 = solver.init_batch(&aug, spec.t1, &y, &aug_spec);
+        let (y_end, bwd) = integrate_batch(
+            solver,
+            &aug,
+            spec.t1,
+            spec.t0,
+            ys0,
+            &reverse_mode(&spec.mode),
+            &norm,
+            &mut (),
+        )?;
+
+        // unpack rows: ẑ(t₀) | dL/dz₀ | g_θ (summed over the batch)
+        let mut reconstructed = Vec::with_capacity(bspec.flat_len());
+        let mut grad_z0 = Vec::with_capacity(bspec.flat_len());
+        let mut grad_theta = vec![0.0f32; p];
+        for b in 0..bspec.batch {
+            let row = aug_spec.row(&y_end.z.data, b);
+            reconstructed.extend_from_slice(&row[..d]);
+            grad_z0.extend_from_slice(&row[d..2 * d]);
+            axpy(1.0, &row[2 * d..], &mut grad_theta);
+        }
+
+        let stats = GradStats {
+            bwd_steps: bwd.n_accepted_total(),
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * bwd.n_accepted_max().max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: losses.iter().sum(),
+            losses,
+            z_final: kept.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(reconstructed),
+            stats,
+            per_sample_fwd: fwd.per_sample,
         })
     }
 }

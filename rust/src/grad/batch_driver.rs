@@ -1,0 +1,291 @@
+//! Mini-batch gradient dispatch: one entry point that routes a `[B, N_z]`
+//! batch to the right execution strategy.
+//!
+//! Dispatch rule (DESIGN.md §3):
+//!
+//! * **device-fused** — when the dynamics is a device-compiled batched
+//!   graph (`HloDynamics`, [`Dynamics::is_device_batched`]), the batch
+//!   dimension is baked into the executable, so the driver keeps **one
+//!   fused device call** per evaluation: the flat `[B·N_z]` buffer runs
+//!   through the single-trajectory [`GradMethod::grad`] under one shared
+//!   step controller, exactly as the AOT graphs were lowered.
+//! * **native-shard** — host-only dynamics (`LinearToy`, `MlpDynamics`, …)
+//!   have no fixed batch, so [`grad_batched_pooled`] shards the rows into
+//!   contiguous sub-batches across `util::pool` workers, each running the
+//!   truly batched [`GradMethod::grad_batch`] (vectorized rows, per-sample
+//!   adaptive control with an active mask).
+//!
+//! Per-sample results are bit-compatible with solo runs in both serial
+//! paths; see `tests/batch_equivalence.rs`.
+
+use super::{BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use crate::solvers::batch::BatchSpec;
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::Solver;
+use crate::util::mem::MemTracker;
+use crate::util::pool;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Adapter: view a [`BatchLossHead`] evaluated at a fixed spec as a
+/// scalar-total [`LossHead`].  With a `[1, n_z]` spec this is the per-row
+/// head the single-sample fallback of [`GradMethod::grad_batch`] feeds to
+/// [`GradMethod::grad`]; with the full `[B, n_z]` spec it is the
+/// device-fused head (the whole flat buffer as one "trajectory").
+pub struct SummedLoss<'a> {
+    pub inner: &'a dyn BatchLossHead,
+    pub spec: BatchSpec,
+}
+
+impl LossHead for SummedLoss<'_> {
+    fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>) {
+        let (losses, grad) = self.inner.loss_grad_batch(z_t, &self.spec);
+        (losses.iter().sum(), grad)
+    }
+}
+
+/// Merge per-row [`GradResult`]s (the single-sample fallback) into one
+/// [`BatchGradResult`].
+pub fn merge_row_results(
+    rows: Vec<GradResult>,
+    bspec: &BatchSpec,
+    tracker: &Arc<MemTracker>,
+) -> BatchGradResult {
+    debug_assert_eq!(rows.len(), bspec.batch);
+    let p = rows.first().map(|r| r.grad_theta.len()).unwrap_or(0);
+    let mut out = BatchGradResult {
+        batch: bspec.batch,
+        n_z: bspec.n_z,
+        loss: 0.0,
+        losses: Vec::with_capacity(bspec.batch),
+        z_final: Vec::with_capacity(bspec.flat_len()),
+        grad_theta: vec![0.0f32; p],
+        grad_z0: Vec::with_capacity(bspec.flat_len()),
+        reconstructed_z0: rows.iter().all(|r| r.reconstructed_z0.is_some()).then(Vec::new),
+        stats: GradStats::default(),
+        per_sample_fwd: Vec::with_capacity(bspec.batch),
+    };
+    for r in rows {
+        out.loss += r.loss;
+        out.losses.push(r.loss);
+        out.z_final.extend_from_slice(&r.z_final);
+        crate::tensor::axpy(1.0, &r.grad_theta, &mut out.grad_theta);
+        out.grad_z0.extend_from_slice(&r.grad_z0);
+        if let (Some(acc), Some(rec)) = (&mut out.reconstructed_z0, &r.reconstructed_z0) {
+            acc.extend_from_slice(rec);
+        }
+        out.stats.bwd_steps += r.stats.bwd_steps;
+        out.stats.f_evals += r.stats.f_evals;
+        out.stats.vjp_evals += r.stats.vjp_evals;
+        out.stats.graph_depth = out.stats.graph_depth.max(r.stats.graph_depth);
+        out.stats.fwd.n_accepted += r.stats.fwd.n_accepted;
+        out.stats.fwd.n_trials += r.stats.fwd.n_trials;
+        out.stats.fwd.f_evals += r.stats.fwd.f_evals;
+        out.per_sample_fwd.push(r.stats.fwd);
+    }
+    out.stats.peak_mem_bytes = tracker.peak_bytes();
+    out
+}
+
+/// Wrap a flat single-trajectory result (the device-fused path) into the
+/// batch container.  Per-sample losses/stats are not separable there: the
+/// loss vector carries one total and `per_sample_fwd` is empty.
+fn from_fused(res: GradResult, bspec: &BatchSpec) -> BatchGradResult {
+    BatchGradResult {
+        batch: bspec.batch,
+        n_z: bspec.n_z,
+        loss: res.loss,
+        losses: vec![res.loss],
+        z_final: res.z_final,
+        grad_theta: res.grad_theta,
+        grad_z0: res.grad_z0,
+        reconstructed_z0: res.reconstructed_z0,
+        stats: res.stats,
+        per_sample_fwd: Vec::new(),
+    }
+}
+
+/// Batched gradients with the device-fused vs native dispatch applied.
+///
+/// Serial on the host side: native dynamics run one (vectorized) batched
+/// pass on the caller thread — per-sample results and eval counts are
+/// exact.  Use [`grad_batched_pooled`] to additionally shard native
+/// batches across threads.
+#[allow(clippy::too_many_arguments)]
+pub fn grad_batched(
+    method: &dyn GradMethod,
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    spec: &IvpSpec,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    loss: &dyn BatchLossHead,
+    tracker: Arc<MemTracker>,
+) -> Result<BatchGradResult> {
+    ensure!(
+        z0.len() == bspec.flat_len(),
+        "z0 has {} elements, want [{}, {}] = {}",
+        z0.len(),
+        bspec.batch,
+        bspec.n_z,
+        bspec.flat_len()
+    );
+    if dynamics.is_device_batched() {
+        ensure!(
+            dynamics.dim() == bspec.flat_len(),
+            "device-batched dynamics spans {} states but the batch is [{}, {}]",
+            dynamics.dim(),
+            bspec.batch,
+            bspec.n_z
+        );
+        let fused = SummedLoss { inner: loss, spec: *bspec };
+        let res = method.grad(dynamics, solver, spec, z0, &fused, tracker)?;
+        Ok(from_fused(res, bspec))
+    } else {
+        method.grad_batch(dynamics, solver, spec, z0, bspec, loss, tracker)
+    }
+}
+
+/// Like [`grad_batched`], but native dynamics are sharded into contiguous
+/// row blocks across `util::pool` workers (`MALI_THREADS` controls the
+/// count) — the training-throughput path for host-only dynamics.
+///
+/// Requires a separable (per-row) loss head.  Aggregate `f`/vjp counts
+/// are measured around the whole pooled pass (the per-shard deltas of a
+/// shared dynamics interleave, so `stats.fwd.f_evals` is folded into the
+/// global `stats.f_evals` rather than split per phase).
+#[allow(clippy::too_many_arguments)]
+pub fn grad_batched_pooled(
+    method: &(dyn GradMethod + Sync),
+    dynamics: &(dyn Dynamics + Sync),
+    solver: &(dyn Solver + Sync),
+    spec: &IvpSpec,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    loss: &(dyn BatchLossHead + Sync),
+    tracker: Arc<MemTracker>,
+) -> Result<BatchGradResult> {
+    let workers = pool::num_threads().min(bspec.batch);
+    if dynamics.is_device_batched() || workers <= 1 {
+        return grad_batched(method, dynamics, solver, spec, z0, bspec, loss, tracker);
+    }
+    ensure!(
+        loss.separable(),
+        "pooled batching requires a separable (per-row) loss head; this head \
+         couples rows and can only run serially or device-fused"
+    );
+    ensure!(
+        z0.len() == bspec.flat_len(),
+        "z0 has {} elements, want [{}, {}]",
+        z0.len(),
+        bspec.batch,
+        bspec.n_z
+    );
+    let per = bspec.batch.div_ceil(workers);
+    let shards: Vec<(usize, usize)> = (0..workers)
+        .map(|w| (w * per, ((w + 1) * per).min(bspec.batch)))
+        .filter(|(s, e)| e > s)
+        .collect();
+    let c = dynamics.counters();
+    let f0 = c.f_evals.get();
+    let v0 = c.vjp_evals.get();
+    let results: Vec<Result<BatchGradResult>> = pool::par_map(&shards, |&(s, e)| {
+        let sub = BatchSpec::new(e - s, bspec.n_z);
+        method.grad_batch(
+            dynamics,
+            solver,
+            spec,
+            &z0[s * bspec.n_z..e * bspec.n_z],
+            &sub,
+            loss,
+            tracker.clone(),
+        )
+    });
+    let mut parts = Vec::with_capacity(results.len());
+    for r in results {
+        parts.push(r?);
+    }
+
+    // concatenate shard rows in order; θ and counts sum across shards
+    let mut out = parts.remove(0);
+    for part in parts {
+        out.loss += part.loss;
+        out.losses.extend(part.losses);
+        out.z_final.extend(part.z_final);
+        crate::tensor::axpy(1.0, &part.grad_theta, &mut out.grad_theta);
+        out.grad_z0.extend(part.grad_z0);
+        match (&mut out.reconstructed_z0, part.reconstructed_z0) {
+            (Some(acc), Some(rec)) => acc.extend(rec),
+            (opt, _) => *opt = None,
+        }
+        out.stats.bwd_steps += part.stats.bwd_steps;
+        out.stats.graph_depth = out.stats.graph_depth.max(part.stats.graph_depth);
+        out.stats.fwd.n_accepted += part.stats.fwd.n_accepted;
+        out.stats.fwd.n_trials += part.stats.fwd.n_trials;
+        out.per_sample_fwd.extend(part.per_sample_fwd);
+    }
+    out.batch = bspec.batch;
+    // exact totals from the global counter deltas (shard-local deltas
+    // interleave under concurrency; saturating in case a third-party
+    // method's grad_batch resets the counters mid-flight)
+    out.stats.f_evals = c.f_evals.get().saturating_sub(f0);
+    out.stats.vjp_evals = c.vjp_evals.get().saturating_sub(v0);
+    out.stats.fwd.f_evals = 0;
+    out.stats.peak_mem_bytes = tracker.peak_bytes();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::{by_name, SquareLoss};
+    use crate::solvers::by_name as solver_by_name;
+    use crate::solvers::dynamics::LinearToy;
+
+    /// Pooled sharding must agree with the serial batched path.
+    #[test]
+    fn pooled_matches_serial() {
+        let toy = LinearToy::new(-0.4, 1);
+        let bspec = BatchSpec::new(6, 1);
+        let z0: Vec<f32> = vec![1.0, -0.5, 2.0, 0.25, -1.5, 0.8];
+        let solver = solver_by_name("alf").unwrap();
+        let spec = IvpSpec::fixed(0.0, 1.0, 0.1);
+        let method = by_name("mali").unwrap();
+        let serial = grad_batched(
+            &*method,
+            &toy,
+            &*solver,
+            &spec,
+            &z0,
+            &bspec,
+            &SquareLoss,
+            MemTracker::new(),
+        )
+        .unwrap();
+        let pooled = grad_batched_pooled(
+            &*method,
+            &toy,
+            &*solver,
+            &spec,
+            &z0,
+            &bspec,
+            &SquareLoss,
+            MemTracker::new(),
+        )
+        .unwrap();
+        assert_eq!(pooled.losses.len(), 6);
+        for b in 0..6 {
+            assert!(
+                (pooled.losses[b] - serial.losses[b]).abs() < 1e-12,
+                "loss row {b}"
+            );
+            assert_eq!(pooled.grad_z0[b], serial.grad_z0[b], "grad_z0 row {b}");
+        }
+        assert!((pooled.grad_theta[0] - serial.grad_theta[0]).abs() < 1e-4);
+        assert_eq!(pooled.stats.f_evals, serial.stats.f_evals);
+        assert_eq!(
+            pooled.stats.fwd.n_accepted,
+            serial.stats.fwd.n_accepted
+        );
+    }
+}

@@ -19,9 +19,12 @@
 //!   final `f` too — required for `dL/dz₀` (the FGSM experiments) to match
 //!   finite differences exactly.
 
-use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use super::{
+    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+};
+use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
-use crate::solvers::integrate::{integrate, GridRecorder};
+use crate::solvers::integrate::{integrate, integrate_batch, BatchGridRecorder, GridRecorder};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -121,6 +124,124 @@ impl GradMethod for Mali {
             grad_z0,
             reconstructed_z0: Some(cur.z),
             stats,
+        })
+    }
+
+    /// Batched MALI (Algo. 4 over `[B, N_z]` rows): the forward pass keeps
+    /// only the flat end state plus one accepted grid *per sample*
+    /// (per-sample adaptive control desynchronizes the grids); the
+    /// backward pass sweeps ψ⁻¹ in lockstep over whichever rows still have
+    /// steps left, so retained memory stays `B·N_z(N_f + 1)` — the Table-1
+    /// law with `N_z → B·N_z` — while each row's reconstruction equals its
+    /// solo run to float roundoff.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        ensure!(
+            solver.is_invertible(),
+            "MALI requires an invertible solver (ALF); '{}' has no ψ⁻¹",
+            solver.name()
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        // ---- forward: end state + per-sample accepted grids ------------
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut rec = BatchGridRecorder::new(spec.t0, bspec.batch);
+        let (s_end, fwd) = integrate_batch(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut rec,
+        )?;
+        let kept_z = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
+        let kept_v = TrackedBuf::new(
+            s_end.v.as_ref().expect("ALF state carries v").data.clone(),
+            tracker.clone(),
+        );
+
+        let (losses, dl_dz) = loss.loss_grad_batch(&kept_z.data, bspec);
+
+        // ---- backward: lockstep ψ⁻¹ sweep over the still-remaining rows
+        let mut cur = BatchState::from_flat_zv(kept_z.data.clone(), kept_v.data.clone(), *bspec);
+        let mut a = BatchState::from_flat_zv(dl_dz, vec![0.0f32; bspec.flat_len()], *bspec);
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut rem: Vec<usize> = rec.times.iter().map(|t| t.len() - 1).collect();
+        loop {
+            let active: Vec<usize> = (0..bspec.batch).filter(|&b| rem[b] > 0).collect();
+            if active.is_empty() {
+                break;
+            }
+            let ts_out: Vec<f64> = active.iter().map(|&b| rec.times[b][rem[b]]).collect();
+            let hs: Vec<f64> = active
+                .iter()
+                .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1])
+                .collect();
+            // skip the gather/scatter copies while no row has dropped out
+            // (always, under fixed stepping — the benchmarked hot path)
+            let full = active.len() == bspec.batch;
+            let (prev_sub, a_prev_sub, dth) = if full {
+                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur, &a)
+            } else {
+                let cur_sub = cur.gather_rows(&active);
+                let a_sub = a.gather_rows(&active);
+                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
+            }
+            .expect("invertible solver");
+            axpy(1.0, &dth, &mut grad_theta);
+            if full {
+                cur = prev_sub;
+                a = a_prev_sub;
+            } else {
+                cur.scatter_rows(&prev_sub, &active);
+                a.scatter_rows(&a_prev_sub, &active);
+            }
+            for &b in &active {
+                rem[b] -= 1;
+            }
+        }
+
+        // final hop through v₀ = f(z₀, t₀), only for rows whose a_v(t₀)
+        // carries cotangent — shared with ACA/naive, here evaluated at the
+        // ψ⁻¹-reconstructed initial states
+        let mut grad_z0 = a.z.data.clone();
+        super::aca::init_hop_batch(
+            dynamics,
+            spec.t0,
+            &cur.z.data,
+            bspec,
+            &a,
+            &mut grad_z0,
+            &mut grad_theta,
+        );
+
+        let n_total: usize = rec.times.iter().map(|t| t.len() - 1).sum();
+        let n_max: usize = rec.times.iter().map(|t| t.len() - 1).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: losses.iter().sum(),
+            losses,
+            z_final: kept_z.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(cur.z.data),
+            stats,
+            per_sample_fwd: fwd.per_sample,
         })
     }
 }

@@ -17,9 +17,11 @@
 
 pub mod aca;
 pub mod adjoint;
+pub mod batch_driver;
 pub mod mali;
 pub mod naive;
 
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
 use crate::solvers::integrate::{ErrorNorm, IntStats, StepMode};
 use crate::solvers::Solver;
@@ -50,6 +52,41 @@ impl LossHead for SquareLoss {
         let loss: f64 = z_t.iter().map(|&z| (z as f64) * (z as f64)).sum();
         let grad = z_t.iter().map(|&z| 2.0 * z).collect();
         (loss, grad)
+    }
+}
+
+/// Loss head over a `[B, N_z]` batch of terminal states.
+///
+/// Returns per-sample losses plus the flat `dL/dz_T` buffer.  Heads that
+/// are not separable per row — e.g. the image model's fused device call
+/// computing the batch-summed cross entropy — may return a single total
+/// in the loss vector; the batch total is always `losses.iter().sum()`.
+///
+/// Every [`LossHead`] is automatically a `BatchLossHead` applied row by
+/// row (the separable case), so `SquareLoss` and `FnLoss` work unchanged.
+pub trait BatchLossHead {
+    fn loss_grad_batch(&self, z_t: &[f32], spec: &BatchSpec) -> (Vec<f64>, Vec<f32>);
+
+    /// `true` when the head decomposes per row (evaluating it on any
+    /// sub-batch of rows is exact) — required by the pooled batch driver,
+    /// which shards rows across workers.  Non-separable heads (one fused
+    /// device call over the whole batch) must return `false` so sharding
+    /// fails loudly instead of computing a silently wrong loss.
+    fn separable(&self) -> bool {
+        true
+    }
+}
+
+impl<L: LossHead + ?Sized> BatchLossHead for L {
+    fn loss_grad_batch(&self, z_t: &[f32], spec: &BatchSpec) -> (Vec<f64>, Vec<f32>) {
+        let mut losses = Vec::with_capacity(spec.batch);
+        let mut grad = Vec::with_capacity(z_t.len());
+        for b in 0..spec.batch {
+            let (l, g) = self.loss_grad(spec.row(z_t, b));
+            losses.push(l);
+            grad.extend_from_slice(&g);
+        }
+        (losses, grad)
     }
 }
 
@@ -120,11 +157,57 @@ pub struct GradResult {
     pub grad_theta: Vec<f32>,
     /// `dL/dz₀` over the initial state.
     pub grad_z0: Vec<f32>,
-    /// Adjoint method only: its reconstruction ẑ(t₀) of the initial state —
-    /// the reverse-time-trajectory error the paper analyses (Thm. 2.1).
+    /// The backward pass's reconstruction ẑ(t₀) of the initial state,
+    /// populated by the two methods that rebuild the reverse trajectory:
+    /// the **adjoint** method (its re-solved reverse IVP — the error source
+    /// paper Thm. 2.1 analyses) and **MALI** (its ψ⁻¹ sweep, exact to float
+    /// roundoff — paper §3.2).  `None` for naive/ACA, which replay stored
+    /// states instead of reconstructing them.
     pub reconstructed_z0: Option<Vec<f32>>,
     /// Measured cost statistics (paper Table 1, empirically).
     pub stats: GradStats,
+}
+
+/// Result of one mini-batch gradient computation: `B` independent IVPs
+/// solved through one batched pass (`z0`/`z_final`/`grad_z0` are
+/// row-major `[B, N_z]`), with the θ-gradient summed over the batch and
+/// [`GradStats`] aggregated per batch.
+#[derive(Debug, Clone)]
+pub struct BatchGradResult {
+    /// Number of samples B.
+    pub batch: usize,
+    /// Per-sample state dimension N_z.
+    pub n_z: usize,
+    /// Total loss, summed over the batch.
+    pub loss: f64,
+    /// Per-sample losses (a single total when the head is not separable,
+    /// e.g. the fused device head — see [`BatchLossHead`]).
+    pub losses: Vec<f64>,
+    /// Terminal states `[B, N_z]`.
+    pub z_final: Vec<f32>,
+    /// `dL/dθ` summed over the batch (the mini-batch gradient).
+    pub grad_theta: Vec<f32>,
+    /// `dL/dz₀` rows, `[B, N_z]`.
+    pub grad_z0: Vec<f32>,
+    /// Reconstructed ẑ(t₀) rows where the method rebuilds the reverse
+    /// trajectory (adjoint, MALI) — see [`GradResult::reconstructed_z0`].
+    pub reconstructed_z0: Option<Vec<f32>>,
+    /// Batch-aggregated cost statistics: counts summed over samples,
+    /// `graph_depth` the longest per-sample chain, peak memory from the
+    /// shared tracker (Table-1 law with `N_z → B·N_z`).
+    pub stats: GradStats,
+    /// Per-sample forward statistics (empty on the fused device path,
+    /// where the batch shares one controller).
+    pub per_sample_fwd: Vec<IntStats>,
+}
+
+impl BatchGradResult {
+    /// Per-sample losses when the head was separable; `None` on the
+    /// device-fused path, where only the batch total ([`Self::loss`],
+    /// `losses[0]`) is available.
+    pub fn per_sample_losses(&self) -> Option<&[f64]> {
+        (self.losses.len() == self.batch).then_some(self.losses.as_slice())
+    }
 }
 
 /// One gradient-estimation protocol.
@@ -143,10 +226,62 @@ pub trait GradMethod {
         loss: &dyn LossHead,
         tracker: Arc<MemTracker>,
     ) -> Result<GradResult>;
+
+    /// Mini-batch gradients for `B` independent IVPs (`z0` is row-major
+    /// `[B, N_z]`): per-sample losses and `dL/dz₀` rows, batch-summed
+    /// `dL/dθ`, per-sample step control (each row's accepted grid matches
+    /// a solo run of that row).
+    ///
+    /// The default loops rows through [`GradMethod::grad`] — the
+    /// single-sample fallback.  The four protocols override it with truly
+    /// batched passes (batched tapes/checkpoints/ψ⁻¹ sweeps).  For
+    /// device-batched dynamics use [`batch_driver::grad_batched`], which
+    /// dispatches to one fused device call instead; calling this directly
+    /// on an `HloDynamics` is a contract violation.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        anyhow::ensure!(
+            loss.separable(),
+            "the single-sample grad_batch fallback evaluates the loss head \
+             row by row; this head couples rows (separable() == false) and \
+             must go through batch_driver::grad_batched's device-fused path"
+        );
+        let mut rows = Vec::with_capacity(bspec.batch);
+        for b in 0..bspec.batch {
+            let row_loss = batch_driver::SummedLoss {
+                inner: loss,
+                spec: BatchSpec::single(bspec.n_z),
+            };
+            rows.push(self.grad(
+                dynamics,
+                solver,
+                spec,
+                bspec.row(z0, b),
+                &row_loss,
+                tracker.clone(),
+            )?);
+        }
+        Ok(batch_driver::merge_row_results(rows, bspec, &tracker))
+    }
 }
 
 /// Method construction by config/CLI name.
-pub fn by_name(name: &str) -> Result<Box<dyn GradMethod>> {
+///
+/// Accepted names: `"mali"`, `"aca"`, `"naive"`, `"adjoint"`, and the
+/// adjoint-seminorm variant under either of its two aliases
+/// `"adjoint-seminorm"` / `"seminorm"` (both construct the same method,
+/// whose [`GradMethod::name`] reports `"adjoint-seminorm"`).  The box is
+/// `Send + Sync` so one method can drive pooled batch shards.
+pub fn by_name(name: &str) -> Result<Box<dyn GradMethod + Send + Sync>> {
     Ok(match name {
         "mali" => Box::new(mali::Mali),
         "aca" => Box::new(aca::Aca),
@@ -190,5 +325,27 @@ mod tests {
             assert!(by_name(m).is_ok(), "{m}");
         }
         assert!(by_name("bogus").is_err());
+    }
+
+    /// Both seminorm aliases round-trip to the `"adjoint-seminorm"` name
+    /// (the string configs and report tables use).
+    #[test]
+    fn by_name_seminorm_aliases_roundtrip() {
+        for alias in ["adjoint-seminorm", "seminorm"] {
+            let m = by_name(alias).unwrap();
+            assert_eq!(m.name(), "adjoint-seminorm", "alias '{alias}'");
+            // and the canonical name itself round-trips through the factory
+            assert!(by_name(m.name()).is_ok());
+        }
+        assert_eq!(by_name("adjoint").unwrap().name(), "adjoint");
+    }
+
+    /// The blanket `BatchLossHead` impl applies a separable head row-wise.
+    #[test]
+    fn batch_loss_head_rows() {
+        let spec = BatchSpec::new(2, 2);
+        let (losses, g) = SquareLoss.loss_grad_batch(&[1.0, -2.0, 3.0, 0.0], &spec);
+        assert_eq!(losses, vec![5.0, 9.0]);
+        assert_eq!(g, vec![2.0, -4.0, 6.0, 0.0]);
     }
 }

@@ -13,9 +13,15 @@
 //! differentiated — the standard autodiff semantics of adaptive solvers),
 //! so naive agrees numerically with ACA while paying the full tape.
 
-use super::{GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use super::aca::{init_hop_batch, replay_backward_batch};
+use super::{
+    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+};
+use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
-use crate::solvers::integrate::{integrate, AcceptedStep, StepObserver};
+use crate::solvers::integrate::{
+    integrate, integrate_batch, AcceptedStep, BatchAcceptedStep, BatchStepObserver, StepObserver,
+};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -55,6 +61,32 @@ impl StepObserver for FullTape {
         ));
         self.n_trials += 1;
         self.depth_units += 1;
+    }
+}
+
+/// Batched full tape: per-sample accepted steps plus every trial's
+/// per-layer activations — `N_z·N_f·N_t·m` with `N_z → B·N_z` and
+/// per-sample `N_t·m`.
+struct BatchFullTape {
+    tracker: Arc<MemTracker>,
+    accepted: Vec<Vec<(f64, f64, State)>>,
+    bufs: Vec<TrackedBuf>,
+    nf: usize,
+    /// Per-sample trial counts (the naive graph-depth units).
+    trial_units: Vec<usize>,
+}
+
+impl BatchStepObserver for BatchFullTape {
+    fn on_accept(&mut self, step: &BatchAcceptedStep) {
+        self.accepted[step.sample].push((step.t, step.h, step.before_state()));
+    }
+
+    fn on_trial(&mut self, sample: usize, _t: f64, _h: f64, state_bytes: usize, _accepted: bool) {
+        self.bufs.push(TrackedBuf::new(
+            vec![0.0f32; (state_bytes / 4) * self.nf],
+            self.tracker.clone(),
+        ));
+        self.trial_units[sample] += 1;
     }
 }
 
@@ -130,6 +162,76 @@ impl GradMethod for Naive {
             grad_z0,
             reconstructed_z0: None,
             stats,
+        })
+    }
+
+    /// Batched naive backprop: the full per-sample tape — including every
+    /// rejected trial's per-layer activations — is retained at batch
+    /// scale, then the accepted path is replayed backwards in lockstep
+    /// (gradient values flow only through accepted steps, as in the solo
+    /// path).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut tape = BatchFullTape {
+            tracker: tracker.clone(),
+            accepted: vec![Vec::new(); bspec.batch],
+            bufs: Vec::new(),
+            nf: dynamics.depth_nf(),
+            trial_units: vec![0; bspec.batch],
+        };
+        let (s_end, fwd) = integrate_batch(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
+        )?;
+        let (losses, dl_dz) = loss.loss_grad_batch(&s_end.z.data, bspec);
+
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::new(dl_dz, vec![bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        replay_backward_batch(dynamics, solver, &tape.accepted, &mut a, &mut grad_theta);
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = tape.accepted.iter().map(|s| s.len()).sum();
+        let depth_max: usize = tape.trial_units.iter().copied().max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * depth_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: losses.iter().sum(),
+            losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
         })
     }
 }

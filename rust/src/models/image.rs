@@ -9,8 +9,9 @@
 //! cotangents chained on the host.
 
 use super::{ParamBlock, SolveCfg, StepOutput};
-use crate::grad::{FnLoss, GradResult};
+use crate::grad::{batch_driver, BatchGradResult, BatchLossHead};
 use crate::runtime::{Engine, HloDynamics};
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
 use crate::tensor::argmax_rows;
 use crate::util::mem::MemTracker;
@@ -113,6 +114,10 @@ impl OdeImageClassifier {
     /// One training step: forward + full backward through head, ODE block
     /// (via `cfg.method`) and stem.  Gradients land in the `ParamBlock`s;
     /// `want_grad_x` additionally pulls `dL/dx` through the stem (FGSM).
+    ///
+    /// The mini-batch runs through `grad::batch_driver`: `HloDynamics` is
+    /// device-batched, so the driver keeps one fused device call per
+    /// evaluation (the `[batch, d]` layout the graphs were lowered with).
     pub fn step(
         &mut self,
         x: &[f32],
@@ -125,22 +130,21 @@ impl OdeImageClassifier {
         // The loss head runs inside the gradient method's terminal-loss
         // callback; stash (logits, a_θh) on the side.  Scoped so the
         // immutable self-borrows end before gradients are written back.
-        let (res, logits, a_theta_head): (GradResult, Vec<f32>, Vec<f32>) = {
+        let (res, logits, a_theta_head): (BatchGradResult, Vec<f32>, Vec<f32>) = {
             let stash: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((vec![], vec![]));
-            let head_ref = &*self;
-            let loss_head = FnLoss(|z_t: &[f32]| {
-                let (loss, logits, az, ath) = head_ref
-                    .head_loss(z_t, y1h)
-                    .expect("head loss executable");
-                *stash.borrow_mut() = (logits, ath);
-                (loss, az)
-            });
+            let loss_head = FusedImageHead {
+                model: self,
+                y1h,
+                stash: &stash,
+            };
             let tracker = MemTracker::new();
-            let res = cfg.method.grad(
+            let res = batch_driver::grad_batched(
+                cfg.method,
                 &self.dynamics,
                 cfg.solver,
                 &cfg.spec,
                 &z0,
+                &BatchSpec::new(self.batch, self.d),
                 &loss_head,
                 tracker,
             )?;
@@ -169,6 +173,32 @@ impl OdeImageClassifier {
             n_steps: res.stats.fwd.n_accepted,
             f_evals: res.stats.f_evals,
         })
+    }
+}
+
+/// Batch loss head for the fused device path: one `head_loss_grad`
+/// execute computes the batch-summed cross entropy, the logits and both
+/// cotangents.  Not separable per row, so it reports a single total (see
+/// [`BatchLossHead`]); logits and `a_θh` are stashed for the caller.
+struct FusedImageHead<'a> {
+    model: &'a OdeImageClassifier,
+    y1h: &'a [f32],
+    stash: &'a RefCell<(Vec<f32>, Vec<f32>)>,
+}
+
+impl BatchLossHead for FusedImageHead<'_> {
+    fn loss_grad_batch(&self, z_t: &[f32], _spec: &BatchSpec) -> (Vec<f64>, Vec<f32>) {
+        let (loss, logits, az, ath) = self
+            .model
+            .head_loss(z_t, self.y1h)
+            .expect("head loss executable");
+        *self.stash.borrow_mut() = (logits, ath);
+        (vec![loss], az)
+    }
+
+    /// One device call over the whole batch — cannot be sharded.
+    fn separable(&self) -> bool {
+        false
     }
 }
 

@@ -18,6 +18,7 @@
 //! along per solve and are not differentiated.
 
 use super::engine::Engine;
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::{Dynamics, EvalCounters};
 use anyhow::{bail, Context, Result};
 use std::rc::Rc;
@@ -145,7 +146,7 @@ impl Dynamics for HloDynamics {
     }
 
     fn f(&self, t: f64, z: &[f32]) -> Vec<f32> {
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let ts = [t as f32];
         let inputs = self.with_ctx(&[&ts, z], &[&self.theta]);
         self.engine
@@ -154,7 +155,7 @@ impl Dynamics for HloDynamics {
     }
 
     fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.vjp_evals.add(1);
         let ts = [t as f32];
         let inputs = self.with_ctx(&[&ts, z], &[&self.theta, a]);
         let mut out = self
@@ -182,6 +183,64 @@ impl Dynamics for HloDynamics {
         self.nf
     }
 
+    /// The batch dimension is baked into the AOT executables, so the
+    /// batch driver must keep one fused device call (DESIGN.md §3).
+    fn is_device_batched(&self) -> bool {
+        true
+    }
+
+    /// Device-batched evaluation: the compiled graph already spans the
+    /// whole `[B·n_z]` buffer, so a batched call that matches the
+    /// compiled layout (and a single shared time — device graphs take a
+    /// scalar `t`) is exactly one `f` execute, counted as **one device
+    /// evaluation** (see [`EvalCounters`]: device counts are per execute,
+    /// not per sample).  Anything else (row sub-batches, desynchronized
+    /// per-row times) cannot be expressed against a fixed-shape
+    /// executable and is a dispatch bug upstream.
+    fn f_batch(&self, ts: &[f64], z: &[f32], spec: &BatchSpec) -> Vec<f32> {
+        assert_eq!(
+            spec.flat_len(),
+            self.dim,
+            "HloDynamics '{}' is device-batched over {} states; got a [{}, {}] host batch — \
+             route batched gradients through grad::batch_driver",
+            self.family,
+            self.dim,
+            spec.batch,
+            spec.n_z
+        );
+        assert!(
+            ts.windows(2).all(|w| w[0] == w[1]),
+            "HloDynamics '{}' takes one scalar t; got desynchronized per-row times",
+            self.family
+        );
+        self.f(ts[0], z)
+    }
+
+    /// See [`HloDynamics::f_batch`] — one fused device vjp call.
+    fn f_vjp_batch(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(
+            spec.flat_len(),
+            self.dim,
+            "HloDynamics '{}' is device-batched over {} states; got a [{}, {}] host batch",
+            self.family,
+            self.dim,
+            spec.batch,
+            spec.n_z
+        );
+        assert!(
+            ts.windows(2).all(|w| w[0] == w[1]),
+            "HloDynamics '{}' takes one scalar t",
+            self.family
+        );
+        self.f_vjp(ts[0], z, a)
+    }
+
     fn fused_alf(
         &self,
         z: &[f32],
@@ -193,7 +252,7 @@ impl Dynamics for HloDynamics {
         if !self.use_fused {
             return None;
         }
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let (ts, hs, es) = ([t as f32], [h as f32], [eta as f32]);
         let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta]);
         let mut out = self
@@ -217,7 +276,7 @@ impl Dynamics for HloDynamics {
         if !self.use_fused {
             return None;
         }
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let (ts, hs, es) = ([t_out as f32], [h as f32], [eta as f32]);
         let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta]);
         let mut out = self
@@ -242,7 +301,7 @@ impl Dynamics for HloDynamics {
         if !self.use_fused {
             return None;
         }
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.vjp_evals.add(1);
         let (ts, hs, es) = ([t as f32], [h as f32], [eta as f32]);
         let inputs = self.with_ctx(&[z, v, &ts, &hs, &es], &[&self.theta, az_out, av_out]);
         let mut out = self
@@ -271,8 +330,8 @@ impl Dynamics for HloDynamics {
         // one PJRT call covering ψ⁻¹ + ψ-vjp; fall back to the composed
         // path when the artifact set predates the `.bwd` export
         self.engine.manifest.entry(&self.entry("bwd")).ok()?;
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.f_evals.add(1);
+        self.counters.vjp_evals.add(1);
         let (ts, hs, es) = ([t_out as f32], [h as f32], [eta as f32]);
         let inputs =
             self.with_ctx(&[z_out, v_out, &ts, &hs, &es], &[&self.theta, az_out, av_out]);

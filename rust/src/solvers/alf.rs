@@ -20,9 +20,10 @@
 //! selection), and it directly measures the `|f(z₀) − v₀|` drift term the
 //! truncation analysis (Thm. 3.1 / A.3) identifies.
 
+use super::batch::{BatchSpec, BatchState};
 use super::dynamics::Dynamics;
 use super::{Solver, State};
-use crate::tensor::{add_scaled, axpy};
+use crate::tensor::{add_scaled, add_scaled_rows, axpy};
 
 #[derive(Debug, Clone, Copy)]
 pub struct AlfSolver {
@@ -145,6 +146,109 @@ impl AlfSolver {
         let a_k1 = add_scaled(az_out, 1.0, &g_k1);
         // k1 = z + (h/2) v  ⇒  a_z = a_k1,  a_v += (h/2) a_k1
         axpy(hf / 2.0, &a_k1, &mut a_v);
+        (a_k1, a_v, a_theta)
+    }
+
+    // ---- batched ψ / ψ⁻¹ / ψ-vjp ---------------------------------------
+    //
+    // Stage arithmetic runs over the flat `[B·N_z]` buffer with per-row
+    // step sizes; `f` is one `f_batch` call per stage regardless of B.
+    // Per-row arithmetic is identical to the single-sample methods above —
+    // the batch/single roundoff-equivalence tests depend on that.
+
+    /// Per-row `h/2` coefficients, matching the solo `h as f32 / 2.0`.
+    fn half_steps(hs: &[f64]) -> Vec<f32> {
+        hs.iter().map(|&h| h as f32 / 2.0).collect()
+    }
+
+    /// Batched ψ over `[B, N_z]` rows with per-row `(t, h)`.
+    pub fn psi_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let eta = self.eta as f32;
+        let half = Self::half_steps(hs);
+        let s1s: Vec<f64> = ts.iter().zip(hs).map(|(&t, &h)| t + h / 2.0).collect();
+        let k1 = add_scaled_rows(z, &half, v, spec.n_z);
+        let u1 = dynamics.f_batch(&s1s, &k1, spec);
+        // v' = (1-2η) v + 2η u1  (η is shared, so this stays flat)
+        let mut v_out = vec![0.0f32; v.len()];
+        axpy(1.0 - 2.0 * eta, v, &mut v_out);
+        axpy(2.0 * eta, &u1, &mut v_out);
+        // z' = k1 + v'·h/2
+        let z_out = add_scaled_rows(&k1, &half, &v_out, spec.n_z);
+        // err = η·h_b·(u1 − v) per row
+        let mut err = Vec::with_capacity(v.len());
+        for b in 0..spec.batch {
+            let hf = hs[b] as f32;
+            for (u, vi) in spec.row(&u1, b).iter().zip(spec.row(v, b)) {
+                err.push(eta * hf * (u - vi));
+            }
+        }
+        (z_out, v_out, err)
+    }
+
+    /// Batched exact ψ⁻¹ with per-row `(t_out, h)`.
+    pub fn psi_inv_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        z_out: &[f32],
+        v_out: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let eta = self.eta as f32;
+        let neg_half: Vec<f32> = hs.iter().map(|&h| -(h as f32) / 2.0).collect();
+        let s1s: Vec<f64> = ts_out.iter().zip(hs).map(|(&t, &h)| t - h / 2.0).collect();
+        // k1 = z' − v'·h/2
+        let k1 = add_scaled_rows(z_out, &neg_half, v_out, spec.n_z);
+        let u1 = dynamics.f_batch(&s1s, &k1, spec);
+        // v = (v' − 2η u1) / (1 − 2η)
+        let denom = 1.0 - 2.0 * eta;
+        let v_in: Vec<f32> = v_out
+            .iter()
+            .zip(&u1)
+            .map(|(&vo, &u)| (vo - 2.0 * eta * u) / denom)
+            .collect();
+        // z = k1 − v·h/2
+        let z_in = add_scaled_rows(&k1, &neg_half, &v_in, spec.n_z);
+        (z_in, v_in)
+    }
+
+    /// Batched vjp through ψ; the θ-cotangent is summed over rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        az_out: &[f32],
+        av_out: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let eta = self.eta as f32;
+        let half = Self::half_steps(hs);
+        let s1s: Vec<f64> = ts.iter().zip(hs).map(|(&t, &h)| t + h / 2.0).collect();
+        let k1 = add_scaled_rows(z, &half, v, spec.n_z);
+        // z' = k1 + (h/2) v'  ⇒  a_k1 ← a_z',  a_v'_tot = a_v' + (h/2) a_z'
+        let av_tot = add_scaled_rows(av_out, &half, az_out, spec.n_z);
+        // v' = (1−2η) v + 2η u1  ⇒  a_v += (1−2η) a_v'_tot,  a_u1 = 2η a_v'_tot
+        let mut a_v: Vec<f32> = av_tot.iter().map(|&x| (1.0 - 2.0 * eta) * x).collect();
+        let a_u1: Vec<f32> = av_tot.iter().map(|&x| 2.0 * eta * x).collect();
+        // u1 = f(k1, s1)
+        let (g_k1, a_theta) = dynamics.f_vjp_batch(&s1s, &k1, &a_u1, spec);
+        // a_k1 = a_z' + g_k1
+        let a_k1 = add_scaled(az_out, 1.0, &g_k1);
+        // k1 = z + (h/2) v  ⇒  a_z = a_k1,  a_v += (h/2) a_k1
+        crate::tensor::axpy_rows(&half, &a_k1, &mut a_v, spec.n_z);
         (a_k1, a_v, a_theta)
     }
 }
@@ -279,6 +383,72 @@ impl Solver for AlfSolver {
         let (a_in, a_theta) = self.step_vjp(dynamics, t_out - h, h, &s_in, a_out);
         Some((s_in, a_in, a_theta))
     }
+
+    // ---- batched path ---------------------------------------------------
+
+    fn init_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+    ) -> BatchState {
+        // v₀ = f(z₀, t₀) for every row, one batched call.
+        let ts = vec![t0; spec.batch];
+        let v0 = dynamics.f_batch(&ts, z0, spec);
+        BatchState::from_flat_zv(z0.to_vec(), v0, *spec)
+    }
+
+    fn step_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+    ) -> (BatchState, Option<Vec<f32>>) {
+        let spec = s.spec();
+        let v = s.v.as_ref().expect("ALF needs augmented state (z, v)");
+        let (z_out, v_out, err) = self.psi_batch(dynamics, ts, hs, &s.z.data, &v.data, &spec);
+        (BatchState::from_flat_zv(z_out, v_out, spec), Some(err))
+    }
+
+    fn step_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+    ) -> (BatchState, Vec<f32>) {
+        let spec = s_in.spec();
+        let v = s_in.v.as_ref().expect("ALF needs augmented state");
+        let zero;
+        let av_out = match &a_out.v {
+            Some(av) => av.data.as_slice(),
+            None => {
+                zero = vec![0.0f32; v.data.len()];
+                &zero
+            }
+        };
+        let (a_z, a_v, a_theta) = self.psi_vjp_batch(
+            dynamics, ts, hs, &s_in.z.data, &v.data, &a_out.z.data, av_out, &spec,
+        );
+        (BatchState::from_flat_zv(a_z, a_v, spec), a_theta)
+    }
+
+    fn invert_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+    ) -> Option<BatchState> {
+        let spec = s_out.spec();
+        let v = s_out.v.as_ref().expect("ALF needs augmented state");
+        let (z_in, v_in) =
+            self.psi_inv_batch(dynamics, ts_out, hs, &s_out.z.data, &v.data, &spec);
+        Some(BatchState::from_flat_zv(z_in, v_in, spec))
+    }
 }
 
 #[cfg(test)]
@@ -387,6 +557,67 @@ mod tests {
                 "a_θ[{k}]: {fd} vs {}",
                 a_th[k]
             );
+        }
+    }
+
+    /// Batched ψ / ψ⁻¹ / ψ-vjp with *desynchronized* per-row `(t, h)` must
+    /// equal the single-sample methods row-for-row (bitwise: the same f32
+    /// operation sequence) — the invariant the batch/single equivalence
+    /// suite rests on.
+    #[test]
+    fn batched_psi_matches_rows_exactly() {
+        let mut rng = Rng::new(9);
+        let dynamics = MlpDynamics::new(3, 5, &mut rng);
+        let solver = AlfSolver::new(0.8);
+        let spec = crate::solvers::batch::BatchSpec::new(3, 3);
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_normal(&mut z, 0.5);
+        let ts = [0.0, 0.3, 0.7];
+        let hs = [0.1, 0.25, 0.05];
+        // consistent per-row v₀
+        let v = dynamics.f_batch(&ts, &z, &spec);
+
+        let (zb, vb, eb) = solver.psi_batch(&dynamics, &ts, &hs, &z, &v, &spec);
+        for b in 0..3 {
+            let (zs, vs, es) =
+                solver.psi(&dynamics, ts[b], hs[b], spec.row(&z, b), spec.row(&v, b));
+            assert_eq!(spec.row(&zb, b), zs.as_slice(), "z row {b}");
+            assert_eq!(spec.row(&vb, b), vs.as_slice(), "v row {b}");
+            assert_eq!(spec.row(&eb, b), es.as_slice(), "err row {b}");
+        }
+
+        // inverse round-trip, batched
+        let ts_out: Vec<f64> = ts.iter().zip(&hs).map(|(&t, &h)| t + h).collect();
+        let (z0b, v0b) = solver.psi_inv_batch(&dynamics, &ts_out, &hs, &zb, &vb, &spec);
+        for i in 0..spec.flat_len() {
+            assert!((z0b[i] - z[i]).abs() < 1e-5, "inv z[{i}]");
+            assert!((v0b[i] - v[i]).abs() < 1e-5, "inv v[{i}]");
+        }
+
+        // vjp rows
+        let mut az = vec![0.0f32; spec.flat_len()];
+        let mut av = vec![0.0f32; spec.flat_len()];
+        rng.fill_normal(&mut az, 1.0);
+        rng.fill_normal(&mut av, 1.0);
+        let (azb, avb, athb) =
+            solver.psi_vjp_batch(&dynamics, &ts, &hs, &z, &v, &az, &av, &spec);
+        let mut ath_sum = vec![0.0f32; dynamics.param_dim()];
+        for b in 0..3 {
+            let (azs, avs, aths) = solver.psi_vjp(
+                &dynamics,
+                ts[b],
+                hs[b],
+                spec.row(&z, b),
+                spec.row(&v, b),
+                spec.row(&az, b),
+                spec.row(&av, b),
+            );
+            assert_eq!(spec.row(&azb, b), azs.as_slice(), "a_z row {b}");
+            assert_eq!(spec.row(&avb, b), avs.as_slice(), "a_v row {b}");
+            axpy(1.0, &aths, &mut ath_sum);
+        }
+        for (k, (&got, &want)) in athb.iter().zip(&ath_sum).enumerate() {
+            assert!((got - want).abs() < 1e-4, "a_θ[{k}]: {got} vs {want}");
         }
     }
 

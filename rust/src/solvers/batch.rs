@@ -1,0 +1,277 @@
+//! Batch-first state containers: a mini-batch of independent trajectories
+//! stored as one row-major `[B, N_z]` buffer (reusing [`Tensor`]).
+//!
+//! The paper's headline results are all mini-batch training runs, and the
+//! exact-gradient methods (ACA, MALI) only pay off when the per-step
+//! overhead is amortized across a batch (cf. Matsubara et al., 2021), so
+//! the whole numeric stack — [`crate::solvers::dynamics::Dynamics`],
+//! [`crate::solvers::Solver`], `integrate_batch`, the four `GradMethod`s —
+//! speaks this layout natively.  Row `b` of a [`BatchState`] is one
+//! sample's trajectory; all per-row arithmetic is bit-identical to the
+//! single-sample path, which is what the `tests/batch_equivalence.rs`
+//! suite pins down.
+//!
+//! MALI's Table-1 memory law `N_z(N_f + 1)` carries over with
+//! `N_z → B·N_z`: the retained end state is the flat `[B·N_z]` buffer and
+//! is tracked through the same `MemTracker` plumbing.
+
+use super::State;
+use crate::tensor::Tensor;
+
+/// Shape of a batch of flattened states: `batch` rows of `n_z` features,
+/// row-major in one `[B·N_z]` buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchSpec {
+    /// Number of independent samples B.
+    pub batch: usize,
+    /// Flattened per-sample state dimension N_z.
+    pub n_z: usize,
+}
+
+impl BatchSpec {
+    /// A `[batch, n_z]` spec; both dimensions must be non-zero.
+    pub fn new(batch: usize, n_z: usize) -> BatchSpec {
+        assert!(batch > 0 && n_z > 0, "BatchSpec dims must be positive: [{batch}, {n_z}]");
+        BatchSpec { batch, n_z }
+    }
+
+    /// The single-sample spec `[1, n_z]`.
+    pub fn single(n_z: usize) -> BatchSpec {
+        BatchSpec::new(1, n_z)
+    }
+
+    /// Total flattened length `B·N_z`.
+    pub fn flat_len(&self) -> usize {
+        self.batch * self.n_z
+    }
+
+    /// A spec with the same row width but `k` rows (gathered sub-batches).
+    pub fn with_batch(&self, k: usize) -> BatchSpec {
+        BatchSpec::new(k, self.n_z)
+    }
+
+    /// Row `b` of a flat `[B, n_z]` buffer.
+    pub fn row<'a>(&self, buf: &'a [f32], b: usize) -> &'a [f32] {
+        &buf[b * self.n_z..(b + 1) * self.n_z]
+    }
+
+    /// Mutable row `b` of a flat `[B, n_z]` buffer.
+    pub fn row_mut<'a>(&self, buf: &'a mut [f32], b: usize) -> &'a mut [f32] {
+        &mut buf[b * self.n_z..(b + 1) * self.n_z]
+    }
+
+    /// Copy rows `idxs` into a compact `[idxs.len(), n_z]` buffer.
+    pub fn gather(&self, buf: &[f32], idxs: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(idxs.len() * self.n_z);
+        for &b in idxs {
+            out.extend_from_slice(self.row(buf, b));
+        }
+        out
+    }
+
+    /// Scatter a compact `[idxs.len(), n_z]` buffer back into rows `idxs`.
+    pub fn scatter(&self, sub: &[f32], idxs: &[usize], buf: &mut [f32]) {
+        debug_assert_eq!(sub.len(), idxs.len() * self.n_z);
+        for (k, &b) in idxs.iter().enumerate() {
+            self.row_mut(buf, b)
+                .copy_from_slice(&sub[k * self.n_z..(k + 1) * self.n_z]);
+        }
+    }
+}
+
+/// Solver state for a batch of trajectories: `z` (and ALF's auxiliary `v`)
+/// as `[B, N_z]` tensors.  The flat `.data` buffers are what the solvers'
+/// stage arithmetic (`tensor::axpy`/`lincomb`) runs over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchState {
+    /// The ODE states, shape `[B, N_z]`.
+    pub z: Tensor,
+    /// ALF's auxiliary velocity rows (`None` for plain RK states).
+    pub v: Option<Tensor>,
+}
+
+impl BatchState {
+    /// Wrap a flat `[B·N_z]` buffer (no `v`).
+    pub fn from_flat(z: Vec<f32>, spec: BatchSpec) -> BatchState {
+        BatchState {
+            z: Tensor::new(z, vec![spec.batch, spec.n_z]),
+            v: None,
+        }
+    }
+
+    /// Wrap flat `z` and `v` buffers (the augmented ALF layout).
+    pub fn from_flat_zv(z: Vec<f32>, v: Vec<f32>, spec: BatchSpec) -> BatchState {
+        BatchState {
+            z: Tensor::new(z, vec![spec.batch, spec.n_z]),
+            v: Some(Tensor::new(v, vec![spec.batch, spec.n_z])),
+        }
+    }
+
+    /// The `[B, N_z]` shape of this state.
+    pub fn spec(&self) -> BatchSpec {
+        debug_assert_eq!(self.z.shape.len(), 2);
+        BatchSpec::new(self.z.shape[0], self.z.shape[1])
+    }
+
+    /// Stack single-sample states (all the same layout) into a batch.
+    pub fn from_states(states: &[&State]) -> BatchState {
+        assert!(!states.is_empty(), "cannot batch zero states");
+        let n_z = states[0].z.len();
+        let has_v = states[0].v.is_some();
+        let spec = BatchSpec::new(states.len(), n_z);
+        let mut z = Vec::with_capacity(spec.flat_len());
+        let mut v = if has_v { Vec::with_capacity(spec.flat_len()) } else { Vec::new() };
+        for s in states {
+            assert_eq!(s.z.len(), n_z, "ragged state rows");
+            assert_eq!(s.v.is_some(), has_v, "mixed augmented/plain states");
+            z.extend_from_slice(&s.z);
+            if let Some(sv) = &s.v {
+                v.extend_from_slice(sv);
+            }
+        }
+        if has_v {
+            BatchState::from_flat_zv(z, v, spec)
+        } else {
+            BatchState::from_flat(z, spec)
+        }
+    }
+
+    /// Copy of row `b` as a single-sample [`State`].
+    pub fn row_state(&self, b: usize) -> State {
+        let spec = self.spec();
+        State {
+            z: spec.row(&self.z.data, b).to_vec(),
+            v: self.v.as_ref().map(|v| spec.row(&v.data, b).to_vec()),
+        }
+    }
+
+    /// Logical size in bytes of one row (for per-sample MemTracker
+    /// accounting, matching `State::bytes` of the solo path).
+    pub fn row_bytes(&self) -> usize {
+        self.spec().n_z * 4 * if self.v.is_some() { 2 } else { 1 }
+    }
+
+    /// Logical size in bytes of the whole batch.
+    pub fn bytes(&self) -> usize {
+        self.row_bytes() * self.spec().batch
+    }
+
+    /// Zero cotangent of the same shape.
+    pub fn zeros_like(&self) -> BatchState {
+        BatchState {
+            z: Tensor::zeros(&self.z.shape),
+            v: self.v.as_ref().map(|v| Tensor::zeros(&v.shape)),
+        }
+    }
+
+    /// Compact copy of rows `idxs` (a `[idxs.len(), N_z]` batch).
+    pub fn gather_rows(&self, idxs: &[usize]) -> BatchState {
+        let spec = self.spec();
+        let sub = spec.with_batch(idxs.len());
+        let z = spec.gather(&self.z.data, idxs);
+        match &self.v {
+            Some(v) => BatchState::from_flat_zv(z, spec.gather(&v.data, idxs), sub),
+            None => BatchState::from_flat(z, sub),
+        }
+    }
+
+    /// Scatter a compact sub-batch (as produced by
+    /// [`BatchState::gather_rows`]) back into rows `idxs`.
+    pub fn scatter_rows(&mut self, sub: &BatchState, idxs: &[usize]) {
+        let spec = self.spec();
+        debug_assert_eq!(sub.spec().n_z, spec.n_z);
+        debug_assert_eq!(sub.spec().batch, idxs.len());
+        spec.scatter(&sub.z.data, idxs, &mut self.z.data);
+        if let (Some(v), Some(sv)) = (&mut self.v, &sub.v) {
+            spec.scatter(&sv.data, idxs, &mut v.data);
+        }
+    }
+
+    /// Copy row `src_row` of `src` into row `dst` of `self`.
+    pub fn copy_row_from(&mut self, dst: usize, src: &BatchState, src_row: usize) {
+        let spec = self.spec();
+        let src_spec = src.spec();
+        debug_assert_eq!(spec.n_z, src_spec.n_z);
+        spec.row_mut(&mut self.z.data, dst)
+            .copy_from_slice(src_spec.row(&src.z.data, src_row));
+        if let (Some(v), Some(sv)) = (&mut self.v, &src.v) {
+            spec.row_mut(&mut v.data, dst)
+                .copy_from_slice(src_spec.row(&sv.data, src_row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_rows_and_gather_scatter() {
+        let spec = BatchSpec::new(3, 2);
+        assert_eq!(spec.flat_len(), 6);
+        let buf: Vec<f32> = vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0];
+        assert_eq!(spec.row(&buf, 1), &[10.0, 11.0]);
+        let sub = spec.gather(&buf, &[2, 0]);
+        assert_eq!(sub, vec![20.0, 21.0, 0.0, 1.0]);
+        let mut out = buf.clone();
+        spec.scatter(&[5.0, 6.0, 7.0, 8.0], &[2, 0], &mut out);
+        assert_eq!(out, vec![7.0, 8.0, 10.0, 11.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn state_roundtrip_through_rows() {
+        let a = State {
+            z: vec![1.0, 2.0],
+            v: Some(vec![3.0, 4.0]),
+        };
+        let b = State {
+            z: vec![5.0, 6.0],
+            v: Some(vec![7.0, 8.0]),
+        };
+        let batch = BatchState::from_states(&[&a, &b]);
+        assert_eq!(batch.spec(), BatchSpec::new(2, 2));
+        assert_eq!(batch.row_state(0), a);
+        assert_eq!(batch.row_state(1), b);
+        assert_eq!(batch.bytes(), 2 * 2 * 4 * 2);
+        assert_eq!(batch.row_bytes(), 16);
+    }
+
+    #[test]
+    fn gather_scatter_rows_roundtrip() {
+        let spec = BatchSpec::new(4, 3);
+        let z: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..12).map(|i| 100.0 + i as f32).collect();
+        let mut batch = BatchState::from_flat_zv(z, v, spec);
+        let sub = batch.gather_rows(&[1, 3]);
+        assert_eq!(sub.z.data, vec![3.0, 4.0, 5.0, 9.0, 10.0, 11.0]);
+        let mut sub2 = sub.clone();
+        for x in sub2.z.data.iter_mut() {
+            *x = -*x;
+        }
+        batch.scatter_rows(&sub2, &[1, 3]);
+        assert_eq!(batch.row_state(1).z, vec![-3.0, -4.0, -5.0]);
+        assert_eq!(batch.row_state(3).z, vec![-9.0, -10.0, -11.0]);
+        // untouched row
+        assert_eq!(batch.row_state(0).z, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn copy_row_from_moves_both_buffers() {
+        let spec = BatchSpec::new(2, 2);
+        let mut dst = BatchState::from_flat_zv(vec![0.0; 4], vec![0.0; 4], spec);
+        let src = BatchState::from_flat_zv(
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![5.0, 6.0, 7.0, 8.0],
+            spec,
+        );
+        dst.copy_row_from(0, &src, 1);
+        assert_eq!(dst.row_state(0).z, vec![3.0, 4.0]);
+        assert_eq!(dst.row_state(0).v.unwrap(), vec![7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        BatchSpec::new(0, 4);
+    }
+}

@@ -15,16 +15,54 @@
 //! Pallas `alf_step` path) are an optional fast path — see
 //! [`Dynamics::fused_alf`].
 
-use std::cell::Cell;
+use super::batch::BatchSpec;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Relaxed atomic event counter.  Atomic (rather than `Cell`) so one
+/// dynamics can be shared by `util::pool` workers when the batch driver
+/// shards a mini-batch across threads — counts stay exact under
+/// concurrent increments.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed)
+    }
+
+    /// Increment by `n` (one atomic op, safe across threads).
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+impl Clone for Counter {
+    fn clone(&self) -> Self {
+        Counter(AtomicU64::new(self.get()))
+    }
+}
 
 /// Evaluation counters, used by the Table-1 complexity validation and the
 /// computation-cost columns of the benches.
+///
+/// For **host** dynamics the counts are in *per-sample* units: a batched
+/// evaluation over `B` rows counts `B` evaluations, so the accounting is
+/// invariant to how a native batch is sharded or vectorized.  For
+/// **device-batched** dynamics (`HloDynamics`) one count is one device
+/// execute — the compiled graph already spans the whole batch, matching
+/// how the paper costs a batched model evaluation.
 #[derive(Debug, Default, Clone)]
 pub struct EvalCounters {
     /// Number of `f(t, z)` evaluations since the last reset.
-    pub f_evals: Cell<u64>,
+    pub f_evals: Counter,
     /// Number of `f_vjp` evaluations since the last reset.
-    pub vjp_evals: Cell<u64>,
+    pub vjp_evals: Counter,
 }
 
 impl EvalCounters {
@@ -62,6 +100,76 @@ pub trait Dynamics {
     /// Number of "layers" N_f for Table-1 style accounting (1 for toy).
     fn depth_nf(&self) -> usize {
         1
+    }
+
+    /// `true` when `f` is itself a device-compiled graph over a *fixed*
+    /// `[B, n_z]` layout (`runtime::HloDynamics`): the batch dimension is
+    /// baked into the executable, so the batch driver must keep one fused
+    /// device call per evaluation instead of sharding rows on the host.
+    fn is_device_batched(&self) -> bool {
+        false
+    }
+
+    /// Batched RHS over a row-major `[B, n_z]` buffer with per-row times
+    /// (`ts[b]` is row `b`'s evaluation time — rows desynchronize under
+    /// per-sample adaptive stepping).
+    ///
+    /// Default: single-sample fallback looping rows through
+    /// [`Dynamics::f`], so existing dynamics keep working unchanged;
+    /// vectorizable models override it (e.g. [`LinearToy`]) and count
+    /// `spec.batch` evaluations per call.
+    fn f_batch(&self, ts: &[f64], z: &[f32], spec: &BatchSpec) -> Vec<f32> {
+        debug_assert_eq!(ts.len(), spec.batch);
+        debug_assert_eq!(z.len(), spec.flat_len());
+        let mut out = Vec::with_capacity(z.len());
+        for (b, &t) in ts.iter().enumerate() {
+            out.extend_from_slice(&self.f(t, spec.row(z, b)));
+        }
+        out
+    }
+
+    /// Batched vector-Jacobian products with the θ-cotangent **summed over
+    /// rows** — the mini-batch gradient the training methods accumulate.
+    /// Default: single-sample fallback looping rows through
+    /// [`Dynamics::f_vjp`].
+    fn f_vjp_batch(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        let mut az = Vec::with_capacity(z.len());
+        let mut ath = vec![0.0f32; self.param_dim()];
+        for (b, &t) in ts.iter().enumerate() {
+            let (az_b, ath_b) = self.f_vjp(t, spec.row(z, b), spec.row(a, b));
+            az.extend_from_slice(&az_b);
+            crate::tensor::axpy(1.0, &ath_b, &mut ath);
+        }
+        (az, ath)
+    }
+
+    /// Batched vjp keeping the θ-cotangent **per row** (`[B, P]`) — the
+    /// adjoint method integrates a separate `g_θ` block per sample, so it
+    /// cannot use the summed variant.  Default loops rows through
+    /// [`Dynamics::f_vjp`].
+    fn f_vjp_batch_rows(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        let mut az = Vec::with_capacity(z.len());
+        let mut ath = Vec::with_capacity(spec.batch * self.param_dim());
+        for (b, &t) in ts.iter().enumerate() {
+            let (az_b, ath_b) = self.f_vjp(t, spec.row(z, b), spec.row(a, b));
+            az.extend_from_slice(&az_b);
+            ath.extend_from_slice(&ath_b);
+        }
+        (az, ath)
     }
 
     /// Optional fused damped-ALF step ψ executed device-side in one call
@@ -177,13 +285,13 @@ impl Dynamics for LinearToy {
     }
 
     fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let a = self.alpha[0];
         z.iter().map(|&zi| a * zi).collect()
     }
 
     fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.vjp_evals.add(1);
         let alpha = self.alpha[0];
         let az: Vec<f32> = a.iter().map(|&ai| alpha * ai).collect();
         let datheta: f64 = a
@@ -192,6 +300,68 @@ impl Dynamics for LinearToy {
             .map(|(&ai, &zi)| ai as f64 * zi as f64)
             .sum();
         (az, vec![datheta as f32])
+    }
+
+    // `dz/dt = αz` is elementwise, so the batched entry points vectorize
+    // over the whole flat `[B·n]` buffer in one pass (row arithmetic stays
+    // bit-identical to the per-row fallback).
+
+    fn f_batch(&self, ts: &[f64], z: &[f32], spec: &BatchSpec) -> Vec<f32> {
+        debug_assert_eq!(ts.len(), spec.batch);
+        debug_assert_eq!(z.len(), spec.flat_len());
+        self.counters.f_evals.add(spec.batch as u64);
+        let a = self.alpha[0];
+        z.iter().map(|&zi| a * zi).collect()
+    }
+
+    fn f_vjp_batch(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        self.counters.vjp_evals.add(spec.batch as u64);
+        let alpha = self.alpha[0];
+        let az: Vec<f32> = a.iter().map(|&ai| alpha * ai).collect();
+        // per-row f64 reduction then f32 row-order sum — the exact FP
+        // sequence of the fallback path (roundoff equivalence tests)
+        let mut dtheta = 0.0f32;
+        for b in 0..spec.batch {
+            let row_sum: f64 = spec
+                .row(a, b)
+                .iter()
+                .zip(spec.row(z, b))
+                .map(|(&ai, &zi)| ai as f64 * zi as f64)
+                .sum();
+            dtheta += row_sum as f32;
+        }
+        (az, vec![dtheta])
+    }
+
+    fn f_vjp_batch_rows(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        self.counters.vjp_evals.add(spec.batch as u64);
+        let alpha = self.alpha[0];
+        let az: Vec<f32> = a.iter().map(|&ai| alpha * ai).collect();
+        let mut ath = Vec::with_capacity(spec.batch);
+        for b in 0..spec.batch {
+            let row_sum: f64 = spec
+                .row(a, b)
+                .iter()
+                .zip(spec.row(z, b))
+                .map(|(&ai, &zi)| ai as f64 * zi as f64)
+                .sum();
+            ath.push(row_sum as f32);
+        }
+        (az, ath)
     }
 
     fn params(&self) -> &[f32] {
@@ -256,7 +426,7 @@ impl Dynamics for MlpDynamics {
     }
 
     fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let (w1, b1, w2, b2) = self.split();
         let (d, h) = (self.d, self.hidden);
         let mut hid = vec![0.0f32; h];
@@ -279,7 +449,7 @@ impl Dynamics for MlpDynamics {
     }
 
     fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.vjp_evals.add(1);
         let (w1, b1, w2, _b2) = self.split();
         let (d, h) = (self.d, self.hidden);
         // forward intermediates
@@ -379,7 +549,7 @@ impl Dynamics for ComplexEigenDynamics {
     }
 
     fn f(&self, _t: f64, z: &[f32]) -> Vec<f32> {
-        self.counters.f_evals.set(self.counters.f_evals.get() + 1);
+        self.counters.f_evals.add(1);
         let mut out = vec![0.0f32; z.len()];
         for (b, &(re, im)) in self.eigs.iter().enumerate() {
             let (x, y) = (z[2 * b], z[2 * b + 1]);
@@ -391,7 +561,7 @@ impl Dynamics for ComplexEigenDynamics {
 
     fn f_vjp(&self, _t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let _ = z;
-        self.counters.vjp_evals.set(self.counters.vjp_evals.get() + 1);
+        self.counters.vjp_evals.add(1);
         // Jᵀ a for the block structure
         let mut az = vec![0.0f32; a.len()];
         for (b, &(re, im)) in self.eigs.iter().enumerate() {
@@ -494,6 +664,59 @@ mod tests {
         // eigenvalues ±i → pure rotation: f([1,0]) = [0,1]
         let out = d.f(0.0, &[1.0, 0.0]);
         assert_eq!(out, vec![0.0, 1.0]);
+    }
+
+    /// The batched fallback must agree row-for-row with single-sample
+    /// evaluation, and the summed-θ variant with the per-row variant.
+    #[test]
+    fn batched_fallback_matches_rows() {
+        let mut rng = Rng::new(21);
+        let dyn_ = MlpDynamics::new(3, 5, &mut rng);
+        let spec = BatchSpec::new(4, 3);
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut z, 0.8);
+        let ts = [0.0, 0.1, 0.2, 0.3];
+        let fb = dyn_.f_batch(&ts, &z, &spec);
+        for (b, &t) in ts.iter().enumerate() {
+            assert_eq!(spec.row(&fb, b), dyn_.f(t, spec.row(&z, b)).as_slice());
+        }
+        let mut a = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut a, 1.0);
+        let (az, ath) = dyn_.f_vjp_batch(&ts, &z, &a, &spec);
+        let (az_rows, ath_rows) = dyn_.f_vjp_batch_rows(&ts, &z, &a, &spec);
+        assert_eq!(az, az_rows);
+        let p = dyn_.param_dim();
+        assert_eq!(ath.len(), p);
+        assert_eq!(ath_rows.len(), 4 * p);
+        for (k, &summed) in ath.iter().enumerate() {
+            let by_rows: f32 = (0..4).map(|b| ath_rows[b * p + k]).sum();
+            assert!((by_rows - summed).abs() < 1e-5, "θ[{k}]");
+        }
+    }
+
+    /// LinearToy's vectorized batched override is elementwise-identical to
+    /// the fallback and counts one evaluation per row.
+    #[test]
+    fn linear_toy_batched_override_matches_fallback() {
+        let toy = LinearToy::new(0.7, 2);
+        let spec = BatchSpec::new(3, 2);
+        let z = [1.0f32, -2.0, 0.5, 4.0, -1.0, 3.0];
+        let ts = [0.0, 1.0, 2.0];
+        let fb = toy.f_batch(&ts, &z, &spec);
+        for (fi, &zi) in fb.iter().zip(&z) {
+            assert_eq!(*fi, 0.7f32 * zi);
+        }
+        assert_eq!(toy.counters().f_evals.get(), 3, "counts per-row evals");
+        let a = [1.0f32; 6];
+        let (az, ath) = toy.f_vjp_batch(&ts, &z, &a, &spec);
+        assert_eq!(az.len(), 6);
+        // dθ = Σ_rows Σ_i a z = (1−2) + (0.5+4) + (−1+3) = 5.5
+        assert!((ath[0] - 5.5).abs() < 1e-5);
+        let (_, ath_rows) = toy.f_vjp_batch_rows(&ts, &z, &a, &spec);
+        assert_eq!(ath_rows.len(), 3);
+        assert!((ath_rows[0] + 1.0).abs() < 1e-6);
+        assert!((ath_rows[1] - 4.5).abs() < 1e-6);
+        assert!((ath_rows[2] - 2.0).abs() < 1e-6);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! Supports reverse-time integration (`t1 < t0`) — the adjoint method's
 //! backward IVP runs through the same loop.
 
+use super::batch::BatchState;
 use super::dynamics::Dynamics;
 use super::{Solver, State};
 use crate::tensor::{error_norm, error_seminorm};
@@ -100,6 +101,7 @@ impl IntStats {
 
 /// Integrate from `t0` to `t1` (either direction) starting from `state0`.
 /// Returns the final state and stats; accepted steps stream to `obs`.
+#[allow(clippy::too_many_arguments)]
 pub fn integrate(
     solver: &dyn Solver,
     dynamics: &dyn Dynamics,
@@ -217,6 +219,314 @@ pub fn integrate(
     }
     stats.f_evals = dynamics.counters().f_evals.get() - f0;
     Ok((state, stats))
+}
+
+// ---------------------------------------------------------------------------
+// Batch-first integration: per-sample step control with an active mask.
+// ---------------------------------------------------------------------------
+
+/// One accepted step of one sample inside a batched integration, seen by
+/// [`BatchStepObserver`]s.  Rows are borrowed from the batch buffers —
+/// observers copy only what they retain (checkpoints, tapes).
+pub struct BatchAcceptedStep<'a> {
+    /// Which sample (batch row) this step belongs to.
+    pub sample: usize,
+    /// Per-sample accepted-step index.
+    pub index: usize,
+    /// Step start time and (signed) size; the step ends at `t + h`.
+    pub t: f64,
+    pub h: f64,
+    pub before_z: &'a [f32],
+    pub before_v: Option<&'a [f32]>,
+    pub after_z: &'a [f32],
+    pub after_v: Option<&'a [f32]>,
+    /// Inner-loop iterations this sample spent on this step.
+    pub trials: usize,
+}
+
+impl BatchAcceptedStep<'_> {
+    /// The step's input state as an owned single-sample [`State`].
+    pub fn before_state(&self) -> State {
+        State {
+            z: self.before_z.to_vec(),
+            v: self.before_v.map(|v| v.to_vec()),
+        }
+    }
+}
+
+/// Observer for [`integrate_batch`]; like [`StepObserver`] but per sample.
+pub trait BatchStepObserver {
+    fn on_accept(&mut self, _step: &BatchAcceptedStep) {}
+    /// Every trial of one sample (accepted or rejected) with the row bytes
+    /// it materialized.
+    fn on_trial(&mut self, _sample: usize, _t: f64, _h: f64, _state_bytes: usize, _accepted: bool) {
+    }
+}
+
+impl BatchStepObserver for () {}
+
+/// Statistics of one batched integration run.
+///
+/// `per_sample[b]` carries the *structural* counts (accepted steps,
+/// trials) of sample `b` — exactly what a solo run of that row would
+/// report; `f_evals` is the total across the batch (per-sample `f`
+/// attribution is not tracked, so `per_sample[b].f_evals` is 0).
+#[derive(Debug, Clone, Default)]
+pub struct BatchIntStats {
+    pub per_sample: Vec<IntStats>,
+    /// Total `f` evaluations across the batch (counter delta).
+    pub f_evals: u64,
+}
+
+impl BatchIntStats {
+    /// Total accepted steps across the batch.
+    pub fn n_accepted_total(&self) -> usize {
+        self.per_sample.iter().map(|s| s.n_accepted).sum()
+    }
+
+    /// Total trials across the batch.
+    pub fn n_trials_total(&self) -> usize {
+        self.per_sample.iter().map(|s| s.n_trials).sum()
+    }
+
+    /// Largest per-sample accepted-step count (the longest chain any
+    /// gradient flows through).
+    pub fn n_accepted_max(&self) -> usize {
+        self.per_sample.iter().map(|s| s.n_accepted).max().unwrap_or(0)
+    }
+
+    /// Batch-aggregated [`IntStats`] (sums; `m()` becomes the batch mean).
+    pub fn aggregate(&self) -> IntStats {
+        IntStats {
+            n_accepted: self.n_accepted_total(),
+            n_trials: self.n_trials_total(),
+            f_evals: self.f_evals,
+        }
+    }
+}
+
+/// Integrate a batch of independent trajectories from `t0` to `t1`.
+///
+/// * `Fixed` mode steps all rows in lockstep on the shared grid — one
+///   batched solver step (and thus one batched `f` per stage) per grid
+///   point.
+/// * `Adaptive` mode gives every sample its own step-size controller
+///   (identical, decision-for-decision, to a solo [`integrate`] run of
+///   that row) and keeps an **active mask**: rows that reached `t1` are
+///   dropped from the gathered sub-batch, so early-converged samples stop
+///   consuming `f` evaluations while stragglers finish.
+///
+/// A `Semi` error norm is applied per row and its mask must have length
+/// `n_z` (one row width).
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    obs: &mut dyn BatchStepObserver,
+) -> Result<(BatchState, BatchIntStats)> {
+    let spec = state0.spec();
+    let nb = spec.batch;
+    let span = t1 - t0;
+    let f0 = dynamics.counters().f_evals.get();
+    let mut per = vec![IntStats::default(); nb];
+    if span == 0.0 {
+        return Ok((
+            state0,
+            BatchIntStats {
+                per_sample: per,
+                f_evals: 0,
+            },
+        ));
+    }
+    let dir = span.signum();
+    let mut state = state0;
+
+    match *mode {
+        StepMode::Fixed { h } => {
+            if h <= 0.0 {
+                bail!("fixed step size must be positive, got {h}");
+            }
+            let n = (span.abs() / h).ceil().max(1.0) as usize;
+            let hs = span / n as f64;
+            let hs_row = vec![hs; nb];
+            let mut ts_buf = vec![t0; nb];
+            let mut t = t0;
+            for i in 0..n {
+                ts_buf.fill(t);
+                let (next, _err) = solver.step_batch(dynamics, &ts_buf, &hs_row, &state);
+                let row_bytes = next.row_bytes();
+                for (b, st) in per.iter_mut().enumerate() {
+                    obs.on_trial(b, t, hs, row_bytes, true);
+                    obs.on_accept(&BatchAcceptedStep {
+                        sample: b,
+                        index: i,
+                        t,
+                        h: hs,
+                        before_z: spec.row(&state.z.data, b),
+                        before_v: state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                        after_z: spec.row(&next.z.data, b),
+                        after_v: next.v.as_ref().map(|v| spec.row(&v.data, b)),
+                        trials: 1,
+                    });
+                    st.n_accepted += 1;
+                    st.n_trials += 1;
+                }
+                state = next;
+                t += hs;
+            }
+        }
+        StepMode::Adaptive {
+            rtol,
+            atol,
+            h_init,
+            h_min,
+            h_max,
+        } => {
+            if !solver.has_error_estimate() {
+                bail!(
+                    "solver '{}' has no embedded error estimate; use StepMode::Fixed",
+                    solver.name()
+                );
+            }
+            if let ErrorNorm::Semi(m) = norm {
+                if m.len() != spec.n_z {
+                    bail!(
+                        "batched seminorm mask has length {}, want one row width {}",
+                        m.len(),
+                        spec.n_z
+                    );
+                }
+            }
+            let p = solver.order() as f64;
+            let eps = 1e-12 * span.abs().max(1.0);
+            let h0 = h_init.abs().min(h_max).max(h_min) * dir;
+            // per-sample controller state — decision-identical to solo runs
+            let mut t_cur = vec![t0; nb];
+            let mut h_cur = vec![h0; nb];
+            let mut trials_cur = vec![0usize; nb];
+            let mut accepted_idx = vec![0usize; nb];
+            // same entry condition as the solo loop: a sub-eps span means
+            // zero steps
+            let mut active: Vec<usize> = if span.abs() > eps {
+                (0..nb).collect()
+            } else {
+                Vec::new()
+            };
+            while !active.is_empty() {
+                // start-of-step overshoot clamp for rows opening a new step
+                for &b in &active {
+                    if trials_cur[b] == 0 && (t_cur[b] + h_cur[b] - t1) * dir > 0.0 {
+                        h_cur[b] = t1 - t_cur[b];
+                    }
+                }
+                let ts: Vec<f64> = active.iter().map(|&b| t_cur[b]).collect();
+                let hs: Vec<f64> = active.iter().map(|&b| h_cur[b]).collect();
+                // skip the row gather while every sample is still active
+                let (next_sub, err_sub) = if active.len() == nb {
+                    solver.step_batch(dynamics, &ts, &hs, &state)
+                } else {
+                    let sub = state.gather_rows(&active);
+                    solver.step_batch(dynamics, &ts, &hs, &sub)
+                };
+                let sub_spec = next_sub.spec();
+                let row_bytes = next_sub.row_bytes();
+                let mut still = Vec::with_capacity(active.len());
+                for (k, &b) in active.iter().enumerate() {
+                    trials_cur[b] += 1;
+                    per[b].n_trials += 1;
+                    let err_row: &[f32] = match &err_sub {
+                        Some(e) => sub_spec.row(e, k),
+                        None => &[],
+                    };
+                    let en = norm.eval(
+                        err_row,
+                        spec.row(&state.z.data, b),
+                        sub_spec.row(&next_sub.z.data, k),
+                        rtol,
+                        atol,
+                    );
+                    obs.on_trial(b, t_cur[b], h_cur[b], row_bytes, en <= 1.0);
+                    let at_floor = h_cur[b].abs() <= h_min * 1.0000001;
+                    if en <= 1.0 || at_floor {
+                        // accept this sample's step
+                        obs.on_accept(&BatchAcceptedStep {
+                            sample: b,
+                            index: accepted_idx[b],
+                            t: t_cur[b],
+                            h: h_cur[b],
+                            before_z: spec.row(&state.z.data, b),
+                            before_v: state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                            after_z: sub_spec.row(&next_sub.z.data, k),
+                            after_v: next_sub.v.as_ref().map(|v| sub_spec.row(&v.data, k)),
+                            trials: trials_cur[b],
+                        });
+                        state.copy_row_from(b, &next_sub, k);
+                        t_cur[b] += h_cur[b];
+                        per[b].n_accepted += 1;
+                        accepted_idx[b] += 1;
+                        // grow for the next step (Hairer's controller)
+                        let factor = if en > 0.0 {
+                            (0.9 * en.powf(-1.0 / p)).clamp(0.2, 10.0)
+                        } else {
+                            10.0
+                        };
+                        h_cur[b] = (h_cur[b].abs() * factor).clamp(h_min, h_max) * dir;
+                        trials_cur[b] = 0;
+                        if (t1 - t_cur[b]) * dir > eps {
+                            still.push(b); // not there yet — stays active
+                        }
+                    } else {
+                        // reject: shrink (same error-proportional rule as solo)
+                        let factor = (0.9 * en.powf(-1.0 / p)).clamp(0.2, 0.9);
+                        h_cur[b] = (h_cur[b].abs() * factor).max(h_min) * dir;
+                        if trials_cur[b] > 60 {
+                            bail!(
+                                "step-size search did not converge for sample {b} at t={} (h={}, err={en})",
+                                t_cur[b],
+                                h_cur[b]
+                            );
+                        }
+                        still.push(b);
+                    }
+                }
+                active = still;
+            }
+        }
+    }
+    let stats = BatchIntStats {
+        per_sample: per,
+        f_evals: dynamics.counters().f_evals.get() - f0,
+    };
+    Ok((state, stats))
+}
+
+/// Per-sample accepted-grid recorder — what batched MALI keeps from the
+/// forward pass (paper Algo. 4, one grid per sample).
+pub struct BatchGridRecorder {
+    /// Per sample: accepted step start times plus the final endpoint.
+    pub times: Vec<Vec<f64>>,
+    pub trials_per_step: Vec<Vec<usize>>,
+}
+
+impl BatchGridRecorder {
+    pub fn new(t0: f64, batch: usize) -> Self {
+        BatchGridRecorder {
+            times: vec![vec![t0]; batch],
+            trials_per_step: vec![Vec::new(); batch],
+        }
+    }
+}
+
+impl BatchStepObserver for BatchGridRecorder {
+    fn on_accept(&mut self, step: &BatchAcceptedStep) {
+        self.times[step.sample].push(step.t + step.h);
+        self.trials_per_step[step.sample].push(step.trials);
+    }
 }
 
 /// Convenience: integrate and also record the accepted time grid — what
@@ -345,6 +655,96 @@ mod tests {
         }
         // m ≥ 1
         assert!(stats.m() >= 1.0);
+    }
+
+    /// Batched integration of B copies of the same IVP at different
+    /// initial conditions: every row's trajectory, accepted grid and trial
+    /// count must equal a solo run of that row — the active mask must not
+    /// change any controller decision.
+    #[test]
+    fn batched_adaptive_matches_solo_rows() {
+        use crate::solvers::batch::{BatchSpec, BatchState};
+        let toy = LinearToy::new(0.9, 1);
+        let s = by_name("alf").unwrap();
+        let mode = StepMode::adaptive(1e-4, 1e-6);
+        // rows at very different scales → different per-sample grids (the
+        // tiny row is atol-dominated, so its controller takes larger steps)
+        let rows: [f32; 4] = [0.001, 0.4, 1.0, 5.0];
+
+        let mut solo_final = Vec::new();
+        let mut solo_grids = Vec::new();
+        let mut solo_stats = Vec::new();
+        for &z in &rows {
+            let s0 = s.init(&toy, 0.0, &[z]);
+            let mut rec = GridRecorder::new(0.0);
+            let (sf, st) =
+                integrate(&*s, &toy, 0.0, 2.0, s0, &mode, &ErrorNorm::Full, &mut rec).unwrap();
+            solo_final.push(sf.z[0]);
+            solo_grids.push(rec.times);
+            solo_stats.push(st);
+        }
+
+        let spec = BatchSpec::new(4, 1);
+        let b0 = s.init_batch(&toy, 0.0, &rows, &spec);
+        assert_eq!(b0.spec(), spec);
+        let mut rec = BatchGridRecorder::new(0.0, 4);
+        let (bf, bstats) =
+            integrate_batch(&*s, &toy, 0.0, 2.0, b0, &mode, &ErrorNorm::Full, &mut rec)
+                .unwrap();
+
+        for b in 0..4 {
+            assert_eq!(bf.z.data[b], solo_final[b], "final z row {b}");
+            assert_eq!(
+                bstats.per_sample[b].n_accepted, solo_stats[b].n_accepted,
+                "accepted-step count row {b}"
+            );
+            assert_eq!(
+                bstats.per_sample[b].n_trials, solo_stats[b].n_trials,
+                "trial count row {b}"
+            );
+            assert_eq!(rec.times[b].len(), solo_grids[b].len());
+            for (a, bt) in rec.times[b].iter().zip(&solo_grids[b]) {
+                assert!((a - bt).abs() < 1e-14, "grid row {b}: {a} vs {bt}");
+            }
+        }
+        // different rows genuinely took different grids
+        assert_ne!(
+            bstats.per_sample[0].n_accepted,
+            bstats.per_sample[3].n_accepted
+        );
+        // total f-evals equals the sum of the solo runs'
+        let solo_f: u64 = solo_stats.iter().map(|s| s.f_evals).sum();
+        assert_eq!(bstats.f_evals, solo_f);
+        assert_eq!(bstats.aggregate().n_accepted, bstats.n_accepted_total());
+    }
+
+    #[test]
+    fn batched_fixed_steps_in_lockstep() {
+        use crate::solvers::batch::BatchSpec;
+        let toy = LinearToy::new(1.0, 2);
+        let s = by_name("rk4").unwrap();
+        let spec = BatchSpec::new(3, 2);
+        let z0: Vec<f32> = vec![1.0, 2.0, 0.5, -0.5, 3.0, 0.1];
+        let b0 = s.init_batch(&toy, 0.0, &z0, &spec);
+        let (bf, st) = integrate_batch(
+            &*s,
+            &toy,
+            0.0,
+            1.0,
+            b0,
+            &StepMode::Fixed { h: 0.1 },
+            &ErrorNorm::Full,
+            &mut (),
+        )
+        .unwrap();
+        let e = 1f64.exp();
+        for (zf, z0i) in bf.z.data.iter().zip(&z0) {
+            assert!(((*zf as f64) - (*z0i as f64) * e).abs() < 1e-4 * (1.0 + z0i.abs() as f64));
+        }
+        for ps in &st.per_sample {
+            assert_eq!(ps.n_accepted, 10);
+            assert_eq!(ps.n_trials, 10);
+        }
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! solvers, and the adaptive integration loop (paper Algo. 1).
 
 pub mod alf;
+pub mod batch;
 pub mod dynamics;
 pub mod integrate;
 pub mod rk;
 pub mod stability;
 
+use batch::{BatchSpec, BatchState};
 use dynamics::Dynamics;
 
 /// Solver state: plain `z` for RK methods, augmented `(z, v)` for ALF.
@@ -104,16 +106,132 @@ pub trait Solver {
         let (a_in, a_theta) = self.step_vjp(dynamics, t_out - h, h, &s_in, a_out);
         Some((s_in, a_in, a_theta))
     }
+
+    // ---- batch-first entry points --------------------------------------
+    //
+    // A [`BatchState`] carries `B` independent trajectories as `[B, N_z]`
+    // rows; per-sample adaptive stepping desynchronizes rows, so every
+    // batched method takes per-row times `ts` and step sizes `hs`.  The
+    // defaults loop rows through the single-sample methods (correct for
+    // any solver); `AlfSolver`/`RkSolver` override them with stage
+    // arithmetic over the flat buffer and one batched `f` call per stage.
+
+    /// Build the batched initial state from `[B, N_z]` rows of `z₀`.
+    fn init_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+    ) -> BatchState {
+        let states: Vec<State> = (0..spec.batch)
+            .map(|b| self.init(dynamics, t0, spec.row(z0, b)))
+            .collect();
+        let refs: Vec<&State> = states.iter().collect();
+        BatchState::from_states(&refs)
+    }
+
+    /// One batched step with per-row `(t, h)`; the error estimate (if any)
+    /// is a flat `[B, N_z]` buffer of per-row embedded errors.
+    fn step_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+    ) -> (BatchState, Option<Vec<f32>>) {
+        let spec = s.spec();
+        debug_assert_eq!(ts.len(), spec.batch);
+        debug_assert_eq!(hs.len(), spec.batch);
+        let mut states = Vec::with_capacity(spec.batch);
+        let mut err_flat = Vec::with_capacity(spec.flat_len());
+        let mut have_err = true;
+        for b in 0..spec.batch {
+            let (next, err) = self.step(dynamics, ts[b], hs[b], &s.row_state(b));
+            match err {
+                Some(e) => err_flat.extend_from_slice(&e),
+                None => have_err = false,
+            }
+            states.push(next);
+        }
+        let refs: Vec<&State> = states.iter().collect();
+        (
+            BatchState::from_states(&refs),
+            if have_err { Some(err_flat) } else { None },
+        )
+    }
+
+    /// Reverse-mode vjp through one batched step; θ-cotangents are summed
+    /// over rows (the mini-batch gradient).
+    fn step_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+    ) -> (BatchState, Vec<f32>) {
+        let spec = s_in.spec();
+        let mut states = Vec::with_capacity(spec.batch);
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        for b in 0..spec.batch {
+            let (a_in, dth) =
+                self.step_vjp(dynamics, ts[b], hs[b], &s_in.row_state(b), &a_out.row_state(b));
+            crate::tensor::axpy(1.0, &dth, &mut a_theta);
+            states.push(a_in);
+        }
+        let refs: Vec<&State> = states.iter().collect();
+        (BatchState::from_states(&refs), a_theta)
+    }
+
+    /// Batched exact step inverse ψ⁻¹ with per-row `(t_out, h)`; `None`
+    /// when the solver is not invertible.
+    fn invert_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+    ) -> Option<BatchState> {
+        if !self.is_invertible() {
+            return None;
+        }
+        let spec = s_out.spec();
+        let mut states = Vec::with_capacity(spec.batch);
+        for b in 0..spec.batch {
+            states.push(self.invert(dynamics, ts_out[b], hs[b], &s_out.row_state(b))?);
+        }
+        let refs: Vec<&State> = states.iter().collect();
+        Some(BatchState::from_states(&refs))
+    }
+
+    /// Batched MALI backward micro-step: ψ⁻¹ reconstruction plus the step
+    /// vjp for every row.  Default composes [`Solver::invert_batch`] +
+    /// [`Solver::step_vjp_batch`].
+    fn invert_and_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+        a_out: &BatchState,
+    ) -> Option<(BatchState, BatchState, Vec<f32>)> {
+        let s_in = self.invert_batch(dynamics, ts_out, hs, s_out)?;
+        let ts_in: Vec<f64> = ts_out.iter().zip(hs).map(|(&t, &h)| t - h).collect();
+        let (a_in, a_theta) = self.step_vjp_batch(dynamics, &ts_in, hs, &s_in, a_out);
+        Some((s_in, a_in, a_theta))
+    }
 }
 
 /// Named solver construction — the strings used in configs, CLI and the
-/// Table-2 / Table-3 grids.
-pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Solver>> {
+/// Table-2 / Table-3 grids.  The box is `Send + Sync` so a solver can be
+/// shared across `util::pool` workers by the batched gradient driver.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Solver + Send + Sync>> {
     by_name_eta(name, 1.0)
 }
 
 /// Like [`by_name`] but with an explicit ALF damping coefficient (Table 7).
-pub fn by_name_eta(name: &str, eta: f64) -> anyhow::Result<Box<dyn Solver>> {
+pub fn by_name_eta(name: &str, eta: f64) -> anyhow::Result<Box<dyn Solver + Send + Sync>> {
     use rk::{RkSolver, Tableau};
     Ok(match name {
         "alf" | "mali" => Box::new(alf::AlfSolver::new(eta)),

@@ -7,9 +7,10 @@
 //! Bogacki–Shampine RK23 3(2) and Dormand–Prince Dopri5 5(4) — the
 //! `torchdiffeq` default the paper tests with.
 
+use super::batch::{BatchSpec, BatchState};
 use super::dynamics::Dynamics;
 use super::{Solver, State};
-use crate::tensor::{axpy, lincomb};
+use crate::tensor::{axpy, axpy_rows, lincomb};
 
 /// Butcher tableau of an explicit method, optionally with an embedded
 /// lower-order weight row for error estimation.
@@ -178,6 +179,44 @@ impl RkSolver {
         }
         (ks, ys)
     }
+
+    /// Per-row `(h_b · coeff) as f32` scale vector for batched stage
+    /// arithmetic — the same cast order as the solo `(h * aij) as f32`.
+    fn row_coeffs(hs: &[f64], coeff: f64) -> Vec<f32> {
+        hs.iter().map(|&h| (h * coeff) as f32).collect()
+    }
+
+    /// Batched stage evaluation over the flat `[B·N_z]` buffer with
+    /// per-row `(t, h)`: one `f_batch` call per stage regardless of B.
+    fn stages_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let s = self.tab.b.len();
+        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(s);
+        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(s);
+        for i in 0..s {
+            let mut y = z.to_vec();
+            for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                if aij != 0.0 {
+                    axpy_rows(&Self::row_coeffs(hs, aij), &ks[j], &mut y, spec.n_z);
+                }
+            }
+            let stage_ts: Vec<f64> = ts
+                .iter()
+                .zip(hs)
+                .map(|(&t, &h)| t + self.tab.c[i] * h)
+                .collect();
+            let k = dynamics.f_batch(&stage_ts, &y, spec);
+            ys.push(y);
+            ks.push(k);
+        }
+        (ks, ys)
+    }
 }
 
 impl Solver for RkSolver {
@@ -281,6 +320,112 @@ impl Solver for RkSolver {
     ) -> Option<State> {
         None // RK steps have no closed-form inverse — that's MALI's point.
     }
+
+    // ---- batched path ---------------------------------------------------
+
+    fn init_batch(
+        &self,
+        _dynamics: &dyn Dynamics,
+        _t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+    ) -> BatchState {
+        BatchState::from_flat(z0.to_vec(), *spec)
+    }
+
+    fn step_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+    ) -> (BatchState, Option<Vec<f32>>) {
+        let spec = s.spec();
+        let (ks, _ys) = self.stages_batch(dynamics, ts, hs, &s.z.data, &spec);
+        let mut z1 = s.z.data.clone();
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            if bi != 0.0 {
+                axpy_rows(&Self::row_coeffs(hs, bi), &ks[i], &mut z1, spec.n_z);
+            }
+        }
+        let err = self.tab.b_low.as_ref().map(|bl| {
+            let mut e = vec![0.0f32; spec.flat_len()];
+            for (i, (&b, &bh)) in self.tab.b.iter().zip(bl).enumerate() {
+                axpy_rows(&Self::row_coeffs(hs, b - bh), &ks[i], &mut e, spec.n_z);
+            }
+            e
+        });
+        (BatchState::from_flat(z1, spec), err)
+    }
+
+    fn step_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+    ) -> (BatchState, Vec<f32>) {
+        let spec = s_in.spec();
+        let (_ks, ys) = self.stages_batch(dynamics, ts, hs, &s_in.z.data, &spec);
+        let nstages = ys.len();
+        let az_out = &a_out.z.data;
+        // a_k[i] starts at h_b·b_i·a_z' per row
+        let mut a_k: Vec<Vec<f32>> = self
+            .tab
+            .b
+            .iter()
+            .map(|&bi| {
+                let coeffs = Self::row_coeffs(hs, bi);
+                let mut buf = Vec::with_capacity(spec.flat_len());
+                for b in 0..spec.batch {
+                    let c = coeffs[b];
+                    buf.extend(spec.row(az_out, b).iter().map(|&a| c * a));
+                }
+                buf
+            })
+            .collect();
+        let mut a_z = az_out.clone();
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        for i in (0..nstages).rev() {
+            // Per-row zero-cotangent skip, matching the solo path's
+            // per-sample stage skip — rows with a zero a_k[i] row are
+            // excluded from the vjp call, so per-sample vjp-eval counts
+            // equal B solo runs (their g_y contribution is exactly zero).
+            let nz: Vec<usize> = (0..spec.batch)
+                .filter(|&b| spec.row(&a_k[i], b).iter().any(|&x| x != 0.0))
+                .collect();
+            if nz.is_empty() {
+                continue;
+            }
+            let stage_ts: Vec<f64> = ts
+                .iter()
+                .zip(hs)
+                .map(|(&t, &h)| t + self.tab.c[i] * h)
+                .collect();
+            let (g_y, g_th) = if nz.len() == spec.batch {
+                dynamics.f_vjp_batch(&stage_ts, &ys[i], &a_k[i], &spec)
+            } else {
+                let sub = spec.with_batch(nz.len());
+                let ts_sub: Vec<f64> = nz.iter().map(|&b| stage_ts[b]).collect();
+                let y_sub = spec.gather(&ys[i], &nz);
+                let ak_sub = spec.gather(&a_k[i], &nz);
+                let (gy_sub, g_th) = dynamics.f_vjp_batch(&ts_sub, &y_sub, &ak_sub, &sub);
+                let mut g_y = vec![0.0f32; spec.flat_len()];
+                spec.scatter(&gy_sub, &nz, &mut g_y);
+                (g_y, g_th)
+            };
+            axpy(1.0, &g_th, &mut a_theta);
+            // y_i = z + h Σ_j a_ij k_j
+            axpy(1.0, &g_y, &mut a_z);
+            for (j, &aij) in self.tab.a[i].iter().enumerate() {
+                if aij != 0.0 {
+                    axpy_rows(&Self::row_coeffs(hs, aij), &g_y, &mut a_k[j], spec.n_z);
+                }
+            }
+        }
+        (BatchState::from_flat(a_z, spec), a_theta)
+    }
 }
 
 #[cfg(test)]
@@ -369,6 +514,70 @@ mod tests {
         let (_, e2) = solver.step(&toy, 0.0, 0.1, &s0);
         let (e1, e2) = (e1.unwrap()[0].abs() as f64, e2.unwrap()[0].abs() as f64);
         assert!(e1 > e2, "error estimate should shrink with h: {e1} vs {e2}");
+    }
+
+    /// Batched RK step / step-vjp with desynchronized per-row `(t, h)`
+    /// equals the single-sample methods row-for-row.
+    #[test]
+    fn batched_step_matches_rows_exactly() {
+        use crate::solvers::batch::{BatchSpec, BatchState};
+        let mut rng = Rng::new(23);
+        for tab in [Tableau::rk4(), Tableau::dopri5(), Tableau::heun_euler()] {
+            let name = tab.name;
+            let dynamics = MlpDynamics::new(2, 4, &mut rng);
+            let solver = RkSolver::new(tab);
+            let spec = BatchSpec::new(3, 2);
+            let mut z = vec![0.0f32; spec.flat_len()];
+            rng.fill_normal(&mut z, 0.5);
+            let ts = [0.0, 0.4, 1.1];
+            let hs = [0.2, 0.35, 0.07];
+            let bs = BatchState::from_flat(z.clone(), spec);
+            let (next, err) = solver.step_batch(&dynamics, &ts, &hs, &bs);
+            for b in 0..3 {
+                let s0 = State {
+                    z: spec.row(&z, b).to_vec(),
+                    v: None,
+                };
+                let (s1, e1) = solver.step(&dynamics, ts[b], hs[b], &s0);
+                assert_eq!(spec.row(&next.z.data, b), s1.z.as_slice(), "{name} z row {b}");
+                match (&err, e1) {
+                    (Some(eb), Some(es)) => {
+                        assert_eq!(spec.row(eb, b), es.as_slice(), "{name} err row {b}")
+                    }
+                    (None, None) => {}
+                    _ => panic!("{name}: err presence mismatch"),
+                }
+            }
+            // vjp
+            let mut az = vec![0.0f32; spec.flat_len()];
+            rng.fill_normal(&mut az, 1.0);
+            let a_out = BatchState::from_flat(az.clone(), spec);
+            let (a_in, ath) = solver.step_vjp_batch(&dynamics, &ts, &hs, &bs, &a_out);
+            let mut ath_sum = vec![0.0f32; dynamics.param_dim()];
+            for b in 0..3 {
+                let s0 = State {
+                    z: spec.row(&z, b).to_vec(),
+                    v: None,
+                };
+                let a0 = State {
+                    z: spec.row(&az, b).to_vec(),
+                    v: None,
+                };
+                let (a_b, ath_b) = solver.step_vjp(&dynamics, ts[b], hs[b], &s0, &a0);
+                assert_eq!(
+                    spec.row(&a_in.z.data, b),
+                    a_b.z.as_slice(),
+                    "{name} a_z row {b}"
+                );
+                axpy(1.0, &ath_b, &mut ath_sum);
+            }
+            for (k, (&got, &want)) in ath.iter().zip(&ath_sum).enumerate() {
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "{name} a_θ[{k}]: {got} vs {want}"
+                );
+            }
+        }
     }
 
     /// Generic RK step-vjp against central finite differences, for a

@@ -74,6 +74,26 @@ pub fn add_scaled(x: &[f32], a: f32, y: &[f32]) -> Vec<f32> {
     x.iter().zip(y).map(|(xi, yi)| xi + a * yi).collect()
 }
 
+/// Per-row `y[b] += coeffs[b] · x[b]` over row-major `[B, n_z]` buffers —
+/// the batched solvers' stage arithmetic, where each sample carries its
+/// own step size.  Row arithmetic is identical to [`axpy`] on the row.
+pub fn axpy_rows(coeffs: &[f32], x: &[f32], y: &mut [f32], n_z: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(coeffs.len() * n_z, y.len());
+    for (b, &c) in coeffs.iter().enumerate() {
+        axpy(c, &x[b * n_z..(b + 1) * n_z], &mut y[b * n_z..(b + 1) * n_z]);
+    }
+}
+
+/// Allocating per-row `out[b] = x[b] + coeffs[b] · y[b]` (the batched
+/// counterpart of [`add_scaled`]).
+pub fn add_scaled_rows(x: &[f32], coeffs: &[f32], y: &[f32], n_z: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    let mut out = x.to_vec();
+    axpy_rows(coeffs, y, &mut out, n_z);
+    out
+}
+
 /// out = sum_i c_i * xs_i  (linear combination, allocating)
 pub fn lincomb(terms: &[(f32, &[f32])]) -> Vec<f32> {
     let n = terms.first().map(|(_, x)| x.len()).unwrap_or(0);
@@ -218,6 +238,20 @@ mod tests {
         assert_eq!(y, [12.0, 14.0, 16.0]);
         let out = lincomb(&[(1.0, &x[..]), (0.5, &y[..])]);
         assert_eq!(out, vec![7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn row_scaled_ops_match_per_row_axpy() {
+        let x = [1.0f32, 2.0, 3.0, 4.0]; // 2 rows of 2
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let coeffs = [2.0f32, -1.0];
+        let out = add_scaled_rows(&x, &coeffs, &y, 2);
+        assert_eq!(out, vec![21.0, 42.0, -27.0, -36.0]);
+        let mut acc = x;
+        axpy_rows(&coeffs, &y, &mut acc, 2);
+        assert_eq!(acc.to_vec(), out);
+        // row b must equal add_scaled on that row
+        assert_eq!(&out[2..], add_scaled(&x[2..], coeffs[1], &y[2..]).as_slice());
     }
 
     #[test]

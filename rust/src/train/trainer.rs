@@ -2,6 +2,12 @@
 //! momentum with step-decay, one gradient method under test, per-epoch
 //! test accuracy, and memory / wall-clock / f-eval telemetry — the data
 //! behind Fig. 5's three panels and Fig. 6.
+//!
+//! Every gradient step runs through the batch-first path
+//! (`grad::batch_driver` inside `OdeImageClassifier::step`): the model's
+//! `HloDynamics` is device-batched, so each mini-batch stays one fused
+//! device call per solver evaluation, while the same trainer recipe on a
+//! native dynamics would shard rows across `util::pool` workers.
 
 use crate::data::Dataset;
 use crate::grad::{by_name as grad_by_name, GradMethod, IvpSpec};
@@ -69,11 +75,11 @@ impl TrainCfg {
         }
     }
 
-    pub fn solver(&self) -> Result<Box<dyn Solver>> {
+    pub fn solver(&self) -> Result<Box<dyn Solver + Send + Sync>> {
         by_name_eta(&self.solver, self.eta)
     }
 
-    pub fn grad_method(&self) -> Result<Box<dyn GradMethod>> {
+    pub fn grad_method(&self) -> Result<Box<dyn GradMethod + Send + Sync>> {
         grad_by_name(&self.method)
     }
 }

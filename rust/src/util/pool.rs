@@ -52,6 +52,11 @@ where
 }
 
 /// Parallel for over index ranges (chunked), mutating disjoint slices.
+///
+/// In-flight threads are bounded by [`num_threads`]: the chunk list is
+/// partitioned into at most that many contiguous groups, one scoped
+/// thread each (a 100k-element call with tiny chunks must not spawn
+/// thousands of threads).
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
@@ -64,10 +69,17 @@ where
         }
         return;
     }
+    let mut chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let n_chunks = chunks.len();
+    let per_worker = n_chunks.div_ceil(workers.min(n_chunks));
     std::thread::scope(|scope| {
-        for (i, c) in data.chunks_mut(chunk).enumerate() {
+        for group in chunks.chunks_mut(per_worker) {
             let f = &f;
-            scope.spawn(move || f(i, c));
+            scope.spawn(move || {
+                for (i, c) in group.iter_mut() {
+                    f(*i, c);
+                }
+            });
         }
     });
 }
@@ -101,5 +113,22 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&x| x > 0));
+    }
+
+    /// Thousands of tiny chunks must not mean thousands of threads: the
+    /// grouped dispatch handles a 100k-element / 6250-chunk call with at
+    /// most `num_threads()` workers, visiting every chunk exactly once
+    /// with its correct index.
+    #[test]
+    fn par_chunks_mut_bounds_thread_count() {
+        let mut data = vec![0u64; 100_000];
+        par_chunks_mut(&mut data, 16, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 16 + j) as u64;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
     }
 }

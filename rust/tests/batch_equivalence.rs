@@ -1,0 +1,248 @@
+//! Batch/single equivalence — the contract of the batch-first refactor:
+//! a `[B, N_z]` batched gradient run must match B independent
+//! single-sample runs to roundoff in loss, `dL/dθ`, `dL/dz₀` and (fixed
+//! step) exactly in `f`-evaluation counts, for **all four** gradient
+//! protocols; and the per-sample active-mask controller of the adaptive
+//! loop must never change any sample's accepted-step count versus a solo
+//! run.
+
+use mali_ode::grad::batch_driver::grad_batched;
+use mali_ode::grad::{by_name, GradResult, IvpSpec, SquareLoss};
+use mali_ode::solvers::batch::BatchSpec;
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::MlpDynamics;
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+
+const METHODS: [&str; 4] = ["mali", "aca", "naive", "adjoint"];
+
+/// MALI needs ψ⁻¹ (ALF); the adjoint re-solve runs the usual RK pairing.
+fn solver_for(method: &str) -> &'static str {
+    match method {
+        "adjoint" => "rk23",
+        _ => "alf",
+    }
+}
+
+/// B=4 rows of a 3-dim MLP Neural ODE at different scales.
+fn problem() -> (MlpDynamics, Vec<f32>, BatchSpec) {
+    let mut rng = Rng::new(77);
+    let dynamics = MlpDynamics::new(3, 4, &mut rng);
+    let bspec = BatchSpec::new(4, 3);
+    let mut z0 = vec![0.0f32; bspec.flat_len()];
+    rng.fill_uniform_sym(&mut z0, 0.6);
+    // desynchronize the adaptive controllers: rows at different magnitudes
+    for (b, scale) in [0.05f32, 0.6, 1.0, 1.6].iter().enumerate() {
+        for x in &mut z0[b * 3..(b + 1) * 3] {
+            *x *= scale;
+        }
+    }
+    (dynamics, z0, bspec)
+}
+
+fn solo_runs(
+    dynamics: &MlpDynamics,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    method: &str,
+    spec: &IvpSpec,
+) -> Vec<GradResult> {
+    let m = by_name(method).unwrap();
+    let solver = solver_by_name(solver_for(method)).unwrap();
+    (0..bspec.batch)
+        .map(|b| {
+            m.grad(
+                dynamics,
+                &*solver,
+                spec,
+                bspec.row(z0, b),
+                &SquareLoss,
+                MemTracker::new(),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+fn check_equivalence(spec: &IvpSpec, fixed_step: bool) {
+    let (dynamics, z0, bspec) = problem();
+    for method in METHODS {
+        let solos = solo_runs(&dynamics, &z0, &bspec, method, spec);
+        let m = by_name(method).unwrap();
+        let solver = solver_by_name(solver_for(method)).unwrap();
+        let batched = grad_batched(
+            &*m,
+            &dynamics,
+            &*solver,
+            spec,
+            &z0,
+            &bspec,
+            &SquareLoss,
+            MemTracker::new(),
+        )
+        .unwrap();
+        assert_eq!(batched.batch, 4);
+        assert_eq!(batched.losses.len(), 4, "{method}: separable losses");
+
+        for (b, solo) in solos.iter().enumerate() {
+            assert!(
+                (batched.losses[b] - solo.loss).abs() < 1e-9 * (1.0 + solo.loss.abs()),
+                "{method} loss row {b}: {} vs {}",
+                batched.losses[b],
+                solo.loss
+            );
+            for (i, (&got, &want)) in bspec
+                .row(&batched.grad_z0, b)
+                .iter()
+                .zip(&solo.grad_z0)
+                .enumerate()
+            {
+                assert!(
+                    (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+                    "{method} grad_z0[{b}][{i}]: {got} vs {want}"
+                );
+            }
+            for (i, (&got, &want)) in bspec
+                .row(&batched.z_final, b)
+                .iter()
+                .zip(&solo.z_final)
+                .enumerate()
+            {
+                assert!(
+                    (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+                    "{method} z_final[{b}][{i}]: {got} vs {want}"
+                );
+            }
+            // per-sample step control must match the solo controller
+            assert_eq!(
+                batched.per_sample_fwd[b].n_accepted, solo.stats.fwd.n_accepted,
+                "{method} accepted-step count row {b}"
+            );
+            assert_eq!(
+                batched.per_sample_fwd[b].n_trials, solo.stats.fwd.n_trials,
+                "{method} trial count row {b}"
+            );
+        }
+
+        // θ-gradient: batched sum equals the sum of solo runs (summation
+        // order differs, so roundoff-level tolerance)
+        let mut theta_sum = vec![0.0f64; dynamics_theta_len(&solos)];
+        for solo in &solos {
+            for (acc, &g) in theta_sum.iter_mut().zip(&solo.grad_theta) {
+                *acc += g as f64;
+            }
+        }
+        let theta_scale: f64 = theta_sum.iter().map(|g| g.abs()).fold(1.0, f64::max);
+        for (k, (&got, &want)) in batched.grad_theta.iter().zip(&theta_sum).enumerate() {
+            assert!(
+                ((got as f64) - want).abs() < 1e-4 * theta_scale,
+                "{method} grad_theta[{k}]: {got} vs {want}"
+            );
+        }
+
+        if fixed_step {
+            // exact evaluation-count parity on the shared fixed grid
+            let solo_f: u64 = solos.iter().map(|s| s.stats.f_evals).sum();
+            assert_eq!(
+                batched.stats.f_evals, solo_f,
+                "{method}: batched f_evals vs Σ solo"
+            );
+            let solo_vjp: u64 = solos.iter().map(|s| s.stats.vjp_evals).sum();
+            assert_eq!(
+                batched.stats.vjp_evals, solo_vjp,
+                "{method}: batched vjp_evals vs Σ solo"
+            );
+        }
+    }
+}
+
+fn dynamics_theta_len(solos: &[GradResult]) -> usize {
+    solos[0].grad_theta.len()
+}
+
+/// Fixed-step: every row shares the grid; batched must equal 4 solos to
+/// roundoff in loss / dL/dθ / dL/dz₀ and exactly in f-evals.
+#[test]
+fn fixed_step_batched_equals_solo_all_methods() {
+    check_equivalence(&IvpSpec::fixed(0.0, 0.8, 0.1), true);
+}
+
+/// Adaptive: per-sample controllers desynchronize, and the active mask
+/// must not change any controller decision — accepted/trial counts and
+/// results match solo runs row for row.
+#[test]
+fn adaptive_batched_equals_solo_all_methods() {
+    check_equivalence(&IvpSpec::adaptive(0.0, 0.8, 1e-3, 1e-5), false);
+}
+
+/// The seminorm adjoint variant also survives batching.
+#[test]
+fn seminorm_adjoint_batched_matches_solo() {
+    let (dynamics, z0, bspec) = problem();
+    let spec = IvpSpec::adaptive(0.0, 0.6, 1e-3, 1e-5);
+    let m = by_name("adjoint-seminorm").unwrap();
+    let solver = solver_by_name("rk23").unwrap();
+    let batched = grad_batched(
+        &*m,
+        &dynamics,
+        &*solver,
+        &spec,
+        &z0,
+        &bspec,
+        &SquareLoss,
+        MemTracker::new(),
+    )
+    .unwrap();
+    for b in 0..bspec.batch {
+        let solo = m
+            .grad(
+                &dynamics,
+                &*solver,
+                &spec,
+                bspec.row(&z0, b),
+                &SquareLoss,
+                MemTracker::new(),
+            )
+            .unwrap();
+        assert!(
+            (batched.losses[b] - solo.loss).abs() < 1e-9 * (1.0 + solo.loss.abs()),
+            "loss row {b}"
+        );
+        for (&got, &want) in bspec.row(&batched.grad_z0, b).iter().zip(&solo.grad_z0) {
+            assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "row {b}");
+        }
+    }
+}
+
+/// MALI's batched ψ⁻¹ sweep reconstructs every row's z₀ to roundoff, and
+/// the retained memory obeys the Table-1 law with `N_z → B·N_z`: exactly
+/// the flat end state (z and v), flat in the number of solver steps.
+#[test]
+fn batched_mali_memory_law_scales_with_batch() {
+    let (dynamics, z0, bspec) = problem();
+    let m = by_name("mali").unwrap();
+    let solver = solver_by_name("alf").unwrap();
+    let peak = |h: f64| -> (usize, Vec<f32>) {
+        let tracker = MemTracker::new();
+        let res = grad_batched(
+            &*m,
+            &dynamics,
+            &*solver,
+            &IvpSpec::fixed(0.0, 2.0, h),
+            &z0,
+            &bspec,
+            &SquareLoss,
+            tracker.clone(),
+        )
+        .unwrap();
+        (tracker.peak_bytes(), res.reconstructed_z0.unwrap())
+    };
+    let (few, rec) = peak(0.5);
+    let (many, _) = peak(0.05);
+    // constant in step count, equal to the augmented end state: 2·B·N_z·4B
+    assert_eq!(few, many, "MALI peak grew with step count");
+    assert_eq!(few, 2 * bspec.flat_len() * 4, "B·N_z(N_f+1) law");
+    for (i, (&r, &z)) in rec.iter().zip(&z0).enumerate() {
+        assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "ψ⁻¹ row recon [{i}]");
+    }
+}
