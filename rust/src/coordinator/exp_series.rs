@@ -33,6 +33,58 @@ fn solver_for(method: &str) -> &'static str {
     }
 }
 
+/// Pad a (possibly short) trailing chunk of example indices up to `batch`
+/// by cycling through `pool` (the epoch's index order), so the
+/// fixed-batch device executables can run it; returns the padded indices
+/// and the number of **real** examples.  Training counts every real
+/// sample (the fill-ins just re-weight a few examples of the last
+/// mini-batch); metrics count only the real rows — no sample is silently
+/// dropped any more.
+fn padded_chunk(chunk: &[usize], pool: &[usize], batch: usize) -> (Vec<usize>, usize) {
+    let mut idx = chunk.to_vec();
+    let mut c = 0usize;
+    while idx.len() < batch {
+        idx.push(pool[c % pool.len()]);
+        c += 1;
+    }
+    (idx, chunk.len())
+}
+
+/// Test MSE over `test_idx` in fixed-size batches: the trailing chunk is
+/// padded by cycling `test_idx`, `predict` maps an assembled `seq` batch
+/// to a `batch × t_out × obs` prediction buffer, and the squared error is
+/// averaged over the **real** rows only — shared by the latent-ODE and
+/// RNN/GRU evaluation paths.
+fn padded_test_mse(
+    ds: &hopper::HopperDataset,
+    test_idx: &[usize],
+    batch: usize,
+    t_len: usize,
+    t_out: usize,
+    obs: usize,
+    mut predict: impl FnMut(&[f32]) -> Result<Vec<f32>>,
+) -> Result<f64> {
+    let per_example = t_out * obs;
+    let mut sse = 0.0f64;
+    let mut n_elems = 0usize;
+    for chunk in test_idx.chunks(batch) {
+        let (idx, real) = padded_chunk(chunk, test_idx, batch);
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for &i in &idx {
+            seq.extend_from_slice(ds.observed(i, t_len));
+            tgt.extend_from_slice(ds.target(i, t_len, t_out));
+        }
+        let preds = predict(&seq)?;
+        for j in 0..real * per_example {
+            let d = (preds[j] - tgt[j]) as f64;
+            sse += d * d;
+        }
+        n_elems += real * per_example;
+    }
+    Ok(sse / n_elems.max(1) as f64)
+}
+
 /// Train a latent ODE with one gradient method on a fraction of the data;
 /// returns test MSE.
 fn latent_ode_mse(
@@ -49,8 +101,9 @@ fn latent_ode_mse(
     let n_test = scale.pick(1, 4) * model.batch;
     let ds = hopper::generate(n_total + n_test, model.t_len, model.t_out, 3.0, seed + 11);
     let n_train_max = n_total;
-    let n_train =
-        (((n_train_max as f64) * train_frac).round() as usize / model.batch).max(1) * model.batch;
+    // honest fraction: no rounding down to a batch multiple — the trailing
+    // partial batch is padded, not dropped
+    let n_train = (((n_train_max as f64) * train_frac).round() as usize).max(1);
 
     let epochs = scale.pick(3, 12);
     let solver = crate::solvers::by_name_eta(solver_for(method), eta)?;
@@ -69,13 +122,12 @@ fn latent_ode_mse(
         opt_dyn.set_lr(lr);
         let mut order: Vec<usize> = (0..n_train).collect();
         rng.shuffle(&mut order);
+        let pool = order.clone();
         for chunk in order.chunks(model.batch) {
-            if chunk.len() < model.batch {
-                continue;
-            }
+            let (idx, _real) = padded_chunk(chunk, &pool, model.batch);
             let mut seq = Vec::new();
             let mut tgt = Vec::new();
-            for &i in chunk {
+            for &i in &idx {
                 seq.extend_from_slice(ds.observed(i, model.t_len));
                 tgt.extend_from_slice(ds.target(i, model.t_len, model.t_out));
             }
@@ -93,26 +145,23 @@ fn latent_ode_mse(
         }
     }
 
-    // test MSE over held-out trajectories (mean latent path)
+    // test MSE over held-out trajectories (mean latent path); the trailing
+    // partial batch is padded and only its real rows counted
     let cfg = SolveCfg {
         solver: &*solver,
         spec,
         method: &*grad,
     };
-    let mut mse_sum = 0.0;
-    let mut batches = 0;
-    for start in (n_train_max..n_train_max + n_test).step_by(model.batch) {
-        let mut seq = Vec::new();
-        let mut tgt = Vec::new();
-        for i in start..start + model.batch {
-            seq.extend_from_slice(ds.observed(i, model.t_len));
-            tgt.extend_from_slice(ds.target(i, model.t_len, model.t_out));
-        }
-        let preds = model.predict(&seq, &cfg)?;
-        mse_sum += LatentOde::mse(&preds, &tgt);
-        batches += 1;
-    }
-    Ok(mse_sum / batches.max(1) as f64)
+    let test_idx: Vec<usize> = (n_train_max..n_train_max + n_test).collect();
+    padded_test_mse(
+        &ds,
+        &test_idx,
+        model.batch,
+        model.t_len,
+        model.t_out,
+        model.obs,
+        |seq| model.predict(seq, &cfg),
+    )
 }
 
 /// Train an RNN/GRU baseline on the same split; returns test MSE.
@@ -130,19 +179,19 @@ fn seq_baseline_mse(
     let n_total = scale.pick(4, 12) * batch;
     let n_test = scale.pick(1, 4) * batch;
     let ds = hopper::generate(n_total + n_test, t_len, t_out, 3.0, seed + 11);
-    let n_train = (((n_total as f64) * train_frac).round() as usize / batch).max(1) * batch;
+    // honest fraction + padded trailing batch, matching latent_ode_mse
+    let n_train = (((n_total as f64) * train_frac).round() as usize).max(1);
     let epochs = scale.pick(3, 12);
     let mut opt = opt_by_name("adamax", 0.01, model.params.len())?;
     for _ in 0..epochs {
         let mut order: Vec<usize> = (0..n_train).collect();
         rng.shuffle(&mut order);
+        let pool = order.clone();
         for chunk in order.chunks(batch) {
-            if chunk.len() < batch {
-                continue;
-            }
+            let (idx, _real) = padded_chunk(chunk, &pool, batch);
             let mut seq = Vec::new();
             let mut tgt = Vec::new();
-            for &i in chunk {
+            for &i in &idx {
                 seq.extend_from_slice(ds.observed(i, t_len));
                 tgt.extend_from_slice(ds.target(i, t_len, t_out));
             }
@@ -150,25 +199,10 @@ fn seq_baseline_mse(
             opt.step(&mut model.params.value, &model.params.grad);
         }
     }
-    let mut mse_sum = 0.0;
-    let mut batches = 0;
-    for start in (n_total..n_total + n_test).step_by(batch) {
-        let mut seq = Vec::new();
-        let mut tgt = Vec::new();
-        for i in start..start + batch {
-            seq.extend_from_slice(ds.observed(i, t_len));
-            tgt.extend_from_slice(ds.target(i, t_len, t_out));
-        }
-        let preds = model.predict(&seq)?;
-        mse_sum += preds
-            .iter()
-            .zip(&tgt)
-            .map(|(p, t)| ((p - t) as f64).powi(2))
-            .sum::<f64>()
-            / preds.len() as f64;
-        batches += 1;
-    }
-    Ok(mse_sum / batches.max(1) as f64)
+    let test_idx: Vec<usize> = (n_total..n_total + n_test).collect();
+    padded_test_mse(&ds, &test_idx, batch, t_len, t_out, latent_model.obs, |seq| {
+        model.predict(seq)
+    })
 }
 
 /// Table 4 — latent-ODE MSE × training-data fraction × method.
@@ -240,11 +274,10 @@ fn cde_accuracy(
     for _ in 0..epochs {
         let mut order: Vec<usize> = (0..train.len()).collect();
         rng.shuffle(&mut order);
+        let pool = order.clone();
         for chunk in order.chunks(model.batch) {
-            if chunk.len() < model.batch {
-                continue;
-            }
-            let (ctx, x0, y1h, _) = model.prepare_batch(&train, chunk);
+            let (idx, _real) = padded_chunk(chunk, &pool, model.batch);
+            let (ctx, x0, y1h, _) = model.prepare_batch(&train, &idx);
             let cfg = SolveCfg {
                 solver: &*solver,
                 spec: spec.clone(),
@@ -262,10 +295,9 @@ fn cde_accuracy(
     let mut meter = AccuracyMeter::default();
     let all: Vec<usize> = (0..test.len()).collect();
     for chunk in all.chunks(model.batch) {
-        if chunk.len() < model.batch {
-            continue;
-        }
-        let (ctx, x0, _, y) = model.prepare_batch(&test, chunk);
+        // pad the trailing batch; score only its real rows
+        let (idx, real) = padded_chunk(chunk, &all, model.batch);
+        let (ctx, x0, _, y) = model.prepare_batch(&test, &idx);
         let cfg = SolveCfg {
             solver: &*solver,
             spec: spec.clone(),
@@ -273,7 +305,7 @@ fn cde_accuracy(
         };
         let logits = model.predict(ctx, &x0, &cfg)?;
         let pred = crate::tensor::argmax_rows(&logits, model.batch, model.classes);
-        meter.add(&pred, &y);
+        meter.add(&pred[..real], &y[..real]);
     }
     Ok(meter.value())
 }

@@ -11,26 +11,31 @@
 //! makes ImageNet-scale training infeasible for it (paper §4.2).
 
 use super::{
-    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
 };
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
 use crate::solvers::integrate::{
-    integrate, integrate_batch, AcceptedStep, BatchAcceptedStep, BatchStepObserver, StepObserver,
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, AcceptedStep,
+    BatchAcceptedStep, BatchStepObserver, StepObserver,
 };
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 pub struct Aca;
 
-/// Observer that checkpoints the *input* state of every accepted step.
+/// Observer that checkpoints the *input* state of every accepted step,
+/// plus the observation marks `(k, steps_done)` the multi-observation
+/// backward replay injects cotangents at.
 struct Checkpointer {
     tracker: Arc<MemTracker>,
     /// (t, h, state-before) per accepted step.
     steps: Vec<(f64, f64, State)>,
+    marks: Vec<(usize, usize)>,
     bufs: Vec<TrackedBuf>,
 }
 
@@ -39,6 +44,7 @@ impl Checkpointer {
         Checkpointer {
             tracker,
             steps: Vec::new(),
+            marks: Vec::new(),
             bufs: Vec::new(),
         }
     }
@@ -58,13 +64,19 @@ impl StepObserver for Checkpointer {
         self.steps
             .push((step.t, step.h, step.before.clone()));
     }
+
+    fn on_observation(&mut self, k: usize, _t: f64, _state: &State) {
+        self.marks.push((k, self.steps.len()));
+    }
 }
 
 /// Batched checkpointer: one `(t, h, state-before)` list per sample — the
-/// `N_z(N_f + N_t)` store with `N_z → B·N_z` and per-sample `N_t`.
+/// `N_z(N_f + N_t)` store with `N_z → B·N_z` and per-sample `N_t` — plus
+/// per-sample observation marks.
 struct BatchCheckpointer {
     tracker: Arc<MemTracker>,
     steps: Vec<Vec<(f64, f64, State)>>,
+    marks: Vec<Vec<(usize, usize)>>,
     bufs: Vec<TrackedBuf>,
 }
 
@@ -73,6 +85,7 @@ impl BatchCheckpointer {
         BatchCheckpointer {
             tracker,
             steps: vec![Vec::new(); batch],
+            marks: vec![Vec::new(); batch],
             bufs: Vec::new(),
         }
     }
@@ -89,6 +102,58 @@ impl BatchStepObserver for BatchCheckpointer {
         }
         self.steps[step.sample].push((step.t, step.h, before));
     }
+
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, _z: &[f32], _v: Option<&[f32]>) {
+        self.marks[sample].push((k, self.steps[sample].len()));
+    }
+}
+
+/// Never-called observation head for replays without observations.
+struct NeverObsLoss;
+
+impl ObsLossHead for NeverObsLoss {
+    fn loss_grad_at(&self, _k: usize, _t: f64, _z: &[f32]) -> (f64, Vec<f32>) {
+        unreachable!("replay without observation marks never evaluates a head")
+    }
+}
+
+/// Shared by ACA and naive (solo): walk the stored accepted steps
+/// backwards, injecting each observation's cotangent — evaluated at the
+/// stored forward state — when crossing its mark, accumulating the
+/// θ-gradient into `grad_theta` and the per-observation losses into
+/// `obs_losses`.  The pulled-back cotangent is left in `a`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn replay_backward_obs(
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    steps: &[(f64, f64, State)],
+    marks: &[(usize, usize)],
+    grid: &ObsGrid,
+    z_end: &[f32],
+    loss: &dyn ObsLossHead,
+    a: &mut State,
+    grad_theta: &mut [f32],
+    obs_losses: &mut [f64],
+) {
+    let n = steps.len();
+    let mut mp = marks.len();
+    for i in (0..=n).rev() {
+        while mp > 0 && marks[mp - 1].1 == i {
+            let k = marks[mp - 1].0;
+            let z_at: &[f32] = if i == n { z_end } else { &steps[i].2.z };
+            let (l, g) = loss.loss_grad_at(k, grid.time(k), z_at);
+            obs_losses[k] = l;
+            axpy(1.0, &g, &mut a.z);
+            mp -= 1;
+        }
+        if i == 0 {
+            break;
+        }
+        let (t, h, before) = &steps[i - 1];
+        let (a_prev, dth) = solver.step_vjp(dynamics, *t, *h, before, a);
+        axpy(1.0, &dth, grad_theta);
+        *a = a_prev;
+    }
 }
 
 /// Shared by ACA and naive: replay the per-sample accepted steps backwards
@@ -102,9 +167,61 @@ pub(super) fn replay_backward_batch(
     a: &mut BatchState,
     grad_theta: &mut [f32],
 ) {
+    let no_marks = vec![Vec::new(); steps.len()];
+    replay_backward_batch_obs(
+        dynamics,
+        solver,
+        steps,
+        &no_marks,
+        &ObsGrid::none(),
+        &[],
+        &NeverObsLoss,
+        a,
+        grad_theta,
+        &mut [],
+    );
+}
+
+/// [`replay_backward_batch`] with per-sample observation marks: each
+/// row's due cotangents (evaluated per row at the stored forward state)
+/// are injected into `a` before the row's next backward step, and the
+/// per-observation losses accumulate batch-summed into `obs_losses`.
+/// `z_end` holds the flat `[B, N_z]` terminal states for marks at the end
+/// of a row's trajectory.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn replay_backward_batch_obs(
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    steps: &[Vec<(f64, f64, State)>],
+    marks: &[Vec<(usize, usize)>],
+    grid: &ObsGrid,
+    z_end: &[f32],
+    loss: &dyn BatchObsLossHead,
+    a: &mut BatchState,
+    grad_theta: &mut [f32],
+    obs_losses: &mut [f64],
+) {
     let batch = steps.len();
+    let spec = a.spec();
+    let row_spec = BatchSpec::single(spec.n_z);
     let mut rem: Vec<usize> = steps.iter().map(|s| s.len()).collect();
+    let mut mp: Vec<usize> = marks.iter().map(|m| m.len()).collect();
     loop {
+        // inject the observation cotangents due at each row's position
+        for b in 0..batch {
+            while mp[b] > 0 && marks[b][mp[b] - 1].1 == rem[b] {
+                let k = marks[b][mp[b] - 1].0;
+                let z_at: &[f32] = if rem[b] == steps[b].len() {
+                    spec.row(z_end, b)
+                } else {
+                    &steps[b][rem[b]].2.z
+                };
+                let (ls, g) = loss.loss_grad_at_batch(k, grid.time(k), z_at, &row_spec);
+                obs_losses[k] += ls.iter().sum::<f64>();
+                axpy(1.0, &g, spec.row_mut(&mut a.z.data, b));
+                mp[b] -= 1;
+            }
+        }
         let active: Vec<usize> = (0..batch).filter(|&b| rem[b] > 0).collect();
         if active.is_empty() {
             break;
@@ -294,6 +411,170 @@ impl GradMethod for Aca {
             n_z: bspec.n_z,
             loss: losses.iter().sum(),
             losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+
+    /// Multi-observation ACA: the exact-hit grid makes the accepted steps
+    /// *be* the per-segment checkpoint structure (segment boundaries are
+    /// accepted times), so one checkpointed forward pass plus the
+    /// injection replay reuses the per-segment search behind the shared
+    /// interface.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        loss: &dyn ObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<ObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        c.reset();
+
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut ckpt = Checkpointer::new(tracker.clone());
+        let (s_end, fwd) = integrate_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut ckpt,
+        )?;
+
+        let mut a = State {
+            z: vec![0.0f32; s_end.z.len()],
+            v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_obs(
+            dynamics,
+            solver,
+            &ckpt.steps,
+            &ckpt.marks,
+            grid,
+            &s_end.z,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+        );
+        // initialisation hop (ALF: v₀ = f(z₀, t₀) depends on z₀ and θ)
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let first_z = ckpt
+                    .steps
+                    .first()
+                    .map(|(_, _, s)| s.z.as_slice())
+                    .unwrap_or(z0);
+                let (gz, gth) = dynamics.f_vjp(spec.t0, first_z, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let n = ckpt.steps.len();
+        let stats = GradStats {
+            bwd_steps: n,
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n.max(1),
+            fwd,
+        };
+        Ok(ObsGradResult {
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: s_end.z,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+        })
+    }
+
+    /// Batched multi-observation ACA: per-sample checkpoints + marks, then
+    /// the lockstep injection replay.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad_batch() for a terminal loss"
+        );
+        ensure!(
+            loss.separable(),
+            "batched native injection evaluates the head per row; a fused \
+             head must go through batch_driver::grad_obs_batched"
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut ckpt = BatchCheckpointer::new(tracker.clone(), bspec.batch);
+        let (s_end, fwd) = integrate_batch_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut ckpt,
+        )?;
+
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::zeros(&[bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_batch_obs(
+            dynamics,
+            solver,
+            &ckpt.steps,
+            &ckpt.marks,
+            grid,
+            &s_end.z.data,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+        );
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = ckpt.steps.iter().map(|s| s.len()).sum();
+        let n_max: usize = ckpt.steps.iter().map(|s| s.len()).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchObsGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: obs_losses.iter().sum(),
+            obs_losses,
             z_final: s_end.z.data,
             grad_theta,
             grad_z0,

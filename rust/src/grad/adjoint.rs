@@ -19,20 +19,89 @@
 //! does not matter and speeds the backward solve.
 
 use super::{
-    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
 };
 use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::{Dynamics, EvalCounters};
-use crate::solvers::integrate::{integrate, integrate_batch, ErrorNorm, StepMode};
-use crate::solvers::Solver;
+use crate::solvers::integrate::{
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, BatchStepObserver, ErrorNorm,
+    StepMode, StepObserver,
+};
+use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 #[derive(Default)]
 pub struct Adjoint {
     pub seminorm: bool,
+}
+
+impl Adjoint {
+    /// Error norm for the `[z, a, g_θ]` reverse solve: the seminorm
+    /// variant masks the `g_θ` block; otherwise a forward `Semi` mask is
+    /// extended to the augmented row layout.
+    fn augmented_norm(&self, fwd: &ErrorNorm, d: usize, p: usize) -> ErrorNorm {
+        if self.seminorm {
+            let mut mask = vec![true; 2 * d + p];
+            for m in mask.iter_mut().skip(2 * d) {
+                *m = false;
+            }
+            ErrorNorm::Semi(mask)
+        } else {
+            match fwd {
+                ErrorNorm::Full => ErrorNorm::Full,
+                ErrorNorm::Semi(m) => {
+                    let mut mask = vec![true; 2 * d + p];
+                    mask[..d].copy_from_slice(m);
+                    ErrorNorm::Semi(mask)
+                }
+            }
+        }
+    }
+}
+
+/// Forward-pass observation capture for the solo adjoint: the stored
+/// `z(t_k)` rows the loss reads and the reverse solve re-anchors to —
+/// `K·N_z` retained bytes, independent of the step count, tracked like
+/// any other checkpoint.
+struct ObsCapture {
+    tracker: Arc<MemTracker>,
+    /// `(k, t_k, z(t_k))` in forward (grid) order.
+    states: Vec<(usize, f64, TrackedBuf)>,
+}
+
+impl StepObserver for ObsCapture {
+    fn on_observation(&mut self, k: usize, t: f64, state: &State) {
+        self.states
+            .push((k, t, TrackedBuf::new(state.z.clone(), self.tracker.clone())));
+    }
+}
+
+/// Batched observation capture: one flat `[B, N_z]` buffer per
+/// observation, rows filled as each sample's controller lands on `t_k`.
+struct BatchObsCapture {
+    spec: BatchSpec,
+    states: Vec<TrackedBuf>,
+}
+
+impl BatchObsCapture {
+    fn new(tracker: &Arc<MemTracker>, spec: BatchSpec, k: usize) -> Self {
+        let states = (0..k)
+            .map(|_| TrackedBuf::new(vec![0.0f32; spec.flat_len()], tracker.clone()))
+            .collect();
+        BatchObsCapture { spec, states }
+    }
+}
+
+impl BatchStepObserver for BatchObsCapture {
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, z: &[f32], _v: Option<&[f32]>) {
+        self.spec
+            .row_mut(&mut self.states[k].data, sample)
+            .copy_from_slice(z);
+    }
 }
 
 /// One augmented-RHS row `[dz, −aᵀ∂f/∂z, −aᵀ∂f/∂θ]` composed from the
@@ -239,23 +308,7 @@ impl GradMethod for Adjoint {
         y.resize(y.len() + p, 0.0);
 
         // Seminorm: mask the g_θ block out of the error norm.
-        let norm = if self.seminorm {
-            let mut mask = vec![true; 2 * d + p];
-            for m in mask.iter_mut().skip(2 * d) {
-                *m = false;
-            }
-            ErrorNorm::Semi(mask)
-        } else {
-            match &spec.norm {
-                ErrorNorm::Full => ErrorNorm::Full,
-                ErrorNorm::Semi(m) => {
-                    // extend a forward-state mask to the augmented layout
-                    let mut mask = vec![true; 2 * d + p];
-                    mask[..d].copy_from_slice(m);
-                    ErrorNorm::Semi(mask)
-                }
-            }
-        };
+        let norm = self.augmented_norm(&spec.norm, d, p);
         // Same solver family, reverse direction.
         let ys0 = solver.init(&aug, spec.t1, &y);
         let (y_end, bwd) = integrate(
@@ -325,23 +378,7 @@ impl GradMethod for Adjoint {
         }
 
         // Seminorm: mask the g_θ block out of each row's error norm.
-        let norm = if self.seminorm {
-            let mut mask = vec![true; n_aug];
-            for m in mask.iter_mut().skip(2 * d) {
-                *m = false;
-            }
-            ErrorNorm::Semi(mask)
-        } else {
-            match &spec.norm {
-                ErrorNorm::Full => ErrorNorm::Full,
-                ErrorNorm::Semi(m) => {
-                    // extend a forward-row mask to the augmented row layout
-                    let mut mask = vec![true; n_aug];
-                    mask[..d].copy_from_slice(m);
-                    ErrorNorm::Semi(mask)
-                }
-            }
-        };
+        let norm = self.augmented_norm(&spec.norm, d, p);
         let ys0 = solver.init_batch(&aug, spec.t1, &y, &aug_spec);
         let (y_end, bwd) = integrate_batch(
             solver,
@@ -378,6 +415,238 @@ impl GradMethod for Adjoint {
             n_z: bspec.n_z,
             loss: losses.iter().sum(),
             losses,
+            z_final: kept.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(reconstructed),
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+
+    /// Multi-observation adjoint (Chen et al. 2018, App. B): one reverse
+    /// augmented IVP from `t1` to `t0` with **jump discontinuities** at
+    /// every observation — the cotangent `∂l_k/∂z` is added to the
+    /// `a`-block when the solve passes `t_k`, and the `ẑ` block is
+    /// re-anchored to the stored forward state there (the torchdiffeq
+    /// convention, bounding reverse-trajectory drift to one segment).
+    /// Retained memory is the end state plus the K observation states —
+    /// still independent of the step count.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        loss: &dyn ObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<ObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        c.reset();
+        let (d, p) = (dynamics.dim(), dynamics.param_dim());
+
+        // ---- forward: keep the observation states (the loss reads them)
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut cap = ObsCapture {
+            tracker: tracker.clone(),
+            states: Vec::new(),
+        };
+        let (s_end, fwd) = integrate_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut cap,
+        )?;
+        let kept = TrackedBuf::new(s_end.z.clone(), tracker.clone());
+
+        // ---- backward: reverse augmented IVP with cotangent jumps ------
+        let aug = AugmentedAdjoint::new(dynamics);
+        let norm = self.augmented_norm(&spec.norm, d, p);
+        let mut y = Vec::with_capacity(2 * d + p);
+        y.extend_from_slice(&kept.data);
+        y.resize(2 * d + p, 0.0);
+        let mut t_cur = spec.t1;
+        let mut bwd_steps = 0usize;
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        for (k, t_k, zbuf) in cap.states.iter().rev() {
+            if *t_k != t_cur {
+                let ys0 = solver.init(&aug, t_cur, &y);
+                let (y_end, seg) = integrate(
+                    solver,
+                    &aug,
+                    t_cur,
+                    *t_k,
+                    ys0,
+                    &reverse_mode(&spec.mode),
+                    &norm,
+                    &mut (),
+                )?;
+                y = y_end.z;
+                bwd_steps += seg.n_accepted;
+                t_cur = *t_k;
+            }
+            // re-anchor ẑ to the stored forward state, then the jump
+            y[..d].copy_from_slice(&zbuf.data);
+            let (l, g) = loss.loss_grad_at(*k, *t_k, &zbuf.data);
+            obs_losses[*k] = l;
+            axpy(1.0, &g, &mut y[d..2 * d]);
+        }
+        // final leg down to t0 (observations are strictly inside (t0, t1])
+        let ys0 = solver.init(&aug, t_cur, &y);
+        let (y_end, seg) = integrate(
+            solver,
+            &aug,
+            t_cur,
+            spec.t0,
+            ys0,
+            &reverse_mode(&spec.mode),
+            &norm,
+            &mut (),
+        )?;
+        bwd_steps += seg.n_accepted;
+        let reconstructed_z0 = y_end.z[..d].to_vec();
+        let grad_z0 = y_end.z[d..2 * d].to_vec();
+        let grad_theta = y_end.z[2 * d..].to_vec();
+
+        let stats = GradStats {
+            bwd_steps,
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * bwd_steps.max(1),
+            fwd,
+        };
+        Ok(ObsGradResult {
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: kept.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(reconstructed_z0),
+            stats,
+        })
+    }
+
+    /// Batched multi-observation adjoint: one batched reverse augmented
+    /// IVP per inter-observation segment under per-sample step control,
+    /// with batch-synchronous jumps (all rows share the grid, so each
+    /// observation's cotangent is one full-batch head call — fused
+    /// non-separable heads work on this path).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad_batch() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+        let (d, p) = (bspec.n_z, dynamics.param_dim());
+
+        // ---- forward: per-observation [B, N_z] state capture -----------
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut cap = BatchObsCapture::new(&tracker, *bspec, grid.len());
+        let (s_end, fwd) = integrate_batch_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut cap,
+        )?;
+        let kept = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
+
+        // ---- backward: segment-wise batched reverse augmented IVP ------
+        let aug = BatchAugmentedAdjoint::new(dynamics, d);
+        let n_aug = 2 * d + p;
+        let aug_spec = BatchSpec::new(bspec.batch, n_aug);
+        let norm = self.augmented_norm(&spec.norm, d, p);
+        let mut y = Vec::with_capacity(aug_spec.flat_len());
+        for b in 0..bspec.batch {
+            y.extend_from_slice(bspec.row(&kept.data, b));
+            y.resize((b + 1) * n_aug, 0.0);
+        }
+        let mut t_cur = spec.t1;
+        let mut bwd_acc = vec![0usize; bspec.batch];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        for k in (0..grid.len()).rev() {
+            let t_k = grid.time(k);
+            if t_k != t_cur {
+                let ys0 = solver.init_batch(&aug, t_cur, &y, &aug_spec);
+                let (y_end, seg) = integrate_batch(
+                    solver,
+                    &aug,
+                    t_cur,
+                    t_k,
+                    ys0,
+                    &reverse_mode(&spec.mode),
+                    &norm,
+                    &mut (),
+                )?;
+                y = y_end.z.data;
+                for (b, s) in seg.per_sample.iter().enumerate() {
+                    bwd_acc[b] += s.n_accepted;
+                }
+                t_cur = t_k;
+            }
+            // re-anchor ẑ rows to the stored forward states and apply the
+            // batch cotangent jump
+            let (ls, g) = loss.loss_grad_at_batch(k, t_k, &cap.states[k].data, bspec);
+            obs_losses[k] = ls.iter().sum();
+            for b in 0..bspec.batch {
+                let row = &mut y[b * n_aug..(b + 1) * n_aug];
+                row[..d].copy_from_slice(bspec.row(&cap.states[k].data, b));
+                axpy(1.0, bspec.row(&g, b), &mut row[d..2 * d]);
+            }
+        }
+        // final leg down to t0
+        let ys0 = solver.init_batch(&aug, t_cur, &y, &aug_spec);
+        let (y_end, seg) = integrate_batch(
+            solver,
+            &aug,
+            t_cur,
+            spec.t0,
+            ys0,
+            &reverse_mode(&spec.mode),
+            &norm,
+            &mut (),
+        )?;
+        for (b, s) in seg.per_sample.iter().enumerate() {
+            bwd_acc[b] += s.n_accepted;
+        }
+
+        // unpack rows: ẑ(t₀) | dL/dz₀ | g_θ (summed over the batch)
+        let mut reconstructed = Vec::with_capacity(bspec.flat_len());
+        let mut grad_z0 = Vec::with_capacity(bspec.flat_len());
+        let mut grad_theta = vec![0.0f32; p];
+        for b in 0..bspec.batch {
+            let row = aug_spec.row(&y_end.z.data, b);
+            reconstructed.extend_from_slice(&row[..d]);
+            grad_z0.extend_from_slice(&row[d..2 * d]);
+            axpy(1.0, &row[2 * d..], &mut grad_theta);
+        }
+
+        let stats = GradStats {
+            bwd_steps: bwd_acc.iter().sum(),
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * bwd_acc.iter().copied().max().unwrap_or(0).max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchObsGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: obs_losses.iter().sum(),
+            obs_losses,
             z_final: kept.data.clone(),
             grad_theta,
             grad_z0,

@@ -17,8 +17,15 @@
 //!
 //! Per-sample results are bit-compatible with solo runs in both serial
 //! paths; see `tests/batch_equivalence.rs`.
+//!
+//! The multi-observation entry points [`grad_obs_batched`] /
+//! [`grad_obs_batched_pooled`] apply the same dispatch rule to
+//! `L = Σ_k l_k(z(t_k))` objectives over an [`ObsGrid`].
 
-use super::{BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead};
+use super::{
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
+};
 use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
 use crate::solvers::Solver;
@@ -40,6 +47,22 @@ pub struct SummedLoss<'a> {
 impl LossHead for SummedLoss<'_> {
     fn loss_grad(&self, z_t: &[f32]) -> (f64, Vec<f32>) {
         let (losses, grad) = self.inner.loss_grad_batch(z_t, &self.spec);
+        (losses.iter().sum(), grad)
+    }
+}
+
+/// Observation analogue of [`SummedLoss`]: a [`BatchObsLossHead`] at a
+/// fixed spec viewed as a scalar-total [`ObsLossHead`] — `[1, n_z]` for
+/// the single-sample fallback, the full `[B, n_z]` for the device-fused
+/// path (the whole flat buffer as one "trajectory").
+pub struct SummedObsLoss<'a> {
+    pub inner: &'a dyn BatchObsLossHead,
+    pub spec: BatchSpec,
+}
+
+impl ObsLossHead for SummedObsLoss<'_> {
+    fn loss_grad_at(&self, k: usize, t: f64, z: &[f32]) -> (f64, Vec<f32>) {
+        let (losses, grad) = self.inner.loss_grad_at_batch(k, t, z, &self.spec);
         (losses.iter().sum(), grad)
     }
 }
@@ -68,6 +91,53 @@ pub fn merge_row_results(
     for r in rows {
         out.loss += r.loss;
         out.losses.push(r.loss);
+        out.z_final.extend_from_slice(&r.z_final);
+        crate::tensor::axpy(1.0, &r.grad_theta, &mut out.grad_theta);
+        out.grad_z0.extend_from_slice(&r.grad_z0);
+        if let (Some(acc), Some(rec)) = (&mut out.reconstructed_z0, &r.reconstructed_z0) {
+            acc.extend_from_slice(rec);
+        }
+        out.stats.bwd_steps += r.stats.bwd_steps;
+        out.stats.f_evals += r.stats.f_evals;
+        out.stats.vjp_evals += r.stats.vjp_evals;
+        out.stats.graph_depth = out.stats.graph_depth.max(r.stats.graph_depth);
+        out.stats.fwd.n_accepted += r.stats.fwd.n_accepted;
+        out.stats.fwd.n_trials += r.stats.fwd.n_trials;
+        out.stats.fwd.f_evals += r.stats.fwd.f_evals;
+        out.per_sample_fwd.push(r.stats.fwd);
+    }
+    out.stats.peak_mem_bytes = tracker.peak_bytes();
+    out
+}
+
+/// Merge per-row [`ObsGradResult`]s (the single-sample fallback) into one
+/// [`BatchObsGradResult`]; `k_obs` is the grid length (per-observation
+/// losses sum across rows).
+pub fn merge_row_obs_results(
+    rows: Vec<ObsGradResult>,
+    k_obs: usize,
+    bspec: &BatchSpec,
+    tracker: &Arc<MemTracker>,
+) -> BatchObsGradResult {
+    debug_assert_eq!(rows.len(), bspec.batch);
+    let p = rows.first().map(|r| r.grad_theta.len()).unwrap_or(0);
+    let mut out = BatchObsGradResult {
+        batch: bspec.batch,
+        n_z: bspec.n_z,
+        loss: 0.0,
+        obs_losses: vec![0.0f64; k_obs],
+        z_final: Vec::with_capacity(bspec.flat_len()),
+        grad_theta: vec![0.0f32; p],
+        grad_z0: Vec::with_capacity(bspec.flat_len()),
+        reconstructed_z0: rows.iter().all(|r| r.reconstructed_z0.is_some()).then(Vec::new),
+        stats: GradStats::default(),
+        per_sample_fwd: Vec::with_capacity(bspec.batch),
+    };
+    for r in rows {
+        out.loss += r.loss;
+        for (acc, l) in out.obs_losses.iter_mut().zip(&r.obs_losses) {
+            *acc += l;
+        }
         out.z_final.extend_from_slice(&r.z_final);
         crate::tensor::axpy(1.0, &r.grad_theta, &mut out.grad_theta);
         out.grad_z0.extend_from_slice(&r.grad_z0);
@@ -235,10 +305,156 @@ pub fn grad_batched_pooled(
     Ok(out)
 }
 
+/// Wrap a flat single-trajectory observation result (the device-fused
+/// path) into the batch container; the per-observation losses are already
+/// batch totals (the fused head sums rows).
+fn from_fused_obs(res: ObsGradResult, bspec: &BatchSpec) -> BatchObsGradResult {
+    BatchObsGradResult {
+        batch: bspec.batch,
+        n_z: bspec.n_z,
+        loss: res.loss,
+        obs_losses: res.obs_losses,
+        z_final: res.z_final,
+        grad_theta: res.grad_theta,
+        grad_z0: res.grad_z0,
+        reconstructed_z0: res.reconstructed_z0,
+        stats: res.stats,
+        per_sample_fwd: Vec::new(),
+    }
+}
+
+/// Multi-observation batched gradients with the device-fused vs native
+/// dispatch of [`grad_batched`] applied: device-compiled dynamics run the
+/// flat buffer through the single-trajectory [`GradMethod::grad_obs`]
+/// under one shared controller (one fused head call per observation);
+/// native dynamics run the truly batched [`GradMethod::grad_obs_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn grad_obs_batched(
+    method: &dyn GradMethod,
+    dynamics: &dyn Dynamics,
+    solver: &dyn Solver,
+    spec: &IvpSpec,
+    grid: &ObsGrid,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    loss: &dyn BatchObsLossHead,
+    tracker: Arc<MemTracker>,
+) -> Result<BatchObsGradResult> {
+    ensure!(
+        z0.len() == bspec.flat_len(),
+        "z0 has {} elements, want [{}, {}] = {}",
+        z0.len(),
+        bspec.batch,
+        bspec.n_z,
+        bspec.flat_len()
+    );
+    if dynamics.is_device_batched() {
+        ensure!(
+            dynamics.dim() == bspec.flat_len(),
+            "device-batched dynamics spans {} states but the batch is [{}, {}]",
+            dynamics.dim(),
+            bspec.batch,
+            bspec.n_z
+        );
+        let fused = SummedObsLoss { inner: loss, spec: *bspec };
+        let res = method.grad_obs(dynamics, solver, spec, grid, z0, &fused, tracker)?;
+        Ok(from_fused_obs(res, bspec))
+    } else {
+        method.grad_obs_batch(dynamics, solver, spec, grid, z0, bspec, loss, tracker)
+    }
+}
+
+/// Like [`grad_obs_batched`], but native dynamics are sharded into
+/// contiguous row blocks across `util::pool` workers — requires a
+/// separable (per-row) observation head; see [`grad_batched_pooled`] for
+/// the counting conventions.
+#[allow(clippy::too_many_arguments)]
+pub fn grad_obs_batched_pooled(
+    method: &(dyn GradMethod + Sync),
+    dynamics: &(dyn Dynamics + Sync),
+    solver: &(dyn Solver + Sync),
+    spec: &IvpSpec,
+    grid: &ObsGrid,
+    z0: &[f32],
+    bspec: &BatchSpec,
+    loss: &(dyn BatchObsLossHead + Sync),
+    tracker: Arc<MemTracker>,
+) -> Result<BatchObsGradResult> {
+    let workers = pool::num_threads().min(bspec.batch);
+    if dynamics.is_device_batched() || workers <= 1 {
+        return grad_obs_batched(method, dynamics, solver, spec, grid, z0, bspec, loss, tracker);
+    }
+    ensure!(
+        loss.separable(),
+        "pooled batching requires a separable (per-row) observation head; \
+         this head couples rows and can only run serially or device-fused"
+    );
+    ensure!(
+        z0.len() == bspec.flat_len(),
+        "z0 has {} elements, want [{}, {}]",
+        z0.len(),
+        bspec.batch,
+        bspec.n_z
+    );
+    let per = bspec.batch.div_ceil(workers);
+    let shards: Vec<(usize, usize)> = (0..workers)
+        .map(|w| (w * per, ((w + 1) * per).min(bspec.batch)))
+        .filter(|(s, e)| e > s)
+        .collect();
+    let c = dynamics.counters();
+    let f0 = c.f_evals.get();
+    let v0 = c.vjp_evals.get();
+    let results: Vec<Result<BatchObsGradResult>> = pool::par_map(&shards, |&(s, e)| {
+        let sub = BatchSpec::new(e - s, bspec.n_z);
+        method.grad_obs_batch(
+            dynamics,
+            solver,
+            spec,
+            grid,
+            &z0[s * bspec.n_z..e * bspec.n_z],
+            &sub,
+            loss,
+            tracker.clone(),
+        )
+    });
+    let mut parts = Vec::with_capacity(results.len());
+    for r in results {
+        parts.push(r?);
+    }
+
+    // concatenate shard rows in order; θ, per-obs losses and counts sum
+    let mut out = parts.remove(0);
+    for part in parts {
+        out.loss += part.loss;
+        for (acc, l) in out.obs_losses.iter_mut().zip(&part.obs_losses) {
+            *acc += l;
+        }
+        out.z_final.extend(part.z_final);
+        crate::tensor::axpy(1.0, &part.grad_theta, &mut out.grad_theta);
+        out.grad_z0.extend(part.grad_z0);
+        match (&mut out.reconstructed_z0, part.reconstructed_z0) {
+            (Some(acc), Some(rec)) => acc.extend(rec),
+            (opt, _) => *opt = None,
+        }
+        out.stats.bwd_steps += part.stats.bwd_steps;
+        out.stats.graph_depth = out.stats.graph_depth.max(part.stats.graph_depth);
+        out.stats.fwd.n_accepted += part.stats.fwd.n_accepted;
+        out.stats.fwd.n_trials += part.stats.fwd.n_trials;
+        out.per_sample_fwd.extend(part.per_sample_fwd);
+    }
+    out.batch = bspec.batch;
+    // exact totals from the global counter deltas (see grad_batched_pooled)
+    out.stats.f_evals = c.f_evals.get().saturating_sub(f0);
+    out.stats.vjp_evals = c.vjp_evals.get().saturating_sub(v0);
+    out.stats.fwd.f_evals = 0;
+    out.stats.peak_mem_bytes = tracker.peak_bytes();
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::grad::{by_name, SquareLoss};
+    use crate::grad::{by_name, ObsSquareLoss, SquareLoss};
     use crate::solvers::by_name as solver_by_name;
     use crate::solvers::dynamics::LinearToy;
 
@@ -287,5 +503,58 @@ mod tests {
             pooled.stats.fwd.n_accepted,
             serial.stats.fwd.n_accepted
         );
+    }
+
+    /// Pooled sharding of the multi-observation path agrees with the
+    /// serial batched path per row and per observation.
+    #[test]
+    fn pooled_obs_matches_serial() {
+        let toy = LinearToy::new(-0.4, 1);
+        let bspec = BatchSpec::new(6, 1);
+        let z0: Vec<f32> = vec![1.0, -0.5, 2.0, 0.25, -1.5, 0.8];
+        let solver = solver_by_name("alf").unwrap();
+        let spec = IvpSpec::fixed(0.0, 1.0, 0.1);
+        let grid = ObsGrid::new(vec![0.5, 1.0]).unwrap();
+        let head = ObsSquareLoss { weights: vec![1.0, 0.5] };
+        let method = by_name("mali").unwrap();
+        let serial = grad_obs_batched(
+            &*method,
+            &toy,
+            &*solver,
+            &spec,
+            &grid,
+            &z0,
+            &bspec,
+            &head,
+            MemTracker::new(),
+        )
+        .unwrap();
+        let pooled = grad_obs_batched_pooled(
+            &*method,
+            &toy,
+            &*solver,
+            &spec,
+            &grid,
+            &z0,
+            &bspec,
+            &head,
+            MemTracker::new(),
+        )
+        .unwrap();
+        assert_eq!(pooled.obs_losses.len(), 2);
+        assert!((pooled.loss - serial.loss).abs() < 1e-9 * (1.0 + serial.loss.abs()));
+        for k in 0..2 {
+            assert!(
+                (pooled.obs_losses[k] - serial.obs_losses[k]).abs()
+                    < 1e-9 * (1.0 + serial.obs_losses[k].abs()),
+                "obs loss {k}"
+            );
+        }
+        for b in 0..6 {
+            assert_eq!(pooled.grad_z0[b], serial.grad_z0[b], "grad_z0 row {b}");
+            assert_eq!(pooled.z_final[b], serial.z_final[b], "z_final row {b}");
+        }
+        assert!((pooled.grad_theta[0] - serial.grad_theta[0]).abs() < 1e-4);
+        assert_eq!(pooled.stats.f_evals, serial.stats.f_evals);
     }
 }

@@ -20,11 +20,15 @@
 //!   finite differences exactly.
 
 use super::{
-    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
 };
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
-use crate::solvers::integrate::{integrate, integrate_batch, BatchGridRecorder, GridRecorder};
+use crate::solvers::integrate::{
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, BatchGridRecorder,
+    GridRecorder,
+};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -85,14 +89,15 @@ impl GradMethod for Mali {
             v: Some(vec![0.0f32; cur.z.len()]), // a_v(T) = 0
         };
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
-        let n = rec.times.len() - 1;
+        let times = rec.times();
+        let n = times.len() - 1;
         for i in (1..=n).rev() {
-            let h = rec.times[i] - rec.times[i - 1];
+            let h = times[i] - times[i - 1];
             // reconstruct (z_{i-1}, v_{i-1}) via ψ⁻¹ and pull the adjoint
             // through the step — fused into one device call when the
             // dynamics exports the combined backward graph (§Perf)
             let (prev, a_prev, dth) = solver
-                .invert_and_vjp(dynamics, rec.times[i], h, &cur, &a)
+                .invert_and_vjp(dynamics, times[i], h, &cur, &a)
                 .expect("invertible solver");
             axpy(1.0, &dth, &mut grad_theta);
             a = a_prev;
@@ -236,6 +241,254 @@ impl GradMethod for Mali {
             n_z: bspec.n_z,
             loss: losses.iter().sum(),
             losses,
+            z_final: kept_z.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(cur.z.data),
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+
+    /// Multi-observation MALI: **one** continuous ψ⁻¹ reverse sweep over
+    /// the whole accepted grid, injecting each observation's decoder
+    /// cotangent as the sweep passes its `tᵢ` — evaluated at the
+    /// ψ⁻¹-reconstructed state, so nothing beyond the augmented end state
+    /// is retained between passes.  No per-segment re-initialisation of
+    /// `v`: the constant-memory law `N_z(N_f + 1)` holds independently of
+    /// both the step count and the number of observations K (asserted via
+    /// `MemTracker` in the test suite).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        loss: &dyn ObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<ObsGradResult> {
+        ensure!(
+            solver.is_invertible(),
+            "MALI requires an invertible solver (ALF); '{}' has no ψ⁻¹",
+            solver.name()
+        );
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        c.reset();
+
+        // ---- forward: end state + accepted grid + observation marks ----
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut rec = GridRecorder::new(spec.t0);
+        let (s_end, fwd) = integrate_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut rec,
+        )?;
+        let kept_z = TrackedBuf::new(s_end.z.clone(), tracker.clone());
+        let kept_v = TrackedBuf::new(
+            s_end.v.clone().expect("ALF state carries v"),
+            tracker.clone(),
+        );
+
+        // ---- backward: continuous ψ⁻¹ sweep with injections ------------
+        let mut cur = State {
+            z: kept_z.data.clone(),
+            v: Some(kept_v.data.clone()),
+        };
+        let mut a = State {
+            z: vec![0.0f32; cur.z.len()],
+            v: Some(vec![0.0f32; cur.z.len()]),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        let times = rec.times();
+        let marks = rec.obs_marks();
+        let n = times.len() - 1;
+        let mut mp = marks.len();
+        for i in (0..=n).rev() {
+            while mp > 0 && marks[mp - 1].1 == i {
+                let k = marks[mp - 1].0;
+                let (l, g) = loss.loss_grad_at(k, grid.time(k), &cur.z);
+                obs_losses[k] = l;
+                axpy(1.0, &g, &mut a.z);
+                mp -= 1;
+            }
+            if i == 0 {
+                break;
+            }
+            let h = times[i] - times[i - 1];
+            let (prev, a_prev, dth) = solver
+                .invert_and_vjp(dynamics, times[i], h, &cur, &a)
+                .expect("invertible solver");
+            axpy(1.0, &dth, &mut grad_theta);
+            a = a_prev;
+            cur = prev;
+        }
+        // final hop through v₀ = f(z₀, t₀)
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let (gz, gth) = dynamics.f_vjp(spec.t0, &cur.z, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let stats = GradStats {
+            bwd_steps: n,
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n.max(1),
+            fwd,
+        };
+        Ok(ObsGradResult {
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: kept_z.data.clone(),
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: Some(cur.z),
+            stats,
+        })
+    }
+
+    /// Batched multi-observation MALI: the lockstep ψ⁻¹ sweep of
+    /// [`GradMethod::grad_batch`] with per-row cotangent injections at
+    /// each row's observation marks — retained memory stays the flat
+    /// augmented end state, `B·N_z(N_f + 1)`, independent of steps and K.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchObsGradResult> {
+        ensure!(
+            solver.is_invertible(),
+            "MALI requires an invertible solver (ALF); '{}' has no ψ⁻¹",
+            solver.name()
+        );
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad_batch() for a terminal loss"
+        );
+        ensure!(
+            loss.separable(),
+            "the batched ψ⁻¹ sweep injects per row (rows desynchronize); a \
+             fused head must go through batch_driver::grad_obs_batched"
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        // ---- forward: end state + per-sample grids and marks -----------
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut rec = BatchGridRecorder::new(spec.t0, bspec.batch);
+        let (s_end, fwd) = integrate_batch_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut rec,
+        )?;
+        let kept_z = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
+        let kept_v = TrackedBuf::new(
+            s_end.v.as_ref().expect("ALF state carries v").data.clone(),
+            tracker.clone(),
+        );
+
+        // ---- backward: lockstep ψ⁻¹ sweep with per-row injections ------
+        let mut cur = BatchState::from_flat_zv(kept_z.data.clone(), kept_v.data.clone(), *bspec);
+        let mut a = BatchState::from_flat_zv(
+            vec![0.0f32; bspec.flat_len()],
+            vec![0.0f32; bspec.flat_len()],
+            *bspec,
+        );
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        let row_spec = BatchSpec::single(bspec.n_z);
+        let mut rem: Vec<usize> = rec.times.iter().map(|t| t.len() - 1).collect();
+        let mut mp: Vec<usize> = rec.obs_marks.iter().map(|m| m.len()).collect();
+        loop {
+            // inject the cotangents due at each row's current position,
+            // evaluated at the ψ⁻¹-reconstructed row
+            for b in 0..bspec.batch {
+                while mp[b] > 0 && rec.obs_marks[b][mp[b] - 1].1 == rem[b] {
+                    let k = rec.obs_marks[b][mp[b] - 1].0;
+                    let (ls, g) = loss.loss_grad_at_batch(
+                        k,
+                        grid.time(k),
+                        bspec.row(&cur.z.data, b),
+                        &row_spec,
+                    );
+                    obs_losses[k] += ls.iter().sum::<f64>();
+                    axpy(1.0, &g, bspec.row_mut(&mut a.z.data, b));
+                    mp[b] -= 1;
+                }
+            }
+            let active: Vec<usize> = (0..bspec.batch).filter(|&b| rem[b] > 0).collect();
+            if active.is_empty() {
+                break;
+            }
+            let ts_out: Vec<f64> = active.iter().map(|&b| rec.times[b][rem[b]]).collect();
+            let hs: Vec<f64> = active
+                .iter()
+                .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1])
+                .collect();
+            let full = active.len() == bspec.batch;
+            let (prev_sub, a_prev_sub, dth) = if full {
+                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur, &a)
+            } else {
+                let cur_sub = cur.gather_rows(&active);
+                let a_sub = a.gather_rows(&active);
+                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
+            }
+            .expect("invertible solver");
+            axpy(1.0, &dth, &mut grad_theta);
+            if full {
+                cur = prev_sub;
+                a = a_prev_sub;
+            } else {
+                cur.scatter_rows(&prev_sub, &active);
+                a.scatter_rows(&a_prev_sub, &active);
+            }
+            for &b in &active {
+                rem[b] -= 1;
+            }
+        }
+
+        // final hop through v₀ = f(z₀, t₀) at the reconstructed rows
+        let mut grad_z0 = a.z.data.clone();
+        super::aca::init_hop_batch(
+            dynamics,
+            spec.t0,
+            &cur.z.data,
+            bspec,
+            &a,
+            &mut grad_z0,
+            &mut grad_theta,
+        );
+
+        let n_total: usize = rec.times.iter().map(|t| t.len() - 1).sum();
+        let n_max: usize = rec.times.iter().map(|t| t.len() - 1).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchObsGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: obs_losses.iter().sum(),
+            obs_losses,
             z_final: kept_z.data.clone(),
             grad_theta,
             grad_z0,

@@ -13,19 +13,21 @@
 //! differentiated — the standard autodiff semantics of adaptive solvers),
 //! so naive agrees numerically with ACA while paying the full tape.
 
-use super::aca::{init_hop_batch, replay_backward_batch};
+use super::aca::{init_hop_batch, replay_backward_batch, replay_backward_batch_obs, replay_backward_obs};
 use super::{
-    BatchGradResult, BatchLossHead, GradMethod, GradResult, GradStats, IvpSpec, LossHead,
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
 };
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
 use crate::solvers::integrate::{
-    integrate, integrate_batch, AcceptedStep, BatchAcceptedStep, BatchStepObserver, StepObserver,
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, AcceptedStep,
+    BatchAcceptedStep, BatchStepObserver, StepObserver,
 };
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 pub struct Naive;
@@ -35,6 +37,8 @@ struct FullTape {
     tracker: Arc<MemTracker>,
     /// Accepted steps: (t, h, state-before).
     accepted: Vec<(f64, f64, State)>,
+    /// Observation marks `(k, steps_done)` for cotangent injection.
+    marks: Vec<(usize, usize)>,
     /// All retained buffers, including rejected-trial outputs.  Each trial
     /// retains its produced state **times N_f**: an eager framework holds
     /// every layer's activation of `f` per trial — that per-layer factor
@@ -45,6 +49,20 @@ struct FullTape {
     n_trials: usize,
     /// Graph depth counted over *all* trials.
     depth_units: usize,
+}
+
+impl FullTape {
+    fn new(tracker: Arc<MemTracker>, nf: usize) -> Self {
+        FullTape {
+            tracker,
+            accepted: Vec::new(),
+            marks: Vec::new(),
+            bufs: Vec::new(),
+            nf,
+            n_trials: 0,
+            depth_units: 0,
+        }
+    }
 }
 
 impl StepObserver for FullTape {
@@ -62,18 +80,36 @@ impl StepObserver for FullTape {
         self.n_trials += 1;
         self.depth_units += 1;
     }
+
+    fn on_observation(&mut self, k: usize, _t: f64, _state: &State) {
+        self.marks.push((k, self.accepted.len()));
+    }
 }
 
 /// Batched full tape: per-sample accepted steps plus every trial's
 /// per-layer activations — `N_z·N_f·N_t·m` with `N_z → B·N_z` and
-/// per-sample `N_t·m`.
+/// per-sample `N_t·m` — plus per-sample observation marks.
 struct BatchFullTape {
     tracker: Arc<MemTracker>,
     accepted: Vec<Vec<(f64, f64, State)>>,
+    marks: Vec<Vec<(usize, usize)>>,
     bufs: Vec<TrackedBuf>,
     nf: usize,
     /// Per-sample trial counts (the naive graph-depth units).
     trial_units: Vec<usize>,
+}
+
+impl BatchFullTape {
+    fn new(tracker: Arc<MemTracker>, nf: usize, batch: usize) -> Self {
+        BatchFullTape {
+            tracker,
+            accepted: vec![Vec::new(); batch],
+            marks: vec![Vec::new(); batch],
+            bufs: Vec::new(),
+            nf,
+            trial_units: vec![0; batch],
+        }
+    }
 }
 
 impl BatchStepObserver for BatchFullTape {
@@ -87,6 +123,10 @@ impl BatchStepObserver for BatchFullTape {
             self.tracker.clone(),
         ));
         self.trial_units[sample] += 1;
+    }
+
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, _z: &[f32], _v: Option<&[f32]>) {
+        self.marks[sample].push((k, self.accepted[sample].len()));
     }
 }
 
@@ -108,14 +148,7 @@ impl GradMethod for Naive {
         c.reset();
 
         let s0 = solver.init(dynamics, spec.t0, z0);
-        let mut tape = FullTape {
-            tracker: tracker.clone(),
-            accepted: Vec::new(),
-            bufs: Vec::new(),
-            nf: dynamics.depth_nf(),
-            n_trials: 0,
-            depth_units: 0,
-        };
+        let mut tape = FullTape::new(tracker.clone(), dynamics.depth_nf());
         let (s_end, fwd) = integrate(
             solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
         )?;
@@ -186,13 +219,7 @@ impl GradMethod for Naive {
         let v0 = c.vjp_evals.get();
 
         let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
-        let mut tape = BatchFullTape {
-            tracker: tracker.clone(),
-            accepted: vec![Vec::new(); bspec.batch],
-            bufs: Vec::new(),
-            nf: dynamics.depth_nf(),
-            trial_units: vec![0; bspec.batch],
-        };
+        let mut tape = BatchFullTape::new(tracker.clone(), dynamics.depth_nf(), bspec.batch);
         let (s_end, fwd) = integrate_batch(
             solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
         )?;
@@ -226,6 +253,167 @@ impl GradMethod for Naive {
             n_z: bspec.n_z,
             loss: losses.iter().sum(),
             losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+
+    /// Multi-observation naive backprop: **one** tape over the whole span
+    /// (every trial of every segment retained), with the observation
+    /// cotangents injected into the single backward walk at their marks —
+    /// no per-segment tape splitting.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        loss: &dyn ObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<ObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        c.reset();
+
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut tape = FullTape::new(tracker.clone(), dynamics.depth_nf());
+        let (s_end, fwd) = integrate_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut tape,
+        )?;
+
+        let mut a = State {
+            z: vec![0.0f32; s_end.z.len()],
+            v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_obs(
+            dynamics,
+            solver,
+            &tape.accepted,
+            &tape.marks,
+            grid,
+            &s_end.z,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+        );
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let first_z = tape
+                    .accepted
+                    .first()
+                    .map(|(_, _, s)| s.z.as_slice())
+                    .unwrap_or(z0);
+                let (gz, gth) = dynamics.f_vjp(spec.t0, first_z, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let stats = GradStats {
+            bwd_steps: tape.accepted.len(),
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * tape.depth_units.max(1),
+            fwd,
+        };
+        Ok(ObsGradResult {
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: s_end.z,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+        })
+    }
+
+    /// Batched multi-observation naive backprop: one batched tape with
+    /// per-sample marks, then the lockstep injection replay.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad_batch() for a terminal loss"
+        );
+        ensure!(
+            loss.separable(),
+            "batched native injection evaluates the head per row; a fused \
+             head must go through batch_driver::grad_obs_batched"
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut tape = BatchFullTape::new(tracker.clone(), dynamics.depth_nf(), bspec.batch);
+        let (s_end, fwd) = integrate_batch_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut tape,
+        )?;
+
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::zeros(&[bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_batch_obs(
+            dynamics,
+            solver,
+            &tape.accepted,
+            &tape.marks,
+            grid,
+            &s_end.z.data,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+        );
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = tape.accepted.iter().map(|s| s.len()).sum();
+        let depth_max: usize = tape.trial_units.iter().copied().max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * depth_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchObsGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: obs_losses.iter().sum(),
+            obs_losses,
             z_final: s_end.z.data,
             grad_theta,
             grad_z0,

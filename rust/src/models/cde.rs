@@ -10,8 +10,10 @@
 
 use super::{ParamBlock, SolveCfg, StepOutput};
 use crate::data::SequenceDataset;
-use crate::grad::{FnLoss, GradResult};
+use crate::grad::batch_driver::grad_obs_batched;
+use crate::grad::{BatchObsGradResult, FusedObsLoss, ObsGrid};
 use crate::runtime::{Engine, HloDynamics};
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
 use crate::spline::CubicSpline;
 use crate::tensor::argmax_rows;
@@ -165,6 +167,12 @@ impl NeuralCde {
     }
 
     /// One training step on a prepared batch.
+    ///
+    /// The classification loss reads only the terminal state, which on
+    /// the observation-grid path is a grid with the single observation
+    /// `t1` — the CDE rides the same centralized multi-observation
+    /// machinery as the latent ODE (and per-observation heads become a
+    /// one-line change here when a time-distributed CDE loss is wanted).
     pub fn step(
         &mut self,
         ctx: Vec<f32>,
@@ -175,23 +183,27 @@ impl NeuralCde {
         self.dynamics.set_ctx(0, ctx)?;
         let z0 = self.stem_fwd(x0)?;
 
-        let (res, logits, a_theta_head): (GradResult, Vec<f32>, Vec<f32>) = {
+        let (res, logits, a_theta_head): (BatchObsGradResult, Vec<f32>, Vec<f32>) = {
             let stash: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((vec![], vec![]));
             let this = &*self;
-            let loss_head = FnLoss(|z_t: &[f32]| {
+            let loss_head = FusedObsLoss(|_k: usize, _t: f64, z_t: &[f32]| {
                 let (loss, logits, az, ath) =
                     this.head_loss(z_t, y1h).expect("head loss executable");
                 *stash.borrow_mut() = (logits, ath);
                 (loss, az)
             });
-            let tracker = MemTracker::new();
-            let res = cfg.method.grad(
+            let grid = ObsGrid::new(vec![cfg.spec.t1])?;
+            let bspec = BatchSpec::new(self.batch, self.d);
+            let res = grad_obs_batched(
+                cfg.method,
                 &self.dynamics,
                 cfg.solver,
                 &cfg.spec,
+                &grid,
                 &z0,
+                &bspec,
                 &loss_head,
-                tracker,
+                MemTracker::new(),
             )?;
             let (logits, ath) = stash.into_inner();
             (res, logits, ath)

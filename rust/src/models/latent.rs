@@ -5,18 +5,28 @@
 //! → `(μ, log σ²)` → reparameterized `z₀` → latent ODE integrated through
 //! the prediction times → linear decoder → per-time MSE (+ β·KL).
 //!
-//! The multi-observation loss is handled segment-wise: the forward pass
-//! checkpoints the latent state at each observation (those states are
-//! needed to decode anyway); the backward pass walks segments in reverse,
-//! adding each observation's decoder cotangent to the running adjoint and
-//! pulling it through the segment with the gradient method under test —
-//! so naive / adjoint / ACA / MALI keep their per-segment memory and
-//! accuracy signatures.
+//! The multi-observation loss `L = Σ_k MSE(dec(z(t_k)), x_k)` rides the
+//! first-class observation-grid path: the prediction times form an
+//! [`ObsGrid`], the decoder + per-frame MSE is one [`FusedObsLoss`] head
+//! (a fused device call per observation, coupling the batch rows), and
+//! `grad::batch_driver::grad_obs_batched` runs the gradient method under
+//! test in **one** pass over the whole span — MALI does a single
+//! continuous ψ⁻¹ reverse sweep with cotangent injections at the
+//! observations (no per-segment re-initialisation of `v`, constant
+//! memory in both the step count and the number of frames), the adjoint
+//! one reverse augmented IVP with jumps, naive/ACA one tape/checkpoint
+//! replay with injections — so the four methods keep their Table-1
+//! memory and accuracy signatures on the paper's actual time-series
+//! workload.
 
 use super::{ParamBlock, SolveCfg, StepOutput};
-use crate::grad::FnLoss;
+use crate::grad::batch_driver::grad_obs_batched;
+use crate::grad::{FusedObsLoss, ObsGrid};
 use crate::runtime::{Engine, HloDynamics};
+use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::StepObserver;
+use crate::solvers::State;
 use crate::util::mem::MemTracker;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -93,43 +103,36 @@ impl LatentOde {
             .collect()
     }
 
-    /// Integrate one latent segment forward (no gradient bookkeeping).
-    fn advance(
-        &self,
-        cfg: &SolveCfg,
-        t0: f64,
-        t1: f64,
-        z: &[f32],
-    ) -> Result<Vec<f32>> {
-        let s0 = cfg.solver.init(&self.dynamics, t0, z);
-        let (s_end, _) = crate::solvers::integrate::integrate(
+    /// Predict the `t_out` future frames for the observed prefix (mean
+    /// latent path, no sampling): one continuous observation-aware
+    /// integration, decoding the exact-hit frames.  Returns
+    /// `batch × t_out × obs`.
+    pub fn predict(&self, seq: &[f32], cfg: &SolveCfg) -> Result<Vec<f32>> {
+        let (mu, _) = self.encode(seq)?;
+        let grid = ObsGrid::new(self.pred_times())?;
+        struct Frames(Vec<Vec<f32>>);
+        impl StepObserver for Frames {
+            fn on_observation(&mut self, _k: usize, _t: f64, state: &State) {
+                self.0.push(state.z.clone());
+            }
+        }
+        let s0 = cfg.solver.init(&self.dynamics, cfg.spec.t0, &mu);
+        let mut frames = Frames(Vec::with_capacity(self.t_out));
+        crate::solvers::integrate::integrate_obs(
             cfg.solver,
             &self.dynamics,
-            t0,
-            t1,
+            cfg.spec.t0,
+            cfg.spec.t1,
             s0,
             &cfg.spec.mode,
             &cfg.spec.norm,
-            &mut (),
+            &grid,
+            &mut frames,
         )?;
-        Ok(s_end.z)
-    }
-
-    /// Predict the `t_out` future frames for the observed prefix (mean
-    /// latent path, no sampling): returns `batch × t_out × obs`.
-    pub fn predict(&self, seq: &[f32], cfg: &SolveCfg) -> Result<Vec<f32>> {
-        let (mu, _) = self.encode(seq)?;
-        let mut preds = Vec::with_capacity(self.batch * self.t_out * self.obs);
-        let mut z = mu;
-        let mut t_prev = 0.0;
-        for &t in &self.pred_times() {
-            z = self.advance(cfg, t_prev, t, &z)?;
-            preds.push(self.decode(&z)?);
-            t_prev = t;
-        }
-        // interleave per-time blocks into (batch, t_out, obs)
+        // decode and interleave per-time blocks into (batch, t_out, obs)
         let mut out = vec![0.0f32; self.batch * self.t_out * self.obs];
-        for (k, block) in preds.iter().enumerate() {
+        for (k, z) in frames.0.iter().enumerate() {
+            let block = self.decode(z)?;
             for b in 0..self.batch {
                 let src = &block[b * self.obs..(b + 1) * self.obs];
                 let dst = (b * self.t_out + k) * self.obs;
@@ -174,81 +177,59 @@ impl LatentOde {
             .map(|((&m, &s), &e)| m + s * e)
             .collect();
 
-        // ---- forward through prediction times, checkpoint latent states --
-        let times = self.pred_times();
-        let mut checkpoints: Vec<Vec<f32>> = Vec::with_capacity(times.len() + 1);
-        checkpoints.push(z0.clone());
-        let mut mse_acc = 0.0f64;
-        let mut dec_cots: Vec<Vec<f32>> = Vec::with_capacity(times.len());
+        // ---- one centralized multi-observation gradient pass -----------
+        // The prediction times are the observation grid; the decoder +
+        // per-frame MSE is one fused observation head (a device call per
+        // frame, coupling the batch rows), evaluated wherever the method
+        // reads its states — forward tape/checkpoint states for
+        // naive/ACA, stored forward frames for the adjoint, the
+        // ψ⁻¹-reconstructed states for MALI's continuous reverse sweep.
         let n_total = (self.batch * self.t_out * self.obs) as f64;
-        {
-            let mut z = z0.clone();
-            let mut t_prev = 0.0;
-            for (k, &t) in times.iter().enumerate() {
-                z = self.advance(cfg, t_prev, t, &z)?;
-                checkpoints.push(z.clone());
-                let pred = self.decode(&z)?;
-                // target frame k across the batch
+        let dec_grad = RefCell::new(vec![0.0f32; self.dec.len()]);
+        let res = {
+            let this = &*self;
+            let head = FusedObsLoss(|k: usize, _t: f64, z: &[f32]| {
+                let pred = this.decode(z).expect("latent.dec executable");
+                let mut loss_k = 0.0f64;
                 let mut a_obs = vec![0.0f32; pred.len()];
-                for b in 0..self.batch {
-                    for j in 0..self.obs {
-                        let p = pred[b * self.obs + j];
-                        let tgt = target[(b * self.t_out + k) * self.obs + j];
+                for b in 0..this.batch {
+                    for j in 0..this.obs {
+                        let p = pred[b * this.obs + j];
+                        let tgt = target[(b * this.t_out + k) * this.obs + j];
                         let diff = p - tgt;
-                        mse_acc += (diff as f64) * (diff as f64);
-                        a_obs[b * self.obs + j] = 2.0 * diff / n_total as f32;
+                        loss_k += (diff as f64) * (diff as f64);
+                        a_obs[b * this.obs + j] = 2.0 * diff / n_total as f32;
                     }
                 }
-                dec_cots.push(a_obs);
-                t_prev = t;
-            }
-        }
-        let mse = mse_acc / n_total;
-
-        // ---- backward: walk segments in reverse with the grad method ----
-        self.dyn_grad.iter_mut().for_each(|g| *g = 0.0);
-        let mut dec_grad = vec![0.0f32; self.dec.len()];
-        let mut a_z = vec![0.0f32; nz];
-        let mut peak_mem = 0usize;
-        let mut n_steps = 0usize;
-        let mut f_evals = 0u64;
-        for k in (0..times.len()).rev() {
-            // decoder cotangent at t_k
-            let (az_dec, ath_dec) = self.decode_vjp(&checkpoints[k + 1], &dec_cots[k])?;
-            for (a, d) in a_z.iter_mut().zip(&az_dec) {
-                *a += d;
-            }
-            for (g, d) in dec_grad.iter_mut().zip(&ath_dec) {
-                *g += d;
-            }
-            // pull a_z through segment [t_{k-1}, t_k]
-            let t0 = if k == 0 { 0.0 } else { times[k - 1] };
-            let t1 = times[k];
-            let seg_spec = crate::grad::IvpSpec {
-                t0,
-                t1,
-                mode: cfg.spec.mode.clone(),
-                norm: cfg.spec.norm.clone(),
-            };
-            let a_snapshot = RefCell::new(a_z.clone());
-            let loss_head = FnLoss(|_z: &[f32]| (0.0, a_snapshot.borrow().clone()));
-            let tracker = MemTracker::new();
-            let res = cfg.method.grad(
-                &self.dynamics,
+                let (az, ath) = this
+                    .decode_vjp(z, &a_obs)
+                    .expect("latent.dec_vjp executable");
+                crate::tensor::axpy(1.0, &ath, &mut dec_grad.borrow_mut());
+                (loss_k / n_total, az)
+            });
+            let grid = ObsGrid::new(this.pred_times())?;
+            let bspec = BatchSpec::new(this.batch, this.latent);
+            grad_obs_batched(
+                cfg.method,
+                &this.dynamics,
                 cfg.solver,
-                &seg_spec,
-                &checkpoints[k],
-                &loss_head,
-                tracker,
-            )?;
-            for (g, d) in self.dyn_grad.iter_mut().zip(&res.grad_theta) {
-                *g += d;
-            }
-            a_z = res.grad_z0;
-            peak_mem = peak_mem.max(res.stats.peak_mem_bytes);
-            n_steps += res.stats.fwd.n_accepted;
-            f_evals += res.stats.f_evals;
-        }
+                &cfg.spec,
+                &grid,
+                &z0,
+                &bspec,
+                &head,
+                MemTracker::new(),
+            )?
+        };
+        let mse = res.loss;
+        self.dyn_grad.copy_from_slice(&res.grad_theta);
+        let a_z = res.grad_z0;
+        let dec_grad = dec_grad.into_inner();
+        let (peak_mem, n_steps, f_evals) = (
+            res.stats.peak_mem_bytes,
+            res.stats.fwd.n_accepted,
+            res.stats.f_evals,
+        );
 
         // ---- reparameterization + KL back to the encoder ----------------
         // a_μ = a_z0 + β·∂KL/∂μ;  a_logvar = a_z0·ε·σ/2 + β·∂KL/∂logvar

@@ -6,12 +6,27 @@
 //!
 //! Supports reverse-time integration (`t1 < t0`) — the adjoint method's
 //! backward IVP runs through the same loop.
+//!
+//! # Observation grids
+//!
+//! Time-series losses attach at *many* observation times `t₁ … t_K`, not
+//! just the endpoint.  [`ObsGrid`] makes those times first-class:
+//! [`integrate_obs`] / [`integrate_batch_obs`] land **exactly** (bitwise
+//! `t == tᵢ`) on every observation — the adaptive controller clamps `h`
+//! to the nearest barrier (next observation, else the endpoint) when it
+//! would overshoot, and fixed-step runs split the span at the
+//! observations (`⌈|seg|/h⌉` equal steps per segment, the same grid a
+//! segment-wise caller would have produced).  Each hit fires
+//! [`StepObserver::on_observation`] with the state at `tᵢ`.  With an
+//! empty grid every controller decision is identical to the plain
+//! [`integrate`] loop, which is itself just `integrate_obs` with no
+//! observations.
 
 use super::batch::BatchState;
 use super::dynamics::Dynamics;
 use super::{Solver, State};
 use crate::tensor::{error_norm, error_seminorm};
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Step-size policy.
 #[derive(Debug, Clone)]
@@ -57,12 +72,100 @@ impl ErrorNorm {
     }
 }
 
+/// A sorted grid of observation times `t₁ < t₂ < … < t_K` (strictly
+/// monotone in the integration direction, each inside the open-closed
+/// span `(t₀, t₁]`) at which a time-series loss reads the state.
+///
+/// The integration loops guarantee an accepted step ends **bitwise** on
+/// every grid time — the invariant the multi-observation gradient
+/// methods' cotangent injection relies on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsGrid {
+    times: Vec<f64>,
+}
+
+impl ObsGrid {
+    /// The empty grid: plain endpoint-only integration.
+    pub fn none() -> ObsGrid {
+        ObsGrid { times: Vec::new() }
+    }
+
+    /// Build a grid from strictly monotone, finite observation times
+    /// (increasing for forward-time solves, decreasing for reverse-time).
+    pub fn new(times: Vec<f64>) -> Result<ObsGrid> {
+        ensure!(
+            times.iter().all(|t| t.is_finite()),
+            "observation times must be finite: {times:?}"
+        );
+        ensure!(
+            times.windows(2).all(|w| w[1] > w[0])
+                || times.windows(2).all(|w| w[1] < w[0]),
+            "observation times must be strictly monotone: {times:?}"
+        );
+        Ok(ObsGrid { times })
+    }
+
+    /// `k` observations evenly spaced over `(t0, t1]`, the last exactly
+    /// `t1` — the layout of the latent-ODE prediction frames.
+    pub fn uniform(t0: f64, t1: f64, k: usize) -> ObsGrid {
+        let times = (1..=k)
+            .map(|i| {
+                if i == k {
+                    t1
+                } else {
+                    t0 + (t1 - t0) * (i as f64 / k as f64)
+                }
+            })
+            .collect();
+        ObsGrid { times }
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Observation time `t_k` (0-indexed).
+    pub fn time(&self, k: usize) -> f64 {
+        self.times[k]
+    }
+
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+
+    /// Check every observation lies in the open-closed span `(t0, t1]`,
+    /// ordered in the integration direction.
+    fn validate_for(&self, t0: f64, t1: f64) -> Result<()> {
+        let dir = (t1 - t0).signum();
+        for (k, &t) in self.times.iter().enumerate() {
+            ensure!(
+                (t - t0) * dir > 0.0 && (t1 - t) * dir >= 0.0,
+                "observation t[{k}] = {t} outside the open-closed span ({t0}, {t1}]"
+            );
+        }
+        if let Some(w) = self.times.windows(2).find(|w| (w[1] - w[0]) * dir <= 0.0) {
+            bail!(
+                "observation times {w:?} not strictly ordered in the \
+                 integration direction {t0} → {t1}"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// An accepted step, as seen by observers.
 pub struct AcceptedStep<'a> {
     pub index: usize,
-    /// Step start time and (signed) size; the step ends at `t + h`.
+    /// Step start time and (signed) size; the step ends at `t_end`.
     pub t: f64,
     pub h: f64,
+    /// Exact end time of the step: `t + h`, except snapped bitwise onto
+    /// the barrier (observation time or endpoint) the step was clamped to.
+    pub t_end: f64,
     pub before: &'a State,
     pub after: &'a State,
     /// Inner-loop iterations spent on this step (1 = accepted first try).
@@ -76,6 +179,10 @@ pub trait StepObserver {
     /// Every trial (accepted or rejected) with the state bytes it
     /// materialized — the naive method's tape accounting.
     fn on_trial(&mut self, _t: f64, _h: f64, _state_bytes: usize, _accepted: bool) {}
+    /// The trajectory reached observation `k` of the [`ObsGrid`] — fired
+    /// once per observation, in grid order, with `t` bitwise equal to the
+    /// grid time and `state` the solution there.
+    fn on_observation(&mut self, _k: usize, _t: f64, _state: &State) {}
 }
 
 impl StepObserver for () {}
@@ -112,39 +219,90 @@ pub fn integrate(
     norm: &ErrorNorm,
     obs: &mut dyn StepObserver,
 ) -> Result<(State, IntStats)> {
+    integrate_obs(
+        solver,
+        dynamics,
+        t0,
+        t1,
+        state0,
+        mode,
+        norm,
+        &ObsGrid::none(),
+        obs,
+    )
+}
+
+/// [`integrate`] with an observation grid: the loop lands bitwise on
+/// every `tᵢ` (see the module docs for the clamping rule) and fires
+/// [`StepObserver::on_observation`] there.  With an empty grid this *is*
+/// `integrate` — same decisions, same arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_obs(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: State,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn StepObserver,
+) -> Result<(State, IntStats)> {
     let span = t1 - t0;
     if span == 0.0 {
+        ensure!(
+            grid.is_empty(),
+            "zero-span integration cannot reach observation times"
+        );
         return Ok((state0, IntStats::default()));
     }
+    grid.validate_for(t0, t1)?;
     let dir = span.signum();
     let f0 = dynamics.counters().f_evals.get();
     let mut stats = IntStats::default();
     let mut state = state0;
     let mut t = t0;
+    let k_total = grid.len();
 
     match *mode {
         StepMode::Fixed { h } => {
             if h <= 0.0 {
                 bail!("fixed step size must be positive, got {h}");
             }
-            // land exactly on t1: n equal steps of |h'| ≤ h
-            let n = (span.abs() / h).ceil().max(1.0) as usize;
-            let hs = span / n as f64;
-            for i in 0..n {
-                let (next, _err) = solver.step(dynamics, t, hs, &state);
-                obs.on_trial(t, hs, next.bytes(), true);
-                obs.on_accept(&AcceptedStep {
-                    index: i,
-                    t,
-                    h: hs,
-                    before: &state,
-                    after: &next,
-                    trials: 1,
-                });
-                state = next;
-                t += hs;
-                stats.n_accepted += 1;
-                stats.n_trials += 1;
+            // Split the span at the observation times (plus a trailing
+            // segment to t1 unless the last observation IS t1): n equal
+            // steps of |h'| ≤ h per segment — with an empty grid this is
+            // the one-segment grid the plain loop always used.
+            let mut t_seg = t0;
+            for seg in 0..=k_total {
+                if seg == k_total && k_total > 0 && grid.time(k_total - 1) == t1 {
+                    break;
+                }
+                let seg_end = if seg < k_total { grid.time(seg) } else { t1 };
+                let n = ((seg_end - t_seg).abs() / h).ceil().max(1.0) as usize;
+                let hs = (seg_end - t_seg) / n as f64;
+                for i in 0..n {
+                    let (next, _err) = solver.step(dynamics, t, hs, &state);
+                    obs.on_trial(t, hs, next.bytes(), true);
+                    let t_end = if i + 1 == n { seg_end } else { t + hs };
+                    obs.on_accept(&AcceptedStep {
+                        index: stats.n_accepted,
+                        t,
+                        h: hs,
+                        t_end,
+                        before: &state,
+                        after: &next,
+                        trials: 1,
+                    });
+                    state = next;
+                    t = t_end;
+                    stats.n_accepted += 1;
+                    stats.n_trials += 1;
+                }
+                t_seg = seg_end;
+                if seg < k_total {
+                    obs.on_observation(seg, t, &state);
+                }
             }
         }
         StepMode::Adaptive {
@@ -163,10 +321,26 @@ pub fn integrate(
             let p = solver.order() as f64;
             let mut h = h_init.abs().min(h_max).max(h_min) * dir;
             let eps = 1e-12 * span.abs().max(1.0);
+            let mut next_obs = 0usize;
             while (t1 - t) * dir > eps {
-                // clamp to not overshoot the end point
-                if (t + h - t1) * dir > 0.0 {
-                    h = t1 - t;
+                // fire observations the previous step happened to end on
+                // exactly (without having been clamped to them)
+                while next_obs < k_total && grid.time(next_obs) == t {
+                    obs.on_observation(next_obs, t, &state);
+                    next_obs += 1;
+                }
+                // clamp to the nearest barrier: the next unvisited
+                // observation, else the endpoint
+                let target = if next_obs < k_total {
+                    grid.time(next_obs)
+                } else {
+                    t1
+                };
+                let mut aimed = false;
+                let h_free = h;
+                if (t + h - target) * dir > 0.0 {
+                    h = target - t;
+                    aimed = true;
                 }
                 let mut trials = 0usize;
                 loop {
@@ -183,18 +357,25 @@ pub fn integrate(
                     obs.on_trial(t, h, next.bytes(), en <= 1.0);
                     let at_floor = h.abs() <= h_min * 1.0000001;
                     if en <= 1.0 || at_floor {
-                        // accept
+                        // accept; a step that aimed at a barrier lands on
+                        // it bitwise
+                        let t_end = if aimed { target } else { t + h };
                         obs.on_accept(&AcceptedStep {
                             index: stats.n_accepted,
                             t,
                             h,
+                            t_end,
                             before: &state,
                             after: &next,
                             trials,
                         });
                         state = next;
-                        t += h;
+                        t = t_end;
                         stats.n_accepted += 1;
+                        if aimed && next_obs < k_total {
+                            obs.on_observation(next_obs, t, &state);
+                            next_obs += 1;
+                        }
                         // grow for the next step (Hairer's controller)
                         let factor = if en > 0.0 {
                             (0.9 * en.powf(-1.0 / p)).clamp(0.2, 10.0)
@@ -202,12 +383,23 @@ pub fn integrate(
                             10.0
                         };
                         h = (h.abs() * factor).clamp(h_min, h_max) * dir;
+                        // A barrier-clamped step is an output-point
+                        // artifact, not an error-control decision: restore
+                        // the controller's pre-clamp step so its memory
+                        // survives every observation (standard output-point
+                        // handling; with an empty grid the only clamp is
+                        // the final one, so decisions are unchanged).
+                        if aimed && h_free.abs() > h.abs() {
+                            h = h_free;
+                        }
                         break;
                     }
                     // reject: shrink (paper's DecayFactor with the standard
-                    // error-proportional rule)
+                    // error-proportional rule); a shrunken step no longer
+                    // lands on the barrier
                     let factor = (0.9 * en.powf(-1.0 / p)).clamp(0.2, 0.9);
                     h = (h.abs() * factor).max(h_min) * dir;
+                    aimed = false;
                     if trials > 60 {
                         bail!(
                             "step-size search did not converge at t={t} (h={h}, err={en})"
@@ -215,6 +407,17 @@ pub fn integrate(
                     }
                 }
             }
+            // an observation may coincide with the final accepted time
+            while next_obs < k_total && grid.time(next_obs) == t {
+                obs.on_observation(next_obs, t, &state);
+                next_obs += 1;
+            }
+            ensure!(
+                next_obs == k_total,
+                "adaptive integration terminated at t = {t} before reaching \
+                 observation time {} (span {t0} → {t1} too short?)",
+                grid.time(next_obs.min(k_total - 1))
+            );
         }
     }
     stats.f_evals = dynamics.counters().f_evals.get() - f0;
@@ -233,9 +436,12 @@ pub struct BatchAcceptedStep<'a> {
     pub sample: usize,
     /// Per-sample accepted-step index.
     pub index: usize,
-    /// Step start time and (signed) size; the step ends at `t + h`.
+    /// Step start time and (signed) size; the step ends at `t_end`.
     pub t: f64,
     pub h: f64,
+    /// Exact end time of the step: `t + h`, except snapped bitwise onto
+    /// the barrier (observation time or endpoint) the step was clamped to.
+    pub t_end: f64,
     pub before_z: &'a [f32],
     pub before_v: Option<&'a [f32]>,
     pub after_z: &'a [f32],
@@ -260,6 +466,18 @@ pub trait BatchStepObserver {
     /// Every trial of one sample (accepted or rejected) with the row bytes
     /// it materialized.
     fn on_trial(&mut self, _sample: usize, _t: f64, _h: f64, _state_bytes: usize, _accepted: bool) {
+    }
+    /// Sample `sample` reached observation `k` of the [`ObsGrid`] — fired
+    /// once per (sample, observation), in grid order per sample, with `t`
+    /// bitwise equal to the grid time and the row slices its state there.
+    fn on_observation(
+        &mut self,
+        _sample: usize,
+        _k: usize,
+        _t: f64,
+        _z: &[f32],
+        _v: Option<&[f32]>,
+    ) {
     }
 }
 
@@ -329,12 +547,45 @@ pub fn integrate_batch(
     norm: &ErrorNorm,
     obs: &mut dyn BatchStepObserver,
 ) -> Result<(BatchState, BatchIntStats)> {
+    integrate_batch_obs(
+        solver,
+        dynamics,
+        t0,
+        t1,
+        state0,
+        mode,
+        norm,
+        &ObsGrid::none(),
+        obs,
+    )
+}
+
+/// [`integrate_batch`] with an observation grid shared by all rows: every
+/// sample's controller lands bitwise on every `tᵢ` (per-row clamping,
+/// decision-identical to a solo [`integrate_obs`] run of that row) and
+/// fires [`BatchStepObserver::on_observation`] per (sample, observation).
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch_obs(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn BatchStepObserver,
+) -> Result<(BatchState, BatchIntStats)> {
     let spec = state0.spec();
     let nb = spec.batch;
     let span = t1 - t0;
     let f0 = dynamics.counters().f_evals.get();
     let mut per = vec![IntStats::default(); nb];
     if span == 0.0 {
+        ensure!(
+            grid.is_empty(),
+            "zero-span integration cannot reach observation times"
+        );
         return Ok((
             state0,
             BatchIntStats {
@@ -343,7 +594,9 @@ pub fn integrate_batch(
             },
         ));
     }
+    grid.validate_for(t0, t1)?;
     let dir = span.signum();
+    let k_total = grid.len();
     let mut state = state0;
 
     match *mode {
@@ -351,33 +604,60 @@ pub fn integrate_batch(
             if h <= 0.0 {
                 bail!("fixed step size must be positive, got {h}");
             }
-            let n = (span.abs() / h).ceil().max(1.0) as usize;
-            let hs = span / n as f64;
-            let hs_row = vec![hs; nb];
+            // lockstep segments between observation times (see the solo
+            // loop): all rows share the grid, so one batched solver step
+            // per grid point and one observation sweep per segment end
+            let mut hs_row = vec![0.0f64; nb];
             let mut ts_buf = vec![t0; nb];
+            let mut index = 0usize;
             let mut t = t0;
-            for i in 0..n {
-                ts_buf.fill(t);
-                let (next, _err) = solver.step_batch(dynamics, &ts_buf, &hs_row, &state);
-                let row_bytes = next.row_bytes();
-                for (b, st) in per.iter_mut().enumerate() {
-                    obs.on_trial(b, t, hs, row_bytes, true);
-                    obs.on_accept(&BatchAcceptedStep {
-                        sample: b,
-                        index: i,
-                        t,
-                        h: hs,
-                        before_z: spec.row(&state.z.data, b),
-                        before_v: state.v.as_ref().map(|v| spec.row(&v.data, b)),
-                        after_z: spec.row(&next.z.data, b),
-                        after_v: next.v.as_ref().map(|v| spec.row(&v.data, b)),
-                        trials: 1,
-                    });
-                    st.n_accepted += 1;
-                    st.n_trials += 1;
+            let mut t_seg = t0;
+            for seg in 0..=k_total {
+                if seg == k_total && k_total > 0 && grid.time(k_total - 1) == t1 {
+                    break;
                 }
-                state = next;
-                t += hs;
+                let seg_end = if seg < k_total { grid.time(seg) } else { t1 };
+                let n = ((seg_end - t_seg).abs() / h).ceil().max(1.0) as usize;
+                let hs = (seg_end - t_seg) / n as f64;
+                hs_row.fill(hs);
+                for i in 0..n {
+                    ts_buf.fill(t);
+                    let (next, _err) = solver.step_batch(dynamics, &ts_buf, &hs_row, &state);
+                    let row_bytes = next.row_bytes();
+                    let t_end = if i + 1 == n { seg_end } else { t + hs };
+                    for (b, st) in per.iter_mut().enumerate() {
+                        obs.on_trial(b, t, hs, row_bytes, true);
+                        obs.on_accept(&BatchAcceptedStep {
+                            sample: b,
+                            index,
+                            t,
+                            h: hs,
+                            t_end,
+                            before_z: spec.row(&state.z.data, b),
+                            before_v: state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                            after_z: spec.row(&next.z.data, b),
+                            after_v: next.v.as_ref().map(|v| spec.row(&v.data, b)),
+                            trials: 1,
+                        });
+                        st.n_accepted += 1;
+                        st.n_trials += 1;
+                    }
+                    state = next;
+                    t = t_end;
+                    index += 1;
+                }
+                t_seg = seg_end;
+                if seg < k_total {
+                    for b in 0..nb {
+                        obs.on_observation(
+                            b,
+                            seg,
+                            t,
+                            spec.row(&state.z.data, b),
+                            state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                        );
+                    }
+                }
             }
         }
         StepMode::Adaptive {
@@ -410,6 +690,9 @@ pub fn integrate_batch(
             let mut h_cur = vec![h0; nb];
             let mut trials_cur = vec![0usize; nb];
             let mut accepted_idx = vec![0usize; nb];
+            let mut next_obs = vec![0usize; nb];
+            let mut aimed = vec![false; nb];
+            let mut h_free = vec![h0; nb];
             // same entry condition as the solo loop: a sub-eps span means
             // zero steps
             let mut active: Vec<usize> = if span.abs() > eps {
@@ -418,10 +701,31 @@ pub fn integrate_batch(
                 Vec::new()
             };
             while !active.is_empty() {
-                // start-of-step overshoot clamp for rows opening a new step
+                // rows opening a new step: fire exact-coincidence
+                // observations, then clamp to the nearest barrier
                 for &b in &active {
-                    if trials_cur[b] == 0 && (t_cur[b] + h_cur[b] - t1) * dir > 0.0 {
-                        h_cur[b] = t1 - t_cur[b];
+                    if trials_cur[b] == 0 {
+                        while next_obs[b] < k_total && grid.time(next_obs[b]) == t_cur[b] {
+                            obs.on_observation(
+                                b,
+                                next_obs[b],
+                                t_cur[b],
+                                spec.row(&state.z.data, b),
+                                state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                            );
+                            next_obs[b] += 1;
+                        }
+                        let target = if next_obs[b] < k_total {
+                            grid.time(next_obs[b])
+                        } else {
+                            t1
+                        };
+                        aimed[b] = false;
+                        h_free[b] = h_cur[b];
+                        if (t_cur[b] + h_cur[b] - target) * dir > 0.0 {
+                            h_cur[b] = target - t_cur[b];
+                            aimed[b] = true;
+                        }
                     }
                 }
                 let ts: Vec<f64> = active.iter().map(|&b| t_cur[b]).collect();
@@ -453,12 +757,20 @@ pub fn integrate_batch(
                     obs.on_trial(b, t_cur[b], h_cur[b], row_bytes, en <= 1.0);
                     let at_floor = h_cur[b].abs() <= h_min * 1.0000001;
                     if en <= 1.0 || at_floor {
-                        // accept this sample's step
+                        // accept this sample's step; an aimed step lands
+                        // bitwise on its barrier
+                        let target = if next_obs[b] < k_total {
+                            grid.time(next_obs[b])
+                        } else {
+                            t1
+                        };
+                        let t_end = if aimed[b] { target } else { t_cur[b] + h_cur[b] };
                         obs.on_accept(&BatchAcceptedStep {
                             sample: b,
                             index: accepted_idx[b],
                             t: t_cur[b],
                             h: h_cur[b],
+                            t_end,
                             before_z: spec.row(&state.z.data, b),
                             before_v: state.v.as_ref().map(|v| spec.row(&v.data, b)),
                             after_z: sub_spec.row(&next_sub.z.data, k),
@@ -466,9 +778,19 @@ pub fn integrate_batch(
                             trials: trials_cur[b],
                         });
                         state.copy_row_from(b, &next_sub, k);
-                        t_cur[b] += h_cur[b];
+                        t_cur[b] = t_end;
                         per[b].n_accepted += 1;
                         accepted_idx[b] += 1;
+                        if aimed[b] && next_obs[b] < k_total {
+                            obs.on_observation(
+                                b,
+                                next_obs[b],
+                                t_cur[b],
+                                spec.row(&state.z.data, b),
+                                state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                            );
+                            next_obs[b] += 1;
+                        }
                         // grow for the next step (Hairer's controller)
                         let factor = if en > 0.0 {
                             (0.9 * en.powf(-1.0 / p)).clamp(0.2, 10.0)
@@ -476,14 +798,22 @@ pub fn integrate_batch(
                             10.0
                         };
                         h_cur[b] = (h_cur[b].abs() * factor).clamp(h_min, h_max) * dir;
+                        // restore the pre-clamp controller step after a
+                        // barrier hit (see the solo loop)
+                        if aimed[b] && h_free[b].abs() > h_cur[b].abs() {
+                            h_cur[b] = h_free[b];
+                        }
                         trials_cur[b] = 0;
                         if (t1 - t_cur[b]) * dir > eps {
                             still.push(b); // not there yet — stays active
                         }
                     } else {
-                        // reject: shrink (same error-proportional rule as solo)
+                        // reject: shrink (same error-proportional rule as
+                        // solo); the shrunken step no longer lands on the
+                        // barrier
                         let factor = (0.9 * en.powf(-1.0 / p)).clamp(0.2, 0.9);
                         h_cur[b] = (h_cur[b].abs() * factor).max(h_min) * dir;
+                        aimed[b] = false;
                         if trials_cur[b] > 60 {
                             bail!(
                                 "step-size search did not converge for sample {b} at t={} (h={}, err={en})",
@@ -496,6 +826,26 @@ pub fn integrate_batch(
                 }
                 active = still;
             }
+            // a row's final accepted time may coincide with an observation
+            for b in 0..nb {
+                while next_obs[b] < k_total && grid.time(next_obs[b]) == t_cur[b] {
+                    obs.on_observation(
+                        b,
+                        next_obs[b],
+                        t_cur[b],
+                        spec.row(&state.z.data, b),
+                        state.v.as_ref().map(|v| spec.row(&v.data, b)),
+                    );
+                    next_obs[b] += 1;
+                }
+                ensure!(
+                    next_obs[b] == k_total,
+                    "adaptive integration of sample {b} terminated at t = {} \
+                     before reaching observation time {}",
+                    t_cur[b],
+                    grid.time(next_obs[b].min(k_total - 1))
+                );
+            }
         }
     }
     let stats = BatchIntStats {
@@ -506,11 +856,19 @@ pub fn integrate_batch(
 }
 
 /// Per-sample accepted-grid recorder — what batched MALI keeps from the
-/// forward pass (paper Algo. 4, one grid per sample).
+/// forward pass (paper Algo. 4, one grid per sample) plus the observation
+/// bookkeeping of the multi-observation backward sweeps.
+///
+/// This is the **single** recorder implementation; the solo
+/// [`GridRecorder`] is a thin `B = 1` wrapper over it.
 pub struct BatchGridRecorder {
-    /// Per sample: accepted step start times plus the final endpoint.
+    /// Per sample: accepted step end times (snapped exactly onto barriers)
+    /// plus the starting point `t0`.
     pub times: Vec<Vec<f64>>,
     pub trials_per_step: Vec<Vec<usize>>,
+    /// Per sample: `(k, steps_done)` — observation `k` of the grid was hit
+    /// after `steps_done` accepted steps (i.e. at `times[sample][steps_done]`).
+    pub obs_marks: Vec<Vec<(usize, usize)>>,
 }
 
 impl BatchGridRecorder {
@@ -518,39 +876,68 @@ impl BatchGridRecorder {
         BatchGridRecorder {
             times: vec![vec![t0]; batch],
             trials_per_step: vec![Vec::new(); batch],
+            obs_marks: vec![Vec::new(); batch],
         }
     }
 }
 
 impl BatchStepObserver for BatchGridRecorder {
     fn on_accept(&mut self, step: &BatchAcceptedStep) {
-        self.times[step.sample].push(step.t + step.h);
+        self.times[step.sample].push(step.t_end);
         self.trials_per_step[step.sample].push(step.trials);
+    }
+
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, _z: &[f32], _v: Option<&[f32]>) {
+        let steps_done = self.times[sample].len() - 1;
+        self.obs_marks[sample].push((k, steps_done));
     }
 }
 
 /// Convenience: integrate and also record the accepted time grid — what
 /// MALI keeps from the forward pass (paper Algo. 4 "keep accepted
-/// discretized time points").
-pub struct GridRecorder {
-    /// Accepted step start times plus the final endpoint.
-    pub times: Vec<f64>,
-    pub trials_per_step: Vec<usize>,
-}
+/// discretized time points").  A thin single-sample wrapper over
+/// [`BatchGridRecorder`] so the grid/observation bookkeeping exists once.
+pub struct GridRecorder(BatchGridRecorder);
 
 impl GridRecorder {
     pub fn new(t0: f64) -> Self {
-        GridRecorder {
-            times: vec![t0],
-            trials_per_step: Vec::new(),
-        }
+        GridRecorder(BatchGridRecorder::new(t0, 1))
+    }
+
+    /// Accepted step end times plus the starting point `t0`.
+    pub fn times(&self) -> &[f64] {
+        &self.0.times[0]
+    }
+
+    pub fn trials_per_step(&self) -> &[usize] {
+        &self.0.trials_per_step[0]
+    }
+
+    /// `(k, steps_done)` observation marks — see
+    /// [`BatchGridRecorder::obs_marks`].
+    pub fn obs_marks(&self) -> &[(usize, usize)] {
+        &self.0.obs_marks[0]
     }
 }
 
 impl StepObserver for GridRecorder {
     fn on_accept(&mut self, step: &AcceptedStep) {
-        self.times.push(step.t + step.h);
-        self.trials_per_step.push(step.trials);
+        self.0.on_accept(&BatchAcceptedStep {
+            sample: 0,
+            index: step.index,
+            t: step.t,
+            h: step.h,
+            t_end: step.t_end,
+            before_z: &step.before.z,
+            before_v: step.before.v.as_deref(),
+            after_z: &step.after.z,
+            after_v: step.after.v.as_deref(),
+            trials: step.trials,
+        });
+    }
+
+    fn on_observation(&mut self, k: usize, t: f64, state: &State) {
+        self.0.on_observation(0, k, t, &state.z, state.v.as_deref());
     }
 }
 
@@ -647,14 +1034,255 @@ mod tests {
             &mut rec,
         )
         .unwrap();
-        assert_eq!(rec.times.len(), stats.n_accepted + 1);
-        assert!((rec.times.last().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(rec.times().len(), stats.n_accepted + 1);
+        // the final step aims at t1 and lands on it bitwise
+        assert_eq!(*rec.times().last().unwrap(), 1.0);
         // strictly increasing grid
-        for w in rec.times.windows(2) {
+        for w in rec.times().windows(2) {
             assert!(w[1] > w[0]);
         }
         // m ≥ 1
         assert!(stats.m() >= 1.0);
+    }
+
+    #[test]
+    fn obs_grid_validation() {
+        assert!(ObsGrid::new(vec![0.5, 0.25, 0.75]).is_err(), "unsorted");
+        assert!(ObsGrid::new(vec![0.5, 0.5]).is_err(), "duplicate");
+        assert!(ObsGrid::new(vec![f64::NAN]).is_err(), "non-finite");
+        let g = ObsGrid::new(vec![0.25, 0.5, 1.0]).unwrap();
+        assert!(g.validate_for(0.0, 1.0).is_ok());
+        assert!(g.validate_for(0.0, 0.75).is_err(), "obs beyond t1");
+        assert!(g.validate_for(0.5, 1.0).is_err(), "obs at/before t0");
+        assert!(g.validate_for(1.0, 0.0).is_err(), "wrong direction");
+        // reverse-time grids are fine when decreasing
+        let r = ObsGrid::new(vec![0.75, 0.25]).unwrap();
+        assert!(r.validate_for(1.0, 0.0).is_ok());
+        // zero-span with observations is rejected loudly
+        let toy = LinearToy::new(1.0, 1);
+        let s = by_name("alf").unwrap();
+        let s0 = s.init(&toy, 0.0, &[1.0]);
+        assert!(integrate_obs(
+            &*s,
+            &toy,
+            0.5,
+            0.5,
+            s0,
+            &StepMode::Fixed { h: 0.1 },
+            &ErrorNorm::Full,
+            &g,
+            &mut (),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn obs_grid_uniform_layout() {
+        let g = ObsGrid::uniform(0.0, 1.0, 4);
+        assert_eq!(g.times(), &[0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(g.time(3), 1.0);
+        assert!(ObsGrid::uniform(0.0, 1.0, 0).is_empty());
+    }
+
+    /// Adaptive stepping lands bitwise on every observation time, fires
+    /// the callbacks in order, and the accepted grid contains the
+    /// observation times exactly.
+    #[test]
+    fn adaptive_obs_exact_hit() {
+        struct Seen(Vec<(usize, f64)>);
+        impl StepObserver for Seen {
+            fn on_observation(&mut self, k: usize, t: f64, _state: &State) {
+                self.0.push((k, t));
+            }
+        }
+        let toy = LinearToy::new(0.9, 2);
+        let grid = ObsGrid::new(vec![0.31, 0.5, 0.77, 1.3, 2.0]).unwrap();
+        for solver in ["alf", "dopri5"] {
+            let s = by_name(solver).unwrap();
+            let s0 = s.init(&toy, 0.0, &[1.0, -0.5]);
+            let mut rec = GridRecorder::new(0.0);
+            let mut seen = Seen(Vec::new());
+            struct Both<'a>(&'a mut GridRecorder, &'a mut Seen);
+            impl StepObserver for Both<'_> {
+                fn on_accept(&mut self, step: &AcceptedStep) {
+                    self.0.on_accept(step);
+                }
+                fn on_observation(&mut self, k: usize, t: f64, state: &State) {
+                    self.0.on_observation(k, t, state);
+                    self.1.on_observation(k, t, state);
+                }
+            }
+            let (_, stats) = integrate_obs(
+                &*s,
+                &toy,
+                0.0,
+                2.0,
+                s0,
+                &StepMode::adaptive(1e-4, 1e-6),
+                &ErrorNorm::Full,
+                &grid,
+                &mut Both(&mut rec, &mut seen),
+            )
+            .unwrap();
+            assert_eq!(seen.0.len(), grid.len(), "{solver}: all observations fired");
+            for (k, (got_k, got_t)) in seen.0.iter().enumerate() {
+                assert_eq!(*got_k, k, "{solver}: observation order");
+                // bitwise landing
+                assert_eq!(*got_t, grid.time(k), "{solver}: exact hit at obs {k}");
+                assert!(
+                    rec.times().contains(got_t),
+                    "{solver}: accepted grid contains obs {k}"
+                );
+            }
+            assert_eq!(rec.obs_marks().len(), grid.len());
+            for &(k, steps_done) in rec.obs_marks() {
+                assert_eq!(rec.times()[steps_done], grid.time(k), "mark placement");
+            }
+            assert!(stats.n_accepted >= grid.len(), "{solver}");
+        }
+    }
+
+    /// A grid containing only the endpoint is *indistinguishable* from the
+    /// empty grid: the clamp target is t1 either way, so every controller
+    /// decision, accepted time, trial count and the final state are
+    /// identical — the pin for "empty grid == pre-observation behaviour".
+    #[test]
+    fn endpoint_only_grid_identical_to_empty() {
+        let toy = LinearToy::new(1.1, 3);
+        let s = by_name("alf").unwrap();
+        let mode = StepMode::adaptive(1e-5, 1e-7);
+        let z0 = [1.0f32, 0.3, -2.0];
+
+        let s0 = s.init(&toy, 0.0, &z0);
+        let mut rec_a = GridRecorder::new(0.0);
+        let (fa, sa) =
+            integrate(&*s, &toy, 0.0, 1.7, s0, &mode, &ErrorNorm::Full, &mut rec_a).unwrap();
+
+        let grid = ObsGrid::new(vec![1.7]).unwrap();
+        let s0 = s.init(&toy, 0.0, &z0);
+        let mut rec_b = GridRecorder::new(0.0);
+        let (fb, sb) = integrate_obs(
+            &*s,
+            &toy,
+            0.0,
+            1.7,
+            s0,
+            &mode,
+            &ErrorNorm::Full,
+            &grid,
+            &mut rec_b,
+        )
+        .unwrap();
+
+        assert_eq!(fa.z, fb.z, "final state bitwise");
+        assert_eq!(fa.v, fb.v, "final v bitwise");
+        assert_eq!(sa.n_accepted, sb.n_accepted);
+        assert_eq!(sa.n_trials, sb.n_trials);
+        assert_eq!(sa.f_evals, sb.f_evals);
+        assert_eq!(rec_a.times(), rec_b.times(), "accepted grids bitwise");
+        // the only difference: the observation fired, exactly at t1
+        assert_eq!(rec_a.obs_marks().len(), 0);
+        assert_eq!(rec_b.obs_marks(), &[(0, sa.n_accepted)]);
+    }
+
+    /// Fixed-mode observation segmentation reproduces exactly the grid a
+    /// segment-wise caller (the legacy latent-ODE loop) would have taken:
+    /// per segment ⌈|seg|/h⌉ equal steps, landing on every boundary.
+    #[test]
+    fn fixed_obs_segments_match_segmentwise_calls() {
+        let toy = LinearToy::new(-0.4, 2);
+        let s = by_name("alf").unwrap();
+        let h = 0.25;
+        let obs_times = [0.34, 0.5, 1.0];
+        let grid = ObsGrid::new(obs_times.to_vec()).unwrap();
+
+        let s0 = s.init(&toy, 0.0, &[1.0, 2.0]);
+        let mut rec = GridRecorder::new(0.0);
+        let (_, stats) = integrate_obs(
+            &*s,
+            &toy,
+            0.0,
+            1.0,
+            s0,
+            &StepMode::Fixed { h },
+            &ErrorNorm::Full,
+            &grid,
+            &mut rec,
+        )
+        .unwrap();
+
+        // expected per-segment step counts: ceil(0.34/0.25)=2,
+        // ceil(0.16/0.25)=1, ceil(0.5/0.25)=2 — and no trailing segment
+        // because the last observation is t1
+        assert_eq!(stats.n_accepted, 5);
+        for &t in &obs_times {
+            assert!(rec.times().contains(&t), "grid lands on {t}");
+        }
+        assert_eq!(
+            rec.obs_marks(),
+            &[(0, 2), (1, 3), (2, 5)],
+            "observation marks at segment boundaries"
+        );
+        assert_eq!(*rec.times().last().unwrap(), 1.0);
+    }
+
+    /// Batched obs-aware integration: every row of a batch hits every
+    /// observation bitwise and matches a solo run of that row
+    /// decision-for-decision (grids, marks, trials).
+    #[test]
+    fn batched_obs_matches_solo_rows() {
+        use crate::solvers::batch::BatchSpec;
+        let toy = LinearToy::new(0.9, 1);
+        let s = by_name("alf").unwrap();
+        let mode = StepMode::adaptive(1e-4, 1e-6);
+        let grid = ObsGrid::new(vec![0.4, 1.1, 2.0]).unwrap();
+        let rows: [f32; 3] = [0.001, 0.7, 4.0];
+
+        let mut solo_grids = Vec::new();
+        let mut solo_marks = Vec::new();
+        for &z in &rows {
+            let s0 = s.init(&toy, 0.0, &[z]);
+            let mut rec = GridRecorder::new(0.0);
+            integrate_obs(
+                &*s,
+                &toy,
+                0.0,
+                2.0,
+                s0,
+                &mode,
+                &ErrorNorm::Full,
+                &grid,
+                &mut rec,
+            )
+            .unwrap();
+            solo_grids.push(rec.times().to_vec());
+            solo_marks.push(rec.obs_marks().to_vec());
+        }
+
+        let spec = BatchSpec::new(3, 1);
+        let b0 = s.init_batch(&toy, 0.0, &rows, &spec);
+        let mut rec = BatchGridRecorder::new(0.0, 3);
+        integrate_batch_obs(
+            &*s,
+            &toy,
+            0.0,
+            2.0,
+            b0,
+            &mode,
+            &ErrorNorm::Full,
+            &grid,
+            &mut rec,
+        )
+        .unwrap();
+
+        for b in 0..3 {
+            assert_eq!(rec.times[b], solo_grids[b], "grid row {b} bitwise");
+            assert_eq!(rec.obs_marks[b], solo_marks[b], "marks row {b}");
+            // every observation time is in the row's accepted grid, bitwise
+            for &t in grid.times() {
+                assert!(rec.times[b].contains(&t), "row {b} lands on {t}");
+            }
+        }
     }
 
     /// Batched integration of B copies of the same IVP at different
@@ -680,7 +1308,7 @@ mod tests {
             let (sf, st) =
                 integrate(&*s, &toy, 0.0, 2.0, s0, &mode, &ErrorNorm::Full, &mut rec).unwrap();
             solo_final.push(sf.z[0]);
-            solo_grids.push(rec.times);
+            solo_grids.push(rec.times().to_vec());
             solo_stats.push(st);
         }
 

@@ -100,11 +100,11 @@ fn prop_full_trajectory_reconstruction() {
 
         // walk backward from the end state
         let mut cur = s_end;
-        let n = rec.times.len() - 1;
+        let n = rec.times().len() - 1;
         assert_eq!(states.len(), n + 1, "case {case}");
         for i in (1..=n).rev() {
-            let h = rec.times[i] - rec.times[i - 1];
-            cur = solver.invert(&dynamics, rec.times[i], h, &cur).unwrap();
+            let h = rec.times()[i] - rec.times()[i - 1];
+            cur = solver.invert(&dynamics, rec.times()[i], h, &cur).unwrap();
             let expect = &states[i - 1];
             for j in 0..d {
                 assert!(
@@ -222,10 +222,10 @@ fn prop_fixed_grid_exact() {
             &mut rec,
         )
         .unwrap();
-        assert!((rec.times.last().unwrap() - t1).abs() < 1e-9);
-        let n = rec.times.len() - 1;
+        assert!((rec.times().last().unwrap() - t1).abs() < 1e-9);
+        let n = rec.times().len() - 1;
         let hs = t1 / n as f64;
-        for (i, w) in rec.times.windows(2).enumerate() {
+        for (i, w) in rec.times().windows(2).enumerate() {
             assert!(
                 ((w[1] - w[0]) - hs).abs() < 1e-9,
                 "step {i}: {} vs {hs}",
