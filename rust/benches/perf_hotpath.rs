@@ -1,129 +1,348 @@
-//! Hot-path micro-benchmarks for the performance pass (EXPERIMENTS.md
-//! §Perf): per-layer timings of everything on the MALI request path.
+//! perf_hotpath: solver/grad hot-path throughput + allocation pressure,
+//! with a JSON emitter seeding the repo's recorded bench trajectory
+//! (`BENCH_hotpath.json` at the repository root).
 //!
-//! * L1/L2 — one fused ALF ψ / ψ⁻¹ / ψ-vjp PJRT execute per model family
-//!   (the Pallas kernel inside the AOT graph), vs the host-composed path
-//!   (`f` + host algebra) it replaces.
-//! * L3 — full MALI gradient step for the img16 classifier (the Fig. 5
-//!   training hot loop) and the adaptive integration loop overhead on
-//!   native dynamics (pure coordinator cost, no PJRT).
+//! The zero-allocation refactor's claim is that steps/sec on small-`N_z`
+//! models is bounded by the allocator, not the FLOPs.  This bench pins
+//! that empirically, per configuration:
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! * **kernel A/B** — the MALI round trip (N fixed ALF steps forward +
+//!   the full ψ⁻¹ reverse sweep) driven once through the *allocating*
+//!   `step`/`invert_and_vjp` entry points and once through the
+//!   workspace `step_into`/`invert_and_vjp_into` path.  Identical
+//!   arithmetic (the wrappers delegate to the `_into` kernels), so the
+//!   ratio isolates pure allocator cost; the acceptance bar is ≥ 2× on
+//!   the small-`N_z` solo fixed-grid config.
+//! * **end-to-end grads** — steps/sec, heap allocations/step and heap
+//!   bytes/step (via a counting global allocator) for
+//!   solo/batch × fixed/adaptive × all four gradient methods on the E1
+//!   toy dynamics.
+//!
+//! Run: `cargo bench --bench perf_hotpath` (append `-- --smoke` for the
+//! short CI windows; `MALI_BENCH_OUT` overrides the JSON path).
 
 use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
-use mali_ode::models::image::OdeImageClassifier;
-use mali_ode::models::SolveCfg;
-use mali_ode::runtime::{Engine, HloDynamics};
-use mali_ode::solvers::alf::AlfSolver;
-use mali_ode::solvers::dynamics::{Dynamics, MlpDynamics};
+use mali_ode::solvers::batch::BatchSpec;
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::workspace::SolverWorkspace;
+use mali_ode::solvers::{Solver, State};
 use mali_ode::util::bench::{time_until, Table};
+use mali_ode::util::json::Json;
 use mali_ode::util::mem::MemTracker;
-use mali_ode::util::rng::Rng;
-use std::rc::Rc;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting wrapper over the system allocator: every allocation path
+/// (alloc, zeroed, realloc) bumps the counters, so bytes/step can be
+/// attributed to each configuration.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64) {
+    (
+        ALLOCS.load(Ordering::Relaxed),
+        ALLOC_BYTES.load(Ordering::Relaxed),
+    )
+}
+
+/// MALI round trip through the *allocating* entry points: N fixed ALF
+/// steps forward, then the ψ⁻¹ + vjp reverse sweep.
+fn roundtrip_alloc(solver: &dyn Solver, toy: &LinearToy, z0: &[f32], h: f64, n: usize) -> f32 {
+    let mut state = solver.init(toy, 0.0, z0);
+    for i in 0..n {
+        let (next, _err) = solver.step(toy, i as f64 * h, h, &state);
+        state = next;
+    }
+    let mut a = State {
+        z: state.z.iter().map(|&z| 2.0 * z).collect(),
+        v: Some(vec![0.0f32; state.z.len()]),
+    };
+    let mut grad_theta = vec![0.0f32; 1];
+    let mut cur = state;
+    for i in (1..=n).rev() {
+        let (prev, a_prev, dth) = solver
+            .invert_and_vjp(toy, i as f64 * h, h, &cur, &a)
+            .expect("ALF is invertible");
+        mali_ode::tensor::axpy(1.0, &dth, &mut grad_theta);
+        cur = prev;
+        a = a_prev;
+    }
+    grad_theta[0] + a.z[0]
+}
+
+/// The same round trip through the workspace path: preallocated states,
+/// `step_into` / `invert_and_vjp_into`, zero steady-state allocations.
+#[allow(clippy::too_many_arguments)]
+fn roundtrip_ws(
+    solver: &dyn Solver,
+    toy: &LinearToy,
+    z0: &[f32],
+    h: f64,
+    n: usize,
+    ws: &mut SolverWorkspace,
+    bufs: &mut [State; 4],
+) -> f32 {
+    let [state, next, prev, a_prev] = bufs;
+    *state = solver.init(toy, 0.0, z0);
+    let mut err = Vec::new();
+    for i in 0..n {
+        solver.step_into(toy, i as f64 * h, h, state, next, &mut err, ws);
+        std::mem::swap(state, next);
+    }
+    let mut a = State {
+        z: state.z.iter().map(|&z| 2.0 * z).collect(),
+        v: Some(vec![0.0f32; state.z.len()]),
+    };
+    let mut grad_theta = vec![0.0f32; 1];
+    for i in (1..=n).rev() {
+        let ok = solver.invert_and_vjp_into(
+            toy,
+            i as f64 * h,
+            h,
+            state,
+            &a,
+            prev,
+            a_prev,
+            &mut grad_theta,
+            ws,
+        );
+        assert!(ok, "ALF is invertible");
+        std::mem::swap(state, prev);
+        std::mem::swap(&mut a, a_prev);
+    }
+    grad_theta[0] + a.z[0]
+}
+
+/// Measure one end-to-end gradient configuration: accepted steps/sec,
+/// heap allocations/step and heap bytes/step (one protocol for solo and
+/// batch, so the recorded JSON stays comparable across configs).
+fn measure_config(
+    name: String,
+    budget: f64,
+    table: &mut Table,
+    configs: &mut Vec<(String, Json)>,
+    mut run: impl FnMut() -> usize,
+) {
+    let steps = run().max(1) as f64;
+    let t = time_until(budget, || {
+        std::hint::black_box(run());
+    });
+    let before = alloc_snapshot();
+    run();
+    let after = alloc_snapshot();
+    let sps = steps / t.min_s;
+    let aps = (after.0 - before.0) as f64 / steps;
+    let bps = (after.1 - before.1) as f64 / steps;
+    table.row(&[
+        name.clone(),
+        format!("{sps:.0}"),
+        format!("{aps:.1}"),
+        format!("{bps:.0}"),
+    ]);
+    configs.push((
+        name,
+        Json::obj(vec![
+            ("steps_per_sec", Json::Num(sps)),
+            ("allocs_per_step", Json::Num(aps)),
+            ("bytes_per_step", Json::Num(bps)),
+            ("accepted_steps", Json::Num(steps)),
+        ]),
+    ));
+}
 
 fn main() {
-    let engine = Rc::new(Engine::from_env().expect("run `make artifacts`"));
-    let mut rng = Rng::new(7);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke { 0.15 } else { 0.8 };
+    let mut root = Json::Obj(Default::default());
+    let mut configs: Vec<(String, Json)> = Vec::new();
     let mut table = Table::new(
-        "perf_hotpath: per-op / per-step wall time",
-        &["op", "mean", "min", "iters"],
+        "perf_hotpath: throughput and allocation pressure",
+        &["config", "steps/s", "allocs/step", "bytes/step"],
     );
 
-    // ---- L1/L2: fused ALF step vs host-composed, per family -------------
-    for family in ["img16", "img32", "latent"] {
-        let mut dynamics = HloDynamics::new(engine.clone(), family).unwrap();
-        dynamics.init_params(&mut rng).unwrap();
-        let n = dynamics.dim();
-        let mut z = vec![0.0f32; n];
-        rng.fill_uniform_sym(&mut z, 0.5);
-        let v = dynamics.f(0.0, &z);
-        let solver = AlfSolver::new(1.0);
+    // ---- kernel A/B: allocating vs workspace MALI round trip ------------
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+    for &(label, n_z) in &[("n_z=4", 4usize), ("n_z=64", 64usize)] {
+        let toy = LinearToy::new(-0.3, n_z);
+        let solver = solver_by_name("alf").unwrap();
+        let z0: Vec<f32> = (0..n_z).map(|i| 1.0 + 0.01 * i as f32).collect();
+        let (h, n) = (0.02, 250usize);
 
-        let t = time_until(0.5, || {
-            let _ = solver.psi(&dynamics, 0.0, 0.25, &z, &v);
+        let t_alloc = time_until(budget, || {
+            std::hint::black_box(roundtrip_alloc(&*solver, &toy, &z0, h, n));
         });
-        table.row(&[
-            format!("{family}.step (fused ψ)"),
-            t.fmt_ms(),
-            format!("{:.3}ms", t.min_s * 1e3),
-            t.iters.to_string(),
-        ]);
+        let mut ws = SolverWorkspace::new();
+        let mut bufs = [
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+        ];
+        let t_ws = time_until(budget, || {
+            std::hint::black_box(roundtrip_ws(&*solver, &toy, &z0, h, n, &mut ws, &mut bufs));
+        });
+        // allocation counts for one workspace round trip (steady state)
+        roundtrip_ws(&*solver, &toy, &z0, h, n, &mut ws, &mut bufs);
+        let before = alloc_snapshot();
+        roundtrip_ws(&*solver, &toy, &z0, h, n, &mut ws, &mut bufs);
+        let after = alloc_snapshot();
 
-        dynamics.use_fused = false;
-        let t = time_until(0.5, || {
-            let _ = solver.psi(&dynamics, 0.0, 0.25, &z, &v);
-        });
+        // 2n micro-steps per round trip (n forward + n reverse)
+        let steps = 2.0 * n as f64;
+        let sps_alloc = steps / t_alloc.min_s;
+        let sps_ws = steps / t_ws.min_s;
+        let speedup = sps_ws / sps_alloc;
         table.row(&[
-            format!("{family}.step (composed f)"),
-            t.fmt_ms(),
-            format!("{:.3}ms", t.min_s * 1e3),
-            t.iters.to_string(),
+            format!("kernel.{label}.alloc"),
+            format!("{sps_alloc:.0}"),
+            "-".into(),
+            "-".into(),
         ]);
-        dynamics.use_fused = true;
-
-        let az = vec![1.0f32; n];
-        let av = vec![0.0f32; n];
-        let t = time_until(0.5, || {
-            let _ = solver.psi_vjp(&dynamics, 0.0, 0.25, &z, &v, &az, &av);
-        });
         table.row(&[
-            format!("{family}.step_vjp (fused)"),
-            t.fmt_ms(),
-            format!("{:.3}ms", t.min_s * 1e3),
-            t.iters.to_string(),
+            format!("kernel.{label}.ws"),
+            format!("{sps_ws:.0}"),
+            format!("{:.2}", (after.0 - before.0) as f64 / steps),
+            format!("{:.1}", (after.1 - before.1) as f64 / steps),
         ]);
+        println!("kernel {label}: workspace vs allocating speedup = {speedup:.2}x");
+        speedups.push((
+            label.to_string(),
+            Json::obj(vec![
+                ("steps_per_sec_alloc", Json::Num(sps_alloc)),
+                ("steps_per_sec_ws", Json::Num(sps_ws)),
+                ("speedup_ws_vs_alloc", Json::Num(speedup)),
+                (
+                    "ws_allocs_per_step",
+                    Json::Num((after.0 - before.0) as f64 / steps),
+                ),
+                (
+                    "ws_bytes_per_step",
+                    Json::Num((after.1 - before.1) as f64 / steps),
+                ),
+            ]),
+        ));
     }
 
-    // ---- L3: full MALI training step (img16) -----------------------------
-    {
-        let mut model = OdeImageClassifier::new(engine.clone(), "img16", &mut rng).unwrap();
-        let mut x = vec![0.0f32; model.batch * model.d_in];
-        rng.fill_uniform_sym(&mut x, 0.5);
-        let mut y1h = vec![0.0f32; model.batch * model.classes];
-        for b in 0..model.batch {
-            y1h[b * model.classes + b % model.classes] = 1.0;
-        }
-        let solver = mali_ode::solvers::by_name("alf").unwrap();
-        let method = grad_by_name("mali").unwrap();
-        let t = time_until(2.0, || {
-            let cfg = SolveCfg {
-                solver: &*solver,
-                spec: IvpSpec::fixed(0.0, 1.0, 0.25),
-                method: &*method,
-            };
-            let _ = model.step(&x, &y1h, &cfg, false).unwrap();
-        });
-        table.row(&[
-            "img16 full MALI train step".into(),
-            t.fmt_ms(),
-            format!("{:.3}ms", t.min_s * 1e3),
-            t.iters.to_string(),
-        ]);
-    }
-
-    // ---- L3: pure coordinator overhead (native dynamics, no PJRT) --------
-    {
-        let dynamics = MlpDynamics::new(32, 64, &mut rng);
-        let mut z = vec![0.0f32; 32];
-        rng.fill_uniform_sym(&mut z, 0.5);
-        let solver = mali_ode::solvers::by_name("alf").unwrap();
-        for (label, method_name) in [("mali", "mali"), ("aca", "aca"), ("adjoint", "adjoint")] {
+    // ---- end-to-end gradient configurations -----------------------------
+    let n_z = 4usize;
+    let batch = 32usize;
+    let t_end = 2.0;
+    for &(mode_label, fixed) in &[("fixed", true), ("adaptive", false)] {
+        for method_name in ["mali", "aca", "naive", "adjoint"] {
             let method = grad_by_name(method_name).unwrap();
-            let t = time_until(0.5, || {
-                let tracker = MemTracker::new();
-                let spec = IvpSpec::adaptive(0.0, 2.0, 1e-4, 1e-6);
-                let _ = method
-                    .grad(&dynamics, &*solver, &spec, &z, &SquareLoss, tracker)
-                    .unwrap();
-            });
-            table.row(&[
-                format!("native MLP-32 grad ({label})"),
-                t.fmt_ms(),
-                format!("{:.3}ms", t.min_s * 1e3),
-                t.iters.to_string(),
-            ]);
+            let solver = if method_name == "adjoint" {
+                solver_by_name("heun-euler").unwrap()
+            } else {
+                solver_by_name("alf").unwrap()
+            };
+            let spec = if fixed {
+                IvpSpec::fixed(0.0, t_end, 0.02)
+            } else {
+                IvpSpec::adaptive(0.0, t_end, 1e-4, 1e-6)
+            };
+
+            // solo
+            let toy = LinearToy::new(-0.3, n_z);
+            let z0: Vec<f32> = (0..n_z).map(|i| 1.0 + 0.01 * i as f32).collect();
+            measure_config(
+                format!("solo.{mode_label}.{method_name}"),
+                budget,
+                &mut table,
+                &mut configs,
+                || {
+                    method
+                        .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+                        .unwrap()
+                        .stats
+                        .fwd
+                        .n_accepted
+                },
+            );
+
+            // batch (row-steps/sec; one grad_batch call)
+            let bspec = BatchSpec::new(batch, n_z);
+            let mut z0b = Vec::with_capacity(bspec.flat_len());
+            for b in 0..batch {
+                let scale = 1.0 + 0.005 * b as f32;
+                z0b.extend((0..n_z).map(|i| scale * (1.0 + 0.01 * i as f32)));
+            }
+            measure_config(
+                format!("batch{batch}.{mode_label}.{method_name}"),
+                budget,
+                &mut table,
+                &mut configs,
+                || {
+                    method
+                        .grad_batch(
+                            &toy,
+                            &*solver,
+                            &spec,
+                            &z0b,
+                            &bspec,
+                            &SquareLoss,
+                            MemTracker::new(),
+                        )
+                        .unwrap()
+                        .stats
+                        .fwd
+                        .n_accepted
+                },
+            );
         }
     }
 
     table.print();
+
+    // ---- JSON emission ---------------------------------------------------
+    if let Json::Obj(map) = &mut root {
+        map.insert("bench".into(), Json::Str("perf_hotpath".into()));
+        map.insert(
+            "provenance".into(),
+            Json::Str(if smoke { "measured-smoke" } else { "measured" }.into()),
+        );
+        map.insert(
+            "kernel".into(),
+            Json::Obj(speedups.into_iter().collect()),
+        );
+        map.insert(
+            "configs".into(),
+            Json::Obj(configs.into_iter().collect()),
+        );
+    }
+    let out_path = std::env::var("MALI_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_hotpath.json".to_string());
+    match std::fs::write(&out_path, root.pretty() + "\n") {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
 }

@@ -20,6 +20,7 @@ use crate::solvers::integrate::{
     integrate, integrate_batch, integrate_batch_obs, integrate_obs, AcceptedStep,
     BatchAcceptedStep, BatchStepObserver, StepObserver,
 };
+use crate::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -121,7 +122,9 @@ impl ObsLossHead for NeverObsLoss {
 /// backwards, injecting each observation's cotangent — evaluated at the
 /// stored forward state — when crossing its mark, accumulating the
 /// θ-gradient into `grad_theta` and the per-observation losses into
-/// `obs_losses`.  The pulled-back cotangent is left in `a`.
+/// `obs_losses`.  The pulled-back cotangent is left in `a`; the replay
+/// ping-pongs `a` against a workspace buffer, so each backward step is
+/// allocation-free for dynamics with in-place vjp paths.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn replay_backward_obs(
     dynamics: &dyn Dynamics,
@@ -134,9 +137,11 @@ pub(super) fn replay_backward_obs(
     a: &mut State,
     grad_theta: &mut [f32],
     obs_losses: &mut [f64],
+    ws: &mut SolverWorkspace,
 ) {
     let n = steps.len();
     let mut mp = marks.len();
+    let mut a_prev = ws.take_state(a);
     for i in (0..=n).rev() {
         while mp > 0 && marks[mp - 1].1 == i {
             let k = marks[mp - 1].0;
@@ -150,10 +155,10 @@ pub(super) fn replay_backward_obs(
             break;
         }
         let (t, h, before) = &steps[i - 1];
-        let (a_prev, dth) = solver.step_vjp(dynamics, *t, *h, before, a);
-        axpy(1.0, &dth, grad_theta);
-        *a = a_prev;
+        solver.step_vjp_into(dynamics, *t, *h, before, a, &mut a_prev, grad_theta, ws);
+        std::mem::swap(a, &mut a_prev);
     }
+    ws.put_state(a_prev);
 }
 
 /// Shared by ACA and naive: replay the per-sample accepted steps backwards
@@ -166,6 +171,7 @@ pub(super) fn replay_backward_batch(
     steps: &[Vec<(f64, f64, State)>],
     a: &mut BatchState,
     grad_theta: &mut [f32],
+    ws: &mut BatchWorkspace,
 ) {
     let no_marks = vec![Vec::new(); steps.len()];
     replay_backward_batch_obs(
@@ -179,6 +185,7 @@ pub(super) fn replay_backward_batch(
         a,
         grad_theta,
         &mut [],
+        ws,
     );
 }
 
@@ -200,12 +207,14 @@ pub(super) fn replay_backward_batch_obs(
     a: &mut BatchState,
     grad_theta: &mut [f32],
     obs_losses: &mut [f64],
+    ws: &mut BatchWorkspace,
 ) {
     let batch = steps.len();
     let spec = a.spec();
     let row_spec = BatchSpec::single(spec.n_z);
     let mut rem: Vec<usize> = steps.iter().map(|s| s.len()).collect();
     let mut mp: Vec<usize> = marks.iter().map(|m| m.len()).collect();
+    let mut a_prev = ws.take_batch(spec.batch, spec.n_z, a.v.is_some());
     loop {
         // inject the observation cotangents due at each row's position
         for b in 0..batch {
@@ -238,22 +247,21 @@ pub(super) fn replay_backward_batch_obs(
         let s_in_sub = BatchState::from_states(&before);
         // skip the cotangent gather/scatter while every row is active
         let full = active.len() == batch;
-        let (a_prev_sub, dth) = if full {
-            solver.step_vjp_batch(dynamics, &ts, &hs, &s_in_sub, a)
+        if full {
+            solver
+                .step_vjp_batch_into(dynamics, &ts, &hs, &s_in_sub, a, &mut a_prev, grad_theta, ws);
+            std::mem::swap(a, &mut a_prev);
         } else {
             let a_sub = a.gather_rows(&active);
-            solver.step_vjp_batch(dynamics, &ts, &hs, &s_in_sub, &a_sub)
-        };
-        axpy(1.0, &dth, grad_theta);
-        if full {
-            *a = a_prev_sub;
-        } else {
+            let (a_prev_sub, dth) = solver.step_vjp_batch(dynamics, &ts, &hs, &s_in_sub, &a_sub);
+            axpy(1.0, &dth, grad_theta);
             a.scatter_rows(&a_prev_sub, &active);
         }
         for &b in &active {
             rem[b] -= 1;
         }
     }
+    ws.put_batch(a_prev);
 }
 
 /// Shared by ACA and naive: the initialisation hop `v₀ = f(z₀, t₀)` for
@@ -311,16 +319,19 @@ impl GradMethod for Aca {
         let (loss_val, dl_dz) = loss.loss_grad(&s_end.z);
 
         // ---- backward: local replay per checkpoint ----------------------
+        let mut ws = SolverWorkspace::new();
         let mut a = State {
             z: dl_dz,
             v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
         };
+        let mut a_prev = ws.take_state(&a);
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         for (t, h, before) in ckpt.steps.iter().rev() {
-            let (a_prev, dth) = solver.step_vjp(dynamics, *t, *h, before, &a);
-            axpy(1.0, &dth, &mut grad_theta);
-            a = a_prev;
+            solver
+                .step_vjp_into(dynamics, *t, *h, before, &a, &mut a_prev, &mut grad_theta, &mut ws);
+            std::mem::swap(&mut a, &mut a_prev);
         }
+        ws.put_state(a_prev);
         // initialisation hop (ALF: v₀ = f(z₀, t₀) depends on z₀ and θ)
         let mut grad_z0 = a.z.clone();
         if let Some(av0) = &a.v {
@@ -390,8 +401,9 @@ impl GradMethod for Aca {
                 .as_ref()
                 .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
         };
+        let mut ws = BatchWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
-        replay_backward_batch(dynamics, solver, &ckpt.steps, &mut a, &mut grad_theta);
+        replay_backward_batch(dynamics, solver, &ckpt.steps, &mut a, &mut grad_theta, &mut ws);
 
         let mut grad_z0 = a.z.data.clone();
         init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
@@ -453,6 +465,7 @@ impl GradMethod for Aca {
             z: vec![0.0f32; s_end.z.len()],
             v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
         };
+        let mut ws = SolverWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
         replay_backward_obs(
@@ -466,6 +479,7 @@ impl GradMethod for Aca {
             &mut a,
             &mut grad_theta,
             &mut obs_losses,
+            &mut ws,
         );
         // initialisation hop (ALF: v₀ = f(z₀, t₀) depends on z₀ and θ)
         let mut grad_z0 = a.z.clone();
@@ -542,6 +556,7 @@ impl GradMethod for Aca {
                 .as_ref()
                 .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
         };
+        let mut ws = BatchWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
         replay_backward_batch_obs(
@@ -555,6 +570,7 @@ impl GradMethod for Aca {
             &mut a,
             &mut grad_theta,
             &mut obs_losses,
+            &mut ws,
         );
 
         let mut grad_z0 = a.z.data.clone();

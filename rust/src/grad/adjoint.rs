@@ -25,13 +25,15 @@ use super::{
 use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::{Dynamics, EvalCounters};
 use crate::solvers::integrate::{
-    integrate, integrate_batch, integrate_batch_obs, integrate_obs, BatchStepObserver, ErrorNorm,
-    StepMode, StepObserver,
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, integrate_ws,
+    BatchStepObserver, ErrorNorm, StepMode, StepObserver,
 };
+use crate::solvers::workspace::SolverWorkspace;
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 #[derive(Default)]
@@ -127,6 +129,9 @@ struct AugmentedAdjoint<'a> {
     p: usize,
     counters: EvalCounters,
     empty: Vec<f32>,
+    /// θ-cotangent scratch for the allocation-free `f_into` path (the
+    /// reverse solve's cotangent jumps previously rebuilt this per eval).
+    th_scratch: RefCell<Vec<f32>>,
 }
 
 impl<'a> AugmentedAdjoint<'a> {
@@ -137,6 +142,7 @@ impl<'a> AugmentedAdjoint<'a> {
             base,
             counters: EvalCounters::default(),
             empty: Vec::new(),
+            th_scratch: RefCell::new(Vec::new()),
         }
     }
 }
@@ -153,6 +159,34 @@ impl Dynamics for AugmentedAdjoint<'_> {
     fn f(&self, t: f64, y: &[f32]) -> Vec<f32> {
         self.counters.f_evals.add(1);
         augmented_rhs(self.base, self.d, self.dim(), t, y)
+    }
+
+    /// Block-wise in-place augmented RHS — value-identical to
+    /// [`augmented_rhs`] but writing straight into the solver's stage
+    /// buffer, so the reverse augmented IVP runs without per-eval
+    /// allocations when the base dynamics has in-place paths.
+    fn f_into(&self, t: f64, y: &[f32], out: &mut [f32]) {
+        self.counters.f_evals.add(1);
+        let d = self.d;
+        let (z, rest) = y.split_at(d);
+        let (a, _g) = rest.split_at(d);
+        let (dz_out, rest_out) = out.split_at_mut(d);
+        let (da_out, dg_out) = rest_out.split_at_mut(d);
+        self.base.f_into(t, z, dz_out);
+        let mut th = self.th_scratch.borrow_mut();
+        if th.len() != self.p {
+            th.clear();
+            th.resize(self.p, 0.0);
+        } else {
+            th.fill(0.0);
+        }
+        self.base.f_vjp_into(t, z, a, da_out, &mut th);
+        for x in da_out.iter_mut() {
+            *x = -*x;
+        }
+        for (g, &thv) in dg_out.iter_mut().zip(th.iter()) {
+            *g = -thv;
+        }
     }
 
     fn f_vjp(&self, _t: f64, _z: &[f32], _a: &[f32]) -> (Vec<f32>, Vec<f32>) {
@@ -309,11 +343,23 @@ impl GradMethod for Adjoint {
 
         // Seminorm: mask the g_θ block out of the error norm.
         let norm = self.augmented_norm(&spec.norm, d, p);
-        // Same solver family, reverse direction.
+        // Same solver family, reverse direction; the reverse IVP borrows
+        // its loop buffers from a workspace (augmented `f_into` writes the
+        // stage RHS in place).
+        let mut ws = SolverWorkspace::new();
         let ys0 = solver.init(&aug, spec.t1, &y);
-        let (y_end, bwd) = integrate(
-            solver, &aug, spec.t1, spec.t0, ys0, &reverse_mode(&spec.mode), &norm, &mut (),
+        let bwd = integrate_ws(
+            solver,
+            &aug,
+            spec.t1,
+            spec.t0,
+            &ys0,
+            &reverse_mode(&spec.mode),
+            &norm,
+            &mut (),
+            &mut ws,
         )?;
+        let y_end = ws.take_output();
         let reconstructed_z0 = y_end.z[..d].to_vec();
         let grad_z0 = y_end.z[d..2 * d].to_vec();
         let grad_theta = y_end.z[2 * d..].to_vec();
@@ -463,8 +509,13 @@ impl GradMethod for Adjoint {
         let kept = TrackedBuf::new(s_end.z.clone(), tracker.clone());
 
         // ---- backward: reverse augmented IVP with cotangent jumps ------
+        // One workspace is shared across every inter-observation segment,
+        // so the per-segment reverse solves (and the jumps between them)
+        // reuse the same stage/state buffers instead of reallocating the
+        // augmented vectors they immediately overwrite.
         let aug = AugmentedAdjoint::new(dynamics);
         let norm = self.augmented_norm(&spec.norm, d, p);
+        let mut ws = SolverWorkspace::new();
         let mut y = Vec::with_capacity(2 * d + p);
         y.extend_from_slice(&kept.data);
         y.resize(2 * d + p, 0.0);
@@ -474,17 +525,18 @@ impl GradMethod for Adjoint {
         for (k, t_k, zbuf) in cap.states.iter().rev() {
             if *t_k != t_cur {
                 let ys0 = solver.init(&aug, t_cur, &y);
-                let (y_end, seg) = integrate(
+                let seg = integrate_ws(
                     solver,
                     &aug,
                     t_cur,
                     *t_k,
-                    ys0,
+                    &ys0,
                     &reverse_mode(&spec.mode),
                     &norm,
                     &mut (),
+                    &mut ws,
                 )?;
-                y = y_end.z;
+                y.copy_from_slice(&ws.output().z);
                 bwd_steps += seg.n_accepted;
                 t_cur = *t_k;
             }
@@ -496,16 +548,18 @@ impl GradMethod for Adjoint {
         }
         // final leg down to t0 (observations are strictly inside (t0, t1])
         let ys0 = solver.init(&aug, t_cur, &y);
-        let (y_end, seg) = integrate(
+        let seg = integrate_ws(
             solver,
             &aug,
             t_cur,
             spec.t0,
-            ys0,
+            &ys0,
             &reverse_mode(&spec.mode),
             &norm,
             &mut (),
+            &mut ws,
         )?;
+        let y_end = ws.take_output();
         bwd_steps += seg.n_accepted;
         let reconstructed_z0 = y_end.z[..d].to_vec();
         let grad_z0 = y_end.z[d..2 * d].to_vec();

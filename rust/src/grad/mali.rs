@@ -26,9 +26,10 @@ use super::{
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::dynamics::Dynamics;
 use crate::solvers::integrate::{
-    integrate, integrate_batch, integrate_batch_obs, integrate_obs, BatchGridRecorder,
-    GridRecorder,
+    integrate_batch_obs_ws, integrate_batch_ws, integrate_obs_ws, integrate_ws,
+    BatchGridRecorder, GridRecorder,
 };
+use crate::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -58,13 +59,15 @@ impl GradMethod for Mali {
         );
         let c = dynamics.counters();
         c.reset();
+        let mut ws = SolverWorkspace::new();
 
         // ---- forward: keep end state + accepted grid only --------------
         let s0 = solver.init(dynamics, spec.t0, z0);
         let mut rec = GridRecorder::new(spec.t0);
-        let (s_end, fwd) = integrate(
-            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut rec,
+        let fwd = integrate_ws(
+            solver, dynamics, spec.t0, spec.t1, &s0, &spec.mode, &spec.norm, &mut rec, &mut ws,
         )?;
+        let s_end = ws.take_output();
         // The retained footprint between passes: the augmented end state.
         // The accepted grid is O(N_t) *scalars* — the paper's Table-1
         // accounting is in N_z units and treats it as negligible, so it is
@@ -80,13 +83,23 @@ impl GradMethod for Mali {
         let (loss_val, dl_dz) = loss.loss_grad(&kept_z.data);
 
         // ---- backward: reconstruct + local vjp, O(1) live state --------
-        let mut cur = State {
-            z: kept_z.data.clone(),
-            v: Some(kept_v.data.clone()),
-        };
+        // The sweep ping-pongs between two reconstructed states and two
+        // cotangent states, all borrowed from the workspace — after the
+        // first iteration shapes are stable and each ψ⁻¹ + vjp micro-step
+        // touches the allocator exactly zero times (the property
+        // `tests/alloc_steady.rs` pins).
+        let mut cur = s_end;
         let mut a = State {
             z: dl_dz,
             v: Some(vec![0.0f32; cur.z.len()]), // a_v(T) = 0
+        };
+        let mut prev = State {
+            z: Vec::new(),
+            v: None,
+        };
+        let mut a_prev = State {
+            z: Vec::new(),
+            v: None,
         };
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let times = rec.times();
@@ -96,12 +109,20 @@ impl GradMethod for Mali {
             // reconstruct (z_{i-1}, v_{i-1}) via ψ⁻¹ and pull the adjoint
             // through the step — fused into one device call when the
             // dynamics exports the combined backward graph (§Perf)
-            let (prev, a_prev, dth) = solver
-                .invert_and_vjp(dynamics, times[i], h, &cur, &a)
-                .expect("invertible solver");
-            axpy(1.0, &dth, &mut grad_theta);
-            a = a_prev;
-            cur = prev;
+            let ok = solver.invert_and_vjp_into(
+                dynamics,
+                times[i],
+                h,
+                &cur,
+                &a,
+                &mut prev,
+                &mut a_prev,
+                &mut grad_theta,
+                &mut ws,
+            );
+            assert!(ok, "invertible solver");
+            std::mem::swap(&mut cur, &mut prev);
+            std::mem::swap(&mut a, &mut a_prev);
         }
         // final hop through v₀ = f(z₀, t₀)
         let mut grad_z0 = a.z.clone();
@@ -158,13 +179,15 @@ impl GradMethod for Mali {
         let c = dynamics.counters();
         let f0 = c.f_evals.get();
         let v0 = c.vjp_evals.get();
+        let mut ws = BatchWorkspace::new();
 
         // ---- forward: end state + per-sample accepted grids ------------
         let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
         let mut rec = BatchGridRecorder::new(spec.t0, bspec.batch);
-        let (s_end, fwd) = integrate_batch(
-            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut rec,
+        let fwd = integrate_batch_ws(
+            solver, dynamics, spec.t0, spec.t1, &s0, &spec.mode, &spec.norm, &mut rec, &mut ws,
         )?;
+        let s_end = ws.take_output();
         let kept_z = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
         let kept_v = TrackedBuf::new(
             s_end.v.as_ref().expect("ALF state carries v").data.clone(),
@@ -174,36 +197,53 @@ impl GradMethod for Mali {
         let (losses, dl_dz) = loss.loss_grad_batch(&kept_z.data, bspec);
 
         // ---- backward: lockstep ψ⁻¹ sweep over the still-remaining rows
-        let mut cur = BatchState::from_flat_zv(kept_z.data.clone(), kept_v.data.clone(), *bspec);
+        let mut cur = s_end;
         let mut a = BatchState::from_flat_zv(dl_dz, vec![0.0f32; bspec.flat_len()], *bspec);
+        let mut prev = ws.take_batch(bspec.batch, bspec.n_z, true);
+        let mut a_prev = ws.take_batch(bspec.batch, bspec.n_z, true);
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut rem: Vec<usize> = rec.times.iter().map(|t| t.len() - 1).collect();
+        let mut ts_out: Vec<f64> = Vec::new();
+        let mut hs: Vec<f64> = Vec::new();
         loop {
             let active: Vec<usize> = (0..bspec.batch).filter(|&b| rem[b] > 0).collect();
             if active.is_empty() {
                 break;
             }
-            let ts_out: Vec<f64> = active.iter().map(|&b| rec.times[b][rem[b]]).collect();
-            let hs: Vec<f64> = active
-                .iter()
-                .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1])
-                .collect();
+            ts_out.clear();
+            ts_out.extend(active.iter().map(|&b| rec.times[b][rem[b]]));
+            hs.clear();
+            hs.extend(
+                active
+                    .iter()
+                    .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1]),
+            );
             // skip the gather/scatter copies while no row has dropped out
-            // (always, under fixed stepping — the benchmarked hot path)
+            // (always, under fixed stepping — the benchmarked hot path,
+            // which then runs allocation-free out of the workspace)
             let full = active.len() == bspec.batch;
-            let (prev_sub, a_prev_sub, dth) = if full {
-                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur, &a)
+            if full {
+                let ok = solver.invert_and_vjp_batch_into(
+                    dynamics,
+                    &ts_out,
+                    &hs,
+                    &cur,
+                    &a,
+                    &mut prev,
+                    &mut a_prev,
+                    &mut grad_theta,
+                    &mut ws,
+                );
+                assert!(ok, "invertible solver");
+                std::mem::swap(&mut cur, &mut prev);
+                std::mem::swap(&mut a, &mut a_prev);
             } else {
                 let cur_sub = cur.gather_rows(&active);
                 let a_sub = a.gather_rows(&active);
-                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
-            }
-            .expect("invertible solver");
-            axpy(1.0, &dth, &mut grad_theta);
-            if full {
-                cur = prev_sub;
-                a = a_prev_sub;
-            } else {
+                let (prev_sub, a_prev_sub, dth) = solver
+                    .invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
+                    .expect("invertible solver");
+                axpy(1.0, &dth, &mut grad_theta);
                 cur.scatter_rows(&prev_sub, &active);
                 a.scatter_rows(&a_prev_sub, &active);
             }
@@ -280,13 +320,16 @@ impl GradMethod for Mali {
         );
         let c = dynamics.counters();
         c.reset();
+        let mut ws = SolverWorkspace::new();
 
         // ---- forward: end state + accepted grid + observation marks ----
         let s0 = solver.init(dynamics, spec.t0, z0);
         let mut rec = GridRecorder::new(spec.t0);
-        let (s_end, fwd) = integrate_obs(
-            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut rec,
+        let fwd = integrate_obs_ws(
+            solver, dynamics, spec.t0, spec.t1, &s0, &spec.mode, &spec.norm, grid, &mut rec,
+            &mut ws,
         )?;
+        let s_end = ws.take_output();
         let kept_z = TrackedBuf::new(s_end.z.clone(), tracker.clone());
         let kept_v = TrackedBuf::new(
             s_end.v.clone().expect("ALF state carries v"),
@@ -294,13 +337,18 @@ impl GradMethod for Mali {
         );
 
         // ---- backward: continuous ψ⁻¹ sweep with injections ------------
-        let mut cur = State {
-            z: kept_z.data.clone(),
-            v: Some(kept_v.data.clone()),
-        };
+        let mut cur = s_end;
         let mut a = State {
             z: vec![0.0f32; cur.z.len()],
             v: Some(vec![0.0f32; cur.z.len()]),
+        };
+        let mut prev = State {
+            z: Vec::new(),
+            v: None,
+        };
+        let mut a_prev = State {
+            z: Vec::new(),
+            v: None,
         };
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
@@ -320,12 +368,20 @@ impl GradMethod for Mali {
                 break;
             }
             let h = times[i] - times[i - 1];
-            let (prev, a_prev, dth) = solver
-                .invert_and_vjp(dynamics, times[i], h, &cur, &a)
-                .expect("invertible solver");
-            axpy(1.0, &dth, &mut grad_theta);
-            a = a_prev;
-            cur = prev;
+            let ok = solver.invert_and_vjp_into(
+                dynamics,
+                times[i],
+                h,
+                &cur,
+                &a,
+                &mut prev,
+                &mut a_prev,
+                &mut grad_theta,
+                &mut ws,
+            );
+            assert!(ok, "invertible solver");
+            std::mem::swap(&mut cur, &mut prev);
+            std::mem::swap(&mut a, &mut a_prev);
         }
         // final hop through v₀ = f(z₀, t₀)
         let mut grad_z0 = a.z.clone();
@@ -389,13 +445,16 @@ impl GradMethod for Mali {
         let c = dynamics.counters();
         let f0 = c.f_evals.get();
         let v0 = c.vjp_evals.get();
+        let mut ws = BatchWorkspace::new();
 
         // ---- forward: end state + per-sample grids and marks -----------
         let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
         let mut rec = BatchGridRecorder::new(spec.t0, bspec.batch);
-        let (s_end, fwd) = integrate_batch_obs(
-            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut rec,
+        let fwd = integrate_batch_obs_ws(
+            solver, dynamics, spec.t0, spec.t1, &s0, &spec.mode, &spec.norm, grid, &mut rec,
+            &mut ws,
         )?;
+        let s_end = ws.take_output();
         let kept_z = TrackedBuf::new(s_end.z.data.clone(), tracker.clone());
         let kept_v = TrackedBuf::new(
             s_end.v.as_ref().expect("ALF state carries v").data.clone(),
@@ -403,17 +462,21 @@ impl GradMethod for Mali {
         );
 
         // ---- backward: lockstep ψ⁻¹ sweep with per-row injections ------
-        let mut cur = BatchState::from_flat_zv(kept_z.data.clone(), kept_v.data.clone(), *bspec);
+        let mut cur = s_end;
         let mut a = BatchState::from_flat_zv(
             vec![0.0f32; bspec.flat_len()],
             vec![0.0f32; bspec.flat_len()],
             *bspec,
         );
+        let mut prev = ws.take_batch(bspec.batch, bspec.n_z, true);
+        let mut a_prev = ws.take_batch(bspec.batch, bspec.n_z, true);
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
         let row_spec = BatchSpec::single(bspec.n_z);
         let mut rem: Vec<usize> = rec.times.iter().map(|t| t.len() - 1).collect();
         let mut mp: Vec<usize> = rec.obs_marks.iter().map(|m| m.len()).collect();
+        let mut ts_out: Vec<f64> = Vec::new();
+        let mut hs: Vec<f64> = Vec::new();
         loop {
             // inject the cotangents due at each row's current position,
             // evaluated at the ψ⁻¹-reconstructed row
@@ -435,25 +498,37 @@ impl GradMethod for Mali {
             if active.is_empty() {
                 break;
             }
-            let ts_out: Vec<f64> = active.iter().map(|&b| rec.times[b][rem[b]]).collect();
-            let hs: Vec<f64> = active
-                .iter()
-                .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1])
-                .collect();
+            ts_out.clear();
+            ts_out.extend(active.iter().map(|&b| rec.times[b][rem[b]]));
+            hs.clear();
+            hs.extend(
+                active
+                    .iter()
+                    .map(|&b| rec.times[b][rem[b]] - rec.times[b][rem[b] - 1]),
+            );
             let full = active.len() == bspec.batch;
-            let (prev_sub, a_prev_sub, dth) = if full {
-                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur, &a)
+            if full {
+                let ok = solver.invert_and_vjp_batch_into(
+                    dynamics,
+                    &ts_out,
+                    &hs,
+                    &cur,
+                    &a,
+                    &mut prev,
+                    &mut a_prev,
+                    &mut grad_theta,
+                    &mut ws,
+                );
+                assert!(ok, "invertible solver");
+                std::mem::swap(&mut cur, &mut prev);
+                std::mem::swap(&mut a, &mut a_prev);
             } else {
                 let cur_sub = cur.gather_rows(&active);
                 let a_sub = a.gather_rows(&active);
-                solver.invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
-            }
-            .expect("invertible solver");
-            axpy(1.0, &dth, &mut grad_theta);
-            if full {
-                cur = prev_sub;
-                a = a_prev_sub;
-            } else {
+                let (prev_sub, a_prev_sub, dth) = solver
+                    .invert_and_vjp_batch(dynamics, &ts_out, &hs, &cur_sub, &a_sub)
+                    .expect("invertible solver");
+                axpy(1.0, &dth, &mut grad_theta);
                 cur.scatter_rows(&prev_sub, &active);
                 a.scatter_rows(&a_prev_sub, &active);
             }

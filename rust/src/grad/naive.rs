@@ -13,7 +13,9 @@
 //! differentiated — the standard autodiff semantics of adaptive solvers),
 //! so naive agrees numerically with ACA while paying the full tape.
 
-use super::aca::{init_hop_batch, replay_backward_batch, replay_backward_batch_obs, replay_backward_obs};
+use super::aca::{
+    init_hop_batch, replay_backward_batch, replay_backward_batch_obs, replay_backward_obs,
+};
 use super::{
     BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
     GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
@@ -24,6 +26,7 @@ use crate::solvers::integrate::{
     integrate, integrate_batch, integrate_batch_obs, integrate_obs, AcceptedStep,
     BatchAcceptedStep, BatchStepObserver, StepObserver,
 };
+use crate::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use crate::solvers::{Solver, State};
 use crate::tensor::axpy;
 use crate::util::mem::{MemTracker, TrackedBuf};
@@ -156,16 +159,19 @@ impl GradMethod for Naive {
 
         // Backward over the tape's accepted path (rejected branches carry
         // zero cotangent — their outputs feed nothing).
+        let mut ws = SolverWorkspace::new();
         let mut a = State {
             z: dl_dz,
             v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
         };
+        let mut a_prev = ws.take_state(&a);
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         for (t, h, before) in tape.accepted.iter().rev() {
-            let (a_prev, dth) = solver.step_vjp(dynamics, *t, *h, before, &a);
-            axpy(1.0, &dth, &mut grad_theta);
-            a = a_prev;
+            solver
+                .step_vjp_into(dynamics, *t, *h, before, &a, &mut a_prev, &mut grad_theta, &mut ws);
+            std::mem::swap(&mut a, &mut a_prev);
         }
+        ws.put_state(a_prev);
         let mut grad_z0 = a.z.clone();
         if let Some(av0) = &a.v {
             if av0.iter().any(|&x| x != 0.0) {
@@ -232,8 +238,9 @@ impl GradMethod for Naive {
                 .as_ref()
                 .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
         };
+        let mut ws = BatchWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
-        replay_backward_batch(dynamics, solver, &tape.accepted, &mut a, &mut grad_theta);
+        replay_backward_batch(dynamics, solver, &tape.accepted, &mut a, &mut grad_theta, &mut ws);
 
         let mut grad_z0 = a.z.data.clone();
         init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
@@ -294,6 +301,7 @@ impl GradMethod for Naive {
             z: vec![0.0f32; s_end.z.len()],
             v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
         };
+        let mut ws = SolverWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
         replay_backward_obs(
@@ -307,6 +315,7 @@ impl GradMethod for Naive {
             &mut a,
             &mut grad_theta,
             &mut obs_losses,
+            &mut ws,
         );
         let mut grad_z0 = a.z.clone();
         if let Some(av0) = &a.v {
@@ -381,6 +390,7 @@ impl GradMethod for Naive {
                 .as_ref()
                 .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
         };
+        let mut ws = BatchWorkspace::new();
         let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
         let mut obs_losses = vec![0.0f64; grid.len()];
         replay_backward_batch_obs(
@@ -394,6 +404,7 @@ impl GradMethod for Naive {
             &mut a,
             &mut grad_theta,
             &mut obs_losses,
+            &mut ws,
         );
 
         let mut grad_z0 = a.z.data.clone();

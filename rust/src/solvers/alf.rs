@@ -22,8 +22,11 @@
 
 use super::batch::{BatchSpec, BatchState};
 use super::dynamics::Dynamics;
+use super::workspace::{
+    ensure, fill_row_coeffs, fill_stage_times, BatchWorkspace, SolverWorkspace,
+};
 use super::{Solver, State};
-use crate::tensor::{add_scaled, add_scaled_rows, axpy};
+use crate::tensor::{add_scaled_into, add_scaled_rows_into, axpy, axpy_rows};
 
 #[derive(Debug, Clone, Copy)]
 pub struct AlfSolver {
@@ -46,7 +49,8 @@ impl AlfSolver {
     }
 
     /// ψ: one (damped) ALF step composed from `f`.  Returns
-    /// `(z_out, v_out, err)`.
+    /// `(z_out, v_out, err)`.  Allocating wrapper over
+    /// [`AlfSolver::psi_into`], bit-identical.
     pub fn psi(
         &self,
         dynamics: &dyn Dynamics,
@@ -55,32 +59,61 @@ impl AlfSolver {
         z: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut ws = SolverWorkspace::new();
+        let mut z_out = vec![0.0f32; z.len()];
+        let mut v_out = vec![0.0f32; v.len()];
+        let mut err = vec![0.0f32; v.len()];
+        self.psi_into(dynamics, t, h, z, v, &mut z_out, &mut v_out, &mut err, &mut ws);
+        (z_out, v_out, err)
+    }
+
+    /// ψ into caller buffers (`z_out`/`v_out`/`err_out`, each `z.len()`
+    /// long, aliasing nothing); scratch from `ws` — zero allocations in
+    /// steady state when the dynamics implements `f_into` in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        z: &[f32],
+        v: &[f32],
+        z_out: &mut [f32],
+        v_out: &mut [f32],
+        err_out: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
         if self.prefer_fused {
-            if let Some(out) = dynamics.fused_alf(z, v, t, h, self.eta) {
-                return out;
+            if let Some((zf, vf, ef)) = dynamics.fused_alf(z, v, t, h, self.eta) {
+                z_out.copy_from_slice(&zf);
+                v_out.copy_from_slice(&vf);
+                err_out.copy_from_slice(&ef);
+                return;
             }
         }
         let eta = self.eta as f32;
         let hf = h as f32;
         let s1 = t + h / 2.0;
-        let k1 = add_scaled(z, hf / 2.0, v);
-        let u1 = dynamics.f(s1, &k1);
+        let n = z.len();
+        // k1 = z + v·h/2
+        ensure(&mut ws.k1, n);
+        add_scaled_into(z, hf / 2.0, v, &mut ws.k1);
+        ensure(&mut ws.u1, n);
+        dynamics.f_into(s1, &ws.k1, &mut ws.u1);
         // v' = (1-2η) v + 2η u1
-        let mut v_out = vec![0.0f32; v.len()];
-        axpy(1.0 - 2.0 * eta, v, &mut v_out);
-        axpy(2.0 * eta, &u1, &mut v_out);
+        v_out.fill(0.0);
+        axpy(1.0 - 2.0 * eta, v, v_out);
+        axpy(2.0 * eta, &ws.u1, v_out);
         // z' = k1 + v'·h/2
-        let z_out = add_scaled(&k1, hf / 2.0, &v_out);
+        add_scaled_into(&ws.k1, hf / 2.0, v_out, z_out);
         // err = η·h·(u1 − v)
-        let err: Vec<f32> = u1
-            .iter()
-            .zip(v)
-            .map(|(&u, &vi)| eta * hf * (u - vi))
-            .collect();
-        (z_out, v_out, err)
+        for ((e, &u), &vi) in err_out.iter_mut().zip(&ws.u1).zip(v) {
+            *e = eta * hf * (u - vi);
+        }
     }
 
     /// ψ⁻¹: exact inverse (Algo. 3 for η = 1; Eq. 49 in general).
+    /// Allocating wrapper over [`AlfSolver::psi_inv_into`], bit-identical.
     pub fn psi_inv(
         &self,
         dynamics: &dyn Dynamics,
@@ -89,32 +122,55 @@ impl AlfSolver {
         z_out: &[f32],
         v_out: &[f32],
     ) -> (Vec<f32>, Vec<f32>) {
+        let mut ws = SolverWorkspace::new();
+        let mut z_in = vec![0.0f32; z_out.len()];
+        let mut v_in = vec![0.0f32; v_out.len()];
+        self.psi_inv_into(dynamics, t_out, h, z_out, v_out, &mut z_in, &mut v_in, &mut ws);
+        (z_in, v_in)
+    }
+
+    /// ψ⁻¹ into caller buffers; scratch from `ws`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_inv_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        z_out: &[f32],
+        v_out: &[f32],
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
         if self.prefer_fused {
-            if let Some(out) = dynamics.fused_alf_inv(z_out, v_out, t_out, h, self.eta) {
-                return out;
+            if let Some((zf, vf)) = dynamics.fused_alf_inv(z_out, v_out, t_out, h, self.eta) {
+                z_in.copy_from_slice(&zf);
+                v_in.copy_from_slice(&vf);
+                return;
             }
         }
         let eta = self.eta as f32;
         let hf = h as f32;
         let s1 = t_out - h / 2.0;
+        let n = z_out.len();
         // k1 = z' − v'·h/2
-        let k1 = add_scaled(z_out, -hf / 2.0, v_out);
-        let u1 = dynamics.f(s1, &k1);
+        ensure(&mut ws.k1, n);
+        add_scaled_into(z_out, -hf / 2.0, v_out, &mut ws.k1);
+        ensure(&mut ws.u1, n);
+        dynamics.f_into(s1, &ws.k1, &mut ws.u1);
         // v = (v' − 2η u1) / (1 − 2η)
         let denom = 1.0 - 2.0 * eta;
-        let v_in: Vec<f32> = v_out
-            .iter()
-            .zip(&u1)
-            .map(|(&vo, &u)| (vo - 2.0 * eta * u) / denom)
-            .collect();
+        for ((vi, &vo), &u) in v_in.iter_mut().zip(v_out).zip(&ws.u1) {
+            *vi = (vo - 2.0 * eta * u) / denom;
+        }
         // z = k1 − v·h/2
-        let z_in = add_scaled(&k1, -hf / 2.0, &v_in);
-        (z_in, v_in)
+        add_scaled_into(&ws.k1, -hf / 2.0, v_in, z_in);
     }
 
     /// vjp through ψ: given cotangents `(a_z', a_v')` on the outputs,
     /// return `(a_z, a_v, a_θ)` on the inputs.  This is the "local backward"
-    /// of MALI (Algo. 4), ACA and the naive method.
+    /// of MALI (Algo. 4), ACA and the naive method.  Allocating wrapper
+    /// over [`AlfSolver::psi_vjp_into`], bit-identical.
     #[allow(clippy::too_many_arguments)]
     pub fn psi_vjp(
         &self,
@@ -126,27 +182,78 @@ impl AlfSolver {
         az_out: &[f32],
         av_out: &[f32],
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut ws = SolverWorkspace::new();
+        let mut az_in = vec![0.0f32; z.len()];
+        let mut av_in = vec![0.0f32; v.len()];
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        self.psi_vjp_into(
+            dynamics,
+            t,
+            h,
+            z,
+            v,
+            az_out,
+            av_out,
+            &mut az_in,
+            &mut av_in,
+            &mut a_theta,
+            &mut ws,
+        );
+        (az_in, av_in, a_theta)
+    }
+
+    /// ψ-vjp into caller buffers; the θ-cotangent is accumulated into
+    /// `ath_acc` (`+=`, matching the `axpy(1.0, ..)` the gradient loops
+    /// perform on the wrapper's return value).
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        z: &[f32],
+        v: &[f32],
+        az_out: &[f32],
+        av_out: &[f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
         if self.prefer_fused {
-            if let Some(out) = dynamics.fused_alf_vjp(z, v, t, h, self.eta, az_out, av_out) {
-                return out;
+            if let Some((az, av, ath)) =
+                dynamics.fused_alf_vjp(z, v, t, h, self.eta, az_out, av_out)
+            {
+                az_in.copy_from_slice(&az);
+                av_in.copy_from_slice(&av);
+                axpy(1.0, &ath, ath_acc);
+                return;
             }
         }
         let eta = self.eta as f32;
         let hf = h as f32;
         let s1 = t + h / 2.0;
-        let k1 = add_scaled(z, hf / 2.0, v);
+        let n = z.len();
+        ensure(&mut ws.k1, n);
+        add_scaled_into(z, hf / 2.0, v, &mut ws.k1);
         // z' = k1 + (h/2) v'  ⇒  a_k1 ← a_z',  a_v'_tot = a_v' + (h/2) a_z'
-        let av_tot = add_scaled(av_out, hf / 2.0, az_out);
+        ensure(&mut ws.av_tot, n);
+        add_scaled_into(av_out, hf / 2.0, az_out, &mut ws.av_tot);
         // v' = (1−2η) v + 2η u1  ⇒  a_v += (1−2η) a_v'_tot,  a_u1 = 2η a_v'_tot
-        let mut a_v: Vec<f32> = av_tot.iter().map(|&x| (1.0 - 2.0 * eta) * x).collect();
-        let a_u1: Vec<f32> = av_tot.iter().map(|&x| 2.0 * eta * x).collect();
+        for (o, &x) in av_in.iter_mut().zip(&ws.av_tot) {
+            *o = (1.0 - 2.0 * eta) * x;
+        }
+        ensure(&mut ws.a_u1, n);
+        for (o, &x) in ws.a_u1.iter_mut().zip(&ws.av_tot) {
+            *o = 2.0 * eta * x;
+        }
         // u1 = f(k1, s1)
-        let (g_k1, a_theta) = dynamics.f_vjp(s1, &k1, &a_u1);
+        ensure(&mut ws.g, n);
+        dynamics.f_vjp_into(s1, &ws.k1, &ws.a_u1, &mut ws.g, ath_acc);
         // a_k1 = a_z' + g_k1
-        let a_k1 = add_scaled(az_out, 1.0, &g_k1);
+        add_scaled_into(az_out, 1.0, &ws.g, az_in);
         // k1 = z + (h/2) v  ⇒  a_z = a_k1,  a_v += (h/2) a_k1
-        axpy(hf / 2.0, &a_k1, &mut a_v);
-        (a_k1, a_v, a_theta)
+        axpy(hf / 2.0, az_in, av_in);
     }
 
     // ---- batched ψ / ψ⁻¹ / ψ-vjp ---------------------------------------
@@ -156,12 +263,8 @@ impl AlfSolver {
     // Per-row arithmetic is identical to the single-sample methods above —
     // the batch/single roundoff-equivalence tests depend on that.
 
-    /// Per-row `h/2` coefficients, matching the solo `h as f32 / 2.0`.
-    fn half_steps(hs: &[f64]) -> Vec<f32> {
-        hs.iter().map(|&h| h as f32 / 2.0).collect()
-    }
-
-    /// Batched ψ over `[B, N_z]` rows with per-row `(t, h)`.
+    /// Batched ψ over `[B, N_z]` rows with per-row `(t, h)`.  Allocating
+    /// wrapper over [`AlfSolver::psi_batch_into`], bit-identical.
     pub fn psi_batch(
         &self,
         dynamics: &dyn Dynamics,
@@ -171,29 +274,62 @@ impl AlfSolver {
         v: &[f32],
         spec: &BatchSpec,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let eta = self.eta as f32;
-        let half = Self::half_steps(hs);
-        let s1s: Vec<f64> = ts.iter().zip(hs).map(|(&t, &h)| t + h / 2.0).collect();
-        let k1 = add_scaled_rows(z, &half, v, spec.n_z);
-        let u1 = dynamics.f_batch(&s1s, &k1, spec);
-        // v' = (1-2η) v + 2η u1  (η is shared, so this stays flat)
+        let mut ws = BatchWorkspace::new();
+        let mut z_out = vec![0.0f32; z.len()];
         let mut v_out = vec![0.0f32; v.len()];
-        axpy(1.0 - 2.0 * eta, v, &mut v_out);
-        axpy(2.0 * eta, &u1, &mut v_out);
-        // z' = k1 + v'·h/2
-        let z_out = add_scaled_rows(&k1, &half, &v_out, spec.n_z);
-        // err = η·h_b·(u1 − v) per row
-        let mut err = Vec::with_capacity(v.len());
-        for b in 0..spec.batch {
-            let hf = hs[b] as f32;
-            for (u, vi) in spec.row(&u1, b).iter().zip(spec.row(v, b)) {
-                err.push(eta * hf * (u - vi));
-            }
-        }
+        let mut err = vec![0.0f32; v.len()];
+        self.psi_batch_into(
+            dynamics, ts, hs, z, v, spec, &mut z_out, &mut v_out, &mut err, &mut ws,
+        );
         (z_out, v_out, err)
     }
 
-    /// Batched exact ψ⁻¹ with per-row `(t_out, h)`.
+    /// Batched ψ into caller buffers; scratch from `ws`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        spec: &BatchSpec,
+        z_out: &mut [f32],
+        v_out: &mut [f32],
+        err_out: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let eta = self.eta as f32;
+        let n = spec.flat_len();
+        fill_row_coeffs(hs, 0.5, &mut ws.half);
+        fill_stage_times(ts, hs, 0.5, &mut ws.s1s);
+        ensure(&mut ws.k1, n);
+        add_scaled_rows_into(z, &ws.half, v, spec.n_z, &mut ws.k1);
+        ensure(&mut ws.u1, n);
+        dynamics.f_batch_into(&ws.s1s, &ws.k1, spec, &mut ws.u1);
+        // v' = (1-2η) v + 2η u1  (η is shared, so this stays flat)
+        v_out.fill(0.0);
+        axpy(1.0 - 2.0 * eta, v, v_out);
+        axpy(2.0 * eta, &ws.u1, v_out);
+        // z' = k1 + v'·h/2
+        add_scaled_rows_into(&ws.k1, &ws.half, v_out, spec.n_z, z_out);
+        // err = η·h_b·(u1 − v) per row
+        for b in 0..spec.batch {
+            let hf = hs[b] as f32;
+            let lo = b * spec.n_z;
+            let hi = lo + spec.n_z;
+            for ((e, &u), &vi) in err_out[lo..hi]
+                .iter_mut()
+                .zip(&ws.u1[lo..hi])
+                .zip(&v[lo..hi])
+            {
+                *e = eta * hf * (u - vi);
+            }
+        }
+    }
+
+    /// Batched exact ψ⁻¹ with per-row `(t_out, h)`.  Allocating wrapper
+    /// over [`AlfSolver::psi_inv_batch_into`], bit-identical.
     pub fn psi_inv_batch(
         &self,
         dynamics: &dyn Dynamics,
@@ -203,25 +339,50 @@ impl AlfSolver {
         v_out: &[f32],
         spec: &BatchSpec,
     ) -> (Vec<f32>, Vec<f32>) {
-        let eta = self.eta as f32;
-        let neg_half: Vec<f32> = hs.iter().map(|&h| -(h as f32) / 2.0).collect();
-        let s1s: Vec<f64> = ts_out.iter().zip(hs).map(|(&t, &h)| t - h / 2.0).collect();
-        // k1 = z' − v'·h/2
-        let k1 = add_scaled_rows(z_out, &neg_half, v_out, spec.n_z);
-        let u1 = dynamics.f_batch(&s1s, &k1, spec);
-        // v = (v' − 2η u1) / (1 − 2η)
-        let denom = 1.0 - 2.0 * eta;
-        let v_in: Vec<f32> = v_out
-            .iter()
-            .zip(&u1)
-            .map(|(&vo, &u)| (vo - 2.0 * eta * u) / denom)
-            .collect();
-        // z = k1 − v·h/2
-        let z_in = add_scaled_rows(&k1, &neg_half, &v_in, spec.n_z);
+        let mut ws = BatchWorkspace::new();
+        let mut z_in = vec![0.0f32; z_out.len()];
+        let mut v_in = vec![0.0f32; v_out.len()];
+        self.psi_inv_batch_into(
+            dynamics, ts_out, hs, z_out, v_out, spec, &mut z_in, &mut v_in, &mut ws,
+        );
         (z_in, v_in)
     }
 
+    /// Batched ψ⁻¹ into caller buffers; scratch from `ws`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_inv_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        z_out: &[f32],
+        v_out: &[f32],
+        spec: &BatchSpec,
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let eta = self.eta as f32;
+        let n = spec.flat_len();
+        fill_row_coeffs(hs, -0.5, &mut ws.half);
+        fill_stage_times(ts_out, hs, -0.5, &mut ws.s1s);
+        // k1 = z' − v'·h/2
+        ensure(&mut ws.k1, n);
+        add_scaled_rows_into(z_out, &ws.half, v_out, spec.n_z, &mut ws.k1);
+        ensure(&mut ws.u1, n);
+        dynamics.f_batch_into(&ws.s1s, &ws.k1, spec, &mut ws.u1);
+        // v = (v' − 2η u1) / (1 − 2η)
+        let denom = 1.0 - 2.0 * eta;
+        for ((vi, &vo), &u) in v_in.iter_mut().zip(v_out).zip(&ws.u1) {
+            *vi = (vo - 2.0 * eta * u) / denom;
+        }
+        // z = k1 − v·h/2
+        add_scaled_rows_into(&ws.k1, &ws.half, v_in, spec.n_z, z_in);
+    }
+
     /// Batched vjp through ψ; the θ-cotangent is summed over rows.
+    /// Allocating wrapper over [`AlfSolver::psi_vjp_batch_into`],
+    /// bit-identical.
     #[allow(clippy::too_many_arguments)]
     pub fn psi_vjp_batch(
         &self,
@@ -234,22 +395,69 @@ impl AlfSolver {
         av_out: &[f32],
         spec: &BatchSpec,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut ws = BatchWorkspace::new();
+        let mut az_in = vec![0.0f32; z.len()];
+        let mut av_in = vec![0.0f32; v.len()];
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        self.psi_vjp_batch_into(
+            dynamics,
+            ts,
+            hs,
+            z,
+            v,
+            az_out,
+            av_out,
+            spec,
+            &mut az_in,
+            &mut av_in,
+            &mut a_theta,
+            &mut ws,
+        );
+        (az_in, av_in, a_theta)
+    }
+
+    /// Batched ψ-vjp into caller buffers; the row-summed θ-cotangent is
+    /// accumulated into `ath_acc`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn psi_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        az_out: &[f32],
+        av_out: &[f32],
+        spec: &BatchSpec,
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
         let eta = self.eta as f32;
-        let half = Self::half_steps(hs);
-        let s1s: Vec<f64> = ts.iter().zip(hs).map(|(&t, &h)| t + h / 2.0).collect();
-        let k1 = add_scaled_rows(z, &half, v, spec.n_z);
+        let n = spec.flat_len();
+        fill_row_coeffs(hs, 0.5, &mut ws.half);
+        fill_stage_times(ts, hs, 0.5, &mut ws.s1s);
+        ensure(&mut ws.k1, n);
+        add_scaled_rows_into(z, &ws.half, v, spec.n_z, &mut ws.k1);
         // z' = k1 + (h/2) v'  ⇒  a_k1 ← a_z',  a_v'_tot = a_v' + (h/2) a_z'
-        let av_tot = add_scaled_rows(av_out, &half, az_out, spec.n_z);
+        ensure(&mut ws.av_tot, n);
+        add_scaled_rows_into(av_out, &ws.half, az_out, spec.n_z, &mut ws.av_tot);
         // v' = (1−2η) v + 2η u1  ⇒  a_v += (1−2η) a_v'_tot,  a_u1 = 2η a_v'_tot
-        let mut a_v: Vec<f32> = av_tot.iter().map(|&x| (1.0 - 2.0 * eta) * x).collect();
-        let a_u1: Vec<f32> = av_tot.iter().map(|&x| 2.0 * eta * x).collect();
+        for (o, &x) in av_in.iter_mut().zip(&ws.av_tot) {
+            *o = (1.0 - 2.0 * eta) * x;
+        }
+        ensure(&mut ws.a_u1, n);
+        for (o, &x) in ws.a_u1.iter_mut().zip(&ws.av_tot) {
+            *o = 2.0 * eta * x;
+        }
         // u1 = f(k1, s1)
-        let (g_k1, a_theta) = dynamics.f_vjp_batch(&s1s, &k1, &a_u1, spec);
+        ensure(&mut ws.g, n);
+        dynamics.f_vjp_batch_into(&ws.s1s, &ws.k1, &ws.a_u1, spec, &mut ws.g, ath_acc);
         // a_k1 = a_z' + g_k1
-        let a_k1 = add_scaled(az_out, 1.0, &g_k1);
+        add_scaled_into(az_out, 1.0, &ws.g, az_in);
         // k1 = z + (h/2) v  ⇒  a_z = a_k1,  a_v += (h/2) a_k1
-        crate::tensor::axpy_rows(&half, &a_k1, &mut a_v, spec.n_z);
-        (a_k1, a_v, a_theta)
+        axpy_rows(&ws.half, az_in, av_in, spec.n_z);
     }
 }
 
@@ -384,6 +592,119 @@ impl Solver for AlfSolver {
         Some((s_in, a_in, a_theta))
     }
 
+    // ---- workspace path --------------------------------------------------
+
+    fn step_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+        out: &mut State,
+        err: &mut Vec<f32>,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let v = s.v.as_ref().expect("ALF needs augmented state (z, v)");
+        let n = s.z.len();
+        super::workspace::shape_state_n(out, n, true);
+        ensure(err, n);
+        let State { z: oz, v: ov } = out;
+        let ov = ov.as_mut().expect("just shaped");
+        self.psi_into(dynamics, t, h, &s.z, v, oz, ov, err, ws);
+        true
+    }
+
+    fn step_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
+        let v = s_in.v.as_ref().expect("ALF needs augmented state");
+        let n = s_in.z.len();
+        super::workspace::shape_state_n(a_in, n, true);
+        // a_v(T) may be absent: substitute the workspace's read-only zero
+        // cotangent, taken out so it can ride alongside `&mut ws`
+        let mut zero_buf = std::mem::take(&mut ws.zero);
+        if a_out.v.is_none() {
+            ensure(&mut zero_buf, n);
+        }
+        let av_out: &[f32] = match &a_out.v {
+            Some(av) => av,
+            None => &zero_buf,
+        };
+        let State { z: az, v: av } = a_in;
+        let av = av.as_mut().expect("just shaped");
+        self.psi_vjp_into(dynamics, t, h, &s_in.z, v, &a_out.z, av_out, az, av, ath_acc, ws);
+        ws.zero = zero_buf;
+    }
+
+    fn invert_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        out: &mut State,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let v = s_out.v.as_ref().expect("ALF needs augmented state");
+        let n = s_out.z.len();
+        super::workspace::shape_state_n(out, n, true);
+        let State { z: oz, v: ov } = out;
+        let ov = ov.as_mut().expect("just shaped");
+        self.psi_inv_into(dynamics, t_out, h, &s_out.z, v, oz, ov, ws);
+        true
+    }
+
+    fn invert_and_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+        s_in: &mut State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let v_out = s_out.v.as_ref().expect("ALF needs augmented state");
+        let n = s_out.z.len();
+        if self.prefer_fused {
+            let mut zero_buf = std::mem::take(&mut ws.zero);
+            if a_out.v.is_none() {
+                ensure(&mut zero_buf, n);
+            }
+            let av_out: &[f32] = match &a_out.v {
+                Some(av) => av,
+                None => &zero_buf,
+            };
+            let fused =
+                dynamics.fused_alf_bwd(&s_out.z, v_out, t_out, h, self.eta, &a_out.z, av_out);
+            ws.zero = zero_buf;
+            if let Some((z_in, v_in, a_z, a_v, a_th)) = fused {
+                super::workspace::shape_state_n(s_in, n, true);
+                super::workspace::shape_state_n(a_in, n, true);
+                s_in.z.copy_from_slice(&z_in);
+                s_in.v.as_mut().expect("just shaped").copy_from_slice(&v_in);
+                a_in.z.copy_from_slice(&a_z);
+                a_in.v.as_mut().expect("just shaped").copy_from_slice(&a_v);
+                axpy(1.0, &a_th, ath_acc);
+                return true;
+            }
+        }
+        // host-composed fallback: ψ⁻¹ then vjp
+        self.invert_into(dynamics, t_out, h, s_out, s_in, ws);
+        self.step_vjp_into(dynamics, t_out - h, h, s_in, a_out, a_in, ath_acc, ws);
+        true
+    }
+
     // ---- batched path ---------------------------------------------------
 
     fn init_batch(
@@ -448,6 +769,108 @@ impl Solver for AlfSolver {
         let (z_in, v_in) =
             self.psi_inv_batch(dynamics, ts_out, hs, &s_out.z.data, &v.data, &spec);
         Some(BatchState::from_flat_zv(z_in, v_in, spec))
+    }
+
+    // ---- batched workspace path -----------------------------------------
+
+    fn step_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+        out: &mut BatchState,
+        err: &mut Vec<f32>,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let spec = s.spec();
+        let v = s.v.as_ref().expect("ALF needs augmented state (z, v)");
+        super::workspace::shape_batch_state(out, spec.batch, spec.n_z, true);
+        ensure(err, spec.flat_len());
+        let BatchState { z: oz, v: ov } = out;
+        let ov = ov.as_mut().expect("just shaped");
+        self.psi_batch_into(
+            dynamics,
+            ts,
+            hs,
+            &s.z.data,
+            &v.data,
+            &spec,
+            &mut oz.data,
+            &mut ov.data,
+            err,
+            ws,
+        );
+        true
+    }
+
+    fn step_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+        a_in: &mut BatchState,
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let spec = s_in.spec();
+        let v = s_in.v.as_ref().expect("ALF needs augmented state");
+        super::workspace::shape_batch_state(a_in, spec.batch, spec.n_z, true);
+        let mut zero_buf = std::mem::take(&mut ws.zero);
+        if a_out.v.is_none() {
+            ensure(&mut zero_buf, spec.flat_len());
+        }
+        let av_out: &[f32] = match &a_out.v {
+            Some(av) => &av.data,
+            None => &zero_buf,
+        };
+        let BatchState { z: az, v: av } = a_in;
+        let av = av.as_mut().expect("just shaped");
+        self.psi_vjp_batch_into(
+            dynamics,
+            ts,
+            hs,
+            &s_in.z.data,
+            &v.data,
+            &a_out.z.data,
+            av_out,
+            &spec,
+            &mut az.data,
+            &mut av.data,
+            ath_acc,
+            ws,
+        );
+        ws.zero = zero_buf;
+    }
+
+    fn invert_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let spec = s_out.spec();
+        let v = s_out.v.as_ref().expect("ALF needs augmented state");
+        super::workspace::shape_batch_state(out, spec.batch, spec.n_z, true);
+        let BatchState { z: oz, v: ov } = out;
+        let ov = ov.as_mut().expect("just shaped");
+        self.psi_inv_batch_into(
+            dynamics,
+            ts_out,
+            hs,
+            &s_out.z.data,
+            &v.data,
+            &spec,
+            &mut oz.data,
+            &mut ov.data,
+            ws,
+        );
+        true
     }
 }
 

@@ -172,6 +172,53 @@ pub trait Dynamics {
         (az, ath)
     }
 
+    // ---- workspace (allocation-free) entry points ----------------------
+    //
+    // The `_into` variants write into caller-provided buffers so the
+    // solver/grad hot loops can run without touching the allocator.  The
+    // defaults forward to the allocating methods (every existing dynamics
+    // keeps working, value-identical); native dynamics with closed-form
+    // arithmetic ([`LinearToy`]) override them allocation-free.
+
+    /// Evaluate `f` into a caller-provided buffer (`out.len() == z.len()`,
+    /// which must not alias `z`).  Default forwards to [`Dynamics::f`].
+    fn f_into(&self, t: f64, z: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&self.f(t, z));
+    }
+
+    /// Vjp into caller buffers: `az_out` receives `aᵀ ∂f/∂z`; the
+    /// θ-cotangent is **accumulated** into `ath_acc` (`+=`, bit-identical
+    /// to the `axpy(1.0, ..)` the gradient loops previously performed).
+    /// Default forwards to [`Dynamics::f_vjp`].
+    fn f_vjp_into(&self, t: f64, z: &[f32], a: &[f32], az_out: &mut [f32], ath_acc: &mut [f32]) {
+        let (az, ath) = self.f_vjp(t, z, a);
+        az_out.copy_from_slice(&az);
+        crate::tensor::axpy(1.0, &ath, ath_acc);
+    }
+
+    /// Batched [`Dynamics::f_into`] over a `[B, n_z]` buffer.  Default
+    /// forwards to [`Dynamics::f_batch`].
+    fn f_batch_into(&self, ts: &[f64], z: &[f32], spec: &BatchSpec, out: &mut [f32]) {
+        out.copy_from_slice(&self.f_batch(ts, z, spec));
+    }
+
+    /// Batched [`Dynamics::f_vjp_into`] with the θ-cotangent summed over
+    /// rows and accumulated into `ath_acc`.  Default forwards to
+    /// [`Dynamics::f_vjp_batch`].
+    fn f_vjp_batch_into(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+        az_out: &mut [f32],
+        ath_acc: &mut [f32],
+    ) {
+        let (az, ath) = self.f_vjp_batch(ts, z, a, spec);
+        az_out.copy_from_slice(&az);
+        crate::tensor::axpy(1.0, &ath, ath_acc);
+    }
+
     /// Optional fused damped-ALF step ψ executed device-side in one call
     /// (the L1 Pallas kernel path).  Returns `(z_out, v_out, err_embedded)`.
     /// Default: `None`, and the solver composes the step from [`Dynamics::f`].
@@ -362,6 +409,73 @@ impl Dynamics for LinearToy {
             ath.push(row_sum as f32);
         }
         (az, ath)
+    }
+
+    // Allocation-free workspace entry points: the bench/alloc-test hot
+    // paths run on this dynamics, so every `_into` writes in place with
+    // the exact arithmetic (and counter accounting) of the allocating
+    // methods above — bit-identical results, zero heap traffic.
+
+    fn f_into(&self, _t: f64, z: &[f32], out: &mut [f32]) {
+        self.counters.f_evals.add(1);
+        let a = self.alpha[0];
+        for (o, &zi) in out.iter_mut().zip(z) {
+            *o = a * zi;
+        }
+    }
+
+    fn f_vjp_into(&self, _t: f64, z: &[f32], a: &[f32], az_out: &mut [f32], ath_acc: &mut [f32]) {
+        self.counters.vjp_evals.add(1);
+        let alpha = self.alpha[0];
+        for (o, &ai) in az_out.iter_mut().zip(a) {
+            *o = alpha * ai;
+        }
+        let datheta: f64 = a
+            .iter()
+            .zip(z)
+            .map(|(&ai, &zi)| ai as f64 * zi as f64)
+            .sum();
+        ath_acc[0] += datheta as f32;
+    }
+
+    fn f_batch_into(&self, ts: &[f64], z: &[f32], spec: &BatchSpec, out: &mut [f32]) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        debug_assert_eq!(z.len(), spec.flat_len());
+        self.counters.f_evals.add(spec.batch as u64);
+        let a = self.alpha[0];
+        for (o, &zi) in out.iter_mut().zip(z) {
+            *o = a * zi;
+        }
+    }
+
+    fn f_vjp_batch_into(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+        az_out: &mut [f32],
+        ath_acc: &mut [f32],
+    ) {
+        debug_assert_eq!(ts.len(), spec.batch);
+        self.counters.vjp_evals.add(spec.batch as u64);
+        let alpha = self.alpha[0];
+        for (o, &ai) in az_out.iter_mut().zip(a) {
+            *o = alpha * ai;
+        }
+        // same FP sequence as `f_vjp_batch`: per-row f64 reduction, f32
+        // row-order sum into a local, one accumulate at the end
+        let mut dtheta = 0.0f32;
+        for b in 0..spec.batch {
+            let row_sum: f64 = spec
+                .row(a, b)
+                .iter()
+                .zip(spec.row(z, b))
+                .map(|(&ai, &zi)| ai as f64 * zi as f64)
+                .sum();
+            dtheta += row_sum as f32;
+        }
+        ath_acc[0] += dtheta;
     }
 
     fn params(&self) -> &[f32] {
@@ -717,6 +831,61 @@ mod tests {
         assert!((ath_rows[0] + 1.0).abs() < 1e-6);
         assert!((ath_rows[1] - 4.5).abs() < 1e-6);
         assert!((ath_rows[2] - 2.0).abs() < 1e-6);
+    }
+
+    /// The `_into` entry points (LinearToy's allocation-free overrides and
+    /// the forwarding defaults) write exactly what the allocating methods
+    /// return, and count evaluations identically.
+    #[test]
+    fn into_entry_points_match_allocating() {
+        let toy = LinearToy::new(0.7, 3);
+        let spec = BatchSpec::new(2, 3);
+        let z = [0.5f32, -1.0, 2.0, 0.25, 4.0, -3.0];
+        let a = [1.0f32, -0.5, 0.25, 2.0, 0.0, 1.5];
+        let ts = [0.0, 1.0];
+
+        let want = toy.f(0.3, &z[..3]);
+        let mut out = vec![9.0f32; 3];
+        toy.f_into(0.3, &z[..3], &mut out);
+        assert_eq!(out, want);
+
+        let (az_want, ath_want) = toy.f_vjp(0.3, &z[..3], &a[..3]);
+        let mut az = vec![0.0f32; 3];
+        let mut ath = vec![0.0f32; 1];
+        toy.f_vjp_into(0.3, &z[..3], &a[..3], &mut az, &mut ath);
+        assert_eq!(az, az_want);
+        assert_eq!(ath, ath_want);
+
+        let want = toy.f_batch(&ts, &z, &spec);
+        let mut out = vec![0.0f32; 6];
+        toy.f_batch_into(&ts, &z, &spec, &mut out);
+        assert_eq!(out, want);
+
+        let (az_want, ath_want) = toy.f_vjp_batch(&ts, &z, &a, &spec);
+        let mut az = vec![0.0f32; 6];
+        let mut ath = vec![0.0f32; 1];
+        toy.f_vjp_batch_into(&ts, &z, &a, &spec, &mut az, &mut ath);
+        assert_eq!(az, az_want);
+        assert_eq!(ath, ath_want);
+        // every evaluation above was counted exactly once per sample unit
+        assert_eq!(toy.counters().f_evals.get(), 2 + 2 * 2);
+        assert_eq!(toy.counters().vjp_evals.get(), 2 + 2 * 2);
+
+        // forwarding defaults on a dynamics without overrides
+        let mut rng = Rng::new(3);
+        let mlp = MlpDynamics::new(2, 3, &mut rng);
+        let zz = [0.2f32, -0.4];
+        let aa = [1.0f32, 0.5];
+        let want = mlp.f(0.1, &zz);
+        let mut out = vec![0.0f32; 2];
+        mlp.f_into(0.1, &zz, &mut out);
+        assert_eq!(out, want);
+        let (az_want, ath_want) = mlp.f_vjp(0.1, &zz, &aa);
+        let mut az = vec![0.0f32; 2];
+        let mut ath = vec![0.0f32; mlp.param_dim()];
+        mlp.f_vjp_into(0.1, &zz, &aa, &mut az, &mut ath);
+        assert_eq!(az, az_want);
+        assert_eq!(ath, ath_want);
     }
 
     #[test]

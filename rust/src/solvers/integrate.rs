@@ -24,6 +24,7 @@
 
 use super::batch::BatchState;
 use super::dynamics::Dynamics;
+use super::workspace::{BatchWorkspace, SolverWorkspace};
 use super::{Solver, State};
 use crate::tensor::{error_norm, error_seminorm};
 use anyhow::{bail, ensure, Result};
@@ -208,6 +209,7 @@ impl IntStats {
 
 /// Integrate from `t0` to `t1` (either direction) starting from `state0`.
 /// Returns the final state and stats; accepted steps stream to `obs`.
+/// Thin wrapper over [`integrate_ws`] with a per-call workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn integrate(
     solver: &dyn Solver,
@@ -235,7 +237,8 @@ pub fn integrate(
 /// [`integrate`] with an observation grid: the loop lands bitwise on
 /// every `tᵢ` (see the module docs for the clamping rule) and fires
 /// [`StepObserver::on_observation`] there.  With an empty grid this *is*
-/// `integrate` — same decisions, same arithmetic.
+/// `integrate` — same decisions, same arithmetic.  Thin wrapper over
+/// [`integrate_obs_ws`] with a per-call workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn integrate_obs(
     solver: &dyn Solver,
@@ -248,19 +251,80 @@ pub fn integrate_obs(
     grid: &ObsGrid,
     obs: &mut dyn StepObserver,
 ) -> Result<(State, IntStats)> {
+    let mut ws = SolverWorkspace::new();
+    let stats = integrate_obs_ws(
+        solver, dynamics, t0, t1, &state0, mode, norm, grid, obs, &mut ws,
+    )?;
+    Ok((ws.take_output(), stats))
+}
+
+/// [`integrate_obs_ws`]'s observation-grid-free shape: borrow every loop
+/// buffer from `ws`, leave the final state in
+/// [`SolverWorkspace::output`], return only the stats.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &State,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    obs: &mut dyn StepObserver,
+    ws: &mut SolverWorkspace,
+) -> Result<IntStats> {
+    integrate_obs_ws(
+        solver,
+        dynamics,
+        t0,
+        t1,
+        state0,
+        mode,
+        norm,
+        &ObsGrid::none(),
+        obs,
+        ws,
+    )
+}
+
+/// The workspace-path integration loop: identical decisions and
+/// arithmetic to [`integrate_obs`] (which wraps it), but every loop
+/// buffer — the ping-ponged current/next states, the error vector, the
+/// solver's stage scratch — is borrowed from `ws`, so after warm-up one
+/// accepted step performs **zero** heap allocations (given a solver and
+/// dynamics with in-place `_into` paths; asserted by
+/// `tests/alloc_steady.rs`).  The final state is left in
+/// [`SolverWorkspace::output`].
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_obs_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &State,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn StepObserver,
+    ws: &mut SolverWorkspace,
+) -> Result<IntStats> {
     let span = t1 - t0;
     if span == 0.0 {
         ensure!(
             grid.is_empty(),
             "zero-span integration cannot reach observation times"
         );
-        return Ok((state0, IntStats::default()));
+        let s = ws.take_state_copy(state0);
+        ws.set_output(s);
+        return Ok(IntStats::default());
     }
     grid.validate_for(t0, t1)?;
     let dir = span.signum();
     let f0 = dynamics.counters().f_evals.get();
     let mut stats = IntStats::default();
-    let mut state = state0;
+    let mut state = ws.take_state_copy(state0);
+    let mut next = ws.take_state(state0);
+    let mut err = ws.take_err();
     let mut t = t0;
     let k_total = grid.len();
 
@@ -282,7 +346,7 @@ pub fn integrate_obs(
                 let n = ((seg_end - t_seg).abs() / h).ceil().max(1.0) as usize;
                 let hs = (seg_end - t_seg) / n as f64;
                 for i in 0..n {
-                    let (next, _err) = solver.step(dynamics, t, hs, &state);
+                    let _ = solver.step_into(dynamics, t, hs, &state, &mut next, &mut err, ws);
                     obs.on_trial(t, hs, next.bytes(), true);
                     let t_end = if i + 1 == n { seg_end } else { t + hs };
                     obs.on_accept(&AcceptedStep {
@@ -294,7 +358,7 @@ pub fn integrate_obs(
                         after: &next,
                         trials: 1,
                     });
-                    state = next;
+                    std::mem::swap(&mut state, &mut next);
                     t = t_end;
                     stats.n_accepted += 1;
                     stats.n_trials += 1;
@@ -346,9 +410,10 @@ pub fn integrate_obs(
                 loop {
                     trials += 1;
                     stats.n_trials += 1;
-                    let (next, err) = solver.step(dynamics, t, h, &state);
+                    let has_err =
+                        solver.step_into(dynamics, t, h, &state, &mut next, &mut err, ws);
                     let en = norm.eval(
-                        err.as_deref().unwrap_or(&[]),
+                        if has_err { &err } else { &[] },
                         &state.z,
                         &next.z,
                         rtol,
@@ -369,7 +434,7 @@ pub fn integrate_obs(
                             after: &next,
                             trials,
                         });
-                        state = next;
+                        std::mem::swap(&mut state, &mut next);
                         t = t_end;
                         stats.n_accepted += 1;
                         if aimed && next_obs < k_total {
@@ -421,7 +486,10 @@ pub fn integrate_obs(
         }
     }
     stats.f_evals = dynamics.counters().f_evals.get() - f0;
-    Ok((state, stats))
+    ws.put_state(next);
+    ws.put_err(err);
+    ws.set_output(state);
+    Ok(stats)
 }
 
 // ---------------------------------------------------------------------------
@@ -564,6 +632,8 @@ pub fn integrate_batch(
 /// sample's controller lands bitwise on every `tᵢ` (per-row clamping,
 /// decision-identical to a solo [`integrate_obs`] run of that row) and
 /// fires [`BatchStepObserver::on_observation`] per (sample, observation).
+/// Thin wrapper over [`integrate_batch_obs_ws`] with a per-call
+/// workspace.
 #[allow(clippy::too_many_arguments)]
 pub fn integrate_batch_obs(
     solver: &dyn Solver,
@@ -576,8 +646,64 @@ pub fn integrate_batch_obs(
     grid: &ObsGrid,
     obs: &mut dyn BatchStepObserver,
 ) -> Result<(BatchState, BatchIntStats)> {
+    let mut ws = BatchWorkspace::new();
+    let stats = integrate_batch_obs_ws(
+        solver, dynamics, t0, t1, &state0, mode, norm, grid, obs, &mut ws,
+    )?;
+    Ok((ws.take_output(), stats))
+}
+
+/// [`integrate_batch_obs_ws`]'s observation-grid-free shape.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    obs: &mut dyn BatchStepObserver,
+    ws: &mut BatchWorkspace,
+) -> Result<BatchIntStats> {
+    integrate_batch_obs_ws(
+        solver,
+        dynamics,
+        t0,
+        t1,
+        state0,
+        mode,
+        norm,
+        &ObsGrid::none(),
+        obs,
+        ws,
+    )
+}
+
+/// The workspace-path batched integration loop: identical decisions and
+/// arithmetic to [`integrate_batch_obs`] (which wraps it), but the
+/// ping-ponged batch states, the error buffer, gathered sub-batches and
+/// the solver's stage scratch are all borrowed from `ws`.  The lockstep
+/// fixed-grid loop and the all-rows-active adaptive phase are
+/// allocation-free in steady state; the per-iteration `f64` control
+/// vectors are reused across iterations.  The final state is left in
+/// [`BatchWorkspace::output`].
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch_obs_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn BatchStepObserver,
+    ws: &mut BatchWorkspace,
+) -> Result<BatchIntStats> {
     let spec = state0.spec();
     let nb = spec.batch;
+    let has_v = state0.v.is_some();
     let span = t1 - t0;
     let f0 = dynamics.counters().f_evals.get();
     let mut per = vec![IntStats::default(); nb];
@@ -586,18 +712,17 @@ pub fn integrate_batch_obs(
             grid.is_empty(),
             "zero-span integration cannot reach observation times"
         );
-        return Ok((
-            state0,
-            BatchIntStats {
-                per_sample: per,
-                f_evals: 0,
-            },
-        ));
+        let s = ws.take_batch_copy(state0);
+        ws.set_output(s);
+        return Ok(BatchIntStats {
+            per_sample: per,
+            f_evals: 0,
+        });
     }
     grid.validate_for(t0, t1)?;
     let dir = span.signum();
     let k_total = grid.len();
-    let mut state = state0;
+    let mut state = ws.take_batch_copy(state0);
 
     match *mode {
         StepMode::Fixed { h } => {
@@ -609,6 +734,8 @@ pub fn integrate_batch_obs(
             // per grid point and one observation sweep per segment end
             let mut hs_row = vec![0.0f64; nb];
             let mut ts_buf = vec![t0; nb];
+            let mut next = ws.take_batch(nb, spec.n_z, has_v);
+            let mut err = ws.take_err();
             let mut index = 0usize;
             let mut t = t0;
             let mut t_seg = t0;
@@ -622,7 +749,9 @@ pub fn integrate_batch_obs(
                 hs_row.fill(hs);
                 for i in 0..n {
                     ts_buf.fill(t);
-                    let (next, _err) = solver.step_batch(dynamics, &ts_buf, &hs_row, &state);
+                    let _ = solver.step_batch_into(
+                        dynamics, &ts_buf, &hs_row, &state, &mut next, &mut err, ws,
+                    );
                     let row_bytes = next.row_bytes();
                     let t_end = if i + 1 == n { seg_end } else { t + hs };
                     for (b, st) in per.iter_mut().enumerate() {
@@ -642,7 +771,7 @@ pub fn integrate_batch_obs(
                         st.n_accepted += 1;
                         st.n_trials += 1;
                     }
-                    state = next;
+                    std::mem::swap(&mut state, &mut next);
                     t = t_end;
                     index += 1;
                 }
@@ -659,6 +788,8 @@ pub fn integrate_batch_obs(
                     }
                 }
             }
+            ws.put_batch(next);
+            ws.put_err(err);
         }
         StepMode::Adaptive {
             rtol,
@@ -700,6 +831,11 @@ pub fn integrate_batch_obs(
             } else {
                 Vec::new()
             };
+            // reused across iterations (capacity stabilizes after the
+            // first pass)
+            let mut ts: Vec<f64> = Vec::new();
+            let mut hs: Vec<f64> = Vec::new();
+            let mut still: Vec<usize> = Vec::new();
             while !active.is_empty() {
                 // rows opening a new step: fire exact-coincidence
                 // observations, then clamp to the nearest barrier
@@ -728,25 +864,35 @@ pub fn integrate_batch_obs(
                         }
                     }
                 }
-                let ts: Vec<f64> = active.iter().map(|&b| t_cur[b]).collect();
-                let hs: Vec<f64> = active.iter().map(|&b| h_cur[b]).collect();
+                ts.clear();
+                ts.extend(active.iter().map(|&b| t_cur[b]));
+                hs.clear();
+                hs.extend(active.iter().map(|&b| h_cur[b]));
                 // skip the row gather while every sample is still active
-                let (next_sub, err_sub) = if active.len() == nb {
-                    solver.step_batch(dynamics, &ts, &hs, &state)
+                let mut next_sub = ws.take_batch(active.len(), spec.n_z, has_v);
+                let mut err_sub = ws.take_err();
+                let has_err = if active.len() == nb {
+                    solver.step_batch_into(
+                        dynamics, &ts, &hs, &state, &mut next_sub, &mut err_sub, ws,
+                    )
                 } else {
-                    let sub = state.gather_rows(&active);
-                    solver.step_batch(dynamics, &ts, &hs, &sub)
+                    let mut sub = ws.take_batch(active.len(), spec.n_z, has_v);
+                    for (k, &b) in active.iter().enumerate() {
+                        sub.copy_row_from(k, &state, b);
+                    }
+                    let r = solver.step_batch_into(
+                        dynamics, &ts, &hs, &sub, &mut next_sub, &mut err_sub, ws,
+                    );
+                    ws.put_batch(sub);
+                    r
                 };
                 let sub_spec = next_sub.spec();
                 let row_bytes = next_sub.row_bytes();
-                let mut still = Vec::with_capacity(active.len());
+                still.clear();
                 for (k, &b) in active.iter().enumerate() {
                     trials_cur[b] += 1;
                     per[b].n_trials += 1;
-                    let err_row: &[f32] = match &err_sub {
-                        Some(e) => sub_spec.row(e, k),
-                        None => &[],
-                    };
+                    let err_row: &[f32] = if has_err { sub_spec.row(&err_sub, k) } else { &[] };
                     let en = norm.eval(
                         err_row,
                         spec.row(&state.z.data, b),
@@ -824,7 +970,9 @@ pub fn integrate_batch_obs(
                         still.push(b);
                     }
                 }
-                active = still;
+                ws.put_batch(next_sub);
+                ws.put_err(err_sub);
+                std::mem::swap(&mut active, &mut still);
             }
             // a row's final accepted time may coincide with an observation
             for b in 0..nb {
@@ -852,7 +1000,8 @@ pub fn integrate_batch_obs(
         per_sample: per,
         f_evals: dynamics.counters().f_evals.get() - f0,
     };
-    Ok((state, stats))
+    ws.set_output(state);
+    Ok(stats)
 }
 
 /// Per-sample accepted-grid recorder — what batched MALI keeps from the

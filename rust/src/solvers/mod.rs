@@ -8,9 +8,11 @@ pub mod dynamics;
 pub mod integrate;
 pub mod rk;
 pub mod stability;
+pub mod workspace;
 
 use batch::{BatchSpec, BatchState};
 use dynamics::Dynamics;
+use workspace::{BatchWorkspace, SolverWorkspace};
 
 /// Solver state: plain `z` for RK methods, augmented `(z, v)` for ALF.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +107,217 @@ pub trait Solver {
         let s_in = self.invert(dynamics, t_out, h, s_out)?;
         let (a_in, a_theta) = self.step_vjp(dynamics, t_out - h, h, &s_in, a_out);
         Some((s_in, a_in, a_theta))
+    }
+
+    // ---- workspace (allocation-free) entry points ----------------------
+    //
+    // The `_into` variants write into caller-provided buffers and draw
+    // scratch from a [`SolverWorkspace`] / [`BatchWorkspace`]; after the
+    // buffers reach their steady shapes the overriding solvers (ALF, RK)
+    // perform zero heap allocations per call.  The defaults forward to
+    // the allocating methods — correct for any solver, value-identical.
+    // Output buffers are re-shaped by the callee, so callers only need
+    // to hand in *some* recycled `State`.
+
+    /// One step ψ into caller buffers: `out` receives the new state and
+    /// `err` the embedded error estimate when the solver has one (the
+    /// return value says whether `err` was written).  Default forwards
+    /// to [`Solver::step`].
+    #[allow(clippy::too_many_arguments)]
+    fn step_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+        out: &mut State,
+        err: &mut Vec<f32>,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let _ = ws;
+        let (next, e) = self.step(dynamics, t, h, s);
+        *out = next;
+        match e {
+            Some(e) => {
+                *err = e;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reverse-mode vjp through one step into caller buffers; the
+    /// θ-cotangent is **accumulated** into `ath_acc` (bit-identical to
+    /// the `axpy(1.0, ..)` the gradient loops previously performed on the
+    /// returned vector).  Default forwards to [`Solver::step_vjp`].
+    #[allow(clippy::too_many_arguments)]
+    fn step_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
+        let _ = ws;
+        let (a, dth) = self.step_vjp(dynamics, t, h, s_in, a_out);
+        *a_in = a;
+        crate::tensor::axpy(1.0, &dth, ath_acc);
+    }
+
+    /// Exact step inverse ψ⁻¹ into a caller buffer; returns `false` when
+    /// the solver is not invertible.  Default forwards to
+    /// [`Solver::invert`].
+    fn invert_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        out: &mut State,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let _ = ws;
+        match self.invert(dynamics, t_out, h, s_out) {
+            Some(s) => {
+                *out = s;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// MALI backward micro-step into caller buffers: ψ⁻¹ reconstruction
+    /// plus the step vjp, θ-cotangent accumulated into `ath_acc`.
+    /// Returns `false` when the solver is not invertible.  Default
+    /// forwards to [`Solver::invert_and_vjp`].
+    #[allow(clippy::too_many_arguments)]
+    fn invert_and_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+        s_in: &mut State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let _ = ws;
+        match self.invert_and_vjp(dynamics, t_out, h, s_out, a_out) {
+            Some((s, a, dth)) => {
+                *s_in = s;
+                *a_in = a;
+                crate::tensor::axpy(1.0, &dth, ath_acc);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Batched [`Solver::step_into`] with per-row `(t, h)`.  Default
+    /// forwards to [`Solver::step_batch`].
+    #[allow(clippy::too_many_arguments)]
+    fn step_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+        out: &mut BatchState,
+        err: &mut Vec<f32>,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let _ = ws;
+        let (next, e) = self.step_batch(dynamics, ts, hs, s);
+        *out = next;
+        match e {
+            Some(e) => {
+                *err = e;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Batched [`Solver::step_vjp_into`]; θ-cotangents are summed over
+    /// rows and accumulated into `ath_acc`.  Default forwards to
+    /// [`Solver::step_vjp_batch`].
+    #[allow(clippy::too_many_arguments)]
+    fn step_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+        a_in: &mut BatchState,
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let _ = ws;
+        let (a, dth) = self.step_vjp_batch(dynamics, ts, hs, s_in, a_out);
+        *a_in = a;
+        crate::tensor::axpy(1.0, &dth, ath_acc);
+    }
+
+    /// Batched [`Solver::invert_into`] with per-row `(t_out, h)`; returns
+    /// `false` when the solver is not invertible.  Default forwards to
+    /// [`Solver::invert_batch`].
+    #[allow(clippy::too_many_arguments)]
+    fn invert_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let _ = ws;
+        match self.invert_batch(dynamics, ts_out, hs, s_out) {
+            Some(s) => {
+                *out = s;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Batched MALI backward micro-step into caller buffers.  The default
+    /// composes [`Solver::invert_batch_into`] +
+    /// [`Solver::step_vjp_batch_into`] — allocation-free whenever those
+    /// are.  Returns `false` when the solver is not invertible.
+    #[allow(clippy::too_many_arguments)]
+    fn invert_and_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+        a_out: &BatchState,
+        s_in: &mut BatchState,
+        a_in: &mut BatchState,
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        if !self.invert_batch_into(dynamics, ts_out, hs, s_out, s_in, ws) {
+            return false;
+        }
+        // per-row step-input times; the buffer is taken out of the
+        // workspace so it can be passed alongside `&mut ws`
+        let mut ts_in = std::mem::take(&mut ws.ts_in);
+        workspace::ensure_f64(&mut ts_in, ts_out.len());
+        for ((ti, &to), &h) in ts_in.iter_mut().zip(ts_out).zip(hs) {
+            *ti = to - h;
+        }
+        self.step_vjp_batch_into(dynamics, &ts_in, hs, s_in, a_out, a_in, ath_acc, ws);
+        ws.ts_in = ts_in;
+        true
     }
 
     // ---- batch-first entry points --------------------------------------

@@ -9,8 +9,12 @@
 
 use super::batch::{BatchSpec, BatchState};
 use super::dynamics::Dynamics;
+use super::workspace::{
+    ensure, ensure_stages, fill_row_coeffs, fill_stage_times, shape_state_n, BatchWorkspace,
+    SolverWorkspace,
+};
 use super::{Solver, State};
-use crate::tensor::{axpy, axpy_rows, lincomb};
+use crate::tensor::{axpy, axpy_rows};
 
 /// Butcher tableau of an explicit method, optionally with an embedded
 /// lower-order weight row for error estimation.
@@ -155,67 +159,60 @@ impl RkSolver {
         RkSolver { tab }
     }
 
-    /// Evaluate all stages `k_i` and stage inputs `y_i`.
-    fn stages(
+    /// Evaluate all stages into `ws.ks` / `ws.ys` (the first `s` buffers
+    /// of each).  The stage inputs were previously cloned from `z` per
+    /// stage; the workspace path copies into preallocated buffers — same
+    /// arithmetic, zero steady-state allocations.
+    fn stages_into(
         &self,
         dynamics: &dyn Dynamics,
         t: f64,
         h: f64,
         z: &[f32],
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        ws: &mut SolverWorkspace,
+    ) {
         let s = self.tab.b.len();
-        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(s);
-        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(s);
+        let n = z.len();
+        ensure_stages(&mut ws.ks, s, n);
+        ensure_stages(&mut ws.ys, s, n);
         for i in 0..s {
-            let mut y = z.to_vec();
+            ws.ys[i].copy_from_slice(z);
             for (j, &aij) in self.tab.a[i].iter().enumerate() {
                 if aij != 0.0 {
-                    axpy((h * aij) as f32, &ks[j], &mut y);
+                    axpy((h * aij) as f32, &ws.ks[j], &mut ws.ys[i]);
                 }
             }
-            let k = dynamics.f(t + self.tab.c[i] * h, &y);
-            ys.push(y);
-            ks.push(k);
+            dynamics.f_into(t + self.tab.c[i] * h, &ws.ys[i], &mut ws.ks[i]);
         }
-        (ks, ys)
     }
 
-    /// Per-row `(h_b · coeff) as f32` scale vector for batched stage
-    /// arithmetic — the same cast order as the solo `(h * aij) as f32`.
-    fn row_coeffs(hs: &[f64], coeff: f64) -> Vec<f32> {
-        hs.iter().map(|&h| (h * coeff) as f32).collect()
-    }
-
-    /// Batched stage evaluation over the flat `[B·N_z]` buffer with
-    /// per-row `(t, h)`: one `f_batch` call per stage regardless of B.
-    fn stages_batch(
+    /// Batched stage evaluation into `ws.ks` / `ws.ys` over the flat
+    /// `[B·N_z]` buffer with per-row `(t, h)`: one `f_batch` call per
+    /// stage regardless of B.
+    fn stages_batch_into(
         &self,
         dynamics: &dyn Dynamics,
         ts: &[f64],
         hs: &[f64],
         z: &[f32],
         spec: &BatchSpec,
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        ws: &mut BatchWorkspace,
+    ) {
         let s = self.tab.b.len();
-        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(s);
-        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(s);
+        let n = spec.flat_len();
+        ensure_stages(&mut ws.ks, s, n);
+        ensure_stages(&mut ws.ys, s, n);
         for i in 0..s {
-            let mut y = z.to_vec();
+            ws.ys[i].copy_from_slice(z);
             for (j, &aij) in self.tab.a[i].iter().enumerate() {
                 if aij != 0.0 {
-                    axpy_rows(&Self::row_coeffs(hs, aij), &ks[j], &mut y, spec.n_z);
+                    fill_row_coeffs(hs, aij, &mut ws.coeffs);
+                    axpy_rows(&ws.coeffs, &ws.ks[j], &mut ws.ys[i], spec.n_z);
                 }
             }
-            let stage_ts: Vec<f64> = ts
-                .iter()
-                .zip(hs)
-                .map(|(&t, &h)| t + self.tab.c[i] * h)
-                .collect();
-            let k = dynamics.f_batch(&stage_ts, &y, spec);
-            ys.push(y);
-            ks.push(k);
+            fill_stage_times(ts, hs, self.tab.c[i], &mut ws.s1s);
+            dynamics.f_batch_into(&ws.s1s, &ws.ys[i], spec, &mut ws.ks[i]);
         }
-        (ks, ys)
     }
 }
 
@@ -246,25 +243,14 @@ impl Solver for RkSolver {
         h: f64,
         s: &State,
     ) -> (State, Option<Vec<f32>>) {
-        let (ks, _ys) = self.stages(dynamics, t, h, &s.z);
-        let mut z1 = s.z.clone();
-        for (i, &bi) in self.tab.b.iter().enumerate() {
-            if bi != 0.0 {
-                axpy((h * bi) as f32, &ks[i], &mut z1);
-            }
-        }
-        let err = self.tab.b_low.as_ref().map(|bl| {
-            let terms: Vec<(f32, &[f32])> = self
-                .tab
-                .b
-                .iter()
-                .zip(bl)
-                .enumerate()
-                .map(|(i, (&b, &bh))| ((h * (b - bh)) as f32, ks[i].as_slice()))
-                .collect();
-            lincomb(&terms)
-        });
-        (State { z: z1, v: None }, err)
+        let mut ws = SolverWorkspace::new();
+        let mut out = State {
+            z: Vec::new(),
+            v: None,
+        };
+        let mut err = Vec::new();
+        let has_err = self.step_into(dynamics, t, h, s, &mut out, &mut err, &mut ws);
+        (out, has_err.then_some(err))
     }
 
     /// Reverse-mode through one RK step: cotangent `a_out.z` on `z'`
@@ -279,36 +265,92 @@ impl Solver for RkSolver {
         s_in: &State,
         a_out: &State,
     ) -> (State, Vec<f32>) {
-        let (ks, ys) = self.stages(dynamics, t, h, &s_in.z);
-        let nstages = ks.len();
+        let mut ws = SolverWorkspace::new();
+        let mut a_in = State {
+            z: Vec::new(),
+            v: None,
+        };
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        self.step_vjp_into(dynamics, t, h, s_in, a_out, &mut a_in, &mut a_theta, &mut ws);
+        (a_in, a_theta)
+    }
+
+    fn step_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+        out: &mut State,
+        err: &mut Vec<f32>,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let n = s.z.len();
+        self.stages_into(dynamics, t, h, &s.z, ws);
+        shape_state_n(out, n, false);
+        out.z.copy_from_slice(&s.z);
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            if bi != 0.0 {
+                axpy((h * bi) as f32, &ws.ks[i], &mut out.z);
+            }
+        }
+        match &self.tab.b_low {
+            Some(bl) => {
+                // err = h·Σ (b−b̂)·k — zero-fill then accumulate term by
+                // term in stage order, exactly like the old `lincomb`
+                ensure(err, n);
+                err.fill(0.0);
+                for (i, (&b, &bh)) in self.tab.b.iter().zip(bl).enumerate() {
+                    axpy((h * (b - bh)) as f32, &ws.ks[i], err);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn step_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
+        let n = s_in.z.len();
+        self.stages_into(dynamics, t, h, &s_in.z, ws);
+        let nstages = self.tab.b.len();
         let az_out = &a_out.z;
         // a_k[i] starts at h·b_i·a_z'
-        let mut a_k: Vec<Vec<f32>> = self
-            .tab
-            .b
-            .iter()
-            .map(|&bi| az_out.iter().map(|&a| (h * bi) as f32 * a).collect())
-            .collect();
-        let mut a_z = az_out.clone();
-        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        ensure_stages(&mut ws.a_k, nstages, n);
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            let coeff = (h * bi) as f32;
+            for (o, &a) in ws.a_k[i].iter_mut().zip(az_out) {
+                *o = coeff * a;
+            }
+        }
+        shape_state_n(a_in, n, false);
+        a_in.z.copy_from_slice(az_out);
         for i in (0..nstages).rev() {
-            if a_k[i].iter().all(|&x| x == 0.0) {
+            if ws.a_k[i].iter().all(|&x| x == 0.0) {
                 continue;
             }
-            let (g_y, g_th) = dynamics.f_vjp(t + self.tab.c[i] * h, &ys[i], &a_k[i]);
-            axpy(1.0, &g_th, &mut a_theta);
+            ensure(&mut ws.g, n);
+            dynamics.f_vjp_into(t + self.tab.c[i] * h, &ws.ys[i], &ws.a_k[i], &mut ws.g, ath_acc);
             // y_i = z + h Σ_j a_ij k_j
-            axpy(1.0, &g_y, &mut a_z);
+            axpy(1.0, &ws.g, &mut a_in.z);
             for (j, &aij) in self.tab.a[i].iter().enumerate() {
                 if aij != 0.0 {
                     let coeff = (h * aij) as f32;
-                    for (akj, gy) in a_k[j].iter_mut().zip(&g_y) {
+                    for (akj, gy) in ws.a_k[j].iter_mut().zip(&ws.g) {
                         *akj += coeff * gy;
                     }
                 }
             }
         }
-        (State { z: a_z, v: None }, a_theta)
     }
 
     fn invert(
@@ -340,22 +382,11 @@ impl Solver for RkSolver {
         hs: &[f64],
         s: &BatchState,
     ) -> (BatchState, Option<Vec<f32>>) {
-        let spec = s.spec();
-        let (ks, _ys) = self.stages_batch(dynamics, ts, hs, &s.z.data, &spec);
-        let mut z1 = s.z.data.clone();
-        for (i, &bi) in self.tab.b.iter().enumerate() {
-            if bi != 0.0 {
-                axpy_rows(&Self::row_coeffs(hs, bi), &ks[i], &mut z1, spec.n_z);
-            }
-        }
-        let err = self.tab.b_low.as_ref().map(|bl| {
-            let mut e = vec![0.0f32; spec.flat_len()];
-            for (i, (&b, &bh)) in self.tab.b.iter().zip(bl).enumerate() {
-                axpy_rows(&Self::row_coeffs(hs, b - bh), &ks[i], &mut e, spec.n_z);
-            }
-            e
-        });
-        (BatchState::from_flat(z1, spec), err)
+        let mut ws = BatchWorkspace::new();
+        let mut out = BatchState::from_flat(vec![0.0f32; s.spec().flat_len()], s.spec());
+        let mut err = Vec::new();
+        let has_err = self.step_batch_into(dynamics, ts, hs, s, &mut out, &mut err, &mut ws);
+        (out, has_err.then_some(err))
     }
 
     fn step_vjp_batch(
@@ -366,65 +397,127 @@ impl Solver for RkSolver {
         s_in: &BatchState,
         a_out: &BatchState,
     ) -> (BatchState, Vec<f32>) {
+        let mut ws = BatchWorkspace::new();
         let spec = s_in.spec();
-        let (_ks, ys) = self.stages_batch(dynamics, ts, hs, &s_in.z.data, &spec);
-        let nstages = ys.len();
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+        self.step_vjp_batch_into(
+            dynamics,
+            ts,
+            hs,
+            s_in,
+            a_out,
+            &mut a_in,
+            &mut a_theta,
+            &mut ws,
+        );
+        (a_in, a_theta)
+    }
+
+    fn step_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+        out: &mut BatchState,
+        err: &mut Vec<f32>,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let spec = s.spec();
+        self.stages_batch_into(dynamics, ts, hs, &s.z.data, &spec, ws);
+        super::workspace::shape_batch_state(out, spec.batch, spec.n_z, false);
+        out.z.data.copy_from_slice(&s.z.data);
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            if bi != 0.0 {
+                fill_row_coeffs(hs, bi, &mut ws.coeffs);
+                axpy_rows(&ws.coeffs, &ws.ks[i], &mut out.z.data, spec.n_z);
+            }
+        }
+        match &self.tab.b_low {
+            Some(bl) => {
+                ensure(err, spec.flat_len());
+                err.fill(0.0);
+                for (i, (&b, &bh)) in self.tab.b.iter().zip(bl).enumerate() {
+                    fill_row_coeffs(hs, b - bh, &mut ws.coeffs);
+                    axpy_rows(&ws.coeffs, &ws.ks[i], err, spec.n_z);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn step_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+        a_in: &mut BatchState,
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let spec = s_in.spec();
+        let n = spec.flat_len();
+        self.stages_batch_into(dynamics, ts, hs, &s_in.z.data, &spec, ws);
+        let nstages = self.tab.b.len();
         let az_out = &a_out.z.data;
         // a_k[i] starts at h_b·b_i·a_z' per row
-        let mut a_k: Vec<Vec<f32>> = self
-            .tab
-            .b
-            .iter()
-            .map(|&bi| {
-                let coeffs = Self::row_coeffs(hs, bi);
-                let mut buf = Vec::with_capacity(spec.flat_len());
-                for b in 0..spec.batch {
-                    let c = coeffs[b];
-                    buf.extend(spec.row(az_out, b).iter().map(|&a| c * a));
+        ensure_stages(&mut ws.a_k, nstages, n);
+        for (i, &bi) in self.tab.b.iter().enumerate() {
+            fill_row_coeffs(hs, bi, &mut ws.coeffs);
+            for b in 0..spec.batch {
+                let c = ws.coeffs[b];
+                let lo = b * spec.n_z;
+                for (o, &a) in ws.a_k[i][lo..lo + spec.n_z]
+                    .iter_mut()
+                    .zip(&az_out[lo..lo + spec.n_z])
+                {
+                    *o = c * a;
                 }
-                buf
-            })
-            .collect();
-        let mut a_z = az_out.clone();
-        let mut a_theta = vec![0.0f32; dynamics.param_dim()];
+            }
+        }
+        super::workspace::shape_batch_state(a_in, spec.batch, spec.n_z, false);
+        a_in.z.data.copy_from_slice(az_out);
         for i in (0..nstages).rev() {
             // Per-row zero-cotangent skip, matching the solo path's
             // per-sample stage skip — rows with a zero a_k[i] row are
             // excluded from the vjp call, so per-sample vjp-eval counts
             // equal B solo runs (their g_y contribution is exactly zero).
             let nz: Vec<usize> = (0..spec.batch)
-                .filter(|&b| spec.row(&a_k[i], b).iter().any(|&x| x != 0.0))
+                .filter(|&b| spec.row(&ws.a_k[i], b).iter().any(|&x| x != 0.0))
                 .collect();
             if nz.is_empty() {
                 continue;
             }
-            let stage_ts: Vec<f64> = ts
-                .iter()
-                .zip(hs)
-                .map(|(&t, &h)| t + self.tab.c[i] * h)
-                .collect();
-            let (g_y, g_th) = if nz.len() == spec.batch {
-                dynamics.f_vjp_batch(&stage_ts, &ys[i], &a_k[i], &spec)
+            fill_stage_times(ts, hs, self.tab.c[i], &mut ws.s1s);
+            ensure(&mut ws.g, n);
+            if nz.len() == spec.batch {
+                dynamics
+                    .f_vjp_batch_into(&ws.s1s, &ws.ys[i], &ws.a_k[i], &spec, &mut ws.g, ath_acc);
             } else {
+                // partial-row fallback (rare: only when some rows' stage
+                // cotangent is exactly zero) — gathers allocate
                 let sub = spec.with_batch(nz.len());
-                let ts_sub: Vec<f64> = nz.iter().map(|&b| stage_ts[b]).collect();
-                let y_sub = spec.gather(&ys[i], &nz);
-                let ak_sub = spec.gather(&a_k[i], &nz);
+                let ts_sub: Vec<f64> = nz.iter().map(|&b| ws.s1s[b]).collect();
+                let y_sub = spec.gather(&ws.ys[i], &nz);
+                let ak_sub = spec.gather(&ws.a_k[i], &nz);
                 let (gy_sub, g_th) = dynamics.f_vjp_batch(&ts_sub, &y_sub, &ak_sub, &sub);
-                let mut g_y = vec![0.0f32; spec.flat_len()];
-                spec.scatter(&gy_sub, &nz, &mut g_y);
-                (g_y, g_th)
-            };
-            axpy(1.0, &g_th, &mut a_theta);
+                ws.g.fill(0.0);
+                spec.scatter(&gy_sub, &nz, &mut ws.g);
+                axpy(1.0, &g_th, ath_acc);
+            }
             // y_i = z + h Σ_j a_ij k_j
-            axpy(1.0, &g_y, &mut a_z);
+            axpy(1.0, &ws.g, &mut a_in.z.data);
             for (j, &aij) in self.tab.a[i].iter().enumerate() {
                 if aij != 0.0 {
-                    axpy_rows(&Self::row_coeffs(hs, aij), &g_y, &mut a_k[j], spec.n_z);
+                    fill_row_coeffs(hs, aij, &mut ws.coeffs);
+                    axpy_rows(&ws.coeffs, &ws.g, &mut ws.a_k[j], spec.n_z);
                 }
             }
         }
-        (BatchState::from_flat(a_z, spec), a_theta)
     }
 }
 

@@ -1,0 +1,424 @@
+//! Preallocated workspaces for the solver/grad hot paths.
+//!
+//! MALI's pitch is gradient estimation at constant memory and
+//! near-hardware speed, yet the original inner loops allocated a fresh
+//! `Vec<f32>` per stage evaluation, so steps/sec was bounded by the
+//! allocator rather than the FLOPs.  A [`SolverWorkspace`] (and its
+//! batched sibling [`BatchWorkspace`]) owns every buffer those loops
+//! need — stage scratch, ψ/ψ⁻¹ intermediates, error vectors, and the
+//! recyclable state buffers the integration loops ping-pong between — so
+//! that after warm-up one accepted step performs **zero** heap
+//! allocations (asserted by `tests/alloc_steady.rs` with a counting
+//! global allocator).
+//!
+//! # Workspace contract
+//!
+//! * **Ownership** — the workspace owns scratch; callers own their
+//!   inputs and outputs.  `_into` methods never stash references.
+//! * **Aliasing** — an `_into` output buffer must not alias any input
+//!   slice of the same call (the borrow checker enforces this for the
+//!   slice arguments; the named scratch fields are disjoint by
+//!   construction).
+//! * **Warm-up** — buffers grow (or shrink) to the requested size on
+//!   first use and are reused verbatim afterwards; steady-state calls
+//!   with stable shapes never touch the allocator.  A workspace may be
+//!   reused across calls and across solvers; shapes are re-checked per
+//!   call.
+//! * **Wrappers allocate** — the pre-existing allocating signatures
+//!   (`psi`, `step`, `integrate`, …) remain available as thin wrappers
+//!   that build the output buffers (and a transient workspace) per call,
+//!   then delegate to the `_into` path, so both paths are bit-identical
+//!   by construction (pinned by `tests/prop_solver.rs`).
+
+use super::batch::BatchState;
+use super::State;
+use crate::tensor::Tensor;
+
+/// Grow-once resize: reallocate only when the requested length changes.
+/// Fresh elements are zeroed; existing contents are preserved when the
+/// length already matches (steady state — no allocator traffic).
+pub(crate) fn ensure(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
+/// [`ensure`] for `f64` scratch (per-row times / coefficients).
+pub(crate) fn ensure_f64(buf: &mut Vec<f64>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
+/// Per-row `(h_b · coeff) as f32` scale vector — the same cast order as
+/// the solo `(h * coeff) as f32` stage arithmetic.  The batch≡solo
+/// bitwise-equivalence tests depend on this exact cast order; ALF and RK
+/// share this single copy so the two solver families cannot drift.
+pub(crate) fn fill_row_coeffs(hs: &[f64], coeff: f64, out: &mut Vec<f32>) {
+    ensure(out, hs.len());
+    for (o, &h) in out.iter_mut().zip(hs) {
+        *o = (h * coeff) as f32;
+    }
+}
+
+/// Per-row stage times `t_b + h_b·offset` (f64) into `out`.
+pub(crate) fn fill_stage_times(ts: &[f64], hs: &[f64], offset: f64, out: &mut Vec<f64>) {
+    ensure_f64(out, ts.len());
+    for ((o, &t), &h) in out.iter_mut().zip(ts).zip(hs) {
+        *o = t + h * offset;
+    }
+}
+
+/// Shape a vec-of-stage-buffers to `stages` buffers of `n` elements.
+pub(crate) fn ensure_stages(bufs: &mut Vec<Vec<f32>>, stages: usize, n: usize) {
+    while bufs.len() < stages {
+        bufs.push(Vec::new());
+    }
+    for b in bufs.iter_mut().take(stages) {
+        ensure(b, n);
+    }
+}
+
+/// Shape `dst` as an `n`-element state with or without a `v` buffer,
+/// reusing its allocations (no allocator traffic once capacities
+/// suffice).
+pub(crate) fn shape_state_n(dst: &mut State, n: usize, has_v: bool) {
+    ensure(&mut dst.z, n);
+    if has_v {
+        let dv = dst.v.get_or_insert_with(Vec::new);
+        ensure(dv, n);
+    } else {
+        dst.v = None;
+    }
+}
+
+/// Shape `dst` like `template` (same `z` length, same `v` presence).
+fn shape_state(dst: &mut State, template: &State) {
+    shape_state_n(dst, template.z.len(), template.v.is_some());
+}
+
+fn copy_state(dst: &mut State, src: &State) {
+    dst.z.copy_from_slice(&src.z);
+    if let (Some(dv), Some(sv)) = (&mut dst.v, &src.v) {
+        dv.copy_from_slice(sv);
+    }
+}
+
+/// Preallocated scratch + recyclable buffers for the single-sample
+/// solver/grad hot paths.  See the module docs for the contract.
+#[derive(Debug)]
+pub struct SolverWorkspace {
+    // ---- named ψ/ψ⁻¹/ψ-vjp scratch (ALF) --------------------------------
+    pub(crate) k1: Vec<f32>,
+    pub(crate) u1: Vec<f32>,
+    pub(crate) av_tot: Vec<f32>,
+    pub(crate) a_u1: Vec<f32>,
+    pub(crate) g: Vec<f32>,
+    /// Read-only zero cotangent (never written after `ensure`).
+    pub(crate) zero: Vec<f32>,
+    // ---- RK per-stage buffers -------------------------------------------
+    pub(crate) ks: Vec<Vec<f32>>,
+    pub(crate) ys: Vec<Vec<f32>>,
+    pub(crate) a_k: Vec<Vec<f32>>,
+    // ---- recyclable integration-loop buffers ----------------------------
+    states: Vec<State>,
+    errs: Vec<Vec<f32>>,
+    /// Final state of the last `integrate*_ws` run.
+    out: State,
+}
+
+impl SolverWorkspace {
+    /// An empty workspace; every buffer grows on first use.
+    pub fn new() -> SolverWorkspace {
+        SolverWorkspace {
+            k1: Vec::new(),
+            u1: Vec::new(),
+            av_tot: Vec::new(),
+            a_u1: Vec::new(),
+            g: Vec::new(),
+            zero: Vec::new(),
+            ks: Vec::new(),
+            ys: Vec::new(),
+            a_k: Vec::new(),
+            states: Vec::new(),
+            errs: Vec::new(),
+            out: State {
+                z: Vec::new(),
+                v: None,
+            },
+        }
+    }
+
+    /// Final state left behind by the last `integrate*_ws` run.
+    pub fn output(&self) -> &State {
+        &self.out
+    }
+
+    /// Move the final state out of the workspace (the buffer is replaced
+    /// by an empty one; the next run re-shapes it).
+    pub fn take_output(&mut self) -> State {
+        std::mem::replace(
+            &mut self.out,
+            State {
+                z: Vec::new(),
+                v: None,
+            },
+        )
+    }
+
+    /// Borrow a recycled state buffer shaped like `template` (contents
+    /// unspecified).
+    pub(crate) fn take_state(&mut self, template: &State) -> State {
+        let mut s = self.states.pop().unwrap_or_else(|| State {
+            z: Vec::new(),
+            v: None,
+        });
+        shape_state(&mut s, template);
+        s
+    }
+
+    /// Borrow a recycled state buffer holding a copy of `template`.
+    pub(crate) fn take_state_copy(&mut self, template: &State) -> State {
+        let mut s = self.take_state(template);
+        copy_state(&mut s, template);
+        s
+    }
+
+    /// Return a state buffer to the pool.
+    pub(crate) fn put_state(&mut self, s: State) {
+        self.states.push(s);
+    }
+
+    /// Store `s` as the run output, recycling the previous output buffer.
+    pub(crate) fn set_output(&mut self, s: State) {
+        let prev = std::mem::replace(&mut self.out, s);
+        self.put_state(prev);
+    }
+
+    /// Borrow a recycled flat buffer (length unspecified; callers
+    /// `ensure` it).
+    pub(crate) fn take_err(&mut self) -> Vec<f32> {
+        self.errs.pop().unwrap_or_default()
+    }
+
+    /// Return a flat buffer to the pool.
+    pub(crate) fn put_err(&mut self, e: Vec<f32>) {
+        self.errs.push(e);
+    }
+}
+
+impl Default for SolverWorkspace {
+    fn default() -> Self {
+        SolverWorkspace::new()
+    }
+}
+
+/// Shape `dst` as a `[batch, n_z]` batch state with (or without) a `v`
+/// buffer, reusing its allocations.
+pub(crate) fn shape_batch_state(dst: &mut BatchState, batch: usize, n_z: usize, has_v: bool) {
+    ensure(&mut dst.z.data, batch * n_z);
+    dst.z.shape.clear();
+    dst.z.shape.extend_from_slice(&[batch, n_z]);
+    if has_v {
+        if dst.v.is_none() {
+            dst.v = Some(Tensor {
+                data: Vec::new(),
+                shape: Vec::new(),
+            });
+        }
+        let v = dst.v.as_mut().expect("just ensured");
+        ensure(&mut v.data, batch * n_z);
+        v.shape.clear();
+        v.shape.extend_from_slice(&[batch, n_z]);
+    } else {
+        dst.v = None;
+    }
+}
+
+/// Preallocated scratch + recyclable buffers for the batched (`[B, N_z]`)
+/// solver/grad hot paths — the flat-buffer mirror of [`SolverWorkspace`].
+#[derive(Debug)]
+pub struct BatchWorkspace {
+    // ---- named ψ/ψ⁻¹/ψ-vjp scratch (ALF, flat `[B·N_z]`) ----------------
+    pub(crate) k1: Vec<f32>,
+    pub(crate) u1: Vec<f32>,
+    pub(crate) av_tot: Vec<f32>,
+    pub(crate) a_u1: Vec<f32>,
+    pub(crate) g: Vec<f32>,
+    pub(crate) zero: Vec<f32>,
+    // ---- per-row coefficient / time scratch -----------------------------
+    pub(crate) half: Vec<f32>,
+    pub(crate) coeffs: Vec<f32>,
+    pub(crate) s1s: Vec<f64>,
+    pub(crate) ts_in: Vec<f64>,
+    // ---- RK per-stage buffers (flat `[B·N_z]` each) ---------------------
+    pub(crate) ks: Vec<Vec<f32>>,
+    pub(crate) ys: Vec<Vec<f32>>,
+    pub(crate) a_k: Vec<Vec<f32>>,
+    // ---- recyclable integration-loop buffers ----------------------------
+    states: Vec<BatchState>,
+    errs: Vec<Vec<f32>>,
+    out: BatchState,
+}
+
+fn empty_batch_state() -> BatchState {
+    BatchState {
+        z: Tensor {
+            data: Vec::new(),
+            shape: vec![0, 0],
+        },
+        v: None,
+    }
+}
+
+impl BatchWorkspace {
+    /// An empty workspace; every buffer grows on first use.
+    pub fn new() -> BatchWorkspace {
+        BatchWorkspace {
+            k1: Vec::new(),
+            u1: Vec::new(),
+            av_tot: Vec::new(),
+            a_u1: Vec::new(),
+            g: Vec::new(),
+            zero: Vec::new(),
+            half: Vec::new(),
+            coeffs: Vec::new(),
+            s1s: Vec::new(),
+            ts_in: Vec::new(),
+            ks: Vec::new(),
+            ys: Vec::new(),
+            a_k: Vec::new(),
+            states: Vec::new(),
+            errs: Vec::new(),
+            out: empty_batch_state(),
+        }
+    }
+
+    /// Final batch state left behind by the last `integrate_batch*_ws` run.
+    pub fn output(&self) -> &BatchState {
+        &self.out
+    }
+
+    /// Move the final batch state out of the workspace.
+    pub fn take_output(&mut self) -> BatchState {
+        std::mem::replace(&mut self.out, empty_batch_state())
+    }
+
+    /// Borrow a recycled `[batch, n_z]` batch-state buffer (contents
+    /// unspecified).
+    pub(crate) fn take_batch(&mut self, batch: usize, n_z: usize, has_v: bool) -> BatchState {
+        let mut s = self.states.pop().unwrap_or_else(empty_batch_state);
+        shape_batch_state(&mut s, batch, n_z, has_v);
+        s
+    }
+
+    /// Borrow a recycled batch-state buffer holding a copy of `template`.
+    pub(crate) fn take_batch_copy(&mut self, template: &BatchState) -> BatchState {
+        let spec = template.spec();
+        let mut s = self.take_batch(spec.batch, spec.n_z, template.v.is_some());
+        s.z.data.copy_from_slice(&template.z.data);
+        if let (Some(dv), Some(sv)) = (&mut s.v, &template.v) {
+            dv.data.copy_from_slice(&sv.data);
+        }
+        s
+    }
+
+    /// Return a batch-state buffer to the pool.
+    pub(crate) fn put_batch(&mut self, s: BatchState) {
+        self.states.push(s);
+    }
+
+    /// Store `s` as the run output, recycling the previous output buffer.
+    pub(crate) fn set_output(&mut self, s: BatchState) {
+        let prev = std::mem::replace(&mut self.out, s);
+        self.put_batch(prev);
+    }
+
+    /// Borrow a recycled flat buffer (length unspecified).
+    pub(crate) fn take_err(&mut self) -> Vec<f32> {
+        self.errs.pop().unwrap_or_default()
+    }
+
+    /// Return a flat buffer to the pool.
+    pub(crate) fn put_err(&mut self, e: Vec<f32>) {
+        self.errs.push(e);
+    }
+}
+
+impl Default for BatchWorkspace {
+    fn default() -> Self {
+        BatchWorkspace::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_grows_and_reuses() {
+        let mut b = Vec::new();
+        ensure(&mut b, 4);
+        assert_eq!(b, vec![0.0f32; 4]);
+        b[0] = 7.0;
+        let ptr = b.as_ptr();
+        ensure(&mut b, 4);
+        assert_eq!(b[0], 7.0, "same-size ensure preserves contents");
+        assert_eq!(b.as_ptr(), ptr, "same-size ensure does not reallocate");
+        ensure(&mut b, 2);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn state_pool_shapes_and_recycles() {
+        let mut ws = SolverWorkspace::new();
+        let template = State {
+            z: vec![1.0, 2.0],
+            v: Some(vec![3.0, 4.0]),
+        };
+        let s = ws.take_state_copy(&template);
+        assert_eq!(s, template);
+        ws.put_state(s);
+        // re-take with a v-less template: v buffer is dropped
+        let plain = State {
+            z: vec![5.0, 6.0, 7.0],
+            v: None,
+        };
+        let s = ws.take_state_copy(&plain);
+        assert_eq!(s, plain);
+        ws.put_state(s);
+    }
+
+    #[test]
+    fn batch_pool_shapes_and_recycles() {
+        let mut ws = BatchWorkspace::new();
+        let spec = crate::solvers::batch::BatchSpec::new(2, 3);
+        let template = BatchState::from_flat_zv(
+            (0..6).map(|i| i as f32).collect(),
+            (0..6).map(|i| 10.0 + i as f32).collect(),
+            spec,
+        );
+        let s = ws.take_batch_copy(&template);
+        assert_eq!(s, template);
+        assert_eq!(s.spec(), spec);
+        ws.put_batch(s);
+        let s = ws.take_batch(3, 2, false);
+        assert_eq!(s.spec(), crate::solvers::batch::BatchSpec::new(3, 2));
+        assert!(s.v.is_none());
+    }
+
+    #[test]
+    fn output_slot_roundtrip() {
+        let mut ws = SolverWorkspace::new();
+        ws.set_output(State {
+            z: vec![1.0],
+            v: None,
+        });
+        assert_eq!(ws.output().z, vec![1.0]);
+        let s = ws.take_output();
+        assert_eq!(s.z, vec![1.0]);
+        assert!(ws.output().z.is_empty());
+    }
+}

@@ -68,10 +68,22 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// out = x + a * y   (allocating)
+/// out = x + a * y   (allocating wrapper over [`add_scaled_into`])
 pub fn add_scaled(x: &[f32], a: f32, y: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    add_scaled_into(x, a, y, &mut out);
+    out
+}
+
+/// `out[i] = x[i] + a * y[i]` into a caller-provided buffer — the
+/// workspace-path kernel behind [`add_scaled`], bit-identical per element.
+/// `out` may alias neither input slice (enforced by the borrow checker).
+pub fn add_scaled_into(x: &[f32], a: f32, y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(xi, yi)| xi + a * yi).collect()
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+        *o = xi + a * yi;
+    }
 }
 
 /// Per-row `y[b] += coeffs[b] · x[b]` over row-major `[B, n_z]` buffers —
@@ -86,22 +98,39 @@ pub fn axpy_rows(coeffs: &[f32], x: &[f32], y: &mut [f32], n_z: usize) {
 }
 
 /// Allocating per-row `out[b] = x[b] + coeffs[b] · y[b]` (the batched
-/// counterpart of [`add_scaled`]).
+/// counterpart of [`add_scaled`]; wrapper over [`add_scaled_rows_into`]).
 pub fn add_scaled_rows(x: &[f32], coeffs: &[f32], y: &[f32], n_z: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), y.len());
-    let mut out = x.to_vec();
-    axpy_rows(coeffs, y, &mut out, n_z);
+    let mut out = vec![0.0f32; x.len()];
+    add_scaled_rows_into(x, coeffs, y, n_z, &mut out);
     out
 }
 
-/// out = sum_i c_i * xs_i  (linear combination, allocating)
+/// Per-row `out[b] = x[b] + coeffs[b] · y[b]` into a caller-provided
+/// buffer — bit-identical to [`add_scaled_rows`] (copy then [`axpy_rows`]).
+pub fn add_scaled_rows_into(x: &[f32], coeffs: &[f32], y: &[f32], n_z: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    out.copy_from_slice(x);
+    axpy_rows(coeffs, y, out, n_z);
+}
+
+/// out = sum_i c_i * xs_i  (linear combination; wrapper over
+/// [`lincomb_into`])
 pub fn lincomb(terms: &[(f32, &[f32])]) -> Vec<f32> {
     let n = terms.first().map(|(_, x)| x.len()).unwrap_or(0);
     let mut out = vec![0.0f32; n];
-    for &(c, x) in terms {
-        axpy(c, x, &mut out);
-    }
+    lincomb_into(terms, &mut out);
     out
+}
+
+/// `out = Σ_i c_i · xs_i` into a caller-provided buffer, accumulating
+/// term-by-term in slice order exactly like [`lincomb`] (zero-fill then
+/// [`axpy`] each term, including zero-coefficient terms).
+pub fn lincomb_into(terms: &[(f32, &[f32])], out: &mut [f32]) {
+    out.fill(0.0);
+    for &(c, x) in terms {
+        axpy(c, x, out);
+    }
 }
 
 pub fn scale_in_place(a: f32, x: &mut [f32]) {
@@ -173,26 +202,51 @@ pub fn error_seminorm(
     }
 }
 
-/// Naive matmul (m,k)x(k,n) for native-dynamics tests and tiny models; the
-/// real model matmuls run inside XLA.
+/// Host matmul (m,k)x(k,n) for native-dynamics tests and tiny models; the
+/// real model matmuls run inside XLA.  Allocating wrapper over
+/// [`matmul_into`].
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// Column-tile width of the blocked [`matmul_into`]: 64 f32 columns = one
+/// 256-byte strip of `b` and `out`, small enough that a `b`-row strip plus
+/// an `out`-row strip stay L1-resident across the `p` loop.
+const MATMUL_JBLOCK: usize = 64;
+
+/// `out = a · b` into a caller-provided `m·n` buffer, row-major and
+/// column-blocked: for each output row the inner loops walk a `MATMUL_JBLOCK`
+/// strip of `b`/`out` over all of `k`, so both strips stay cache-resident
+/// instead of streaming the whole `b` per row.  Per output element the
+/// accumulation order over `p` is ascending — bit-identical to the
+/// straightforward i/p/j triple loop (and to [`matmul`], which wraps this).
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    let mut j0 = 0usize;
+    while j0 < n {
+        let j1 = (j0 + MATMUL_JBLOCK).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n + j0..i * n + j1];
+            for (p, &av) in arow.iter().enumerate() {
+                // keep the zero-skip of the original kernel: sparse stage
+                // coefficients (RK tableaus) hit it constantly
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + j0..p * n + j1];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
+        j0 = j1;
     }
-    out
 }
 
 /// argmax of each row of a (rows, cols) matrix — classification decisions.
@@ -280,6 +334,66 @@ mod tests {
         let semi = error_seminorm(&err, &z, &z, &[true, false], 1e-3, 1e-6);
         assert!(full > 1.0);
         assert_eq!(semi, 0.0);
+    }
+
+    /// The blocked `matmul_into` must be bit-identical to the plain i/p/j
+    /// triple loop for shapes below, at and across the column-block width
+    /// (the accumulation order per output element is the same).
+    #[test]
+    fn matmul_into_matches_reference_across_blocks() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let shapes = [(1usize, 1usize, 1usize), (3, 4, 5), (2, 7, 64), (3, 5, 65), (2, 3, 130)];
+        for &(m, k, n) in &shapes {
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            // sprinkle zeros so the zero-skip path is exercised
+            a[0] = 0.0;
+            let mut reference = vec![0.0f32; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        reference[i * n + j] += av * b[p * n + j];
+                    }
+                }
+            }
+            let mut out = vec![1.0f32; m * n]; // pre-filled: `_into` must overwrite
+            matmul_into(&a, &b, m, k, n, &mut out);
+            assert_eq!(out, reference, "({m},{k},{n})");
+            assert_eq!(matmul(&a, &b, m, k, n), reference, "wrapper ({m},{k},{n})");
+        }
+    }
+
+    /// The `_into` kernels write exactly what their allocating wrappers
+    /// return (the wrappers delegate, so this pins the delegation).
+    #[test]
+    fn into_kernels_match_allocating_wrappers() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n_z = 3usize;
+        let rows = 2usize;
+        let mut x = vec![0.0f32; rows * n_z];
+        let mut y = vec![0.0f32; rows * n_z];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut y, 1.0);
+        let coeffs = [0.7f32, -1.3];
+
+        let mut out = vec![9.0f32; x.len()];
+        add_scaled_into(&x, 0.25, &y, &mut out);
+        assert_eq!(out, add_scaled(&x, 0.25, &y));
+
+        let mut out = vec![9.0f32; x.len()];
+        add_scaled_rows_into(&x, &coeffs, &y, n_z, &mut out);
+        assert_eq!(out, add_scaled_rows(&x, &coeffs, &y, n_z));
+
+        let terms: Vec<(f32, &[f32])> = vec![(1.5, x.as_slice()), (0.0, y.as_slice())];
+        let mut out = vec![9.0f32; x.len()];
+        lincomb_into(&terms, &mut out);
+        assert_eq!(out, lincomb(&terms));
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Steady-state allocation accounting for the hot paths — the refactor's
+//! headline property, pinned with a counting global allocator:
+//!
+//! * a warmed-up `integrate_ws` run (fixed AND adaptive, ALF on the toy
+//!   dynamics) performs **zero** heap allocations — not per step, zero
+//!   for the whole solve;
+//! * MALI's ψ⁻¹ reverse sweep (`invert_and_vjp_into` over the recorded
+//!   accepted grid) performs **zero** heap allocations once its four
+//!   ping-pong states are warm;
+//! * `MemTracker` peaks are unchanged by the refactor: MALI still
+//!   retains exactly the augmented end state (`N_z(N_f + 1)` — 2·N_z·4
+//!   bytes) and the adjoint exactly `z(T)` (N_z·4 bytes).
+//!
+//! The whole file is a single `#[test]` so no sibling test thread can
+//! allocate concurrently inside a measured region.
+
+use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::integrate::{integrate_ws, ErrorNorm, GridRecorder, StepMode};
+use mali_ode::solvers::workspace::SolverWorkspace;
+use mali_ode::solvers::{Solver, State};
+use mali_ode::util::mem::MemTracker;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run the MALI reverse sweep over `times` starting from the (copied-in)
+/// end state; returns the reconstructed initial z for verification.
+#[allow(clippy::too_many_arguments)]
+fn mali_sweep(
+    solver: &dyn Solver,
+    toy: &LinearToy,
+    times: &[f64],
+    s_end: &State,
+    dl_dz: &[f32],
+    bufs: &mut [State; 4],
+    grad_theta: &mut [f32],
+    ws: &mut SolverWorkspace,
+) {
+    let [cur, a, prev, a_prev] = bufs;
+    cur.z.copy_from_slice(&s_end.z);
+    cur.v
+        .as_mut()
+        .expect("ALF state")
+        .copy_from_slice(s_end.v.as_ref().expect("ALF state"));
+    a.z.copy_from_slice(dl_dz);
+    a.v.as_mut().expect("shaped").fill(0.0);
+    let n = times.len() - 1;
+    for i in (1..=n).rev() {
+        let h = times[i] - times[i - 1];
+        let ok = solver.invert_and_vjp_into(toy, times[i], h, cur, a, prev, a_prev, grad_theta, ws);
+        assert!(ok, "ALF is invertible");
+        std::mem::swap(cur, prev);
+        std::mem::swap(a, a_prev);
+    }
+}
+
+#[test]
+fn zero_allocations_in_steady_state_hot_paths() {
+    let n_z = 8usize;
+    let toy = LinearToy::new(-0.4, n_z);
+    let solver = solver_by_name("alf").unwrap();
+    let z0: Vec<f32> = (0..n_z).map(|i| 1.0 + 0.1 * i as f32).collect();
+    let norm = ErrorNorm::Full;
+    let mut ws = SolverWorkspace::new();
+
+    // ---- integrate: fixed grid ------------------------------------------
+    let s0 = solver.init(&toy, 0.0, &z0);
+    let fixed = StepMode::Fixed { h: 0.01 };
+    // Two warm-up runs: the first sizes the loop buffers, the second
+    // cycles the output slot through the recycling pool so every pooled
+    // state is at its steady shape before measurement.
+    integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &fixed, &norm, &mut (), &mut ws).unwrap();
+    integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &fixed, &norm, &mut (), &mut ws).unwrap();
+    let a0 = allocs();
+    let stats = integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &fixed, &norm, &mut (), &mut ws)
+        .unwrap();
+    let delta = allocs() - a0;
+    assert_eq!(stats.n_accepted, 100, "expected 100 fixed steps");
+    assert_eq!(
+        delta, 0,
+        "steady-state fixed integrate allocated {delta} times over {} steps",
+        stats.n_accepted
+    );
+
+    // ---- integrate: adaptive --------------------------------------------
+    let adaptive = StepMode::adaptive(1e-4, 1e-6);
+    integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &adaptive, &norm, &mut (), &mut ws).unwrap();
+    let a0 = allocs();
+    let stats = integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &adaptive, &norm, &mut (), &mut ws)
+        .unwrap();
+    let delta = allocs() - a0;
+    assert!(stats.n_accepted > 0);
+    assert_eq!(
+        delta, 0,
+        "steady-state adaptive integrate allocated {delta} times over {} trials",
+        stats.n_trials
+    );
+
+    // ---- MALI reverse sweep ---------------------------------------------
+    // forward once, keeping the accepted grid (recorder pushes allocate;
+    // that is outside the measured region)
+    let mut rec = GridRecorder::new(0.0);
+    integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &fixed, &norm, &mut rec, &mut ws).unwrap();
+    let s_end = ws.take_output();
+    let dl_dz: Vec<f32> = s_end.z.iter().map(|&z| 2.0 * z).collect();
+    let shaped = || State {
+        z: vec![0.0f32; n_z],
+        v: Some(vec![0.0f32; n_z]),
+    };
+    let mut bufs = [shaped(), shaped(), shaped(), shaped()];
+    let mut grad_theta = vec![0.0f32; 1];
+    // warm-up sweep
+    mali_sweep(
+        &*solver, &toy, rec.times(), &s_end, &dl_dz, &mut bufs, &mut grad_theta, &mut ws,
+    );
+    // measured sweep
+    grad_theta[0] = 0.0;
+    let a0 = allocs();
+    mali_sweep(
+        &*solver, &toy, rec.times(), &s_end, &dl_dz, &mut bufs, &mut grad_theta, &mut ws,
+    );
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta,
+        0,
+        "steady-state MALI reverse sweep allocated {delta} times over {} steps",
+        rec.times().len() - 1
+    );
+    // the sweep actually reconstructed the initial state
+    for (r, z) in bufs[0].z.iter().zip(&z0) {
+        assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "ψ⁻¹ reconstruction");
+    }
+
+    // ---- MemTracker peaks unchanged by the refactor ---------------------
+    let tracker = MemTracker::new();
+    grad_by_name("mali")
+        .unwrap()
+        .grad(
+            &toy,
+            &*solver,
+            &IvpSpec::fixed(0.0, 1.0, 0.01),
+            &z0,
+            &SquareLoss,
+            tracker.clone(),
+        )
+        .unwrap();
+    assert_eq!(
+        tracker.peak_bytes(),
+        2 * n_z * 4,
+        "MALI retains exactly the augmented end state (N_z(N_f + 1) law)"
+    );
+    let tracker = MemTracker::new();
+    let he = solver_by_name("heun-euler").unwrap();
+    grad_by_name("adjoint")
+        .unwrap()
+        .grad(
+            &toy,
+            &*he,
+            &IvpSpec::fixed(0.0, 1.0, 0.01),
+            &z0,
+            &SquareLoss,
+            tracker.clone(),
+        )
+        .unwrap();
+    assert_eq!(
+        tracker.peak_bytes(),
+        n_z * 4,
+        "adjoint retains exactly z(T)"
+    );
+}

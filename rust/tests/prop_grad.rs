@@ -1,0 +1,268 @@
+//! FD fuzz harness for the gradient protocols after the workspace
+//! refactor: seeded-random `LinearToy`-family dynamics × all four
+//! gradient methods × {fixed, adaptive} stepping × {empty, random}
+//! observation grids, cross-checked against
+//!
+//! * the toy problem's **analytic** gradients (paper Eq. 7) — the
+//!   tightest anchor, valid in both stepping modes;
+//! * **central finite differences** of the end-to-end loss on fixed
+//!   grids (perturbed runs share the discretization, so FD measures the
+//!   discrete gradient the methods actually compute);
+//! * cross-method agreement: MALI ≡ ACA ≡ naive to roundoff (≲ 1e-4
+//!   relative) on the same ALF solve, in every fuzzed configuration.
+//!
+//! Tolerances follow the envelopes validated in `tests/grad_methods.rs`
+//! and `tests/obs_grid.rs` (FD ≲ 2e-2·(1+|fd|) at ε = 1e-2 on f32
+//! forward passes; exact-method agreement ≲ 1e-4).
+
+use mali_ode::grad::{
+    by_name, forward_loss, forward_loss_obs, IvpSpec, ObsGrid, ObsSquareLoss, SquareLoss,
+};
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
+use mali_ode::util::mem::MemTracker;
+use mali_ode::util::rng::Rng;
+
+const METHODS: [&str; 4] = ["mali", "aca", "naive", "adjoint"];
+
+fn solver_for(method: &str) -> &'static str {
+    match method {
+        "adjoint" => "heun-euler",
+        _ => "alf",
+    }
+}
+
+fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Random observation grid: 1–3 strictly increasing times inside
+/// `(0, t1]`, sometimes ending exactly at `t1`.
+fn random_grid(rng: &mut Rng, t1: f64) -> ObsGrid {
+    let k = 1 + rng.below(3);
+    let mut times: Vec<f64> = Vec::with_capacity(k);
+    let mut lo = 0.15 * t1;
+    for i in 0..k {
+        let hi = t1 * (i as f64 + 1.0) / k as f64;
+        let t = if i + 1 == k && rng.below(2) == 0 {
+            t1
+        } else {
+            rng.range(lo, hi.max(lo + 1e-3))
+        };
+        times.push(t.min(t1));
+        lo = times[i] + 1e-3;
+    }
+    ObsGrid::new(times).unwrap()
+}
+
+/// Terminal-loss fuzz on the toy family: every method recovers the
+/// analytic gradients (Eq. 7) in both stepping modes.
+#[test]
+fn fuzz_toy_terminal_gradients_match_analytic() {
+    let mut rng = Rng::new(7001);
+    for trial in 0..6 {
+        let n = 1 + rng.below(4);
+        let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+        let alpha = sign * rng.range(0.3, 1.0);
+        let t_end = rng.range(0.8, 1.6);
+        let toy = LinearToy::new(alpha, n);
+        let mut z0 = vec![0.0f32; n];
+        for z in z0.iter_mut() {
+            let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            *z = (s * rng.range(0.5, 2.0)) as f32;
+        }
+        let (dz0_true, dalpha_true) = toy.analytic_grads(&z0, t_end);
+        let z0_scale = 1.0 + dz0_true.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max);
+        let a_scale = 1.0 + dalpha_true.abs();
+
+        for (mi, method) in METHODS.iter().enumerate() {
+            let solver = solver_by_name(solver_for(method)).unwrap();
+            let mode_fixed = (trial + mi) % 2 == 0;
+            let spec = if mode_fixed {
+                IvpSpec::fixed(0.0, t_end, 0.02)
+            } else {
+                IvpSpec::adaptive(0.0, t_end, 1e-6, 1e-8)
+            };
+            let m = by_name(method).unwrap();
+            let r = m
+                .grad(&toy, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+                .unwrap();
+            assert!(
+                (r.grad_theta[0] as f64 - dalpha_true).abs() < 0.05 * a_scale,
+                "trial {trial} {method}: dα {} vs analytic {dalpha_true}",
+                r.grad_theta[0]
+            );
+            assert!(
+                l2(&r.grad_z0, &dz0_true) < 0.05 * z0_scale,
+                "trial {trial} {method}: dz₀ err {}",
+                l2(&r.grad_z0, &dz0_true)
+            );
+        }
+    }
+}
+
+/// Multi-observation fuzz on the toy family: random grids, fixed-grid FD
+/// cross-check (θ and z₀) plus exact-method agreement in both modes.
+#[test]
+fn fuzz_toy_obs_gradients() {
+    let mut rng = Rng::new(7002);
+    for trial in 0..4 {
+        let n = 1 + rng.below(3);
+        let alpha = rng.range(-0.9, 0.9);
+        let t_end = rng.range(0.9, 1.5);
+        let mut toy = LinearToy::new(alpha, n);
+        let mut z0 = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z0, 1.5);
+        let grid = random_grid(&mut rng, t_end);
+        let weights: Vec<f64> = (0..grid.len()).map(|_| rng.range(0.5, 2.0)).collect();
+        let head = ObsSquareLoss {
+            weights: weights.clone(),
+        };
+
+        for &(label, fixed) in &[("fixed", true), ("adaptive", false)] {
+            let spec = if fixed {
+                IvpSpec::fixed(0.0, t_end, 0.05)
+            } else {
+                IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-7)
+            };
+            let mut results = Vec::new();
+            for method in METHODS {
+                let solver = solver_by_name(solver_for(method)).unwrap();
+                let m = by_name(method).unwrap();
+                let head = ObsSquareLoss {
+                    weights: weights.clone(),
+                };
+                let r = m
+                    .grad_obs(&toy, &*solver, &spec, &grid, &z0, &head, MemTracker::new())
+                    .unwrap();
+                assert_eq!(r.obs_losses.len(), grid.len(), "{label} {method}");
+                results.push((method, r));
+            }
+            // exact methods agree to roundoff on the same ALF solve
+            let mali = &results[0].1;
+            let max_abs = |xs: &[f32]| {
+                1.0 + xs.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max)
+            };
+            for (method, r) in &results[1..3] {
+                assert!(
+                    l2(&r.grad_theta, &mali.grad_theta) < 1e-4 * max_abs(&mali.grad_theta),
+                    "trial {trial} {label} {method} vs mali θ"
+                );
+                assert!(
+                    l2(&r.grad_z0, &mali.grad_z0) < 1e-4 * max_abs(&mali.grad_z0),
+                    "trial {trial} {label} {method} vs mali z₀"
+                );
+                assert!((r.loss - mali.loss).abs() < 1e-6 * (1.0 + mali.loss.abs()));
+            }
+            // FD cross-check on the shared fixed discretization
+            if fixed {
+                let eps = 1e-2f32;
+                for (method, r) in &results {
+                    let solver = solver_by_name(solver_for(method)).unwrap();
+                    // θ (the toy has a single parameter α)
+                    let theta0 = toy.params().to_vec();
+                    let mut tp = theta0.clone();
+                    tp[0] += eps;
+                    toy.set_params(&tp);
+                    let (lp, _, _, _) =
+                        forward_loss_obs(&toy, &*solver, &spec, &grid, &z0, &head).unwrap();
+                    let mut tm = theta0.clone();
+                    tm[0] -= eps;
+                    toy.set_params(&tm);
+                    let (lm, _, _, _) =
+                        forward_loss_obs(&toy, &*solver, &spec, &grid, &z0, &head).unwrap();
+                    toy.set_params(&theta0);
+                    let fd = (lp - lm) / (2.0 * eps as f64);
+                    assert!(
+                        (fd - r.grad_theta[0] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "trial {trial} {method} θ: fd {fd} vs {}",
+                        r.grad_theta[0]
+                    );
+                    // z₀
+                    for j in 0..z0.len() {
+                        let mut zp = z0.clone();
+                        zp[j] += eps;
+                        let (lp, _, _, _) =
+                            forward_loss_obs(&toy, &*solver, &spec, &grid, &zp, &head).unwrap();
+                        let mut zm = z0.clone();
+                        zm[j] -= eps;
+                        let (lm, _, _, _) =
+                            forward_loss_obs(&toy, &*solver, &spec, &grid, &zm, &head).unwrap();
+                        let fd = (lp - lm) / (2.0 * eps as f64);
+                        assert!(
+                            (fd - r.grad_z0[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                            "trial {trial} {method} z0[{j}]: fd {fd} vs {}",
+                            r.grad_z0[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Small-MLP FD fuzz: random dims, fixed grids (the perturbed runs share
+/// the discretization), terminal loss — spot-checked θ coordinates and
+/// every z₀ coordinate, all four methods.
+#[test]
+fn fuzz_mlp_terminal_fd() {
+    let mut rng = Rng::new(7003);
+    for trial in 0..3 {
+        let d = 2 + rng.below(2);
+        let hidden = 3 + rng.below(2);
+        let mut dynamics = MlpDynamics::new(d, hidden, &mut rng);
+        let mut z0 = vec![0.0f32; d];
+        rng.fill_uniform_sym(&mut z0, 0.5);
+        let t_end = rng.range(0.5, 0.9);
+        let spec = IvpSpec::fixed(0.0, t_end, 0.1);
+
+        for method in METHODS {
+            let solver = solver_by_name(solver_for(method)).unwrap();
+            let m = by_name(method).unwrap();
+            let r = m
+                .grad(&dynamics, &*solver, &spec, &z0, &SquareLoss, MemTracker::new())
+                .unwrap();
+            let theta0 = dynamics.params().to_vec();
+            let eps = 1e-2f32;
+            for &k in &[0usize, theta0.len() / 2, theta0.len() - 1] {
+                let mut tp = theta0.clone();
+                tp[k] += eps;
+                dynamics.set_params(&tp);
+                let (lp, _, _) =
+                    forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+                let mut tm = theta0.clone();
+                tm[k] -= eps;
+                dynamics.set_params(&tm);
+                let (lm, _, _) =
+                    forward_loss(&dynamics, &*solver, &spec, &z0, &SquareLoss).unwrap();
+                dynamics.set_params(&theta0);
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                assert!(
+                    (fd - r.grad_theta[k] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "trial {trial} {method} θ[{k}]: fd {fd} vs {}",
+                    r.grad_theta[k]
+                );
+            }
+            for j in 0..z0.len() {
+                let mut zp = z0.clone();
+                zp[j] += eps;
+                let (lp, _, _) =
+                    forward_loss(&dynamics, &*solver, &spec, &zp, &SquareLoss).unwrap();
+                let mut zm = z0.clone();
+                zm[j] -= eps;
+                let (lm, _, _) =
+                    forward_loss(&dynamics, &*solver, &spec, &zm, &SquareLoss).unwrap();
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                assert!(
+                    (fd - r.grad_z0[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "trial {trial} {method} z0[{j}]: fd {fd} vs {}",
+                    r.grad_z0[j]
+                );
+            }
+        }
+    }
+}

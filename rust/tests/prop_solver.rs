@@ -1,0 +1,434 @@
+//! Property-based differential tests for the workspace refactor — the
+//! proof that threading preallocated buffers through the solver stack
+//! changed **nothing** numerically:
+//!
+//! * workspace path ≡ allocating path, **bitwise**, for every solver
+//!   entry point (ψ/ψ⁻¹/ψ-vjp, step/step_vjp/invert/invert_and_vjp,
+//!   solo + batch) over seeded-random dims, times, steps and damping;
+//! * `integrate_ws` (with a dirty, reused workspace) ≡ `integrate`
+//!   bitwise, in fixed and adaptive mode, with and without observation
+//!   grids;
+//! * ALF's ψ∘ψ⁻¹ round trip stays exact to float roundoff across random
+//!   configurations;
+//! * batched adaptive integration stays decision-identical to solo runs
+//!   row for row on random batches.
+
+use mali_ode::solvers::alf::AlfSolver;
+use mali_ode::solvers::batch::{BatchSpec, BatchState};
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
+use mali_ode::solvers::integrate::{
+    integrate, integrate_batch, integrate_batch_ws, integrate_obs, integrate_obs_ws,
+    BatchGridRecorder, ErrorNorm, GridRecorder, ObsGrid, StepMode,
+};
+use mali_ode::solvers::rk::{RkSolver, Tableau};
+use mali_ode::solvers::workspace::{BatchWorkspace, SolverWorkspace};
+use mali_ode::solvers::{Solver, State};
+use mali_ode::util::rng::Rng;
+
+fn rand_state(rng: &mut Rng, n: usize, with_v: bool) -> State {
+    let mut z = vec![0.0f32; n];
+    rng.fill_uniform_sym(&mut z, 1.0);
+    let v = with_v.then(|| {
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut v, 1.0);
+        v
+    });
+    State { z, v }
+}
+
+/// Every ALF entry point: `_into` output bitwise equal to the allocating
+/// wrapper, across random dims / times / steps / damping, on both toy
+/// and MLP dynamics.
+#[test]
+fn alf_workspace_bitwise_equals_allocating() {
+    let mut rng = Rng::new(101);
+    let mut ws = SolverWorkspace::new(); // deliberately reused (dirty) across trials
+    for trial in 0..24 {
+        let n = 1 + rng.below(6);
+        let eta = [1.0, 0.95, 0.9, 0.8][rng.below(4)];
+        let solver = AlfSolver::new(eta);
+        let dynamics: Box<dyn Dynamics> = if trial % 2 == 0 {
+            Box::new(LinearToy::new(rng.range(-1.0, 1.0), n))
+        } else {
+            Box::new(MlpDynamics::new(n, 2 + rng.below(5), &mut rng))
+        };
+        let d = &*dynamics;
+        let t = rng.range(-1.0, 1.0);
+        let h = rng.range(0.01, 0.4);
+        let s = {
+            let mut z = vec![0.0f32; n];
+            rng.fill_uniform_sym(&mut z, 1.0);
+            let v = d.f(t, &z);
+            State { z, v: Some(v) }
+        };
+        let a_out = rand_state(&mut rng, n, trial % 3 != 0);
+
+        // step
+        let (want, want_err) = solver.step(d, t, h, &s);
+        let mut out = rand_state(&mut rng, n, false); // dirty output buffer
+        let mut err = vec![7.0f32; 1];
+        let has_err = solver.step_into(d, t, h, &s, &mut out, &mut err, &mut ws);
+        assert!(has_err, "trial {trial}");
+        assert_eq!(out, want, "step trial {trial}");
+        assert_eq!(Some(err.clone()), want_err, "step err trial {trial}");
+
+        // step_vjp (θ-accumulation starts from zero on both paths)
+        let (want_a, want_th) = solver.step_vjp(d, t, h, &s, &a_out);
+        let mut a_in = rand_state(&mut rng, n, false);
+        let mut th = vec![0.0f32; d.param_dim()];
+        solver.step_vjp_into(d, t, h, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "step_vjp trial {trial}");
+        assert_eq!(th, want_th, "step_vjp θ trial {trial}");
+
+        // invert
+        let want_inv = solver.invert(d, t + h, h, &s).unwrap();
+        let mut inv = rand_state(&mut rng, n, false);
+        assert!(solver.invert_into(d, t + h, h, &s, &mut inv, &mut ws));
+        assert_eq!(inv, want_inv, "invert trial {trial}");
+
+        // invert_and_vjp
+        let (want_s, want_a, want_th) = solver.invert_and_vjp(d, t + h, h, &s, &a_out).unwrap();
+        let mut s_in = rand_state(&mut rng, n, false);
+        let mut a_in = rand_state(&mut rng, n, false);
+        let mut th = vec![0.0f32; d.param_dim()];
+        let ok = solver.invert_and_vjp_into(
+            d, t + h, h, &s, &a_out, &mut s_in, &mut a_in, &mut th, &mut ws,
+        );
+        assert!(ok);
+        assert_eq!(s_in, want_s, "invert_and_vjp s trial {trial}");
+        assert_eq!(a_in, want_a, "invert_and_vjp a trial {trial}");
+        assert_eq!(th, want_th, "invert_and_vjp θ trial {trial}");
+    }
+}
+
+/// Every RK entry point across the tableau family: `_into` bitwise equal
+/// to the allocating wrapper.
+#[test]
+fn rk_workspace_bitwise_equals_allocating() {
+    let mut rng = Rng::new(202);
+    let mut ws = SolverWorkspace::new();
+    let tableaus = [
+        Tableau::euler(),
+        Tableau::midpoint(),
+        Tableau::rk4(),
+        Tableau::heun_euler(),
+        Tableau::rk23(),
+        Tableau::dopri5(),
+    ];
+    for (trial, tab) in tableaus.iter().enumerate() {
+        let n = 1 + rng.below(5);
+        let solver = RkSolver::new(tab.clone());
+        let dynamics = MlpDynamics::new(n, 3 + rng.below(4), &mut rng);
+        let t = rng.range(-0.5, 0.5);
+        let h = rng.range(0.05, 0.35);
+        let s = rand_state(&mut rng, n, false);
+        let a_out = rand_state(&mut rng, n, false);
+
+        let (want, want_err) = solver.step(&dynamics, t, h, &s);
+        let mut out = rand_state(&mut rng, n, false);
+        let mut err = Vec::new();
+        let has_err = solver.step_into(&dynamics, t, h, &s, &mut out, &mut err, &mut ws);
+        assert_eq!(out, want, "{} step", tab.name);
+        assert_eq!(has_err, want_err.is_some(), "{} err presence", tab.name);
+        if let Some(we) = want_err {
+            assert_eq!(err, we, "{} err", tab.name);
+        }
+        assert!(
+            solver.invert(&dynamics, t + h, h, &s).is_none(),
+            "RK must stay non-invertible"
+        );
+
+        let (want_a, want_th) = solver.step_vjp(&dynamics, t, h, &s, &a_out);
+        let mut a_in = rand_state(&mut rng, n, false);
+        let mut th = vec![0.0f32; dynamics.param_dim()];
+        solver.step_vjp_into(&dynamics, t, h, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "{} step_vjp trial {trial}", tab.name);
+        assert_eq!(th, want_th, "{} step_vjp θ", tab.name);
+    }
+}
+
+/// Batched entry points: `_into` bitwise equal to the allocating batch
+/// wrappers under desynchronized per-row `(t, h)`.
+#[test]
+fn batch_workspace_bitwise_equals_allocating() {
+    let mut rng = Rng::new(303);
+    let mut ws = BatchWorkspace::new();
+    for trial in 0..12 {
+        let b = 1 + rng.below(4);
+        let n_z = 1 + rng.below(4);
+        let spec = BatchSpec::new(b, n_z);
+        let dynamics: Box<dyn Dynamics> = if trial % 2 == 0 {
+            Box::new(LinearToy::new(rng.range(-1.0, 1.0), n_z))
+        } else {
+            Box::new(MlpDynamics::new(n_z, 2 + rng.below(4), &mut rng))
+        };
+        let d = &*dynamics;
+        let ts: Vec<f64> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let hs: Vec<f64> = (0..b).map(|_| rng.range(0.02, 0.3)).collect();
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut z, 1.0);
+        let mut az = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut az, 1.0);
+        let mut av = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut av, 1.0);
+
+        // ALF
+        let alf = AlfSolver::new([1.0, 0.9][trial % 2]);
+        let v = d.f_batch(&ts, &z, &spec);
+        let s = BatchState::from_flat_zv(z.clone(), v.clone(), spec);
+        let a_out = BatchState::from_flat_zv(az.clone(), av.clone(), spec);
+
+        let (want, want_err) = alf.step_batch(d, &ts, &hs, &s);
+        let mut out = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut err = Vec::new();
+        assert!(alf.step_batch_into(d, &ts, &hs, &s, &mut out, &mut err, &mut ws));
+        assert_eq!(out, want, "alf step_batch trial {trial}");
+        assert_eq!(Some(err.clone()), want_err, "alf step_batch err {trial}");
+
+        let (want_a, want_th) = alf.step_vjp_batch(d, &ts, &hs, &s, &a_out);
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th = vec![0.0f32; d.param_dim()];
+        alf.step_vjp_batch_into(d, &ts, &hs, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "alf step_vjp_batch {trial}");
+        assert_eq!(th, want_th, "alf step_vjp_batch θ {trial}");
+
+        let ts_out: Vec<f64> = ts.iter().zip(&hs).map(|(&t, &h)| t + h).collect();
+        let want_inv = alf.invert_batch(d, &ts_out, &hs, &s).unwrap();
+        let mut inv = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        assert!(alf.invert_batch_into(d, &ts_out, &hs, &s, &mut inv, &mut ws));
+        assert_eq!(inv, want_inv, "alf invert_batch {trial}");
+
+        let (want_s, want_a, want_th) =
+            alf.invert_and_vjp_batch(d, &ts_out, &hs, &s, &a_out).unwrap();
+        let mut s_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th = vec![0.0f32; d.param_dim()];
+        assert!(alf.invert_and_vjp_batch_into(
+            d, &ts_out, &hs, &s, &a_out, &mut s_in, &mut a_in, &mut th, &mut ws
+        ));
+        assert_eq!(s_in, want_s, "alf invert_and_vjp_batch s {trial}");
+        assert_eq!(a_in, want_a, "alf invert_and_vjp_batch a {trial}");
+        assert_eq!(th, want_th, "alf invert_and_vjp_batch θ {trial}");
+
+        // RK (dopri5 as the stiffest tableau: 7 stages, sparse rows)
+        let rk = RkSolver::new(Tableau::dopri5());
+        let s = BatchState::from_flat(z.clone(), spec);
+        let a_out = BatchState::from_flat(az.clone(), spec);
+        let (want, want_err) = rk.step_batch(d, &ts, &hs, &s);
+        let mut out = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut err = Vec::new();
+        assert!(rk.step_batch_into(d, &ts, &hs, &s, &mut out, &mut err, &mut ws));
+        assert_eq!(out, want, "rk step_batch {trial}");
+        assert_eq!(Some(err.clone()), want_err, "rk step_batch err {trial}");
+
+        let (want_a, want_th) = rk.step_vjp_batch(d, &ts, &hs, &s, &a_out);
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th = vec![0.0f32; d.param_dim()];
+        rk.step_vjp_batch_into(d, &ts, &hs, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "rk step_vjp_batch {trial}");
+        assert_eq!(th, want_th, "rk step_vjp_batch θ {trial}");
+    }
+}
+
+/// `integrate_ws` with a reused (dirty) workspace is bitwise identical to
+/// the allocating `integrate`, in both modes, with and without grids —
+/// final state, accepted grid and structural stats all equal.
+#[test]
+fn integrate_ws_bitwise_equals_integrate() {
+    let mut rng = Rng::new(404);
+    let mut ws = SolverWorkspace::new();
+    for trial in 0..8 {
+        let n = 1 + rng.below(4);
+        let toy = LinearToy::new(rng.range(0.2, 1.0), n);
+        let solver = solver_by_name(["alf", "dopri5"][trial % 2]).unwrap();
+        let mode = if trial % 4 < 2 {
+            StepMode::Fixed {
+                h: rng.range(0.05, 0.2),
+            }
+        } else {
+            StepMode::adaptive(1e-4, 1e-6)
+        };
+        let t1 = rng.range(0.5, 2.0);
+        let mut z0 = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z0, 2.0);
+        let grid = if trial % 2 == 0 {
+            ObsGrid::none()
+        } else {
+            ObsGrid::new(vec![t1 * 0.37, t1 * 0.81]).unwrap()
+        };
+
+        let s0 = solver.init(&toy, 0.0, &z0);
+        let mut rec_a = GridRecorder::new(0.0);
+        let (want_state, want_stats) = integrate_obs(
+            &*solver,
+            &toy,
+            0.0,
+            t1,
+            s0,
+            &mode,
+            &ErrorNorm::Full,
+            &grid,
+            &mut rec_a,
+        )
+        .unwrap();
+
+        let s0 = solver.init(&toy, 0.0, &z0);
+        let mut rec_b = GridRecorder::new(0.0);
+        let stats = integrate_obs_ws(
+            &*solver,
+            &toy,
+            0.0,
+            t1,
+            &s0,
+            &mode,
+            &ErrorNorm::Full,
+            &grid,
+            &mut rec_b,
+            &mut ws,
+        )
+        .unwrap();
+        assert_eq!(ws.output().z, want_state.z, "trial {trial} final z");
+        assert_eq!(ws.output().v, want_state.v, "trial {trial} final v");
+        assert_eq!(stats.n_accepted, want_stats.n_accepted, "trial {trial}");
+        assert_eq!(stats.n_trials, want_stats.n_trials, "trial {trial}");
+        assert_eq!(stats.f_evals, want_stats.f_evals, "trial {trial}");
+        assert_eq!(rec_a.times(), rec_b.times(), "trial {trial} grids");
+        assert_eq!(rec_a.obs_marks(), rec_b.obs_marks(), "trial {trial} marks");
+    }
+}
+
+/// ALF's ψ∘ψ⁻¹ round trip stays exact to float roundoff across random
+/// configurations (the invariant MALI's constant-memory reconstruction
+/// rests on), and the workspace ψ⁻¹ equals the allocating ψ⁻¹ bitwise.
+#[test]
+fn alf_psi_roundtrip_random_configs() {
+    let mut rng = Rng::new(505);
+    let mut ws = SolverWorkspace::new();
+    for trial in 0..20 {
+        let n = 1 + rng.below(6);
+        let eta = [1.0, 0.9, 0.8, 0.7][rng.below(4)];
+        let solver = AlfSolver::new(eta);
+        let dynamics = MlpDynamics::new(n, 2 + rng.below(6), &mut rng);
+        let t = rng.range(-1.0, 1.0);
+        let h = rng.range(0.01, 0.3);
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 1.0);
+        let v = dynamics.f(t, &z);
+
+        let (z1, v1, _) = solver.psi(&dynamics, t, h, &z, &v);
+        let (z0, v0) = solver.psi_inv(&dynamics, t + h, h, &z1, &v1);
+        for i in 0..n {
+            assert!(
+                (z0[i] - z[i]).abs() < 1e-4 * (1.0 + z[i].abs()),
+                "trial {trial} z[{i}]: {} vs {}",
+                z0[i],
+                z[i]
+            );
+            assert!(
+                (v0[i] - v[i]).abs() < 1e-4 * (1.0 + v[i].abs()),
+                "trial {trial} v[{i}]"
+            );
+        }
+
+        // workspace ψ⁻¹ ≡ allocating ψ⁻¹ bitwise
+        let mut z0_ws = vec![0.0f32; n];
+        let mut v0_ws = vec![0.0f32; n];
+        solver.psi_inv_into(&dynamics, t + h, h, &z1, &v1, &mut z0_ws, &mut v0_ws, &mut ws);
+        assert_eq!(z0_ws, z0, "trial {trial}");
+        assert_eq!(v0_ws, v0, "trial {trial}");
+    }
+}
+
+/// Random batches under per-sample adaptive control stay
+/// decision-identical to solo runs row for row — grids, trial counts and
+/// final states — through the workspace loop.
+#[test]
+fn batch_decision_identity_random() {
+    let mut rng = Rng::new(606);
+    let mut ws = BatchWorkspace::new();
+    for trial in 0..4 {
+        let b = 2 + rng.below(3);
+        let n_z = 1 + rng.below(3);
+        let toy = LinearToy::new(rng.range(0.4, 1.1), n_z);
+        let solver = solver_by_name("alf").unwrap();
+        let mode = StepMode::adaptive(1e-4, 1e-6);
+        let t1 = 2.0;
+        let spec = BatchSpec::new(b, n_z);
+        let mut z0 = vec![0.0f32; spec.flat_len()];
+        // very different row scales → desynchronized controllers
+        for (i, zi) in z0.iter_mut().enumerate() {
+            let row = i / n_z;
+            *zi = (0.001 + row as f32).powi(2) * rng.range(0.5, 1.5) as f32;
+        }
+
+        let mut solo_grids = Vec::new();
+        let mut solo_finals = Vec::new();
+        let mut solo_trials = Vec::new();
+        for row in 0..b {
+            let s0 = solver.init(&toy, 0.0, spec.row(&z0, row));
+            let mut rec = GridRecorder::new(0.0);
+            let (sf, st) = integrate(
+                &*solver,
+                &toy,
+                0.0,
+                t1,
+                s0,
+                &mode,
+                &ErrorNorm::Full,
+                &mut rec,
+            )
+            .unwrap();
+            solo_grids.push(rec.times().to_vec());
+            solo_finals.push(sf.z);
+            solo_trials.push(st.n_trials);
+        }
+
+        let b0 = solver.init_batch(&toy, 0.0, &z0, &spec);
+        let mut rec = BatchGridRecorder::new(0.0, b);
+        let stats = integrate_batch_ws(
+            &*solver,
+            &toy,
+            0.0,
+            t1,
+            &b0,
+            &mode,
+            &ErrorNorm::Full,
+            &mut rec,
+            &mut ws,
+        )
+        .unwrap();
+        let final_state = ws.take_output();
+        for row in 0..b {
+            assert_eq!(rec.times[row], solo_grids[row], "trial {trial} grid row {row}");
+            assert_eq!(
+                spec.row(&final_state.z.data, row),
+                solo_finals[row].as_slice(),
+                "trial {trial} final row {row}"
+            );
+            assert_eq!(
+                stats.per_sample[row].n_trials, solo_trials[row],
+                "trial {trial} trials row {row}"
+            );
+        }
+        // ws-loop batch ≡ allocating-loop batch, bitwise
+        let b0 = solver.init_batch(&toy, 0.0, &z0, &spec);
+        let (want_state, want_stats) = integrate_batch(
+            &*solver,
+            &toy,
+            0.0,
+            t1,
+            b0,
+            &mode,
+            &ErrorNorm::Full,
+            &mut (),
+        )
+        .unwrap();
+        assert_eq!(final_state, want_state, "trial {trial} ws ≡ alloc batch");
+        assert_eq!(
+            stats.n_accepted_total(),
+            want_stats.n_accepted_total(),
+            "trial {trial}"
+        );
+    }
+}
