@@ -30,50 +30,14 @@ use mali_ode::solvers::{Solver, State};
 use mali_ode::util::bench::{time_until, Table};
 use mali_ode::util::json::Json;
 use mali_ode::util::mem::MemTracker;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Counting wrapper over the system allocator: every allocation path
-/// (alloc, zeroed, realloc) bumps the counters, so bytes/step can be
-/// attributed to each configuration.
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
+// The counting allocator (calls + bytes) is shared with the
+// tests/alloc_*.rs binaries so the counting rules cannot diverge.
+#[path = "../tests/common/counting_alloc.rs"]
+mod counting_alloc;
+use counting_alloc::{alloc_snapshot, CountingAlloc};
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn alloc_snapshot() -> (u64, u64) {
-    (
-        ALLOCS.load(Ordering::Relaxed),
-        ALLOC_BYTES.load(Ordering::Relaxed),
-    )
-}
 
 /// MALI round trip through the *allocating* entry points: N fixed ALF
 /// steps forward, then the ψ⁻¹ + vjp reverse sweep.

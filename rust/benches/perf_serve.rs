@@ -1,0 +1,19 @@
+//! Bench target for E12 — the online-serving latency/throughput grid
+//! (see DESIGN.md §5/§10): dynamic micro-batching vs solo vs naive
+//! one-request-one-integration, fixed and adaptive stepping.
+//! Run with `cargo bench --bench perf_serve` (add `-- --full` for the
+//! EXPERIMENTS.md scale); `runs/serve.json` is the artifact CI uploads
+//! next to `BENCH_hotpath.json`.
+use mali_ode::coordinator::{exp_serve, report, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_serve::serve_bench(scale, 0).expect("perf_serve");
+    report::write_summary("runs", "serve", &summary).expect("write summary");
+    println!(
+        "\nperf_serve done in {:.1}s (runs/serve.json written)",
+        t0.elapsed().as_secs_f64()
+    );
+}

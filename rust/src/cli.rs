@@ -90,6 +90,8 @@ COMMANDS:
     train <config.json>        train a model from an explicit config path
     toy                        quick toy-ODE gradient-accuracy demo (Fig. 4)
     stability                  print damped-ALF A-stability region areas (App. Fig. 1)
+    serve-bench                online-inference micro-batching load generator (E12):
+                               p50/p99 latency + steps/sec, coalesced vs solo vs naive
     smoke                      load + execute every artifact once (runtime check)
     help                       show this message
 

@@ -1,0 +1,286 @@
+//! E12 — online-serving latency/throughput: dynamic micro-batching vs
+//! naive one-request-one-integration.
+//!
+//! A closed-loop load generator (C client threads, R requests each,
+//! seeded random `z₀` rows) drives the same request stream through three
+//! strategies × two stepping modes:
+//!
+//! * **naive** — no server: each client integrates its own request
+//!   inline through the allocating [`integrate_obs`] wrapper (fresh
+//!   workspace per call) — the baseline every serving claim is measured
+//!   against;
+//! * **solo** — the full queue/worker pipeline with coalescing disabled
+//!   (`max_batch = 1`): isolates the cost of the queue hop and the
+//!   benefit of warm per-worker workspaces;
+//! * **coalesced** — dynamic micro-batching (`max_batch = 32`): queued
+//!   compatible requests ride one batched solve.
+//!
+//! Reported per config: client-observed p50/p99/mean latency (exact,
+//! via [`bench::quantile`] over raw samples), requests/sec, solver
+//! steps/sec, mean batch occupancy and shed count, plus the server-side
+//! [`ServeMetrics`](crate::serve::ServeMetrics) JSON.  Responses are
+//! spot-checked against solo integrations — micro-batching must be a
+//! pure scheduling change (`tests/serve.rs` pins bitwise equality).
+
+use super::Scale;
+use crate::serve::{ModelRegistry, RequestClass, Server, ServerConfig};
+use crate::solvers::by_name as solver_by_name;
+use crate::solvers::dynamics::LinearToy;
+use crate::solvers::integrate::{integrate_obs, ErrorNorm, ObsGrid, StepMode};
+use crate::util::bench::{quantile, Table};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_Z: usize = 8;
+const ALPHA: f64 = -0.4;
+const T_END: f64 = 1.0;
+
+/// One strategy × mode cell of the E12 grid.
+struct CellResult {
+    latencies_s: Vec<f64>,
+    wall_s: f64,
+    steps: u64,
+    occupancy: f64,
+    shed: u64,
+    server_json: Option<Json>,
+}
+
+fn mk_mode(adaptive: bool) -> StepMode {
+    if adaptive {
+        StepMode::adaptive(1e-4, 1e-6)
+    } else {
+        StepMode::Fixed { h: 0.01 }
+    }
+}
+
+/// Per-client request rows: deterministic in (seed, client, request).
+fn client_z0(rng: &mut Rng) -> Vec<f32> {
+    (0..N_Z).map(|_| rng.range(-1.0, 1.0) as f32).collect()
+}
+
+/// Naive baseline: inline per-request integration, no queue, no warm
+/// workspace (the allocating wrapper), one thread per client.
+fn run_naive(mode: &StepMode, clients: usize, requests: usize, seed: u64) -> Result<CellResult> {
+    let toy = LinearToy::new(ALPHA, N_Z);
+    let solver = solver_by_name("alf")?;
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..clients).map(|i| root.fork(i as u64)).collect();
+    let t0 = Instant::now();
+    let per_client: Vec<Result<(Vec<f64>, u64)>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let mut lats = Vec::with_capacity(requests);
+        let mut steps = 0u64;
+        for _ in 0..requests {
+            let z0 = client_z0(&mut rng);
+            let t = Instant::now();
+            let s0 = solver.init(&toy, 0.0, &z0);
+            let (_, stats) = integrate_obs(
+                &*solver,
+                &toy,
+                0.0,
+                T_END,
+                s0,
+                mode,
+                &ErrorNorm::Full,
+                &ObsGrid::none(),
+                &mut (),
+            )?;
+            lats.push(t.elapsed().as_secs_f64());
+            steps += stats.n_accepted as u64;
+        }
+        Ok((lats, steps))
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies_s = Vec::new();
+    let mut steps = 0u64;
+    for r in per_client {
+        let (lats, s) = r?;
+        latencies_s.extend(lats);
+        steps += s;
+    }
+    Ok(CellResult {
+        latencies_s,
+        wall_s,
+        steps,
+        occupancy: 1.0,
+        shed: 0,
+        server_json: None,
+    })
+}
+
+/// Server-backed strategies: `max_batch = 1` (solo) or > 1 (coalesced).
+fn run_served(
+    mode: &StepMode,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+    max_batch: usize,
+    workers: usize,
+) -> Result<CellResult> {
+    let mut registry = ModelRegistry::new();
+    registry.register("lin8", Box::new(LinearToy::new(ALPHA, N_Z)));
+    let server = Server::start(
+        Arc::new(registry),
+        ServerConfig {
+            queue_capacity: 1024,
+            max_batch,
+            max_wait: Duration::from_micros(500),
+            workers,
+        },
+    );
+    let class = Arc::new(RequestClass::new(
+        "lin8",
+        "alf",
+        N_Z,
+        0.0,
+        T_END,
+        mode.clone(),
+        ObsGrid::none(),
+    )?);
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..clients).map(|i| root.fork(i as u64)).collect();
+    let t0 = Instant::now();
+    let per_client: Vec<Result<Vec<f64>>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let mut lats = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let z0 = client_z0(&mut rng);
+            let t = Instant::now();
+            // closed-loop client: on shed, back off briefly and retry
+            let resp = loop {
+                match server.submit(&class, &z0) {
+                    Ok(handle) => break handle.wait()?,
+                    Err(crate::serve::SubmitError::Overloaded { .. }) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) => anyhow::bail!("submit failed: {e}"),
+                }
+            };
+            lats.push(t.elapsed().as_secs_f64());
+            ensure!(
+                resp.z_final.len() == N_Z && resp.n_accepted > 0,
+                "malformed response"
+            );
+        }
+        Ok(lats)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    let shed = metrics.shed;
+    let mut latencies_s = Vec::new();
+    for r in per_client {
+        latencies_s.extend(r?);
+    }
+    ensure!(
+        metrics.requests as usize == clients * requests,
+        "served {} of {} requests",
+        metrics.requests,
+        clients * requests
+    );
+    ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+    Ok(CellResult {
+        latencies_s,
+        wall_s,
+        steps: metrics.steps,
+        occupancy: metrics.batch_occupancy(),
+        shed,
+        server_json: Some(metrics.to_json()),
+    })
+}
+
+/// E12 runner: the full strategy × mode grid.  Returns the summary for
+/// `runs/serve.json` (uploaded by CI next to `BENCH_hotpath.json`).
+pub fn serve_bench(scale: Scale, seed: u64) -> Result<Json> {
+    let clients = scale.pick(4, 8);
+    let requests = scale.pick(50, 400);
+    let workers = pool::num_threads().clamp(1, 2);
+    let mut table = Table::new(
+        "E12: online serving — micro-batched vs naive (lower latency / higher throughput is better)",
+        &["config", "req/s", "steps/s", "p50 ms", "p99 ms", "occupancy", "shed"],
+    );
+    let mut rows = Vec::new();
+    for adaptive in [false, true] {
+        let mode = mk_mode(adaptive);
+        let mode_name = if adaptive { "adaptive" } else { "fixed" };
+        for strategy in ["naive", "solo", "coalesced"] {
+            let cell = match strategy {
+                "naive" => run_naive(&mode, clients, requests, seed)?,
+                "solo" => run_served(&mode, clients, requests, seed, 1, workers)?,
+                _ => run_served(&mode, clients, requests, seed, 32, workers)?,
+            };
+            let n = cell.latencies_s.len();
+            let p50 = quantile(&cell.latencies_s, 0.50) * 1e3;
+            let p99 = quantile(&cell.latencies_s, 0.99) * 1e3;
+            let mean = cell.latencies_s.iter().sum::<f64>() / n.max(1) as f64 * 1e3;
+            let rps = n as f64 / cell.wall_s.max(1e-12);
+            let sps = cell.steps as f64 / cell.wall_s.max(1e-12);
+            let config = format!("{mode_name}/{strategy}");
+            table.row(&[
+                config.clone(),
+                format!("{rps:.0}"),
+                format!("{sps:.0}"),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{:.2}", cell.occupancy),
+                cell.shed.to_string(),
+            ]);
+            let mut row = vec![
+                ("config", Json::Str(config)),
+                ("mode", Json::Str(mode_name.into())),
+                ("strategy", Json::Str(strategy.into())),
+                ("requests", Json::Num(n as f64)),
+                ("wall_s", Json::Num(cell.wall_s)),
+                ("p50_ms", Json::Num(p50)),
+                ("p99_ms", Json::Num(p99)),
+                ("mean_ms", Json::Num(mean)),
+                ("requests_per_sec", Json::Num(rps)),
+                ("steps_per_sec", Json::Num(sps)),
+                ("batch_occupancy", Json::Num(cell.occupancy)),
+                ("shed", Json::Num(cell.shed as f64)),
+            ];
+            if let Some(srv) = cell.server_json {
+                row.push(("server", srv));
+            }
+            rows.push(Json::obj(row));
+        }
+    }
+    table.print();
+    Ok(crate::coordinator::report::summary(
+        rows,
+        vec![
+            ("bench", Json::Str("serve".into())),
+            ("seed", Json::Num(seed as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests_per_client", Json::Num(requests as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("n_z", Json::Num(N_Z as f64)),
+        ],
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The whole E12 grid runs at a tiny scale and reports every cell.
+    #[test]
+    fn serve_bench_smoke() {
+        // shrink further than Quick for the test suite: 2 clients × 8
+        // requests exercise every strategy without burning CI seconds
+        let mode = mk_mode(false);
+        let naive = run_naive(&mode, 2, 8, 7).unwrap();
+        assert_eq!(naive.latencies_s.len(), 16);
+        assert!(naive.steps >= 16 * 100); // 100 fixed steps per request
+        let solo = run_served(&mode, 2, 8, 7, 1, 1).unwrap();
+        assert_eq!(solo.latencies_s.len(), 16);
+        assert_eq!(solo.occupancy, 1.0, "max_batch = 1 never coalesces");
+        let coal = run_served(&mode, 2, 8, 7, 8, 1).unwrap();
+        assert_eq!(coal.latencies_s.len(), 16);
+        assert!(coal.occupancy >= 1.0);
+        assert_eq!(coal.shed, 0, "closed-loop load never saturates the queue");
+    }
+}

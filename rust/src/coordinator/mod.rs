@@ -8,6 +8,7 @@
 
 pub mod exp_flows;
 pub mod exp_images;
+pub mod exp_serve;
 pub mod exp_series;
 pub mod exp_toy;
 pub mod report;
@@ -58,6 +59,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table5", "Table 5 Neural-CDE speech accuracy", exp_series::table5 as Runner),
         ("table7", "Table 7 damped-MALI η ablation", exp_series::table7 as Runner),
         ("table6", "Table 6 FFJORD BPD + RealNVP", exp_flows::table6 as Runner),
+        ("serve", "E12 online micro-batching serve bench (latency/throughput)", exp_serve::serve_bench as Runner),
     ]
 }
 
@@ -93,21 +95,13 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
             let Some(name) = args.positional.first() else {
                 anyhow::bail!("usage: mali run <experiment> [--full] [--seed N]");
             };
-            let reg = registry();
             if name == "all" {
-                for (n, desc, runner) in &reg {
+                for (n, desc, _) in registry() {
                     log(Level::Info, &format!("=== {n}: {desc} ==="));
-                    let summary = runner(scale, seed)?;
-                    report::write_summary(&args.opt_or("runs", "runs"), n, &summary)?;
+                    run_experiment(n, scale, seed, &args.opt_or("runs", "runs"))?;
                 }
             } else {
-                let Some((n, _, runner)) = reg.iter().find(|(n, _, _)| n == name) else {
-                    anyhow::bail!(
-                        "unknown experiment '{name}'; `mali list` shows the registry"
-                    );
-                };
-                let summary = runner(scale, seed)?;
-                report::write_summary(&args.opt_or("runs", "runs"), n, &summary)?;
+                run_experiment(name, scale, seed, &args.opt_or("runs", "runs"))?;
             }
         }
         "train" => {
@@ -121,6 +115,9 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
             train_from_config(&cfg, &args.opt_or("runs", "runs"))?;
         }
         "smoke" => smoke()?,
+        // discoverable top-level alias for `mali run serve` (the E12
+        // load generator) — same dispatch, same runs/serve.json
+        "serve-bench" => run_experiment("serve", scale, seed, &args.opt_or("runs", "runs"))?,
         "toy" => {
             exp_toy::fig4(Scale::Quick, seed)?;
         }
@@ -130,6 +127,17 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
     }
     Ok(())
+}
+
+/// Run one registered experiment and write `runs/<name>.json` — the
+/// single dispatch behind `mali run <name>` and its aliases.
+pub fn run_experiment(name: &str, scale: Scale, seed: u64, runs_dir: &str) -> Result<()> {
+    let reg = registry();
+    let Some((n, _, runner)) = reg.iter().find(|(n, _, _)| n == name) else {
+        anyhow::bail!("unknown experiment '{name}'; `mali list` shows the registry");
+    };
+    let summary = runner(scale, seed)?;
+    report::write_summary(runs_dir, n, &summary)
 }
 
 /// Train an image classifier from a `configs/*.json` file — the

@@ -20,7 +20,16 @@
 //!
 //! The multi-observation entry points [`grad_obs_batched`] /
 //! [`grad_obs_batched_pooled`] apply the same dispatch rule to
-//! `L = Σ_k l_k(z(t_k))` objectives over an [`ObsGrid`].
+//! `L = Σ_k l_k(z(t_k))` objectives over an [`ObsGrid`] — there is no
+//! endpoint-only special case left anywhere in this driver: the plain
+//! `grad_batched` path is simply the empty-grid degenerate of the
+//! observation-aware stack.
+//!
+//! This driver covers *training* traffic (gradients over mini-batches
+//! the caller already assembled).  The online *inference* mirror — many
+//! independent single-trajectory requests dynamically coalesced into
+//! `[B, N_z]` batches and integrated forward through the same
+//! batch-first fast path — lives in [`crate::serve`] (DESIGN.md §10).
 
 use super::{
     BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,

@@ -26,6 +26,7 @@ pub mod util;
 pub mod runtime;
 pub mod solvers;
 pub mod grad;
+pub mod serve;
 
 pub mod data;
 pub mod models;

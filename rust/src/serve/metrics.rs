@@ -1,0 +1,337 @@
+//! Serving telemetry: fixed-footprint latency histograms and per-worker
+//! counters, merged at shutdown and emitted as `util::bench`-style JSON.
+//!
+//! Everything here is allocation-free on the record path (bucket
+//! increments into inline arrays, scalar accumulators) so the serve
+//! loop's zero-allocation contract extends to its own bookkeeping; the
+//! JSON materializes only when [`ServeMetrics::to_json`] is called at
+//! report time.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Number of geometric latency buckets: `BUCKET_FLOOR_S · RATIO^i`.
+const N_BUCKETS: usize = 96;
+/// Lowest bucket boundary: 1 µs.
+const BUCKET_FLOOR_S: f64 = 1e-6;
+/// Geometric bucket growth; 96 buckets × 1.25 cover 1 µs … ~4700 s.
+const RATIO: f64 = 1.25;
+
+/// A fixed-size log-spaced latency histogram (an HDR-histogram-lite):
+/// recording is two adds and a compare — no allocation, ~25% relative
+/// quantile resolution, exact count/mean/min/max.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn bucket(seconds: f64) -> usize {
+        if seconds <= BUCKET_FLOOR_S {
+            return 0;
+        }
+        let i = ((seconds / BUCKET_FLOOR_S).ln() / RATIO.ln()) as usize;
+        i.min(N_BUCKETS - 1)
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        let s = seconds.max(0.0);
+        self.counts[Self::bucket(s)] += 1;
+        self.count += 1;
+        self.sum_s += s;
+        self.min_s = self.min_s.min(s);
+        self.max_s = self.max_s.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the geometric midpoint of the
+    /// bucket holding the `⌈q·count⌉`-th sample, clamped to the observed
+    /// min/max so degenerate histograms stay sane.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let lo = BUCKET_FLOOR_S * RATIO.powi(i as i32);
+                let mid = if i == 0 { lo } else { lo * RATIO.sqrt() };
+                return mid.clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+
+    /// `{"p50_ms": …, "p99_ms": …, "mean_ms": …, "max_ms": …, "count": …}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("p50_ms", Json::Num(self.quantile_s(0.50) * 1e3)),
+            ("p99_ms", Json::Num(self.quantile_s(0.99) * 1e3)),
+            ("mean_ms", Json::Num(self.mean_s() * 1e3)),
+            ("max_ms", Json::Num(self.max_s * 1e3)),
+            ("count", Json::Num(self.count as f64)),
+        ])
+    }
+}
+
+/// One worker's serving counters + latency breakdown.  Each worker owns
+/// its instance (no cross-thread sharing on the hot path); the server
+/// merges them at shutdown.
+///
+/// Latency decomposition per request: `total = queue_wait + service`,
+/// where `queue_wait` spans submit → batch formation and `service` spans
+/// the batched solve + response scatter (shared by every request in the
+/// batch).
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Requests completed (responses delivered).
+    pub requests: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Sum of executed batch sizes (mean = `batch_occupancy()`).
+    pub batch_rows: u64,
+    /// Largest queue depth observed at batch formation.
+    pub max_queue_depth: usize,
+    /// Accepted solver steps across all requests.
+    pub steps: u64,
+    /// Controller trials across all requests.
+    pub trials: u64,
+    /// Dynamics `f` evaluations (per-sample units).  Worker-local values
+    /// are per-batch counter deltas on a possibly *shared* model, so they
+    /// can include concurrent workers' evaluations; `Server::shutdown`
+    /// overwrites the merged value with the exact registry-wide
+    /// serving-window delta ([`ModelRegistry::total_f_evals`]).  Exact as
+    /// recorded only for a single direct-driven worker.
+    ///
+    /// [`ModelRegistry::total_f_evals`]: crate::serve::ModelRegistry::total_f_evals
+    pub f_evals: u64,
+    /// Requests failed (integration error surfaced to the caller).
+    pub failed: u64,
+    /// Submissions shed at the bounded queue.  Workers cannot observe
+    /// sheds (the request never reaches them), so worker-local values
+    /// stay 0; `Server::shutdown` folds in the queue's counter.
+    pub shed: u64,
+    /// Time spent queued, per request.
+    pub queue_wait: LatencyHistogram,
+    /// Batched-solve + scatter time, per request.
+    pub service: LatencyHistogram,
+    /// End-to-end (submit → response) time, per request.
+    pub total: LatencyHistogram,
+    /// First/last activity timestamps bracketing the serving window.
+    pub started: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Mark the serving window edges (idempotent for `started`).
+    pub fn note_activity(&mut self, now: Instant) {
+        if self.started.is_none() {
+            self.started = Some(now);
+        }
+        self.finished = Some(now);
+    }
+
+    /// Mean executed batch size.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_rows as f64 / self.batches as f64
+        }
+    }
+
+    /// Wall-clock seconds between the first and last served batch.
+    pub fn elapsed_s(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Fold another worker's metrics into this one.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batch_rows += other.batch_rows;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.steps += other.steps;
+        self.trials += other.trials;
+        self.f_evals += other.f_evals;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.queue_wait.merge(&other.queue_wait);
+        self.service.merge(&other.service);
+        self.total.merge(&other.total);
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    /// The serving metrics schema (DESIGN.md §10) as ordered JSON — the
+    /// same diffable-report convention as `BENCH_hotpath.json`.
+    pub fn to_json(&self) -> Json {
+        let el = self.elapsed_s();
+        let rate = |n: u64| {
+            if el > 0.0 {
+                n as f64 / el
+            } else {
+                0.0
+            }
+        };
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batch_occupancy", Json::Num(self.batch_occupancy())),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("trials", Json::Num(self.trials as f64)),
+            ("f_evals", Json::Num(self.f_evals as f64)),
+            ("elapsed_s", Json::Num(el)),
+            ("requests_per_sec", Json::Num(rate(self.requests))),
+            ("steps_per_sec", Json::Num(rate(self.steps))),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("queue_wait", self.queue_wait.to_json()),
+                    ("service", self.service.to_json()),
+                    ("total", self.total.to_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 1e-4); // 0.1 ms … 100 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.50);
+        let p99 = h.quantile_s(0.99);
+        // ~25% bucket resolution: generous envelopes
+        assert!((0.03..0.08).contains(&p50), "p50 {p50}");
+        assert!((0.07..0.13).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p99);
+        assert!((h.mean_s() - 0.05005).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..100 {
+            let s = 1e-5 * (1 + i % 17) as f64;
+            if i % 2 == 0 {
+                a.record(s);
+            } else {
+                b.record(s);
+            }
+            all.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantile_s(0.5), all.quantile_s(0.5));
+        assert_eq!(a.quantile_s(0.99), all.quantile_s(0.99));
+    }
+
+    #[test]
+    fn metrics_merge_and_json() {
+        let mut m = ServeMetrics::new();
+        let t = Instant::now();
+        m.note_activity(t);
+        m.requests = 4;
+        m.batches = 1;
+        m.batch_rows = 4;
+        m.steps = 40;
+        m.total.record(0.001);
+        let mut other = ServeMetrics::new();
+        other.requests = 2;
+        other.batches = 2;
+        other.batch_rows = 2;
+        other.max_queue_depth = 7;
+        other.note_activity(t + std::time::Duration::from_millis(50));
+        m.merge(&other);
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.max_queue_depth, 7);
+        assert!(m.elapsed_s() >= 0.05);
+        assert_eq!(m.batch_occupancy(), 2.0);
+        let j = m.to_json();
+        assert_eq!(j.get("requests").as_f64(), Some(6.0));
+        assert!(j.get("latency").get("total").get("count").as_f64() == Some(1.0));
+        // the schema round-trips through the writer/parser
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("batches").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_s(0.5), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+}

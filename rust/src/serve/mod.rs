@@ -1,0 +1,750 @@
+//! Online inference: a dynamic micro-batching server over the batch-first
+//! solver stack.
+//!
+//! The offline stack integrates mini-batches it is handed; serving
+//! inverts the control flow — single-trajectory requests (`z₀`, a span,
+//! an optional observation grid, a model name) arrive one at a time and
+//! must come back as low-latency responses.  This layer closes that gap
+//! with four pieces (DESIGN.md §10, ADR-002):
+//!
+//! * [`queue::BoundedQueue`] — the bounded MPSC front door: submissions
+//!   past capacity are **shed** with an explicit error instead of
+//!   buffered, so server memory stays bounded under overload;
+//! * [`batcher`] — dynamic micro-batching: the next batch starts at the
+//!   FIFO head and coalesces queued requests with the **same
+//!   compatibility key** ([`CompatKey`]: model + solver + step mode +
+//!   span + observation grid, floats compared by bit pattern) up to
+//!   `max_batch` rows or until `max_wait` expires;
+//! * [`worker::ServeWorker`] — one per thread, owning a warm
+//!   [`BatchWorkspace`](crate::solvers::workspace::BatchWorkspace): the
+//!   coalesced rows run through the per-sample-adaptive
+//!   [`integrate_batch_obs_stats_ws`](crate::solvers::integrate::integrate_batch_obs_stats_ws)
+//!   fast path, which is **decision-identical per row to a solo solve**
+//!   — so a coalesced response is bitwise the same trajectory the
+//!   request would have gotten alone (`tests/serve.rs` pins this), and a
+//!   warmed serve loop performs **zero** heap allocations
+//!   (`tests/alloc_serve.rs`);
+//! * [`metrics::ServeMetrics`] — per-request queue-wait / service / total
+//!   latency histograms plus batch-occupancy and throughput counters,
+//!   emitted as the `util::bench`-style JSON that `mali serve-bench`
+//!   (experiment E12) reports.
+//!
+//! # Example
+//!
+//! ```
+//! use mali_ode::serve::{ModelRegistry, RequestClass, Server, ServerConfig};
+//! use mali_ode::solvers::dynamics::LinearToy;
+//! use mali_ode::solvers::integrate::{ObsGrid, StepMode};
+//! use std::sync::Arc;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut registry = ModelRegistry::new();
+//! registry.register("toy", Box::new(LinearToy::new(-0.4, 2)));
+//! let server = Server::start(Arc::new(registry), ServerConfig::default());
+//!
+//! // One compatibility class, shared by every request that may coalesce.
+//! let class = Arc::new(RequestClass::new(
+//!     "toy",
+//!     "alf",
+//!     2,
+//!     0.0,
+//!     1.0,
+//!     StepMode::Fixed { h: 0.1 },
+//!     ObsGrid::none(),
+//! )?);
+//!
+//! let a = server.submit(&class, &[1.0, -0.5]).expect("admitted");
+//! let b = server.submit(&class, &[0.3, 2.0]).expect("admitted");
+//! let ra = a.wait()?;
+//! let rb = b.wait()?;
+//! assert_eq!(ra.z_final.len(), 2);
+//! assert_eq!(rb.n_accepted, 10); // 1.0 / 0.1 fixed steps
+//!
+//! let metrics = server.shutdown();
+//! assert_eq!(metrics.requests, 2);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod worker;
+
+pub use batcher::BatcherCfg;
+pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use queue::{BoundedQueue, PushError};
+pub use worker::ServeWorker;
+
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::{ObsGrid, StepMode};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Compatibility classes
+// ---------------------------------------------------------------------------
+
+/// [`StepMode`] reduced to a hashable key (f64 parameters by bit
+/// pattern): two requests may share a batch only when every controller
+/// decision they would make alone is the same, which requires *exactly*
+/// equal mode parameters.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ModeKey {
+    /// `StepMode::Fixed` with `h.to_bits()`.
+    Fixed { h: u64 },
+    /// `StepMode::Adaptive` with every tolerance/bound as bits.
+    Adaptive {
+        rtol: u64,
+        atol: u64,
+        h_init: u64,
+        h_min: u64,
+        h_max: u64,
+    },
+}
+
+impl ModeKey {
+    fn of(mode: &StepMode) -> ModeKey {
+        match *mode {
+            StepMode::Fixed { h } => ModeKey::Fixed { h: h.to_bits() },
+            StepMode::Adaptive {
+                rtol,
+                atol,
+                h_init,
+                h_min,
+                h_max,
+            } => ModeKey::Adaptive {
+                rtol: rtol.to_bits(),
+                atol: atol.to_bits(),
+                h_init: h_init.to_bits(),
+                h_min: h_min.to_bits(),
+                h_max: h_max.to_bits(),
+            },
+        }
+    }
+}
+
+/// The coalescing gate: requests micro-batch together **iff** their keys
+/// are equal.  Everything that feeds a controller decision or the
+/// dynamics is in here — model, solver, state width, span endpoints,
+/// step-mode parameters and the observation grid (floats by bit
+/// pattern) — which is exactly the precondition under which the batched
+/// loop is decision-identical to solo solves, making coalescing a pure
+/// latency/throughput optimization with bitwise-unchanged results.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CompatKey {
+    model: String,
+    solver: String,
+    n_z: usize,
+    t0: u64,
+    t1: u64,
+    mode: ModeKey,
+    grid: Vec<u64>,
+}
+
+/// A validated, immutable description of one coalescible request class.
+/// Build once (wrapped in an [`Arc`]) and share it across every request
+/// of that shape — submissions then cost no per-request validation or
+/// grid copies.
+#[derive(Debug)]
+pub struct RequestClass {
+    /// Registry name of the dynamics to integrate.
+    pub model: String,
+    /// Solver name (`solvers::by_name`).
+    pub solver: String,
+    /// Per-request state width `N_z`.
+    pub n_z: usize,
+    /// Span start.
+    pub t0: f64,
+    /// Span end.
+    pub t1: f64,
+    /// Step-size policy (shared verbatim by every coalesced row).
+    pub mode: StepMode,
+    /// Observation times whose states are returned per request
+    /// (empty = endpoint only).
+    pub grid: ObsGrid,
+    key: CompatKey,
+}
+
+impl RequestClass {
+    /// Validate and freeze a request class.  Rejects unknown solvers,
+    /// non-finite spans, degenerate mode parameters and grids outside
+    /// the open-closed span `(t0, t1]` — so per-request submission and
+    /// the serve loop itself never re-validate.
+    pub fn new(
+        model: &str,
+        solver: &str,
+        n_z: usize,
+        t0: f64,
+        t1: f64,
+        mode: StepMode,
+        grid: ObsGrid,
+    ) -> Result<RequestClass> {
+        ensure!(n_z > 0, "request class needs n_z > 0");
+        ensure!(
+            t0.is_finite() && t1.is_finite(),
+            "request span must be finite: {t0} → {t1}"
+        );
+        // constructing the solver validates the name; serving workers
+        // build their own instances lazily
+        let _ = crate::solvers::by_name(solver)?;
+        match mode {
+            StepMode::Fixed { h } => {
+                ensure!(h.is_finite() && h > 0.0, "fixed step size must be positive, got {h}");
+            }
+            StepMode::Adaptive {
+                rtol,
+                atol,
+                h_init,
+                h_min,
+                h_max,
+            } => {
+                ensure!(
+                    rtol.is_finite() && rtol > 0.0 && atol.is_finite() && atol >= 0.0,
+                    "adaptive tolerances must be positive/non-negative: rtol={rtol}, atol={atol}"
+                );
+                ensure!(
+                    h_init.is_finite()
+                        && h_min.is_finite()
+                        && h_max.is_finite()
+                        && h_init > 0.0
+                        && h_min > 0.0
+                        && h_max >= h_min,
+                    "adaptive step bounds must be finite with 0 < h_min ≤ h_max, h_init > 0"
+                );
+            }
+        }
+        if !grid.is_empty() {
+            ensure!(
+                t0 != t1,
+                "zero-span request class cannot reach observation times"
+            );
+            grid.validate_for(t0, t1)?;
+        }
+        let key = CompatKey {
+            model: model.to_string(),
+            solver: solver.to_string(),
+            n_z,
+            t0: t0.to_bits(),
+            t1: t1.to_bits(),
+            mode: ModeKey::of(&mode),
+            grid: grid.times().iter().map(|t| t.to_bits()).collect(),
+        };
+        Ok(RequestClass {
+            model: model.to_string(),
+            solver: solver.to_string(),
+            n_z,
+            t0,
+            t1,
+            mode,
+            grid,
+            key,
+        })
+    }
+
+    /// The coalescing key (precomputed at construction).
+    pub fn key(&self) -> &CompatKey {
+        &self.key
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests in flight
+// ---------------------------------------------------------------------------
+
+/// The result of one served request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResponse {
+    /// State at `t1`, length `n_z`.
+    pub z_final: Vec<f32>,
+    /// `[K, n_z]` row-major states at the class's observation times
+    /// (empty when the grid is empty).
+    pub obs: Vec<f32>,
+    /// Accepted solver steps of this trajectory.
+    pub n_accepted: usize,
+    /// Controller trials (accepted + rejected) of this trajectory.
+    pub n_trials: usize,
+    /// Seconds spent queued before batch formation.
+    pub queue_wait_s: f64,
+    /// Seconds of batched solve + response scatter (shared by the batch).
+    pub service_s: f64,
+}
+
+/// One-shot rendezvous between a worker and a waiting client.
+#[derive(Debug, Default)]
+pub(crate) struct ResponseSlot {
+    state: Mutex<Option<Result<ServeResponse, String>>>,
+    cv: Condvar,
+}
+
+impl ResponseSlot {
+    pub(crate) fn fulfill(&self, r: Result<ServeResponse, String>) {
+        *self.state.lock().expect("slot poisoned") = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// Client-side handle returned by [`Server::submit`]; block on
+/// [`ResponseHandle::wait`] for the response.
+#[derive(Debug)]
+pub struct ResponseHandle(Arc<ResponseSlot>);
+
+impl ResponseHandle {
+    /// Block until the worker delivers this request's response (or its
+    /// error).
+    pub fn wait(self) -> Result<ServeResponse> {
+        let mut g = self.0.state.lock().expect("slot poisoned");
+        loop {
+            if let Some(r) = g.take() {
+                return r.map_err(|e| anyhow::anyhow!(e));
+            }
+            g = self.0.cv.wait(g).expect("slot poisoned");
+        }
+    }
+
+    /// Non-blocking probe; `Some` exactly once, when the response has
+    /// landed.
+    pub fn try_wait(&self) -> Option<Result<ServeResponse>> {
+        self.0
+            .state
+            .lock()
+            .expect("slot poisoned")
+            .take()
+            .map(|r| r.map_err(|e| anyhow::anyhow!(e)))
+    }
+}
+
+/// A queued request: the class handle, the initial state, preallocated
+/// response buffers (the worker writes results in place, so the serve
+/// loop itself allocates nothing) and delivery bookkeeping.
+#[derive(Debug)]
+pub struct Pending {
+    /// Shared class (step config + grid + key).
+    pub class: Arc<RequestClass>,
+    /// Initial state row, length `n_z`.
+    pub z0: Vec<f32>,
+    /// Output: state at `t1` (length `n_z`).
+    pub z_final: Vec<f32>,
+    /// Output: `[K, n_z]` observation states.
+    pub obs: Vec<f32>,
+    /// Output: accepted steps of this row.
+    pub n_accepted: usize,
+    /// Output: controller trials of this row.
+    pub n_trials: usize,
+    /// Submission timestamp (queue-wait accounting).
+    pub enqueued: Instant,
+    /// Response delivery slot; `None` when the caller drives a worker
+    /// synchronously (tests, benches) and reads the buffers directly.
+    pub(crate) slot: Option<Arc<ResponseSlot>>,
+}
+
+impl Pending {
+    /// A request with freshly sized response buffers and no delivery
+    /// slot (direct-drive shape; [`Server::submit`] attaches the slot).
+    pub fn new(class: Arc<RequestClass>, z0: Vec<f32>) -> Pending {
+        let n_z = class.n_z;
+        let k = class.grid.len();
+        Pending {
+            z0,
+            z_final: vec![0.0; n_z],
+            obs: vec![0.0; k * n_z],
+            n_accepted: 0,
+            n_trials: 0,
+            enqueued: Instant::now(),
+            slot: None,
+            class,
+        }
+    }
+
+    /// Re-arm a recycled request with a new initial state — buffers and
+    /// class are kept, so direct-drive loops (and their allocation
+    /// accounting) reuse one set of envelopes.
+    pub fn reset(&mut self, z0: &[f32]) {
+        self.z0.copy_from_slice(z0);
+        self.n_accepted = 0;
+        self.n_trials = 0;
+        self.enqueued = Instant::now();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model registry
+// ---------------------------------------------------------------------------
+
+/// Name → dynamics table the workers serve from.  Registered once before
+/// [`Server::start`]; serving never mutates models (inference reads
+/// parameters only), so one instance is shared by every worker thread.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Box<dyn Dynamics + Send + Sync>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register `dynamics` under `name` (replacing any previous entry).
+    pub fn register(&mut self, name: &str, dynamics: Box<dyn Dynamics + Send + Sync>) {
+        self.models.insert(name.to_string(), dynamics);
+    }
+
+    /// Look up a model by name.
+    pub fn get(&self, name: &str) -> Option<&(dyn Dynamics + Send + Sync)> {
+        self.models.get(name).map(|b| b.as_ref())
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    /// Sum of the `f`-evaluation counters across every registered model
+    /// (per-sample units).  A snapshot pair around a serving window gives
+    /// the **exact** evaluation count even when several workers hit the
+    /// same model concurrently — unlike per-batch counter deltas, which
+    /// interleave (see [`ServeMetrics::f_evals`]).
+    pub fn total_f_evals(&self) -> u64 {
+        self.models
+            .values()
+            .map(|m| m.counters().f_evals.get())
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// Why [`Server::submit`] refused a request.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The request queue held `capacity` entries — the request was shed.
+    /// Back off and retry, or fail upstream; the server's memory stays
+    /// bounded either way.
+    Overloaded {
+        /// The queue bound that was hit.
+        capacity: usize,
+    },
+    /// The server is shutting down.
+    Closed,
+    /// The request is malformed (wrong `z0` width, unknown model).
+    BadRequest(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { capacity } => {
+                write!(f, "request shed: queue at capacity ({capacity})")
+            }
+            SubmitError::Closed => write!(f, "server is shutting down"),
+            SubmitError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Knobs of one [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bounded queue depth; submissions beyond it are shed.
+    pub queue_capacity: usize,
+    /// Largest micro-batch a worker executes.
+    pub max_batch: usize,
+    /// How long a forming batch waits for more coalescible requests
+    /// after the head arrives.  `0` coalesces only what is already
+    /// queued (no added latency); larger values trade head latency for
+    /// occupancy.
+    pub max_wait: Duration,
+    /// Worker threads.  `0` starts a paused server (nothing drains —
+    /// the overload/saturation tests and external drivers use this).
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            queue_capacity: 1024,
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+            workers: crate::util::pool::num_threads().min(4),
+        }
+    }
+}
+
+/// The online inference server: a bounded queue feeding worker threads
+/// that micro-batch compatible requests through warm batch workspaces.
+/// See the module docs for the architecture and a usage example.
+pub struct Server {
+    queue: Arc<BoundedQueue<Pending>>,
+    registry: Arc<ModelRegistry>,
+    workers: Vec<JoinHandle<ServeMetrics>>,
+    cfg: ServerConfig,
+    /// Registry-wide `f`-eval counter total at startup; shutdown reports
+    /// the exact serving-window delta against it.
+    f_evals_at_start: u64,
+}
+
+impl Server {
+    /// Spawn `cfg.workers` serving threads over `registry` and return
+    /// the handle requests are submitted through.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Server {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let bcfg = BatcherCfg {
+            max_batch: cfg.max_batch.max(1),
+            max_wait: cfg.max_wait,
+        };
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let queue = queue.clone();
+                let registry = registry.clone();
+                let bcfg = bcfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker::worker_loop(&queue, &registry, &bcfg))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        let f_evals_at_start = registry.total_f_evals();
+        Server {
+            queue,
+            registry,
+            workers,
+            cfg,
+            f_evals_at_start,
+        }
+    }
+
+    /// Submit one request.  Fails fast — [`SubmitError::Overloaded`] is
+    /// the backpressure signal — and otherwise returns a handle the
+    /// caller blocks on.
+    pub fn submit(
+        &self,
+        class: &Arc<RequestClass>,
+        z0: &[f32],
+    ) -> Result<ResponseHandle, SubmitError> {
+        if z0.len() != class.n_z {
+            return Err(SubmitError::BadRequest(format!(
+                "z0 has {} elements, class expects n_z = {}",
+                z0.len(),
+                class.n_z
+            )));
+        }
+        // a NaN/Inf row would not error — it would crawl (NaN error
+        // norms reject down to h_min, then accept ~(span/h_min) steps),
+        // stalling every innocently coalesced neighbor; reject it here
+        if z0.iter().any(|v| !v.is_finite()) {
+            return Err(SubmitError::BadRequest(
+                "z0 contains non-finite components".to_string(),
+            ));
+        }
+        let Some(model) = self.registry.get(&class.model) else {
+            return Err(SubmitError::BadRequest(format!(
+                "unknown model '{}' (registered: {:?})",
+                class.model,
+                self.registry.names()
+            )));
+        };
+        // reject width/shape mismatches here, as a clean BadRequest,
+        // instead of letting them blow up inside a worker's solve
+        if model.is_device_batched() {
+            return Err(SubmitError::BadRequest(format!(
+                "model '{}' is device-batched (a fixed [B, n_z] is baked into its \
+                 executable) and cannot be dynamically micro-batched",
+                class.model
+            )));
+        }
+        if model.dim() != class.n_z {
+            return Err(SubmitError::BadRequest(format!(
+                "model '{}' has state width {}, request class expects n_z = {}",
+                class.model,
+                model.dim(),
+                class.n_z
+            )));
+        }
+        let slot = Arc::new(ResponseSlot::default());
+        let mut pending = Pending::new(class.clone(), z0.to_vec());
+        pending.slot = Some(slot.clone());
+        match self.queue.try_push(pending) {
+            Ok(()) => Ok(ResponseHandle(slot)),
+            Err(PushError::Full(_)) => Err(SubmitError::Overloaded {
+                capacity: self.queue.capacity(),
+            }),
+            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Current queue depth (racy; a load-generator backpressure probe).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests shed at the queue so far.
+    pub fn shed_count(&self) -> u64 {
+        self.queue.shed_count()
+    }
+
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Stop admitting work, let the workers drain the queue, and return
+    /// the merged serving metrics (shed count folded in).  Requests
+    /// still queued on a paused (`workers: 0`) server are failed with an
+    /// explicit shutdown error so no waiter blocks forever.
+    pub fn shutdown(self) -> ServeMetrics {
+        self.queue.close();
+        let mut metrics = ServeMetrics::new();
+        for h in self.workers {
+            match h.join() {
+                Ok(m) => metrics.merge(&m),
+                Err(_) => metrics.failed += 1,
+            }
+        }
+        // only reachable with workers == 0 (workers drain before exit)
+        while let Some(mut p) = self.queue.try_pop() {
+            if let Some(slot) = p.slot.take() {
+                slot.fulfill(Err("server shut down before the request was served".into()));
+            }
+            metrics.failed += 1;
+        }
+        // Per-worker f_evals are counter deltas around each batch, which
+        // interleave when workers share a model; replace the merged sum
+        // with the exact registry-wide serving-window delta.
+        metrics.f_evals = self
+            .registry
+            .total_f_evals()
+            .saturating_sub(self.f_evals_at_start);
+        // sheds never reach a worker; fold in the queue's counter
+        metrics.shed = self.queue.shed_count();
+        metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_class(mode: StepMode, grid: ObsGrid) -> RequestClass {
+        RequestClass::new("toy", "alf", 3, 0.0, 1.0, mode, grid).unwrap()
+    }
+
+    #[test]
+    fn class_validation_rejects_nonsense() {
+        assert!(RequestClass::new("m", "alf", 0, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none()).is_err(), "n_z = 0");
+        assert!(RequestClass::new("m", "nope", 2, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none()).is_err(), "unknown solver");
+        assert!(RequestClass::new("m", "alf", 2, 0.0, 1.0, StepMode::Fixed { h: 0.0 }, ObsGrid::none()).is_err(), "h = 0");
+        assert!(RequestClass::new("m", "alf", 2, 0.0, f64::NAN, StepMode::Fixed { h: 0.1 }, ObsGrid::none()).is_err(), "NaN span");
+        let g = ObsGrid::new(vec![2.0]).unwrap();
+        assert!(RequestClass::new("m", "alf", 2, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, g).is_err(), "obs beyond t1");
+        assert!(RequestClass::new("m", "alf", 2, 0.0, 1.0, StepMode::adaptive(-1.0, 1e-6), ObsGrid::none()).is_err(), "rtol < 0");
+        let inf_bounds = StepMode::Adaptive {
+            rtol: 1e-4,
+            atol: 1e-6,
+            h_init: f64::INFINITY,
+            h_min: 1e-6,
+            h_max: f64::INFINITY,
+        };
+        assert!(RequestClass::new("m", "alf", 2, 0.0, 1.0, inf_bounds, ObsGrid::none()).is_err(), "infinite step bounds");
+    }
+
+    #[test]
+    fn compat_keys_gate_on_every_parameter() {
+        let base = toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none());
+        let same = toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none());
+        assert_eq!(base.key(), same.key());
+        let other_h = toy_class(StepMode::Fixed { h: 0.05 }, ObsGrid::none());
+        assert_ne!(base.key(), other_h.key());
+        let other_mode = toy_class(StepMode::adaptive(1e-4, 1e-6), ObsGrid::none());
+        assert_ne!(base.key(), other_mode.key());
+        let with_grid = toy_class(
+            StepMode::Fixed { h: 0.1 },
+            ObsGrid::new(vec![0.5, 1.0]).unwrap(),
+        );
+        assert_ne!(base.key(), with_grid.key());
+        let other_solver =
+            RequestClass::new("toy", "dopri5", 3, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap();
+        assert_ne!(base.key(), other_solver.key());
+        let other_span =
+            RequestClass::new("toy", "alf", 3, 0.0, 2.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap();
+        assert_ne!(base.key(), other_span.key());
+    }
+
+    #[test]
+    fn pending_buffers_sized_from_class() {
+        let class = Arc::new(toy_class(
+            StepMode::Fixed { h: 0.1 },
+            ObsGrid::new(vec![0.5, 1.0]).unwrap(),
+        ));
+        let p = Pending::new(class, vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.z_final.len(), 3);
+        assert_eq!(p.obs.len(), 2 * 3);
+        assert!(p.slot.is_none());
+    }
+
+    #[test]
+    fn registry_lookup() {
+        use crate::solvers::dynamics::LinearToy;
+        let mut reg = ModelRegistry::new();
+        reg.register("toy", Box::new(LinearToy::new(-0.3, 3)));
+        assert!(reg.get("toy").is_some());
+        assert!(reg.get("absent").is_none());
+        assert_eq!(reg.names(), vec!["toy"]);
+        assert_eq!(reg.get("toy").unwrap().dim(), 3);
+    }
+
+    #[test]
+    fn paused_server_sheds_and_fails_pending_on_shutdown() {
+        use crate::solvers::dynamics::LinearToy;
+        let mut reg = ModelRegistry::new();
+        reg.register("toy", Box::new(LinearToy::new(-0.3, 3)));
+        let server = Server::start(
+            Arc::new(reg),
+            ServerConfig {
+                queue_capacity: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                workers: 0,
+            },
+        );
+        let class = Arc::new(toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none()));
+        let h1 = server.submit(&class, &[1.0, 2.0, 3.0]).unwrap();
+        let _h2 = server.submit(&class, &[1.0, 2.0, 3.0]).unwrap();
+        match server.submit(&class, &[1.0, 2.0, 3.0]) {
+            Err(SubmitError::Overloaded { capacity: 2 }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(server.queue_depth(), 2, "memory bounded at capacity");
+        assert_eq!(server.shed_count(), 1);
+        // wrong-width, non-finite and unknown-model requests are
+        // rejected before queueing
+        assert!(matches!(
+            server.submit(&class, &[1.0]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        assert!(matches!(
+            server.submit(&class, &[1.0, f32::INFINITY, 3.0]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        let bad = Arc::new(
+            RequestClass::new("absent", "alf", 3, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        assert!(matches!(
+            server.submit(&bad, &[1.0, 2.0, 3.0]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        let metrics = server.shutdown();
+        assert_eq!(metrics.failed, 2, "queued requests failed loudly");
+        assert!(h1.wait().is_err(), "waiter unblocked with shutdown error");
+    }
+}

@@ -1,0 +1,310 @@
+//! Bounded in-process MPSC request queue with explicit shedding.
+//!
+//! The serving front door: producers (`Server::submit`) push with
+//! [`BoundedQueue::try_push`], which **fails fast** when the queue is at
+//! capacity instead of blocking or growing — overload surfaces to the
+//! caller as a shed error while the queue's memory stays bounded at
+//! `capacity` requests (the backpressure/shed policy of ADR-002).
+//! Consumers (the micro-batcher loop) block on [`BoundedQueue::pop_wait`]
+//! and selectively drain coalescible entries with
+//! [`BoundedQueue::pop_matching_into`].
+//!
+//! Built on `std::sync::{Mutex, Condvar}` — no async runtime (tokio is
+//! not vendored offline, and the consumers are a handful of worker
+//! threads whose work items are multi-millisecond ODE solves, so parked
+//! OS threads cost nothing that matters here; see ADR-002).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push was rejected; the rejected item is handed back so the
+/// caller can retry or fail its request.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue held `capacity` items — the request is shed (counted in
+    /// [`BoundedQueue::shed_count`]).
+    Full(T),
+    /// [`BoundedQueue::close`] was called; no new work is admitted.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    /// Empty between calls; [`BoundedQueue::pop_matching_into`] swaps it
+    /// in as the compaction target so the O(n) selective drain reuses
+    /// warm capacity instead of allocating under the lock.
+    spare: VecDeque<T>,
+    /// Monotone push counter — the generation token that makes the
+    /// batcher's scan-then-wait race-free (a push between a scan and the
+    /// wait bumps it, so the wait returns immediately instead of losing
+    /// the wakeup until the deadline).
+    pushes: u64,
+    closed: bool,
+}
+
+/// A bounded multi-producer queue for serve requests (see module docs).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    /// Signalled on every push and on close.
+    changed: Condvar,
+    capacity: usize,
+    shed: AtomicU64,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `capacity` (> 0) buffered items.
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                spare: VecDeque::with_capacity(capacity),
+                pushes: 0,
+                closed: false,
+            }),
+            changed: Condvar::new(),
+            capacity,
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Non-blocking push: sheds (with a count) when the queue is full,
+    /// rejects when it is closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        g.pushes += 1;
+        drop(g);
+        self.changed.notify_all();
+        Ok(())
+    }
+
+    /// Block until an item is available (FIFO head) or the queue is
+    /// closed *and* drained; `None` means shutdown.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.changed.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Non-blocking pop of the FIFO head.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().expect("queue poisoned").items.pop_front()
+    }
+
+    /// Remove up to `max` items matching `pred` — from anywhere in the
+    /// queue, preserving the relative order of both the taken and the
+    /// remaining items — and append them to `out`.  Returns how many were
+    /// taken.  This is the coalescing primitive: the batcher drains
+    /// requests compatible with the batch head past any incompatible ones
+    /// parked in between (which keep their FIFO positions).
+    ///
+    /// One ordered O(n) compaction pass (repeated `VecDeque::remove`
+    /// would be O(n²) element moves under the lock every producer
+    /// needs); the non-matches land in the pooled `spare` deque, so the
+    /// steady state allocates nothing.
+    pub fn pop_matching_into(
+        &self,
+        mut pred: impl FnMut(&T) -> bool,
+        max: usize,
+        out: &mut Vec<T>,
+    ) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.items.is_empty() {
+            return 0;
+        }
+        let mut src = std::mem::take(&mut g.items);
+        let mut dst = std::mem::take(&mut g.spare);
+        debug_assert!(dst.is_empty());
+        let mut taken = 0;
+        for item in src.drain(..) {
+            if taken < max && pred(&item) {
+                out.push(item);
+                taken += 1;
+            } else {
+                dst.push_back(item);
+            }
+        }
+        g.spare = src; // drained empty; keeps its capacity warm
+        g.items = dst;
+        taken
+    }
+
+    /// Current push-generation token; grab it **before** scanning the
+    /// queue, then hand it to [`BoundedQueue::wait_newer_until`].
+    pub fn push_generation(&self) -> u64 {
+        self.inner.lock().expect("queue poisoned").pushes
+    }
+
+    /// Block until a push newer than generation `gen` lands, or
+    /// `deadline` passes, or the queue closes (the latter two return
+    /// `false` — the batcher's "stop waiting for more coalescible work"
+    /// signal).  Because the check is against the push counter under the
+    /// lock, a push that raced in between the caller's scan and this
+    /// wait is seen immediately — no wakeup can be lost to the
+    /// scan/wait window.
+    pub fn wait_newer_until(&self, gen: u64, deadline: Instant) -> bool {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if g.pushes != gen {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            g = self
+                .changed
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned")
+                .0;
+        }
+    }
+
+    /// Stop admitting work; blocked consumers drain the remainder and
+    /// then see `None`.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.changed.notify_all();
+    }
+
+    /// Current depth (racy by nature; for metrics/backpressure probes).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    /// `true` when no items are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The fixed capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// How many pushes have been shed for capacity so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_capacity_shed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(3);
+        assert_eq!(q.capacity(), 3);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        // bounded: the 4th is shed with the item handed back
+        match q.try_push(4) {
+            Err(PushError::Full(4)) => {}
+            other => panic!("expected Full(4), got {other:?}"),
+        }
+        assert_eq!(q.shed_count(), 1);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+        q.try_push(5).unwrap();
+        assert_eq!(q.pop_wait(), Some(3));
+        assert_eq!(q.pop_wait(), Some(5));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_matching_preserves_order_of_rest() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(16);
+        for x in [1, 10, 2, 11, 3, 12, 4] {
+            q.try_push(x).unwrap();
+        }
+        let mut out = Vec::new();
+        // take at most 2 of the small ones
+        let n = q.pop_matching_into(|&x| x < 10, 2, &mut out);
+        assert_eq!(n, 2);
+        assert_eq!(out, vec![1, 2]);
+        // the rest drain in their original relative order
+        let mut rest = Vec::new();
+        while let Some(x) = q.try_pop() {
+            rest.push(x);
+        }
+        assert_eq!(rest, vec![10, 11, 3, 12, 4]);
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_drains() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        match q.try_push(8) {
+            Err(PushError::Closed(8)) => {}
+            other => panic!("expected Closed(8), got {other:?}"),
+        }
+        // buffered work still drains, then shutdown is signalled
+        assert_eq!(q.pop_wait(), Some(7));
+        assert_eq!(q.pop_wait(), None);
+        let gen = q.push_generation();
+        assert!(!q.wait_newer_until(gen, Instant::now() + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push() {
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(2));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(10));
+        q.try_push(42).unwrap();
+        assert_eq!(t.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn wait_newer_times_out_without_pushes() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let gen = q.push_generation();
+        let t0 = Instant::now();
+        assert!(!q.wait_newer_until(gen, t0 + Duration::from_millis(10)));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    /// The scan-then-wait race: a push landing after the generation was
+    /// read (but before the wait) is seen immediately — the wait must
+    /// not sleep on an already-stale generation.
+    #[test]
+    fn wait_newer_sees_races_immediately() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let gen = q.push_generation();
+        q.try_push(1).unwrap(); // the "raced-in" push
+        let t0 = Instant::now();
+        assert!(q.wait_newer_until(gen, t0 + Duration::from_millis(200)));
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "stale generation must return without sleeping out the deadline"
+        );
+    }
+}

@@ -1,0 +1,434 @@
+//! The serving worker: one per thread, owning every buffer the serve
+//! loop needs so that after warm-up a batch is admitted, integrated and
+//! scattered back to its requests with **zero** heap allocations
+//! (`tests/alloc_serve.rs` pins this with the counting global
+//! allocator).
+//!
+//! Warm state per worker:
+//!
+//! * a [`BatchWorkspace`] — solver stage scratch, ping-pong batch
+//!   states, *and* the per-sample controller vectors of
+//!   [`integrate_batch_obs_stats_ws`];
+//! * a recycled `[B, N_z]` assembly buffer + init [`BatchState`] filled
+//!   in place by [`Solver::init_batch_into`];
+//! * a recycled per-sample stats vector;
+//! * lazily constructed solver instances, cached by name.
+//!
+//! Responses are written into the requests' **preallocated** buffers
+//! ([`Pending::z_final`] / [`Pending::obs`]), so the per-request
+//! envelope cost (one `Vec` each at submit time) stays on the submit
+//! path and off the serve loop.
+
+use super::batcher::{fill_next_batch, BatcherCfg};
+use super::metrics::ServeMetrics;
+use super::queue::BoundedQueue;
+use super::{ModelRegistry, Pending, RequestClass, ServeResponse};
+use crate::solvers::batch::{BatchSpec, BatchState};
+use crate::solvers::integrate::{
+    integrate_batch_obs_stats_ws, BatchStepObserver, ErrorNorm, IntStats,
+};
+use crate::solvers::workspace::{ensure, BatchWorkspace};
+use crate::solvers::{by_name as solver_by_name, Solver};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, ensure as ensure_that, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Streams each sample's observation states straight into its request's
+/// `[K, n_z]` response buffer as the batched loop lands (bitwise) on the
+/// grid times.
+struct ObsCapture<'a> {
+    batch: &'a mut [Pending],
+    n_z: usize,
+}
+
+impl BatchStepObserver for ObsCapture<'_> {
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, z: &[f32], _v: Option<&[f32]>) {
+        let dst = &mut self.batch[sample].obs[k * self.n_z..(k + 1) * self.n_z];
+        dst.copy_from_slice(z);
+    }
+}
+
+/// Per-thread serving state (see the module docs).  Drive it through
+/// [`worker_loop`] (the threaded server) or call
+/// [`ServeWorker::process`] directly with a homogeneous batch (tests,
+/// benches, embedding).
+pub struct ServeWorker {
+    registry: Arc<ModelRegistry>,
+    solvers: BTreeMap<String, Box<dyn Solver + Send + Sync>>,
+    ws: BatchWorkspace,
+    init: BatchState,
+    z0_flat: Vec<f32>,
+    per: Vec<IntStats>,
+    metrics: ServeMetrics,
+}
+
+impl ServeWorker {
+    /// A fresh worker over `registry`; every buffer grows on first use.
+    pub fn new(registry: Arc<ModelRegistry>) -> ServeWorker {
+        ServeWorker {
+            registry,
+            solvers: BTreeMap::new(),
+            ws: BatchWorkspace::new(),
+            init: BatchState {
+                z: Tensor {
+                    data: Vec::new(),
+                    shape: vec![0, 0],
+                },
+                v: None,
+            },
+            z0_flat: Vec::new(),
+            per: Vec::new(),
+            metrics: ServeMetrics::new(),
+        }
+    }
+
+    /// Serving counters accumulated so far.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Consume the worker, yielding its metrics (the thread-exit path).
+    pub fn into_metrics(self) -> ServeMetrics {
+        self.metrics
+    }
+
+    /// Record the queue depth observed at batch formation.
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.metrics.max_queue_depth = self.metrics.max_queue_depth.max(depth);
+    }
+
+    /// Serve one homogeneous micro-batch: assemble the `[B, N_z]` state,
+    /// integrate through the batched fast path, scatter results into
+    /// each request's buffers, record metrics, and deliver responses to
+    /// any attached slots.
+    ///
+    /// **Fault isolation**: if the batched solve errors and the batch
+    /// has more than one row, every row is re-served **solo** — a
+    /// poisoned request (say, a step-size search that cannot converge)
+    /// fails alone and its coalesced neighbors still get their exact
+    /// solo results, preserving the "coalescing is a pure scheduling
+    /// change" contract on the error path too.  The original batch
+    /// error is still returned so direct drivers see that the fast path
+    /// failed; per-request outcomes are what the slots/buffers say.
+    pub fn process(&mut self, batch: &mut [Pending]) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let t_start = Instant::now();
+        self.metrics.note_activity(t_start);
+        let class = batch[0].class.clone();
+        if batch.iter().any(|p| p.class.key() != class.key()) {
+            let e = anyhow!(
+                "micro-batch mixes incompatible request classes (batcher contract violated)"
+            );
+            self.fail_rows(batch, &e);
+            return Err(e);
+        }
+        match self.run_batch(&class, batch) {
+            Ok(f_evals) => {
+                self.deliver_rows(batch, t_start, f_evals);
+                Ok(())
+            }
+            Err(e) if batch.len() > 1 => {
+                for i in 0..batch.len() {
+                    let row = &mut batch[i..i + 1];
+                    // service time is this row's own solo solve; the
+                    // failed batch attempt and earlier retries count as
+                    // queue wait (time before the solve that served you)
+                    let row_start = Instant::now();
+                    match self.run_batch(&class, row) {
+                        Ok(f_evals) => self.deliver_rows(row, row_start, f_evals),
+                        Err(row_err) => self.fail_rows(row, &row_err),
+                    }
+                }
+                Err(e)
+            }
+            Err(e) => {
+                self.fail_rows(batch, &e);
+                Err(e)
+            }
+        }
+    }
+
+    /// Record metrics for a successfully solved batch (or solo retry)
+    /// and deliver each row's response.
+    fn deliver_rows(&mut self, batch: &mut [Pending], t_start: Instant, f_evals: u64) {
+        let service_s = t_start.elapsed().as_secs_f64();
+        self.metrics.batches += 1;
+        self.metrics.batch_rows += batch.len() as u64;
+        self.metrics.f_evals += f_evals;
+        for p in batch.iter_mut() {
+            let queue_wait_s = t_start.saturating_duration_since(p.enqueued).as_secs_f64();
+            self.metrics.requests += 1;
+            self.metrics.steps += p.n_accepted as u64;
+            self.metrics.trials += p.n_trials as u64;
+            self.metrics.queue_wait.record(queue_wait_s);
+            self.metrics.service.record(service_s);
+            self.metrics.total.record(queue_wait_s + service_s);
+            if let Some(slot) = p.slot.take() {
+                slot.fulfill(Ok(ServeResponse {
+                    z_final: std::mem::take(&mut p.z_final),
+                    obs: std::mem::take(&mut p.obs),
+                    n_accepted: p.n_accepted,
+                    n_trials: p.n_trials,
+                    queue_wait_s,
+                    service_s,
+                }));
+            }
+        }
+        self.metrics.note_activity(Instant::now());
+    }
+
+    /// Fail every row of `batch` with `e`'s message.
+    fn fail_rows(&mut self, batch: &mut [Pending], e: &anyhow::Error) {
+        self.metrics.failed += batch.len() as u64;
+        let msg = format!("serve batch failed: {e:#}");
+        for p in batch.iter_mut() {
+            if let Some(slot) = p.slot.take() {
+                slot.fulfill(Err(msg.clone()));
+            }
+        }
+    }
+
+    /// The allocation-free core: batch assembly → `init_batch_into` →
+    /// `integrate_batch_obs_stats_ws` → per-row scatter.  Returns the
+    /// batch's `f`-evaluation count.
+    fn run_batch(&mut self, class: &RequestClass, batch: &mut [Pending]) -> Result<u64> {
+        let dynamics = self.registry.get(&class.model).ok_or_else(|| {
+            anyhow!("unknown model '{}' (registered: {:?})", class.model, self.registry.names())
+        })?;
+        // direct drivers bypass Server::submit, so re-check the shape
+        // contract here (cheap scalar compares; an error, not a panic)
+        ensure_that!(
+            !dynamics.is_device_batched(),
+            "model '{}' is device-batched (fixed [B, n_z] baked into its executable) \
+             and cannot be dynamically micro-batched",
+            class.model
+        );
+        ensure_that!(
+            dynamics.dim() == class.n_z,
+            "model '{}' has state width {}, request class expects n_z = {}",
+            class.model,
+            dynamics.dim(),
+            class.n_z
+        );
+        if !self.solvers.contains_key(&class.solver) {
+            // cold path: first batch of this solver name on this worker
+            let s = solver_by_name(&class.solver)?;
+            self.solvers.insert(class.solver.clone(), s);
+        }
+        let solver = self.solvers.get(&class.solver).expect("just inserted");
+        let nb = batch.len();
+        let n_z = class.n_z;
+        let spec = BatchSpec::new(nb, n_z);
+        let k = class.grid.len();
+        ensure(&mut self.z0_flat, spec.flat_len());
+        for (b, p) in batch.iter_mut().enumerate() {
+            ensure_that!(
+                p.z0.len() == n_z,
+                "request row {b}: z0 has {} elements, class expects {n_z}",
+                p.z0.len()
+            );
+            ensure_that!(
+                p.z0.iter().all(|v| v.is_finite()),
+                "request row {b}: z0 contains non-finite components"
+            );
+            spec.row_mut(&mut self.z0_flat, b).copy_from_slice(&p.z0);
+            // response buffers are sized at submit time; re-shape
+            // defensively for recycled direct-drive envelopes
+            ensure(&mut p.z_final, n_z);
+            ensure(&mut p.obs, k * n_z);
+        }
+        // delta spans init + integrate, so the batch's f_evals includes
+        // ALF's v₀ = f(z₀) evaluations
+        let f0 = dynamics.counters().f_evals.get();
+        solver.init_batch_into(dynamics, class.t0, &self.z0_flat, &spec, &mut self.init, &mut self.ws);
+        let mut cap = ObsCapture {
+            batch: &mut *batch,
+            n_z,
+        };
+        integrate_batch_obs_stats_ws(
+            solver.as_ref(),
+            dynamics,
+            class.t0,
+            class.t1,
+            &self.init,
+            &class.mode,
+            &ErrorNorm::Full,
+            &class.grid,
+            &mut cap,
+            &mut self.per,
+            &mut self.ws,
+        )?;
+        let f_evals = dynamics.counters().f_evals.get().saturating_sub(f0);
+        let out = self.ws.output();
+        for (b, p) in batch.iter_mut().enumerate() {
+            out.copy_row_into(b, &mut p.z_final, None);
+            p.n_accepted = self.per[b].n_accepted;
+            p.n_trials = self.per[b].n_trials;
+        }
+        Ok(f_evals)
+    }
+}
+
+/// The thread body of one serving worker: form micro-batches until the
+/// queue closes, serve each through a [`ServeWorker`], and return the
+/// accumulated metrics.  The batch vector is reused across iterations,
+/// so a warmed loop forms and serves batches without allocating.
+///
+/// A panic inside a solve (a bug in a registered dynamics, say) is
+/// caught here: every still-unfulfilled response slot of the batch gets
+/// an explicit error — one poisoned request must not strand its own
+/// waiters, let alone take the worker (and every later waiter) with it.
+pub fn worker_loop(
+    queue: &BoundedQueue<Pending>,
+    registry: &Arc<ModelRegistry>,
+    cfg: &BatcherCfg,
+) -> ServeMetrics {
+    let mut worker = ServeWorker::new(registry.clone());
+    let mut batch: Vec<Pending> = Vec::new();
+    while fill_next_batch(queue, cfg, &mut batch) {
+        worker.note_queue_depth(queue.len() + batch.len());
+        // non-panic errors were already delivered to the response slots
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = worker.process(&mut batch);
+        }));
+        if outcome.is_err() {
+            for p in batch.iter_mut() {
+                if let Some(slot) = p.slot.take() {
+                    slot.fulfill(Err(
+                        "serve worker panicked while integrating this batch".into()
+                    ));
+                    worker.metrics.failed += 1;
+                }
+            }
+        }
+        batch.clear();
+    }
+    worker.into_metrics()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::RequestClass;
+    use crate::solvers::dynamics::LinearToy;
+    use crate::solvers::integrate::{ObsGrid, StepMode};
+
+    fn registry(n_z: usize) -> Arc<ModelRegistry> {
+        let mut reg = ModelRegistry::new();
+        reg.register("toy", Box::new(LinearToy::new(-0.4, n_z)));
+        Arc::new(reg)
+    }
+
+    #[test]
+    fn worker_serves_a_direct_batch() {
+        let reg = registry(2);
+        let class = Arc::new(
+            RequestClass::new("toy", "alf", 2, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let mut w = ServeWorker::new(reg);
+        let mut batch = vec![
+            Pending::new(class.clone(), vec![1.0, -0.5]),
+            Pending::new(class.clone(), vec![0.25, 2.0]),
+        ];
+        w.process(&mut batch).unwrap();
+        for p in &batch {
+            assert_eq!(p.n_accepted, 10);
+            assert_eq!(p.n_trials, 10);
+            // contracting dynamics: |z| shrinks
+            assert!(p.z_final[0].abs() < p.z0[0].abs().max(1e-6));
+        }
+        assert_eq!(w.metrics().requests, 2);
+        assert_eq!(w.metrics().batches, 1);
+        assert_eq!(w.metrics().steps, 20);
+        assert!(w.metrics().f_evals > 0);
+    }
+
+    #[test]
+    fn worker_rejects_mixed_classes_and_unknown_models() {
+        let reg = registry(1);
+        let a = Arc::new(
+            RequestClass::new("toy", "alf", 1, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let b = Arc::new(
+            RequestClass::new("toy", "alf", 1, 0.0, 1.0, StepMode::Fixed { h: 0.2 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let mut w = ServeWorker::new(reg.clone());
+        let mut mixed = vec![
+            Pending::new(a.clone(), vec![1.0]),
+            Pending::new(b, vec![1.0]),
+        ];
+        assert!(w.process(&mut mixed).is_err());
+        assert_eq!(w.metrics().failed, 2);
+
+        let ghost = Arc::new(
+            RequestClass::new("ghost", "alf", 1, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let mut batch = vec![Pending::new(ghost, vec![1.0])];
+        assert!(w.process(&mut batch).is_err());
+        // a class whose width disagrees with the registered model is an
+        // error, not a panic inside the solve
+        let wide = Arc::new(
+            RequestClass::new("toy", "alf", 3, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let mut batch = vec![Pending::new(wide, vec![1.0, 2.0, 3.0])];
+        let err = w.process(&mut batch).unwrap_err();
+        assert!(err.to_string().contains("state width"), "{err}");
+        // a good batch still works afterwards (worker state intact)
+        let mut ok = vec![Pending::new(a, vec![1.0])];
+        w.process(&mut ok).unwrap();
+        assert_eq!(w.metrics().requests, 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut w = ServeWorker::new(registry(1));
+        w.process(&mut []).unwrap();
+        assert_eq!(w.metrics().batches, 0);
+    }
+
+    /// A failing batch is retried row by row, so every request gets its
+    /// own verdict (here: euler + adaptive is a per-solve error, so all
+    /// rows fail — each through its own solo retry, none stranded).
+    #[test]
+    fn batch_error_is_isolated_per_row() {
+        let reg = registry(1);
+        let class = Arc::new(
+            RequestClass::new(
+                "toy",
+                "euler",
+                1,
+                0.0,
+                1.0,
+                StepMode::adaptive(1e-4, 1e-6),
+                ObsGrid::none(),
+            )
+            .unwrap(),
+        );
+        let mut w = ServeWorker::new(reg);
+        let mut batch = vec![
+            Pending::new(class.clone(), vec![1.0]),
+            Pending::new(class.clone(), vec![2.0]),
+        ];
+        assert!(w.process(&mut batch).is_err());
+        assert_eq!(w.metrics().failed, 2, "each row failed individually");
+        assert_eq!(w.metrics().requests, 0);
+        // non-finite rows are rejected by the worker too (direct drive
+        // bypasses Server::submit's gate)
+        let fixed = Arc::new(
+            RequestClass::new("toy", "alf", 1, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, ObsGrid::none())
+                .unwrap(),
+        );
+        let mut batch = vec![Pending::new(fixed, vec![f32::NAN])];
+        let err = w.process(&mut batch).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+}

@@ -720,6 +720,29 @@ impl Solver for AlfSolver {
         BatchState::from_flat_zv(z0.to_vec(), v0, *spec)
     }
 
+    fn init_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) {
+        // Same arithmetic as `init_batch` (one batched v₀ = f(z₀, t₀)
+        // call) with every buffer recycled: `out` is re-shaped in place
+        // and the per-row time vector crosses the `&mut ws` boundary via
+        // the usual take/restore rule.
+        crate::solvers::workspace::shape_batch_state(out, spec.batch, spec.n_z, true);
+        out.z.data.copy_from_slice(z0);
+        let mut ts = std::mem::take(&mut ws.ts_in);
+        crate::solvers::workspace::ensure_f64(&mut ts, spec.batch);
+        ts.fill(t0);
+        let v = out.v.as_mut().expect("just shaped with v");
+        dynamics.f_batch_into(&ts, z0, spec, &mut v.data);
+        ws.ts_in = ts;
+    }
+
     fn step_batch(
         &self,
         dynamics: &dyn Dynamics,

@@ -187,6 +187,18 @@ impl BatchState {
         }
     }
 
+    /// Copy row `b`'s `z` (and, when present and requested, `v`) into
+    /// caller-owned slices — the response-export primitive of the serving
+    /// worker, which scatters a finished batch back to per-request
+    /// buffers without materializing intermediate [`State`]s.
+    pub fn copy_row_into(&self, b: usize, z_dst: &mut [f32], v_dst: Option<&mut [f32]>) {
+        let spec = self.spec();
+        z_dst.copy_from_slice(spec.row(&self.z.data, b));
+        if let (Some(v), Some(dst)) = (&self.v, v_dst) {
+            dst.copy_from_slice(spec.row(&v.data, b));
+        }
+    }
+
     /// Copy row `src_row` of `src` into row `dst` of `self`.
     pub fn copy_row_from(&mut self, dst: usize, src: &BatchState, src_row: usize) {
         let spec = self.spec();

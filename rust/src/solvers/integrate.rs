@@ -139,8 +139,10 @@ impl ObsGrid {
     }
 
     /// Check every observation lies in the open-closed span `(t0, t1]`,
-    /// ordered in the integration direction.
-    fn validate_for(&self, t0: f64, t1: f64) -> Result<()> {
+    /// ordered in the integration direction.  Crate-visible so the
+    /// serving layer can validate a request class once at construction
+    /// instead of per solve.
+    pub(crate) fn validate_for(&self, t0: f64, t1: f64) -> Result<()> {
         let dir = (t1 - t0).signum();
         for (k, &t) in self.times.iter().enumerate() {
             ensure!(
@@ -683,11 +685,11 @@ pub fn integrate_batch_ws(
 /// The workspace-path batched integration loop: identical decisions and
 /// arithmetic to [`integrate_batch_obs`] (which wraps it), but the
 /// ping-ponged batch states, the error buffer, gathered sub-batches and
-/// the solver's stage scratch are all borrowed from `ws`.  The lockstep
-/// fixed-grid loop and the all-rows-active adaptive phase are
-/// allocation-free in steady state; the per-iteration `f64` control
-/// vectors are reused across iterations.  The final state is left in
-/// [`BatchWorkspace::output`].
+/// the solver's stage scratch are all borrowed from `ws`.  Thin wrapper
+/// over [`integrate_batch_obs_stats_ws`] that allocates the returned
+/// per-sample stats vector; hot serve/train loops that must stay
+/// allocation-free call the `_stats_ws` entry point with a recycled
+/// vector instead.  The final state is left in [`BatchWorkspace::output`].
 #[allow(clippy::too_many_arguments)]
 pub fn integrate_batch_obs_ws(
     solver: &dyn Solver,
@@ -701,12 +703,101 @@ pub fn integrate_batch_obs_ws(
     obs: &mut dyn BatchStepObserver,
     ws: &mut BatchWorkspace,
 ) -> Result<BatchIntStats> {
+    let mut per = Vec::new();
+    let f_evals = integrate_batch_obs_stats_ws(
+        solver, dynamics, t0, t1, state0, mode, norm, grid, obs, &mut per, ws,
+    )?;
+    Ok(BatchIntStats {
+        per_sample: per,
+        f_evals,
+    })
+}
+
+/// Per-sample controller scratch of the batched loop, `mem::take`n out of
+/// the [`BatchWorkspace`] for the duration of a run (the loop passes
+/// `&mut ws` to the solver, so these buffers cannot stay behind that
+/// borrow) and restored afterwards — including on error paths, so a
+/// failed solve does not forfeit the warmed capacities.
+struct CtrlScratch {
+    ts_row: Vec<f64>,
+    hs_row: Vec<f64>,
+    t_cur: Vec<f64>,
+    h_cur: Vec<f64>,
+    h_free: Vec<f64>,
+    trials_cur: Vec<usize>,
+    accepted_idx: Vec<usize>,
+    next_obs_row: Vec<usize>,
+    aimed: Vec<bool>,
+    active: Vec<usize>,
+    still: Vec<usize>,
+}
+
+impl CtrlScratch {
+    fn take(ws: &mut BatchWorkspace) -> CtrlScratch {
+        CtrlScratch {
+            ts_row: std::mem::take(&mut ws.ts_row),
+            hs_row: std::mem::take(&mut ws.hs_row),
+            t_cur: std::mem::take(&mut ws.t_cur),
+            h_cur: std::mem::take(&mut ws.h_cur),
+            h_free: std::mem::take(&mut ws.h_free),
+            trials_cur: std::mem::take(&mut ws.trials_cur),
+            accepted_idx: std::mem::take(&mut ws.accepted_idx),
+            next_obs_row: std::mem::take(&mut ws.next_obs_row),
+            aimed: std::mem::take(&mut ws.aimed),
+            active: std::mem::take(&mut ws.active),
+            still: std::mem::take(&mut ws.still),
+        }
+    }
+
+    fn restore(self, ws: &mut BatchWorkspace) {
+        ws.ts_row = self.ts_row;
+        ws.hs_row = self.hs_row;
+        ws.t_cur = self.t_cur;
+        ws.h_cur = self.h_cur;
+        ws.h_free = self.h_free;
+        ws.trials_cur = self.trials_cur;
+        ws.accepted_idx = self.accepted_idx;
+        ws.next_obs_row = self.next_obs_row;
+        ws.aimed = self.aimed;
+        ws.active = self.active;
+        ws.still = self.still;
+    }
+}
+
+/// [`integrate_batch_obs_ws`] with the per-sample stats written into a
+/// caller-recycled vector (`per` is cleared and refilled; capacity is
+/// reused) instead of a freshly allocated [`BatchIntStats`].  Returns the
+/// batch `f`-evaluation total.
+///
+/// This is the fully pooled shape of the batched loop: the ping-ponged
+/// batch states, gathered sub-batches, the error buffer, the solver's
+/// stage scratch **and** the per-sample step-size-controller state
+/// (current times/steps, trial counts, barrier flags, the active mask)
+/// all come from `ws`, so a warmed call with stable shapes performs
+/// **zero** heap allocations in fixed mode, and in adaptive mode as long
+/// as the rows stay in lockstep (`tests/alloc_serve.rs` pins both for
+/// the serving loop).  Decisions and arithmetic are bit-identical to
+/// [`integrate_batch_obs`] by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch_obs_stats_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn BatchStepObserver,
+    per: &mut Vec<IntStats>,
+    ws: &mut BatchWorkspace,
+) -> Result<u64> {
     let spec = state0.spec();
     let nb = spec.batch;
-    let has_v = state0.v.is_some();
     let span = t1 - t0;
     let f0 = dynamics.counters().f_evals.get();
-    let mut per = vec![IntStats::default(); nb];
+    per.clear();
+    per.resize(nb, IntStats::default());
     if span == 0.0 {
         ensure!(
             grid.is_empty(),
@@ -714,12 +805,40 @@ pub fn integrate_batch_obs_ws(
         );
         let s = ws.take_batch_copy(state0);
         ws.set_output(s);
-        return Ok(BatchIntStats {
-            per_sample: per,
-            f_evals: 0,
-        });
+        return Ok(0);
     }
     grid.validate_for(t0, t1)?;
+    let mut c = CtrlScratch::take(ws);
+    let r = batched_obs_loop(
+        solver, dynamics, t0, t1, state0, mode, norm, grid, obs, per, &mut c, ws,
+    );
+    c.restore(ws);
+    r?;
+    Ok(dynamics.counters().f_evals.get() - f0)
+}
+
+/// The batched loop body behind [`integrate_batch_obs_stats_ws`];
+/// separated so the [`CtrlScratch`] take/restore pair brackets every
+/// return path.
+#[allow(clippy::too_many_arguments)]
+fn batched_obs_loop(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    t0: f64,
+    t1: f64,
+    state0: &BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    obs: &mut dyn BatchStepObserver,
+    per: &mut [IntStats],
+    c: &mut CtrlScratch,
+    ws: &mut BatchWorkspace,
+) -> Result<()> {
+    let spec = state0.spec();
+    let nb = spec.batch;
+    let has_v = state0.v.is_some();
+    let span = t1 - t0;
     let dir = span.signum();
     let k_total = grid.len();
     let mut state = ws.take_batch_copy(state0);
@@ -732,8 +851,8 @@ pub fn integrate_batch_obs_ws(
             // lockstep segments between observation times (see the solo
             // loop): all rows share the grid, so one batched solver step
             // per grid point and one observation sweep per segment end
-            let mut hs_row = vec![0.0f64; nb];
-            let mut ts_buf = vec![t0; nb];
+            super::workspace::ensure_f64(&mut c.hs_row, nb);
+            super::workspace::ensure_f64(&mut c.ts_row, nb);
             let mut next = ws.take_batch(nb, spec.n_z, has_v);
             let mut err = ws.take_err();
             let mut index = 0usize;
@@ -746,11 +865,11 @@ pub fn integrate_batch_obs_ws(
                 let seg_end = if seg < k_total { grid.time(seg) } else { t1 };
                 let n = ((seg_end - t_seg).abs() / h).ceil().max(1.0) as usize;
                 let hs = (seg_end - t_seg) / n as f64;
-                hs_row.fill(hs);
+                c.hs_row.fill(hs);
                 for i in 0..n {
-                    ts_buf.fill(t);
+                    c.ts_row.fill(t);
                     let _ = solver.step_batch_into(
-                        dynamics, &ts_buf, &hs_row, &state, &mut next, &mut err, ws,
+                        dynamics, &c.ts_row, &c.hs_row, &state, &mut next, &mut err, ws,
                     );
                     let row_bytes = next.row_bytes();
                     let t_end = if i + 1 == n { seg_end } else { t + hs };
@@ -816,30 +935,50 @@ pub fn integrate_batch_obs_ws(
             let p = solver.order() as f64;
             let eps = 1e-12 * span.abs().max(1.0);
             let h0 = h_init.abs().min(h_max).max(h_min) * dir;
-            // per-sample controller state — decision-identical to solo runs
-            let mut t_cur = vec![t0; nb];
-            let mut h_cur = vec![h0; nb];
-            let mut trials_cur = vec![0usize; nb];
-            let mut accepted_idx = vec![0usize; nb];
-            let mut next_obs = vec![0usize; nb];
-            let mut aimed = vec![false; nb];
-            let mut h_free = vec![h0; nb];
+            // per-sample controller state — decision-identical to solo
+            // runs; pooled in the workspace so a warmed batch re-solve
+            // never touches the allocator
+            use super::workspace::{ensure_f64, ensure_with};
+            ensure_f64(&mut c.t_cur, nb);
+            c.t_cur.fill(t0);
+            let t_cur = &mut c.t_cur;
+            ensure_f64(&mut c.h_cur, nb);
+            c.h_cur.fill(h0);
+            let h_cur = &mut c.h_cur;
+            ensure_with(&mut c.trials_cur, nb, 0usize);
+            c.trials_cur.fill(0);
+            let trials_cur = &mut c.trials_cur;
+            ensure_with(&mut c.accepted_idx, nb, 0usize);
+            c.accepted_idx.fill(0);
+            let accepted_idx = &mut c.accepted_idx;
+            ensure_with(&mut c.next_obs_row, nb, 0usize);
+            c.next_obs_row.fill(0);
+            let next_obs = &mut c.next_obs_row;
+            ensure_with(&mut c.aimed, nb, false);
+            c.aimed.fill(false);
+            let aimed = &mut c.aimed;
+            ensure_f64(&mut c.h_free, nb);
+            c.h_free.fill(h0);
+            let h_free = &mut c.h_free;
             // same entry condition as the solo loop: a sub-eps span means
             // zero steps
-            let mut active: Vec<usize> = if span.abs() > eps {
-                (0..nb).collect()
-            } else {
-                Vec::new()
-            };
+            c.active.clear();
+            if span.abs() > eps {
+                c.active.extend(0..nb);
+            }
+            let active = &mut c.active;
             // reused across iterations (capacity stabilizes after the
             // first pass)
-            let mut ts: Vec<f64> = Vec::new();
-            let mut hs: Vec<f64> = Vec::new();
-            let mut still: Vec<usize> = Vec::new();
+            c.ts_row.clear();
+            c.hs_row.clear();
+            c.still.clear();
+            let ts = &mut c.ts_row;
+            let hs = &mut c.hs_row;
+            let still = &mut c.still;
             while !active.is_empty() {
                 // rows opening a new step: fire exact-coincidence
                 // observations, then clamp to the nearest barrier
-                for &b in &active {
+                for &b in active.iter() {
                     if trials_cur[b] == 0 {
                         while next_obs[b] < k_total && grid.time(next_obs[b]) == t_cur[b] {
                             obs.on_observation(
@@ -873,7 +1012,7 @@ pub fn integrate_batch_obs_ws(
                 let mut err_sub = ws.take_err();
                 let has_err = if active.len() == nb {
                     solver.step_batch_into(
-                        dynamics, &ts, &hs, &state, &mut next_sub, &mut err_sub, ws,
+                        dynamics, ts, hs, &state, &mut next_sub, &mut err_sub, ws,
                     )
                 } else {
                     let mut sub = ws.take_batch(active.len(), spec.n_z, has_v);
@@ -881,7 +1020,7 @@ pub fn integrate_batch_obs_ws(
                         sub.copy_row_from(k, &state, b);
                     }
                     let r = solver.step_batch_into(
-                        dynamics, &ts, &hs, &sub, &mut next_sub, &mut err_sub, ws,
+                        dynamics, ts, hs, &sub, &mut next_sub, &mut err_sub, ws,
                     );
                     ws.put_batch(sub);
                     r
@@ -972,7 +1111,7 @@ pub fn integrate_batch_obs_ws(
                 }
                 ws.put_batch(next_sub);
                 ws.put_err(err_sub);
-                std::mem::swap(&mut active, &mut still);
+                std::mem::swap(active, still);
             }
             // a row's final accepted time may coincide with an observation
             for b in 0..nb {
@@ -996,12 +1135,8 @@ pub fn integrate_batch_obs_ws(
             }
         }
     }
-    let stats = BatchIntStats {
-        per_sample: per,
-        f_evals: dynamics.counters().f_evals.get() - f0,
-    };
     ws.set_output(state);
-    Ok(stats)
+    Ok(())
 }
 
 /// Per-sample accepted-grid recorder — what batched MALI keeps from the

@@ -288,6 +288,25 @@ pub trait Solver {
         }
     }
 
+    /// [`Solver::init_batch`] into a caller-recycled buffer: `out` is
+    /// re-shaped to `[spec.batch, spec.n_z]` and filled with the batched
+    /// initial state.  The default forwards to the allocating
+    /// [`Solver::init_batch`]; ALF and RK override it in place so a warm
+    /// serving loop can admit new requests without touching the allocator
+    /// (the `serve` worker's entry path).
+    fn init_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) {
+        let _ = ws;
+        *out = self.init_batch(dynamics, t0, z0, spec);
+    }
+
     /// Batched MALI backward micro-step into caller buffers.  The default
     /// composes [`Solver::invert_batch_into`] +
     /// [`Solver::step_vjp_batch_into`] — allocation-free whenever those
@@ -487,5 +506,34 @@ mod tests {
         let toy = LinearToy::new(2.0, 2);
         let s = by_name("alf").unwrap().init(&toy, 0.0, &[1.0, 3.0]);
         assert_eq!(s.v.unwrap(), vec![2.0, 6.0]);
+    }
+
+    /// The in-place batched init (the serve worker's admission path) is
+    /// bitwise the allocating `init_batch`, including re-shaping a
+    /// recycled buffer of the wrong shape / `v`-ness.
+    #[test]
+    fn init_batch_into_matches_init_batch() {
+        use crate::tensor::Tensor;
+        let toy = LinearToy::new(0.7, 2);
+        let spec = BatchSpec::new(3, 2);
+        let z0: Vec<f32> = (0..6).map(|i| 0.3 * i as f32 - 0.5).collect();
+        for name in ["alf", "dopri5"] {
+            let s = by_name(name).unwrap();
+            let reference = s.init_batch(&toy, 0.25, &z0, &spec);
+            let mut ws = workspace::BatchWorkspace::new();
+            // start from a deliberately mis-shaped recycled buffer
+            let mut out = BatchState {
+                z: Tensor {
+                    data: vec![9.0; 4],
+                    shape: vec![2, 2],
+                },
+                v: name.starts_with('d').then(|| Tensor {
+                    data: vec![9.0; 4],
+                    shape: vec![2, 2],
+                }),
+            };
+            s.init_batch_into(&toy, 0.25, &z0, &spec, &mut out, &mut ws);
+            assert_eq!(out, reference, "{name}");
+        }
     }
 }

@@ -375,6 +375,20 @@ impl Solver for RkSolver {
         BatchState::from_flat(z0.to_vec(), *spec)
     }
 
+    fn init_batch_into(
+        &self,
+        _dynamics: &dyn Dynamics,
+        _t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+        out: &mut BatchState,
+        _ws: &mut BatchWorkspace,
+    ) {
+        // Plain RK state: just `z₀` rows, no auxiliary buffer.
+        crate::solvers::workspace::shape_batch_state(out, spec.batch, spec.n_z, false);
+        out.z.data.copy_from_slice(z0);
+    }
+
     fn step_batch(
         &self,
         dynamics: &dyn Dynamics,

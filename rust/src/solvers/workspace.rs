@@ -5,11 +5,16 @@
 //! `Vec<f32>` per stage evaluation, so steps/sec was bounded by the
 //! allocator rather than the FLOPs.  A [`SolverWorkspace`] (and its
 //! batched sibling [`BatchWorkspace`]) owns every buffer those loops
-//! need — stage scratch, ψ/ψ⁻¹ intermediates, error vectors, and the
-//! recyclable state buffers the integration loops ping-pong between — so
-//! that after warm-up one accepted step performs **zero** heap
+//! need — stage scratch, ψ/ψ⁻¹ intermediates, error vectors, the
+//! recyclable state buffers the integration loops ping-pong between,
+//! and (batched) the per-sample step-size-controller vectors of the
+//! multi-observation loop
+//! ([`integrate_batch_obs_stats_ws`](crate::solvers::integrate::integrate_batch_obs_stats_ws))
+//! — so that after warm-up one accepted step performs **zero** heap
 //! allocations (asserted by `tests/alloc_steady.rs` with a counting
-//! global allocator).
+//! global allocator), and the online serving loop re-solves whole warmed
+//! batches without touching the allocator at all
+//! (`tests/alloc_serve.rs`; see [`crate::serve`]).
 //!
 //! # Workspace contract
 //!
@@ -49,6 +54,17 @@ pub(crate) fn ensure_f64(buf: &mut Vec<f64>, n: usize) {
     if buf.len() != n {
         buf.clear();
         buf.resize(n, 0.0);
+    }
+}
+
+/// Grow-once resize for arbitrary `Clone` scratch (per-sample controller
+/// state: trial counts, barrier flags, …).  Same steady-state guarantee as
+/// [`ensure`]: a call with an unchanged length never touches the
+/// allocator.
+pub(crate) fn ensure_with<T: Clone>(buf: &mut Vec<T>, n: usize, fill: T) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, fill);
     }
 }
 
@@ -238,7 +254,10 @@ pub(crate) fn shape_batch_state(dst: &mut BatchState, batch: usize, n_z: usize, 
 }
 
 /// Preallocated scratch + recyclable buffers for the batched (`[B, N_z]`)
-/// solver/grad hot paths — the flat-buffer mirror of [`SolverWorkspace`].
+/// solver/grad/serve hot paths — the flat-buffer mirror of
+/// [`SolverWorkspace`], extended with the per-sample controller scratch
+/// the batched integration loop needs (one warm workspace per serving
+/// worker is what keeps the steady-state serve loop allocation-free).
 #[derive(Debug)]
 pub struct BatchWorkspace {
     // ---- named ψ/ψ⁻¹/ψ-vjp scratch (ALF, flat `[B·N_z]`) ----------------
@@ -253,6 +272,25 @@ pub struct BatchWorkspace {
     pub(crate) coeffs: Vec<f32>,
     pub(crate) s1s: Vec<f64>,
     pub(crate) ts_in: Vec<f64>,
+    // ---- batched-loop per-sample controller scratch ---------------------
+    //
+    // The `integrate_batch_obs_stats_ws` loop keeps one step-size
+    // controller per sample; these vectors hold that per-row state so a
+    // warmed serve/grad loop re-runs the whole batched solve without
+    // touching the allocator.  They are `mem::take`n out of the workspace
+    // for the duration of a run (the loop passes `&mut ws` to the solver)
+    // and restored on the way out — the same crossing rule as `ts_in`.
+    pub(crate) ts_row: Vec<f64>,
+    pub(crate) hs_row: Vec<f64>,
+    pub(crate) t_cur: Vec<f64>,
+    pub(crate) h_cur: Vec<f64>,
+    pub(crate) h_free: Vec<f64>,
+    pub(crate) trials_cur: Vec<usize>,
+    pub(crate) accepted_idx: Vec<usize>,
+    pub(crate) next_obs_row: Vec<usize>,
+    pub(crate) aimed: Vec<bool>,
+    pub(crate) active: Vec<usize>,
+    pub(crate) still: Vec<usize>,
     // ---- RK per-stage buffers (flat `[B·N_z]` each) ---------------------
     pub(crate) ks: Vec<Vec<f32>>,
     pub(crate) ys: Vec<Vec<f32>>,
@@ -287,6 +325,17 @@ impl BatchWorkspace {
             coeffs: Vec::new(),
             s1s: Vec::new(),
             ts_in: Vec::new(),
+            ts_row: Vec::new(),
+            hs_row: Vec::new(),
+            t_cur: Vec::new(),
+            h_cur: Vec::new(),
+            h_free: Vec::new(),
+            trials_cur: Vec::new(),
+            accepted_idx: Vec::new(),
+            next_obs_row: Vec::new(),
+            aimed: Vec::new(),
+            active: Vec::new(),
+            still: Vec::new(),
             ks: Vec::new(),
             ys: Vec::new(),
             a_k: Vec::new(),

@@ -51,6 +51,21 @@ pub fn time_until<F: FnMut()>(min_time_s: f64, mut f: F) -> Timing {
     summarize(&samples)
 }
 
+/// Exact quantile `q ∈ [0, 1]` of raw samples: nearest-rank on a copy
+/// sorted by IEEE total order (`f64::total_cmp`, so NaN inputs land at
+/// the ends instead of breaking the sort).  The serving bench (E12) uses
+/// this for client-observed p50/p99 latency — exact, unlike the workers'
+/// online log-bucket histograms ([`crate::serve::LatencyHistogram`]).
+pub fn quantile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
 fn summarize(samples: &[f64]) -> Timing {
     let n = samples.len().max(1) as f64;
     let mean = samples.iter().sum::<f64>() / n;
@@ -170,5 +185,20 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("test", &["a", "b"]);
         t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.5), 50.0);
+        assert_eq!(quantile(&xs, 0.99), 99.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        // order-independent
+        let mut rev = xs.clone();
+        rev.reverse();
+        assert_eq!(quantile(&rev, 0.5), 50.0);
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile(&[7.0], 0.99), 7.0);
     }
 }

@@ -1,0 +1,66 @@
+//! The ONE counting global allocator shared by every allocation-
+//! accounting binary (`tests/alloc_steady.rs`, `tests/alloc_serve.rs`,
+//! `benches/perf_hotpath.rs` — each pulls this file in with `#[path]`).
+//!
+//! Counting rules (keep them here, in one place, so the zero-allocation
+//! gates cannot silently diverge between binaries):
+//!
+//! * every allocation path counts one call — `alloc`, `alloc_zeroed`
+//!   and `realloc` alike (a realloc is new allocator traffic even when
+//!   it moves nothing);
+//! * bytes are the requested size (`layout.size()`; for `realloc` the
+//!   `new_size`), so bytes/step can be attributed per configuration;
+//! * `dealloc` is deliberately uncounted — the gates pin *pressure on
+//!   the allocator*, and frees of warm-up buffers would only blur that.
+//!
+//! Each binary still declares its own `#[global_allocator] static`
+//! (rustc requires the registration per crate); only the type and the
+//! counters live here.
+
+#![allow(dead_code)] // each including binary uses a subset
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting wrapper over the system allocator (see module docs).
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation calls so far.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// `(calls, bytes)` snapshot.
+pub fn alloc_snapshot() -> (u64, u64) {
+    (
+        ALLOCS.load(Ordering::Relaxed),
+        ALLOC_BYTES.load(Ordering::Relaxed),
+    )
+}

@@ -1,0 +1,244 @@
+//! Serving-layer integration tests — the two acceptance properties of
+//! the online inference layer plus end-to-end behaviour of the threaded
+//! server:
+//!
+//! * **serve-vs-direct equivalence** — a coalesced micro-batch of K
+//!   requests returns **bitwise** the same trajectories (final states,
+//!   observation snapshots, step/trial counts) as K solo
+//!   `integrate_obs` calls, fixed and adaptive, because the batched
+//!   loop is decision-identical per row and micro-batching is therefore
+//!   a pure scheduling change;
+//! * **queue saturation** — under overload the server's memory stays
+//!   bounded at the queue capacity and every rejected submission gets
+//!   an explicit shed error (no silent buffering, no blocking).
+
+use mali_ode::serve::{
+    ModelRegistry, Pending, RequestClass, Server, ServerConfig, ServeWorker, SubmitError,
+};
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::integrate::{integrate_obs, ErrorNorm, ObsGrid, StepMode, StepObserver};
+use mali_ode::solvers::State;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_Z: usize = 4;
+const ALPHA: f64 = -0.35;
+
+/// Captures the solo trajectory's observation states into a flat
+/// `[K, n_z]` buffer — the same layout the serve response uses.
+struct SoloObs {
+    n_z: usize,
+    obs: Vec<f32>,
+}
+
+impl StepObserver for SoloObs {
+    fn on_observation(&mut self, k: usize, _t: f64, state: &State) {
+        self.obs[k * self.n_z..(k + 1) * self.n_z].copy_from_slice(&state.z);
+    }
+}
+
+fn registry() -> Arc<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    reg.register("toy", Box::new(LinearToy::new(ALPHA, N_Z)));
+    Arc::new(reg)
+}
+
+fn request_rows(k: usize) -> Vec<Vec<f32>> {
+    // heterogeneous row scales (the tiny rows are atol-dominated) so
+    // per-sample adaptive controllers genuinely take different grids
+    const SCALES: [f32; 5] = [0.001, 0.4, 1.0, 5.0, 20.0];
+    (0..k)
+        .map(|i| {
+            let s = SCALES[i % SCALES.len()];
+            (0..N_Z).map(|j| s * (1.0 + 0.17 * j as f32)).collect()
+        })
+        .collect()
+}
+
+/// Solo reference: one allocating `integrate_obs` call, plus the
+/// observation snapshots and step stats — what each request would have
+/// gotten with a private integration.
+fn solo_reference(
+    class: &RequestClass,
+    z0: &[f32],
+) -> (Vec<f32>, Vec<f32>, usize, usize) {
+    let toy = LinearToy::new(ALPHA, N_Z);
+    let solver = solver_by_name(&class.solver).unwrap();
+    let s0 = solver.init(&toy, class.t0, z0);
+    let mut obs = SoloObs {
+        n_z: N_Z,
+        obs: vec![0.0; class.grid.len() * N_Z],
+    };
+    let (sf, stats) = integrate_obs(
+        &*solver,
+        &toy,
+        class.t0,
+        class.t1,
+        s0,
+        &class.mode,
+        &ErrorNorm::Full,
+        &class.grid,
+        &mut obs,
+    )
+    .unwrap();
+    (sf.z, obs.obs, stats.n_accepted, stats.n_trials)
+}
+
+fn class_for(mode: StepMode) -> Arc<RequestClass> {
+    let grid = ObsGrid::new(vec![0.31, 0.5, 1.0]).unwrap();
+    Arc::new(RequestClass::new("toy", "alf", N_Z, 0.0, 1.0, mode, grid).unwrap())
+}
+
+/// A coalesced batch of K requests is bitwise identical to K solo
+/// integrations — final states, observation states, steps and trials —
+/// in both stepping modes.
+#[test]
+fn coalesced_batch_bitwise_equals_solo() {
+    for mode in [StepMode::Fixed { h: 0.07 }, StepMode::adaptive(1e-4, 1e-6)] {
+        let class = class_for(mode.clone());
+        let rows = request_rows(5);
+        let mut worker = ServeWorker::new(registry());
+        let mut batch: Vec<Pending> = rows
+            .iter()
+            .map(|z0| Pending::new(class.clone(), z0.clone()))
+            .collect();
+        worker.process(&mut batch).unwrap();
+        for (p, z0) in batch.iter().zip(&rows) {
+            let (z_solo, obs_solo, acc, trials) = solo_reference(&class, z0);
+            assert_eq!(p.z_final, z_solo, "final state bitwise ({mode:?})");
+            assert_eq!(p.obs, obs_solo, "observation states bitwise ({mode:?})");
+            assert_eq!(p.n_accepted, acc, "accepted steps ({mode:?})");
+            assert_eq!(p.n_trials, trials, "controller trials ({mode:?})");
+        }
+        // heterogeneous rows under adaptive control genuinely took
+        // different grids — the equivalence above is not vacuous
+        if matches!(mode, StepMode::Adaptive { .. }) {
+            assert!(
+                batch.iter().any(|p| p.n_accepted != batch[0].n_accepted),
+                "expected per-sample adaptive grids to diverge"
+            );
+        }
+    }
+}
+
+/// The full threaded pipeline (queue → batcher → workers → response
+/// slots) returns the same bitwise trajectories, with every request
+/// accounted for in the metrics.
+#[test]
+fn threaded_server_matches_solo_bitwise() {
+    let class = class_for(StepMode::adaptive(1e-4, 1e-6));
+    let rows = request_rows(12);
+    let server = Server::start(
+        registry(),
+        ServerConfig {
+            queue_capacity: 64,
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            workers: 2,
+        },
+    );
+    // submit everything first so the batcher has real coalescing to do
+    let handles: Vec<_> = rows
+        .iter()
+        .map(|z0| server.submit(&class, z0).expect("admitted"))
+        .collect();
+    for (handle, z0) in handles.into_iter().zip(&rows) {
+        let resp = handle.wait().unwrap();
+        let (z_solo, obs_solo, acc, trials) = solo_reference(&class, z0);
+        assert_eq!(resp.z_final, z_solo, "final state bitwise through the server");
+        assert_eq!(resp.obs, obs_solo, "observation states bitwise");
+        assert_eq!(resp.n_accepted, acc);
+        assert_eq!(resp.n_trials, trials);
+        assert!(resp.queue_wait_s >= 0.0 && resp.service_s > 0.0);
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 12);
+    assert_eq!(metrics.failed, 0);
+    assert!(metrics.batches <= 12, "some coalescing bookkeeping");
+    assert!(metrics.batch_occupancy() >= 1.0);
+    assert_eq!(metrics.total.count(), 12);
+}
+
+/// Interleaved incompatible classes never share a batch and each
+/// request still gets its own class's exact trajectory.
+#[test]
+fn mixed_classes_are_served_separately_and_correctly() {
+    let fixed = class_for(StepMode::Fixed { h: 0.05 });
+    let adaptive = class_for(StepMode::adaptive(1e-4, 1e-6));
+    let rows = request_rows(6);
+    let server = Server::start(
+        registry(),
+        ServerConfig {
+            queue_capacity: 64,
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            workers: 1,
+        },
+    );
+    let handles: Vec<_> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, z0)| {
+            let class = if i % 2 == 0 { &fixed } else { &adaptive };
+            (i, server.submit(class, z0).expect("admitted"))
+        })
+        .collect();
+    for (i, handle) in handles {
+        let class = if i % 2 == 0 { &fixed } else { &adaptive };
+        let resp = handle.wait().unwrap();
+        let (z_solo, obs_solo, acc, _) = solo_reference(class, &rows[i]);
+        assert_eq!(resp.z_final, z_solo, "request {i} final state");
+        assert_eq!(resp.obs, obs_solo, "request {i} observations");
+        assert_eq!(resp.n_accepted, acc, "request {i} steps");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 6);
+    assert_eq!(metrics.failed, 0);
+}
+
+/// Overload policy: the queue never holds more than `capacity` requests
+/// (bounded memory), every rejected submission is an explicit
+/// `Overloaded` error, the shed count is exact, and draining resumes
+/// normal service.
+#[test]
+fn queue_saturation_bounds_memory_and_sheds_explicitly() {
+    let class = class_for(StepMode::Fixed { h: 0.05 });
+    // paused server: nothing drains, so saturation is deterministic
+    let server = Server::start(
+        registry(),
+        ServerConfig {
+            queue_capacity: 4,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 0,
+        },
+    );
+    let z0 = vec![1.0f32; N_Z];
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..10 {
+        match server.submit(&class, &z0) {
+            Ok(h) => admitted.push(h),
+            Err(SubmitError::Overloaded { capacity }) => {
+                assert_eq!(capacity, 4);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        assert!(server.queue_depth() <= 4, "queue depth bounded at capacity");
+    }
+    assert_eq!(admitted.len(), 4, "exactly capacity requests admitted");
+    assert_eq!(shed, 6, "every overflow submission shed explicitly");
+    assert_eq!(server.shed_count(), 6);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.shed, 6, "shed count folded into the shutdown metrics");
+    assert_eq!(metrics.failed, 4, "pending requests failed loudly at shutdown");
+    for h in admitted {
+        let err = h.wait().unwrap_err();
+        assert!(
+            err.to_string().contains("shut down"),
+            "waiter got the shutdown error, not a hang: {err}"
+        );
+    }
+}
