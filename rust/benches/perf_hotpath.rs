@@ -13,6 +13,16 @@
 //!   arithmetic (the wrappers delegate to the `_into` kernels), so the
 //!   ratio isolates pure allocator cost; the acceptance bar is ≥ 2× on
 //!   the small-`N_z` solo fixed-grid config.
+//! * **tensor kernels** — elements/sec for the flat-buffer kernels
+//!   (`axpy_rows`, `add_scaled_rows_into`, `lincomb_into`,
+//!   `matmul_into`) through the chunked dispatch path vs the frozen
+//!   `tensor::scalar` oracle, at `n_z ∈ {4, 64}`; the JSON records
+//!   whether the build had the `simd` feature (`simd_feature`) so rows
+//!   from different builds are never compared blind.
+//! * **intra-batch sharding** — row-steps/sec of the sharded batched
+//!   integrator (`integrate_batch_obs_stats_sharded`) at
+//!   shards ∈ {1, 2, 4} on a persistent `WorkerPool`, `n_z ∈ {4, 64}`,
+//!   with the speedup over the 1-shard run.
 //! * **end-to-end grads** — steps/sec, heap allocations/step and heap
 //!   bytes/step (via a counting global allocator) for
 //!   solo/batch × fixed/adaptive × all four gradient methods on the E1
@@ -22,14 +32,20 @@
 //! short CI windows; `MALI_BENCH_OUT` overrides the JSON path).
 
 use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
-use mali_ode::solvers::batch::BatchSpec;
+use mali_ode::solvers::batch::{BatchSpec, BatchState};
 use mali_ode::solvers::by_name as solver_by_name;
 use mali_ode::solvers::dynamics::LinearToy;
-use mali_ode::solvers::workspace::SolverWorkspace;
+use mali_ode::solvers::integrate::{
+    integrate_batch_obs_stats_sharded, BatchShards, ErrorNorm, ObsGrid, StepMode,
+};
+use mali_ode::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use mali_ode::solvers::{Solver, State};
+use mali_ode::tensor;
 use mali_ode::util::bench::{time_until, Table};
 use mali_ode::util::json::Json;
 use mali_ode::util::mem::MemTracker;
+use mali_ode::util::pool::WorkerPool;
+use mali_ode::util::rng::Rng;
 // The counting allocator (calls + bytes) is shared with the
 // tests/alloc_*.rs binaries so the counting rules cannot diverge.
 #[path = "../tests/common/counting_alloc.rs"]
@@ -144,6 +160,19 @@ fn measure_config(
     ));
 }
 
+/// Time two closures (scalar oracle vs dispatch kernel) and convert to
+/// elements/sec; returns `(scalar_per_sec, dispatch_per_sec)`.
+fn ab_throughput(
+    budget: f64,
+    elems: f64,
+    scalar: impl FnMut(),
+    dispatch: impl FnMut(),
+) -> (f64, f64) {
+    let ts = time_until(budget, scalar);
+    let td = time_until(budget, dispatch);
+    (elems / ts.min_s, elems / td.min_s)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let budget = if smoke { 0.15 } else { 0.8 };
@@ -215,6 +244,191 @@ fn main() {
                 ),
             ]),
         ));
+    }
+
+    // ---- tensor kernels: chunked/SIMD dispatch vs scalar oracle ---------
+    // Same arithmetic by the bitwise contract (tests/prop_kernels.rs);
+    // this measures what the dispatch layer buys.  Units: elements/sec
+    // for the elementwise kernels, multiply-accumulates/sec for matmul.
+    let simd_on = if tensor::simd_enabled() { "on" } else { "off" };
+    let mut tensor_rows: Vec<(String, Json)> = Vec::new();
+    for &(label, n_z) in &[("n_z=4", 4usize), ("n_z=64", 64usize)] {
+        let b = 32usize;
+        let flat = b * n_z;
+        let reps = 32usize;
+        let mut rng = Rng::new(42);
+        let mut fill = |n: usize, lo: f64, hi: f64| -> Vec<f32> {
+            (0..n).map(|_| rng.range(lo, hi) as f32).collect()
+        };
+        let x = fill(flat, -1.0, 1.0);
+        let w1 = fill(flat, -1.0, 1.0);
+        let w2 = fill(flat, -1.0, 1.0);
+        let w3 = fill(flat, -1.0, 1.0);
+        // tiny coefficients keep the accumulating axpy buffers bounded
+        // over the many timed repetitions
+        let coeffs = fill(b, -1e-4, 1e-4);
+        let bmat = fill(n_z * n_z, -1.0, 1.0);
+        let mut ys = x.clone();
+        let mut yd = x.clone();
+        let mut out_s = vec![0.0f32; flat];
+        let mut out_d = vec![0.0f32; flat];
+        let mut mm_s = vec![0.0f32; flat];
+        let mut mm_d = vec![0.0f32; flat];
+        let terms = [
+            (0.3f32, x.as_slice()),
+            (0.25f32, w1.as_slice()),
+            (-0.5f32, w2.as_slice()),
+            (1.0f32, w3.as_slice()),
+        ];
+
+        let mut kernels: Vec<(String, Json)> = Vec::new();
+        let record = |name: &str, sc: f64, di: f64, kernels: &mut Vec<(String, Json)>| {
+            println!(
+                "tensor {label} {name}: scalar {sc:.3e}/s dispatch {di:.3e}/s \
+                 ({:.2}x, simd {simd_on})",
+                di / sc
+            );
+            kernels.push((
+                name.to_string(),
+                Json::obj(vec![
+                    ("scalar_per_sec", Json::Num(sc)),
+                    ("dispatch_per_sec", Json::Num(di)),
+                    ("speedup_dispatch_vs_scalar", Json::Num(di / sc)),
+                ]),
+            ));
+        };
+
+        let (sc, di) = ab_throughput(
+            budget,
+            (reps * flat) as f64,
+            || {
+                for _ in 0..reps {
+                    tensor::scalar::axpy_rows(&coeffs, &x, &mut ys, n_z);
+                }
+            },
+            || {
+                for _ in 0..reps {
+                    tensor::axpy_rows(&coeffs, &x, &mut yd, n_z);
+                }
+            },
+        );
+        record("axpy_rows", sc, di, &mut kernels);
+
+        let (sc, di) = ab_throughput(
+            budget,
+            (reps * flat) as f64,
+            || {
+                for _ in 0..reps {
+                    tensor::scalar::add_scaled_rows_into(&x, &coeffs, &w1, n_z, &mut out_s);
+                }
+            },
+            || {
+                for _ in 0..reps {
+                    tensor::add_scaled_rows_into(&x, &coeffs, &w1, n_z, &mut out_d);
+                }
+            },
+        );
+        record("add_scaled_rows_into", sc, di, &mut kernels);
+
+        let (sc, di) = ab_throughput(
+            budget,
+            (reps * flat) as f64,
+            || {
+                for _ in 0..reps {
+                    tensor::scalar::lincomb_into(&terms, &mut out_s);
+                }
+            },
+            || {
+                for _ in 0..reps {
+                    tensor::lincomb_into(&terms, &mut out_d);
+                }
+            },
+        );
+        record("lincomb_into", sc, di, &mut kernels);
+
+        let (sc, di) = ab_throughput(
+            budget,
+            (reps * b * n_z * n_z) as f64,
+            || {
+                for _ in 0..reps {
+                    tensor::scalar::matmul_into(&x, &bmat, b, n_z, n_z, &mut mm_s);
+                }
+            },
+            || {
+                for _ in 0..reps {
+                    tensor::matmul_into(&x, &bmat, b, n_z, n_z, &mut mm_d);
+                }
+            },
+        );
+        record("matmul_into", sc, di, &mut kernels);
+
+        std::hint::black_box((&ys, &yd, &out_s, &out_d, &mm_s, &mm_d));
+        tensor_rows.push((label.to_string(), Json::Obj(kernels.into_iter().collect())));
+    }
+
+    // ---- intra-batch sharding: row-steps/sec at shards ∈ {1, 2, 4} ------
+    // Bitwise the same result at every shard count (the equivalence
+    // suite pins it); this measures the wall-clock knob.
+    let mut shard_rows: Vec<(String, Json)> = Vec::new();
+    for &(label, n_z) in &[("n_z=4", 4usize), ("n_z=64", 64usize)] {
+        let b = 32usize;
+        let toy = LinearToy::new(-0.3, n_z);
+        let solver = solver_by_name("alf").unwrap();
+        let states: Vec<State> = (0..b)
+            .map(|r| {
+                let scale = 1.0 + 0.005 * r as f32;
+                let z0: Vec<f32> = (0..n_z).map(|i| scale * (1.0 + 0.01 * i as f32)).collect();
+                solver.init(&toy, 0.0, &z0)
+            })
+            .collect();
+        let refs: Vec<&State> = states.iter().collect();
+        let state0 = BatchState::from_states(&refs);
+        let mode = StepMode::Fixed { h: 0.01 };
+        let mut base_sps = 0.0f64;
+        let mut cells: Vec<(String, Json)> = Vec::new();
+        for &s in &[1usize, 2, 4] {
+            let mut shards = BatchShards::new(s);
+            let pool = if s > 1 { Some(WorkerPool::new(s - 1)) } else { None };
+            let mut ws = BatchWorkspace::new();
+            let mut per = Vec::new();
+            let mut run = || {
+                integrate_batch_obs_stats_sharded(
+                    &*solver,
+                    &toy,
+                    0.0,
+                    1.0,
+                    &state0,
+                    &mode,
+                    &ErrorNorm::Full,
+                    &ObsGrid::none(),
+                    |_, _| (),
+                    &mut per,
+                    &mut shards,
+                    &mut ws,
+                    pool.as_ref(),
+                )
+                .unwrap();
+                per.iter().map(|p| p.n_accepted as u64).sum::<u64>()
+            };
+            let row_steps = run().max(1);
+            let t = time_until(budget, || {
+                std::hint::black_box(run());
+            });
+            let sps = row_steps as f64 / t.min_s;
+            if s == 1 {
+                base_sps = sps;
+            }
+            let speedup = sps / base_sps;
+            println!("shards {label} x{s}: {sps:.3e} row-steps/s ({speedup:.2}x vs 1 shard)");
+            cells.push((
+                format!("shards={s}"),
+                Json::obj(vec![
+                    ("row_steps_per_sec", Json::Num(sps)),
+                    ("speedup_vs_1shard", Json::Num(speedup)),
+                ]),
+            ));
+        }
+        shard_rows.push((label.to_string(), Json::Obj(cells.into_iter().collect())));
     }
 
     // ---- end-to-end gradient configurations -----------------------------
@@ -295,8 +509,20 @@ fn main() {
             Json::Str(if smoke { "measured-smoke" } else { "measured" }.into()),
         );
         map.insert(
+            "simd_feature".into(),
+            Json::Bool(tensor::simd_enabled()),
+        );
+        map.insert(
             "kernel".into(),
             Json::Obj(speedups.into_iter().collect()),
+        );
+        map.insert(
+            "tensor".into(),
+            Json::Obj(tensor_rows.into_iter().collect()),
+        );
+        map.insert(
+            "shards".into(),
+            Json::Obj(shard_rows.into_iter().collect()),
         );
         map.insert(
             "configs".into(),

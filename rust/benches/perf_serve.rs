@@ -1,5 +1,6 @@
 //! Bench target for E12 — the online-serving latency/throughput grid
-//! (see DESIGN.md §5/§10): dynamic micro-batching vs solo vs naive
+//! (see DESIGN.md §5/§10): dynamic micro-batching (plus intra-batch
+//! sharding at shards ∈ {2, 4}) vs solo vs naive
 //! one-request-one-integration, fixed and adaptive stepping.
 //! Run with `cargo bench --bench perf_serve` (add `-- --full` for the
 //! EXPERIMENTS.md scale); `runs/serve.json` is the artifact CI uploads

@@ -13,7 +13,11 @@
 //!   (`max_batch = 1`): isolates the cost of the queue hop and the
 //!   benefit of warm per-worker workspaces;
 //! * **coalesced** — dynamic micro-batching (`max_batch = 32`): queued
-//!   compatible requests ride one batched solve.
+//!   compatible requests ride one batched solve;
+//! * **coalesced-sh2 / coalesced-sh4** — coalesced plus intra-batch
+//!   sharding (`ServerConfig::shards` ∈ {2, 4}): each micro-batch is
+//!   split into contiguous row ranges solved concurrently, with bitwise
+//!   the same responses — the p99 column is where the latency win lands.
 //!
 //! Reported per config: client-observed p50/p99/mean latency (exact,
 //! via [`bench::quantile`] over raw samples), requests/sec, solver
@@ -112,7 +116,10 @@ fn run_naive(mode: &StepMode, clients: usize, requests: usize, seed: u64) -> Res
     })
 }
 
-/// Server-backed strategies: `max_batch = 1` (solo) or > 1 (coalesced).
+/// Server-backed strategies: `max_batch = 1` (solo) or > 1 (coalesced);
+/// `shards > 1` additionally splits every micro-batch across intra-batch
+/// shard workers (bitwise the same responses — sharding is a pure
+/// latency knob, the E12 p99 column is where it shows).
 fn run_served(
     mode: &StepMode,
     clients: usize,
@@ -120,6 +127,7 @@ fn run_served(
     seed: u64,
     max_batch: usize,
     workers: usize,
+    shards: usize,
 ) -> Result<CellResult> {
     let mut registry = ModelRegistry::new();
     registry.register("lin8", Box::new(LinearToy::new(ALPHA, N_Z)));
@@ -130,6 +138,7 @@ fn run_served(
             max_batch,
             max_wait: Duration::from_micros(500),
             workers,
+            shards,
         },
     );
     let class = Arc::new(RequestClass::new(
@@ -206,11 +215,13 @@ pub fn serve_bench(scale: Scale, seed: u64) -> Result<Json> {
     for adaptive in [false, true] {
         let mode = mk_mode(adaptive);
         let mode_name = if adaptive { "adaptive" } else { "fixed" };
-        for strategy in ["naive", "solo", "coalesced"] {
+        for strategy in ["naive", "solo", "coalesced", "coalesced-sh2", "coalesced-sh4"] {
             let cell = match strategy {
                 "naive" => run_naive(&mode, clients, requests, seed)?,
-                "solo" => run_served(&mode, clients, requests, seed, 1, workers)?,
-                _ => run_served(&mode, clients, requests, seed, 32, workers)?,
+                "solo" => run_served(&mode, clients, requests, seed, 1, workers, 1)?,
+                "coalesced" => run_served(&mode, clients, requests, seed, 32, workers, 1)?,
+                "coalesced-sh2" => run_served(&mode, clients, requests, seed, 32, workers, 2)?,
+                _ => run_served(&mode, clients, requests, seed, 32, workers, 4)?,
             };
             let n = cell.latencies_s.len();
             let p50 = quantile(&cell.latencies_s, 0.50) * 1e3;
@@ -275,12 +286,16 @@ mod tests {
         let naive = run_naive(&mode, 2, 8, 7).unwrap();
         assert_eq!(naive.latencies_s.len(), 16);
         assert!(naive.steps >= 16 * 100); // 100 fixed steps per request
-        let solo = run_served(&mode, 2, 8, 7, 1, 1).unwrap();
+        let solo = run_served(&mode, 2, 8, 7, 1, 1, 1).unwrap();
         assert_eq!(solo.latencies_s.len(), 16);
         assert_eq!(solo.occupancy, 1.0, "max_batch = 1 never coalesces");
-        let coal = run_served(&mode, 2, 8, 7, 8, 1).unwrap();
+        let coal = run_served(&mode, 2, 8, 7, 8, 1, 1).unwrap();
         assert_eq!(coal.latencies_s.len(), 16);
         assert!(coal.occupancy >= 1.0);
         assert_eq!(coal.shed, 0, "closed-loop load never saturates the queue");
+        // sharded serving is the same stream, same step totals
+        let sh = run_served(&mode, 2, 8, 7, 8, 1, 2).unwrap();
+        assert_eq!(sh.latencies_s.len(), 16);
+        assert_eq!(sh.steps, coal.steps, "sharding must not change step counts");
     }
 }

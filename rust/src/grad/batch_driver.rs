@@ -260,9 +260,8 @@ pub fn grad_batched_pooled(
         bspec.batch,
         bspec.n_z
     );
-    let per = bspec.batch.div_ceil(workers);
-    let shards: Vec<(usize, usize)> = (0..workers)
-        .map(|w| (w * per, ((w + 1) * per).min(bspec.batch)))
+    // same balanced contiguous split as the serve layer's intra-batch shards
+    let shards: Vec<(usize, usize)> = pool::shard_ranges(bspec.batch, workers)
         .filter(|(s, e)| e > s)
         .collect();
     let c = dynamics.counters();
@@ -405,9 +404,8 @@ pub fn grad_obs_batched_pooled(
         bspec.batch,
         bspec.n_z
     );
-    let per = bspec.batch.div_ceil(workers);
-    let shards: Vec<(usize, usize)> = (0..workers)
-        .map(|w| (w * per, ((w + 1) * per).min(bspec.batch)))
+    // same balanced contiguous split as the serve layer's intra-batch shards
+    let shards: Vec<(usize, usize)> = pool::shard_ranges(bspec.batch, workers)
         .filter(|(s, e)| e > s)
         .collect();
     let c = dynamics.counters();

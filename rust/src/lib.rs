@@ -18,6 +18,10 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index
 //! mapping every paper table/figure to a bench target.
 
+// `std::simd` is nightly-only; the opt-in `simd` feature gates the explicit
+// SIMD chunk bodies in `tensor` (ADR-004).  Default builds stay on stable.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod cli;
 pub mod config;
 pub mod tensor;

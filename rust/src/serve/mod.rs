@@ -465,6 +465,11 @@ pub struct ServerConfig {
     /// Worker threads.  `0` starts a paused server (nothing drains —
     /// the overload/saturation tests and external drivers use this).
     pub workers: usize,
+    /// Intra-batch shards per worker: each micro-batch is split into
+    /// this many contiguous row ranges integrated concurrently (bitwise
+    /// the same results — `tests/shard_equivalence.rs`).  `0` defers to
+    /// `MALI_SHARDS` (default 1, i.e. unsharded).
+    pub shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -474,6 +479,7 @@ impl Default for ServerConfig {
             max_batch: 32,
             max_wait: Duration::from_micros(500),
             workers: crate::util::pool::num_threads().min(4),
+            shards: 0,
         }
     }
 }
@@ -500,6 +506,11 @@ impl Server {
             max_batch: cfg.max_batch.max(1),
             max_wait: cfg.max_wait,
         };
+        let shards = if cfg.shards == 0 {
+            worker::shards_from_env()
+        } else {
+            cfg.shards
+        };
         let workers = (0..cfg.workers)
             .map(|i| {
                 let queue = queue.clone();
@@ -507,7 +518,7 @@ impl Server {
                 let bcfg = bcfg.clone();
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker::worker_loop(&queue, &registry, &bcfg))
+                    .spawn(move || worker::worker_loop(&queue, &registry, &bcfg, shards))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -714,6 +725,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 workers: 0,
+                shards: 0,
             },
         );
         let class = Arc::new(toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none()));

@@ -18,6 +18,13 @@
 //! ([`Pending::z_final`] / [`Pending::obs`]), so the per-request
 //! envelope cost (one `Vec` each at submit time) stays on the submit
 //! path and off the serve loop.
+//!
+//! With `shard_count > 1` (`MALI_SHARDS`, [`ServeWorker::with_shards`],
+//! or `ServerConfig::shards`) the worker splits each micro-batch into
+//! contiguous row-range shards integrated concurrently on a persistent
+//! [`WorkerPool`] — bitwise-identical results (DESIGN §10,
+//! `tests/shard_equivalence.rs`), still zero steady-state allocations
+//! (per-shard workspaces in [`BatchShards`] warm once).
 
 use super::batcher::{fill_next_batch, BatcherCfg};
 use super::metrics::ServeMetrics;
@@ -25,11 +32,13 @@ use super::queue::BoundedQueue;
 use super::{ModelRegistry, Pending, RequestClass, ServeResponse};
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::integrate::{
-    integrate_batch_obs_stats_ws, BatchStepObserver, ErrorNorm, IntStats,
+    integrate_batch_obs_stats_sharded, integrate_batch_obs_stats_ws, BatchShards,
+    BatchStepObserver, ErrorNorm, IntStats,
 };
 use crate::solvers::workspace::{ensure, BatchWorkspace};
 use crate::solvers::{by_name as solver_by_name, Solver};
 use crate::tensor::Tensor;
+use crate::util::pool::{self, DisjointRowsMut, WorkerPool};
 use anyhow::{anyhow, ensure as ensure_that, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -62,11 +71,47 @@ pub struct ServeWorker {
     z0_flat: Vec<f32>,
     per: Vec<IntStats>,
     metrics: ServeMetrics,
+    /// Intra-batch shard count (1 = unsharded fast path, byte-for-byte
+    /// the pre-sharding serve loop).
+    n_shards: usize,
+    shards: BatchShards,
+    /// Persistent shard workers (`n_shards - 1`, capped by
+    /// `MALI_THREADS`; the serve thread itself runs the first shard).
+    /// Spawned once at construction — `thread::spawn` allocates, so it
+    /// must never happen inside `process`.
+    shard_pool: Option<WorkerPool>,
+}
+
+/// Intra-batch shard count for new workers: `MALI_SHARDS`, default 1
+/// (read once per worker at construction — `env::var` allocates, so the
+/// serve loop must not consult it per batch).
+pub fn shards_from_env() -> usize {
+    std::env::var("MALI_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1)
 }
 
 impl ServeWorker {
     /// A fresh worker over `registry`; every buffer grows on first use.
+    /// Shard count comes from [`shards_from_env`] (`MALI_SHARDS`).
     pub fn new(registry: Arc<ModelRegistry>) -> ServeWorker {
+        ServeWorker::with_shards(registry, shards_from_env())
+    }
+
+    /// A fresh worker that splits every micro-batch into `shards`
+    /// row-range shards (clamped to at least 1).  Results are bitwise
+    /// independent of the shard count (`tests/shard_equivalence.rs`);
+    /// sharding is purely a latency/throughput knob.
+    pub fn with_shards(registry: Arc<ModelRegistry>, shards: usize) -> ServeWorker {
+        let n_shards = shards.max(1);
+        let shard_pool = if n_shards > 1 {
+            let threads = (n_shards - 1).min(pool::num_threads().saturating_sub(1));
+            Some(WorkerPool::new(threads))
+        } else {
+            None
+        };
         ServeWorker {
             registry,
             solvers: BTreeMap::new(),
@@ -81,7 +126,15 @@ impl ServeWorker {
             z0_flat: Vec::new(),
             per: Vec::new(),
             metrics: ServeMetrics::new(),
+            n_shards,
+            shards: BatchShards::new(n_shards),
+            shard_pool,
         }
+    }
+
+    /// The worker's intra-batch shard count.
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
     }
 
     /// Serving counters accumulated so far.
@@ -193,8 +246,9 @@ impl ServeWorker {
     }
 
     /// The allocation-free core: batch assembly → `init_batch_into` →
-    /// `integrate_batch_obs_stats_ws` → per-row scatter.  Returns the
-    /// batch's `f`-evaluation count.
+    /// `integrate_batch_obs_stats_ws` (or its sharded twin when
+    /// `shard_count > 1` — bitwise the same results) → per-row scatter.
+    /// Returns the batch's `f`-evaluation count.
     fn run_batch(&mut self, class: &RequestClass, batch: &mut [Pending]) -> Result<u64> {
         let dynamics = self.registry.get(&class.model).ok_or_else(|| {
             anyhow!("unknown model '{}' (registered: {:?})", class.model, self.registry.names())
@@ -245,23 +299,55 @@ impl ServeWorker {
         // ALF's v₀ = f(z₀) evaluations
         let f0 = dynamics.counters().f_evals.get();
         solver.init_batch_into(dynamics, class.t0, &self.z0_flat, &spec, &mut self.init, &mut self.ws);
-        let mut cap = ObsCapture {
-            batch: &mut *batch,
-            n_z,
-        };
-        integrate_batch_obs_stats_ws(
-            solver.as_ref(),
-            dynamics,
-            class.t0,
-            class.t1,
-            &self.init,
-            &class.mode,
-            &ErrorNorm::Full,
-            &class.grid,
-            &mut cap,
-            &mut self.per,
-            &mut self.ws,
-        )?;
+        if self.n_shards > 1 && nb > 1 {
+            // Sharded path: the batch's rows are integrated as contiguous
+            // sub-batches, concurrently on the shard pool.  Each shard
+            // streams its observations straight into its own rows'
+            // response buffers via a shard-local ObsCapture.
+            let caps = DisjointRowsMut::new(&mut *batch);
+            let make_obs = |_shard: usize, rows: std::ops::Range<usize>| ObsCapture {
+                // SAFETY: the sharded driver builds one observer per
+                // shard, the shards' global row ranges are pairwise
+                // disjoint, each shard index is dispatched exactly once,
+                // and the driver joins before returning — so no two live
+                // borrows overlap and none outlives `batch`.
+                batch: unsafe { caps.range(rows.start, rows.end) },
+                n_z,
+            };
+            integrate_batch_obs_stats_sharded(
+                solver.as_ref(),
+                dynamics,
+                class.t0,
+                class.t1,
+                &self.init,
+                &class.mode,
+                &ErrorNorm::Full,
+                &class.grid,
+                make_obs,
+                &mut self.per,
+                &mut self.shards,
+                &mut self.ws,
+                self.shard_pool.as_ref(),
+            )?;
+        } else {
+            let mut cap = ObsCapture {
+                batch: &mut *batch,
+                n_z,
+            };
+            integrate_batch_obs_stats_ws(
+                solver.as_ref(),
+                dynamics,
+                class.t0,
+                class.t1,
+                &self.init,
+                &class.mode,
+                &ErrorNorm::Full,
+                &class.grid,
+                &mut cap,
+                &mut self.per,
+                &mut self.ws,
+            )?;
+        }
         let f_evals = dynamics.counters().f_evals.get().saturating_sub(f0);
         let out = self.ws.output();
         for (b, p) in batch.iter_mut().enumerate() {
@@ -286,8 +372,9 @@ pub fn worker_loop(
     queue: &BoundedQueue<Pending>,
     registry: &Arc<ModelRegistry>,
     cfg: &BatcherCfg,
+    shards: usize,
 ) -> ServeMetrics {
-    let mut worker = ServeWorker::new(registry.clone());
+    let mut worker = ServeWorker::with_shards(registry.clone(), shards);
     let mut batch: Vec<Pending> = Vec::new();
     while fill_next_batch(queue, cfg, &mut batch) {
         worker.note_queue_depth(queue.len() + batch.len());

@@ -27,6 +27,7 @@ use super::dynamics::Dynamics;
 use super::workspace::{BatchWorkspace, SolverWorkspace};
 use super::{Solver, State};
 use crate::tensor::{error_norm, error_seminorm};
+use crate::util::pool::{DisjointRowsMut, WorkerPool};
 use anyhow::{bail, ensure, Result};
 
 /// Step-size policy.
@@ -815,6 +816,206 @@ pub fn integrate_batch_obs_stats_ws(
     c.restore(ws);
     r?;
     Ok(dynamics.counters().f_evals.get() - f0)
+}
+
+/// Per-shard persistent resources of the intra-batch sharded driver
+/// ([`integrate_batch_obs_stats_sharded`]): each shard owns a full
+/// [`BatchWorkspace`], a per-sample stats vector and a sub-batch `state0`
+/// buffer, so a warmed sharded solve touches the allocator exactly as much
+/// as `shards` warmed unsharded solves — zero times
+/// (`tests/alloc_serve.rs` / `tests/alloc_steady.rs`).
+pub struct BatchShards {
+    slots: Vec<ShardSlot>,
+}
+
+struct ShardSlot {
+    /// Global `[start, end)` row range of this shard (set per dispatch).
+    range: (usize, usize),
+    state0: BatchState,
+    ws: BatchWorkspace,
+    per: Vec<IntStats>,
+    err: Option<anyhow::Error>,
+}
+
+impl BatchShards {
+    /// Resources for `shards` row-range shards (clamped to at least 1).
+    pub fn new(shards: usize) -> BatchShards {
+        BatchShards {
+            slots: (0..shards.max(1))
+                .map(|_| ShardSlot {
+                    range: (0, 0),
+                    state0: BatchState {
+                        z: crate::tensor::Tensor {
+                            data: Vec::new(),
+                            shape: vec![0, 0],
+                        },
+                        v: None,
+                    },
+                    ws: BatchWorkspace::new(),
+                    per: Vec::new(),
+                    err: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of shards these resources support.
+    pub fn count(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Intra-batch sharded [`integrate_batch_obs_stats_ws`]: splits the
+/// `[B, N_z]` batch into contiguous row-range shards
+/// ([`crate::util::pool::shard_ranges`]) and integrates each shard as an
+/// independent sub-batch, optionally in parallel on a persistent
+/// [`WorkerPool`] (the dispatching thread participates; `pool: None` or a
+/// 0-thread pool runs the shards sequentially in shard order).
+///
+/// **Bitwise contract** (pinned by `tests/shard_equivalence.rs`): the
+/// result — final states, per-observation snapshots, per-sample
+/// accepted/trial counts and the `f`-evaluation total — is identical to
+/// the 1-shard run for any shard count.  This holds because the batched
+/// loop's per-row work is already row-decomposable: each sample owns its
+/// step-size controller, and a native dynamics' batched `f` is the
+/// row-wise map of its solo `f` (pinned by `tests/batch_equivalence.rs`),
+/// so integrating a sub-range of rows performs the exact same per-row
+/// arithmetic in the exact same order.  Device-batched dynamics (one
+/// compiled XLA batch program, `B` baked into the executable) are
+/// rejected when `shards > 1`.
+///
+/// `make_obs(shard, rows)` builds each shard's observer **on the thread
+/// that runs the shard**, with `rows` the global row range; observer
+/// callbacks receive shard-local sample indices (add `rows.start` to
+/// globalize).  Per-shard workspaces and stats live in `shards` and stay
+/// warm across calls; `per` receives the merged per-sample stats in
+/// global row order.  Returns the batch `f`-evaluation total, measured as
+/// one counter-window delta around the whole dispatch (per-shard deltas
+/// interleave under concurrency).
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_batch_obs_stats_sharded<O, F>(
+    solver: &(dyn Solver + Sync),
+    dynamics: &(dyn Dynamics + Sync),
+    t0: f64,
+    t1: f64,
+    state0: &BatchState,
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    grid: &ObsGrid,
+    make_obs: F,
+    per: &mut Vec<IntStats>,
+    shards: &mut BatchShards,
+    ws: &mut BatchWorkspace,
+    pool: Option<&WorkerPool>,
+) -> Result<u64>
+where
+    O: BatchStepObserver,
+    F: Fn(usize, std::ops::Range<usize>) -> O + Sync,
+{
+    let spec = state0.spec();
+    let nb = spec.batch;
+    let n_z = spec.n_z;
+    let has_v = state0.v.is_some();
+    let n_shards = shards.slots.len();
+    if n_shards <= 1 || nb <= 1 || t1 - t0 == 0.0 {
+        // Degenerate split: the sharded path *is* the direct path.
+        let mut obs = make_obs(0, 0..nb);
+        return integrate_batch_obs_stats_ws(
+            solver, dynamics, t0, t1, state0, mode, norm, grid, &mut obs, per, ws,
+        );
+    }
+    ensure!(
+        !dynamics.is_device_batched(),
+        "intra-batch sharding requires row-decomposable dynamics; this \
+         dynamics is device-batched (the batch dimension is baked into one \
+         XLA executable, so sub-batches cannot reuse it)"
+    );
+
+    // Stage each shard's sub-batch initial state (contiguous row block —
+    // one copy_from_slice per buffer; all shard buffers grow once and
+    // stay warm).
+    for (slot, (r0, r1)) in shards
+        .slots
+        .iter_mut()
+        .zip(crate::util::pool::shard_ranges(nb, n_shards))
+    {
+        slot.range = (r0, r1);
+        slot.err = None;
+        if r1 > r0 {
+            super::workspace::shape_batch_state(&mut slot.state0, r1 - r0, n_z, has_v);
+            slot.state0
+                .z
+                .data
+                .copy_from_slice(&state0.z.data[r0 * n_z..r1 * n_z]);
+            if let (Some(dv), Some(sv)) = (&mut slot.state0.v, &state0.v) {
+                dv.data.copy_from_slice(&sv.data[r0 * n_z..r1 * n_z]);
+            }
+        }
+    }
+
+    let f0 = dynamics.counters().f_evals.get();
+    let view = DisjointRowsMut::new(&mut shards.slots);
+    let body = |i: usize| {
+        // SAFETY: every job index is dispatched exactly once per run, so
+        // the 1-slot ranges are pairwise disjoint and end before `view`'s
+        // source borrow does (the dispatch joins below).
+        let slot = &mut unsafe { view.range(i, i + 1) }[0];
+        let (r0, r1) = slot.range;
+        slot.per.clear();
+        if r1 == r0 {
+            // empty shard (shards > B): nothing to integrate
+            return;
+        }
+        let mut obs = make_obs(i, r0..r1);
+        if let Err(e) = integrate_batch_obs_stats_ws(
+            solver,
+            dynamics,
+            t0,
+            t1,
+            &slot.state0,
+            mode,
+            norm,
+            grid,
+            &mut obs,
+            &mut slot.per,
+            &mut slot.ws,
+        ) {
+            slot.err = Some(e);
+        }
+    };
+    match pool {
+        Some(p) => p.run(n_shards, &body),
+        None => {
+            for i in 0..n_shards {
+                body(i);
+            }
+        }
+    }
+    let f_evals = dynamics.counters().f_evals.get() - f0;
+
+    for slot in &mut shards.slots {
+        if let Some(e) = slot.err.take() {
+            return Err(e);
+        }
+    }
+
+    // Merge: per-sample stats in global row order, final states assembled
+    // row-contiguously into this workspace's output slot.
+    per.clear();
+    let mut out = ws.take_batch(nb, n_z, has_v);
+    for slot in &shards.slots {
+        let (r0, r1) = slot.range;
+        per.extend_from_slice(&slot.per);
+        if r1 > r0 {
+            let shard_out = slot.ws.output();
+            out.z.data[r0 * n_z..r1 * n_z].copy_from_slice(&shard_out.z.data);
+            if let (Some(dv), Some(sv)) = (&mut out.v, &shard_out.v) {
+                dv.data[r0 * n_z..r1 * n_z].copy_from_slice(&sv.data);
+            }
+        }
+    }
+    ws.set_output(out);
+    Ok(f_evals)
 }
 
 /// The batched loop body behind [`integrate_batch_obs_stats_ws`];

@@ -4,6 +4,26 @@
 //! remains on the host is O(N_z) stage combination (`axpy`-style), error
 //! norms for the adaptive controller, and optimizer updates.  All f32 with
 //! f64 accumulation for reductions.
+//!
+//! # Kernel dispatch contract
+//!
+//! The hot kernels ([`axpy`], [`add_scaled_into`], [`axpy_rows`],
+//! [`add_scaled_rows_into`], [`lincomb_into`], [`matmul_into`]) are
+//! alignment-aware, chunked-with-remainder implementations: a scalar head
+//! peels until the destination pointer is `LANES`-aligned, the body runs in
+//! fixed `LANES`-wide chunks, and a scalar tail handles the remainder.  By
+//! default the chunk body is plain indexed arithmetic over `[f32; LANES]`
+//! arrays (which LLVM autovectorizes on stable); with the `simd` cargo
+//! feature it uses `std::simd` explicitly (nightly-only, see ADR-004).
+//!
+//! Every dispatch kernel is **bitwise identical** to its reference in
+//! [`scalar`] for all inputs: the chunked kernels perform exactly the same
+//! per-element operations (one `a * x[i]` product and one add each — Rust
+//! never contracts these into an FMA), and regrouping elementwise work into
+//! lanes cannot change any element's value.  [`matmul_into`] keeps a fixed
+//! ascending-`p` accumulation order per output element.  This identity is
+//! pinned by `tests/prop_kernels.rs` under both feature settings; the
+//! [`scalar`] module is the frozen oracle and must stay loop-simple.
 
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -58,14 +78,187 @@ impl Tensor {
     }
 }
 
+// ---- kernel dispatch machinery --------------------------------------------
+
+/// Lane width of the chunked kernels: 8 f32 = one 256-bit vector register
+/// (AVX2 / 2×NEON), the widest width `std::simd` lowers well everywhere.
+pub const LANES: usize = 8;
+
+/// Whether this build dispatches the `std::simd` chunk bodies (`simd`
+/// cargo feature) rather than the autovectorized array bodies.  Recorded in
+/// `BENCH_hotpath.json` so perf rows are attributable to a dispatch path.
+pub fn simd_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Number of scalar elements to peel so `p` reaches a `LANES * 4`-byte
+/// boundary (capped at `len`).  f32 slices are always 4-byte aligned, so
+/// the misalignment is a whole number of elements.
+#[inline]
+fn align_head(p: *const f32, len: usize) -> usize {
+    let bytes = LANES * 4;
+    let mis = (p as usize) % bytes;
+    if mis == 0 {
+        0
+    } else {
+        ((bytes - mis) / 4).min(len)
+    }
+}
+
+/// One-`LANES`-chunk bodies.  Exactly one definition is compiled; both
+/// perform the identical per-element arithmetic (load, one multiply, one
+/// add, store — no FMA contraction, no reassociation), which is what makes
+/// the dispatch kernels bitwise-equal to [`scalar`].
+#[cfg(feature = "simd")]
+mod lanes {
+    use super::LANES;
+    use std::simd::Simd;
+
+    type V = Simd<f32, LANES>;
+
+    /// `y += a * x` on one chunk.
+    #[inline(always)]
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let r = V::from_slice(y) + V::splat(a) * V::from_slice(x);
+        r.copy_to_slice(y);
+    }
+
+    /// `out = x + a * y` on one chunk.
+    #[inline(always)]
+    pub fn add_scaled(x: &[f32], a: f32, y: &[f32], out: &mut [f32]) {
+        let r = V::from_slice(x) + V::splat(a) * V::from_slice(y);
+        r.copy_to_slice(out);
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+mod lanes {
+    use super::LANES;
+
+    /// `y += a * x` on one chunk (array-typed so LLVM sees the constant
+    /// trip count and autovectorizes without bounds checks).
+    #[inline(always)]
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let x: &[f32; LANES] = x.try_into().expect("chunk");
+        let y: &mut [f32; LANES] = y.try_into().expect("chunk");
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// `out = x + a * y` on one chunk.
+    #[inline(always)]
+    pub fn add_scaled(x: &[f32], a: f32, y: &[f32], out: &mut [f32]) {
+        let x: &[f32; LANES] = x.try_into().expect("chunk");
+        let y: &[f32; LANES] = y.try_into().expect("chunk");
+        let out: &mut [f32; LANES] = out.try_into().expect("chunk");
+        for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+            *o = xi + a * yi;
+        }
+    }
+}
+
+/// Reference (oracle) kernels: the loop-simple implementations the chunked
+/// dispatch kernels must match **bitwise** (`tests/prop_kernels.rs`).
+///
+/// These are the pre-vectorization hot-path kernels, frozen.  Do not
+/// "optimize" them — their value is being obviously correct; the public
+/// kernels carry the performance.
+pub mod scalar {
+    /// y += a * x
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// `out[i] = x[i] + a * y[i]`.
+    pub fn add_scaled_into(x: &[f32], a: f32, y: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+            *o = xi + a * yi;
+        }
+    }
+
+    /// Per-row `y[b] += coeffs[b] · x[b]` over row-major `[B, n_z]`.
+    pub fn axpy_rows(coeffs: &[f32], x: &[f32], y: &mut [f32], n_z: usize) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(coeffs.len() * n_z, y.len());
+        for (b, &c) in coeffs.iter().enumerate() {
+            axpy(c, &x[b * n_z..(b + 1) * n_z], &mut y[b * n_z..(b + 1) * n_z]);
+        }
+    }
+
+    /// Per-row `out[b] = x[b] + coeffs[b] · y[b]` (copy then [`axpy_rows`]).
+    pub fn add_scaled_rows_into(
+        x: &[f32],
+        coeffs: &[f32],
+        y: &[f32],
+        n_z: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        out.copy_from_slice(x);
+        axpy_rows(coeffs, y, out, n_z);
+    }
+
+    /// `out = Σ_i c_i · xs_i`, term-by-term in slice order (zero-fill then
+    /// [`axpy`] each term, including zero-coefficient terms).
+    pub fn lincomb_into(terms: &[(f32, &[f32])], out: &mut [f32]) {
+        out.fill(0.0);
+        for &(c, x) in terms {
+            axpy(c, x, out);
+        }
+    }
+
+    /// Column-blocked `out = a · b` with a scalar inner strip loop; same
+    /// blocking and zero-skip as the public [`super::matmul_into`], so both
+    /// walk every output element with the identical ascending-`p`
+    /// accumulation order.
+    pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + super::MATMUL_JBLOCK).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + j0..i * n + j1];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + j0..p * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+    }
+}
+
 // ---- flat-slice vector ops -------------------------------------------------
 
-/// y += a * x
+/// y += a * x — chunked dispatch kernel, bitwise equal to [`scalar::axpy`].
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
+    let head = align_head(y.as_ptr(), y.len());
+    let (yh, yt) = y.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    scalar::axpy(a, xh, yh);
+    let mut yc = yt.chunks_exact_mut(LANES);
+    let mut xc = xt.chunks_exact(LANES);
+    for (yk, xk) in (&mut yc).zip(&mut xc) {
+        lanes::axpy(a, xk, yk);
     }
+    scalar::axpy(a, xc.remainder(), yc.into_remainder());
 }
 
 /// out = x + a * y   (allocating wrapper over [`add_scaled_into`])
@@ -76,19 +269,30 @@ pub fn add_scaled(x: &[f32], a: f32, y: &[f32]) -> Vec<f32> {
 }
 
 /// `out[i] = x[i] + a * y[i]` into a caller-provided buffer — the
-/// workspace-path kernel behind [`add_scaled`], bit-identical per element.
-/// `out` may alias neither input slice (enforced by the borrow checker).
+/// workspace-path kernel behind [`add_scaled`], chunked dispatch, bitwise
+/// equal to [`scalar::add_scaled_into`].  `out` may alias neither input
+/// slice (enforced by the borrow checker).
 pub fn add_scaled_into(x: &[f32], a: f32, y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
-        *o = xi + a * yi;
+    let head = align_head(out.as_ptr(), out.len());
+    let (oh, ot) = out.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    let (yh, yt) = y.split_at(head);
+    scalar::add_scaled_into(xh, a, yh, oh);
+    let mut oc = ot.chunks_exact_mut(LANES);
+    let mut xc = xt.chunks_exact(LANES);
+    let mut yc = yt.chunks_exact(LANES);
+    for ((ok, xk), yk) in (&mut oc).zip(&mut xc).zip(&mut yc) {
+        lanes::add_scaled(xk, a, yk, ok);
     }
+    scalar::add_scaled_into(xc.remainder(), a, yc.remainder(), oc.into_remainder());
 }
 
 /// Per-row `y[b] += coeffs[b] · x[b]` over row-major `[B, n_z]` buffers —
 /// the batched solvers' stage arithmetic, where each sample carries its
-/// own step size.  Row arithmetic is identical to [`axpy`] on the row.
+/// own step size.  Row arithmetic is identical to [`axpy`] on the row,
+/// hence bitwise equal to [`scalar::axpy_rows`].
 pub fn axpy_rows(coeffs: &[f32], x: &[f32], y: &mut [f32], n_z: usize) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(coeffs.len() * n_z, y.len());
@@ -106,7 +310,8 @@ pub fn add_scaled_rows(x: &[f32], coeffs: &[f32], y: &[f32], n_z: usize) -> Vec<
 }
 
 /// Per-row `out[b] = x[b] + coeffs[b] · y[b]` into a caller-provided
-/// buffer — bit-identical to [`add_scaled_rows`] (copy then [`axpy_rows`]).
+/// buffer — bit-identical to [`add_scaled_rows`] (copy then [`axpy_rows`])
+/// and to [`scalar::add_scaled_rows_into`].
 pub fn add_scaled_rows_into(x: &[f32], coeffs: &[f32], y: &[f32], n_z: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
@@ -125,7 +330,8 @@ pub fn lincomb(terms: &[(f32, &[f32])]) -> Vec<f32> {
 
 /// `out = Σ_i c_i · xs_i` into a caller-provided buffer, accumulating
 /// term-by-term in slice order exactly like [`lincomb`] (zero-fill then
-/// [`axpy`] each term, including zero-coefficient terms).
+/// [`axpy`] each term, including zero-coefficient terms) — bitwise equal
+/// to [`scalar::lincomb_into`].
 pub fn lincomb_into(terms: &[(f32, &[f32])], out: &mut [f32]) {
     out.fill(0.0);
     for &(c, x) in terms {
@@ -219,9 +425,11 @@ const MATMUL_JBLOCK: usize = 64;
 /// `out = a · b` into a caller-provided `m·n` buffer, row-major and
 /// column-blocked: for each output row the inner loops walk a `MATMUL_JBLOCK`
 /// strip of `b`/`out` over all of `k`, so both strips stay cache-resident
-/// instead of streaming the whole `b` per row.  Per output element the
-/// accumulation order over `p` is ascending — bit-identical to the
-/// straightforward i/p/j triple loop (and to [`matmul`], which wraps this).
+/// instead of streaming the whole `b` per row.  The inner strip update is
+/// [`axpy`]`(a[i,p], b_strip, out_strip)` — vectorized across `j`, which
+/// leaves each output element's accumulation order over `p` ascending,
+/// bit-identical to the straightforward i/p/j triple loop, to
+/// [`scalar::matmul_into`], and to [`matmul`] (which wraps this).
 pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -240,9 +448,7 @@ pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
                     continue;
                 }
                 let brow = &b[p * n + j0..p * n + j1];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                axpy(av, brow, orow);
             }
         }
         j0 = j1;
@@ -308,6 +514,35 @@ mod tests {
         assert_eq!(&out[2..], add_scaled(&x[2..], coeffs[1], &y[2..]).as_slice());
     }
 
+    /// Dispatch kernels equal the scalar oracle bitwise on a width that
+    /// exercises head + body + tail at once (the exhaustive sweep lives in
+    /// `tests/prop_kernels.rs`; this is the in-crate smoke version).
+    #[test]
+    fn dispatch_matches_scalar_oracle_smoke() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut backing_x = vec![0.0f32; 64];
+        let mut backing_y = vec![0.0f32; 64];
+        rng.fill_normal(&mut backing_x, 1.0);
+        rng.fill_normal(&mut backing_y, 1.0);
+        for off in 0..4usize {
+            let w = 27; // head + 3 chunks + tail for every offset
+            let x = &backing_x[off..off + w];
+            let y0 = &backing_y[off..off + w];
+            let mut y_k = y0.to_vec();
+            let mut y_s = y0.to_vec();
+            axpy(0.37, x, &mut y_k);
+            scalar::axpy(0.37, x, &mut y_s);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&y_k), bits(&y_s), "axpy offset {off}");
+
+            let mut o_k = vec![0.0f32; w];
+            let mut o_s = vec![0.0f32; w];
+            add_scaled_into(x, -1.25, y0, &mut o_k);
+            scalar::add_scaled_into(x, -1.25, y0, &mut o_s);
+            assert_eq!(bits(&o_k), bits(&o_s), "add_scaled offset {off}");
+        }
+    }
+
     #[test]
     fn norms() {
         let x = [3.0f32, 4.0];
@@ -366,6 +601,9 @@ mod tests {
             matmul_into(&a, &b, m, k, n, &mut out);
             assert_eq!(out, reference, "({m},{k},{n})");
             assert_eq!(matmul(&a, &b, m, k, n), reference, "wrapper ({m},{k},{n})");
+            let mut oracle = vec![1.0f32; m * n];
+            scalar::matmul_into(&a, &b, m, k, n, &mut oracle);
+            assert_eq!(out, oracle, "scalar oracle ({m},{k},{n})");
         }
     }
 

@@ -1,10 +1,265 @@
-//! Data-parallel helpers over std scoped threads.
+//! Data-parallel helpers over std scoped threads, plus the persistent
+//! [`WorkerPool`] used by the allocation-free intra-batch sharding path.
 //!
 //! Neither tokio nor rayon is vendored in the offline image; training-time
 //! parallelism here is simple fork-join over batch shards.  The PJRT CPU
 //! client serializes device compute anyway, so the coordinator parallelizes
 //! the host-side work (data synthesis, metric reduction, multi-seed runs)
 //! and keeps device calls on the caller thread.
+//!
+//! Two dispatch families coexist on purpose (DESIGN §9):
+//!
+//! * [`par_map`] / [`par_chunks_mut`] — scoped-thread fork-join for cold
+//!   coordinator/grad paths.  `thread::spawn` heap-allocates, which is fine
+//!   once per experiment shard but banned inside the serve loop.
+//! * [`WorkerPool`] — threads spawned **once**, parked on a condvar, handed
+//!   work through a pre-installed job slot.  A warmed [`WorkerPool::run`]
+//!   dispatch performs zero heap allocations (futex-backed `Mutex`/`Condvar`
+//!   on Linux allocate nothing), so sharded integrate/serve stay inside the
+//!   zero-allocation contract pinned by `tests/alloc_serve.rs`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Contiguous `[start, end)` index ranges splitting `items` into `shards`
+/// near-equal parts: the first `items % shards` ranges get one extra item,
+/// so ranges are contiguous, ordered and cover `0..items` exactly.  Trailing
+/// ranges are empty when `shards > items` — callers skip those.  This is the
+/// single sharding policy shared by the grad batch driver and the serve
+/// layer's intra-batch shards.
+pub fn shard_ranges(items: usize, shards: usize) -> impl Iterator<Item = (usize, usize)> {
+    let s = shards.max(1);
+    let base = items / s;
+    let extra = items % s;
+    (0..s).scan(0usize, move |start, i| {
+        let len = base + usize::from(i < extra);
+        let r = (*start, *start + len);
+        *start += len;
+        Some(r)
+    })
+}
+
+/// Hands out *disjoint* `&mut` sub-ranges of one slice to concurrent shard
+/// workers (the safe-Rust alternative — `chunks_mut` — cannot be indexed by
+/// an arbitrary `(start, end)` from inside a `Fn` closure shared across
+/// threads).
+///
+/// The soundness contract is the sharding driver's dispatch discipline:
+/// every job index is claimed exactly once per [`WorkerPool::run`] call, and
+/// the driver derives each job's range from [`shard_ranges`], so no two
+/// live borrows overlap and all borrows end before `run` returns (it joins
+/// on job completion).
+pub struct DisjointRowsMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: a DisjointRowsMut is only a (pointer, len) view; sending/sharing
+// it is safe exactly when sending `&mut [T]` would be, i.e. `T: Send`.
+// Aliasing is excluded by the `range` contract below.
+unsafe impl<T: Send> Send for DisjointRowsMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointRowsMut<'_, T> {}
+
+impl<'a, T> DisjointRowsMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointRowsMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Borrow `[start, end)` mutably.
+    ///
+    /// # Safety
+    ///
+    /// Across all concurrently-live borrows from this view, ranges must be
+    /// pairwise disjoint, and every borrow must end before the `&'a mut`
+    /// source borrow does.  The sharding drivers guarantee this by taking
+    /// each shard's range exactly once per dispatch.
+    pub unsafe fn range(&self, start: usize, end: usize) -> &'a mut [T] {
+        assert!(start <= end && end <= self.len, "range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+/// A persistent fork-join pool: `threads` workers spawned at construction,
+/// parked on a condvar between dispatches.  [`WorkerPool::run`] publishes a
+/// job (`f`, `n_jobs`), wakes the workers, and **participates itself** —
+/// caller and workers claim job indices from a shared counter until none
+/// remain, then `run` blocks until in-flight jobs finish.  With
+/// `threads == 0` the pool is a plain sequential loop on the caller thread
+/// (the `MALI_THREADS=1` leg), bitwise-identical by construction.
+///
+/// A worker panic is caught, recorded, and re-raised on the caller thread
+/// after the dispatch drains, so a poisoned shard cannot wedge the pool.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct PoolShared {
+    ctrl: Mutex<PoolCtrl>,
+    /// Workers wait here for a published job (or shutdown).
+    work: Condvar,
+    /// The dispatching caller waits here for the last in-flight job.
+    done: Condvar,
+}
+
+struct PoolCtrl {
+    job: Option<JobPtr>,
+    n_jobs: usize,
+    next: usize,
+    in_flight: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+/// Type-erased pointer to the dispatch closure.  The pointee is only ever a
+/// `&(dyn Fn(usize) + Sync)` borrowed by [`WorkerPool::run`], which does not
+/// return until every claimed job has finished and the slot is cleared — so
+/// the pointer never outlives its referent (scoped-thread-style reasoning).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is Sync (shared calls are safe) and the lifetime is
+// enforced by `run` joining before return, per the JobPtr doc above.
+unsafe impl Send for JobPtr {}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` persistent workers (0 is valid: every
+    /// dispatch then runs inline on the caller thread).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            ctrl: Mutex::new(PoolCtrl {
+                job: None,
+                n_jobs: 0,
+                next: 0,
+                in_flight: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_body(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of persistent worker threads (not counting the caller).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(0), f(1), …, f(n_jobs - 1)` across the workers and the caller
+    /// thread; returns when all have finished.  Not reentrant (a job must
+    /// not call `run` on the same pool).  Allocation-free once the pool is
+    /// constructed.
+    pub fn run(&self, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_jobs == 0 {
+            return;
+        }
+        if self.handles.is_empty() {
+            // Sequential fallback: identical claim order, no sync at all.
+            for i in 0..n_jobs {
+                f(i);
+            }
+            return;
+        }
+        {
+            let mut g = self.shared.ctrl.lock().expect("pool lock");
+            assert!(g.job.is_none(), "WorkerPool::run is not reentrant");
+            g.job = Some(JobPtr(f as *const _));
+            g.n_jobs = n_jobs;
+            g.next = 0;
+            g.in_flight = 0;
+            g.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The caller claims jobs too, then waits for stragglers.
+        loop {
+            let mut g = self.shared.ctrl.lock().expect("pool lock");
+            if g.next < g.n_jobs {
+                let i = g.next;
+                g.next += 1;
+                g.in_flight += 1;
+                drop(g);
+                let ok = catch_unwind(AssertUnwindSafe(|| f(i))).is_ok();
+                let mut g = self.shared.ctrl.lock().expect("pool lock");
+                g.in_flight -= 1;
+                if !ok {
+                    g.panicked = true;
+                }
+                if g.next >= g.n_jobs && g.in_flight == 0 {
+                    self.shared.done.notify_all();
+                }
+                continue;
+            }
+            while !(g.next >= g.n_jobs && g.in_flight == 0) {
+                g = self.shared.done.wait(g).expect("pool wait");
+            }
+            g.job = None;
+            let panicked = g.panicked;
+            drop(g);
+            assert!(!panicked, "WorkerPool: a shard job panicked");
+            return;
+        }
+    }
+}
+
+fn worker_body(shared: &PoolShared) {
+    loop {
+        let (job, i) = {
+            let mut g = shared.ctrl.lock().expect("pool lock");
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if let Some(job) = g.job {
+                    if g.next < g.n_jobs {
+                        let i = g.next;
+                        g.next += 1;
+                        g.in_flight += 1;
+                        break (job, i);
+                    }
+                }
+                g = shared.work.wait(g).expect("pool wait");
+            }
+        };
+        // SAFETY: `run` has not returned (this job is in_flight), so the
+        // closure behind the pointer is alive; it is Sync, so calling it
+        // from this thread is safe.
+        let f = unsafe { &*job.0 };
+        let ok = catch_unwind(AssertUnwindSafe(|| f(i))).is_ok();
+        let mut g = shared.ctrl.lock().expect("pool lock");
+        g.in_flight -= 1;
+        if !ok {
+            g.panicked = true;
+        }
+        if g.next >= g.n_jobs && g.in_flight == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.ctrl.lock().expect("pool lock");
+            g.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// Number of workers to use: respects `MALI_THREADS`, defaults to the
 /// available parallelism (min 1).
@@ -113,6 +368,66 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&x| x > 0));
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for &(items, shards) in &[(10usize, 3usize), (7, 3), (3, 8), (0, 4), (5, 1), (16, 4)] {
+            let ranges: Vec<_> = shard_ranges(items, shards).collect();
+            assert_eq!(ranges.len(), shards.max(1));
+            let mut cursor = 0usize;
+            for &(s, e) in &ranges {
+                assert_eq!(s, cursor, "contiguous ({items},{shards})");
+                assert!(e >= s);
+                cursor = e;
+            }
+            assert_eq!(cursor, items, "covering ({items},{shards})");
+            // balanced: sizes differ by at most one, larger ones first
+            let sizes: Vec<_> = ranges.iter().map(|&(s, e)| e - s).collect();
+            for w in sizes.windows(2) {
+                assert!(w[0] >= w[1] && w[0] - w[1] <= 1, "balanced {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_runs_every_job_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for threads in [0usize, 1, 3] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            // reuse across dispatches: the same pool must stay healthy
+            for _ in 0..3 {
+                pool.run(hits.len(), &|i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 3, "job {i} (threads {threads})");
+            }
+            pool.run(0, &|_| unreachable!("n_jobs = 0 dispatches nothing"));
+        }
+    }
+
+    #[test]
+    fn worker_pool_disjoint_rows_write_disjointly() {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u32; 103];
+        let n = data.len();
+        let ranges: Vec<_> = shard_ranges(n, 5).collect();
+        let view = DisjointRowsMut::new(&mut data);
+        pool.run(ranges.len(), &|i| {
+            let (s, e) = ranges[i];
+            // SAFETY: each job index is claimed once; ranges are disjoint.
+            let rows = unsafe { view.range(s, e) };
+            for (j, x) in rows.iter_mut().enumerate() {
+                *x = (s + j) as u32 + 1;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1);
+        }
     }
 
     /// Thousands of tiny chunks must not mean thousands of threads: the

@@ -8,9 +8,15 @@
 //! performs **zero** heap allocations —
 //!
 //! * fixed-grid stepping with heterogeneous rows and a 2-point
-//!   observation grid (the lockstep path), and
+//!   observation grid (the lockstep path),
 //! * adaptive stepping with identical rows (rows stay in lockstep, so
-//!   the active mask never changes shape).
+//!   the active mask never changes shape), and
+//! * both of the above again through a **sharded** worker
+//!   (`ServeWorker::with_shards(.., 2)`): the intra-batch sharded
+//!   serve path — per-shard staging, concurrent dispatch on the
+//!   worker's persistent shard pool, observation scatter through
+//!   per-shard observers, merge — must hold the same zero-allocation
+//!   bar once its per-shard workspaces are warm.
 //!
 //! The per-request envelope (`Pending` + its response buffers) is
 //! allocated once at submit time and recycled here via
@@ -123,4 +129,27 @@ fn warmed_serve_loop_is_allocation_free() {
     assert_eq!(worker.metrics().requests as usize, 6 * B);
     assert_eq!(worker.metrics().batches, 6);
     assert_eq!(worker.metrics().failed, 0);
+
+    // ---- sharded worker: the same bar at shard_count = 2 -----------------
+    // (shard pool threads spawn at construction, outside any measured
+    // region; their steady-state work is measured — the counting
+    // allocator is global)
+    let mut sharded = ServeWorker::with_shards(registry.clone(), 2);
+    assert_eq!(sharded.shard_count(), 2);
+    let mut batch: Vec<Pending> = fixed_rows
+        .iter()
+        .map(|z0| Pending::new(fixed_class.clone(), z0.clone()))
+        .collect();
+    assert_zero_alloc_steady(&mut sharded, &mut batch, &fixed_rows, "sharded fixed+obs");
+    for p in &batch {
+        assert!(p.obs.iter().any(|&x| x != 0.0), "sharded obs snapshots written");
+        assert_eq!(p.n_accepted, 100);
+    }
+
+    let mut batch: Vec<Pending> = adaptive_rows
+        .iter()
+        .map(|z0| Pending::new(adaptive_class.clone(), z0.clone()))
+        .collect();
+    assert_zero_alloc_steady(&mut sharded, &mut batch, &adaptive_rows, "sharded adaptive");
+    assert_eq!(sharded.metrics().failed, 0);
 }

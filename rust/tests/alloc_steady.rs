@@ -7,20 +7,32 @@
 //! * MALI's ψ⁻¹ reverse sweep (`invert_and_vjp_into` over the recorded
 //!   accepted grid) performs **zero** heap allocations once its four
 //!   ping-pong states are warm;
+//! * the **sharded** batched integrate
+//!   (`integrate_batch_obs_stats_sharded`) performs zero heap
+//!   allocations once its per-shard workspaces are warm — on the
+//!   sequential dispatch path AND with the shards running concurrently
+//!   on a [`WorkerPool`] (the counting allocator is global, so the
+//!   shard workers' allocations would be caught too);
 //! * `MemTracker` peaks are unchanged by the refactor: MALI still
 //!   retains exactly the augmented end state (`N_z(N_f + 1)` — 2·N_z·4
 //!   bytes) and the adjoint exactly `z(T)` (N_z·4 bytes).
 //!
 //! The whole file is a single `#[test]` so no sibling test thread can
-//! allocate concurrently inside a measured region.
+//! allocate concurrently inside a measured region (the shard pool's
+//! threads are *part* of the sharded measurement, not a disturbance).
 
 use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::solvers::batch::BatchState;
 use mali_ode::solvers::by_name as solver_by_name;
 use mali_ode::solvers::dynamics::LinearToy;
-use mali_ode::solvers::integrate::{integrate_ws, ErrorNorm, GridRecorder, StepMode};
-use mali_ode::solvers::workspace::SolverWorkspace;
+use mali_ode::solvers::integrate::{
+    integrate_batch_obs_stats_sharded, integrate_ws, BatchShards, ErrorNorm, GridRecorder,
+    ObsGrid, StepMode,
+};
+use mali_ode::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use mali_ode::solvers::{Solver, State};
 use mali_ode::util::mem::MemTracker;
+use mali_ode::util::pool::WorkerPool;
 
 #[path = "common/counting_alloc.rs"]
 mod counting_alloc;
@@ -135,6 +147,55 @@ fn zero_allocations_in_steady_state_hot_paths() {
     // the sweep actually reconstructed the initial state
     for (r, z) in bufs[0].z.iter().zip(&z0) {
         assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "ψ⁻¹ reconstruction");
+    }
+
+    // ---- sharded batched integrate --------------------------------------
+    // Zero-allocation contract on the intra-batch sharded driver: after
+    // two warming calls (sizing pass + pool-cycling pass) a sharded
+    // solve — per-shard staging, dispatch, merge — touches the allocator
+    // not at all, whether the shards run inline or on pool workers.
+    let nb = 6usize;
+    let states: Vec<State> = (0..nb)
+        .map(|b| {
+            let row: Vec<f32> = (0..n_z).map(|j| 0.4 + 0.3 * b as f32 + 0.1 * j as f32).collect();
+            solver.init(&toy, 0.0, &row)
+        })
+        .collect();
+    let refs: Vec<&State> = states.iter().collect();
+    let state0 = BatchState::from_states(&refs);
+    let grid = ObsGrid::uniform(0.0, 1.0, 2);
+    for (pool, label) in [(None, "sequential"), (Some(WorkerPool::new(1)), "pooled")] {
+        let mut shards = BatchShards::new(2);
+        let mut bws = BatchWorkspace::new();
+        let mut per = Vec::new();
+        let mut run = || {
+            integrate_batch_obs_stats_sharded(
+                &*solver,
+                &toy,
+                0.0,
+                1.0,
+                &state0,
+                &fixed,
+                &norm,
+                &grid,
+                |_, _| (),
+                &mut per,
+                &mut shards,
+                &mut bws,
+                pool.as_ref(),
+            )
+            .unwrap()
+        };
+        run();
+        run();
+        let a0 = allocs();
+        let f_evals = run();
+        let delta = allocs() - a0;
+        assert!(f_evals > 0, "sharded {label}: nothing integrated");
+        assert_eq!(
+            delta, 0,
+            "sharded {label}: warmed sharded integrate allocated {delta} times"
+        );
     }
 
     // ---- MemTracker peaks unchanged by the refactor ---------------------

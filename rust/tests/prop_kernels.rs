@@ -1,0 +1,197 @@
+//! Kernel-equivalence property suite: every chunked/SIMD dispatch kernel
+//! in `mali_ode::tensor` must match the frozen [`scalar`] oracle
+//! **bitwise** — not approximately — for all shapes, so swapping the
+//! dispatch body (autovectorized arrays on stable, `std::simd` under
+//! `--features simd`) can never move a single ULP anywhere in the solver
+//! stack.  CI runs this file under both feature settings (the stable
+//! matrix legs and the `simd-nightly` job); the assertions are identical
+//! because the contract is identical.
+//!
+//! Coverage is a seeded-random sweep over the shapes that exercise every
+//! dispatch path: widths 1..=67 (head-only, single-chunk, multi-chunk,
+//! chunk+tail — spanning several `LANES` boundaries), destination slices
+//! taken at offsets 0..4 from the backing allocation (so the alignment
+//! head peel sees every f32 phase of a `LANES`-aligned boundary), and
+//! batch sizes B ∈ {1, 3, 32} for the row kernels.  The matmul
+//! accumulation-order identity — blocked dispatch = blocked scalar
+//! oracle = naive i/p/j triple loop, per output element — is asserted
+//! explicitly across shapes below, at and beyond the column-block width.
+
+use mali_ode::tensor::{self, scalar, LANES};
+use mali_ode::util::rng::Rng;
+
+/// Bit-exact view: `assert_eq!` on f32 slices would treat `-0.0 == 0.0`
+/// and miss sign-of-zero divergence; comparing the raw bits does not.
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn filled(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+/// Offsets into the backing buffers: 0..4 covers every 4-byte phase the
+/// destination pointer can take relative to a `LANES * 4`-byte boundary
+/// (further offsets repeat phases modulo `LANES`).
+const OFFSETS: [usize; 4] = [0, 1, 2, 3];
+const MAX_W: usize = 67;
+
+#[test]
+fn axpy_matches_scalar_bitwise_across_widths_and_offsets() {
+    let mut rng = Rng::new(0xA11);
+    assert!(MAX_W > 8 * LANES, "sweep must span several chunk widths");
+    for w in 1..=MAX_W {
+        for off in OFFSETS {
+            let x_back = filled(&mut rng, MAX_W + 4);
+            let y_back = filled(&mut rng, MAX_W + 4);
+            let a = rng.range(-2.0, 2.0) as f32;
+            let x = &x_back[off..off + w];
+            let mut y_k = y_back.clone();
+            let mut y_s = y_back.clone();
+            tensor::axpy(a, x, &mut y_k[off..off + w]);
+            scalar::axpy(a, x, &mut y_s[off..off + w]);
+            assert_eq!(bits(&y_k), bits(&y_s), "axpy w={w} off={off}");
+        }
+    }
+}
+
+#[test]
+fn add_scaled_into_matches_scalar_bitwise_across_widths_and_offsets() {
+    let mut rng = Rng::new(0xADD);
+    for w in 1..=MAX_W {
+        for off in OFFSETS {
+            let x_back = filled(&mut rng, MAX_W + 4);
+            let y_back = filled(&mut rng, MAX_W + 4);
+            let a = rng.range(-2.0, 2.0) as f32;
+            let x = &x_back[off..off + w];
+            let y = &y_back[off..off + w];
+            let mut o_k = vec![9.0f32; MAX_W + 4];
+            let mut o_s = vec![9.0f32; MAX_W + 4];
+            tensor::add_scaled_into(x, a, y, &mut o_k[off..off + w]);
+            scalar::add_scaled_into(x, a, y, &mut o_s[off..off + w]);
+            assert_eq!(bits(&o_k), bits(&o_s), "add_scaled_into w={w} off={off}");
+        }
+    }
+}
+
+#[test]
+fn row_kernels_match_scalar_bitwise_across_batch_sizes() {
+    let mut rng = Rng::new(0xB0B);
+    // n_z sweep straddles the lane width and several chunk boundaries;
+    // with B up to 32 the flat buffers also cross MATMUL-scale lengths
+    let widths = [1usize, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64, 67];
+    for &b in &[1usize, 3, 32] {
+        for &n_z in &widths {
+            for off in OFFSETS {
+                let flat = b * n_z;
+                let x_back = filled(&mut rng, flat + 4);
+                let y_back = filled(&mut rng, flat + 4);
+                let coeffs = filled(&mut rng, b);
+                let x = &x_back[off..off + flat];
+
+                let mut y_k = y_back.clone();
+                let mut y_s = y_back.clone();
+                tensor::axpy_rows(&coeffs, x, &mut y_k[off..off + flat], n_z);
+                scalar::axpy_rows(&coeffs, x, &mut y_s[off..off + flat], n_z);
+                assert_eq!(
+                    bits(&y_k),
+                    bits(&y_s),
+                    "axpy_rows B={b} n_z={n_z} off={off}"
+                );
+
+                let y = &y_back[off..off + flat];
+                let mut o_k = vec![9.0f32; flat + 4];
+                let mut o_s = vec![9.0f32; flat + 4];
+                tensor::add_scaled_rows_into(x, &coeffs, y, n_z, &mut o_k[off..off + flat]);
+                scalar::add_scaled_rows_into(x, &coeffs, y, n_z, &mut o_s[off..off + flat]);
+                assert_eq!(
+                    bits(&o_k),
+                    bits(&o_s),
+                    "add_scaled_rows_into B={b} n_z={n_z} off={off}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lincomb_into_matches_scalar_bitwise_including_zero_terms() {
+    let mut rng = Rng::new(0x11C);
+    for w in 1..=MAX_W {
+        for &n_terms in &[1usize, 2, 5] {
+            let xs: Vec<Vec<f32>> = (0..n_terms).map(|_| filled(&mut rng, w)).collect();
+            let mut cs: Vec<f32> = (0..n_terms)
+                .map(|_| rng.range(-2.0, 2.0) as f32)
+                .collect();
+            // zero coefficients are part of the contract (the oracle
+            // accumulates them too — RK tableaus hit this constantly)
+            if n_terms > 1 {
+                cs[1] = 0.0;
+            }
+            let terms: Vec<(f32, &[f32])> =
+                cs.iter().zip(&xs).map(|(&c, x)| (c, x.as_slice())).collect();
+            let mut o_k = vec![9.0f32; w];
+            let mut o_s = vec![9.0f32; w];
+            tensor::lincomb_into(&terms, &mut o_k);
+            scalar::lincomb_into(&terms, &mut o_s);
+            assert_eq!(bits(&o_k), bits(&o_s), "lincomb_into w={w} terms={n_terms}");
+        }
+    }
+}
+
+/// The accumulation-order identity, asserted explicitly: for every output
+/// element, the blocked dispatch matmul, the blocked scalar oracle and
+/// the naive i/p/j triple loop all add the `k` products in the same
+/// ascending-`p` order, so all three agree **bitwise** — blocking and
+/// vectorization only regroup work *across* output elements, never the
+/// additions *within* one.
+#[test]
+fn matmul_accumulation_order_identity() {
+    let mut rng = Rng::new(0x3A7);
+    // shapes below, at and across the column-block width (64), plus the
+    // B=32 row-kernel scale used by the batched solvers
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 4, 5),
+        (2, 7, 64),
+        (3, 5, 65),
+        (5, 8, 130),
+        (32, 4, 4),
+        (32, 64, 64),
+    ];
+    for &(m, k, n) in &shapes {
+        let mut a = filled(&mut rng, m * k);
+        let b = filled(&mut rng, k * n);
+        // sprinkle zeros so the zero-skip path must also preserve order
+        for av in a.iter_mut().step_by(7) {
+            *av = 0.0;
+        }
+        let mut naive = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    naive[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        let mut o_k = vec![1.0f32; m * n];
+        let mut o_s = vec![1.0f32; m * n];
+        tensor::matmul_into(&a, &b, m, k, n, &mut o_k);
+        scalar::matmul_into(&a, &b, m, k, n, &mut o_s);
+        assert_eq!(bits(&o_k), bits(&naive), "dispatch vs naive ({m},{k},{n})");
+        assert_eq!(bits(&o_s), bits(&naive), "oracle vs naive ({m},{k},{n})");
+    }
+}
+
+/// `simd_enabled()` faithfully reports the compiled dispatch path, so the
+/// bench JSON's `simd_feature` field can be trusted.
+#[test]
+fn simd_flag_reports_compiled_feature() {
+    assert_eq!(tensor::simd_enabled(), cfg!(feature = "simd"));
+}

@@ -136,6 +136,7 @@ fn threaded_server_matches_solo_bitwise() {
             max_batch: 8,
             max_wait: Duration::from_millis(20),
             workers: 2,
+            shards: 0,
         },
     );
     // submit everything first so the batcher has real coalescing to do
@@ -174,6 +175,7 @@ fn mixed_classes_are_served_separately_and_correctly() {
             max_batch: 8,
             max_wait: Duration::from_millis(10),
             workers: 1,
+            shards: 0,
         },
     );
     let handles: Vec<_> = rows
@@ -212,6 +214,7 @@ fn queue_saturation_bounds_memory_and_sheds_explicitly() {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             workers: 0,
+            shards: 0,
         },
     );
     let z0 = vec![1.0f32; N_Z];

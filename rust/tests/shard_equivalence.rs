@@ -1,0 +1,387 @@
+//! Sharding-equivalence suite: intra-batch sharding is a **pure
+//! scheduling change**.  `integrate_batch_obs_stats_sharded` and the
+//! sharded `ServeWorker::process` path must produce bitwise-identical
+//! results to the 1-shard/direct run for every shard count — final
+//! states, per-observation snapshots, per-sample accepted/trial counts
+//! and the batch `f`-evaluation total (the toy dynamics count batched
+//! `f` by rows, so the total is shard-invariant too).
+//!
+//! Coverage: shard counts {1, 2, 3, 8} × {sequential, pooled} dispatch,
+//! a batch size (7) that divides into none of them evenly, a batch (3)
+//! smaller than the shard count so trailing shards are entirely
+//! inactive, fixed and adaptive stepping (adaptive with heterogeneous
+//! rows, so the per-sample controllers genuinely diverge), and a K ≥ 2
+//! observation grid streamed through per-shard observers.
+
+use mali_ode::serve::{ModelRegistry, Pending, RequestClass, ServeWorker};
+use mali_ode::solvers::batch::BatchState;
+use mali_ode::solvers::by_name as solver_by_name;
+use mali_ode::solvers::dynamics::{Dynamics, EvalCounters, LinearToy};
+use mali_ode::solvers::integrate::{
+    integrate_batch_obs_stats_sharded, integrate_batch_obs_stats_ws, BatchShards,
+    BatchStepObserver, ErrorNorm, ObsGrid, StepMode,
+};
+use mali_ode::solvers::workspace::BatchWorkspace;
+use mali_ode::solvers::{Solver, State};
+use mali_ode::util::pool::WorkerPool;
+use std::sync::{Arc, Mutex};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Everything a run produces, in bit-exact form.
+#[derive(Debug, PartialEq)]
+struct RunArtifacts {
+    z: Vec<u32>,
+    v: Vec<u32>,
+    /// `(n_accepted, n_trials)` per sample, in global row order.
+    per: Vec<(usize, usize)>,
+    f_evals: u64,
+    /// `(t bits, z bits)` per `(global row, grid index)`.
+    obs: Vec<(u64, Vec<u32>)>,
+}
+
+/// Streams observations into a shared, globally-indexed sink; `base` is
+/// the shard's first global row (the sharded driver hands observers
+/// shard-local sample indices).
+struct ObsSink<'a> {
+    base: usize,
+    k_total: usize,
+    sink: &'a Mutex<Vec<(u64, Vec<u32>)>>,
+}
+
+impl BatchStepObserver for ObsSink<'_> {
+    fn on_observation(&mut self, sample: usize, k: usize, t: f64, z: &[f32], _v: Option<&[f32]>) {
+        let mut s = self.sink.lock().unwrap();
+        s[(self.base + sample) * self.k_total + k] = (t.to_bits(), bits(z));
+    }
+}
+
+/// One equivalence scenario: the initial batch plus everything needed to
+/// run it direct or sharded.
+struct Case<'a> {
+    solver: &'a (dyn Solver + Sync),
+    toy: &'a LinearToy,
+    state0: &'a BatchState,
+    mode: &'a StepMode,
+    grid: &'a ObsGrid,
+    nb: usize,
+    n_z: usize,
+    k: usize,
+}
+
+impl Case<'_> {
+    fn harvest(
+        &self,
+        ws: &BatchWorkspace,
+        per: &[mali_ode::solvers::integrate::IntStats],
+        f_evals: u64,
+        sink: Mutex<Vec<(u64, Vec<u32>)>>,
+    ) -> RunArtifacts {
+        let out = ws.output();
+        RunArtifacts {
+            z: bits(&out.z.data),
+            v: out.v.as_ref().map(|t| bits(&t.data)).unwrap_or_default(),
+            per: per.iter().map(|p| (p.n_accepted, p.n_trials)).collect(),
+            f_evals,
+            obs: sink.into_inner().unwrap(),
+        }
+    }
+
+    fn run_direct(&self) -> RunArtifacts {
+        let sink = Mutex::new(vec![(0u64, Vec::new()); self.nb * self.k]);
+        let mut obs = ObsSink {
+            base: 0,
+            k_total: self.k,
+            sink: &sink,
+        };
+        let mut per = Vec::new();
+        let mut ws = BatchWorkspace::new();
+        let f_evals = integrate_batch_obs_stats_ws(
+            self.solver,
+            self.toy,
+            0.0,
+            1.0,
+            self.state0,
+            self.mode,
+            &ErrorNorm::Full,
+            self.grid,
+            &mut obs,
+            &mut per,
+            &mut ws,
+        )
+        .unwrap();
+        self.harvest(&ws, &per, f_evals, sink)
+    }
+
+    fn run_sharded(&self, shard_count: usize, use_pool: bool) -> RunArtifacts {
+        let sink = Mutex::new(vec![(0u64, Vec::new()); self.nb * self.k]);
+        let mut shards = BatchShards::new(shard_count);
+        let pool = if use_pool {
+            Some(WorkerPool::new(shard_count.saturating_sub(1)))
+        } else {
+            None
+        };
+        let mut per = Vec::new();
+        let mut ws = BatchWorkspace::new();
+        let f_evals = integrate_batch_obs_stats_sharded(
+            self.solver,
+            self.toy,
+            0.0,
+            1.0,
+            self.state0,
+            self.mode,
+            &ErrorNorm::Full,
+            self.grid,
+            |_shard, rows: std::ops::Range<usize>| ObsSink {
+                base: rows.start,
+                k_total: self.k,
+                sink: &sink,
+            },
+            &mut per,
+            &mut shards,
+            &mut ws,
+            pool.as_ref(),
+        )
+        .unwrap();
+        self.harvest(&ws, &per, f_evals, sink)
+    }
+
+    /// Run direct once, then assert every `(shard count, dispatch)`
+    /// combination reproduces it bit for bit.
+    fn assert_all_equivalent(&self, label: &str, shard_counts: &[usize]) {
+        let direct = self.run_direct();
+        assert_eq!(direct.z.len(), self.nb * self.n_z, "{label}: output shape");
+        assert_eq!(direct.per.len(), self.nb, "{label}: per-sample stats");
+        assert!(
+            direct.obs.iter().all(|(_, z)| z.len() == self.n_z),
+            "{label}: every (row, grid point) observation fired"
+        );
+        assert!(direct.f_evals > 0, "{label}: f was evaluated");
+        for &s in shard_counts {
+            for use_pool in [false, true] {
+                let got = self.run_sharded(s, use_pool);
+                assert_eq!(
+                    got, direct,
+                    "{label}: shards={s} pooled={use_pool} diverged from direct run"
+                );
+            }
+        }
+    }
+}
+
+/// Heterogeneous rows (different magnitudes per row) so the adaptive
+/// controllers take genuinely different step sequences per sample.
+fn mk_state(solver: &dyn Solver, toy: &LinearToy, nb: usize, n_z: usize) -> BatchState {
+    let states: Vec<State> = (0..nb)
+        .map(|r| {
+            let scale = 0.3 + 0.45 * r as f32;
+            let z0: Vec<f32> = (0..n_z).map(|i| scale * (1.0 + 0.07 * i as f32)).collect();
+            solver.init(toy, 0.0, &z0)
+        })
+        .collect();
+    let refs: Vec<&State> = states.iter().collect();
+    BatchState::from_states(&refs)
+}
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+#[test]
+fn sharded_fixed_grid_is_bitwise_identical() {
+    let (nb, n_z, k) = (7usize, 5usize, 3usize);
+    let toy = LinearToy::new(-0.35, n_z);
+    let solver = solver_by_name("alf").unwrap();
+    let state0 = mk_state(&*solver, &toy, nb, n_z);
+    let case = Case {
+        solver: &*solver,
+        toy: &toy,
+        state0: &state0,
+        mode: &StepMode::Fixed { h: 0.02 },
+        grid: &ObsGrid::uniform(0.0, 1.0, k),
+        nb,
+        n_z,
+        k,
+    };
+    // B = 7 divides into none of {2, 3, 8} evenly; 8 shards leave one
+    // shard with no rows at all
+    case.assert_all_equivalent("fixed B=7", &SHARD_COUNTS);
+}
+
+#[test]
+fn sharded_adaptive_is_bitwise_identical() {
+    let (nb, n_z, k) = (7usize, 5usize, 2usize);
+    let toy = LinearToy::new(-0.35, n_z);
+    let solver = solver_by_name("alf").unwrap();
+    let state0 = mk_state(&*solver, &toy, nb, n_z);
+    let case = Case {
+        solver: &*solver,
+        toy: &toy,
+        state0: &state0,
+        mode: &StepMode::adaptive(1e-4, 1e-6),
+        grid: &ObsGrid::uniform(0.0, 1.0, k),
+        nb,
+        n_z,
+        k,
+    };
+    let direct = case.run_direct();
+    // heterogeneous rows must actually diverge, or this test proves less
+    // than it claims
+    assert!(
+        direct.per.windows(2).any(|w| w[0] != w[1]),
+        "adaptive rows took identical step sequences; raise the row spread"
+    );
+    case.assert_all_equivalent("adaptive B=7", &SHARD_COUNTS);
+}
+
+#[test]
+fn more_shards_than_rows_leaves_inactive_shards_harmless() {
+    let (nb, n_z, k) = (3usize, 5usize, 2usize);
+    let toy = LinearToy::new(-0.35, n_z);
+    let solver = solver_by_name("alf").unwrap();
+    let state0 = mk_state(&*solver, &toy, nb, n_z);
+    let case = Case {
+        solver: &*solver,
+        toy: &toy,
+        state0: &state0,
+        mode: &StepMode::Fixed { h: 0.02 },
+        grid: &ObsGrid::uniform(0.0, 1.0, k),
+        nb,
+        n_z,
+        k,
+    };
+    // 8 shards over 3 rows: five shards have empty ranges and must not
+    // contribute anything (or crash) on either dispatch path
+    case.assert_all_equivalent("B=3 with 8 shards", &[8]);
+}
+
+#[test]
+fn device_batched_dynamics_are_rejected_when_sharded() {
+    /// A dynamics that claims device batching (fixed [B, n_z] baked into
+    /// one executable) — the one shape sharding cannot decompose.
+    struct DeviceToy(LinearToy);
+    impl Dynamics for DeviceToy {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+        fn param_dim(&self) -> usize {
+            self.0.param_dim()
+        }
+        fn f(&self, t: f64, z: &[f32]) -> Vec<f32> {
+            self.0.f(t, z)
+        }
+        fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+            self.0.f_vjp(t, z, a)
+        }
+        fn params(&self) -> &[f32] {
+            self.0.params()
+        }
+        fn set_params(&mut self, theta: &[f32]) {
+            self.0.set_params(theta)
+        }
+        fn counters(&self) -> &EvalCounters {
+            self.0.counters()
+        }
+        fn is_device_batched(&self) -> bool {
+            true
+        }
+    }
+
+    let (nb, n_z) = (4usize, 3usize);
+    let toy = DeviceToy(LinearToy::new(-0.35, n_z));
+    let solver = solver_by_name("alf").unwrap();
+    let states: Vec<State> = (0..nb)
+        .map(|r| {
+            let z0 = vec![0.5 + r as f32; n_z];
+            solver.init(&toy, 0.0, &z0)
+        })
+        .collect();
+    let refs: Vec<&State> = states.iter().collect();
+    let state0 = BatchState::from_states(&refs);
+    let mut shards = BatchShards::new(2);
+    let mut per = Vec::new();
+    let mut ws = BatchWorkspace::new();
+    let err = integrate_batch_obs_stats_sharded(
+        &*solver,
+        &toy,
+        0.0,
+        1.0,
+        &state0,
+        &StepMode::Fixed { h: 0.1 },
+        &ErrorNorm::Full,
+        &ObsGrid::none(),
+        |_, _| (),
+        &mut per,
+        &mut shards,
+        &mut ws,
+        None,
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("device-batched"),
+        "wrong rejection: {err}"
+    );
+}
+
+/// The serve layer's sharded `run_batch` branch: `ServeWorker::process`
+/// must hand every request byte-for-byte the same response at every
+/// shard count — final state, observation snapshots, step and trial
+/// counts.
+#[test]
+fn serve_worker_process_is_bitwise_identical_across_shard_counts() {
+    const N_Z: usize = 6;
+    const B: usize = 7;
+    let mut reg = ModelRegistry::new();
+    reg.register("toy", Box::new(LinearToy::new(-0.4, N_Z)));
+    let registry = Arc::new(reg);
+    let rows: Vec<Vec<f32>> = (0..B)
+        .map(|b| (0..N_Z).map(|j| 0.2 + 0.3 * b as f32 + 0.05 * j as f32).collect())
+        .collect();
+    for adaptive in [false, true] {
+        let label = if adaptive { "adaptive" } else { "fixed" };
+        let mut baseline: Option<Vec<(Vec<u32>, Vec<u32>, usize, usize)>> = None;
+        for shards in SHARD_COUNTS {
+            let mode = if adaptive {
+                StepMode::adaptive(1e-4, 1e-6)
+            } else {
+                StepMode::Fixed { h: 0.01 }
+            };
+            let class = Arc::new(
+                RequestClass::new(
+                    "toy",
+                    "alf",
+                    N_Z,
+                    0.0,
+                    1.0,
+                    mode,
+                    ObsGrid::uniform(0.0, 1.0, 2),
+                )
+                .unwrap(),
+            );
+            let mut w = ServeWorker::with_shards(registry.clone(), shards);
+            assert_eq!(w.shard_count(), shards);
+            let mut batch: Vec<Pending> = rows
+                .iter()
+                .map(|z0| Pending::new(class.clone(), z0.clone()))
+                .collect();
+            w.process(&mut batch).unwrap();
+            let got: Vec<(Vec<u32>, Vec<u32>, usize, usize)> = batch
+                .iter()
+                .map(|p| (bits(&p.z_final), bits(&p.obs), p.n_accepted, p.n_trials))
+                .collect();
+            assert!(
+                got.iter().all(|(z, obs, acc, _)| {
+                    z.len() == N_Z && obs.len() == 2 * N_Z && *acc > 0
+                }),
+                "{label} shards={shards}: malformed responses"
+            );
+            match &baseline {
+                None => baseline = Some(got),
+                Some(b) => assert_eq!(
+                    &got, b,
+                    "{label} shards={shards}: responses diverged from 1-shard run"
+                ),
+            }
+        }
+    }
+}
