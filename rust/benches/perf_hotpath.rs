@@ -19,6 +19,11 @@
 //!   `tensor::scalar` oracle, at `n_z ∈ {4, 64}`; the JSON records
 //!   whether the build had the `simd` feature (`simd_feature`) so rows
 //!   from different builds are never compared blind.
+//! * **native MLP fused dispatch** — steps/sec of the MALI round trip
+//!   over `dynamics_native::MlpDynamics` at hidden ∈ {64, 256} with the
+//!   fused ψ/ψ⁻¹/ψ-vjp entries vs the composed unfused kernels
+//!   (bitwise-identical arithmetic, `tests/prop_solver.rs` pins it), and
+//!   a dispatch-vs-scalar `matmul_into` A/B at the same hidden widths.
 //! * **intra-batch sharding** — row-steps/sec of the sharded batched
 //!   integrator (`integrate_batch_obs_stats_sharded`) at
 //!   shards ∈ {1, 2, 4} on a persistent `WorkerPool`, `n_z ∈ {4, 64}`,
@@ -31,10 +36,12 @@
 //! Run: `cargo bench --bench perf_hotpath` (append `-- --smoke` for the
 //! short CI windows; `MALI_BENCH_OUT` overrides the JSON path).
 
+use mali_ode::dynamics_native::{MlpDynamics as NativeMlp, TimeMode};
 use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
+use mali_ode::solvers::alf::AlfSolver;
 use mali_ode::solvers::batch::{BatchSpec, BatchState};
 use mali_ode::solvers::by_name as solver_by_name;
-use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy};
 use mali_ode::solvers::integrate::{
     integrate_batch_obs_stats_sharded, BatchShards, ErrorNorm, ObsGrid, StepMode,
 };
@@ -114,6 +121,50 @@ fn roundtrip_ws(
             prev,
             a_prev,
             &mut grad_theta,
+            ws,
+        );
+        assert!(ok, "ALF is invertible");
+        std::mem::swap(state, prev);
+        std::mem::swap(&mut a, a_prev);
+    }
+    grad_theta[0] + a.z[0]
+}
+
+/// The MALI round trip over an arbitrary `Dynamics` through the
+/// workspace path — like [`roundtrip_ws`], but with a caller-sized
+/// θ-gradient buffer so it works for multi-parameter models.
+#[allow(clippy::too_many_arguments)]
+fn native_roundtrip(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    z0: &[f32],
+    h: f64,
+    n: usize,
+    ws: &mut SolverWorkspace,
+    bufs: &mut [State; 4],
+    grad_theta: &mut [f32],
+) -> f32 {
+    let [state, next, prev, a_prev] = bufs;
+    *state = solver.init(dynamics, 0.0, z0);
+    let mut err = Vec::new();
+    for i in 0..n {
+        solver.step_into(dynamics, i as f64 * h, h, state, next, &mut err, ws);
+        std::mem::swap(state, next);
+    }
+    let mut a = State {
+        z: state.z.iter().map(|&z| 2.0 * z).collect(),
+        v: Some(vec![0.0f32; state.z.len()]),
+    };
+    for i in (1..=n).rev() {
+        let ok = solver.invert_and_vjp_into(
+            dynamics,
+            i as f64 * h,
+            h,
+            state,
+            &a,
+            prev,
+            a_prev,
+            grad_theta,
             ws,
         );
         assert!(ok, "ALF is invertible");
@@ -366,6 +417,102 @@ fn main() {
         tensor_rows.push((label.to_string(), Json::Obj(kernels.into_iter().collect())));
     }
 
+    // ---- native MLP: fused vs unfused ψ dispatch ------------------------
+    // Bitwise the same numbers either way (tests/prop_solver.rs); the
+    // ratio measures what one-dispatch-per-ψ-step buys once a real layer
+    // stack, not a toy, sits under the solver.
+    let mut mlp_rows: Vec<(String, Json)> = Vec::new();
+    for &(label, hidden) in &[("hidden=64", 64usize), ("hidden=256", 256usize)] {
+        let n_z = 16usize;
+        let mut rng = Rng::new(7);
+        let mlp = NativeMlp::new(n_z, &[hidden], TimeMode::Concat, &mut rng);
+        let fused = AlfSolver::new(1.0);
+        assert!(fused.prefer_fused);
+        let unfused = AlfSolver {
+            eta: 1.0,
+            prefer_fused: false,
+        };
+        let z0: Vec<f32> = (0..n_z).map(|i| 0.5 + 0.01 * i as f32).collect();
+        let (h, n) = (0.05, 40usize);
+        let steps = 2.0 * n as f64;
+        let mut ws = SolverWorkspace::new();
+        let mut bufs = [
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+        ];
+        let mut grad_theta = vec![0.0f32; mlp.param_dim()];
+        let mut measure = |solver: &AlfSolver| -> f64 {
+            let t = time_until(budget, || {
+                grad_theta.fill(0.0);
+                std::hint::black_box(native_roundtrip(
+                    solver,
+                    &mlp,
+                    &z0,
+                    h,
+                    n,
+                    &mut ws,
+                    &mut bufs,
+                    &mut grad_theta,
+                ));
+            });
+            steps / t.min_s
+        };
+        let sps_fused = measure(&fused);
+        let sps_unfused = measure(&unfused);
+        let speedup = sps_fused / sps_unfused;
+        println!(
+            "mlp {label}: fused {sps_fused:.3e} steps/s, unfused {sps_unfused:.3e} \
+             ({speedup:.2}x)"
+        );
+
+        // dispatch vs scalar matmul at this hidden width — the kernel
+        // the fused step spends its time in
+        let b_rows = 8usize;
+        let reps = 8usize;
+        let mut mm_rng = Rng::new(43);
+        let x: Vec<f32> = (0..b_rows * hidden).map(|_| mm_rng.range(-1.0, 1.0) as f32).collect();
+        let w: Vec<f32> = (0..hidden * hidden).map(|_| mm_rng.range(-1.0, 1.0) as f32).collect();
+        let mut mm_s = vec![0.0f32; b_rows * hidden];
+        let mut mm_d = vec![0.0f32; b_rows * hidden];
+        let (sc, di) = ab_throughput(
+            budget,
+            (reps * b_rows * hidden * hidden) as f64,
+            || {
+                for _ in 0..reps {
+                    tensor::scalar::matmul_into(&x, &w, b_rows, hidden, hidden, &mut mm_s);
+                }
+            },
+            || {
+                for _ in 0..reps {
+                    tensor::matmul_into(&x, &w, b_rows, hidden, hidden, &mut mm_d);
+                }
+            },
+        );
+        println!(
+            "mlp {label} matmul: scalar {sc:.3e}/s dispatch {di:.3e}/s ({:.2}x, simd {simd_on})",
+            di / sc
+        );
+        std::hint::black_box((&mm_s, &mm_d));
+        mlp_rows.push((
+            label.to_string(),
+            Json::obj(vec![
+                ("steps_per_sec_fused", Json::Num(sps_fused)),
+                ("steps_per_sec_unfused", Json::Num(sps_unfused)),
+                ("speedup_fused_vs_unfused", Json::Num(speedup)),
+                (
+                    "matmul",
+                    Json::obj(vec![
+                        ("scalar_per_sec", Json::Num(sc)),
+                        ("dispatch_per_sec", Json::Num(di)),
+                        ("speedup_dispatch_vs_scalar", Json::Num(di / sc)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+
     // ---- intra-batch sharding: row-steps/sec at shards ∈ {1, 2, 4} ------
     // Bitwise the same result at every shard count (the equivalence
     // suite pins it); this measures the wall-clock knob.
@@ -519,6 +666,10 @@ fn main() {
         map.insert(
             "tensor".into(),
             Json::Obj(tensor_rows.into_iter().collect()),
+        );
+        map.insert(
+            "mlp".into(),
+            Json::Obj(mlp_rows.into_iter().collect()),
         );
         map.insert(
             "shards".into(),

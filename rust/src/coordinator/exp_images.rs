@@ -442,6 +442,109 @@ pub fn table3(scale: Scale, seed: u64) -> Result<Json> {
     Ok(report::summary(rows, vec![("seed", Json::Num(seed as f64))]))
 }
 
+/// Per-method solver for the native runs (no Dopri5 needed at this scale:
+/// order-matched RK2-family everywhere, ALF for MALI).
+fn native_solver_for(method: &str) -> &'static str {
+    match method {
+        "mali" => "alf",
+        "aca" => "heun-euler",
+        _ => "rk2",
+    }
+}
+
+/// E2 **native** — the Fig. 5 protocol on the artifact-free
+/// fused-dynamics classifier ([`crate::models::native::NativeOdeClassifier`]):
+/// synthetic CIFAR-shaped data, conv-stem ODE dynamics through the SIMD
+/// kernels, all four gradient methods.  Runs under plain `cargo test` /
+/// CI with no PJRT and no `make artifacts`.
+pub fn fig5_native(scale: Scale, seed: u64) -> Result<Json> {
+    use crate::models::native::NativeOdeClassifier;
+
+    let spec = ImageSpec {
+        side: 8,
+        channels: 3,
+        classes: 4,
+        jitter: 0.3,
+    };
+    let batch = 8;
+    let n_test = scale.pick(16, 64);
+    let n = scale.pick(64, 512) + n_test;
+    let (train, test) = generate(&spec, n, seed + 100).split(n_test);
+    let epochs = scale.pick(2, 10);
+    let lr = 0.3f32;
+
+    let mut table = Table::new(
+        "E2 native: fused conv-stem ODE classifier (no artifacts)",
+        &["method", "final CE", "test acc", "f evals"],
+    );
+    let mut rows = Vec::new();
+    for method in ["mali", "aca", "naive", "adjoint"] {
+        let mut rng = Rng::new(seed);
+        let mut model = NativeOdeClassifier::new(&spec, &[4], &mut rng);
+        let solver = crate::solvers::by_name(native_solver_for(method))?;
+        let grad = crate::grad::by_name(method)?;
+        let cfg = SolveCfg {
+            solver: &*solver,
+            spec: IvpSpec::fixed(0.0, 1.0, 0.25),
+            method: &*grad,
+        };
+        let mut order_rng = Rng::new(seed + 7);
+        let mut loss = f64::NAN;
+        let mut f_evals = 0u64;
+        for _ in 0..epochs {
+            for idxs in train.epoch_batches(batch, &mut order_rng) {
+                let x = train.gather(&idxs);
+                let y1h = train.one_hot(&idxs);
+                let out = model.step(&x, &y1h, &cfg)?;
+                loss = out.loss;
+                f_evals += out.f_evals;
+                for (v, g) in model.head.value.iter_mut().zip(model.head.grad.clone()) {
+                    *v -= lr * g;
+                }
+                let th: Vec<f32> = model
+                    .dynamics
+                    .params()
+                    .iter()
+                    .zip(&model.dyn_grad)
+                    .map(|(p, g)| p - lr * g)
+                    .collect();
+                model.dynamics.set_params(&th);
+            }
+        }
+        let mut correct = 0.0f64;
+        let mut n_eval = 0usize;
+        for idxs in test.eval_batches(batch) {
+            let x = test.gather(&idxs);
+            let logits = model.predict(&x, &cfg)?;
+            let y: Vec<usize> = idxs.iter().map(|&i| test.y[i]).collect();
+            correct += model.accuracy(&logits, &y) * y.len() as f64;
+            n_eval += y.len();
+        }
+        let acc = correct / n_eval as f64;
+        table.row(&[
+            method.into(),
+            format!("{loss:.4}"),
+            format!("{acc:.3}"),
+            f_evals.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("method", Json::Str(method.into())),
+            ("final_loss", Json::Num(loss)),
+            ("test_acc", Json::Num(acc)),
+            ("f_evals", Json::Num(f_evals as f64)),
+        ]));
+    }
+    table.print();
+    Ok(report::summary(
+        rows,
+        vec![
+            ("epochs", Json::Num(epochs as f64)),
+            ("train_n", Json::Num(train.len() as f64)),
+            ("native", Json::Bool(true)),
+        ],
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,5 +566,16 @@ mod tests {
         assert!(adjoint <= mali, "adjoint {adjoint} vs mali {mali}");
         assert!(mali < aca, "mali {mali} vs aca {aca}");
         assert!(aca < naive, "aca {aca} vs naive {naive}");
+    }
+
+    /// E2 native runs end-to-end with no artifacts and no PJRT — the
+    /// tier-1 guarantee the HLO-backed fig5 cannot give.
+    #[test]
+    fn e2_native_smoke() {
+        let summary = fig5_native(Scale::Quick, 3).unwrap();
+        let s = summary.dump();
+        for method in ["mali", "aca", "naive", "adjoint"] {
+            assert!(s.contains(method), "method {method} missing from summary");
+        }
     }
 }

@@ -366,3 +366,118 @@ pub fn table7(scale: Scale, seed: u64) -> Result<Json> {
 pub fn speech_corpus(n: usize, seed: u64) -> SequenceDataset {
     speech::generate(&SpeechSpec::commands10(), n, seed)
 }
+
+/// E8 **native** — the Table 4 protocol on the artifact-free latent ODE
+/// ([`crate::models::native::NativeLatentOde`]): hopper sequences, linear
+/// encoder/decoder on the host, fused time-concat MLP dynamics, all four
+/// gradient methods.  Runs under plain `cargo test` / CI with no PJRT.
+pub fn table4_native(scale: Scale, seed: u64) -> Result<Json> {
+    use crate::models::native::NativeLatentOde;
+
+    let (t_len, t_out, latent) = (6, 3, 8);
+    let batch = 8;
+    let n_train = scale.pick(24, 160);
+    let n_test = scale.pick(8, 32);
+    let ds = hopper::generate(n_train + n_test, t_len, t_out, 3.0, seed + 11);
+    let epochs = scale.pick(3, 20);
+
+    let mut table = Table::new(
+        "E6 native: fused-MLP latent ODE, hopper test MSE ×0.01 (no artifacts)",
+        &["method", "mse ×0.01", "f evals"],
+    );
+    let mut rows = Vec::new();
+    for method in ["adjoint", "naive", "aca", "mali"] {
+        let mut rng = Rng::new(seed);
+        let mut model = NativeLatentOde::new(hopper::OBS_DIM, t_len, t_out, latent, &[16], &mut rng);
+        let solver = crate::solvers::by_name(solver_for(method))?;
+        let grad = crate::grad::by_name(method)?;
+        let spec = IvpSpec::fixed(0.0, 1.0, 0.25);
+        let mut opt_enc = opt_by_name("adamax", 0.01, model.enc.len())?;
+        let mut opt_dec = opt_by_name("adamax", 0.01, model.dec.len())?;
+        let mut opt_dyn = opt_by_name("adamax", 0.01, model.dynamics.param_dim())?;
+        let mut f_evals = 0u64;
+        for _ in 0..epochs {
+            let mut order: Vec<usize> = (0..n_train).collect();
+            rng.shuffle(&mut order);
+            // the native model takes any batch size — no padding needed
+            for chunk in order.chunks(batch) {
+                let mut seq = Vec::new();
+                let mut tgt = Vec::new();
+                for &i in chunk {
+                    seq.extend_from_slice(ds.observed(i, t_len));
+                    tgt.extend_from_slice(ds.target(i, t_len, t_out));
+                }
+                let cfg = SolveCfg {
+                    solver: &*solver,
+                    spec: spec.clone(),
+                    method: &*grad,
+                };
+                let out = model.step(&seq, &tgt, &cfg)?;
+                f_evals += out.f_evals;
+                opt_enc.step(&mut model.enc.value, &model.enc.grad);
+                opt_dec.step(&mut model.dec.value, &model.dec.grad);
+                let mut theta = model.dynamics.params().to_vec();
+                opt_dyn.step(&mut theta, &model.dyn_grad);
+                model.dynamics.set_params(&theta);
+            }
+        }
+        let cfg = SolveCfg {
+            solver: &*solver,
+            spec,
+            method: &*grad,
+        };
+        let mut sse = 0.0f64;
+        let mut n_elems = 0usize;
+        let test_idx: Vec<usize> = (n_train..n_train + n_test).collect();
+        for chunk in test_idx.chunks(batch) {
+            let mut seq = Vec::new();
+            let mut tgt = Vec::new();
+            for &i in chunk {
+                seq.extend_from_slice(ds.observed(i, t_len));
+                tgt.extend_from_slice(ds.target(i, t_len, t_out));
+            }
+            let preds = model.predict(&seq, chunk.len(), &cfg)?;
+            for (p, t) in preds.iter().zip(&tgt) {
+                let d = (p - t) as f64;
+                sse += d * d;
+            }
+            n_elems += tgt.len();
+        }
+        let mse = sse / n_elems.max(1) as f64;
+        table.row(&[
+            method.into(),
+            format!("{:.2}", mse * 100.0),
+            f_evals.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("method", Json::Str(method.into())),
+            ("mse", Json::Num(mse)),
+            ("f_evals", Json::Num(f_evals as f64)),
+        ]));
+        log(Level::Info, &format!("table4-native {method}: mse {mse:.5}"));
+    }
+    table.print();
+    Ok(report::summary(
+        rows,
+        vec![
+            ("seed", Json::Num(seed as f64)),
+            ("native", Json::Bool(true)),
+        ],
+    ))
+}
+
+#[cfg(test)]
+mod native_tests {
+    use super::*;
+
+    /// E6 native runs end-to-end with no artifacts and no PJRT — the
+    /// tier-1 guarantee the HLO-backed table4 cannot give.
+    #[test]
+    fn e8_native_smoke() {
+        let summary = table4_native(Scale::Quick, 5).unwrap();
+        let s = summary.dump();
+        for method in ["mali", "aca", "naive", "adjoint"] {
+            assert!(s.contains(method), "method {method} missing from summary");
+        }
+    }
+}

@@ -42,6 +42,9 @@ use std::time::{Duration, Instant};
 const N_Z: usize = 8;
 const ALPHA: f64 = -0.4;
 const T_END: f64 = 1.0;
+/// Seed for the natively-served MLP's synthetic weights — fixed so any
+/// client (or test) can rebuild the exact model the server holds.
+const NATIVE_SERVE_SEED: u64 = 9;
 
 /// One strategy × mode cell of the E12 grid.
 struct CellResult {
@@ -131,6 +134,18 @@ fn run_served(
 ) -> Result<CellResult> {
     let mut registry = ModelRegistry::new();
     registry.register("lin8", Box::new(LinearToy::new(ALPHA, N_Z)));
+    // the fused native-dynamics backend is registered alongside the toy so
+    // serve requests can target it by name ("mlp8"); the E12 grid itself
+    // keeps driving lin8 for comparability with earlier baselines
+    registry.register(
+        "mlp8",
+        Box::new(crate::dynamics_native::MlpDynamics::new(
+            N_Z,
+            &[16],
+            crate::dynamics_native::TimeMode::Concat,
+            &mut Rng::new(NATIVE_SERVE_SEED),
+        )),
+    );
     let server = Server::start(
         Arc::new(registry),
         ServerConfig {
@@ -297,5 +312,66 @@ mod tests {
         let sh = run_served(&mode, 2, 8, 7, 8, 1, 2).unwrap();
         assert_eq!(sh.latencies_s.len(), 16);
         assert_eq!(sh.steps, coal.steps, "sharding must not change step counts");
+    }
+
+    /// The fused native MLP serves through the micro-batching server and
+    /// returns bitwise the same terminal state as a solo integration of
+    /// an identically-seeded model — serving a native model is a pure
+    /// scheduling change too.
+    #[test]
+    fn native_model_serves_bitwise() {
+        use crate::dynamics_native::{MlpDynamics, TimeMode};
+
+        let mut registry = ModelRegistry::new();
+        registry.register(
+            "mlp8",
+            Box::new(MlpDynamics::new(
+                N_Z,
+                &[16],
+                TimeMode::Concat,
+                &mut Rng::new(NATIVE_SERVE_SEED),
+            )),
+        );
+        let server = Server::start(
+            Arc::new(registry),
+            ServerConfig {
+                queue_capacity: 64,
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                workers: 1,
+                shards: 1,
+            },
+        );
+        let mode = StepMode::Fixed { h: 0.05 };
+        let class = Arc::new(
+            RequestClass::new("mlp8", "alf", N_Z, 0.0, T_END, mode.clone(), ObsGrid::none())
+                .unwrap(),
+        );
+        let mut rng = Rng::new(31);
+        let z0 = client_z0(&mut rng);
+        let resp = server.submit(&class, &z0).unwrap().wait().unwrap();
+        server.shutdown();
+
+        let reference = MlpDynamics::new(
+            N_Z,
+            &[16],
+            TimeMode::Concat,
+            &mut Rng::new(NATIVE_SERVE_SEED),
+        );
+        let solver = solver_by_name("alf").unwrap();
+        let s0 = solver.init(&reference, 0.0, &z0);
+        let (s_end, _) = integrate_obs(
+            &*solver,
+            &reference,
+            0.0,
+            T_END,
+            s0,
+            &mode,
+            &ErrorNorm::Full,
+            &ObsGrid::none(),
+            &mut (),
+        )
+        .unwrap();
+        assert_eq!(resp.z_final, s_end.z, "served ≠ solo for the native MLP");
     }
 }

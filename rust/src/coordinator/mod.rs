@@ -52,10 +52,12 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table1", "Table 1 complexity accounting", exp_toy::table1 as Runner),
         ("figA1", "App. Fig. 1 damped-ALF stability regions", exp_toy::fig_a1 as Runner),
         ("fig5", "Fig. 5 Cifar-like: 4 methods + ResNet", exp_images::fig5 as Runner),
+        ("fig5-native", "E2 native: fused conv-stem ODE classifier (no artifacts)", exp_images::fig5_native as Runner),
         ("fig6", "Fig. 6 ImageNet-like: MALI vs adjoint", exp_images::fig6 as Runner),
         ("table2", "Table 2 invariance to discretization", exp_images::table2 as Runner),
         ("table3", "Table 3 FGSM robustness grid", exp_images::table3 as Runner),
         ("table4", "Table 4 latent-ODE MSE on hopper", exp_series::table4 as Runner),
+        ("table4-native", "E6 native: fused-MLP latent ODE on hopper (no artifacts)", exp_series::table4_native as Runner),
         ("table5", "Table 5 Neural-CDE speech accuracy", exp_series::table5 as Runner),
         ("table7", "Table 7 damped-MALI η ablation", exp_series::table7 as Runner),
         ("table6", "Table 6 FFJORD BPD + RealNVP", exp_flows::table6 as Runner),
@@ -246,7 +248,7 @@ mod tests {
         let names: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
         for required in [
             "fig4", "fig5", "fig6", "table1", "table2", "table3", "table4", "table5",
-            "table6", "table7", "figA1",
+            "table6", "table7", "figA1", "fig5-native", "table4-native",
         ] {
             assert!(names.contains(&required), "{required} missing from registry");
         }

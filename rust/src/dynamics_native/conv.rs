@@ -1,0 +1,482 @@
+//! Conv-stem dynamics: 3×3 same-padding convolution stack lowered through
+//! **im2col** so every layer rides `tensor::matmul_into` (ADR-005).
+//!
+//! State layout per sample is channels-last `[H, W, C]` flattened — the
+//! im2col matrix is then `[B·H·W, C_in·9]` and one matmul per layer covers
+//! the entire batch, which is exactly the shape the dispatch kernels are
+//! fastest at.  The vjp runs the textbook transposes: `d_K = colsᵀ·d_pre`
+//! and `d_x = col2im(d_pre · Kᵀ)` with the `Kᵀ` cache rebuilt on
+//! `set_params` like the MLP's `Wᵀ`.
+
+use super::{
+    ensure_layers, impl_dynamics_via_native_layered, LayerScratch, NativeLayered, ScratchPool,
+    TimeMode,
+};
+use crate::solvers::dynamics::EvalCounters;
+use crate::solvers::workspace::ensure;
+use crate::tensor::{axpy, matmul_into};
+use crate::util::rng::Rng;
+
+/// 3×3 same-padding conv → tanh stack over a `[H, W, C]` channels-last
+/// state; the channel chain starts and ends at the state's channel count
+/// so the stack is a valid ODE right-hand side.
+///
+/// θ layout (flat): per layer `K` (`C_in·9 × C_out`, row-major, kernel
+/// taps ordered `(ky·3 + kx)·C_in + c`) then `b` (`C_out`), followed by
+/// the per-channel time vector `tw` (`C₁`) when [`TimeMode::Affine`].
+/// [`TimeMode::Concat`] has no natural image analogue and is rejected.
+#[derive(Debug)]
+pub struct ConvStemDynamics {
+    side: usize,
+    /// Channel chain `[C_state, mid…, C_state]`.
+    channels: Vec<usize>,
+    time: TimeMode,
+    theta: Vec<f32>,
+    k_off: Vec<usize>,
+    b_off: Vec<usize>,
+    tw_off: usize,
+    /// Cached `Kᵀ` per layer (`C_out × C_in·9`); rebuilt by `set_params`.
+    kt: Vec<Vec<f32>>,
+    counters: EvalCounters,
+    pool: ScratchPool,
+}
+
+impl ConvStemDynamics {
+    /// Stem over a `side×side×c_state` state with intermediate channel
+    /// widths `mid` (may be empty for a single 3×3 conv layer).
+    pub fn new(
+        side: usize,
+        c_state: usize,
+        mid: &[usize],
+        time: TimeMode,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(side > 0 && c_state > 0, "conv stem needs side, channels > 0");
+        assert!(
+            time != TimeMode::Concat,
+            "time-concat has no image analogue; use TimeMode::Affine"
+        );
+        assert!(
+            mid.iter().all(|&c| c > 0),
+            "mid channel widths must be positive: {mid:?}"
+        );
+        let mut channels = Vec::with_capacity(mid.len() + 2);
+        channels.push(c_state);
+        channels.extend_from_slice(mid);
+        channels.push(c_state);
+        let layers = channels.len() - 1;
+        let mut k_off = Vec::with_capacity(layers);
+        let mut b_off = Vec::with_capacity(layers);
+        let mut off = 0usize;
+        for l in 0..layers {
+            k_off.push(off);
+            off += channels[l] * 9 * channels[l + 1];
+            b_off.push(off);
+            off += channels[l + 1];
+        }
+        let tw_off = off;
+        if time == TimeMode::Affine {
+            off += channels[1];
+        }
+        let mut theta = vec![0.0f32; off];
+        for l in 0..layers {
+            let fan_in = channels[l] * 9;
+            let std = 0.5 / (fan_in as f64).sqrt();
+            rng.fill_normal(
+                &mut theta[k_off[l]..k_off[l] + fan_in * channels[l + 1]],
+                std,
+            );
+        }
+        if time == TimeMode::Affine {
+            rng.fill_normal(&mut theta[tw_off..], 0.1);
+        }
+        let mut m = ConvStemDynamics {
+            side,
+            channels,
+            time,
+            theta,
+            k_off,
+            b_off,
+            tw_off,
+            kt: Vec::new(),
+            counters: EvalCounters::default(),
+            pool: ScratchPool::new(),
+        };
+        m.rebuild_kt();
+        m
+    }
+
+    pub fn side(&self) -> usize {
+        self.side
+    }
+
+    pub fn channel_dims(&self) -> &[usize] {
+        &self.channels
+    }
+
+    fn hw(&self) -> usize {
+        self.side * self.side
+    }
+
+    fn rebuild_kt(&mut self) {
+        let layers = self.channels.len() - 1;
+        while self.kt.len() < layers {
+            self.kt.push(Vec::new());
+        }
+        for l in 0..layers {
+            let (ind, outd) = (self.channels[l] * 9, self.channels[l + 1]);
+            let k = &self.theta[self.k_off[l]..self.k_off[l] + ind * outd];
+            let kt = &mut self.kt[l];
+            ensure(kt, outd * ind);
+            for i in 0..ind {
+                for o in 0..outd {
+                    kt[o * ind + i] = k[i * outd + o];
+                }
+            }
+        }
+    }
+
+    /// Lower `[B, H, W, C_in]` into the `[B·H·W, C_in·9]` patch matrix
+    /// (zero padding outside the image).
+    fn im2col(&self, x: &[f32], batch: usize, cin: usize, cols: &mut [f32]) {
+        let side = self.side as isize;
+        let hw = self.hw();
+        for b in 0..batch {
+            let xrow = &x[b * hw * cin..(b + 1) * hw * cin];
+            for y in 0..self.side {
+                for xx in 0..self.side {
+                    let r = (b * hw + y * self.side + xx) * cin * 9;
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        for kx in 0..3usize {
+                            let sx = xx as isize + kx as isize - 1;
+                            let tap = r + (ky * 3 + kx) * cin;
+                            let dst = &mut cols[tap..tap + cin];
+                            if sy < 0 || sy >= side || sx < 0 || sx >= side {
+                                dst.fill(0.0);
+                            } else {
+                                let s0 = ((sy as usize) * self.side + sx as usize) * cin;
+                                dst.copy_from_slice(&xrow[s0..s0 + cin]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scatter-add the patch-matrix cotangent back onto the image grid
+    /// (the exact adjoint of [`ConvStemDynamics::im2col`]).  `dx` must be
+    /// zeroed by the caller.
+    fn col2im_add(&self, dcols: &[f32], batch: usize, cin: usize, dx: &mut [f32]) {
+        let side = self.side as isize;
+        let hw = self.hw();
+        for b in 0..batch {
+            let dxrow = &mut dx[b * hw * cin..(b + 1) * hw * cin];
+            for y in 0..self.side {
+                for xx in 0..self.side {
+                    let r = (b * hw + y * self.side + xx) * cin * 9;
+                    for ky in 0..3usize {
+                        let sy = y as isize + ky as isize - 1;
+                        for kx in 0..3usize {
+                            let sx = xx as isize + kx as isize - 1;
+                            if sy < 0 || sy >= side || sx < 0 || sx >= side {
+                                continue;
+                            }
+                            let tap = r + (ky * 3 + kx) * cin;
+                            let s0 = ((sy as usize) * self.side + sx as usize) * cin;
+                            for c in 0..cin {
+                                dxrow[s0 + c] += dcols[tap + c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One conv layer on a staged patch matrix: matmul, per-pixel bias,
+    /// optional layer-0 time-affine, tanh unless `last`.
+    fn layer_from_cols(
+        &self,
+        l: usize,
+        ts: &[f64],
+        batch: usize,
+        cols: &[f32],
+        dst: &mut [f32],
+    ) {
+        let hw = self.hw();
+        let (ind, outd) = (self.channels[l] * 9, self.channels[l + 1]);
+        let k = &self.theta[self.k_off[l]..self.k_off[l] + ind * outd];
+        let bias = &self.theta[self.b_off[l]..self.b_off[l] + outd];
+        matmul_into(cols, k, batch * hw, ind, outd, dst);
+        for r in 0..batch * hw {
+            axpy(1.0, bias, &mut dst[r * outd..(r + 1) * outd]);
+        }
+        if l == 0 && self.time == TimeMode::Affine {
+            let tw = &self.theta[self.tw_off..self.tw_off + outd];
+            for r in 0..batch * hw {
+                axpy(ts[r / hw] as f32, tw, &mut dst[r * outd..(r + 1) * outd]);
+            }
+        }
+        if l < self.channels.len() - 2 {
+            for v in dst.iter_mut() {
+                *v = v.tanh();
+            }
+        }
+    }
+}
+
+impl NativeLayered for ConvStemDynamics {
+    fn n_state(&self) -> usize {
+        self.hw() * self.channels[0]
+    }
+
+    fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn theta_ref(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+        self.rebuild_kt();
+    }
+
+    fn counters_ref(&self) -> &EvalCounters {
+        &self.counters
+    }
+
+    fn pool_ref(&self) -> &ScratchPool {
+        &self.pool
+    }
+
+    fn nf_depth(&self) -> usize {
+        self.channels.len() - 1
+    }
+
+    fn forward_core(
+        &self,
+        ts: &[f64],
+        x: &[f32],
+        batch: usize,
+        s: &mut LayerScratch,
+        out: &mut [f32],
+    ) {
+        let hw = self.hw();
+        let layers = self.channels.len() - 1;
+        let act_sizes: Vec<usize> = (0..layers).map(|l| hw * self.channels[l]).collect();
+        let col_sizes: Vec<usize> = (0..layers).map(|l| hw * self.channels[l] * 9).collect();
+        let LayerScratch { acts, cols, .. } = s;
+        ensure_layers(acts, &act_sizes, batch);
+        ensure_layers(cols, &col_sizes, batch);
+        acts[0].copy_from_slice(x);
+        for l in 0..layers {
+            let last = l == layers - 1;
+            self.im2col(&acts[l], batch, self.channels[l], &mut cols[l]);
+            let (_, tail) = acts.split_at_mut(l + 1);
+            let dst: &mut [f32] = if last { &mut out[..] } else { &mut tail[0][..] };
+            self.layer_from_cols(l, ts, batch, &cols[l], dst);
+        }
+    }
+
+    fn vjp_core(
+        &self,
+        ts: &[f64],
+        x: &[f32],
+        a: &[f32],
+        batch: usize,
+        s: &mut LayerScratch,
+        ax: &mut [f32],
+        ath_acc: &mut [f32],
+    ) {
+        let hw = self.hw();
+        let layers = self.channels.len() - 1;
+        let act_sizes: Vec<usize> = (0..layers).map(|l| hw * self.channels[l]).collect();
+        let col_sizes: Vec<usize> = (0..layers).map(|l| hw * self.channels[l] * 9).collect();
+        let LayerScratch {
+            acts,
+            cols,
+            ca,
+            cb,
+            xt,
+            dw,
+            dcols,
+            ..
+        } = s;
+        // staging pass: every layer's input activation *and* patch matrix
+        // (the last layer's own matmul output is not needed)
+        ensure_layers(acts, &act_sizes, batch);
+        ensure_layers(cols, &col_sizes, batch);
+        acts[0].copy_from_slice(x);
+        for l in 0..layers {
+            self.im2col(&acts[l], batch, self.channels[l], &mut cols[l]);
+            if l < layers - 1 {
+                let (_, tail) = acts.split_at_mut(l + 1);
+                self.layer_from_cols(l, ts, batch, &cols[l], &mut tail[0][..]);
+            }
+        }
+        // backward walk
+        let mut cur: &mut Vec<f32> = ca;
+        let mut nxt: &mut Vec<f32> = cb;
+        for l in (0..layers).rev() {
+            let cin = self.channels[l];
+            let (ind, outd) = (cin * 9, self.channels[l + 1]);
+            let d_pre: &[f32] = if l == layers - 1 { a } else { &cur[..] };
+            // d_b += per-pixel column sum
+            {
+                let b_acc = &mut ath_acc[self.b_off[l]..self.b_off[l] + outd];
+                for r in 0..batch * hw {
+                    axpy(1.0, &d_pre[r * outd..(r + 1) * outd], b_acc);
+                }
+            }
+            if l == 0 && self.time == TimeMode::Affine {
+                let tw_acc = &mut ath_acc[self.tw_off..self.tw_off + outd];
+                for r in 0..batch * hw {
+                    axpy(
+                        ts[r / hw] as f32,
+                        &d_pre[r * outd..(r + 1) * outd],
+                        tw_acc,
+                    );
+                }
+            }
+            // d_K += colsᵀ · d_pre
+            {
+                let src = &cols[l][..batch * hw * ind];
+                ensure(xt, ind * batch * hw);
+                for r in 0..batch * hw {
+                    for i in 0..ind {
+                        xt[i * batch * hw + r] = src[r * ind + i];
+                    }
+                }
+                ensure(dw, ind * outd);
+                matmul_into(xt, d_pre, ind, batch * hw, outd, dw);
+                axpy(
+                    1.0,
+                    &dw[..ind * outd],
+                    &mut ath_acc[self.k_off[l]..self.k_off[l] + ind * outd],
+                );
+            }
+            // d_x = col2im(d_pre · Kᵀ)
+            ensure(dcols, batch * hw * ind);
+            matmul_into(d_pre, &self.kt[l], batch * hw, outd, ind, dcols);
+            ensure(nxt, batch * hw * cin);
+            nxt.fill(0.0);
+            self.col2im_add(dcols, batch, cin, nxt);
+            if l > 0 {
+                for (dv, &act) in nxt.iter_mut().zip(&acts[l]) {
+                    *dv *= 1.0 - act * act;
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            } else {
+                ax.copy_from_slice(&nxt[..batch * hw * cin]);
+            }
+        }
+    }
+}
+
+impl_dynamics_via_native_layered!(ConvStemDynamics);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::batch::BatchSpec;
+    use crate::solvers::dynamics::Dynamics;
+
+    /// im2col-lowered conv vjp matches central finite differences on z
+    /// and θ (covers K, b, and the time-affine vector).
+    #[test]
+    fn conv_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(51);
+        let mut dyn_ = ConvStemDynamics::new(4, 2, &[3], TimeMode::Affine, &mut rng);
+        let n = Dynamics::dim(&dyn_);
+        assert_eq!(n, 4 * 4 * 2);
+        let mut z = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z, 0.6);
+        let mut a = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut a, 1.0);
+        let t = 0.42;
+        let (az, ath) = dyn_.f_vjp(t, &z, &a);
+        let eps = 1e-3;
+        for j in (0..n).step_by(3) {
+            let mut zp = z.clone();
+            zp[j] += eps as f32;
+            let mut zm = z.clone();
+            zm[j] -= eps as f32;
+            let fp = dyn_.f(t, &zp);
+            let fm = dyn_.f(t, &zm);
+            let fd: f64 = fp
+                .iter()
+                .zip(&fm)
+                .zip(&a)
+                .map(|((&p, &m), &ai)| ((p - m) as f64 / (2.0 * eps)) * ai as f64)
+                .sum();
+            assert!(
+                (fd - az[j] as f64).abs() < 5e-3,
+                "a_z[{j}]: fd {fd} vs {}",
+                az[j]
+            );
+        }
+        let theta0 = dyn_.params().to_vec();
+        let p = theta0.len();
+        for &k in &[0usize, p / 4, p / 2, 3 * p / 4, p - 1] {
+            let mut tp = theta0.clone();
+            tp[k] += eps as f32;
+            dyn_.set_params(&tp);
+            let fp = dyn_.f(t, &z);
+            let mut tm = theta0.clone();
+            tm[k] -= eps as f32;
+            dyn_.set_params(&tm);
+            let fm = dyn_.f(t, &z);
+            dyn_.set_params(&theta0);
+            let fd: f64 = fp
+                .iter()
+                .zip(&fm)
+                .zip(&a)
+                .map(|((&p_, &m), &ai)| ((p_ - m) as f64 / (2.0 * eps)) * ai as f64)
+                .sum();
+            assert!(
+                (fd - ath[k] as f64).abs() < 5e-3,
+                "a_θ[{k}]: fd {fd} vs {}",
+                ath[k]
+            );
+        }
+    }
+
+    /// Batched conv forward and `a_z` agree with the solo rows bitwise —
+    /// im2col is per-sample and matmul rows are independent.
+    #[test]
+    fn conv_batch_matches_solo_rows() {
+        let mut rng = Rng::new(53);
+        let dyn_ = ConvStemDynamics::new(3, 2, &[4], TimeMode::None, &mut rng);
+        let n = Dynamics::dim(&dyn_);
+        let spec = BatchSpec::new(3, n);
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut z, 0.5);
+        let ts = [0.0, 0.5, 1.0];
+        let fb = dyn_.f_batch(&ts, &z, &spec);
+        for (b, &t) in ts.iter().enumerate() {
+            assert_eq!(
+                spec.row(&fb, b),
+                dyn_.f(t, spec.row(&z, b)).as_slice(),
+                "f row {b}"
+            );
+        }
+        let mut a = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut a, 1.0);
+        let (azb, _) = dyn_.f_vjp_batch(&ts, &z, &a, &spec);
+        for (b, &t) in ts.iter().enumerate() {
+            let (az, _) = dyn_.f_vjp(t, spec.row(&z, b), spec.row(&a, b));
+            assert_eq!(spec.row(&azb, b), az.as_slice(), "a_z row {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_rejects_time_concat() {
+        let mut rng = Rng::new(1);
+        ConvStemDynamics::new(4, 2, &[3], TimeMode::Concat, &mut rng);
+    }
+}

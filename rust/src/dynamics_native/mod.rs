@@ -1,0 +1,887 @@
+//! Native layered dynamics: deep MLP and conv-stem right-hand sides whose
+//! forward **and** vjp ride the `tensor` dispatch kernels (`matmul_into`),
+//! plus fused ALF entry points that execute one ψ / ψ⁻¹ / ψ-vjp step as a
+//! single pass over the layer stack.
+//!
+//! This is the host-side port of the L1 Pallas kernel math
+//! (`python/compile/kernels/alf_step.py`, oracle `kernels/ref.py`): where
+//! `runtime::HloDynamics` dispatches a compiled device graph per call, the
+//! backends here lower every layer onto `tensor::matmul_into` so the whole
+//! stack is matmul-bound — the regime the paper's ImageNet numbers live in —
+//! while staying tier-1 testable with no artifacts and no PJRT.
+//!
+//! ## Architecture
+//!
+//! [`NativeLayered`] is the internal contract: a layer stack exposing one
+//! batched `forward_core` and one batched `vjp_core` over caller scratch.
+//! Everything else — the full [`Dynamics`] surface (solo/batch, allocating/
+//! `_into`) and the seven fused ALF hooks — is implemented **once** by the
+//! free functions in this module and stamped onto each backend by
+//! `impl_dynamics_via_native_layered!`.  Adding a new native backend means
+//! implementing `forward_core`/`vjp_core` and nothing more.
+//!
+//! ## Fused-dynamics contract (DESIGN.md §9)
+//!
+//! * Scratch comes from a [`ScratchPool`] owned by the dynamics: workers
+//!   pop a warm [`LayerScratch`] per call and push it back when done, so
+//!   concurrent shard workers never serialize on buffers and a warmed
+//!   steady state performs **zero heap allocations** (pinned by
+//!   `tests/alloc_steady.rs`).
+//! * The vjp needs `Wᵀ` per layer (`d_x = d_pre · Wᵀ`); those transposes
+//!   are cached on the struct and rebuilt inside `set_params` — the only
+//!   place θ can change — so they can never go stale.
+//! * Fused steps replicate the solver's composed arithmetic **bitwise**
+//!   (same kernel call sequence, same f32 cast order; verified in
+//!   `tests/prop_solver.rs`) and count the same per-sample
+//!   [`EvalCounters`] units as the unfused path (fused ψ ≡ one `f` unit
+//!   per row, fused ψ-vjp ≡ one vjp unit per row, the fused backward
+//!   micro-step ≡ one of each), keeping the Table-1 cost laws and the
+//!   shard-invariance suite honest.
+
+pub mod conv;
+pub mod mlp;
+
+pub use conv::ConvStemDynamics;
+pub use mlp::{MlpDynamics, TimeMode};
+
+use crate::solvers::batch::BatchSpec;
+use crate::solvers::dynamics::EvalCounters;
+use crate::solvers::workspace::{ensure, fill_row_coeffs, fill_stage_times};
+use crate::tensor::{add_scaled_into, add_scaled_rows_into, axpy};
+use std::sync::Mutex;
+
+/// Upper bound on pooled scratch instances (one per concurrent caller is
+/// enough; extras beyond this are dropped instead of hoarded).
+const POOL_CAP: usize = 32;
+
+/// Per-call scratch for one layered forward/vjp or one fused ALF step.
+/// Buffers are grown with [`ensure`] on use and reused verbatim when the
+/// shapes repeat — the warm steady state never touches the allocator.
+#[derive(Debug, Default)]
+pub struct LayerScratch {
+    /// Per-layer forward buffers: `acts[0]` is the assembled input
+    /// (time-concat appends `t` per row), `acts[l]` for `l ≥ 1` the
+    /// activation output of layer `l-1`, each `[batch, dims[l]]`.
+    pub(crate) acts: Vec<Vec<f32>>,
+    /// Per-layer im2col buffers (conv backends only).
+    pub(crate) cols: Vec<Vec<f32>>,
+    /// Cotangent ping-pong buffers (backward walks the stack once).
+    pub(crate) ca: Vec<f32>,
+    pub(crate) cb: Vec<f32>,
+    /// Transposed-activation scratch for `d_W = Xᵀ · d_pre`.
+    pub(crate) xt: Vec<f32>,
+    /// Per-layer `d_W` staging (`matmul_into` zero-fills, then one axpy
+    /// accumulates into the caller's `ath_acc` to honour the `+=` contract).
+    pub(crate) dw: Vec<f32>,
+    /// `d_cols` staging for the conv backward (before col2im scatter).
+    pub(crate) dcols: Vec<f32>,
+    // ---- fused-step state buffers (all `[B·n_z]`) ----------------------
+    pub(crate) k1: Vec<f32>,
+    pub(crate) u1: Vec<f32>,
+    pub(crate) g: Vec<f32>,
+    pub(crate) av_tot: Vec<f32>,
+    pub(crate) a_u1: Vec<f32>,
+    /// Per-row `h/2` coefficients and stage times for batched fused steps.
+    pub(crate) half: Vec<f32>,
+    pub(crate) s1s: Vec<f64>,
+}
+
+/// Lock-guarded stack of warm [`LayerScratch`] instances.  `acquire` pops
+/// (allocating only when the pool is cold), `release` pushes back; the
+/// `Mutex` is held only for the pop/push, so shard workers overlap their
+/// actual compute freely.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    slots: Mutex<Vec<Box<LayerScratch>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        ScratchPool {
+            slots: Mutex::new(Vec::with_capacity(POOL_CAP)),
+        }
+    }
+
+    pub(crate) fn acquire(&self) -> Box<LayerScratch> {
+        self.slots
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default()
+    }
+
+    pub(crate) fn release(&self, s: Box<LayerScratch>) {
+        let mut slots = self.slots.lock().expect("scratch pool poisoned");
+        if slots.len() < POOL_CAP {
+            slots.push(s);
+        }
+    }
+}
+
+/// Shape `bufs` to exactly `sizes.len()` buffers of `batch · sizes[l]`
+/// elements each (grow-once; warm calls are allocation-free).
+pub(crate) fn ensure_layers(bufs: &mut Vec<Vec<f32>>, sizes: &[usize], batch: usize) {
+    while bufs.len() < sizes.len() {
+        bufs.push(Vec::new());
+    }
+    for (b, &n) in bufs.iter_mut().zip(sizes) {
+        ensure(b, batch * n);
+    }
+}
+
+/// The internal layer-stack contract every native backend implements; the
+/// full [`crate::solvers::dynamics::Dynamics`] surface plus all fused ALF
+/// hooks are derived from these two cores by the `nl_*` functions below.
+pub(crate) trait NativeLayered: Send + Sync {
+    /// Flattened per-sample state dimension.
+    fn n_state(&self) -> usize;
+    /// Flattened θ dimension.
+    fn n_params(&self) -> usize;
+    /// The flat parameter vector.
+    fn theta_ref(&self) -> &[f32];
+    /// Replace θ and rebuild every θ-derived cache (`Wᵀ`).
+    fn set_theta(&mut self, theta: &[f32]);
+    fn counters_ref(&self) -> &EvalCounters;
+    fn pool_ref(&self) -> &ScratchPool;
+    /// Layer count, for Table-1 N_f accounting.
+    fn nf_depth(&self) -> usize;
+    /// Batched forward over `[batch, n_state]` rows with per-row times.
+    /// Must be row-decomposable bitwise (row `b` of `out` depends only on
+    /// row `b` of `x` and `ts[b]`) — the shard-invariance suite relies on
+    /// it.  Does **not** touch counters; the `nl_*` wrappers count.
+    fn forward_core(
+        &self,
+        ts: &[f64],
+        x: &[f32],
+        batch: usize,
+        s: &mut LayerScratch,
+        out: &mut [f32],
+    );
+    /// Batched vjp: `ax` is overwritten with `aᵀ ∂f/∂x` (row-decomposable
+    /// bitwise), the row-summed θ-cotangent is **accumulated** into
+    /// `ath_acc` (`+=`).  Runs its own forward to stage activations.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_core(
+        &self,
+        ts: &[f64],
+        x: &[f32],
+        a: &[f32],
+        batch: usize,
+        s: &mut LayerScratch,
+        ax: &mut [f32],
+        ath_acc: &mut [f32],
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Dynamics-surface helpers (generic over the backend)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn nl_f_into<M: NativeLayered>(m: &M, t: f64, z: &[f32], out: &mut [f32]) {
+    m.counters_ref().f_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    m.forward_core(&[t], z, 1, &mut s, out);
+    m.pool_ref().release(s);
+}
+
+pub(crate) fn nl_f_vjp_into<M: NativeLayered>(
+    m: &M,
+    t: f64,
+    z: &[f32],
+    a: &[f32],
+    az_out: &mut [f32],
+    ath_acc: &mut [f32],
+) {
+    m.counters_ref().vjp_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    m.vjp_core(&[t], z, a, 1, &mut s, az_out, ath_acc);
+    m.pool_ref().release(s);
+}
+
+pub(crate) fn nl_f_batch_into<M: NativeLayered>(
+    m: &M,
+    ts: &[f64],
+    z: &[f32],
+    spec: &BatchSpec,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(ts.len(), spec.batch);
+    debug_assert_eq!(z.len(), spec.flat_len());
+    m.counters_ref().f_evals.add(spec.batch as u64);
+    let mut s = m.pool_ref().acquire();
+    m.forward_core(ts, z, spec.batch, &mut s, out);
+    m.pool_ref().release(s);
+}
+
+pub(crate) fn nl_f_vjp_batch_into<M: NativeLayered>(
+    m: &M,
+    ts: &[f64],
+    z: &[f32],
+    a: &[f32],
+    spec: &BatchSpec,
+    az_out: &mut [f32],
+    ath_acc: &mut [f32],
+) {
+    debug_assert_eq!(ts.len(), spec.batch);
+    m.counters_ref().vjp_evals.add(spec.batch as u64);
+    let mut s = m.pool_ref().acquire();
+    m.vjp_core(ts, z, a, spec.batch, &mut s, az_out, ath_acc);
+    m.pool_ref().release(s);
+}
+
+// ---------------------------------------------------------------------------
+// Fused ALF steps — one scratch acquisition, one pass over the layer stack,
+// no intermediate `State` copies.  Each replicates the *exact* kernel call
+// sequence of the corresponding composed solver path (`solvers::alf`), so
+// fused ≡ unfused bitwise.
+// ---------------------------------------------------------------------------
+
+/// Fused ψ (mirrors `AlfSolver::psi_into`'s composed arithmetic).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi<M: NativeLayered>(
+    m: &M,
+    z: &[f32],
+    v: &[f32],
+    t: f64,
+    h: f64,
+    eta: f64,
+    z_out: &mut [f32],
+    v_out: &mut [f32],
+    err_out: &mut [f32],
+) {
+    m.counters_ref().f_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let hf = h as f32;
+    let s1 = t + h / 2.0;
+    let n = z.len();
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_into(z, hf / 2.0, v, &mut k1);
+    let mut u1 = std::mem::take(&mut s.u1);
+    ensure(&mut u1, n);
+    m.forward_core(&[s1], &k1, 1, &mut s, &mut u1);
+    v_out.fill(0.0);
+    axpy(1.0 - 2.0 * etaf, v, v_out);
+    axpy(2.0 * etaf, &u1, v_out);
+    add_scaled_into(&k1, hf / 2.0, v_out, z_out);
+    for ((e, &u), &vi) in err_out.iter_mut().zip(u1.iter()).zip(v) {
+        *e = etaf * hf * (u - vi);
+    }
+    s.k1 = k1;
+    s.u1 = u1;
+    m.pool_ref().release(s);
+}
+
+/// Fused ψ⁻¹ (mirrors `AlfSolver::psi_inv_into`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi_inv<M: NativeLayered>(
+    m: &M,
+    z_out: &[f32],
+    v_out: &[f32],
+    t_out: f64,
+    h: f64,
+    eta: f64,
+    z_in: &mut [f32],
+    v_in: &mut [f32],
+) {
+    m.counters_ref().f_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let hf = h as f32;
+    let s1 = t_out - h / 2.0;
+    let n = z_out.len();
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_into(z_out, -hf / 2.0, v_out, &mut k1);
+    let mut u1 = std::mem::take(&mut s.u1);
+    ensure(&mut u1, n);
+    m.forward_core(&[s1], &k1, 1, &mut s, &mut u1);
+    let denom = 1.0 - 2.0 * etaf;
+    for ((vi, &vo), &u) in v_in.iter_mut().zip(v_out).zip(u1.iter()) {
+        *vi = (vo - 2.0 * etaf * u) / denom;
+    }
+    add_scaled_into(&k1, -hf / 2.0, v_in, z_in);
+    s.k1 = k1;
+    s.u1 = u1;
+    m.pool_ref().release(s);
+}
+
+/// Fused ψ-vjp (mirrors `AlfSolver::psi_vjp_into`; θ-cotangent `+=`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi_vjp<M: NativeLayered>(
+    m: &M,
+    z: &[f32],
+    v: &[f32],
+    t: f64,
+    h: f64,
+    eta: f64,
+    az_out: &[f32],
+    av_out: &[f32],
+    az_in: &mut [f32],
+    av_in: &mut [f32],
+    ath_acc: &mut [f32],
+) {
+    m.counters_ref().vjp_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let hf = h as f32;
+    let s1 = t + h / 2.0;
+    let n = z.len();
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_into(z, hf / 2.0, v, &mut k1);
+    let mut av_tot = std::mem::take(&mut s.av_tot);
+    ensure(&mut av_tot, n);
+    add_scaled_into(av_out, hf / 2.0, az_out, &mut av_tot);
+    for (o, &x) in av_in.iter_mut().zip(av_tot.iter()) {
+        *o = (1.0 - 2.0 * etaf) * x;
+    }
+    let mut a_u1 = std::mem::take(&mut s.a_u1);
+    ensure(&mut a_u1, n);
+    for (o, &x) in a_u1.iter_mut().zip(av_tot.iter()) {
+        *o = 2.0 * etaf * x;
+    }
+    let mut g = std::mem::take(&mut s.g);
+    ensure(&mut g, n);
+    m.vjp_core(&[s1], &k1, &a_u1, 1, &mut s, &mut g, ath_acc);
+    add_scaled_into(az_out, 1.0, &g, az_in);
+    axpy(hf / 2.0, az_in, av_in);
+    s.k1 = k1;
+    s.av_tot = av_tot;
+    s.a_u1 = a_u1;
+    s.g = g;
+    m.pool_ref().release(s);
+}
+
+/// Fused MALI backward micro-step: ψ⁻¹ reconstruction *and* the vjp
+/// through ψ at the reconstructed point in one pass (mirrors the
+/// host-composed `invert_into` + `step_vjp_into(t_out − h, ..)` fallback
+/// exactly, including the recomputed `k1 = z_in + (h/2)·v_in` — f32
+/// `(a−b)+b ≠ a`, so reusing ψ⁻¹'s `k1` would break bitwise equality).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_bwd<M: NativeLayered>(
+    m: &M,
+    z_out: &[f32],
+    v_out: &[f32],
+    t_out: f64,
+    h: f64,
+    eta: f64,
+    az_out: &[f32],
+    av_out: &[f32],
+    z_in: &mut [f32],
+    v_in: &mut [f32],
+    az_in: &mut [f32],
+    av_in: &mut [f32],
+    ath_acc: &mut [f32],
+) {
+    m.counters_ref().f_evals.add(1);
+    m.counters_ref().vjp_evals.add(1);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let hf = h as f32;
+    let n = z_out.len();
+    // ---- ψ⁻¹ ----
+    let s1_inv = t_out - h / 2.0;
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_into(z_out, -hf / 2.0, v_out, &mut k1);
+    let mut u1 = std::mem::take(&mut s.u1);
+    ensure(&mut u1, n);
+    m.forward_core(&[s1_inv], &k1, 1, &mut s, &mut u1);
+    let denom = 1.0 - 2.0 * etaf;
+    for ((vi, &vo), &u) in v_in.iter_mut().zip(v_out).zip(u1.iter()) {
+        *vi = (vo - 2.0 * etaf * u) / denom;
+    }
+    add_scaled_into(&k1, -hf / 2.0, v_in, z_in);
+    // ---- vjp through ψ at (t_out − h) ----
+    let s1_vjp = (t_out - h) + h / 2.0;
+    add_scaled_into(z_in, hf / 2.0, v_in, &mut k1);
+    let mut av_tot = std::mem::take(&mut s.av_tot);
+    ensure(&mut av_tot, n);
+    add_scaled_into(av_out, hf / 2.0, az_out, &mut av_tot);
+    for (o, &x) in av_in.iter_mut().zip(av_tot.iter()) {
+        *o = (1.0 - 2.0 * etaf) * x;
+    }
+    let mut a_u1 = std::mem::take(&mut s.a_u1);
+    ensure(&mut a_u1, n);
+    for (o, &x) in a_u1.iter_mut().zip(av_tot.iter()) {
+        *o = 2.0 * etaf * x;
+    }
+    let mut g = std::mem::take(&mut s.g);
+    ensure(&mut g, n);
+    m.vjp_core(&[s1_vjp], &k1, &a_u1, 1, &mut s, &mut g, ath_acc);
+    add_scaled_into(az_out, 1.0, &g, az_in);
+    axpy(hf / 2.0, az_in, av_in);
+    s.k1 = k1;
+    s.u1 = u1;
+    s.av_tot = av_tot;
+    s.a_u1 = a_u1;
+    s.g = g;
+    m.pool_ref().release(s);
+}
+
+/// Batched fused ψ (mirrors `AlfSolver::psi_batch_into`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi_batch<M: NativeLayered>(
+    m: &M,
+    ts: &[f64],
+    hs: &[f64],
+    z: &[f32],
+    v: &[f32],
+    eta: f64,
+    spec: &BatchSpec,
+    z_out: &mut [f32],
+    v_out: &mut [f32],
+    err_out: &mut [f32],
+) {
+    m.counters_ref().f_evals.add(spec.batch as u64);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let n = spec.flat_len();
+    let mut half = std::mem::take(&mut s.half);
+    let mut s1s = std::mem::take(&mut s.s1s);
+    fill_row_coeffs(hs, 0.5, &mut half);
+    fill_stage_times(ts, hs, 0.5, &mut s1s);
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_rows_into(z, &half, v, spec.n_z, &mut k1);
+    let mut u1 = std::mem::take(&mut s.u1);
+    ensure(&mut u1, n);
+    m.forward_core(&s1s, &k1, spec.batch, &mut s, &mut u1);
+    v_out.fill(0.0);
+    axpy(1.0 - 2.0 * etaf, v, v_out);
+    axpy(2.0 * etaf, &u1, v_out);
+    add_scaled_rows_into(&k1, &half, v_out, spec.n_z, z_out);
+    for b in 0..spec.batch {
+        let hf = hs[b] as f32;
+        let lo = b * spec.n_z;
+        let hi = lo + spec.n_z;
+        for ((e, &u), &vi) in err_out[lo..hi]
+            .iter_mut()
+            .zip(&u1[lo..hi])
+            .zip(&v[lo..hi])
+        {
+            *e = etaf * hf * (u - vi);
+        }
+    }
+    s.half = half;
+    s.s1s = s1s;
+    s.k1 = k1;
+    s.u1 = u1;
+    m.pool_ref().release(s);
+}
+
+/// Batched fused ψ⁻¹ (mirrors `AlfSolver::psi_inv_batch_into`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi_inv_batch<M: NativeLayered>(
+    m: &M,
+    ts_out: &[f64],
+    hs: &[f64],
+    z_out: &[f32],
+    v_out: &[f32],
+    eta: f64,
+    spec: &BatchSpec,
+    z_in: &mut [f32],
+    v_in: &mut [f32],
+) {
+    m.counters_ref().f_evals.add(spec.batch as u64);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let n = spec.flat_len();
+    let mut half = std::mem::take(&mut s.half);
+    let mut s1s = std::mem::take(&mut s.s1s);
+    fill_row_coeffs(hs, -0.5, &mut half);
+    fill_stage_times(ts_out, hs, -0.5, &mut s1s);
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_rows_into(z_out, &half, v_out, spec.n_z, &mut k1);
+    let mut u1 = std::mem::take(&mut s.u1);
+    ensure(&mut u1, n);
+    m.forward_core(&s1s, &k1, spec.batch, &mut s, &mut u1);
+    let denom = 1.0 - 2.0 * etaf;
+    for ((vi, &vo), &u) in v_in.iter_mut().zip(v_out).zip(u1.iter()) {
+        *vi = (vo - 2.0 * etaf * u) / denom;
+    }
+    add_scaled_rows_into(&k1, &half, v_in, spec.n_z, z_in);
+    s.half = half;
+    s.s1s = s1s;
+    s.k1 = k1;
+    s.u1 = u1;
+    m.pool_ref().release(s);
+}
+
+/// Batched fused ψ-vjp (mirrors `AlfSolver::psi_vjp_batch_into`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nl_fused_psi_vjp_batch<M: NativeLayered>(
+    m: &M,
+    ts: &[f64],
+    hs: &[f64],
+    z: &[f32],
+    v: &[f32],
+    eta: f64,
+    spec: &BatchSpec,
+    az_out: &[f32],
+    av_out: &[f32],
+    az_in: &mut [f32],
+    av_in: &mut [f32],
+    ath_acc: &mut [f32],
+) {
+    m.counters_ref().vjp_evals.add(spec.batch as u64);
+    let mut s = m.pool_ref().acquire();
+    let etaf = eta as f32;
+    let n = spec.flat_len();
+    let mut half = std::mem::take(&mut s.half);
+    let mut s1s = std::mem::take(&mut s.s1s);
+    fill_row_coeffs(hs, 0.5, &mut half);
+    fill_stage_times(ts, hs, 0.5, &mut s1s);
+    let mut k1 = std::mem::take(&mut s.k1);
+    ensure(&mut k1, n);
+    add_scaled_rows_into(z, &half, v, spec.n_z, &mut k1);
+    let mut av_tot = std::mem::take(&mut s.av_tot);
+    ensure(&mut av_tot, n);
+    add_scaled_rows_into(av_out, &half, az_out, spec.n_z, &mut av_tot);
+    for (o, &x) in av_in.iter_mut().zip(av_tot.iter()) {
+        *o = (1.0 - 2.0 * etaf) * x;
+    }
+    let mut a_u1 = std::mem::take(&mut s.a_u1);
+    ensure(&mut a_u1, n);
+    for (o, &x) in a_u1.iter_mut().zip(av_tot.iter()) {
+        *o = 2.0 * etaf * x;
+    }
+    let mut g = std::mem::take(&mut s.g);
+    ensure(&mut g, n);
+    m.vjp_core(&s1s, &k1, &a_u1, spec.batch, &mut s, &mut g, ath_acc);
+    add_scaled_into(az_out, 1.0, &g, az_in);
+    crate::tensor::axpy_rows(&half, az_in, av_in, spec.n_z);
+    s.half = half;
+    s.s1s = s1s;
+    s.k1 = k1;
+    s.av_tot = av_tot;
+    s.a_u1 = a_u1;
+    s.g = g;
+    m.pool_ref().release(s);
+}
+
+/// Stamp the full [`crate::solvers::dynamics::Dynamics`] surface — solo,
+/// batch, allocating, `_into`, and all fused ALF hooks — onto a backend
+/// that implements [`NativeLayered`].
+macro_rules! impl_dynamics_via_native_layered {
+    ($ty:ty) => {
+        impl crate::solvers::dynamics::Dynamics for $ty {
+            fn dim(&self) -> usize {
+                crate::dynamics_native::NativeLayered::n_state(self)
+            }
+
+            fn param_dim(&self) -> usize {
+                crate::dynamics_native::NativeLayered::n_params(self)
+            }
+
+            fn f(&self, t: f64, z: &[f32]) -> Vec<f32> {
+                let mut out = vec![0.0f32; z.len()];
+                crate::dynamics_native::nl_f_into(self, t, z, &mut out);
+                out
+            }
+
+            fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+                let mut az = vec![0.0f32; z.len()];
+                let mut ath =
+                    vec![0.0f32; crate::dynamics_native::NativeLayered::n_params(self)];
+                crate::dynamics_native::nl_f_vjp_into(self, t, z, a, &mut az, &mut ath);
+                (az, ath)
+            }
+
+            fn params(&self) -> &[f32] {
+                crate::dynamics_native::NativeLayered::theta_ref(self)
+            }
+
+            fn set_params(&mut self, theta: &[f32]) {
+                crate::dynamics_native::NativeLayered::set_theta(self, theta)
+            }
+
+            fn counters(&self) -> &crate::solvers::dynamics::EvalCounters {
+                crate::dynamics_native::NativeLayered::counters_ref(self)
+            }
+
+            fn depth_nf(&self) -> usize {
+                crate::dynamics_native::NativeLayered::nf_depth(self)
+            }
+
+            fn f_batch(
+                &self,
+                ts: &[f64],
+                z: &[f32],
+                spec: &crate::solvers::batch::BatchSpec,
+            ) -> Vec<f32> {
+                let mut out = vec![0.0f32; spec.flat_len()];
+                crate::dynamics_native::nl_f_batch_into(self, ts, z, spec, &mut out);
+                out
+            }
+
+            fn f_vjp_batch(
+                &self,
+                ts: &[f64],
+                z: &[f32],
+                a: &[f32],
+                spec: &crate::solvers::batch::BatchSpec,
+            ) -> (Vec<f32>, Vec<f32>) {
+                let mut az = vec![0.0f32; spec.flat_len()];
+                let mut ath =
+                    vec![0.0f32; crate::dynamics_native::NativeLayered::n_params(self)];
+                crate::dynamics_native::nl_f_vjp_batch_into(
+                    self, ts, z, a, spec, &mut az, &mut ath,
+                );
+                (az, ath)
+            }
+
+            fn f_into(&self, t: f64, z: &[f32], out: &mut [f32]) {
+                crate::dynamics_native::nl_f_into(self, t, z, out)
+            }
+
+            fn f_vjp_into(
+                &self,
+                t: f64,
+                z: &[f32],
+                a: &[f32],
+                az_out: &mut [f32],
+                ath_acc: &mut [f32],
+            ) {
+                crate::dynamics_native::nl_f_vjp_into(self, t, z, a, az_out, ath_acc)
+            }
+
+            fn f_batch_into(
+                &self,
+                ts: &[f64],
+                z: &[f32],
+                spec: &crate::solvers::batch::BatchSpec,
+                out: &mut [f32],
+            ) {
+                crate::dynamics_native::nl_f_batch_into(self, ts, z, spec, out)
+            }
+
+            fn f_vjp_batch_into(
+                &self,
+                ts: &[f64],
+                z: &[f32],
+                a: &[f32],
+                spec: &crate::solvers::batch::BatchSpec,
+                az_out: &mut [f32],
+                ath_acc: &mut [f32],
+            ) {
+                crate::dynamics_native::nl_f_vjp_batch_into(
+                    self, ts, z, a, spec, az_out, ath_acc,
+                )
+            }
+
+            // ---- fused ALF hooks (allocating forms wrap the `_into`s) ----
+
+            fn fused_alf(
+                &self,
+                z: &[f32],
+                v: &[f32],
+                t: f64,
+                h: f64,
+                eta: f64,
+            ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+                let mut z_out = vec![0.0f32; z.len()];
+                let mut v_out = vec![0.0f32; v.len()];
+                let mut err = vec![0.0f32; v.len()];
+                crate::dynamics_native::nl_fused_psi(
+                    self, z, v, t, h, eta, &mut z_out, &mut v_out, &mut err,
+                );
+                Some((z_out, v_out, err))
+            }
+
+            fn fused_alf_inv(
+                &self,
+                z: &[f32],
+                v: &[f32],
+                t_out: f64,
+                h: f64,
+                eta: f64,
+            ) -> Option<(Vec<f32>, Vec<f32>)> {
+                let mut z_in = vec![0.0f32; z.len()];
+                let mut v_in = vec![0.0f32; v.len()];
+                crate::dynamics_native::nl_fused_psi_inv(
+                    self, z, v, t_out, h, eta, &mut z_in, &mut v_in,
+                );
+                Some((z_in, v_in))
+            }
+
+            fn fused_alf_vjp(
+                &self,
+                z: &[f32],
+                v: &[f32],
+                t: f64,
+                h: f64,
+                eta: f64,
+                az_out: &[f32],
+                av_out: &[f32],
+            ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+                let mut az_in = vec![0.0f32; z.len()];
+                let mut av_in = vec![0.0f32; v.len()];
+                let mut ath =
+                    vec![0.0f32; crate::dynamics_native::NativeLayered::n_params(self)];
+                crate::dynamics_native::nl_fused_psi_vjp(
+                    self, z, v, t, h, eta, az_out, av_out, &mut az_in, &mut av_in, &mut ath,
+                );
+                Some((az_in, av_in, ath))
+            }
+
+            fn fused_alf_bwd(
+                &self,
+                z_out: &[f32],
+                v_out: &[f32],
+                t_out: f64,
+                h: f64,
+                eta: f64,
+                az_out: &[f32],
+                av_out: &[f32],
+            ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+                let n = z_out.len();
+                let mut z_in = vec![0.0f32; n];
+                let mut v_in = vec![0.0f32; n];
+                let mut az_in = vec![0.0f32; n];
+                let mut av_in = vec![0.0f32; n];
+                let mut ath =
+                    vec![0.0f32; crate::dynamics_native::NativeLayered::n_params(self)];
+                crate::dynamics_native::nl_fused_bwd(
+                    self, z_out, v_out, t_out, h, eta, az_out, av_out, &mut z_in,
+                    &mut v_in, &mut az_in, &mut av_in, &mut ath,
+                );
+                Some((z_in, v_in, az_in, av_in, ath))
+            }
+
+            fn fused_alf_into(
+                &self,
+                z: &[f32],
+                v: &[f32],
+                t: f64,
+                h: f64,
+                eta: f64,
+                z_out: &mut [f32],
+                v_out: &mut [f32],
+                err_out: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi(
+                    self, z, v, t, h, eta, z_out, v_out, err_out,
+                );
+                true
+            }
+
+            fn fused_alf_inv_into(
+                &self,
+                z_out: &[f32],
+                v_out: &[f32],
+                t_out: f64,
+                h: f64,
+                eta: f64,
+                z_in: &mut [f32],
+                v_in: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi_inv(
+                    self, z_out, v_out, t_out, h, eta, z_in, v_in,
+                );
+                true
+            }
+
+            fn fused_alf_vjp_into(
+                &self,
+                z: &[f32],
+                v: &[f32],
+                t: f64,
+                h: f64,
+                eta: f64,
+                az_out: &[f32],
+                av_out: &[f32],
+                az_in: &mut [f32],
+                av_in: &mut [f32],
+                ath_acc: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi_vjp(
+                    self, z, v, t, h, eta, az_out, av_out, az_in, av_in, ath_acc,
+                );
+                true
+            }
+
+            fn fused_alf_bwd_into(
+                &self,
+                z_out: &[f32],
+                v_out: &[f32],
+                t_out: f64,
+                h: f64,
+                eta: f64,
+                az_out: &[f32],
+                av_out: &[f32],
+                z_in: &mut [f32],
+                v_in: &mut [f32],
+                az_in: &mut [f32],
+                av_in: &mut [f32],
+                ath_acc: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_bwd(
+                    self, z_out, v_out, t_out, h, eta, az_out, av_out, z_in, v_in, az_in,
+                    av_in, ath_acc,
+                );
+                true
+            }
+
+            fn fused_alf_batch_into(
+                &self,
+                ts: &[f64],
+                hs: &[f64],
+                z: &[f32],
+                v: &[f32],
+                eta: f64,
+                spec: &crate::solvers::batch::BatchSpec,
+                z_out: &mut [f32],
+                v_out: &mut [f32],
+                err_out: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi_batch(
+                    self, ts, hs, z, v, eta, spec, z_out, v_out, err_out,
+                );
+                true
+            }
+
+            fn fused_alf_inv_batch_into(
+                &self,
+                ts_out: &[f64],
+                hs: &[f64],
+                z_out: &[f32],
+                v_out: &[f32],
+                eta: f64,
+                spec: &crate::solvers::batch::BatchSpec,
+                z_in: &mut [f32],
+                v_in: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi_inv_batch(
+                    self, ts_out, hs, z_out, v_out, eta, spec, z_in, v_in,
+                );
+                true
+            }
+
+            fn fused_alf_vjp_batch_into(
+                &self,
+                ts: &[f64],
+                hs: &[f64],
+                z: &[f32],
+                v: &[f32],
+                eta: f64,
+                spec: &crate::solvers::batch::BatchSpec,
+                az_out: &[f32],
+                av_out: &[f32],
+                az_in: &mut [f32],
+                av_in: &mut [f32],
+                ath_acc: &mut [f32],
+            ) -> bool {
+                crate::dynamics_native::nl_fused_psi_vjp_batch(
+                    self, ts, hs, z, v, eta, spec, az_out, av_out, az_in, av_in, ath_acc,
+                );
+                true
+            }
+        }
+    };
+}
+
+pub(crate) use impl_dynamics_via_native_layered;

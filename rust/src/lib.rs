@@ -27,6 +27,7 @@ pub mod config;
 pub mod tensor;
 pub mod util;
 
+pub mod dynamics_native;
 pub mod runtime;
 pub mod solvers;
 pub mod grad;

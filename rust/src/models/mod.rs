@@ -8,6 +8,7 @@
 //! | [`cde`]     | Table 5 Neural CDE                       | `cde`           |
 //! | [`cnf`]     | Table 6 FFJORD                           | `cnf_*`         |
 //! | [`realnvp`] | Table 6 discrete-flow baseline           | `realnvp_*`     |
+//! | [`native`]  | E2 / E8 artifact-free fused-dynamics runs | — (no manifest) |
 //!
 //! Every model takes the gradient-estimation [`GradMethod`]
 //! (naive / adjoint / ACA / MALI) as a parameter — the experiments are
@@ -17,6 +18,7 @@ pub mod cde;
 pub mod cnf;
 pub mod image;
 pub mod latent;
+pub mod native;
 pub mod realnvp;
 
 use crate::grad::GradMethod;

@@ -1,0 +1,565 @@
+//! Artifact-free counterparts of the E2 / E8 experiment models, built on
+//! the fused [`crate::dynamics_native`] backends instead of AOT HLO
+//! executables — so the full train/predict loop runs under plain
+//! `cargo test` with synthetic weights (DESIGN.md §5).
+//!
+//! * [`NativeOdeClassifier`] — E2's CIFAR-shaped ODE classifier: the image
+//!   itself is the ODE state, a [`ConvStemDynamics`] conv stack is the
+//!   right-hand side, and a linear softmax-CE head reads the terminal
+//!   state.  Stems/heads stay on the host; the gradient method under test
+//!   only ever sees the fused dynamics.
+//! * [`NativeLatentOde`] — E8's latent ODE: linear encoder over the
+//!   observed prefix → latent [`MlpDynamics`] (time-concat) → linear
+//!   decoder, trained with per-frame MSE on the prediction grid through
+//!   `grad_obs_batched` exactly like the HLO-backed [`super::latent`].
+
+use super::{ParamBlock, SolveCfg, StepOutput};
+use crate::data::images::ImageSpec;
+use crate::dynamics_native::{ConvStemDynamics, MlpDynamics, TimeMode};
+use crate::grad::batch_driver::{grad_batched, grad_obs_batched};
+use crate::grad::{BatchLossHead, FusedObsLoss, ObsGrid};
+use crate::solvers::batch::BatchSpec;
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::StepObserver;
+use crate::solvers::State;
+use crate::tensor::{argmax_rows, axpy, matmul_into};
+use crate::util::mem::MemTracker;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::cell::RefCell;
+
+/// `x · W + b` for row-major `x: [batch, din]`, `W: [din, dout]`.
+fn linear_fwd(x: &[f32], w: &[f32], b: &[f32], batch: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * dout];
+    matmul_into(x, w, batch, din, dout, &mut out);
+    for r in 0..batch {
+        axpy(1.0, b, &mut out[r * dout..(r + 1) * dout]);
+    }
+    out
+}
+
+/// `a · Wᵀ` — the input cotangent of [`linear_fwd`].
+fn linear_bwd_x(a: &[f32], w: &[f32], batch: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut wt = vec![0.0f32; dout * din];
+    for i in 0..din {
+        for o in 0..dout {
+            wt[o * din + i] = w[i * dout + o];
+        }
+    }
+    let mut ax = vec![0.0f32; batch * din];
+    matmul_into(a, &wt, batch, dout, din, &mut ax);
+    ax
+}
+
+/// Accumulate `gw += xᵀ·a`, `gb += column-sums(a)`.
+fn linear_grads(
+    x: &[f32],
+    a: &[f32],
+    batch: usize,
+    din: usize,
+    dout: usize,
+    gw: &mut [f32],
+    gb: &mut [f32],
+) {
+    let mut xt = vec![0.0f32; din * batch];
+    for r in 0..batch {
+        for i in 0..din {
+            xt[i * batch + r] = x[r * din + i];
+        }
+    }
+    let mut dw = vec![0.0f32; din * dout];
+    matmul_into(&xt, a, din, batch, dout, &mut dw);
+    axpy(1.0, &dw, gw);
+    for r in 0..batch {
+        axpy(1.0, &a[r * dout..(r + 1) * dout], gb);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E2: native ODE image classifier
+// ---------------------------------------------------------------------------
+
+/// Neural-ODE image classifier over synthetic CIFAR-shaped data with the
+/// conv-stem dynamics as the ODE block and a host-side linear softmax-CE
+/// head.  The image is the ODE state (`z₀ = x`), as in the paper's
+/// "replace the residual block" construction.
+pub struct NativeOdeClassifier {
+    pub spec: ImageSpec,
+    /// Flattened state dimension `side²·channels`.
+    pub d: usize,
+    /// Linear head: `W [d × classes]` then `b [classes]`, one flat block.
+    pub head: ParamBlock,
+    pub dynamics: ConvStemDynamics,
+    /// Gradient of the dynamics parameters from the last [`Self::step`].
+    pub dyn_grad: Vec<f32>,
+}
+
+impl NativeOdeClassifier {
+    /// Build for an [`ImageSpec`] with intermediate conv channel widths
+    /// `mid` (the dynamics chain is `channels → mid… → channels`).
+    pub fn new(spec: &ImageSpec, mid: &[usize], rng: &mut Rng) -> NativeOdeClassifier {
+        let d = spec.dim();
+        let dynamics = ConvStemDynamics::new(spec.side, spec.channels, mid, TimeMode::Affine, rng);
+        let mut head_init = vec![0.0f32; d * spec.classes + spec.classes];
+        rng.fill_normal(&mut head_init[..d * spec.classes], 0.8 / (d as f64).sqrt());
+        let dyn_grad = vec![0.0; dynamics.param_dim()];
+        NativeOdeClassifier {
+            spec: spec.clone(),
+            d,
+            head: ParamBlock::new("head", head_init),
+            dynamics,
+            dyn_grad,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.head.len() + self.dynamics.param_dim()
+    }
+
+    /// Batch-mean softmax cross entropy of the linear head on terminal
+    /// states `z`: returns `(loss, logits, a_z, a_θ_head)`.
+    fn head_loss(&self, z: &[f32], y1h: &[f32], batch: usize) -> (f64, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c = self.spec.classes;
+        let w = &self.head.value[..self.d * c];
+        let b = &self.head.value[self.d * c..];
+        let logits = linear_fwd(z, w, b, batch, self.d, c);
+        let mut loss = 0.0f64;
+        let mut a_logits = vec![0.0f32; batch * c];
+        let inv_b = 1.0 / batch as f64;
+        for r in 0..batch {
+            let row = &logits[r * c..(r + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = row.iter().map(|&l| ((l - m) as f64).exp()).collect();
+            let denom: f64 = exps.iter().sum();
+            for j in 0..c {
+                let p = exps[j] / denom;
+                let y = y1h[r * c + j] as f64;
+                if y > 0.0 {
+                    loss -= y * (p.max(1e-12)).ln();
+                }
+                a_logits[r * c + j] = ((p - y) * inv_b) as f32;
+            }
+        }
+        loss *= inv_b;
+        let a_z = linear_bwd_x(&a_logits, w, batch, self.d, c);
+        let mut ath = vec![0.0f32; self.head.len()];
+        {
+            let (gw, gb) = ath.split_at_mut(self.d * c);
+            linear_grads(z, &a_logits, batch, self.d, c, gw, gb);
+        }
+        (loss, logits, a_z, ath)
+    }
+
+    /// Inference logits for a flat `[batch, d]` image block.
+    pub fn predict(&self, x: &[f32], cfg: &SolveCfg) -> Result<Vec<f32>> {
+        let batch = x.len() / self.d;
+        let s0 = cfg.solver.init(&self.dynamics, cfg.spec.t0, x);
+        let (s_end, _) = crate::solvers::integrate::integrate(
+            cfg.solver,
+            &self.dynamics,
+            cfg.spec.t0,
+            cfg.spec.t1,
+            s0,
+            &cfg.spec.mode,
+            &cfg.spec.norm,
+            &mut (),
+        )?;
+        let dummy = vec![0.0f32; batch * self.spec.classes];
+        let (_, logits, _, _) = self.head_loss(&s_end.z, &dummy, batch);
+        Ok(logits)
+    }
+
+    pub fn accuracy(&self, logits: &[f32], y: &[usize]) -> f64 {
+        let pred = argmax_rows(logits, y.len(), self.spec.classes);
+        let correct = pred.iter().zip(y).filter(|(p, t)| p == t).count();
+        correct as f64 / y.len() as f64
+    }
+
+    /// One training step on a flat `[batch, d]` image block with one-hot
+    /// labels; gradients land in `head.grad` / `dyn_grad`.
+    pub fn step(&mut self, x: &[f32], y1h: &[f32], cfg: &SolveCfg) -> Result<StepOutput> {
+        let batch = x.len() / self.d;
+        let (res, logits, ath) = {
+            let stash: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((vec![], vec![]));
+            let head = NativeImageHead {
+                model: self,
+                y1h,
+                batch,
+                stash: &stash,
+            };
+            let res = grad_batched(
+                cfg.method,
+                &self.dynamics,
+                cfg.solver,
+                &cfg.spec,
+                x,
+                &BatchSpec::new(batch, self.d),
+                &head,
+                MemTracker::new(),
+            )?;
+            let (logits, ath) = stash.into_inner();
+            (res, logits, ath)
+        };
+        self.head.grad.copy_from_slice(&ath);
+        self.dyn_grad.copy_from_slice(&res.grad_theta);
+        Ok(StepOutput {
+            loss: res.loss,
+            logits,
+            peak_mem_bytes: res.stats.peak_mem_bytes,
+            n_steps: res.stats.fwd.n_accepted,
+            f_evals: res.stats.f_evals,
+            ..StepOutput::default()
+        })
+    }
+}
+
+/// Host-side linear softmax-CE head; reports one batch total and stashes
+/// `(logits, a_θ_head)` like the fused device head it mirrors.
+struct NativeImageHead<'a> {
+    model: &'a NativeOdeClassifier,
+    y1h: &'a [f32],
+    batch: usize,
+    stash: &'a RefCell<(Vec<f32>, Vec<f32>)>,
+}
+
+impl BatchLossHead for NativeImageHead<'_> {
+    fn loss_grad_batch(&self, z_t: &[f32], _spec: &BatchSpec) -> (Vec<f64>, Vec<f32>) {
+        let (loss, logits, az, ath) = self.model.head_loss(z_t, self.y1h, self.batch);
+        *self.stash.borrow_mut() = (logits, ath);
+        (vec![loss], az)
+    }
+
+    /// The head itself is row-separable, but the stash side-channel is
+    /// not `Sync`; run it unsharded.
+    fn separable(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E8: native latent ODE
+// ---------------------------------------------------------------------------
+
+/// Latent ODE for the hopper time-series task with every stage native:
+/// deterministic linear encoder over the flattened observed prefix,
+/// time-concat [`MlpDynamics`] in latent space, linear decoder + per-frame
+/// MSE on the prediction grid (one `grad_obs_batched` pass, as in the
+/// HLO-backed model — MALI keeps its single continuous ψ⁻¹ reverse sweep).
+pub struct NativeLatentOde {
+    pub obs: usize,
+    pub t_len: usize,
+    pub t_out: usize,
+    pub latent: usize,
+    /// Encoder: `W [t_len·obs × latent]` then `b [latent]`.
+    pub enc: ParamBlock,
+    /// Decoder: `W [latent × obs]` then `b [obs]`.
+    pub dec: ParamBlock,
+    pub dynamics: MlpDynamics,
+    pub dyn_grad: Vec<f32>,
+}
+
+impl NativeLatentOde {
+    pub fn new(
+        obs: usize,
+        t_len: usize,
+        t_out: usize,
+        latent: usize,
+        hidden: &[usize],
+        rng: &mut Rng,
+    ) -> NativeLatentOde {
+        let d_in = t_len * obs;
+        let mut enc_init = vec![0.0f32; d_in * latent + latent];
+        rng.fill_normal(&mut enc_init[..d_in * latent], 1.0 / (d_in as f64).sqrt());
+        let mut dec_init = vec![0.0f32; latent * obs + obs];
+        rng.fill_normal(&mut dec_init[..latent * obs], 1.0 / (latent as f64).sqrt());
+        let dynamics = MlpDynamics::new(latent, hidden, TimeMode::Concat, rng);
+        let dyn_grad = vec![0.0; dynamics.param_dim()];
+        NativeLatentOde {
+            obs,
+            t_len,
+            t_out,
+            latent,
+            enc: ParamBlock::new("enc", enc_init),
+            dec: ParamBlock::new("dec", dec_init),
+            dynamics,
+            dyn_grad,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.enc.len() + self.dec.len() + self.dynamics.param_dim()
+    }
+
+    fn encode(&self, seq: &[f32], batch: usize) -> Vec<f32> {
+        let d_in = self.t_len * self.obs;
+        let w = &self.enc.value[..d_in * self.latent];
+        let b = &self.enc.value[d_in * self.latent..];
+        linear_fwd(seq, w, b, batch, d_in, self.latent)
+    }
+
+    fn decode(&self, z: &[f32], batch: usize) -> Vec<f32> {
+        let w = &self.dec.value[..self.latent * self.obs];
+        let b = &self.dec.value[self.latent * self.obs..];
+        linear_fwd(z, w, b, batch, self.latent, self.obs)
+    }
+
+    /// Prediction times for the `t_out` future frames, uniform on `(0, 1]`.
+    fn pred_times(&self) -> Vec<f64> {
+        (1..=self.t_out)
+            .map(|k| k as f64 / self.t_out as f64)
+            .collect()
+    }
+
+    /// Predict the future frames for the observed prefix: one
+    /// observation-aware integration, decoding the exact-hit states.
+    /// Returns `batch × t_out × obs`.
+    pub fn predict(&self, seq: &[f32], batch: usize, cfg: &SolveCfg) -> Result<Vec<f32>> {
+        let z0 = self.encode(seq, batch);
+        let grid = ObsGrid::new(self.pred_times())?;
+        struct Frames(Vec<Vec<f32>>);
+        impl StepObserver for Frames {
+            fn on_observation(&mut self, _k: usize, _t: f64, state: &State) {
+                self.0.push(state.z.clone());
+            }
+        }
+        let s0 = cfg.solver.init(&self.dynamics, cfg.spec.t0, &z0);
+        let mut frames = Frames(Vec::with_capacity(self.t_out));
+        crate::solvers::integrate::integrate_obs(
+            cfg.solver,
+            &self.dynamics,
+            cfg.spec.t0,
+            cfg.spec.t1,
+            s0,
+            &cfg.spec.mode,
+            &cfg.spec.norm,
+            &grid,
+            &mut frames,
+        )?;
+        let mut out = vec![0.0f32; batch * self.t_out * self.obs];
+        for (k, z) in frames.0.iter().enumerate() {
+            let block = self.decode(z, batch);
+            for b in 0..batch {
+                let dst = (b * self.t_out + k) * self.obs;
+                out[dst..dst + self.obs]
+                    .copy_from_slice(&block[b * self.obs..(b + 1) * self.obs]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean squared error over a `batch × t_out × obs` prediction block.
+    pub fn mse(preds: &[f32], target: &[f32]) -> f64 {
+        preds
+            .iter()
+            .zip(target)
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / preds.len() as f64
+    }
+
+    /// One training step: `seq` is `batch × t_len × obs`, `target` is
+    /// `batch × t_out × obs` (time-major per example, hopper layout).
+    pub fn step(&mut self, seq: &[f32], target: &[f32], cfg: &SolveCfg) -> Result<StepOutput> {
+        let d_in = self.t_len * self.obs;
+        let batch = seq.len() / d_in;
+        let z0 = self.encode(seq, batch);
+        let n_total = (batch * self.t_out * self.obs) as f64;
+        let dec_grad = RefCell::new(vec![0.0f32; self.dec.len()]);
+        let res = {
+            let this = &*self;
+            let head = FusedObsLoss(|k: usize, _t: f64, z: &[f32]| {
+                let pred = this.decode(z, batch);
+                let mut loss_k = 0.0f64;
+                let mut a_obs = vec![0.0f32; pred.len()];
+                for b in 0..batch {
+                    for j in 0..this.obs {
+                        let diff =
+                            pred[b * this.obs + j] - target[(b * this.t_out + k) * this.obs + j];
+                        loss_k += (diff as f64) * (diff as f64);
+                        a_obs[b * this.obs + j] = 2.0 * diff / n_total as f32;
+                    }
+                }
+                let w = &this.dec.value[..this.latent * this.obs];
+                let az = linear_bwd_x(&a_obs, w, batch, this.latent, this.obs);
+                {
+                    let mut dg = dec_grad.borrow_mut();
+                    let (gw, gb) = dg.split_at_mut(this.latent * this.obs);
+                    linear_grads(z, &a_obs, batch, this.latent, this.obs, gw, gb);
+                }
+                (loss_k / n_total, az)
+            });
+            let grid = ObsGrid::new(this.pred_times())?;
+            grad_obs_batched(
+                cfg.method,
+                &this.dynamics,
+                cfg.solver,
+                &cfg.spec,
+                &grid,
+                &z0,
+                &BatchSpec::new(batch, this.latent),
+                &head,
+                MemTracker::new(),
+            )?
+        };
+        self.dyn_grad.copy_from_slice(&res.grad_theta);
+        // encoder backward from a_z0
+        self.enc.zero_grad();
+        {
+            let (gw, gb) = self.enc.grad.split_at_mut(d_in * self.latent);
+            linear_grads(seq, &res.grad_z0, batch, d_in, self.latent, gw, gb);
+        }
+        self.dec.grad.copy_from_slice(&dec_grad.into_inner());
+        Ok(StepOutput {
+            loss: res.loss,
+            peak_mem_bytes: res.stats.peak_mem_bytes,
+            n_steps: res.stats.fwd.n_accepted,
+            f_evals: res.stats.f_evals,
+            ..StepOutput::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images;
+    use crate::grad::IvpSpec;
+    use crate::sim::hopper;
+    use crate::solvers::by_name;
+
+    fn cfg<'a>(
+        solver: &'a dyn crate::solvers::Solver,
+        method: &'a dyn crate::grad::GradMethod,
+    ) -> SolveCfg<'a> {
+        SolveCfg {
+            solver,
+            spec: IvpSpec::fixed(0.0, 1.0, 0.25),
+            method,
+        }
+    }
+
+    /// E2 native: the classifier trains end-to-end on synthetic images
+    /// under `cargo test` — no artifacts, no PJRT.
+    #[test]
+    fn native_classifier_step_and_learns() {
+        let spec = ImageSpec {
+            side: 8,
+            channels: 3,
+            classes: 4,
+            jitter: 0.3,
+        };
+        let mut rng = Rng::new(11);
+        let mut m = NativeOdeClassifier::new(&spec, &[4], &mut rng);
+        let ds = images::generate(&spec, 8, 21);
+        let idx: Vec<usize> = (0..8).collect();
+        let (x, y1h) = (ds.gather(&idx), ds.one_hot(&idx));
+        let solver = by_name("alf").unwrap();
+        let method = crate::grad::by_name("mali").unwrap();
+        let c = cfg(&*solver, &*method);
+        let out0 = m.step(&x, &y1h, &c).unwrap();
+        assert!(out0.loss.is_finite() && out0.loss > 0.0);
+        assert_eq!(out0.logits.len(), 8 * spec.classes);
+        assert!(m.head.grad.iter().any(|&g| g != 0.0), "head grad zero");
+        assert!(m.dyn_grad.iter().any(|&g| g != 0.0), "dynamics grad zero");
+        let lr = 0.4f32;
+        let mut last = out0.loss;
+        for _ in 0..12 {
+            for (v, g) in m.head.value.iter_mut().zip(m.head.grad.clone()) {
+                *v -= lr * g;
+            }
+            let th: Vec<f32> = m
+                .dynamics
+                .params()
+                .iter()
+                .zip(&m.dyn_grad)
+                .map(|(p, g)| p - lr * g)
+                .collect();
+            m.dynamics.set_params(&th);
+            last = m.step(&x, &y1h, &c).unwrap().loss;
+        }
+        assert!(last < out0.loss, "CE did not decrease: {} → {last}", out0.loss);
+        let logits = m.predict(&x, &c).unwrap();
+        let acc = m.accuracy(&logits, &ds.y[..8]);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    /// E6 native: the latent ODE trains on hopper sequences under
+    /// `cargo test`, and all four gradient methods produce close dynamics
+    /// gradients on it.
+    #[test]
+    fn native_latent_ode_step_and_learns() {
+        let (batch, t_len, t_out) = (4, 6, 3);
+        let mut rng = Rng::new(13);
+        let mut m = NativeLatentOde::new(hopper::OBS_DIM, t_len, t_out, 6, &[12], &mut rng);
+        let ds = hopper::generate(batch, t_len, t_out, 3.0, 23);
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for i in 0..batch {
+            seq.extend_from_slice(ds.observed(i, t_len));
+            tgt.extend_from_slice(ds.target(i, t_len, t_out));
+        }
+        let solver = by_name("alf").unwrap();
+        let method = crate::grad::by_name("mali").unwrap();
+        let c = cfg(&*solver, &*method);
+        let out0 = m.step(&seq, &tgt, &c).unwrap();
+        assert!(out0.loss.is_finite() && out0.loss > 0.0);
+        assert!(m.enc.grad.iter().any(|&g| g != 0.0), "encoder grad zero");
+        assert!(m.dec.grad.iter().any(|&g| g != 0.0), "decoder grad zero");
+        assert!(m.dyn_grad.iter().any(|&g| g != 0.0), "dynamics grad zero");
+        let lr = 0.05f32;
+        let mut last = out0.loss;
+        for _ in 0..10 {
+            for (v, g) in m.enc.value.iter_mut().zip(m.enc.grad.clone()) {
+                *v -= lr * g;
+            }
+            for (v, g) in m.dec.value.iter_mut().zip(m.dec.grad.clone()) {
+                *v -= lr * g;
+            }
+            let th: Vec<f32> = m
+                .dynamics
+                .params()
+                .iter()
+                .zip(&m.dyn_grad)
+                .map(|(p, g)| p - lr * g)
+                .collect();
+            m.dynamics.set_params(&th);
+            last = m.step(&seq, &tgt, &c).unwrap().loss;
+        }
+        assert!(last < out0.loss, "MSE did not decrease: {} → {last}", out0.loss);
+        let p = m.predict(&seq, batch, &c).unwrap();
+        assert_eq!(p.len(), tgt.len());
+        assert!(NativeLatentOde::mse(&p, &tgt).is_finite());
+    }
+
+    /// The four gradient protocols agree on the native latent model's
+    /// dynamics gradient (fixed grid, smooth dynamics).
+    #[test]
+    fn native_latent_grad_methods_agree() {
+        let (batch, t_len, t_out) = (3, 5, 2);
+        let mut rng = Rng::new(17);
+        let mut m = NativeLatentOde::new(hopper::OBS_DIM, t_len, t_out, 5, &[8], &mut rng);
+        let ds = hopper::generate(batch, t_len, t_out, 3.0, 29);
+        let mut seq = Vec::new();
+        let mut tgt = Vec::new();
+        for i in 0..batch {
+            seq.extend_from_slice(ds.observed(i, t_len));
+            tgt.extend_from_slice(ds.target(i, t_len, t_out));
+        }
+        let solver = by_name("alf").unwrap();
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        for name in ["naive", "adjoint", "aca", "mali"] {
+            let method = crate::grad::by_name(name).unwrap();
+            let c = cfg(&*solver, &*method);
+            m.step(&seq, &tgt, &c).unwrap();
+            grads.push(m.dyn_grad.clone());
+        }
+        for (i, g) in grads.iter().enumerate().skip(1) {
+            let max_abs: f32 = g
+                .iter()
+                .zip(&grads[0])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(max_abs < 1e-2, "method {i} diverges from naive: {max_abs}");
+        }
+    }
+}

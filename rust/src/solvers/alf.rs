@@ -83,13 +83,10 @@ impl AlfSolver {
         err_out: &mut [f32],
         ws: &mut SolverWorkspace,
     ) {
-        if self.prefer_fused {
-            if let Some((zf, vf, ef)) = dynamics.fused_alf(z, v, t, h, self.eta) {
-                z_out.copy_from_slice(&zf);
-                v_out.copy_from_slice(&vf);
-                err_out.copy_from_slice(&ef);
-                return;
-            }
+        if self.prefer_fused
+            && dynamics.fused_alf_into(z, v, t, h, self.eta, z_out, v_out, err_out)
+        {
+            return;
         }
         let eta = self.eta as f32;
         let hf = h as f32;
@@ -142,12 +139,10 @@ impl AlfSolver {
         v_in: &mut [f32],
         ws: &mut SolverWorkspace,
     ) {
-        if self.prefer_fused {
-            if let Some((zf, vf)) = dynamics.fused_alf_inv(z_out, v_out, t_out, h, self.eta) {
-                z_in.copy_from_slice(&zf);
-                v_in.copy_from_slice(&vf);
-                return;
-            }
+        if self.prefer_fused
+            && dynamics.fused_alf_inv_into(z_out, v_out, t_out, h, self.eta, z_in, v_in)
+        {
+            return;
         }
         let eta = self.eta as f32;
         let hf = h as f32;
@@ -220,15 +215,12 @@ impl AlfSolver {
         ath_acc: &mut [f32],
         ws: &mut SolverWorkspace,
     ) {
-        if self.prefer_fused {
-            if let Some((az, av, ath)) =
-                dynamics.fused_alf_vjp(z, v, t, h, self.eta, az_out, av_out)
-            {
-                az_in.copy_from_slice(&az);
-                av_in.copy_from_slice(&av);
-                axpy(1.0, &ath, ath_acc);
-                return;
-            }
+        if self.prefer_fused
+            && dynamics.fused_alf_vjp_into(
+                z, v, t, h, self.eta, az_out, av_out, az_in, av_in, ath_acc,
+            )
+        {
+            return;
         }
         let eta = self.eta as f32;
         let hf = h as f32;
@@ -299,6 +291,11 @@ impl AlfSolver {
         err_out: &mut [f32],
         ws: &mut BatchWorkspace,
     ) {
+        if self.prefer_fused
+            && dynamics.fused_alf_batch_into(ts, hs, z, v, self.eta, spec, z_out, v_out, err_out)
+        {
+            return;
+        }
         let eta = self.eta as f32;
         let n = spec.flat_len();
         fill_row_coeffs(hs, 0.5, &mut ws.half);
@@ -362,6 +359,12 @@ impl AlfSolver {
         v_in: &mut [f32],
         ws: &mut BatchWorkspace,
     ) {
+        if self.prefer_fused
+            && dynamics
+                .fused_alf_inv_batch_into(ts_out, hs, z_out, v_out, self.eta, spec, z_in, v_in)
+        {
+            return;
+        }
         let eta = self.eta as f32;
         let n = spec.flat_len();
         fill_row_coeffs(hs, -0.5, &mut ws.half);
@@ -434,6 +437,13 @@ impl AlfSolver {
         ath_acc: &mut [f32],
         ws: &mut BatchWorkspace,
     ) {
+        if self.prefer_fused
+            && dynamics.fused_alf_vjp_batch_into(
+                ts, hs, z, v, self.eta, spec, az_out, av_out, az_in, av_in, ath_acc,
+            )
+        {
+            return;
+        }
         let eta = self.eta as f32;
         let n = spec.flat_len();
         fill_row_coeffs(hs, 0.5, &mut ws.half);
@@ -685,17 +695,18 @@ impl Solver for AlfSolver {
                 Some(av) => av,
                 None => &zero_buf,
             };
-            let fused =
-                dynamics.fused_alf_bwd(&s_out.z, v_out, t_out, h, self.eta, &a_out.z, av_out);
+            super::workspace::shape_state_n(s_in, n, true);
+            super::workspace::shape_state_n(a_in, n, true);
+            let State { z: siz, v: siv } = s_in;
+            let siv = siv.as_mut().expect("just shaped");
+            let State { z: aiz, v: aiv } = a_in;
+            let aiv = aiv.as_mut().expect("just shaped");
+            let fused = dynamics.fused_alf_bwd_into(
+                &s_out.z, v_out, t_out, h, self.eta, &a_out.z, av_out, siz, siv, aiz, aiv,
+                ath_acc,
+            );
             ws.zero = zero_buf;
-            if let Some((z_in, v_in, a_z, a_v, a_th)) = fused {
-                super::workspace::shape_state_n(s_in, n, true);
-                super::workspace::shape_state_n(a_in, n, true);
-                s_in.z.copy_from_slice(&z_in);
-                s_in.v.as_mut().expect("just shaped").copy_from_slice(&v_in);
-                a_in.z.copy_from_slice(&a_z);
-                a_in.v.as_mut().expect("just shaped").copy_from_slice(&a_v);
-                axpy(1.0, &a_th, ath_acc);
+            if fused {
                 return true;
             }
         }

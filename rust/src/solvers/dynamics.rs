@@ -279,6 +279,178 @@ pub trait Dynamics {
     ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
         None
     }
+
+    // ---- allocation-free fused entry points ----------------------------
+    //
+    // The `_into` forms of the four fused hooks above: they write into
+    // caller buffers and return `true` when the dynamics took the fused
+    // path, `false` to let the solver compose the step from `f`/`f_vjp`.
+    // Defaults wrap the allocating `Option` hooks so a dynamics that only
+    // implements those (e.g. `runtime::HloDynamics`) still fuses on the
+    // workspace path; native backends override both forms in place.
+
+    /// Fused ψ into caller buffers.  Returns `true` if the fused path ran.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_into(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        z_out: &mut [f32],
+        v_out: &mut [f32],
+        err_out: &mut [f32],
+    ) -> bool {
+        if let Some((zf, vf, ef)) = self.fused_alf(z, v, t, h, eta) {
+            z_out.copy_from_slice(&zf);
+            v_out.copy_from_slice(&vf);
+            err_out.copy_from_slice(&ef);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fused ψ⁻¹ into caller buffers.  Returns `true` if the fused path ran.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_inv_into(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+    ) -> bool {
+        if let Some((zf, vf)) = self.fused_alf_inv(z_out, v_out, t_out, h, eta) {
+            z_in.copy_from_slice(&zf);
+            v_in.copy_from_slice(&vf);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fused ψ-vjp into caller buffers; the θ-cotangent is **accumulated**
+    /// into `ath_acc` (`+=`).  Returns `true` if the fused path ran.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_vjp_into(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+    ) -> bool {
+        if let Some((az, av, ath)) = self.fused_alf_vjp(z, v, t, h, eta, az_out, av_out) {
+            az_in.copy_from_slice(&az);
+            av_in.copy_from_slice(&av);
+            crate::tensor::axpy(1.0, &ath, ath_acc);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fused backward micro-step (ψ⁻¹ + ψ-vjp) into caller buffers; the
+    /// θ-cotangent is accumulated into `ath_acc`.  Returns `true` if the
+    /// fused path ran.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_bwd_into(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+    ) -> bool {
+        if let Some((zf, vf, az, av, ath)) =
+            self.fused_alf_bwd(z_out, v_out, t_out, h, eta, az_out, av_out)
+        {
+            z_in.copy_from_slice(&zf);
+            v_in.copy_from_slice(&vf);
+            az_in.copy_from_slice(&az);
+            av_in.copy_from_slice(&av);
+            crate::tensor::axpy(1.0, &ath, ath_acc);
+            true
+        } else {
+            false
+        }
+    }
+
+    // ---- batched fused entry points ------------------------------------
+    //
+    // Per-row `(t, h)` fused steps over the flat `[B, n_z]` buffer.  A
+    // backend whose layer stack rides `matmul_into` fuses the whole batch
+    // in one pass; defaults return `false` so the solver falls back to its
+    // composed batched arithmetic.
+
+    /// Batched fused ψ with per-row `(t, h)`.  Returns `true` if fused.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_batch_into(
+        &self,
+        _ts: &[f64],
+        _hs: &[f64],
+        _z: &[f32],
+        _v: &[f32],
+        _eta: f64,
+        _spec: &BatchSpec,
+        _z_out: &mut [f32],
+        _v_out: &mut [f32],
+        _err_out: &mut [f32],
+    ) -> bool {
+        false
+    }
+
+    /// Batched fused ψ⁻¹ with per-row `(t_out, h)`.  Returns `true` if fused.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_inv_batch_into(
+        &self,
+        _ts_out: &[f64],
+        _hs: &[f64],
+        _z_out: &[f32],
+        _v_out: &[f32],
+        _eta: f64,
+        _spec: &BatchSpec,
+        _z_in: &mut [f32],
+        _v_in: &mut [f32],
+    ) -> bool {
+        false
+    }
+
+    /// Batched fused ψ-vjp; the row-summed θ-cotangent is accumulated into
+    /// `ath_acc`.  Returns `true` if fused.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_alf_vjp_batch_into(
+        &self,
+        _ts: &[f64],
+        _hs: &[f64],
+        _z: &[f32],
+        _v: &[f32],
+        _eta: f64,
+        _spec: &BatchSpec,
+        _az_out: &[f32],
+        _av_out: &[f32],
+        _az_in: &mut [f32],
+        _av_in: &mut [f32],
+        _ath_acc: &mut [f32],
+    ) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -13,6 +13,11 @@
 //!   sequential dispatch path AND with the shards running concurrently
 //!   on a [`WorkerPool`] (the counting allocator is global, so the
 //!   shard workers' allocations would be caught too);
+//! * the native fused-dynamics backend (`dynamics_native::MlpDynamics`)
+//!   is allocation-free once its pooled layer scratch is warm: solo and
+//!   batched `f_into`/`f_vjp_into`, the whole fixed fused-ψ solve, the
+//!   fused ψ-vjp step, the fused ψ⁻¹+vjp reverse sweep, and the sharded
+//!   batched driver over the native MLP;
 //! * `MemTracker` peaks are unchanged by the refactor: MALI still
 //!   retains exactly the augmented end state (`N_z(N_f + 1)` — 2·N_z·4
 //!   bytes) and the adjoint exactly `z(T)` (N_z·4 bytes).
@@ -21,10 +26,11 @@
 //! allocate concurrently inside a measured region (the shard pool's
 //! threads are *part* of the sharded measurement, not a disturbance).
 
+use mali_ode::dynamics_native::{MlpDynamics as NativeMlp, TimeMode};
 use mali_ode::grad::{by_name as grad_by_name, IvpSpec, SquareLoss};
-use mali_ode::solvers::batch::BatchState;
+use mali_ode::solvers::batch::{BatchSpec, BatchState};
 use mali_ode::solvers::by_name as solver_by_name;
-use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::dynamics::{Dynamics, LinearToy};
 use mali_ode::solvers::integrate::{
     integrate_batch_obs_stats_sharded, integrate_ws, BatchShards, ErrorNorm, GridRecorder,
     ObsGrid, StepMode,
@@ -33,6 +39,7 @@ use mali_ode::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use mali_ode::solvers::{Solver, State};
 use mali_ode::util::mem::MemTracker;
 use mali_ode::util::pool::WorkerPool;
+use mali_ode::util::rng::Rng;
 
 #[path = "common/counting_alloc.rs"]
 mod counting_alloc;
@@ -46,7 +53,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[allow(clippy::too_many_arguments)]
 fn mali_sweep(
     solver: &dyn Solver,
-    toy: &LinearToy,
+    toy: &dyn Dynamics,
     times: &[f64],
     s_end: &State,
     dl_dz: &[f32],
@@ -195,6 +202,145 @@ fn zero_allocations_in_steady_state_hot_paths() {
         assert_eq!(
             delta, 0,
             "sharded {label}: warmed sharded integrate allocated {delta} times"
+        );
+    }
+
+    // ---- native MLP dynamics: warmed forward / VJP are allocation-free --
+    // The fused-dynamics backend owns per-layer workspaces behind a
+    // scratch pool; the first call sizes them, after which `f_into`,
+    // `f_vjp_into` and their batched variants never touch the allocator.
+    let mut mlp_rng = Rng::new(7);
+    let mlp = NativeMlp::new(n_z, &[16, 12], TimeMode::Concat, &mut mlp_rng);
+    let n_th = mlp.param_dim();
+    let a_cot: Vec<f32> = (0..n_z).map(|i| 0.5 - 0.1 * i as f32).collect();
+    let mut fz = vec![0.0f32; n_z];
+    let mut az = vec![0.0f32; n_z];
+    let mut ath = vec![0.0f32; n_th];
+    for _ in 0..2 {
+        mlp.f_into(0.3, &z0, &mut fz);
+        mlp.f_vjp_into(0.3, &z0, &a_cot, &mut az, &mut ath);
+    }
+    let a0 = allocs();
+    mlp.f_into(0.3, &z0, &mut fz);
+    mlp.f_vjp_into(0.3, &z0, &a_cot, &mut az, &mut ath);
+    let delta = allocs() - a0;
+    assert_eq!(delta, 0, "warmed native-MLP f/f_vjp allocated {delta} times");
+
+    let nbm = 4usize;
+    let bspec = BatchSpec::new(nbm, n_z);
+    let zb: Vec<f32> = (0..bspec.flat_len()).map(|i| 0.1 * (i % 13) as f32 - 0.5).collect();
+    let ab: Vec<f32> = (0..bspec.flat_len()).map(|i| 0.3 - 0.05 * (i % 7) as f32).collect();
+    let tsb = vec![0.25f64; nbm];
+    let mut fzb = vec![0.0f32; bspec.flat_len()];
+    let mut azb = vec![0.0f32; bspec.flat_len()];
+    for _ in 0..2 {
+        mlp.f_batch_into(&tsb, &zb, &bspec, &mut fzb);
+        mlp.f_vjp_batch_into(&tsb, &zb, &ab, &bspec, &mut azb, &mut ath);
+    }
+    let a0 = allocs();
+    mlp.f_batch_into(&tsb, &zb, &bspec, &mut fzb);
+    mlp.f_vjp_batch_into(&tsb, &zb, &ab, &bspec, &mut azb, &mut ath);
+    let delta = allocs() - a0;
+    assert_eq!(delta, 0, "warmed native-MLP batched f/f_vjp allocated {delta} times");
+
+    // ---- native MLP through the fused ALF ψ paths -----------------------
+    // One fused dispatch per step: the whole fixed solve, the ψ-vjp step
+    // and the ψ⁻¹+vjp reverse sweep stay allocation-free once warm.
+    let s0_mlp = solver.init(&mlp, 0.0, &z0);
+    integrate_ws(&*solver, &mlp, 0.0, 1.0, &s0_mlp, &fixed, &norm, &mut (), &mut ws).unwrap();
+    integrate_ws(&*solver, &mlp, 0.0, 1.0, &s0_mlp, &fixed, &norm, &mut (), &mut ws).unwrap();
+    let a0 = allocs();
+    let stats = integrate_ws(&*solver, &mlp, 0.0, 1.0, &s0_mlp, &fixed, &norm, &mut (), &mut ws)
+        .unwrap();
+    let delta = allocs() - a0;
+    assert_eq!(stats.n_accepted, 100);
+    assert_eq!(
+        delta, 0,
+        "steady-state fused-MLP fixed integrate allocated {delta} times over {} steps",
+        stats.n_accepted
+    );
+
+    let a_out_s = State {
+        z: a_cot.clone(),
+        v: Some(vec![0.0f32; n_z]),
+    };
+    let mut a_in_s = shaped();
+    let mut ath_step = vec![0.0f32; n_th];
+    for _ in 0..2 {
+        solver.step_vjp_into(&mlp, 0.2, 0.01, &s0_mlp, &a_out_s, &mut a_in_s, &mut ath_step, &mut ws);
+    }
+    let a0 = allocs();
+    solver.step_vjp_into(&mlp, 0.2, 0.01, &s0_mlp, &a_out_s, &mut a_in_s, &mut ath_step, &mut ws);
+    let delta = allocs() - a0;
+    assert_eq!(delta, 0, "warmed fused-MLP ψ-vjp step allocated {delta} times");
+
+    let mut rec_mlp = GridRecorder::new(0.0);
+    integrate_ws(&*solver, &mlp, 0.0, 1.0, &s0_mlp, &fixed, &norm, &mut rec_mlp, &mut ws).unwrap();
+    let s_end_mlp = ws.take_output();
+    let dl_dz_mlp: Vec<f32> = s_end_mlp.z.iter().map(|&z| 2.0 * z).collect();
+    let mut bufs_mlp = [shaped(), shaped(), shaped(), shaped()];
+    let mut grad_theta_mlp = vec![0.0f32; n_th];
+    mali_sweep(
+        &*solver, &mlp, rec_mlp.times(), &s_end_mlp, &dl_dz_mlp, &mut bufs_mlp,
+        &mut grad_theta_mlp, &mut ws,
+    );
+    grad_theta_mlp.fill(0.0);
+    let a0 = allocs();
+    mali_sweep(
+        &*solver, &mlp, rec_mlp.times(), &s_end_mlp, &dl_dz_mlp, &mut bufs_mlp,
+        &mut grad_theta_mlp, &mut ws,
+    );
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta,
+        0,
+        "steady-state fused-MLP reverse sweep allocated {delta} times over {} steps",
+        rec_mlp.times().len() - 1
+    );
+    for (r, z) in bufs_mlp[0].z.iter().zip(&z0) {
+        assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "fused ψ⁻¹ reconstruction");
+    }
+
+    // ---- native MLP under the sharded batched driver --------------------
+    let states_mlp: Vec<State> = (0..nb)
+        .map(|b| {
+            let row: Vec<f32> = (0..n_z).map(|j| 0.2 + 0.2 * b as f32 + 0.05 * j as f32).collect();
+            solver.init(&mlp, 0.0, &row)
+        })
+        .collect();
+    let refs_mlp: Vec<&State> = states_mlp.iter().collect();
+    let state0_mlp = BatchState::from_states(&refs_mlp);
+    for (pool, label) in [(None, "sequential"), (Some(WorkerPool::new(1)), "pooled")] {
+        let mut shards = BatchShards::new(2);
+        let mut bws = BatchWorkspace::new();
+        let mut per = Vec::new();
+        let mut run = || {
+            integrate_batch_obs_stats_sharded(
+                &*solver,
+                &mlp,
+                0.0,
+                1.0,
+                &state0_mlp,
+                &fixed,
+                &norm,
+                &grid,
+                |_, _| (),
+                &mut per,
+                &mut shards,
+                &mut bws,
+                pool.as_ref(),
+            )
+            .unwrap()
+        };
+        run();
+        run();
+        let a0 = allocs();
+        let f_evals = run();
+        let delta = allocs() - a0;
+        assert!(f_evals > 0, "sharded native-MLP {label}: nothing integrated");
+        assert_eq!(
+            delta, 0,
+            "sharded native-MLP {label}: warmed sharded integrate allocated {delta} times"
         );
     }
 

@@ -14,6 +14,11 @@
 //! Tolerances follow the envelopes validated in `tests/grad_methods.rs`
 //! and `tests/obs_grid.rs` (FD ≲ 2e-2·(1+|fd|) at ε = 1e-2 on f32
 //! forward passes; exact-method agreement ≲ 1e-4).
+//!
+//! The native fused-dynamics backend (`dynamics_native::MlpDynamics`)
+//! gets the same treatment: random depths/widths × all three time
+//! conditioning modes × all four methods × {fixed, adaptive} × random
+//! observation grids, FD-checked on the shared fixed discretization.
 
 use mali_ode::grad::{
     by_name, forward_loss, forward_loss_obs, IvpSpec, ObsGrid, ObsSquareLoss, SquareLoss,
@@ -262,6 +267,123 @@ fn fuzz_mlp_terminal_fd() {
                     "trial {trial} {method} z0[{j}]: fd {fd} vs {}",
                     r.grad_z0[j]
                 );
+            }
+        }
+    }
+}
+
+/// Native fused-MLP fuzz: random depths/widths and time-conditioning
+/// modes, all four methods, fixed AND adaptive stepping, random
+/// observation grids.  Exact methods agree on the same ALF solve (the
+/// fused ψ/ψ⁻¹/ψ-vjp entries carry the whole computation here); on the
+/// shared fixed discretization every method is FD-checked in θ (spot
+/// coordinates across layers, including the time-affine tail) and in
+/// every z₀ coordinate.
+#[test]
+fn fuzz_native_mlp_obs_gradients() {
+    use mali_ode::dynamics_native::{MlpDynamics as NativeMlp, TimeMode};
+
+    let mut rng = Rng::new(7004);
+    for trial in 0..3usize {
+        let n = 2 + rng.below(3);
+        let depth = rng.below(3);
+        let hidden: Vec<usize> = (0..depth).map(|_| 3 + rng.below(4)).collect();
+        let time = match trial % 3 {
+            0 => TimeMode::None,
+            1 => TimeMode::Concat,
+            _ => TimeMode::Affine,
+        };
+        let mut dynamics = NativeMlp::new(n, &hidden, time, &mut rng);
+        let mut z0 = vec![0.0f32; n];
+        rng.fill_uniform_sym(&mut z0, 0.8);
+        let t_end = rng.range(0.6, 1.1);
+        let grid = random_grid(&mut rng, t_end);
+        let weights: Vec<f64> = (0..grid.len()).map(|_| rng.range(0.5, 2.0)).collect();
+
+        for &(label, fixed) in &[("fixed", true), ("adaptive", false)] {
+            let spec = if fixed {
+                IvpSpec::fixed(0.0, t_end, 0.05)
+            } else {
+                IvpSpec::adaptive(0.0, t_end, 1e-5, 1e-7)
+            };
+            let mut results = Vec::new();
+            for method in METHODS {
+                let solver = solver_by_name(solver_for(method)).unwrap();
+                let m = by_name(method).unwrap();
+                let head = ObsSquareLoss {
+                    weights: weights.clone(),
+                };
+                let r = m
+                    .grad_obs(&dynamics, &*solver, &spec, &grid, &z0, &head, MemTracker::new())
+                    .unwrap();
+                assert_eq!(r.obs_losses.len(), grid.len(), "{label} {method}");
+                results.push((method, r));
+            }
+            // exact methods agree on the same ALF solve; the envelope is a
+            // touch looser than the toy's 1e-4 because deeper stacks
+            // accumulate a little more ψ⁻¹-reconstruction roundoff
+            let mali = &results[0].1;
+            let max_abs = |xs: &[f32]| {
+                1.0 + xs.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max)
+            };
+            for (method, r) in &results[1..3] {
+                assert!(
+                    l2(&r.grad_theta, &mali.grad_theta) < 1e-3 * max_abs(&mali.grad_theta),
+                    "trial {trial} {label} {method} vs mali θ"
+                );
+                assert!(
+                    l2(&r.grad_z0, &mali.grad_z0) < 1e-3 * max_abs(&mali.grad_z0),
+                    "trial {trial} {label} {method} vs mali z₀"
+                );
+                assert!((r.loss - mali.loss).abs() < 1e-6 * (1.0 + mali.loss.abs()));
+            }
+            if !fixed {
+                continue;
+            }
+            // FD on the shared fixed discretization
+            let eps = 1e-2f32;
+            let head = ObsSquareLoss {
+                weights: weights.clone(),
+            };
+            let theta0 = dynamics.params().to_vec();
+            let p = theta0.len();
+            for (method, r) in &results {
+                let solver = solver_by_name(solver_for(method)).unwrap();
+                for &k in &[0usize, p / 4, p / 2, 3 * p / 4, p - 1] {
+                    let mut tp = theta0.clone();
+                    tp[k] += eps;
+                    dynamics.set_params(&tp);
+                    let (lp, _, _, _) =
+                        forward_loss_obs(&dynamics, &*solver, &spec, &grid, &z0, &head).unwrap();
+                    let mut tm = theta0.clone();
+                    tm[k] -= eps;
+                    dynamics.set_params(&tm);
+                    let (lm, _, _, _) =
+                        forward_loss_obs(&dynamics, &*solver, &spec, &grid, &z0, &head).unwrap();
+                    dynamics.set_params(&theta0);
+                    let fd = (lp - lm) / (2.0 * eps as f64);
+                    assert!(
+                        (fd - r.grad_theta[k] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "trial {trial} {method} θ[{k}]: fd {fd} vs {}",
+                        r.grad_theta[k]
+                    );
+                }
+                for j in 0..z0.len() {
+                    let mut zp = z0.clone();
+                    zp[j] += eps;
+                    let (lp, _, _, _) =
+                        forward_loss_obs(&dynamics, &*solver, &spec, &grid, &zp, &head).unwrap();
+                    let mut zm = z0.clone();
+                    zm[j] -= eps;
+                    let (lm, _, _, _) =
+                        forward_loss_obs(&dynamics, &*solver, &spec, &grid, &zm, &head).unwrap();
+                    let fd = (lp - lm) / (2.0 * eps as f64);
+                    assert!(
+                        (fd - r.grad_z0[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "trial {trial} {method} z0[{j}]: fd {fd} vs {}",
+                        r.grad_z0[j]
+                    );
+                }
             }
         }
     }

@@ -13,6 +13,7 @@
 //! * batched adaptive integration stays decision-identical to solo runs
 //!   row for row on random batches.
 
+use mali_ode::dynamics_native::{ConvStemDynamics, MlpDynamics as NativeMlp, TimeMode};
 use mali_ode::solvers::alf::AlfSolver;
 use mali_ode::solvers::batch::{BatchSpec, BatchState};
 use mali_ode::solvers::by_name as solver_by_name;
@@ -337,6 +338,177 @@ fn alf_psi_roundtrip_random_configs() {
         solver.psi_inv_into(&dynamics, t + h, h, &z1, &v1, &mut z0_ws, &mut v0_ws, &mut ws);
         assert_eq!(z0_ws, z0, "trial {trial}");
         assert_eq!(v0_ws, v0, "trial {trial}");
+    }
+}
+
+/// Seeded-random native dynamics (MLP depths/widths/time-modes and the
+/// conv stem) for the fused-path differential tests.
+fn rand_native(trial: usize, rng: &mut Rng) -> Box<dyn Dynamics> {
+    if trial % 3 == 2 {
+        Box::new(ConvStemDynamics::new(
+            3,
+            2,
+            &[1 + rng.below(3)],
+            [TimeMode::None, TimeMode::Affine][rng.below(2)],
+            rng,
+        ))
+    } else {
+        let n = 2 + rng.below(5);
+        let hidden: Vec<usize> = (0..rng.below(3)).map(|_| 3 + rng.below(5)).collect();
+        let tm = [TimeMode::None, TimeMode::Concat, TimeMode::Affine][rng.below(3)];
+        Box::new(NativeMlp::new(n, &hidden, tm, rng))
+    }
+}
+
+/// The fused one-dispatch ψ / ψ⁻¹ / ψ-vjp / backward step of the native
+/// dynamics is **bitwise** identical to the composed unfused path
+/// (separate f / f_vjp calls through the solver's own kernel sequence),
+/// across random dims, depths, time-modes, steps and damping.
+#[test]
+fn fused_psi_paths_bitwise_equal_unfused() {
+    let mut rng = Rng::new(707);
+    let mut ws_f = SolverWorkspace::new();
+    let mut ws_u = SolverWorkspace::new();
+    for trial in 0..18 {
+        let eta = [1.0, 0.95, 0.9, 0.8][rng.below(4)];
+        let dynamics = rand_native(trial, &mut rng);
+        let d = &*dynamics;
+        let n = d.dim();
+        let fused = AlfSolver::new(eta);
+        assert!(fused.prefer_fused, "fusion must be the default");
+        let unfused = AlfSolver {
+            eta,
+            prefer_fused: false,
+        };
+        let t = rng.range(-0.5, 0.5);
+        let h = rng.range(0.02, 0.3);
+        let s = {
+            let mut z = vec![0.0f32; n];
+            rng.fill_uniform_sym(&mut z, 0.8);
+            let v = d.f(t, &z);
+            State { z, v: Some(v) }
+        };
+        let a_out = rand_state(&mut rng, n, true);
+
+        // ψ
+        let mut out_f = rand_state(&mut rng, n, false);
+        let mut err_f = vec![3.0f32; 1];
+        fused.step_into(d, t, h, &s, &mut out_f, &mut err_f, &mut ws_f);
+        let mut out_u = rand_state(&mut rng, n, false);
+        let mut err_u = vec![5.0f32; 1];
+        unfused.step_into(d, t, h, &s, &mut out_u, &mut err_u, &mut ws_u);
+        assert_eq!(out_f, out_u, "ψ trial {trial}");
+        assert_eq!(err_f, err_u, "ψ err trial {trial}");
+
+        // ψ⁻¹ (from the stepped state, so the round trip is the real one)
+        let mut inv_f = rand_state(&mut rng, n, false);
+        assert!(fused.invert_into(d, t + h, h, &out_f, &mut inv_f, &mut ws_f));
+        let mut inv_u = rand_state(&mut rng, n, false);
+        assert!(unfused.invert_into(d, t + h, h, &out_u, &mut inv_u, &mut ws_u));
+        assert_eq!(inv_f, inv_u, "ψ⁻¹ trial {trial}");
+
+        // ψ-vjp (θ accumulators start equal and must stay bitwise equal)
+        let mut a_f = rand_state(&mut rng, n, false);
+        let mut th_f = vec![0.0f32; d.param_dim()];
+        fused.step_vjp_into(d, t, h, &s, &a_out, &mut a_f, &mut th_f, &mut ws_f);
+        let mut a_u = rand_state(&mut rng, n, false);
+        let mut th_u = vec![0.0f32; d.param_dim()];
+        unfused.step_vjp_into(d, t, h, &s, &a_out, &mut a_u, &mut th_u, &mut ws_u);
+        assert_eq!(a_f, a_u, "ψ-vjp trial {trial}");
+        assert_eq!(th_f, th_u, "ψ-vjp θ trial {trial}");
+
+        // fused backward (ψ⁻¹ + ψ-vjp in one dispatch)
+        let mut s_f = rand_state(&mut rng, n, false);
+        let mut ab_f = rand_state(&mut rng, n, false);
+        let mut thb_f = vec![0.0f32; d.param_dim()];
+        assert!(fused.invert_and_vjp_into(
+            d, t + h, h, &out_f, &a_out, &mut s_f, &mut ab_f, &mut thb_f, &mut ws_f
+        ));
+        let mut s_u = rand_state(&mut rng, n, false);
+        let mut ab_u = rand_state(&mut rng, n, false);
+        let mut thb_u = vec![0.0f32; d.param_dim()];
+        assert!(unfused.invert_and_vjp_into(
+            d, t + h, h, &out_u, &a_out, &mut s_u, &mut ab_u, &mut thb_u, &mut ws_u
+        ));
+        assert_eq!(s_f, s_u, "bwd state trial {trial}");
+        assert_eq!(ab_f, ab_u, "bwd cotangent trial {trial}");
+        assert_eq!(thb_f, thb_u, "bwd θ trial {trial}");
+    }
+}
+
+/// Batched fused dispatch ≡ batched unfused path, bitwise, under
+/// desynchronized per-row `(t, h)` — and both ≡ the solo fused rows for
+/// the state/cotangent outputs.
+#[test]
+fn fused_batch_paths_bitwise_equal_unfused() {
+    let mut rng = Rng::new(808);
+    let mut ws_f = BatchWorkspace::new();
+    let mut ws_u = BatchWorkspace::new();
+    for trial in 0..10 {
+        let eta = [1.0, 0.9][trial % 2];
+        let dynamics = rand_native(trial, &mut rng);
+        let d = &*dynamics;
+        let n_z = d.dim();
+        let b = 1 + rng.below(4);
+        let spec = BatchSpec::new(b, n_z);
+        let fused = AlfSolver::new(eta);
+        let unfused = AlfSolver {
+            eta,
+            prefer_fused: false,
+        };
+        let ts: Vec<f64> = (0..b).map(|_| rng.range(-0.5, 0.5)).collect();
+        let hs: Vec<f64> = (0..b).map(|_| rng.range(0.02, 0.3)).collect();
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut z, 0.8);
+        let v = d.f_batch(&ts, &z, &spec);
+        let s = BatchState::from_flat_zv(z.clone(), v, spec);
+        let mut az = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut az, 1.0);
+        let mut av = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut av, 1.0);
+        let a_out = BatchState::from_flat_zv(az, av, spec);
+
+        // ψ batch
+        let mut out_f = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut err_f = Vec::new();
+        assert!(fused.step_batch_into(d, &ts, &hs, &s, &mut out_f, &mut err_f, &mut ws_f));
+        let mut out_u = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut err_u = Vec::new();
+        assert!(unfused.step_batch_into(d, &ts, &hs, &s, &mut out_u, &mut err_u, &mut ws_u));
+        assert_eq!(out_f, out_u, "ψ batch trial {trial}");
+        assert_eq!(err_f, err_u, "ψ batch err trial {trial}");
+
+        // solo fused rows ≡ batched fused rows (state path)
+        let mut ws_solo = SolverWorkspace::new();
+        for row in 0..b {
+            let srow = s.row_state(row);
+            let mut orow = rand_state(&mut rng, n_z, false);
+            let mut erow = vec![0.0f32; 1];
+            fused.step_into(d, ts[row], hs[row], &srow, &mut orow, &mut erow, &mut ws_solo);
+            assert_eq!(
+                orow.z.as_slice(),
+                spec.row(&out_f.z.data, row),
+                "solo≡batch ψ z row {row} trial {trial}"
+            );
+        }
+
+        // ψ⁻¹ batch
+        let ts_out: Vec<f64> = ts.iter().zip(&hs).map(|(&t, &h)| t + h).collect();
+        let mut inv_f = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        assert!(fused.invert_batch_into(d, &ts_out, &hs, &out_f, &mut inv_f, &mut ws_f));
+        let mut inv_u = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        assert!(unfused.invert_batch_into(d, &ts_out, &hs, &out_u, &mut inv_u, &mut ws_u));
+        assert_eq!(inv_f, inv_u, "ψ⁻¹ batch trial {trial}");
+
+        // ψ-vjp batch
+        let mut a_f = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th_f = vec![0.0f32; d.param_dim()];
+        fused.step_vjp_batch_into(d, &ts, &hs, &s, &a_out, &mut a_f, &mut th_f, &mut ws_f);
+        let mut a_u = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th_u = vec![0.0f32; d.param_dim()];
+        unfused.step_vjp_batch_into(d, &ts, &hs, &s, &a_out, &mut a_u, &mut th_u, &mut ws_u);
+        assert_eq!(a_f, a_u, "ψ-vjp batch trial {trial}");
+        assert_eq!(th_f, th_u, "ψ-vjp batch θ trial {trial}");
     }
 }
 

@@ -6,6 +6,12 @@
 //! and the batch `f`-evaluation total (the toy dynamics count batched
 //! `f` by rows, so the total is shard-invariant too).
 //!
+//! The suite also pins the cost-accounting side of fused dispatch: a
+//! native-MLP solve through the fused ψ entries must report exactly the
+//! per-sample `f`/`vjp` evaluation units the composed unfused path
+//! reports (one fused dispatch is one f-eval per sample, not one per
+//! batch and not one per kernel call).
+//!
 //! Coverage: shard counts {1, 2, 3, 8} × {sequential, pooled} dispatch,
 //! a batch size (7) that divides into none of them evenly, a batch (3)
 //! smaller than the shard count so trailing shards are entirely
@@ -320,6 +326,100 @@ fn device_batched_dynamics_are_rejected_when_sharded() {
     assert!(
         err.to_string().contains("device-batched"),
         "wrong rejection: {err}"
+    );
+}
+
+/// Fused dispatch is invisible to the Table-1 cost accounting: the same
+/// native-MLP work — a sharded batched solve plus a solo ψ step, ψ-vjp
+/// and ψ⁻¹+vjp — reports identical `f`/`vjp` evaluation-unit counts
+/// whether the ALF solver takes the fused entries or the composed
+/// unfused kernels.
+#[test]
+fn fused_dispatch_counts_same_eval_units_as_unfused() {
+    use mali_ode::dynamics_native::{MlpDynamics, TimeMode};
+    use mali_ode::solvers::alf::AlfSolver;
+    use mali_ode::solvers::workspace::SolverWorkspace;
+    use mali_ode::util::rng::Rng;
+
+    const N_Z: usize = 4;
+    const B: usize = 5;
+    let mut rng = Rng::new(11);
+    let mlp = MlpDynamics::new(N_Z, &[6], TimeMode::Concat, &mut rng);
+    let fused = AlfSolver::new(1.0);
+    assert!(fused.prefer_fused, "AlfSolver::new must default to fused dispatch");
+    let unfused = AlfSolver {
+        eta: 1.0,
+        prefer_fused: false,
+    };
+
+    let count_run = |solver: &AlfSolver| -> (u64, u64) {
+        mlp.counters().reset();
+
+        // sharded batched forward (fixed grid, so both variants take the
+        // same number of steps)
+        let states: Vec<State> = (0..B)
+            .map(|b| {
+                let row: Vec<f32> =
+                    (0..N_Z).map(|j| 0.3 + 0.2 * b as f32 + 0.05 * j as f32).collect();
+                solver.init(&mlp, 0.0, &row)
+            })
+            .collect();
+        let refs: Vec<&State> = states.iter().collect();
+        let state0 = BatchState::from_states(&refs);
+        let mut shards = BatchShards::new(2);
+        let mut per = Vec::new();
+        let mut bws = BatchWorkspace::new();
+        integrate_batch_obs_stats_sharded(
+            solver,
+            &mlp,
+            0.0,
+            1.0,
+            &state0,
+            &StepMode::Fixed { h: 0.05 },
+            &ErrorNorm::Full,
+            &ObsGrid::none(),
+            |_, _| (),
+            &mut per,
+            &mut shards,
+            &mut bws,
+            None,
+        )
+        .unwrap();
+
+        // solo ψ, ψ-vjp and ψ⁻¹+vjp over one step
+        let mut ws = SolverWorkspace::new();
+        let z0: Vec<f32> = (0..N_Z).map(|j| 0.8 - 0.1 * j as f32).collect();
+        let s0 = solver.init(&mlp, 0.0, &z0);
+        let shaped = || State {
+            z: vec![0.0f32; N_Z],
+            v: Some(vec![0.0f32; N_Z]),
+        };
+        let mut stepped = shaped();
+        let mut err = Vec::new();
+        assert!(solver.step_into(&mlp, 0.0, 0.1, &s0, &mut stepped, &mut err, &mut ws));
+        let a_out = State {
+            z: vec![1.0f32; N_Z],
+            v: Some(vec![0.0f32; N_Z]),
+        };
+        let mut a_in = shaped();
+        let mut ath = vec![0.0f32; mlp.param_dim()];
+        solver.step_vjp_into(&mlp, 0.0, 0.1, &s0, &a_out, &mut a_in, &mut ath, &mut ws);
+        let mut s_prev = shaped();
+        let mut a_prev = shaped();
+        assert!(solver.invert_and_vjp_into(
+            &mlp, 0.1, 0.1, &stepped, &a_out, &mut s_prev, &mut a_prev, &mut ath, &mut ws,
+        ));
+
+        (mlp.counters().f_evals.get(), mlp.counters().vjp_evals.get())
+    };
+
+    let (f_fused, vjp_fused) = count_run(&fused);
+    let (f_unfused, vjp_unfused) = count_run(&unfused);
+    assert!(f_fused > 0 && vjp_fused > 0, "nothing was counted");
+    assert_eq!(
+        (f_fused, vjp_fused),
+        (f_unfused, vjp_unfused),
+        "fused dispatch must count the same per-sample eval units as unfused"
     );
 }
 
