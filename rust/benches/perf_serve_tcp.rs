@@ -1,0 +1,20 @@
+//! Bench target for E13 — the TCP front-end under load (DESIGN.md §11):
+//! client-observed p50/p99 through the length-prefixed binary transport
+//! (window 1, window 8 pipelined, window 8 with connection churn) vs
+//! the in-process baseline.  Run with `cargo bench --bench
+//! perf_serve_tcp` (add `-- --full` for the EXPERIMENTS.md scale);
+//! `runs/serve_tcp.json` is the artifact CI uploads next to
+//! `runs/serve.json`.
+use mali_ode::coordinator::{exp_serve_tcp, report, Scale};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let t0 = std::time::Instant::now();
+    let summary = exp_serve_tcp::serve_tcp_bench(scale, 0).expect("perf_serve_tcp");
+    report::write_summary("runs", "serve_tcp", &summary).expect("write summary");
+    println!(
+        "\nperf_serve_tcp done in {:.1}s (runs/serve_tcp.json written)",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -94,6 +94,12 @@ COMMANDS:
     stability                  print damped-ALF A-stability region areas (App. Fig. 1)
     serve-bench                online-inference micro-batching load generator (E12):
                                p50/p99 latency + steps/sec, coalesced vs solo vs naive
+    serve-tcp                  serve the standard registry over TCP until a client
+                               sends SHUTDOWN (--addr host:port, --port-file <path>,
+                               --queue-cap N, --workers N, --max-inflight N)
+    serve-client-bench         drive a running serve-tcp (E13): --addr/--port-file,
+                               --clients/--requests/--window/--churn, --overload
+                               [--assert-shed] for exact shed accounting, --shutdown
     smoke                      load + execute every artifact once (runtime check)
     help                       show this message
 

@@ -39,12 +39,33 @@ use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-const N_Z: usize = 8;
+/// State width of the standard serving models (shared with E13).
+pub const N_Z: usize = 8;
 const ALPHA: f64 = -0.4;
-const T_END: f64 = 1.0;
+/// Integration horizon of the standard serving request classes.
+pub const T_END: f64 = 1.0;
 /// Seed for the natively-served MLP's synthetic weights — fixed so any
 /// client (or test) can rebuild the exact model the server holds.
 const NATIVE_SERVE_SEED: u64 = 9;
+
+/// The standard serving registry — "lin8" (LinearToy) plus "mlp8" (the
+/// fused native MLP, deterministically seeded).  E12, the E13 TCP bench
+/// and the `mali serve-tcp` server all build it from this one function,
+/// so separate processes hold bitwise-identical models.
+pub fn standard_registry() -> ModelRegistry {
+    let mut registry = ModelRegistry::new();
+    registry.register("lin8", Box::new(LinearToy::new(ALPHA, N_Z)));
+    registry.register(
+        "mlp8",
+        Box::new(crate::dynamics_native::MlpDynamics::new(
+            N_Z,
+            &[16],
+            crate::dynamics_native::TimeMode::Concat,
+            &mut Rng::new(NATIVE_SERVE_SEED),
+        )),
+    );
+    registry
+}
 
 /// One strategy × mode cell of the E12 grid.
 struct CellResult {
@@ -65,7 +86,7 @@ fn mk_mode(adaptive: bool) -> StepMode {
 }
 
 /// Per-client request rows: deterministic in (seed, client, request).
-fn client_z0(rng: &mut Rng) -> Vec<f32> {
+pub(crate) fn client_z0(rng: &mut Rng) -> Vec<f32> {
     (0..N_Z).map(|_| rng.range(-1.0, 1.0) as f32).collect()
 }
 
@@ -132,22 +153,11 @@ fn run_served(
     workers: usize,
     shards: usize,
 ) -> Result<CellResult> {
-    let mut registry = ModelRegistry::new();
-    registry.register("lin8", Box::new(LinearToy::new(ALPHA, N_Z)));
-    // the fused native-dynamics backend is registered alongside the toy so
-    // serve requests can target it by name ("mlp8"); the E12 grid itself
-    // keeps driving lin8 for comparability with earlier baselines
-    registry.register(
-        "mlp8",
-        Box::new(crate::dynamics_native::MlpDynamics::new(
-            N_Z,
-            &[16],
-            crate::dynamics_native::TimeMode::Concat,
-            &mut Rng::new(NATIVE_SERVE_SEED),
-        )),
-    );
+    // the registry carries the fused native "mlp8" alongside the toy;
+    // the E12 grid itself keeps driving lin8 for comparability with
+    // earlier baselines
     let server = Server::start(
-        Arc::new(registry),
+        Arc::new(standard_registry()),
         ServerConfig {
             queue_capacity: 1024,
             max_batch,

@@ -1,0 +1,568 @@
+//! E13 — the TCP front-end under load: client-observed latency through
+//! the binary transport vs the in-process E12 baseline, plus the two
+//! multi-process halves (`mali serve-tcp` / `mali serve-client-bench`)
+//! that CI runs against each other over loopback.
+//!
+//! The in-process grid (`mali run serve_tcp` → `runs/serve_tcp.json`):
+//!
+//! * **inproc** — closed-loop clients calling [`Server::submit`]
+//!   directly: the E12-style baseline every transport number is
+//!   compared against;
+//! * **tcp-w1** — one request in flight per connection: isolates the
+//!   per-request cost of framing + the socket hop;
+//! * **tcp-w8** — eight pipelined requests per connection: out-of-order
+//!   completions keep the coalescing batcher fed, so the socket hop
+//!   amortizes away;
+//! * **tcp-w8-churn** — same, but clients hang up and reconnect between
+//!   bursts (connection churn: handshake + OPEN_CLASS re-interning on
+//!   every reconnect).
+//!
+//! The `--overload` client mode drives a burst larger than the server
+//! queue and checks **exact shed accounting**: every queue shed surfaces
+//! as exactly one RETRY frame, client-observed RETRY count equals the
+//! server's `retries_sent` delta equals the queue's `shed_total` delta,
+//! and the queue depth never exceeds its capacity.
+
+use super::exp_serve::{client_z0, standard_registry, N_Z, T_END};
+use super::Scale;
+use crate::cli::Args;
+use crate::serve::transport::{
+    Backoff, Bridge, ClientEvent, ResponseFrame, TcpClient, TcpFront, TransportConfig,
+};
+use crate::serve::{RequestClass, Server, ServerConfig};
+use crate::solvers::integrate::{ObsGrid, StepMode};
+use crate::util::bench::{quantile, Table};
+use crate::util::json::Json;
+use crate::util::logging::{log, Level};
+use crate::util::pool;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The fixed-step request class both processes agree on (class id 0).
+fn bench_class(h: f64) -> Result<RequestClass> {
+    RequestClass::new(
+        "lin8",
+        "alf",
+        N_Z,
+        0.0,
+        T_END,
+        StepMode::Fixed { h },
+        ObsGrid::none(),
+    )
+}
+
+fn start_server(queue_capacity: usize, workers: usize) -> Arc<Server> {
+    Arc::new(Server::start(
+        Arc::new(standard_registry()),
+        ServerConfig {
+            queue_capacity,
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+            workers,
+            shards: 1,
+        },
+    ))
+}
+
+/// Take the server back out of the `Arc` once the front (and its
+/// connection threads) have released their clones.
+fn unwrap_server(mut server: Arc<Server>) -> Server {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match Arc::try_unwrap(server) {
+            Ok(s) => return s,
+            Err(back) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "server still shared after transport shutdown"
+                );
+                server = back;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+struct Cell {
+    latencies_s: Vec<f64>,
+    wall_s: f64,
+    retries: u64,
+    reconnects: u64,
+}
+
+/// In-process baseline: closed-loop clients on [`Server::submit`].
+fn run_inproc(clients: usize, requests: usize, seed: u64, h: f64) -> Result<Cell> {
+    let server = start_server(1024, pool::num_threads().clamp(1, 2));
+    let class = Arc::new(bench_class(h)?);
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..clients).map(|i| root.fork(i as u64)).collect();
+    let t0 = Instant::now();
+    let per_client: Vec<Result<Vec<f64>>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let mut lats = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let z0 = client_z0(&mut rng);
+            let t = Instant::now();
+            let resp = loop {
+                match server.submit(&class, &z0) {
+                    Ok(handle) => break handle.wait()?,
+                    Err(crate::serve::SubmitError::Overloaded { .. }) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) => bail!("submit failed: {e}"),
+                }
+            };
+            lats.push(t.elapsed().as_secs_f64());
+            ensure!(resp.n_accepted > 0, "malformed response");
+        }
+        Ok(lats)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = unwrap_server(server).shutdown();
+    ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+    let mut latencies_s = Vec::new();
+    for r in per_client {
+        latencies_s.extend(r?);
+    }
+    Ok(Cell {
+        latencies_s,
+        wall_s,
+        retries: 0,
+        reconnects: 0,
+    })
+}
+
+/// One client's windowed (pipelined) closed loop over a live
+/// connection: up to `window` requests in flight, completions reaped
+/// out of order, RETRY honored with backoff.  Returns latencies +
+/// retries.
+fn drive_connection(
+    cl: &mut TcpClient,
+    rng: &mut Rng,
+    requests: usize,
+    window: usize,
+    next_req: &mut u64,
+    backoff: &mut Backoff,
+    lats: &mut Vec<f64>,
+) -> Result<u64> {
+    struct Slot {
+        req_id: u64,
+        t0: Instant,
+        z0: Vec<f32>,
+        busy: bool,
+    }
+    let mut slots: Vec<Slot> = (0..window.max(1))
+        .map(|_| Slot {
+            req_id: 0,
+            t0: Instant::now(),
+            z0: vec![0.0; N_Z],
+            busy: false,
+        })
+        .collect();
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    let mut retries = 0u64;
+    let mut resp = ResponseFrame::default();
+    while done < requests {
+        for s in slots.iter_mut() {
+            if !s.busy && sent < requests {
+                for v in s.z0.iter_mut() {
+                    *v = rng.range(-1.0, 1.0) as f32;
+                }
+                s.req_id = *next_req;
+                *next_req += 1;
+                s.busy = true;
+                s.t0 = Instant::now();
+                cl.submit(s.req_id, 0, &s.z0)?;
+                sent += 1;
+            }
+        }
+        match cl.next_event(&mut resp)? {
+            ClientEvent::Response => {
+                let s = slots
+                    .iter_mut()
+                    .find(|s| s.busy && s.req_id == resp.req_id)
+                    .with_context(|| format!("response for unknown req {}", resp.req_id))?;
+                lats.push(s.t0.elapsed().as_secs_f64());
+                ensure!(resp.n_accepted > 0, "malformed response");
+                s.busy = false;
+                done += 1;
+                backoff.reset();
+            }
+            ClientEvent::Retry {
+                req_id,
+                backoff: hint,
+                draining,
+            } => {
+                ensure!(!draining, "server started draining mid-bench");
+                let s = slots
+                    .iter_mut()
+                    .find(|s| s.busy && s.req_id == req_id)
+                    .with_context(|| format!("RETRY for unknown req {req_id}"))?;
+                retries += 1;
+                std::thread::sleep(backoff.next_delay(hint));
+                cl.submit(s.req_id, 0, &s.z0)?;
+            }
+            ClientEvent::ReqErr { req_id, msg } => bail!("request {req_id} failed: {msg}"),
+            other => bail!("unexpected frame mid-load: {other:?}"),
+        }
+    }
+    Ok(retries)
+}
+
+/// TCP cell: C connections × R requests each against `addr`, window
+/// `window`; `churn_every > 0` hangs up and reconnects between bursts.
+fn run_tcp_clients(
+    addr: &str,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+    window: usize,
+    churn_every: usize,
+) -> Result<Cell> {
+    let class = bench_class(0.01)?;
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..clients).map(|i| root.fork(i as u64)).collect();
+    let addr = addr.to_string();
+    let t0 = Instant::now();
+    let per_client: Vec<Result<(Vec<f64>, u64, u64)>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let mut lats = Vec::with_capacity(requests);
+        let mut retries = 0u64;
+        let mut reconnects = 0u64;
+        let mut next_req = 1u64;
+        let mut backoff = Backoff::new(
+            Duration::from_micros(100),
+            Duration::from_millis(20),
+            rng.next_u64(),
+        );
+        let chunk = if churn_every == 0 { requests } else { churn_every.max(1) };
+        let mut left = requests;
+        while left > 0 {
+            let burst = left.min(chunk);
+            let mut cl = TcpClient::connect(addr.as_str())?;
+            cl.open_class(0, &class)?;
+            retries += drive_connection(
+                &mut cl,
+                &mut rng,
+                burst,
+                window,
+                &mut next_req,
+                &mut backoff,
+                &mut lats,
+            )?;
+            cl.goodbye()?;
+            left -= burst;
+            if left > 0 {
+                reconnects += 1;
+            }
+        }
+        Ok((lats, retries, reconnects))
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies_s = Vec::new();
+    let mut retries = 0u64;
+    let mut reconnects = 0u64;
+    for r in per_client {
+        let (lats, rt, rc) = r?;
+        latencies_s.extend(lats);
+        retries += rt;
+        reconnects += rc;
+    }
+    Ok(Cell {
+        latencies_s,
+        wall_s,
+        retries,
+        reconnects,
+    })
+}
+
+fn cell_row(table: &mut Table, config: &str, cell: &Cell) -> Json {
+    let n = cell.latencies_s.len();
+    let p50 = quantile(&cell.latencies_s, 0.50) * 1e3;
+    let p99 = quantile(&cell.latencies_s, 0.99) * 1e3;
+    let mean = cell.latencies_s.iter().sum::<f64>() / n.max(1) as f64 * 1e3;
+    let rps = n as f64 / cell.wall_s.max(1e-12);
+    table.row(&[
+        config.to_string(),
+        format!("{rps:.0}"),
+        format!("{p50:.3}"),
+        format!("{p99:.3}"),
+        format!("{mean:.3}"),
+        cell.retries.to_string(),
+        cell.reconnects.to_string(),
+    ]);
+    Json::obj(vec![
+        ("config", Json::Str(config.into())),
+        ("requests", Json::Num(n as f64)),
+        ("wall_s", Json::Num(cell.wall_s)),
+        ("p50_ms", Json::Num(p50)),
+        ("p99_ms", Json::Num(p99)),
+        ("mean_ms", Json::Num(mean)),
+        ("requests_per_sec", Json::Num(rps)),
+        ("retries", Json::Num(cell.retries as f64)),
+        ("reconnects", Json::Num(cell.reconnects as f64)),
+    ])
+}
+
+/// E13 runner (`mali run serve_tcp`): in-process baseline vs the TCP
+/// path at window 1, window 8, and window 8 with connection churn.
+pub fn serve_tcp_bench(scale: Scale, seed: u64) -> Result<Json> {
+    let clients = scale.pick(4, 8);
+    let requests = scale.pick(50, 400);
+    let workers = pool::num_threads().clamp(1, 2);
+    let mut table = Table::new(
+        "E13: TCP front-end vs in-process serving (client-observed latency)",
+        &["config", "req/s", "p50 ms", "p99 ms", "mean ms", "retries", "reconnects"],
+    );
+    let mut rows = Vec::new();
+
+    let inproc = run_inproc(clients, requests, seed, 0.01)?;
+    rows.push(cell_row(&mut table, "inproc", &inproc));
+
+    let churn = (requests / 4).max(1);
+    for (config, window, churn_every) in [
+        ("tcp-w1", 1usize, 0usize),
+        ("tcp-w8", 8, 0),
+        ("tcp-w8-churn", 8, churn),
+    ] {
+        let server = start_server(1024, workers);
+        let front = TcpFront::bind(
+            "127.0.0.1:0",
+            server.clone() as Arc<dyn Bridge>,
+            TransportConfig::default(),
+        )?;
+        let addr = front.local_addr().to_string();
+        let cell = run_tcp_clients(&addr, clients, requests, seed, window, churn_every)?;
+        let outcome = front.shutdown(Duration::from_secs(10));
+        ensure!(outcome.flushed, "drain left responses unflushed");
+        let metrics = unwrap_server(server).shutdown();
+        ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+        ensure!(
+            metrics.requests as usize == clients * requests,
+            "{config}: served {} of {}",
+            metrics.requests,
+            clients * requests
+        );
+        rows.push(cell_row(&mut table, config, &cell));
+    }
+    table.print();
+    Ok(crate::coordinator::report::summary(
+        rows,
+        vec![
+            ("bench", Json::Str("serve_tcp".into())),
+            ("seed", Json::Num(seed as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests_per_client", Json::Num(requests as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("n_z", Json::Num(N_Z as f64)),
+        ],
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process halves (CI's loopback E13 leg)
+// ---------------------------------------------------------------------------
+
+/// `mali serve-tcp`: stand up the standard registry behind the TCP
+/// front and serve until a client sends SHUTDOWN, then drain and exit.
+pub fn serve_tcp_cmd(args: &Args) -> Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:0");
+    let server = start_server(
+        args.usize_opt("queue-cap", 256),
+        args.usize_opt("workers", pool::num_threads().clamp(1, 2)),
+    );
+    let cfg = TransportConfig {
+        max_inflight: args.usize_opt("max-inflight", 1024),
+        model_quota: args.usize_opt("model-quota", 0),
+        ..TransportConfig::default()
+    };
+    let front = TcpFront::bind(addr.as_str(), server.clone() as Arc<dyn Bridge>, cfg)?;
+    let local = front.local_addr();
+    println!("serve-tcp listening on {local}");
+    if let Some(path) = args.opt("port-file") {
+        // written atomically-enough for a local runner: the readers in
+        // ci poll for the file's existence
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, format!("{local}\n")).context("write port file")?;
+        std::fs::rename(&tmp, path).context("publish port file")?;
+    }
+    while !front.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    log(Level::Info, "SHUTDOWN received; draining");
+    let outcome = front.shutdown(Duration::from_secs(10));
+    let metrics = unwrap_server(server).shutdown();
+    println!(
+        "serve-tcp drained (flushed = {}, conns closed = {})\n{}",
+        outcome.flushed,
+        outcome.forced_conns,
+        metrics.to_json().dump()
+    );
+    ensure!(outcome.flushed, "drain deadline hit with responses unflushed");
+    Ok(())
+}
+
+fn resolve_addr(args: &Args) -> Result<String> {
+    if let Some(a) = args.opt("addr") {
+        return Ok(a.to_string());
+    }
+    if let Some(path) = args.opt("port-file") {
+        let s = std::fs::read_to_string(path).context("read port file")?;
+        return Ok(s.trim().to_string());
+    }
+    bail!("serve-client-bench needs --addr host:port or --port-file <path>")
+}
+
+/// `mali serve-client-bench`: drive a running `mali serve-tcp` from a
+/// separate process.  Default mode records client-observed latency into
+/// `runs/serve_tcp.json`; `--overload` floods the queue and checks
+/// exact shed accounting; `--shutdown` tells the server to drain+exit
+/// afterwards.
+pub fn client_bench_cmd(args: &Args) -> Result<()> {
+    let addr = resolve_addr(args)?;
+    let seed = args
+        .opt("seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0u64);
+    if args.flag("overload") {
+        run_overload(args, &addr, seed)?;
+    } else {
+        let clients = args.usize_opt("clients", 4);
+        let requests = args.usize_opt("requests", 50);
+        let window = args.usize_opt("window", 8);
+        let churn = args.usize_opt("churn", 0);
+        let cell = run_tcp_clients(&addr, clients, requests, seed, window, churn)?;
+        let mut table = Table::new(
+            "serve-client-bench: client-observed latency over TCP",
+            &["config", "req/s", "p50 ms", "p99 ms", "mean ms", "retries", "reconnects"],
+        );
+        let row = cell_row(&mut table, &format!("tcp-w{window}"), &cell);
+        table.print();
+        let summary = crate::coordinator::report::summary(
+            vec![row],
+            vec![
+                ("bench", Json::Str("serve_tcp".into())),
+                ("mode", Json::Str("external".into())),
+                ("seed", Json::Num(seed as f64)),
+                ("clients", Json::Num(clients as f64)),
+                ("requests_per_client", Json::Num(requests as f64)),
+            ],
+        );
+        crate::coordinator::report::write_summary(
+            &args.opt_or("runs", "runs"),
+            "serve_tcp",
+            &summary,
+        )?;
+    }
+    if args.flag("shutdown") {
+        TcpClient::connect(addr.as_str())?.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    Ok(())
+}
+
+/// Induced overload with exact shed accounting: a burst wider than the
+/// server queue, every refusal audited.  Asserts (under
+/// `--assert-shed`) that client-observed RETRY count == the server's
+/// `retries_sent` delta == the queue's `shed_total` delta, and that the
+/// queue depth never exceeds capacity.
+fn run_overload(args: &Args, addr: &str, seed: u64) -> Result<()> {
+    let mut health_cl = TcpClient::connect(addr).context("health connection")?;
+    let h0 = health_cl.health(1)?;
+    ensure!(h0.ready, "server not ready");
+    // the burst must stay under the server's per-connection in-flight
+    // cap, otherwise conn-cap RETRYs mix into the queue-shed accounting
+    let burst = args
+        .usize_opt("burst", (h0.queue_capacity as usize).saturating_mul(8).min(512))
+        .max(16);
+    // slower requests than the E13 grid (10× the steps) so the reader
+    // outpaces the workers and the queue genuinely sheds
+    let class = bench_class(0.001)?;
+    let mut cl = TcpClient::connect(addr).context("load connection")?;
+    cl.open_class(0, &class)?;
+    let mut rng = Rng::new(seed);
+    let mut backoff = Backoff::new(
+        Duration::from_micros(200),
+        Duration::from_millis(50),
+        seed ^ 0x5eed,
+    );
+    let mut lats = Vec::with_capacity(burst);
+    let mut next_req = 1u64;
+    let retries = drive_connection(
+        &mut cl,
+        &mut rng,
+        burst,
+        burst,
+        &mut next_req,
+        &mut backoff,
+        &mut lats,
+    )?;
+    // depth audit while the tail is still draining, then the final books
+    let mid = health_cl.health(2)?;
+    ensure!(
+        mid.queue_depth <= mid.queue_capacity,
+        "queue depth {} exceeded capacity {}",
+        mid.queue_depth,
+        mid.queue_capacity
+    );
+    cl.goodbye()?;
+    let h1 = health_cl.health(3)?;
+    ensure!(
+        h1.queue_depth <= h1.queue_capacity,
+        "queue depth {} exceeded capacity {}",
+        h1.queue_depth,
+        h1.queue_capacity
+    );
+    let retry_delta = h1.retries_sent - h0.retries_sent;
+    let shed_delta = h1.shed_total - h0.shed_total;
+    println!(
+        "overload: burst {burst}, served {}, client retries {retries}, \
+         server retries_sent Δ {retry_delta}, queue sheds Δ {shed_delta}",
+        lats.len()
+    );
+    if args.flag("assert-shed") {
+        ensure!(retries > 0, "overload produced no sheds; raise --burst");
+        ensure!(
+            retries == retry_delta,
+            "client saw {retries} RETRY frames but the server sent {retry_delta}"
+        );
+        ensure!(
+            retry_delta == shed_delta,
+            "retries_sent Δ {retry_delta} != shed Δ {shed_delta}: \
+             a shed was dropped or double-answered"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The in-process E13 cells run end to end at a tiny scale: the TCP
+    /// path serves every request and the drain flushes clean.
+    #[test]
+    fn tcp_bench_smoke() {
+        let server = start_server(256, 1);
+        let front = TcpFront::bind(
+            "127.0.0.1:0",
+            server.clone() as Arc<dyn Bridge>,
+            TransportConfig::default(),
+        )
+        .unwrap();
+        let addr = front.local_addr().to_string();
+        // window 4, churn every 3 requests: exercises pipelining and
+        // reconnects in one pass
+        let cell = run_tcp_clients(&addr, 2, 7, 11, 4, 3).unwrap();
+        assert_eq!(cell.latencies_s.len(), 14);
+        assert_eq!(cell.reconnects, 2 * 2, "7 requests / churn 3 → 2 reconnects each");
+        let outcome = front.shutdown(Duration::from_secs(5));
+        assert!(outcome.flushed);
+        let metrics = unwrap_server(server).shutdown();
+        assert_eq!(metrics.requests, 14);
+        assert_eq!(metrics.failed, 0);
+    }
+}

@@ -9,6 +9,7 @@
 pub mod exp_flows;
 pub mod exp_images;
 pub mod exp_serve;
+pub mod exp_serve_tcp;
 pub mod exp_series;
 pub mod exp_toy;
 pub mod report;
@@ -62,6 +63,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table7", "Table 7 damped-MALI η ablation", exp_series::table7 as Runner),
         ("table6", "Table 6 FFJORD BPD + RealNVP", exp_flows::table6 as Runner),
         ("serve", "E12 online micro-batching serve bench (latency/throughput)", exp_serve::serve_bench as Runner),
+        ("serve_tcp", "E13 TCP front-end serve bench (client-observed latency vs in-process)", exp_serve_tcp::serve_tcp_bench as Runner),
     ]
 }
 
@@ -120,6 +122,10 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         // discoverable top-level alias for `mali run serve` (the E12
         // load generator) — same dispatch, same runs/serve.json
         "serve-bench" => run_experiment("serve", scale, seed, &args.opt_or("runs", "runs"))?,
+        // the multi-process E13 halves: a TCP server that runs until a
+        // client sends SHUTDOWN, and the load generator that drives it
+        "serve-tcp" => exp_serve_tcp::serve_tcp_cmd(&args)?,
+        "serve-client-bench" => exp_serve_tcp::client_bench_cmd(&args)?,
         "toy" => {
             exp_toy::fig4(Scale::Quick, seed)?;
         }

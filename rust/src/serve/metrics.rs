@@ -334,4 +334,82 @@ mod tests {
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.count(), 0);
     }
+
+    /// Power-of-two nanosecond durations probe the bucket-index float
+    /// math at awkward points: 2^10 ns sits just above the 1 µs floor,
+    /// and the 2^k ladder spans sub-floor (1 ns) through the top clamp.
+    /// Whatever bucket the log math picks, the index must be monotone
+    /// and in range, and the exact accumulators must stay exact.
+    #[test]
+    fn bucket_edges_at_power_of_two_nanoseconds() {
+        assert_eq!(LatencyHistogram::bucket(1e-6), 0, "exact floor boundary");
+        assert_eq!(LatencyHistogram::bucket(1024e-9), 0, "2^10 ns lands in the first bucket");
+        assert_eq!(LatencyHistogram::bucket(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket(1e9), N_BUCKETS - 1, "clamped at the top");
+        let mut h = LatencyHistogram::new();
+        let mut prev = 0usize;
+        for k in 0..=32u32 {
+            let s = (1u64 << k) as f64 * 1e-9;
+            let b = LatencyHistogram::bucket(s);
+            assert!(b >= prev, "bucket index not monotone at 2^{k} ns");
+            assert!(b < N_BUCKETS);
+            prev = b;
+            h.record(s);
+        }
+        assert_eq!(h.count(), 33);
+        // sum of 2^0 … 2^32 ns is (2^33 − 1) ns
+        let mean = ((1u64 << 33) - 1) as f64 * 1e-9 / 33.0;
+        assert!((h.mean_s() / mean - 1.0).abs() < 1e-12, "mean {} != {mean}", h.mean_s());
+        // quantiles stay inside the observed envelope and are monotone in q
+        let (lo, hi) = (1e-9, (1u64 << 32) as f64 * 1e-9);
+        let mut last = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile_s(q);
+            assert!((lo..=hi).contains(&v), "q={q} -> {v} escapes [min, max]");
+            assert!(v >= last, "quantile not monotone at q={q}");
+            last = v;
+        }
+    }
+
+    /// Zero-duration samples (and negative inputs, which clamp to zero)
+    /// land in the first bucket and keep every exact accumulator exact;
+    /// an all-zero histogram reports 0 at every quantile because the
+    /// bucket midpoint is clamped to the observed min/max.
+    #[test]
+    fn zero_duration_samples_collapse_to_zero() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..5 {
+            h.record(0.0);
+        }
+        h.record(-3.0); // clamped, not a negative sum
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.mean_s(), 0.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_s(q), 0.0, "all-zero histogram at q={q}");
+        }
+        // one real sample: quantiles stay inside [0, max] and the top
+        // quantile clamps to the exact observed max
+        h.record(2e-3);
+        let p50 = h.quantile_s(0.5);
+        assert!((0.0..=2e-3).contains(&p50));
+        assert_eq!(h.quantile_s(1.0), 2e-3);
+    }
+
+    /// Empty histograms answer 0 for every quantile; a single-sample
+    /// histogram pins every quantile to exactly that sample (min = max,
+    /// so the bucket-midpoint approximation clamps away entirely).
+    #[test]
+    fn quantile_on_empty_vs_single_sample() {
+        let empty = LatencyHistogram::new();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(empty.quantile_s(q), 0.0);
+        }
+        let mut one = LatencyHistogram::new();
+        one.record(3.7e-4);
+        assert_eq!(one.count(), 1);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile_s(q), 3.7e-4, "single sample must pin q={q}");
+        }
+        assert_eq!(one.mean_s(), 3.7e-4);
+    }
 }

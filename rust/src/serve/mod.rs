@@ -27,7 +27,15 @@
 //! * [`metrics::ServeMetrics`] — per-request queue-wait / service / total
 //!   latency histograms plus batch-occupancy and throughput counters,
 //!   emitted as the `util::bench`-style JSON that `mali serve-bench`
-//!   (experiment E12) reports.
+//!   (experiment E12) reports;
+//! * [`transport`] — the network front door (DESIGN.md §11, ADR-006): a
+//!   pure-std TCP listener speaking a length-prefixed binary protocol,
+//!   bridged onto [`Server::submit_pooled`] through the transport-agnostic
+//!   [`transport::Bridge`] trait so the workers never learn about
+//!   sockets.  Request envelopes are pooled per connection and responses
+//!   travel back through [`CompletionSink`], keeping the warmed
+//!   read → submit → respond loop at zero heap allocations
+//!   (`tests/alloc_serve.rs`).
 //!
 //! # Example
 //!
@@ -69,6 +77,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
+pub mod transport;
 pub mod worker;
 
 pub use batcher::BatcherCfg;
@@ -81,7 +90,8 @@ use crate::solvers::integrate::{ObsGrid, StepMode};
 use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -168,6 +178,10 @@ pub struct RequestClass {
     /// (empty = endpoint only).
     pub grid: ObsGrid,
     key: CompatKey,
+    /// Memoized `(registry tag, model id)` from the first successful
+    /// [`ModelRegistry::resolve_cached`] — per-request model lookup then
+    /// costs one tag compare instead of a string hash/walk.
+    resolved: OnceLock<(u64, u32)>,
 }
 
 impl RequestClass {
@@ -243,6 +257,7 @@ impl RequestClass {
             mode,
             grid,
             key,
+            resolved: OnceLock::new(),
         })
     }
 
@@ -316,6 +331,90 @@ impl ResponseHandle {
             .take()
             .map(|r| r.map_err(|e| anyhow::anyhow!(e)))
     }
+
+    /// Bounded wait: block up to `dur` for the response, `None` on
+    /// timeout (the handle stays valid — call again or fall back to
+    /// [`ResponseHandle::wait`]).  This is the building block bounded
+    /// callers (the TCP transport's drain path among them) use instead
+    /// of spinning on [`ResponseHandle::try_wait`].
+    pub fn wait_timeout(&self, dur: Duration) -> Option<Result<ServeResponse>> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.0.state.lock().expect("slot poisoned");
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r.map_err(|e| anyhow::anyhow!(e)));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self
+                .0
+                .cv
+                .wait_timeout(g, deadline - now)
+                .expect("slot poisoned")
+                .0;
+        }
+    }
+}
+
+/// A completed request on its way back to a transport: either the
+/// envelope with its output buffers filled, or the envelope plus the
+/// reason serving it failed.  Both variants return the [`Pending`] so
+/// its buffers can be recycled into a connection pool.
+pub enum Completion {
+    /// Served: `z_final` / `obs` / step counters / timings are filled.
+    Ok(Pending),
+    /// Failed (solver error, panic isolation, shutdown): the buffers
+    /// are unspecified but reusable after [`Pending::reset`].
+    Failed(Pending, String),
+}
+
+impl fmt::Debug for Completion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Completion::Ok(p) => write!(f, "Completion::Ok(req_id={})", p.req_id),
+            Completion::Failed(p, e) => {
+                write!(f, "Completion::Failed(req_id={}, {e:?})", p.req_id)
+            }
+        }
+    }
+}
+
+/// Where a finished request goes when nobody is blocked on a
+/// [`ResponseHandle`]: transports implement this (one sink per
+/// connection) and get the whole envelope back — buffers included — so
+/// the response write and the envelope recycling both happen without
+/// allocation.  Must be cheap and non-blocking-ish: workers call it
+/// inline from the serve loop.
+pub trait CompletionSink: Send + Sync {
+    /// Deliver one finished envelope (called from a worker thread).
+    fn complete(&self, done: Completion);
+}
+
+/// How a finished [`Pending`] is delivered.
+#[derive(Default)]
+pub enum Delivery {
+    /// Direct drive: the caller holds the envelope slice and reads the
+    /// output buffers itself (tests, benches).
+    #[default]
+    None,
+    /// In-process rendezvous ([`Server::submit`]): the worker copies the
+    /// outputs into a [`ServeResponse`] and fulfills the slot.
+    Slot(Arc<ResponseSlot>),
+    /// Transport delivery ([`Server::submit_pooled`]): the worker moves
+    /// the envelope itself into the sink.
+    Sink(Arc<dyn CompletionSink>),
+}
+
+impl fmt::Debug for Delivery {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Delivery::None => "None",
+            Delivery::Slot(_) => "Slot(..)",
+            Delivery::Sink(_) => "Sink(..)",
+        })
+    }
 }
 
 /// A queued request: the class handle, the initial state, preallocated
@@ -335,16 +434,28 @@ pub struct Pending {
     pub n_accepted: usize,
     /// Output: controller trials of this row.
     pub n_trials: usize,
+    /// Caller correlation id (the transport's pipelining key; echoed
+    /// back verbatim, unused by in-process delivery).
+    pub req_id: u64,
+    /// Raw [`ModelId`] for transport quota bookkeeping (set at submit by
+    /// the connection; meaningless for in-process submissions).
+    pub(crate) model_raw: u32,
+    /// Output: seconds spent queued before batch formation.
+    pub queue_wait_s: f64,
+    /// Output: seconds of batched solve + scatter (shared by the batch).
+    pub service_s: f64,
     /// Submission timestamp (queue-wait accounting).
     pub enqueued: Instant,
-    /// Response delivery slot; `None` when the caller drives a worker
-    /// synchronously (tests, benches) and reads the buffers directly.
-    pub(crate) slot: Option<Arc<ResponseSlot>>,
+    /// Response routing; [`Delivery::None`] when the caller drives a
+    /// worker synchronously (tests, benches) and reads the buffers
+    /// directly.
+    pub(crate) delivery: Delivery,
 }
 
 impl Pending {
     /// A request with freshly sized response buffers and no delivery
-    /// slot (direct-drive shape; [`Server::submit`] attaches the slot).
+    /// route (direct-drive shape; [`Server::submit`] attaches a slot,
+    /// transports attach a sink via [`Pending::set_sink`]).
     pub fn new(class: Arc<RequestClass>, z0: Vec<f32>) -> Pending {
         let n_z = class.n_z;
         let k = class.grid.len();
@@ -354,20 +465,71 @@ impl Pending {
             obs: vec![0.0; k * n_z],
             n_accepted: 0,
             n_trials: 0,
+            req_id: 0,
+            model_raw: 0,
+            queue_wait_s: 0.0,
+            service_s: 0.0,
             enqueued: Instant::now(),
-            slot: None,
+            delivery: Delivery::None,
             class,
         }
     }
 
-    /// Re-arm a recycled request with a new initial state — buffers and
-    /// class are kept, so direct-drive loops (and their allocation
-    /// accounting) reuse one set of envelopes.
+    /// Route this envelope's completion through `sink` (transport
+    /// delivery; see [`CompletionSink`]).  An `Arc` clone is refcount
+    /// traffic only — attaching a sink allocates nothing.
+    pub fn set_sink(&mut self, sink: Arc<dyn CompletionSink>) {
+        self.delivery = Delivery::Sink(sink);
+    }
+
+    /// Re-arm a recycled request with a new initial state — buffers,
+    /// class, id and delivery are kept, so direct-drive loops (and their
+    /// allocation accounting) reuse one set of envelopes.
     pub fn reset(&mut self, z0: &[f32]) {
         self.z0.copy_from_slice(z0);
+        self.rearm(self.req_id);
+    }
+
+    /// Re-arm counters/timing for reuse under a new correlation id; the
+    /// transport decodes the next frame's `z0` directly into the kept
+    /// buffer, so unlike [`Pending::reset`] no state copy happens here.
+    pub fn rearm(&mut self, req_id: u64) {
+        self.req_id = req_id;
         self.n_accepted = 0;
         self.n_trials = 0;
+        self.queue_wait_s = 0.0;
+        self.service_s = 0.0;
         self.enqueued = Instant::now();
+    }
+
+    /// A no-allocation placeholder (empty buffers, cheap class clone)
+    /// that workers swap into a batch slot to move the real envelope out
+    /// of `&mut [Pending]` for sink delivery.
+    pub(crate) fn husk(class: Arc<RequestClass>) -> Pending {
+        Pending {
+            z0: Vec::new(),
+            z_final: Vec::new(),
+            obs: Vec::new(),
+            n_accepted: 0,
+            n_trials: 0,
+            req_id: 0,
+            model_raw: 0,
+            queue_wait_s: 0.0,
+            service_s: 0.0,
+            enqueued: Instant::now(),
+            delivery: Delivery::None,
+            class,
+        }
+    }
+
+    /// Route a failure to whoever is waiting on this envelope (no-op
+    /// for direct drive — the caller sees the error elsewhere).
+    pub(crate) fn fail(mut self, msg: &str) {
+        match std::mem::take(&mut self.delivery) {
+            Delivery::None => {}
+            Delivery::Slot(slot) => slot.fulfill(Err(msg.to_string())),
+            Delivery::Sink(sink) => sink.complete(Completion::Failed(self, msg.to_string())),
+        }
     }
 }
 
@@ -375,12 +537,52 @@ impl Pending {
 // Model registry
 // ---------------------------------------------------------------------------
 
+/// A registry-issued dense model id: the per-request lookup key after a
+/// name has been interned once ([`ModelRegistry::resolve`]).  Ids are
+/// stable for the registry's lifetime — re-registering a name keeps its
+/// id — so transports intern at handshake and never hash a model string
+/// on the request path again.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelId(pub(crate) u32);
+
+impl ModelId {
+    /// The raw dense index (wire representation in the TCP protocol).
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+}
+
+/// Registry identity tags: each registry instance gets a unique tag so
+/// a [`ModelId`] (or a [`RequestClass`]'s memoized resolution) can never
+/// be replayed against a different registry that happens to reuse the
+/// same address.
+static REGISTRY_TAG: AtomicU64 = AtomicU64::new(1);
+
 /// Name → dynamics table the workers serve from.  Registered once before
 /// [`Server::start`]; serving never mutates models (inference reads
 /// parameters only), so one instance is shared by every worker thread.
-#[derive(Default)]
+/// Names are interned: [`ModelRegistry::resolve`] turns a name into a
+/// dense [`ModelId`] once (handshake / class construction) and
+/// [`ModelRegistry::get_by_id`] is then an index into a `Vec` — no
+/// per-request string hashing.
 pub struct ModelRegistry {
-    models: BTreeMap<String, Box<dyn Dynamics + Send + Sync>>,
+    /// Dense id → (name, dynamics); ids are indices, never reused.
+    models: Vec<(String, Box<dyn Dynamics + Send + Sync>)>,
+    /// Name → dense id (interning map; touched at registration and
+    /// handshake only).
+    index: BTreeMap<String, u32>,
+    /// Unique instance tag (see [`REGISTRY_TAG`]).
+    tag: u64,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> ModelRegistry {
+        ModelRegistry {
+            models: Vec::new(),
+            index: BTreeMap::new(),
+            tag: REGISTRY_TAG.fetch_add(1, Ordering::Relaxed),
+        }
+    }
 }
 
 impl ModelRegistry {
@@ -388,19 +590,76 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Register `dynamics` under `name` (replacing any previous entry).
+    /// Register `dynamics` under `name`.  Replacing an existing name
+    /// keeps its [`ModelId`] (ids are stable), a new name gets the next
+    /// dense id.
     pub fn register(&mut self, name: &str, dynamics: Box<dyn Dynamics + Send + Sync>) {
-        self.models.insert(name.to_string(), dynamics);
+        match self.index.get(name) {
+            Some(&id) => self.models[id as usize].1 = dynamics,
+            None => {
+                let id = u32::try_from(self.models.len()).expect("registry overflow");
+                self.models.push((name.to_string(), dynamics));
+                self.index.insert(name.to_string(), id);
+            }
+        }
     }
 
-    /// Look up a model by name.
+    /// Intern a model name: the one string lookup, done at handshake or
+    /// class-construction time.  Everything after uses the returned id.
+    pub fn resolve(&self, name: &str) -> Option<ModelId> {
+        self.index.get(name).copied().map(ModelId)
+    }
+
+    /// Look up a model by name (one-shot convenience; request paths
+    /// should [`ModelRegistry::resolve`] once and use
+    /// [`ModelRegistry::get_by_id`]).
     pub fn get(&self, name: &str) -> Option<&(dyn Dynamics + Send + Sync)> {
-        self.models.get(name).map(|b| b.as_ref())
+        self.resolve(name).and_then(|id| self.get_by_id(id))
+    }
+
+    /// Id-keyed lookup: a bounds-checked `Vec` index, the per-request
+    /// fast path.  `None` only for an id minted by a *different*
+    /// registry (larger than this one's table).
+    pub fn get_by_id(&self, id: ModelId) -> Option<&(dyn Dynamics + Send + Sync)> {
+        self.models.get(id.0 as usize).map(|(_, d)| d.as_ref())
+    }
+
+    /// The name an id was interned from.
+    pub fn name_of(&self, id: ModelId) -> Option<&str> {
+        self.models.get(id.0 as usize).map(|(n, _)| n.as_str())
+    }
+
+    /// Resolve `class.model` against this registry, memoizing the id on
+    /// the class.  First call per (class, registry) walks the name
+    /// index; every later call is one tag compare.  A class resolved
+    /// against a different registry falls back to the string lookup
+    /// (correct, just not memoized) — the memo is written once, tagged
+    /// with this registry's unique [`REGISTRY_TAG`] identity.
+    pub fn resolve_cached(&self, class: &RequestClass) -> Option<ModelId> {
+        if let Some(&(tag, id)) = class.resolved.get() {
+            if tag == self.tag {
+                return Some(ModelId(id));
+            }
+            return self.resolve(&class.model);
+        }
+        let id = self.resolve(&class.model)?;
+        let _ = class.resolved.set((self.tag, id.0));
+        Some(id)
     }
 
     /// Registered model names, sorted.
     pub fn names(&self) -> Vec<&str> {
-        self.models.keys().map(String::as_str).collect()
+        self.index.keys().map(String::as_str).collect()
+    }
+
+    /// Number of registered models (== the id space: ids are `0..len`).
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
     }
 
     /// Sum of the `f`-evaluation counters across every registered model
@@ -410,8 +669,8 @@ impl ModelRegistry {
     /// interleave (see [`ServeMetrics::f_evals`]).
     pub fn total_f_evals(&self) -> u64 {
         self.models
-            .values()
-            .map(|m| m.counters().f_evals.get())
+            .iter()
+            .map(|(_, m)| m.counters().f_evals.get())
             .sum()
     }
 }
@@ -540,55 +799,89 @@ impl Server {
         class: &Arc<RequestClass>,
         z0: &[f32],
     ) -> Result<ResponseHandle, SubmitError> {
-        if z0.len() != class.n_z {
-            return Err(SubmitError::BadRequest(format!(
+        let slot = Arc::new(ResponseSlot::default());
+        let mut pending = Pending::new(class.clone(), z0.to_vec());
+        pending.delivery = Delivery::Slot(slot.clone());
+        match self.submit_pooled(pending) {
+            Ok(()) => Ok(ResponseHandle(slot)),
+            Err((e, _)) => Err(e),
+        }
+    }
+
+    /// Submit a caller-owned (pooled) envelope: the transport fast path.
+    /// Validation and admission are identical to [`Server::submit`], but
+    /// nothing is allocated on the admit path and a refused envelope
+    /// comes back with the error so its buffers return to the pool
+    /// (error *messages* allocate — refusal is not the steady state).
+    /// Delivery follows `pending.delivery`; the queue-wait clock is
+    /// restamped here.
+    pub fn submit_pooled(&self, mut pending: Pending) -> Result<(), (SubmitError, Pending)> {
+        let class = &pending.class;
+        if pending.z0.len() != class.n_z {
+            let e = SubmitError::BadRequest(format!(
                 "z0 has {} elements, class expects n_z = {}",
-                z0.len(),
+                pending.z0.len(),
                 class.n_z
-            )));
+            ));
+            return Err((e, pending));
         }
         // a NaN/Inf row would not error — it would crawl (NaN error
         // norms reject down to h_min, then accept ~(span/h_min) steps),
         // stalling every innocently coalesced neighbor; reject it here
-        if z0.iter().any(|v| !v.is_finite()) {
-            return Err(SubmitError::BadRequest(
-                "z0 contains non-finite components".to_string(),
-            ));
+        if pending.z0.iter().any(|v| !v.is_finite()) {
+            let e = SubmitError::BadRequest("z0 contains non-finite components".to_string());
+            return Err((e, pending));
         }
-        let Some(model) = self.registry.get(&class.model) else {
-            return Err(SubmitError::BadRequest(format!(
+        // interned lookup: one tag compare once the class has been
+        // resolved against this registry (no string hashing per request)
+        let Some(model) = self
+            .registry
+            .resolve_cached(class)
+            .and_then(|id| self.registry.get_by_id(id))
+        else {
+            let e = SubmitError::BadRequest(format!(
                 "unknown model '{}' (registered: {:?})",
                 class.model,
                 self.registry.names()
-            )));
+            ));
+            return Err((e, pending));
         };
         // reject width/shape mismatches here, as a clean BadRequest,
         // instead of letting them blow up inside a worker's solve
         if model.is_device_batched() {
-            return Err(SubmitError::BadRequest(format!(
+            let e = SubmitError::BadRequest(format!(
                 "model '{}' is device-batched (a fixed [B, n_z] is baked into its \
                  executable) and cannot be dynamically micro-batched",
                 class.model
-            )));
+            ));
+            return Err((e, pending));
         }
         if model.dim() != class.n_z {
-            return Err(SubmitError::BadRequest(format!(
+            let e = SubmitError::BadRequest(format!(
                 "model '{}' has state width {}, request class expects n_z = {}",
                 class.model,
                 model.dim(),
                 class.n_z
-            )));
+            ));
+            return Err((e, pending));
         }
-        let slot = Arc::new(ResponseSlot::default());
-        let mut pending = Pending::new(class.clone(), z0.to_vec());
-        pending.slot = Some(slot.clone());
+        pending.enqueued = Instant::now();
         match self.queue.try_push(pending) {
-            Ok(()) => Ok(ResponseHandle(slot)),
-            Err(PushError::Full(_)) => Err(SubmitError::Overloaded {
-                capacity: self.queue.capacity(),
-            }),
-            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
+            Ok(()) => Ok(()),
+            Err(PushError::Full(p)) => Err((
+                SubmitError::Overloaded {
+                    capacity: self.queue.capacity(),
+                },
+                p,
+            )),
+            Err(PushError::Closed(p)) => Err((SubmitError::Closed, p)),
         }
+    }
+
+    /// The model registry this server serves from (transports intern
+    /// names against it at handshake).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Current queue depth (racy; a load-generator backpressure probe).
@@ -620,10 +913,8 @@ impl Server {
             }
         }
         // only reachable with workers == 0 (workers drain before exit)
-        while let Some(mut p) = self.queue.try_pop() {
-            if let Some(slot) = p.slot.take() {
-                slot.fulfill(Err("server shut down before the request was served".into()));
-            }
+        while let Some(p) = self.queue.try_pop() {
+            p.fail("server shut down before the request was served");
             metrics.failed += 1;
         }
         // Per-worker f_evals are counter deltas around each batch, which
@@ -699,7 +990,7 @@ mod tests {
         let p = Pending::new(class, vec![1.0, 2.0, 3.0]);
         assert_eq!(p.z_final.len(), 3);
         assert_eq!(p.obs.len(), 2 * 3);
-        assert!(p.slot.is_none());
+        assert!(matches!(p.delivery, Delivery::None));
     }
 
     #[test]
@@ -711,6 +1002,87 @@ mod tests {
         assert!(reg.get("absent").is_none());
         assert_eq!(reg.names(), vec!["toy"]);
         assert_eq!(reg.get("toy").unwrap().dim(), 3);
+    }
+
+    #[test]
+    fn registry_interning_ids_are_stable() {
+        use crate::solvers::dynamics::LinearToy;
+        let mut reg = ModelRegistry::new();
+        reg.register("a", Box::new(LinearToy::new(-0.3, 3)));
+        reg.register("b", Box::new(LinearToy::new(-0.3, 4)));
+        let ida = reg.resolve("a").unwrap();
+        let idb = reg.resolve("b").unwrap();
+        assert_ne!(ida, idb);
+        assert!(reg.resolve("absent").is_none());
+        assert_eq!(reg.get_by_id(ida).unwrap().dim(), 3);
+        assert_eq!(reg.name_of(idb), Some("b"));
+        // replacing a name keeps its id; ids from elsewhere miss cleanly
+        reg.register("a", Box::new(LinearToy::new(-0.3, 7)));
+        assert_eq!(reg.resolve("a").unwrap(), ida);
+        assert_eq!(reg.get_by_id(ida).unwrap().dim(), 7);
+        assert!(reg.get_by_id(ModelId(99)).is_none());
+        assert_eq!(reg.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn resolve_cached_memoizes_per_registry() {
+        use crate::solvers::dynamics::LinearToy;
+        let mut reg1 = ModelRegistry::new();
+        reg1.register("toy", Box::new(LinearToy::new(-0.3, 3)));
+        let mut reg2 = ModelRegistry::new();
+        reg2.register("other", Box::new(LinearToy::new(-0.3, 3)));
+        reg2.register("toy", Box::new(LinearToy::new(-0.3, 3)));
+        let class = toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none());
+        let id1 = reg1.resolve_cached(&class).unwrap();
+        assert_eq!(id1, reg1.resolve("toy").unwrap());
+        // memo hit returns the same id
+        assert_eq!(reg1.resolve_cached(&class).unwrap(), id1);
+        // a different registry must not be served the memoized id
+        let id2 = reg2.resolve_cached(&class).unwrap();
+        assert_eq!(id2, reg2.resolve("toy").unwrap());
+        assert_ne!(id1.raw(), id2.raw(), "ids differ across registries here");
+        // and the original registry still resolves correctly after
+        assert_eq!(reg1.resolve_cached(&class).unwrap(), id1);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_delivers() {
+        let slot = Arc::new(ResponseSlot::default());
+        let handle = ResponseHandle(slot.clone());
+        assert!(handle.wait_timeout(Duration::from_millis(5)).is_none());
+        slot.fulfill(Err("boom".into()));
+        let got = handle.wait_timeout(Duration::from_secs(5));
+        assert!(got.expect("fulfilled").is_err());
+        // exactly-once: the slot is drained now
+        assert!(handle.try_wait().is_none());
+    }
+
+    #[test]
+    fn submit_pooled_returns_envelope_on_refusal() {
+        use crate::solvers::dynamics::LinearToy;
+        let mut reg = ModelRegistry::new();
+        reg.register("toy", Box::new(LinearToy::new(-0.3, 3)));
+        let server = Server::start(
+            Arc::new(reg),
+            ServerConfig {
+                queue_capacity: 1,
+                workers: 0,
+                ..ServerConfig::default()
+            },
+        );
+        let class = Arc::new(toy_class(StepMode::Fixed { h: 0.1 }, ObsGrid::none()));
+        let p = Pending::new(class.clone(), vec![1.0, 2.0, 3.0]);
+        server.submit_pooled(p).expect("admitted");
+        let mut p2 = Pending::new(class.clone(), vec![4.0, 5.0, 6.0]);
+        p2.req_id = 42;
+        match server.submit_pooled(p2) {
+            Err((SubmitError::Overloaded { capacity: 1 }, back)) => {
+                assert_eq!(back.req_id, 42, "refused envelope comes back intact");
+                assert_eq!(back.z0, vec![4.0, 5.0, 6.0]);
+            }
+            other => panic!("expected Overloaded with envelope, got {other:?}"),
+        }
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Client side of the transport: a small, dependency-free TCP client
+//! speaking the frame grammar in [`frame`](super::frame), plus the
+//! [`Backoff`] helper that turns RETRY frames into capped exponential
+//! backoff with jitter.
+//!
+//! The client is deliberately synchronous and single-threaded: one
+//! socket, one [`FrameReader`].  Pipelining is still fully available —
+//! [`TcpClient::submit`] is fire-and-forget, so a caller can keep many
+//! requests in flight and correlate completions by `req_id` as
+//! [`TcpClient::next_event`] yields them (responses arrive in
+//! *completion* order, not submission order).  Response payloads decode
+//! into a caller-owned [`ResponseFrame`] whose buffers are reused, so a
+//! warmed request/response loop allocates nothing on either side of the
+//! socket.
+
+use super::frame::{self, FrameReader, HealthFrame, ReadOutcome, ResponseFrame};
+use crate::serve::RequestClass;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// One decoded server→client frame, as surfaced by
+/// [`TcpClient::next_event`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientEvent {
+    /// A completed request; the payload was decoded into the
+    /// `ResponseFrame` passed to [`TcpClient::next_event`].
+    Response,
+    /// Explicit backpressure: re-submit after backing off (unless the
+    /// server is draining, in which case go elsewhere).
+    Retry {
+        req_id: u64,
+        /// Server-suggested minimum wait.
+        backoff: Duration,
+        draining: bool,
+    },
+    /// The request was rejected or failed while being served.
+    ReqErr { req_id: u64, msg: String },
+    /// Health/readiness report (answer to a HEALTH probe).
+    Health(HealthFrame),
+    /// Acknowledgement of GOODBYE or SHUTDOWN.
+    GoodbyeOk,
+}
+
+/// A blocking client connection.  See the module docs for the
+/// pipelining model.
+pub struct TcpClient {
+    stream: TcpStream,
+    fr: FrameReader,
+    wbuf: Vec<u8>,
+}
+
+impl TcpClient {
+    /// Connect and send the protocol preamble.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).context("transport connect")?;
+        let _ = stream.set_nodelay(true);
+        let mut wbuf = Vec::with_capacity(256);
+        frame::write_preamble(&mut wbuf);
+        (&stream).write_all(&wbuf).context("send preamble")?;
+        Ok(TcpClient {
+            stream,
+            fr: FrameReader::new(1 << 24),
+            wbuf,
+        })
+    }
+
+    /// Open a request class under `class_id` and return the server's
+    /// interned model id.  Handshake-time only: there must be no
+    /// submits outstanding on this connection.
+    pub fn open_class(&mut self, class_id: u32, class: &RequestClass) -> Result<u32> {
+        self.wbuf.clear();
+        frame::open_class(&mut self.wbuf, class_id, class);
+        (&self.stream).write_all(&self.wbuf).context("send OPEN_CLASS")?;
+        loop {
+            match self.next_frame()? {
+                frame::T_CLASS_OK => {
+                    let mut c = frame::Cursor::new(self.fr.body());
+                    let got_id = c.u32()?;
+                    let model_id = c.u32()?;
+                    c.done()?;
+                    self.fr.reset();
+                    if got_id != class_id {
+                        bail!("CLASS_OK for class {got_id}, expected {class_id}");
+                    }
+                    return Ok(model_id);
+                }
+                frame::T_CLASS_ERR => {
+                    let mut c = frame::Cursor::new(self.fr.body());
+                    let _id = c.u32()?;
+                    let msg = c.str16()?.to_string();
+                    self.fr.reset();
+                    bail!("server refused class {class_id}: {msg}");
+                }
+                t => bail!("unexpected frame 0x{t:02x} while opening a class"),
+            }
+        }
+    }
+
+    /// Fire-and-forget submit of `z0` under an opened class.  Many may
+    /// be in flight at once; correlate completions by `req_id`.
+    pub fn submit(&mut self, req_id: u64, class_id: u32, z0: &[f32]) -> Result<()> {
+        self.wbuf.clear();
+        frame::submit(&mut self.wbuf, req_id, class_id, z0);
+        (&self.stream).write_all(&self.wbuf).context("send SUBMIT")
+    }
+
+    /// Block until the next server frame and decode it.  RESPONSE
+    /// payloads land in `resp` (buffers reused; zero-alloc once warm).
+    pub fn next_event(&mut self, resp: &mut ResponseFrame) -> Result<ClientEvent> {
+        let t = self.next_frame()?;
+        let ev = decode_event(t, self.fr.body(), resp)?;
+        self.fr.reset();
+        Ok(ev)
+    }
+
+    /// Like [`TcpClient::next_event`] but gives up after `dur`,
+    /// returning `Ok(None)`.  Partial frames survive the timeout — the
+    /// next call resumes mid-frame.
+    pub fn next_event_timeout(
+        &mut self,
+        dur: Duration,
+        resp: &mut ResponseFrame,
+    ) -> Result<Option<ClientEvent>> {
+        let deadline = Instant::now() + dur;
+        let tick = dur.min(Duration::from_millis(50)).max(Duration::from_millis(1));
+        self.stream
+            .set_read_timeout(Some(tick))
+            .context("set read timeout")?;
+        let out = loop {
+            match self.fr.poll(&mut (&self.stream)) {
+                Ok(ReadOutcome::Frame) => {
+                    let ev = decode_event(self.fr.frame_type(), self.fr.body(), resp);
+                    self.fr.reset();
+                    break ev.map(Some);
+                }
+                Ok(ReadOutcome::Idle) => {
+                    if Instant::now() >= deadline {
+                        break Ok(None);
+                    }
+                }
+                Ok(ReadOutcome::Closed) => break Err(anyhow::anyhow!("server closed connection")),
+                Err(e) => break Err(e).context("frame read"),
+            }
+        };
+        self.stream
+            .set_read_timeout(None)
+            .context("clear read timeout")?;
+        out
+    }
+
+    /// Probe server health.  Call with no submits outstanding (any
+    /// other frame arriving first is an error).
+    pub fn health(&mut self, probe_id: u64) -> Result<HealthFrame> {
+        self.wbuf.clear();
+        frame::health(&mut self.wbuf, probe_id);
+        (&self.stream).write_all(&self.wbuf).context("send HEALTH")?;
+        let mut scratch = ResponseFrame::default();
+        match self.next_event(&mut scratch)? {
+            ClientEvent::Health(h) => Ok(h),
+            other => bail!("expected HEALTH_OK, got {other:?}"),
+        }
+    }
+
+    /// Polite hangup: send GOODBYE and wait for the ack.
+    pub fn goodbye(&mut self) -> Result<()> {
+        self.wbuf.clear();
+        frame::goodbye(&mut self.wbuf);
+        (&self.stream).write_all(&self.wbuf).context("send GOODBYE")?;
+        let mut scratch = ResponseFrame::default();
+        match self.next_event(&mut scratch)? {
+            ClientEvent::GoodbyeOk => Ok(()),
+            other => bail!("expected GOODBYE_OK, got {other:?}"),
+        }
+    }
+
+    /// Ask the server process to drain and exit (the `serve-tcp` CLI
+    /// honors this).  Waits for the ack.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.wbuf.clear();
+        frame::shutdown(&mut self.wbuf);
+        (&self.stream).write_all(&self.wbuf).context("send SHUTDOWN")?;
+        let mut scratch = ResponseFrame::default();
+        match self.next_event(&mut scratch)? {
+            ClientEvent::GoodbyeOk => Ok(()),
+            other => bail!("expected GOODBYE_OK, got {other:?}"),
+        }
+    }
+
+    /// Submit and wait for the response, honoring RETRY backpressure
+    /// with `backoff`.  Requires **no other outstanding requests** on
+    /// this connection (every event is interpreted against `req_id`).
+    /// Returns the number of submit attempts (1 = first try landed).
+    pub fn submit_with_retry(
+        &mut self,
+        req_id: u64,
+        class_id: u32,
+        z0: &[f32],
+        resp: &mut ResponseFrame,
+        backoff: &mut Backoff,
+    ) -> Result<u32> {
+        let mut attempts = 0u32;
+        loop {
+            self.submit(req_id, class_id, z0)?;
+            attempts += 1;
+            match self.next_event(resp)? {
+                ClientEvent::Response => {
+                    if resp.req_id != req_id {
+                        bail!("response for req {} while waiting on {req_id}", resp.req_id);
+                    }
+                    return Ok(attempts);
+                }
+                ClientEvent::Retry {
+                    req_id: rid,
+                    backoff: hint,
+                    draining,
+                } => {
+                    if rid != req_id {
+                        bail!("RETRY for req {rid} while waiting on {req_id}");
+                    }
+                    if draining {
+                        bail!("server is draining; request {req_id} refused");
+                    }
+                    std::thread::sleep(backoff.next_delay(hint));
+                }
+                ClientEvent::ReqErr { req_id: rid, msg } => {
+                    bail!("request {rid} failed: {msg}");
+                }
+                other => bail!("unexpected frame {other:?} while waiting on {req_id}"),
+            }
+        }
+    }
+
+    /// Block until a full frame is buffered; returns its type.
+    fn next_frame(&mut self) -> Result<u8> {
+        loop {
+            match self.fr.poll(&mut (&self.stream)).context("frame read")? {
+                ReadOutcome::Frame => return Ok(self.fr.frame_type()),
+                ReadOutcome::Idle => continue,
+                ReadOutcome::Closed => bail!("server closed connection"),
+            }
+        }
+    }
+}
+
+fn decode_event(ftype: u8, body: &[u8], resp: &mut ResponseFrame) -> Result<ClientEvent> {
+    match ftype {
+        frame::T_RESPONSE => {
+            frame::parse_response_into(body, resp)?;
+            Ok(ClientEvent::Response)
+        }
+        frame::T_RETRY => {
+            let mut c = frame::Cursor::new(body);
+            let req_id = c.u64()?;
+            let hint_us = c.u32()?;
+            let draining = c.u8()? != 0;
+            c.done()?;
+            Ok(ClientEvent::Retry {
+                req_id,
+                backoff: Duration::from_micros(hint_us as u64),
+                draining,
+            })
+        }
+        frame::T_REQ_ERR => {
+            let mut c = frame::Cursor::new(body);
+            let req_id = c.u64()?;
+            let msg = c.str16()?.to_string();
+            c.done()?;
+            Ok(ClientEvent::ReqErr { req_id, msg })
+        }
+        frame::T_HEALTH_OK => Ok(ClientEvent::Health(frame::parse_health_ok(body)?)),
+        frame::T_GOODBYE_OK => {
+            frame::Cursor::new(body).done()?;
+            Ok(ClientEvent::GoodbyeOk)
+        }
+        other => bail!("unexpected server frame type 0x{other:02x}"),
+    }
+}
+
+/// Capped exponential backoff with jitter, seeded deterministically.
+/// The delay for attempt `n` is
+/// `max(server_hint, jitter * min(cap, base * 2^n))` with jitter drawn
+/// uniformly from `[0.5, 1.0]` — jitter de-synchronizes a thundering
+/// herd of retrying clients, while the server hint stays a hard floor.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Attempts recorded since construction or [`Backoff::reset`].
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Start a fresh retry sequence (e.g. for the next request).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// The delay to sleep before the next attempt; advances the
+    /// attempt counter.
+    pub fn next_delay(&mut self, server_hint: Duration) -> Duration {
+        let shift = self.attempt.min(20);
+        self.attempt = self.attempt.saturating_add(1);
+        let exp = self
+            .base
+            .saturating_mul(1u32 << shift)
+            .min(self.cap)
+            .max(Duration::from_micros(1));
+        let jittered = exp.mul_f64(0.5 + 0.5 * self.rng.uniform());
+        jittered.max(server_hint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_to_cap_and_honors_hint() {
+        let base = Duration::from_millis(1);
+        let cap = Duration::from_millis(64);
+        let mut b = Backoff::new(base, cap, 7);
+        let mut prev_ceiling = Duration::ZERO;
+        for n in 0..12 {
+            let d = b.next_delay(Duration::ZERO);
+            // ceiling for attempt n is min(cap, base * 2^n); jitter keeps
+            // the draw within [ceiling/2, ceiling]
+            let ceiling = base.saturating_mul(1u32 << n.min(20)).min(cap);
+            assert!(d <= ceiling, "attempt {n}: {d:?} > {ceiling:?}");
+            assert!(d >= ceiling / 2, "attempt {n}: {d:?} < {:?}", ceiling / 2);
+            assert!(ceiling >= prev_ceiling, "ceiling must be monotone");
+            prev_ceiling = ceiling;
+        }
+        assert_eq!(b.attempts(), 12);
+
+        // the server hint is a hard floor even early in the sequence
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let hint = Duration::from_millis(500);
+        assert_eq!(b.next_delay(hint), hint);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let mk = || Backoff::new(Duration::from_millis(2), Duration::from_secs(1), 42);
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..8 {
+            assert_eq!(a.next_delay(Duration::ZERO), b.next_delay(Duration::ZERO));
+        }
+        let mut a2 = mk();
+        let mut c = Backoff::new(Duration::from_millis(2), Duration::from_secs(1), 43);
+        let seq_a: Vec<_> = (0..8).map(|_| a2.next_delay(Duration::ZERO)).collect();
+        let seq_c: Vec<_> = (0..8).map(|_| c.next_delay(Duration::ZERO)).collect();
+        assert_ne!(seq_a, seq_c, "different seeds must jitter differently");
+    }
+}

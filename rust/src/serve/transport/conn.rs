@@ -1,0 +1,859 @@
+//! Server side of the transport: the listener, the per-connection
+//! reader/writer thread pair, pooled request envelopes, admission
+//! control and graceful drain.
+//!
+//! Per connection (DESIGN.md §11):
+//!
+//! * the **reader** thread owns the socket's read half: an incremental
+//!   [`FrameReader`] decodes frames across read-timeout boundaries, and
+//!   SUBMIT bodies are copied straight into a pooled [`Pending`]'s
+//!   `z0` buffer — after warmup the read → submit path performs no heap
+//!   allocation;
+//! * the **writer** thread owns the write half: it drains the
+//!   connection's completion queue, encodes *every* queued frame into
+//!   one reusable buffer and issues a single `write_all` (write
+//!   coalescing), then recycles the envelopes into the pool.
+//!
+//! Completions travel worker → writer through the connection's
+//! [`CompletionSink`] impl, so responses complete **out of order** by
+//! `req_id` — a slow batch never heads-of-line-blocks a fast one on the
+//! same connection.
+//!
+//! Backpressure/abuse mapping (the table in DESIGN.md §11): queue shed
+//! → RETRY, drain → RETRY(draining), per-connection in-flight cap →
+//! RETRY, per-model quota → RETRY, oversized frame / unknown type /
+//! mid-frame stall / outbound backlog overflow → connection closed.
+
+use super::frame::{self, FrameReader, HealthFrame, ReadOutcome};
+use super::{Bridge, TransportConfig};
+use crate::serve::{Completion, CompletionSink, Delivery, Pending, RequestClass, SubmitError};
+use crate::solvers::integrate::ObsGrid;
+use crate::solvers::workspace::ensure;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Socket read-timeout used as the reader's poll tick (the *stall*
+/// bound is `TransportConfig::read_timeout`; this just sets how often
+/// the reader wakes to check it).
+const POLL_TICK: Duration = Duration::from_millis(100);
+
+/// Control frames (RETRY/HEALTH_OK/...) the reader may queue beyond the
+/// in-flight completions before the connection counts as "client is not
+/// reading" and is closed.
+const CONTROL_BACKLOG: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Shared transport state
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    bridge: Arc<dyn Bridge>,
+    cfg: TransportConfig,
+    /// Graceful drain has begun: stop accepting, refuse submits with
+    /// RETRY(draining).
+    draining: AtomicBool,
+    /// A client sent SHUTDOWN — the embedding process (the `serve-tcp`
+    /// CLI) polls this and runs the drain.
+    shutdown_req: AtomicBool,
+    /// Requests admitted through this transport, not yet completed.
+    inflight: AtomicUsize,
+    /// Per-model in-flight counts, indexed by raw model id (sized at
+    /// bind; admission quota + health reporting).
+    model_inflight: Vec<AtomicUsize>,
+    /// RETRY frames sent (sheds + quota/drain refusals).
+    retries_sent: AtomicU64,
+    conn_count: AtomicUsize,
+    conns: Mutex<BTreeMap<u64, ConnReg>>,
+}
+
+struct ConnReg {
+    /// A clone of the connection's stream, kept so drain/drop can force
+    /// it closed.
+    stream: TcpStream,
+    conn: Arc<ConnShared>,
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection state
+// ---------------------------------------------------------------------------
+
+/// One queued outbound message.  Small and fixed-size (error strings
+/// ride the non-steady-state paths), so the queue itself never
+/// reallocates once warm.
+enum OutMsg {
+    Done(Completion),
+    ClassOk { class_id: u32, model_id: u32 },
+    ClassErr { class_id: u32, msg: String },
+    Retry { req_id: u64, hint_us: u32, draining: bool },
+    ReqErr { req_id: u64, msg: String },
+    Health(HealthFrame),
+    GoodbyeOk,
+}
+
+struct OutState {
+    msgs: VecDeque<OutMsg>,
+    /// The reader thread has exited; once in-flight hits zero and the
+    /// queue drains, the writer exits too.
+    reader_gone: bool,
+    /// The writer is mid-`write_all` on messages already popped — drain
+    /// must not declare the connection flushed yet.
+    writing: bool,
+}
+
+/// State shared by one connection's reader, writer and completion sink.
+struct ConnShared {
+    out: Mutex<OutState>,
+    cv: Condvar,
+    /// Requests admitted on this connection whose completion has not
+    /// yet been queued (the per-connection `max_inflight` bound).
+    inflight: AtomicUsize,
+    /// Recycled request envelopes (reader pops, writer pushes back).
+    pool: Mutex<Vec<Pending>>,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            out: Mutex::new(OutState {
+                msgs: VecDeque::new(),
+                reader_gone: false,
+                writing: false,
+            }),
+            cv: Condvar::new(),
+            inflight: AtomicUsize::new(0),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// The worker-facing end of a connection: completions are queued for
+/// the writer and the in-flight counters are released.  The counter
+/// decrements happen *after* the push (under the queue lock), so the
+/// writer can never observe "all done" with a completion still
+/// unqueued.
+struct ConnSink {
+    conn: Arc<ConnShared>,
+    shared: Arc<Shared>,
+}
+
+impl CompletionSink for ConnSink {
+    fn complete(&self, done: Completion) {
+        let model_raw = match &done {
+            Completion::Ok(p) | Completion::Failed(p, _) => p.model_raw,
+        };
+        let mut st = self.conn.out.lock().expect("outbound poisoned");
+        st.msgs.push_back(OutMsg::Done(done));
+        self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        if let Some(c) = self.shared.model_inflight.get(model_raw as usize) {
+            c.fetch_sub(1, Ordering::SeqCst);
+        }
+        self.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.conn.cv.notify_all();
+    }
+}
+
+/// A class opened on this connection: the immutable class handle plus
+/// its interned raw model id.
+struct ConnClass {
+    class: Arc<RequestClass>,
+    model_raw: u32,
+}
+
+// ---------------------------------------------------------------------------
+// The front-end handle
+// ---------------------------------------------------------------------------
+
+/// What [`TcpFront::shutdown`] achieved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainOutcome {
+    /// Every accepted in-flight request completed *and* every response
+    /// was written to its socket before the deadline.
+    pub flushed: bool,
+    /// Connections force-closed at the end of the drain (clients that
+    /// had not hung up on their own).
+    pub forced_conns: usize,
+}
+
+/// The TCP front-end: owns the listener/accept thread and the shared
+/// transport state.  Bind with [`TcpFront::bind`], stop with
+/// [`TcpFront::shutdown`] (graceful drain).
+pub struct TcpFront {
+    local: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpFront {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start
+    /// accepting connections over `bridge`.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        bridge: Arc<dyn Bridge>,
+        cfg: TransportConfig,
+    ) -> Result<TcpFront> {
+        let listener = TcpListener::bind(addr).context("transport bind")?;
+        let local = listener.local_addr().context("transport local_addr")?;
+        let model_inflight = (0..bridge.model_count()).map(|_| AtomicUsize::new(0)).collect();
+        let shared = Arc::new(Shared {
+            bridge,
+            cfg,
+            draining: AtomicBool::new(false),
+            shutdown_req: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            model_inflight,
+            retries_sent: AtomicU64::new(0),
+            conn_count: AtomicUsize::new(0),
+            conns: Mutex::new(BTreeMap::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("mali-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawn accept thread")?;
+        Ok(TcpFront {
+            local,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (the actual port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// RETRY frames sent so far (sheds + quota/drain refusals).
+    pub fn retries_sent(&self) -> u64 {
+        self.shared.retries_sent.load(Ordering::SeqCst)
+    }
+
+    /// Requests admitted via this transport and not yet completed.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Live connections.
+    pub fn conn_count(&self) -> usize {
+        self.shared.conn_count.load(Ordering::SeqCst)
+    }
+
+    /// True once graceful drain has begun.
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// True once any client has sent a SHUTDOWN frame (the `serve-tcp`
+    /// CLI polls this, then calls [`TcpFront::shutdown`]).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown_req.load(Ordering::SeqCst)
+    }
+
+    /// Flip into draining mode without blocking: new connections are
+    /// refused and new submits answered with RETRY(draining); accepted
+    /// work keeps flowing.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Graceful drain: stop accepting, wait (up to `timeout`) for every
+    /// accepted in-flight request to complete and every response to be
+    /// written, then close all connections and stop.
+    pub fn shutdown(mut self, timeout: Duration) -> DrainOutcome {
+        let deadline = Instant::now() + timeout;
+        self.begin_drain();
+        // wake the blocking accept() so the thread sees the flag
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // phase 1: all admitted requests complete (queued → writer)
+        let mut flushed = true;
+        while self.shared.inflight.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= deadline {
+                flushed = false;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // phase 2: every outbound queue written to its socket
+        if flushed {
+            let conns: Vec<Arc<ConnShared>> = {
+                let regs = self.shared.conns.lock().expect("conns poisoned");
+                regs.values().map(|r| r.conn.clone()).collect()
+            };
+            'conns: for c in conns {
+                let mut st = c.out.lock().expect("outbound poisoned");
+                while !st.msgs.is_empty() || st.writing {
+                    if Instant::now() >= deadline {
+                        flushed = false;
+                        break 'conns;
+                    }
+                    let (g, _) = c
+                        .cv
+                        .wait_timeout(st, Duration::from_millis(5))
+                        .expect("outbound poisoned");
+                    st = g;
+                }
+            }
+        }
+        // phase 3: close every connection (the kick makes readers exit)
+        let forced = {
+            let regs = self.shared.conns.lock().expect("conns poisoned");
+            for r in regs.values() {
+                let _ = r.stream.shutdown(Shutdown::Both);
+            }
+            regs.len()
+        };
+        let grace = deadline.max(Instant::now() + Duration::from_secs(2));
+        while self.shared.conn_count.load(Ordering::SeqCst) > 0 && Instant::now() < grace {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        DrainOutcome {
+            flushed,
+            forced_conns: forced,
+        }
+    }
+
+    /// A health snapshot identical to what a HEALTH frame reports.
+    pub fn health_snapshot(&self) -> HealthFrame {
+        health_snapshot(&self.shared, 0)
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        // a dropped (not shutdown()) front still stops its threads —
+        // quickly, without the graceful flush
+        if let Some(h) = self.accept.take() {
+            self.shared.draining.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(self.local);
+            let _ = h.join();
+            {
+                let regs = self.shared.conns.lock().expect("conns poisoned");
+                for r in regs.values() {
+                    let _ = r.stream.shutdown(Shutdown::Both);
+                }
+            }
+            let deadline = Instant::now() + Duration::from_secs(2);
+            while self.shared.conn_count.load(Ordering::SeqCst) > 0 && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+fn health_snapshot(shared: &Shared, probe_id: u64) -> HealthFrame {
+    let draining = shared.draining.load(Ordering::SeqCst);
+    HealthFrame {
+        probe_id,
+        queue_depth: shared.bridge.queue_depth() as u32,
+        queue_capacity: shared.bridge.queue_capacity() as u32,
+        shed_total: shared.bridge.shed_count(),
+        retries_sent: shared.retries_sent.load(Ordering::SeqCst),
+        inflight: shared.inflight.load(Ordering::SeqCst) as u32,
+        draining,
+        ready: !draining,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut next_id: u64 = 0;
+    for incoming in listener.incoming() {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = incoming else { continue };
+        if shared.conn_count.load(Ordering::SeqCst) >= shared.cfg.max_conns {
+            // connection cap: refuse by closing; the client's connect
+            // succeeds but the first read sees EOF
+            drop(stream);
+            continue;
+        }
+        let Ok(reg_stream) = stream.try_clone() else {
+            continue;
+        };
+        let conn = Arc::new(ConnShared::new());
+        let id = next_id;
+        next_id += 1;
+        shared.conn_count.fetch_add(1, Ordering::SeqCst);
+        shared.conns.lock().expect("conns poisoned").insert(
+            id,
+            ConnReg {
+                stream: reg_stream,
+                conn: conn.clone(),
+            },
+        );
+        let conn_shared = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("mali-conn-{id}"))
+            .spawn(move || serve_conn(stream, conn_shared, conn, id));
+        if spawned.is_err() {
+            shared.conns.lock().expect("conns poisoned").remove(&id);
+            shared.conn_count.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection threads
+// ---------------------------------------------------------------------------
+
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>, conn: Arc<ConnShared>, id: u64) {
+    let _ = stream.set_nodelay(true);
+    let poll = shared.cfg.read_timeout.min(POLL_TICK).max(Duration::from_millis(1));
+    let _ = stream.set_read_timeout(Some(poll));
+
+    let mut writer = None;
+    if read_preamble(&stream, shared.cfg.read_timeout).is_ok() {
+        if let Ok(wstream) = stream.try_clone() {
+            let wconn = conn.clone();
+            writer = std::thread::Builder::new()
+                .name(format!("mali-conn-w{id}"))
+                .spawn(move || writer_loop(wstream, wconn))
+                .ok();
+        }
+        if writer.is_some() {
+            // errors end the connection; per-request failures were
+            // already answered in-band
+            let _ = reader_loop(&stream, &shared, &conn);
+        }
+    }
+
+    // teardown: tell the writer, let it flush whatever completions are
+    // still owed (requests already admitted keep their envelopes until
+    // the workers finish), then unregister
+    {
+        let mut st = conn.out.lock().expect("outbound poisoned");
+        st.reader_gone = true;
+        conn.cv.notify_all();
+    }
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.conns.lock().expect("conns poisoned").remove(&id);
+    shared.conn_count.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Read + validate the 8-byte preamble, resumable across poll ticks,
+/// bounded by `deadline_in`.
+fn read_preamble(stream: &TcpStream, deadline_in: Duration) -> Result<()> {
+    let deadline = Instant::now() + deadline_in;
+    let mut buf = [0u8; frame::PREAMBLE_LEN];
+    let mut have = 0usize;
+    let mut r = stream;
+    while have < buf.len() {
+        match r.read(&mut buf[have..]) {
+            Ok(0) => bail!("peer closed during preamble"),
+            Ok(n) => have += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                if Instant::now() >= deadline {
+                    bail!("preamble timeout");
+                }
+            }
+            Err(e) => return Err(e).context("preamble read"),
+        }
+    }
+    frame::check_preamble(&buf)
+}
+
+fn reader_loop(stream: &TcpStream, shared: &Arc<Shared>, conn: &Arc<ConnShared>) -> Result<()> {
+    let cfg = &shared.cfg;
+    let mut fr = FrameReader::new(cfg.max_frame);
+    let mut classes: Vec<Option<ConnClass>> = Vec::new();
+    let sink: Arc<dyn CompletionSink> = Arc::new(ConnSink {
+        conn: conn.clone(),
+        shared: shared.clone(),
+    });
+    let mut last_progress = Instant::now();
+    let mut prev_buffered = 0usize;
+    let mut r = stream;
+    loop {
+        match fr.poll(&mut r) {
+            Ok(ReadOutcome::Frame) => {
+                last_progress = Instant::now();
+                prev_buffered = 0;
+                handle_frame(fr.frame_type(), fr.body(), shared, conn, &mut classes, &sink)?;
+                fr.reset();
+            }
+            Ok(ReadOutcome::Idle) => {
+                let b = fr.buffered();
+                if b != prev_buffered {
+                    prev_buffered = b;
+                    last_progress = Instant::now();
+                } else if b > 0 && last_progress.elapsed() >= cfg.read_timeout {
+                    // mid-frame stall: the peer started a frame and went
+                    // quiet — a wedged or malicious client, not an idle one
+                    bail!("mid-frame read stall ({b} B buffered)");
+                }
+            }
+            Ok(ReadOutcome::Closed) => return Ok(()),
+            Err(e) => return Err(e).context("frame read"),
+        }
+    }
+}
+
+fn handle_frame(
+    ftype: u8,
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    classes: &mut Vec<Option<ConnClass>>,
+    sink: &Arc<dyn CompletionSink>,
+) -> Result<()> {
+    match ftype {
+        frame::T_SUBMIT => handle_submit(body, shared, conn, classes, sink),
+        frame::T_OPEN_CLASS => handle_open_class(body, shared, conn, classes),
+        frame::T_HEALTH => {
+            let mut c = frame::Cursor::new(body);
+            let probe_id = c.u64()?;
+            c.done()?;
+            let h = health_snapshot(shared, probe_id);
+            enqueue_ctl(shared, conn, OutMsg::Health(h))
+        }
+        frame::T_GOODBYE => {
+            frame::Cursor::new(body).done()?;
+            enqueue_ctl(shared, conn, OutMsg::GoodbyeOk)
+        }
+        frame::T_SHUTDOWN => {
+            frame::Cursor::new(body).done()?;
+            // flip into drain mode; the embedding process polls
+            // shutdown_requested() and performs the actual drain + exit
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.shutdown_req.store(true, Ordering::SeqCst);
+            enqueue_ctl(shared, conn, OutMsg::GoodbyeOk)
+        }
+        other => bail!("unknown frame type 0x{other:02x}"),
+    }
+}
+
+fn handle_open_class(
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    classes: &mut Vec<Option<ConnClass>>,
+) -> Result<()> {
+    // a malformed body is a protocol violation (kills the connection);
+    // a *semantically* bad class is answered in-band with CLASS_ERR
+    let oc = frame::parse_open_class(body)?;
+    let class_id = oc.class_id;
+    let refuse = |msg: String| OutMsg::ClassErr { class_id, msg };
+    if class_id as usize >= shared.cfg.max_classes {
+        let m = format!("class id {class_id} ≥ per-connection cap {}", shared.cfg.max_classes);
+        return enqueue_ctl(shared, conn, refuse(m));
+    }
+    let grid = match ObsGrid::new(oc.grid) {
+        Ok(g) => g,
+        Err(e) => return enqueue_ctl(shared, conn, refuse(format!("bad obs grid: {e:#}"))),
+    };
+    let class = match RequestClass::new(
+        &oc.model, &oc.solver, oc.n_z, oc.t0, oc.t1, oc.mode, grid,
+    ) {
+        Ok(c) => Arc::new(c),
+        Err(e) => return enqueue_ctl(shared, conn, refuse(format!("bad class: {e:#}"))),
+    };
+    match shared.bridge.open_class(&class) {
+        Ok(model_raw) => {
+            if classes.len() <= class_id as usize {
+                classes.resize_with(class_id as usize + 1, || None);
+            }
+            classes[class_id as usize] = Some(ConnClass { class, model_raw });
+            enqueue_ctl(
+                shared,
+                conn,
+                OutMsg::ClassOk {
+                    class_id,
+                    model_id: model_raw,
+                },
+            )
+        }
+        Err(msg) => enqueue_ctl(shared, conn, refuse(msg)),
+    }
+}
+
+/// The per-request hot path: pooled envelope, zero allocations once
+/// warm.  Refusals (drain, in-flight cap, quota, queue shed) answer
+/// with RETRY; malformed-but-parseable requests answer with REQ_ERR;
+/// only undecodable input kills the connection.
+fn handle_submit(
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    classes: &mut [Option<ConnClass>],
+    sink: &Arc<dyn CompletionSink>,
+) -> Result<()> {
+    let cfg = &shared.cfg;
+    let mut c = frame::Cursor::new(body);
+    let req_id = c.u64()?;
+    let class_id = c.u32()? as usize;
+    let Some(Some(cc)) = classes.get(class_id) else {
+        let msg = format!("SUBMIT names unopened class id {class_id}");
+        return enqueue_ctl(shared, conn, OutMsg::ReqErr { req_id, msg });
+    };
+    let n_z = cc.class.n_z;
+    if c.remaining() != n_z * 4 {
+        let msg = format!(
+            "SUBMIT payload is {} B, class {class_id} (n_z = {n_z}) needs {}",
+            c.remaining(),
+            n_z * 4
+        );
+        return enqueue_ctl(shared, conn, OutMsg::ReqErr { req_id, msg });
+    }
+    // admission gates, cheapest first (no envelope touched on refusal)
+    if shared.draining.load(Ordering::SeqCst) {
+        return send_retry(shared, conn, req_id, true);
+    }
+    if conn.inflight.load(Ordering::SeqCst) >= cfg.max_inflight {
+        return send_retry(shared, conn, req_id, false);
+    }
+    let model_slot = shared.model_inflight.get(cc.model_raw as usize);
+    if cfg.model_quota > 0 {
+        if let Some(slot) = model_slot {
+            if slot.load(Ordering::SeqCst) >= cfg.model_quota {
+                return send_retry(shared, conn, req_id, false);
+            }
+        }
+    }
+    // pooled envelope: pop (or allocate during warmup), retarget to this
+    // class — `ensure` reuses capacity, so a warmed pool serves mixed
+    // classes without allocating
+    let mut env = {
+        let mut pool = conn.pool.lock().expect("pool poisoned");
+        pool.pop()
+            .unwrap_or_else(|| Pending::new(cc.class.clone(), Vec::new()))
+    };
+    if !Arc::ptr_eq(&env.class, &cc.class) {
+        env.class = cc.class.clone();
+    }
+    ensure(&mut env.z0, n_z);
+    ensure(&mut env.z_final, n_z);
+    ensure(&mut env.obs, cc.class.grid.len() * n_z);
+    c.f32s_into(&mut env.z0)?;
+    env.rearm(req_id);
+    env.model_raw = cc.model_raw;
+    env.set_sink(sink.clone());
+    // count the request in flight *before* submitting: the completion
+    // (which decrements) can land on another thread immediately
+    conn.inflight.fetch_add(1, Ordering::SeqCst);
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    if let Some(slot) = model_slot {
+        slot.fetch_add(1, Ordering::SeqCst);
+    }
+    match shared.bridge.submit(env) {
+        Ok(()) => Ok(()),
+        Err((e, mut env)) => {
+            conn.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            if let Some(slot) = shared.model_inflight.get(env.model_raw as usize) {
+                slot.fetch_sub(1, Ordering::SeqCst);
+            }
+            // break the envelope→sink→pool cycle before pooling
+            env.delivery = Delivery::None;
+            conn.pool.lock().expect("pool poisoned").push(env);
+            match e {
+                SubmitError::Overloaded { .. } => send_retry(shared, conn, req_id, false),
+                SubmitError::Closed => send_retry(shared, conn, req_id, true),
+                SubmitError::BadRequest(msg) => {
+                    enqueue_ctl(shared, conn, OutMsg::ReqErr { req_id, msg })
+                }
+            }
+        }
+    }
+}
+
+fn send_retry(
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    req_id: u64,
+    draining: bool,
+) -> Result<()> {
+    shared.retries_sent.fetch_add(1, Ordering::SeqCst);
+    let hint_us = shared.cfg.backoff_hint.as_micros().min(u32::MAX as u128) as u32;
+    enqueue_ctl(
+        shared,
+        conn,
+        OutMsg::Retry {
+            req_id,
+            hint_us,
+            draining,
+        },
+    )
+}
+
+/// Queue a control frame for the writer.  A client that stops reading
+/// while hammering us would grow this queue without bound — beyond the
+/// backlog cap the connection is killed instead.
+fn enqueue_ctl(shared: &Arc<Shared>, conn: &Arc<ConnShared>, msg: OutMsg) -> Result<()> {
+    let cap = shared.cfg.max_inflight + CONTROL_BACKLOG;
+    let mut st = conn.out.lock().expect("outbound poisoned");
+    if st.msgs.len() >= cap {
+        bail!("outbound backlog overflow ({cap} frames queued; client is not reading)");
+    }
+    st.msgs.push_back(msg);
+    conn.cv.notify_all();
+    Ok(())
+}
+
+fn writer_loop(stream: TcpStream, conn: Arc<ConnShared>) {
+    let mut wbuf: Vec<u8> = Vec::new();
+    let mut recycle: Vec<Pending> = Vec::new();
+    let mut dead = false;
+    loop {
+        {
+            let mut st = conn.out.lock().expect("outbound poisoned");
+            loop {
+                if !st.msgs.is_empty() {
+                    break;
+                }
+                if st.reader_gone && conn.inflight.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                st = conn.cv.wait(st).expect("outbound poisoned");
+            }
+            st.writing = true;
+            wbuf.clear();
+            while let Some(m) = st.msgs.pop_front() {
+                encode_msg(&mut wbuf, m, &mut recycle);
+            }
+        }
+        // one coalesced write for everything that was queued
+        if !dead && !wbuf.is_empty() && (&stream).write_all(&wbuf).is_err() {
+            dead = true;
+            // kick the reader out of its poll loop too
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if !recycle.is_empty() {
+            let mut pool = conn.pool.lock().expect("pool poisoned");
+            pool.append(&mut recycle);
+        }
+        let mut st = conn.out.lock().expect("outbound poisoned");
+        st.writing = false;
+        conn.cv.notify_all();
+    }
+}
+
+fn encode_msg(wbuf: &mut Vec<u8>, msg: OutMsg, recycle: &mut Vec<Pending>) {
+    match msg {
+        OutMsg::Done(Completion::Ok(mut p)) => {
+            frame::response(wbuf, &p);
+            p.delivery = Delivery::None;
+            recycle.push(p);
+        }
+        OutMsg::Done(Completion::Failed(mut p, msg)) => {
+            frame::req_err(wbuf, p.req_id, &msg);
+            p.delivery = Delivery::None;
+            recycle.push(p);
+        }
+        OutMsg::ClassOk { class_id, model_id } => frame::class_ok(wbuf, class_id, model_id),
+        OutMsg::ClassErr { class_id, msg } => frame::class_err(wbuf, class_id, &msg),
+        OutMsg::Retry {
+            req_id,
+            hint_us,
+            draining,
+        } => frame::retry(wbuf, req_id, hint_us, draining),
+        OutMsg::ReqErr { req_id, msg } => frame::req_err(wbuf, req_id, &msg),
+        OutMsg::Health(h) => frame::health_ok(wbuf, &h),
+        OutMsg::GoodbyeOk => frame::goodbye_ok(wbuf),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted bridge: no serve core behind it, every submit is
+    /// refused as Closed.
+    struct RefusingBridge;
+
+    impl Bridge for RefusingBridge {
+        fn open_class(&self, _class: &Arc<RequestClass>) -> std::result::Result<u32, String> {
+            Err("no models here".into())
+        }
+        fn submit(&self, pending: Pending) -> std::result::Result<(), (SubmitError, Pending)> {
+            Err((SubmitError::Closed, pending))
+        }
+        fn model_count(&self) -> usize {
+            0
+        }
+        fn queue_depth(&self) -> usize {
+            3
+        }
+        fn queue_capacity(&self) -> usize {
+            7
+        }
+        fn shed_count(&self) -> u64 {
+            11
+        }
+    }
+
+    #[test]
+    fn health_and_class_err_over_loopback() {
+        let front = TcpFront::bind(
+            "127.0.0.1:0",
+            Arc::new(RefusingBridge),
+            TransportConfig::default(),
+        )
+        .unwrap();
+        let addr = front.local_addr();
+        let mut cl = super::super::client::TcpClient::connect(addr).unwrap();
+        let h = cl.health(5).unwrap();
+        assert_eq!(h.probe_id, 5);
+        assert_eq!(h.queue_depth, 3);
+        assert_eq!(h.queue_capacity, 7);
+        assert_eq!(h.shed_total, 11);
+        assert!(h.ready);
+
+        let class = Arc::new(
+            RequestClass::new(
+                "ghost",
+                "alf",
+                2,
+                0.0,
+                1.0,
+                crate::solvers::integrate::StepMode::Fixed { h: 0.1 },
+                ObsGrid::none(),
+            )
+            .unwrap(),
+        );
+        let err = cl.open_class(0, &class).unwrap_err();
+        assert!(err.to_string().contains("no models here"), "{err}");
+
+        let out = front.shutdown(Duration::from_secs(5));
+        assert!(out.flushed, "nothing in flight, drain must flush");
+    }
+
+    #[test]
+    fn bad_preamble_gets_disconnected() {
+        let front = TcpFront::bind(
+            "127.0.0.1:0",
+            Arc::new(RefusingBridge),
+            TransportConfig {
+                read_timeout: Duration::from_millis(200),
+                ..TransportConfig::default()
+            },
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(front.local_addr()).unwrap();
+        s.write_all(b"HTTP/1.1 GET / pls").unwrap();
+        let mut buf = [0u8; 16];
+        // server hangs up without writing anything
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "bad preamble must be met with a close, got {n} bytes");
+        drop(front);
+    }
+}

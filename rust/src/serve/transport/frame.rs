@@ -1,0 +1,840 @@
+//! The wire codec: frame grammar, primitive little-endian readers and
+//! writers, and the incremental [`FrameReader`] state machine.
+//!
+//! Everything on the wire is little-endian.  A connection opens with an
+//! 8-byte preamble (`b"MALI"` + protocol version `u16` + flags `u16`);
+//! after that both directions speak length-prefixed frames:
+//!
+//! ```text
+//! [len: u32][type: u8][body: len-1 bytes]
+//! ```
+//!
+//! `len` counts the type byte plus the body, so the smallest legal frame
+//! is `len == 1`.  The full grammar (field layouts per type) is in
+//! DESIGN.md §11; the encode/parse pairs in this module are the single
+//! source of truth the server connection loop, the client and the tests
+//! all share.
+//!
+//! Encoders append to a caller-owned `Vec<u8>` — after warmup the
+//! buffer's capacity is stable, so encoding a response frame performs no
+//! heap allocation (`tests/alloc_serve.rs` pins the server side of
+//! this).  [`FrameReader`] likewise reuses one body buffer across
+//! frames and survives short reads: a read timeout returns
+//! [`ReadOutcome::Idle`] with all partial progress kept, which is what
+//! lets the connection loop use the socket timeout as a poll interval
+//! while still detecting mid-frame stalls (slow-loris defense).
+
+use crate::serve::{Pending, RequestClass};
+use crate::solvers::integrate::StepMode;
+use anyhow::{bail, ensure, Result};
+use std::io::{self, ErrorKind, Read};
+
+// ---------------------------------------------------------------------------
+// Protocol constants
+// ---------------------------------------------------------------------------
+
+/// Connection preamble magic.
+pub const MAGIC: [u8; 4] = *b"MALI";
+/// Protocol version (bumped on any incompatible grammar change;
+/// docs/adr/006 records the versioning policy).
+pub const VERSION: u16 = 1;
+/// Preamble length: magic + version `u16` + flags `u16`.
+pub const PREAMBLE_LEN: usize = 8;
+
+/// Client → server: declare a request class under a client-chosen id.
+pub const T_OPEN_CLASS: u8 = 0x01;
+/// Client → server: one request (`req_id`, `class_id`, `z0` payload).
+pub const T_SUBMIT: u8 = 0x02;
+/// Client → server: health/readiness probe.
+pub const T_HEALTH: u8 = 0x03;
+/// Client → server: polite end-of-session (server acks, then the client
+/// closes).
+pub const T_GOODBYE: u8 = 0x04;
+/// Client → server: ask the server process to drain and exit (the
+/// multi-process harness's remote off-switch).
+pub const T_SHUTDOWN: u8 = 0x05;
+
+/// Server → client: class accepted; carries the interned model id.
+pub const T_CLASS_OK: u8 = 0x81;
+/// Server → client: class rejected (validation / unknown model).
+pub const T_CLASS_ERR: u8 = 0x82;
+/// Server → client: a served response (out-of-order by `req_id`).
+pub const T_RESPONSE: u8 = 0x83;
+/// Server → client: this request failed (solver error, bad shape).
+pub const T_REQ_ERR: u8 = 0x84;
+/// Server → client: request shed/refused — retry after the hint.
+pub const T_RETRY: u8 = 0x85;
+/// Server → client: health report.
+pub const T_HEALTH_OK: u8 = 0x86;
+/// Server → client: goodbye/shutdown acknowledged.
+pub const T_GOODBYE_OK: u8 = 0x87;
+
+/// Step-mode tag inside OPEN_CLASS: `StepMode::Fixed`.
+pub const MODE_FIXED: u8 = 0;
+/// Step-mode tag inside OPEN_CLASS: `StepMode::Adaptive`.
+pub const MODE_ADAPTIVE: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// Primitive little-endian writers
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+#[inline]
+pub fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// `u16`-length-prefixed UTF-8 string (names, error messages).  Payloads
+/// longer than `u16::MAX` are truncated at a char boundary — error
+/// messages are the only variable-length strings and a 64 KiB prefix of
+/// one is as useful as the whole.
+pub fn put_str16(buf: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(buf, end as u16);
+    buf.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+/// Raw `f32` run (no length prefix — the frame layout implies it).
+pub fn put_f32s(buf: &mut Vec<u8>, src: &[f32]) {
+    for v in src {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Open a frame: reserve the 4-byte length slot, write the type byte,
+/// and return the slot offset for [`end_frame`].
+pub fn begin_frame(buf: &mut Vec<u8>, ftype: u8) -> usize {
+    let at = buf.len();
+    buf.extend_from_slice(&[0u8; 4]);
+    buf.push(ftype);
+    at
+}
+
+/// Close a frame opened with [`begin_frame`]: patch the length slot
+/// with the bytes written since (type byte included).
+pub fn end_frame(buf: &mut [u8], at: usize) {
+    let len = (buf.len() - at - 4) as u32;
+    buf[at..at + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Primitive reader
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over one frame body.
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    /// Error unless the body was consumed exactly — trailing garbage is
+    /// a protocol violation, not padding.
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "frame has {} trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "frame truncated: wanted {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str16(&mut self) -> Result<&'a str> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        std::str::from_utf8(raw).map_err(|e| anyhow::anyhow!("frame string not UTF-8: {e}"))
+    }
+
+    /// Copy exactly `dst.len()` `f32`s out of the body — the zero-copy
+    /// half of SUBMIT/RESPONSE decoding (straight into a pooled buffer).
+    pub fn f32s_into(&mut self, dst: &mut [f32]) -> Result<()> {
+        let raw = self.take(dst.len() * 4)?;
+        for (d, c) in dst.iter_mut().zip(raw.chunks_exact(4)) {
+            *d = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preamble
+// ---------------------------------------------------------------------------
+
+/// Append the connection preamble (client sends this once at connect).
+pub fn write_preamble(buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&MAGIC);
+    put_u16(buf, VERSION);
+    put_u16(buf, 0); // flags, reserved
+}
+
+/// Validate a received preamble (magic + exact version match; flags are
+/// reserved and ignored).
+pub fn check_preamble(b: &[u8; PREAMBLE_LEN]) -> Result<()> {
+    ensure!(b[..4] == MAGIC, "bad preamble magic {:?}", &b[..4]);
+    let version = u16::from_le_bytes([b[4], b[5]]);
+    ensure!(
+        version == VERSION,
+        "protocol version mismatch: peer speaks v{version}, this build speaks v{VERSION}"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Typed frame encoders
+// ---------------------------------------------------------------------------
+
+/// OPEN_CLASS: the whole validated class description travels once at
+/// handshake; every later SUBMIT names it by `class_id` (no per-request
+/// strings on the wire, mirroring the interned registry lookup).
+pub fn open_class(buf: &mut Vec<u8>, class_id: u32, class: &RequestClass) {
+    let at = begin_frame(buf, T_OPEN_CLASS);
+    put_u32(buf, class_id);
+    put_str16(buf, &class.model);
+    put_str16(buf, &class.solver);
+    put_u32(buf, class.n_z as u32);
+    put_f64(buf, class.t0);
+    put_f64(buf, class.t1);
+    match class.mode {
+        StepMode::Fixed { h } => {
+            put_u8(buf, MODE_FIXED);
+            put_f64(buf, h);
+        }
+        StepMode::Adaptive {
+            rtol,
+            atol,
+            h_init,
+            h_min,
+            h_max,
+        } => {
+            put_u8(buf, MODE_ADAPTIVE);
+            put_f64(buf, rtol);
+            put_f64(buf, atol);
+            put_f64(buf, h_init);
+            put_f64(buf, h_min);
+            put_f64(buf, h_max);
+        }
+    }
+    let times = class.grid.times();
+    put_u32(buf, times.len() as u32);
+    for t in times {
+        put_f64(buf, *t);
+    }
+    end_frame(buf, at);
+}
+
+/// A parsed OPEN_CLASS body (server side; allocation here is fine —
+/// class construction is the handshake, not the request path).
+#[derive(Debug)]
+pub struct OpenClassFrame {
+    pub class_id: u32,
+    pub model: String,
+    pub solver: String,
+    pub n_z: usize,
+    pub t0: f64,
+    pub t1: f64,
+    pub mode: StepMode,
+    pub grid: Vec<f64>,
+}
+
+pub fn parse_open_class(body: &[u8]) -> Result<OpenClassFrame> {
+    let mut c = Cursor::new(body);
+    let class_id = c.u32()?;
+    let model = c.str16()?.to_string();
+    let solver = c.str16()?.to_string();
+    let n_z = c.u32()? as usize;
+    let t0 = c.f64()?;
+    let t1 = c.f64()?;
+    let mode = match c.u8()? {
+        MODE_FIXED => StepMode::Fixed { h: c.f64()? },
+        MODE_ADAPTIVE => StepMode::Adaptive {
+            rtol: c.f64()?,
+            atol: c.f64()?,
+            h_init: c.f64()?,
+            h_min: c.f64()?,
+            h_max: c.f64()?,
+        },
+        other => bail!("unknown step-mode tag {other}"),
+    };
+    let k = c.u32()? as usize;
+    ensure!(
+        c.remaining() == k * 8,
+        "OPEN_CLASS grid length mismatch: {} bytes for k = {k}",
+        c.remaining()
+    );
+    let mut grid = Vec::with_capacity(k);
+    for _ in 0..k {
+        grid.push(c.f64()?);
+    }
+    c.done()?;
+    Ok(OpenClassFrame {
+        class_id,
+        model,
+        solver,
+        n_z,
+        t0,
+        t1,
+        mode,
+        grid,
+    })
+}
+
+pub fn class_ok(buf: &mut Vec<u8>, class_id: u32, model_id: u32) {
+    let at = begin_frame(buf, T_CLASS_OK);
+    put_u32(buf, class_id);
+    put_u32(buf, model_id);
+    end_frame(buf, at);
+}
+
+pub fn class_err(buf: &mut Vec<u8>, class_id: u32, msg: &str) {
+    let at = begin_frame(buf, T_CLASS_ERR);
+    put_u32(buf, class_id);
+    put_str16(buf, msg);
+    end_frame(buf, at);
+}
+
+/// SUBMIT: correlation id + interned class id + the raw `z0` row.
+pub fn submit(buf: &mut Vec<u8>, req_id: u64, class_id: u32, z0: &[f32]) {
+    let at = begin_frame(buf, T_SUBMIT);
+    put_u64(buf, req_id);
+    put_u32(buf, class_id);
+    put_f32s(buf, z0);
+    end_frame(buf, at);
+}
+
+/// RESPONSE, encoded straight from the served envelope (self-describing
+/// widths so the client needs no side table to size the payload).
+pub fn response(buf: &mut Vec<u8>, p: &Pending) {
+    let n_z = p.class.n_z;
+    let k = p.class.grid.len();
+    let at = begin_frame(buf, T_RESPONSE);
+    put_u64(buf, p.req_id);
+    put_u32(buf, p.n_accepted as u32);
+    put_u32(buf, p.n_trials as u32);
+    put_u32(buf, n_z as u32);
+    put_u32(buf, k as u32);
+    put_f64(buf, p.queue_wait_s);
+    put_f64(buf, p.service_s);
+    put_f32s(buf, &p.z_final[..n_z]);
+    put_f32s(buf, &p.obs[..k * n_z]);
+    end_frame(buf, at);
+}
+
+/// A decoded RESPONSE (client side).  Reused across
+/// [`parse_response_into`] calls — the payload vectors keep their
+/// capacity, so a warmed client read loop does not allocate either.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResponseFrame {
+    pub req_id: u64,
+    pub n_accepted: usize,
+    pub n_trials: usize,
+    pub queue_wait_s: f64,
+    pub service_s: f64,
+    /// Length `n_z`.
+    pub z_final: Vec<f32>,
+    /// Length `k * n_z` (row-major `[K, n_z]`).
+    pub obs: Vec<f32>,
+}
+
+pub fn parse_response_into(body: &[u8], out: &mut ResponseFrame) -> Result<()> {
+    let mut c = Cursor::new(body);
+    out.req_id = c.u64()?;
+    out.n_accepted = c.u32()? as usize;
+    out.n_trials = c.u32()? as usize;
+    let n_z = c.u32()? as usize;
+    let k = c.u32()? as usize;
+    out.queue_wait_s = c.f64()?;
+    out.service_s = c.f64()?;
+    ensure!(
+        c.remaining() == (n_z + k * n_z) * 4,
+        "RESPONSE payload length mismatch"
+    );
+    crate::solvers::workspace::ensure(&mut out.z_final, n_z);
+    crate::solvers::workspace::ensure(&mut out.obs, k * n_z);
+    c.f32s_into(&mut out.z_final)?;
+    c.f32s_into(&mut out.obs)?;
+    c.done()
+}
+
+pub fn req_err(buf: &mut Vec<u8>, req_id: u64, msg: &str) {
+    let at = begin_frame(buf, T_REQ_ERR);
+    put_u64(buf, req_id);
+    put_str16(buf, msg);
+    end_frame(buf, at);
+}
+
+/// RETRY: explicit backpressure.  `backoff_hint_us` is the server's
+/// suggested minimum wait; `draining != 0` means the server is shutting
+/// down and this connection should give up rather than retry.
+pub fn retry(buf: &mut Vec<u8>, req_id: u64, backoff_hint_us: u32, draining: bool) {
+    let at = begin_frame(buf, T_RETRY);
+    put_u64(buf, req_id);
+    put_u32(buf, backoff_hint_us);
+    put_u8(buf, draining as u8);
+    end_frame(buf, at);
+}
+
+pub fn health(buf: &mut Vec<u8>, probe_id: u64) {
+    let at = begin_frame(buf, T_HEALTH);
+    put_u64(buf, probe_id);
+    end_frame(buf, at);
+}
+
+/// The health/readiness report (HEALTH_OK body), shared by the server
+/// encoder and the client parser.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HealthFrame {
+    /// Echo of the probe's id.
+    pub probe_id: u64,
+    /// Queue depth at probe time (racy snapshot).
+    pub queue_depth: u32,
+    /// The queue's fixed capacity.
+    pub queue_capacity: u32,
+    /// Requests shed at the queue since server start.
+    pub shed_total: u64,
+    /// RETRY frames this transport has sent (sheds + quota/drain
+    /// refusals) since bind.
+    pub retries_sent: u64,
+    /// Requests admitted via this transport and not yet completed.
+    pub inflight: u32,
+    /// Nonzero once graceful drain has begun.
+    pub draining: bool,
+    /// Readiness: accepting work (not draining, queue not closed).
+    pub ready: bool,
+}
+
+pub fn health_ok(buf: &mut Vec<u8>, h: &HealthFrame) {
+    let at = begin_frame(buf, T_HEALTH_OK);
+    put_u64(buf, h.probe_id);
+    put_u32(buf, h.queue_depth);
+    put_u32(buf, h.queue_capacity);
+    put_u64(buf, h.shed_total);
+    put_u64(buf, h.retries_sent);
+    put_u32(buf, h.inflight);
+    put_u8(buf, h.draining as u8);
+    put_u8(buf, h.ready as u8);
+    end_frame(buf, at);
+}
+
+pub fn parse_health_ok(body: &[u8]) -> Result<HealthFrame> {
+    let mut c = Cursor::new(body);
+    let h = HealthFrame {
+        probe_id: c.u64()?,
+        queue_depth: c.u32()?,
+        queue_capacity: c.u32()?,
+        shed_total: c.u64()?,
+        retries_sent: c.u64()?,
+        inflight: c.u32()?,
+        draining: c.u8()? != 0,
+        ready: c.u8()? != 0,
+    };
+    c.done()?;
+    Ok(h)
+}
+
+pub fn goodbye(buf: &mut Vec<u8>) {
+    let at = begin_frame(buf, T_GOODBYE);
+    end_frame(buf, at);
+}
+
+pub fn goodbye_ok(buf: &mut Vec<u8>) {
+    let at = begin_frame(buf, T_GOODBYE_OK);
+    end_frame(buf, at);
+}
+
+pub fn shutdown(buf: &mut Vec<u8>) {
+    let at = begin_frame(buf, T_SHUTDOWN);
+    end_frame(buf, at);
+}
+
+// ---------------------------------------------------------------------------
+// Incremental frame reader
+// ---------------------------------------------------------------------------
+
+/// What one [`FrameReader::poll`] call produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// A complete frame is buffered ([`FrameReader::frame_type`] /
+    /// [`FrameReader::body`]); call [`FrameReader::reset`] when done.
+    Frame,
+    /// The read timed out (or would block) before a frame completed.
+    /// All partial progress is kept — poll again.  Check
+    /// [`FrameReader::buffered`] to distinguish an idle connection
+    /// (nothing buffered, harmless) from a mid-frame stall.
+    Idle,
+    /// Clean EOF at a frame boundary — the peer closed the connection.
+    Closed,
+}
+
+/// Resumable length-prefixed frame decoder.  `std::io::Read::read_exact`
+/// loses its position on a timeout; this state machine instead keeps the
+/// partial header/body across calls, so the connection loop can use a
+/// short socket read timeout as its poll interval without ever
+/// corrupting the stream framing.  One body buffer is reused for every
+/// frame (allocation only while it grows toward the largest frame seen).
+pub struct FrameReader {
+    max_frame: usize,
+    head: [u8; 5],
+    have_head: usize,
+    body: Vec<u8>,
+    have_body: usize,
+}
+
+impl FrameReader {
+    /// A reader enforcing `max_frame` as the largest admissible body
+    /// (length-prefix values beyond it kill the connection before any
+    /// buffer grows to match — a 4 GiB length prefix must not become a
+    /// 4 GiB allocation).
+    pub fn new(max_frame: usize) -> FrameReader {
+        FrameReader {
+            max_frame,
+            head: [0; 5],
+            have_head: 0,
+            body: Vec::new(),
+            have_body: 0,
+        }
+    }
+
+    /// Bytes of the in-progress frame buffered so far (0 ⇔ at a frame
+    /// boundary).
+    pub fn buffered(&self) -> usize {
+        self.have_head + self.have_body
+    }
+
+    /// The buffered frame's type byte (valid after
+    /// [`ReadOutcome::Frame`]).
+    pub fn frame_type(&self) -> u8 {
+        self.head[4]
+    }
+
+    /// The buffered frame's body (valid after [`ReadOutcome::Frame`]).
+    pub fn body(&self) -> &[u8] {
+        &self.body[..self.have_body]
+    }
+
+    /// Forget the buffered frame and return to the boundary state.
+    pub fn reset(&mut self) {
+        self.have_head = 0;
+        self.have_body = 0;
+    }
+
+    fn body_len(&self) -> io::Result<usize> {
+        let len = u32::from_le_bytes(self.head[..4].try_into().unwrap()) as usize;
+        if len == 0 {
+            return Err(io::Error::new(
+                ErrorKind::InvalidData,
+                "frame length 0 (missing type byte)",
+            ));
+        }
+        let body = len - 1;
+        if body > self.max_frame {
+            return Err(io::Error::new(
+                ErrorKind::InvalidData,
+                format!("frame body {body} B exceeds max_frame {} B", self.max_frame),
+            ));
+        }
+        Ok(body)
+    }
+
+    /// Pump bytes from `r` until a frame completes, the read times out,
+    /// or the peer closes.  IO errors (including oversized frames and
+    /// EOF mid-frame) surface as `Err` — the connection is unusable.
+    pub fn poll<R: Read>(&mut self, r: &mut R) -> io::Result<ReadOutcome> {
+        loop {
+            if self.have_head < 5 {
+                match r.read(&mut self.head[self.have_head..5]) {
+                    Ok(0) => {
+                        return if self.buffered() == 0 {
+                            Ok(ReadOutcome::Closed)
+                        } else {
+                            Err(ErrorKind::UnexpectedEof.into())
+                        };
+                    }
+                    Ok(n) => {
+                        self.have_head += n;
+                        if self.have_head == 5 {
+                            let need = self.body_len()?;
+                            // reuse the buffer; growth only toward the
+                            // largest frame this connection has seen
+                            self.body.resize(need, 0);
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        return Ok(ReadOutcome::Idle);
+                    }
+                    Err(e) => return Err(e),
+                }
+                continue;
+            }
+            let need = self.body.len();
+            if self.have_body == need {
+                return Ok(ReadOutcome::Frame);
+            }
+            match r.read(&mut self.body[self.have_body..need]) {
+                Ok(0) => return Err(ErrorKind::UnexpectedEof.into()),
+                Ok(n) => self.have_body += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Ok(ReadOutcome::Idle);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::integrate::ObsGrid;
+
+    fn toy_class(grid: ObsGrid) -> RequestClass {
+        RequestClass::new("toy", "alf", 3, 0.0, 1.0, StepMode::Fixed { h: 0.1 }, grid).unwrap()
+    }
+
+    #[test]
+    fn open_class_round_trips() {
+        let class = toy_class(ObsGrid::new(vec![0.25, 1.0]).unwrap());
+        let mut buf = Vec::new();
+        open_class(&mut buf, 7, &class);
+        // strip the envelope
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4);
+        assert_eq!(buf[4], T_OPEN_CLASS);
+        let parsed = parse_open_class(&buf[5..]).unwrap();
+        assert_eq!(parsed.class_id, 7);
+        assert_eq!(parsed.model, "toy");
+        assert_eq!(parsed.solver, "alf");
+        assert_eq!(parsed.n_z, 3);
+        assert_eq!(parsed.grid, vec![0.25, 1.0]);
+        assert!(matches!(parsed.mode, StepMode::Fixed { h } if h == 0.1));
+
+        let adaptive = RequestClass::new(
+            "toy",
+            "alf",
+            3,
+            0.0,
+            1.0,
+            StepMode::adaptive(1e-4, 1e-6),
+            ObsGrid::none(),
+        )
+        .unwrap();
+        buf.clear();
+        open_class(&mut buf, 8, &adaptive);
+        let parsed = parse_open_class(&buf[5..]).unwrap();
+        assert_eq!(parsed.mode, adaptive.mode);
+        assert!(parsed.grid.is_empty());
+    }
+
+    #[test]
+    fn response_round_trips_including_timings() {
+        use std::sync::Arc;
+        let class = Arc::new(toy_class(ObsGrid::new(vec![0.5]).unwrap()));
+        let mut p = Pending::new(class, vec![1.0, 2.0, 3.0]);
+        p.req_id = 99;
+        p.n_accepted = 10;
+        p.n_trials = 12;
+        p.queue_wait_s = 0.5;
+        p.service_s = 0.25;
+        p.z_final.copy_from_slice(&[4.0, 5.0, 6.0]);
+        p.obs.copy_from_slice(&[7.0, 8.0, 9.0]);
+        let mut buf = Vec::new();
+        response(&mut buf, &p);
+        let mut out = ResponseFrame::default();
+        parse_response_into(&buf[5..], &mut out).unwrap();
+        assert_eq!(out.req_id, 99);
+        assert_eq!(out.n_accepted, 10);
+        assert_eq!(out.n_trials, 12);
+        assert_eq!(out.queue_wait_s, 0.5);
+        assert_eq!(out.service_s, 0.25);
+        assert_eq!(out.z_final, vec![4.0, 5.0, 6.0]);
+        assert_eq!(out.obs, vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn health_round_trips() {
+        let h = HealthFrame {
+            probe_id: 3,
+            queue_depth: 5,
+            queue_capacity: 8,
+            shed_total: 21,
+            retries_sent: 34,
+            inflight: 2,
+            draining: true,
+            ready: false,
+        };
+        let mut buf = Vec::new();
+        health_ok(&mut buf, &h);
+        assert_eq!(buf[4], T_HEALTH_OK);
+        assert_eq!(parse_health_ok(&buf[5..]).unwrap(), h);
+    }
+
+    #[test]
+    fn frame_reader_reassembles_byte_by_byte() {
+        let mut wire = Vec::new();
+        submit(&mut wire, 42, 1, &[1.5, -2.5]);
+        retry(&mut wire, 43, 1000, false);
+        // feed one byte at a time through a reader that times out after
+        // each byte — partial progress must survive every Idle
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Err(ErrorKind::WouldBlock.into());
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                if self.1 % 2 == 0 {
+                    // every other byte: pretend the timeout fired
+                    Err(ErrorKind::WouldBlock.into())
+                } else {
+                    Ok(1)
+                }
+            }
+        }
+        let mut src = OneByte(&wire, 0);
+        let mut fr = FrameReader::new(1 << 20);
+        let mut seen = Vec::new();
+        loop {
+            match fr.poll(&mut src).unwrap() {
+                ReadOutcome::Frame => {
+                    seen.push((fr.frame_type(), fr.body().to_vec()));
+                    fr.reset();
+                    if seen.len() == 2 {
+                        break;
+                    }
+                }
+                ReadOutcome::Idle => continue,
+                ReadOutcome::Closed => panic!("no close in this stream"),
+            }
+        }
+        assert_eq!(seen[0].0, T_SUBMIT);
+        let mut c = Cursor::new(&seen[0].1);
+        assert_eq!(c.u64().unwrap(), 42);
+        assert_eq!(c.u32().unwrap(), 1);
+        let mut z0 = [0.0f32; 2];
+        c.f32s_into(&mut z0).unwrap();
+        c.done().unwrap();
+        assert_eq!(z0, [1.5, -2.5]);
+        assert_eq!(seen[1].0, T_RETRY);
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_and_truncated() {
+        // length prefix far beyond max_frame: must error before
+        // allocating the claimed size
+        let huge = [0xFF, 0xFF, 0xFF, 0x7F, T_SUBMIT];
+        let mut fr = FrameReader::new(1 << 20);
+        let err = fr.poll(&mut &huge[..]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+
+        // zero-length frame (no type byte) is malformed
+        let zero = [0u8, 0, 0, 0];
+        let mut fr = FrameReader::new(1 << 20);
+        assert!(fr.poll(&mut &zero[..]).is_err());
+
+        // EOF mid-frame is an UnexpectedEof, not a clean close
+        let mut wire = Vec::new();
+        submit(&mut wire, 1, 0, &[1.0]);
+        wire.truncate(wire.len() - 2);
+        let mut fr = FrameReader::new(1 << 20);
+        let err = fr.poll(&mut &wire[..]).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+
+        // EOF at a boundary is a clean close
+        let mut fr = FrameReader::new(1 << 20);
+        assert_eq!(fr.poll(&mut &[][..]).unwrap(), ReadOutcome::Closed);
+    }
+
+    #[test]
+    fn preamble_checks_magic_and_version() {
+        let mut buf = Vec::new();
+        write_preamble(&mut buf);
+        assert_eq!(buf.len(), PREAMBLE_LEN);
+        let ok: [u8; PREAMBLE_LEN] = buf[..].try_into().unwrap();
+        check_preamble(&ok).unwrap();
+        let mut bad_magic = ok;
+        bad_magic[0] = b'X';
+        assert!(check_preamble(&bad_magic).is_err());
+        let mut bad_version = ok;
+        bad_version[4] = 0xFE;
+        assert!(check_preamble(&bad_version).is_err());
+    }
+
+    #[test]
+    fn str16_truncates_at_char_boundary() {
+        let long = "é".repeat(40_000); // 80 000 bytes of 2-byte chars
+        let mut buf = Vec::new();
+        put_str16(&mut buf, &long);
+        let n = u16::from_le_bytes(buf[..2].try_into().unwrap()) as usize;
+        assert!(n <= u16::MAX as usize);
+        assert!(std::str::from_utf8(&buf[2..2 + n]).is_ok());
+    }
+}

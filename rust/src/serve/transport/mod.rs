@@ -1,0 +1,164 @@
+//! The TCP front-end: a dependency-free, allocation-disciplined network
+//! transport in front of the in-process [`Server`](crate::serve::Server)
+//! (DESIGN.md §11, docs/adr/006).
+//!
+//! Per ADR-002 there is no async runtime: the transport is pure
+//! `std::net` + threads.  Each accepted connection gets a **reader**
+//! thread (decodes length-prefixed frames straight into pooled
+//! [`Pending`] envelopes and submits them) and a **writer** thread
+//! (drains a per-connection completion queue, coalesces many frames
+//! into one buffered write, recycles the envelopes back into the pool).
+//! Many requests may be in flight per connection; responses complete
+//! out of order, correlated by `req_id` — that pipelining is what lets
+//! a single connection saturate the coalescing batcher.
+//!
+//! The serve core stays transport-agnostic: workers deliver through
+//! [`CompletionSink`](crate::serve::CompletionSink) and the connection
+//! layer reaches the server only through the [`Bridge`] trait, so the
+//! same workers can later sit behind a different front end.
+//!
+//! Resilience surface:
+//!
+//! * **Backpressure** — `SubmitError::Overloaded` becomes an explicit
+//!   RETRY frame with a backoff hint; [`client::Backoff`] implements
+//!   capped exponential backoff with jitter on top of it.
+//! * **Health/readiness** — HEALTH frames report queue depth, shed
+//!   totals and in-flight counts.
+//! * **Graceful drain** — [`TcpFront::shutdown`]: stop accepting,
+//!   answer new submits with RETRY(draining), flush every accepted
+//!   in-flight response, then close.
+//! * **Limits** — max frame size, per-connection max in-flight, mid-
+//!   frame read (stall) timeout, connection cap, per-model admission
+//!   quotas: one bad client cannot wedge a reader or the server.
+
+pub mod client;
+pub mod conn;
+pub mod frame;
+
+pub use client::{Backoff, ClientEvent, TcpClient};
+pub use conn::{DrainOutcome, TcpFront};
+pub use frame::{FrameReader, HealthFrame, ReadOutcome, ResponseFrame};
+
+use crate::serve::{Pending, RequestClass, Server, SubmitError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the connection layer needs from the serve core — nothing else
+/// crosses the boundary, so workers never learn about sockets and a
+/// test can stand in a scripted bridge.
+pub trait Bridge: Send + Sync + 'static {
+    /// Handshake-time class admission: validate the class against the
+    /// registry (model exists, dynamically batchable, width matches)
+    /// and intern its model name, returning the raw model id.  Called
+    /// once per OPEN_CLASS — per-request frames never carry strings.
+    fn open_class(&self, class: &Arc<RequestClass>) -> Result<u32, String>;
+
+    /// Submit a pooled envelope (see
+    /// [`Server::submit_pooled`](crate::serve::Server::submit_pooled)):
+    /// refusals return the envelope so its buffers go back to the pool.
+    fn submit(&self, pending: Pending) -> Result<(), (SubmitError, Pending)>;
+
+    /// Registered model count (sizes the per-model quota table at bind).
+    fn model_count(&self) -> usize;
+
+    /// Current queue depth (health reporting).
+    fn queue_depth(&self) -> usize;
+
+    /// The queue's capacity (health reporting).
+    fn queue_capacity(&self) -> usize;
+
+    /// Requests shed at the queue since server start (health reporting
+    /// and exact shed accounting in the overload tests).
+    fn shed_count(&self) -> u64;
+}
+
+impl Bridge for Server {
+    fn open_class(&self, class: &Arc<RequestClass>) -> Result<u32, String> {
+        let reg = self.registry();
+        let Some(id) = reg.resolve_cached(class) else {
+            return Err(format!(
+                "unknown model '{}' (registered: {:?})",
+                class.model,
+                reg.names()
+            ));
+        };
+        let model = reg.get_by_id(id).expect("freshly resolved id");
+        if model.is_device_batched() {
+            return Err(format!(
+                "model '{}' is device-batched and cannot be dynamically micro-batched",
+                class.model
+            ));
+        }
+        if model.dim() != class.n_z {
+            return Err(format!(
+                "model '{}' has state width {}, class expects n_z = {}",
+                class.model,
+                model.dim(),
+                class.n_z
+            ));
+        }
+        Ok(id.raw())
+    }
+
+    fn submit(&self, pending: Pending) -> Result<(), (SubmitError, Pending)> {
+        self.submit_pooled(pending)
+    }
+
+    fn model_count(&self) -> usize {
+        self.registry().len()
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.queue_depth()
+    }
+
+    fn queue_capacity(&self) -> usize {
+        self.config().queue_capacity
+    }
+
+    fn shed_count(&self) -> u64 {
+        self.shed_count()
+    }
+}
+
+/// Connection-layer knobs (defaults are production-shaped; tests tighten
+/// them to force the failure paths).
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// Largest admissible frame body in bytes.  A length prefix beyond
+    /// this kills the connection before any allocation matches it.
+    pub max_frame: usize,
+    /// Per-connection in-flight request cap; submits beyond it get
+    /// RETRY.  Bounds the envelope pool (and so the memory) one
+    /// connection can pin.
+    pub max_inflight: usize,
+    /// Accepted-connection cap; connections beyond it are closed
+    /// immediately.
+    pub max_conns: usize,
+    /// Mid-frame stall bound: a connection that starts a frame and then
+    /// feeds no byte for this long is closed (slow-loris defense).
+    /// Idle connections *between* frames are not timed out.
+    pub read_timeout: Duration,
+    /// Per-model in-flight admission quota across all connections;
+    /// `0` = unlimited.  Quota refusals get RETRY.
+    pub model_quota: usize,
+    /// Backoff hint carried by RETRY frames.
+    pub backoff_hint: Duration,
+    /// Per-connection request-class table cap (class ids must be below
+    /// this).
+    pub max_classes: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            max_frame: 1 << 20,
+            max_inflight: 256,
+            max_conns: 64,
+            read_timeout: Duration::from_secs(30),
+            model_quota: 0,
+            backoff_hint: Duration::from_millis(1),
+            max_classes: 64,
+        }
+    }
+}

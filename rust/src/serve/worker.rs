@@ -29,7 +29,7 @@
 use super::batcher::{fill_next_batch, BatcherCfg};
 use super::metrics::ServeMetrics;
 use super::queue::BoundedQueue;
-use super::{ModelRegistry, Pending, RequestClass, ServeResponse};
+use super::{Completion, Delivery, ModelRegistry, Pending, RequestClass, ServeResponse};
 use crate::solvers::batch::{BatchSpec, BatchState};
 use crate::solvers::integrate::{
     integrate_batch_obs_stats_sharded, integrate_batch_obs_stats_ws, BatchShards,
@@ -206,7 +206,11 @@ impl ServeWorker {
     }
 
     /// Record metrics for a successfully solved batch (or solo retry)
-    /// and deliver each row's response.
+    /// and deliver each row's response.  Sink-routed envelopes are moved
+    /// out whole (a no-allocation husk swap keeps the batch slice valid)
+    /// so the transport can write + recycle them; slot-routed rows copy
+    /// into a [`ServeResponse`]; direct-drive rows just keep their
+    /// filled buffers.
     fn deliver_rows(&mut self, batch: &mut [Pending], t_start: Instant, f_evals: u64) {
         let service_s = t_start.elapsed().as_secs_f64();
         self.metrics.batches += 1;
@@ -214,21 +218,31 @@ impl ServeWorker {
         self.metrics.f_evals += f_evals;
         for p in batch.iter_mut() {
             let queue_wait_s = t_start.saturating_duration_since(p.enqueued).as_secs_f64();
+            p.queue_wait_s = queue_wait_s;
+            p.service_s = service_s;
             self.metrics.requests += 1;
             self.metrics.steps += p.n_accepted as u64;
             self.metrics.trials += p.n_trials as u64;
             self.metrics.queue_wait.record(queue_wait_s);
             self.metrics.service.record(service_s);
             self.metrics.total.record(queue_wait_s + service_s);
-            if let Some(slot) = p.slot.take() {
-                slot.fulfill(Ok(ServeResponse {
-                    z_final: std::mem::take(&mut p.z_final),
-                    obs: std::mem::take(&mut p.obs),
-                    n_accepted: p.n_accepted,
-                    n_trials: p.n_trials,
-                    queue_wait_s,
-                    service_s,
-                }));
+            match std::mem::take(&mut p.delivery) {
+                Delivery::None => {}
+                Delivery::Slot(slot) => {
+                    slot.fulfill(Ok(ServeResponse {
+                        z_final: std::mem::take(&mut p.z_final),
+                        obs: std::mem::take(&mut p.obs),
+                        n_accepted: p.n_accepted,
+                        n_trials: p.n_trials,
+                        queue_wait_s,
+                        service_s,
+                    }));
+                }
+                Delivery::Sink(sink) => {
+                    let class = p.class.clone();
+                    let env = std::mem::replace(p, Pending::husk(class));
+                    sink.complete(Completion::Ok(env));
+                }
             }
         }
         self.metrics.note_activity(Instant::now());
@@ -239,8 +253,14 @@ impl ServeWorker {
         self.metrics.failed += batch.len() as u64;
         let msg = format!("serve batch failed: {e:#}");
         for p in batch.iter_mut() {
-            if let Some(slot) = p.slot.take() {
-                slot.fulfill(Err(msg.clone()));
+            match std::mem::take(&mut p.delivery) {
+                Delivery::None => {}
+                Delivery::Slot(slot) => slot.fulfill(Err(msg.clone())),
+                Delivery::Sink(sink) => {
+                    let class = p.class.clone();
+                    let env = std::mem::replace(p, Pending::husk(class));
+                    sink.complete(Completion::Failed(env, msg.clone()));
+                }
             }
         }
     }
@@ -250,9 +270,20 @@ impl ServeWorker {
     /// `shard_count > 1` — bitwise the same results) → per-row scatter.
     /// Returns the batch's `f`-evaluation count.
     fn run_batch(&mut self, class: &RequestClass, batch: &mut [Pending]) -> Result<u64> {
-        let dynamics = self.registry.get(&class.model).ok_or_else(|| {
-            anyhow!("unknown model '{}' (registered: {:?})", class.model, self.registry.names())
-        })?;
+        // interned lookup: one tag compare after the class's first batch
+        // on this registry (ModelRegistry::resolve_cached) — the serve
+        // loop never hashes the model string
+        let dynamics = self
+            .registry
+            .resolve_cached(class)
+            .and_then(|id| self.registry.get_by_id(id))
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown model '{}' (registered: {:?})",
+                    class.model,
+                    self.registry.names()
+                )
+            })?;
         // direct drivers bypass Server::submit, so re-check the shape
         // contract here (cheap scalar compares; an error, not a panic)
         ensure_that!(
@@ -384,12 +415,13 @@ pub fn worker_loop(
         }));
         if outcome.is_err() {
             for p in batch.iter_mut() {
-                if let Some(slot) = p.slot.take() {
-                    slot.fulfill(Err(
-                        "serve worker panicked while integrating this batch".into()
-                    ));
-                    worker.metrics.failed += 1;
+                if matches!(p.delivery, Delivery::None) {
+                    continue;
                 }
+                let class = p.class.clone();
+                let env = std::mem::replace(p, Pending::husk(class));
+                env.fail("serve worker panicked while integrating this batch");
+                worker.metrics.failed += 1;
             }
         }
         batch.clear();

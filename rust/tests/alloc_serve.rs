@@ -26,10 +26,14 @@
 //! The whole file is a single `#[test]` so no sibling test thread can
 //! allocate concurrently inside a measured region.
 
-use mali_ode::serve::{ModelRegistry, Pending, RequestClass, ServeWorker};
+use mali_ode::serve::transport::{
+    Bridge, ClientEvent, ResponseFrame, TcpClient, TcpFront, TransportConfig,
+};
+use mali_ode::serve::{ModelRegistry, Pending, RequestClass, Server, ServerConfig, ServeWorker};
 use mali_ode::solvers::dynamics::LinearToy;
 use mali_ode::solvers::integrate::{ObsGrid, StepMode};
 use std::sync::Arc;
+use std::time::Duration;
 
 #[path = "common/counting_alloc.rs"]
 mod counting_alloc;
@@ -152,4 +156,73 @@ fn warmed_serve_loop_is_allocation_free() {
         .collect();
     assert_zero_alloc_steady(&mut sharded, &mut batch, &adaptive_rows, "sharded adaptive");
     assert_eq!(sharded.metrics().failed, 0);
+
+    // ---- TCP transport: the warmed read → submit → respond loop ----------
+    // the full loopback stack in one measured window — client frame
+    // encode, server reader decode into a pooled envelope, queue hop,
+    // worker solve, completion sink, writer coalesced encode, client
+    // parse.  Client and server share this process (and so this counting
+    // allocator), so the zero covers BOTH sides of the wire.
+    let server = Arc::new(Server::start(
+        registry.clone(),
+        ServerConfig {
+            queue_capacity: 64,
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            workers: 1,
+            shards: 1,
+        },
+    ));
+    let front = TcpFront::bind(
+        "127.0.0.1:0",
+        server.clone() as Arc<dyn Bridge>,
+        TransportConfig::default(),
+    )
+    .unwrap();
+    let mut cl = TcpClient::connect(front.local_addr()).unwrap();
+    cl.open_class(0, &fixed_class).unwrap();
+    let z0: Vec<f32> = (0..N_Z).map(|j| 0.3 + 0.1 * j as f32).collect();
+    let mut resp = ResponseFrame::default();
+    // warm-up: envelope pool, frame buffers on both ends, outbound
+    // queue capacity, registry-id memo, worker workspaces
+    for req in 0..16u64 {
+        cl.submit(req, 0, &z0).unwrap();
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => assert_eq!(resp.n_accepted, 100),
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let a0 = allocs();
+    for req in 16..24u64 {
+        cl.submit(req, 0, &z0).unwrap();
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => {}
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta, 0,
+        "warmed TCP serve loop allocated {delta} times over 8 round-trips"
+    );
+    assert_eq!(resp.n_accepted, 100, "measured responses were real solves");
+    cl.goodbye().unwrap();
+    drop(cl);
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+    // the front and its connection threads have released their server
+    // handles; unwrap (tolerating the last thread's exit race) and check
+    // the books
+    let mut server = server;
+    let server = loop {
+        match Arc::try_unwrap(server) {
+            Ok(s) => break s,
+            Err(back) => {
+                server = back;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    };
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 24);
+    assert_eq!(metrics.failed, 0);
 }

@@ -1,0 +1,349 @@
+//! End-to-end tests of the TCP front-end (DESIGN.md §11) over loopback —
+//! the transport's acceptance properties:
+//!
+//! * **transport transparency** — a request served over TCP is
+//!   **bitwise** identical to the same request through the in-process
+//!   [`Server::submit`] path: final state, per-observation snapshots,
+//!   step/trial counts.  The wire protocol must be a pure encoding of
+//!   the serve layer, never a reinterpretation — including pipelined
+//!   out-of-order completion and two classes multiplexed on one
+//!   connection;
+//! * **resilience** — under overload every shed gets an explicit RETRY
+//!   (exact accounting: client-observed == transport-sent == queue
+//!   sheds), capped-backoff retry converges, the queue never exceeds
+//!   its capacity, and graceful drain completes all accepted in-flight
+//!   work while refusing new submits with RETRY(draining);
+//! * **robustness** — oversized length prefixes, unknown frame types
+//!   and submits against unopened classes are refused without wedging
+//!   the connection or the server.
+
+use mali_ode::serve::transport::{
+    Backoff, Bridge, ClientEvent, ResponseFrame, TcpClient, TcpFront, TransportConfig,
+};
+use mali_ode::serve::{ModelRegistry, RequestClass, Server, ServerConfig};
+use mali_ode::solvers::dynamics::LinearToy;
+use mali_ode::solvers::integrate::{ObsGrid, StepMode};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_Z: usize = 4;
+const ALPHA: f64 = -0.35;
+
+fn registry() -> Arc<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    reg.register("toy", Box::new(LinearToy::new(ALPHA, N_Z)));
+    Arc::new(reg)
+}
+
+fn start(queue_capacity: usize, workers: usize, max_batch: usize) -> Arc<Server> {
+    Arc::new(Server::start(
+        registry(),
+        ServerConfig {
+            queue_capacity,
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            workers,
+            shards: 1,
+        },
+    ))
+}
+
+fn front_for(server: &Arc<Server>, cfg: TransportConfig) -> TcpFront {
+    TcpFront::bind("127.0.0.1:0", server.clone() as Arc<dyn Bridge>, cfg).unwrap()
+}
+
+fn class_with(mode: StepMode, grid: ObsGrid) -> Arc<RequestClass> {
+    Arc::new(RequestClass::new("toy", "alf", N_Z, 0.0, 1.0, mode, grid).unwrap())
+}
+
+fn request_rows(k: usize) -> Vec<Vec<f32>> {
+    const SCALES: [f32; 5] = [0.001, 0.4, 1.0, 5.0, 20.0];
+    (0..k)
+        .map(|i| {
+            let s = SCALES[i % SCALES.len()];
+            (0..N_Z).map(|j| s * (1.0 + 0.17 * j as f32)).collect()
+        })
+        .collect()
+}
+
+/// Two classes multiplexed over one pipelined connection: every TCP
+/// response is bitwise the direct-submit answer, and a fast request
+/// submitted *after* a slow one completes *before* it (out-of-order
+/// completion by req id).
+#[test]
+fn tcp_serving_is_bitwise_direct_submit() {
+    let server = start(64, 2, 8);
+    let front = front_for(&server, TransportConfig::default());
+    let mut cl = TcpClient::connect(front.local_addr()).unwrap();
+
+    // class 0: slow fixed grid (50k steps); class 1: fast adaptive
+    let slow = class_with(
+        StepMode::Fixed { h: 2e-5 },
+        ObsGrid::new(vec![0.31, 0.5, 1.0]).unwrap(),
+    );
+    let fast = class_with(
+        StepMode::adaptive(1e-4, 1e-6),
+        ObsGrid::new(vec![0.31, 0.5, 1.0]).unwrap(),
+    );
+    cl.open_class(0, &slow).unwrap();
+    cl.open_class(1, &fast).unwrap();
+
+    // slow request first, fast second — with two workers the fast class
+    // must complete first even though it was submitted later
+    let rows = request_rows(6);
+    cl.submit(1, 0, &rows[0]).unwrap();
+    cl.submit(2, 1, &rows[1]).unwrap();
+    let mut resp = ResponseFrame::default();
+    let mut got: Vec<(u64, ResponseFrame)> = Vec::new();
+    while got.len() < 2 {
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => got.push((resp.req_id, resp.clone())),
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(
+        got[0].0, 2,
+        "fast request (req 2) must complete before the 50k-step slow one"
+    );
+    assert_eq!(got[1].0, 1);
+
+    // bitwise equality against the direct in-process path, both classes
+    for (req_id, tcp) in &got {
+        let (class, z0) = if *req_id == 1 {
+            (&slow, &rows[0])
+        } else {
+            (&fast, &rows[1])
+        };
+        let direct = server.submit(class, z0).unwrap().wait().unwrap();
+        assert_eq!(tcp.z_final, direct.z_final, "final state bitwise (req {req_id})");
+        assert_eq!(tcp.obs, direct.obs, "observation snapshots bitwise (req {req_id})");
+        assert_eq!(tcp.n_accepted, direct.n_accepted, "steps (req {req_id})");
+        assert_eq!(tcp.n_trials, direct.n_trials, "trials (req {req_id})");
+    }
+
+    // a pipelined burst across both classes, every answer bitwise
+    let mut expect = Vec::new();
+    for (i, z0) in rows.iter().enumerate() {
+        let class_id = (i % 2) as u32;
+        cl.submit(100 + i as u64, class_id, z0).unwrap();
+        let class = if class_id == 0 { &slow } else { &fast };
+        expect.push(server.submit(class, z0).unwrap().wait().unwrap());
+    }
+    let mut seen = 0;
+    while seen < rows.len() {
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => {
+                let i = (resp.req_id - 100) as usize;
+                assert_eq!(resp.z_final, expect[i].z_final, "burst req {i} final state");
+                assert_eq!(resp.obs, expect[i].obs, "burst req {i} observations");
+                assert_eq!(resp.n_accepted, expect[i].n_accepted);
+                assert_eq!(resp.n_trials, expect[i].n_trials);
+                seen += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    cl.goodbye().unwrap();
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// Induced overload: a burst wider than the queue.  Every shed is
+/// answered with RETRY, capped backoff converges (all requests
+/// eventually served), the accounting is exact on both ends, and the
+/// queue never grows past its capacity.
+#[test]
+fn overload_retries_are_exact_and_backoff_converges() {
+    let server = start(4, 1, 4);
+    // generous per-conn cap so the only refusals are queue sheds
+    let front = front_for(
+        &server,
+        TransportConfig {
+            max_inflight: 1024,
+            ..TransportConfig::default()
+        },
+    );
+    let mut cl = TcpClient::connect(front.local_addr()).unwrap();
+    // ~10k steps per request: the reader outpaces the single worker
+    let class = class_with(StepMode::Fixed { h: 1e-4 }, ObsGrid::none());
+    cl.open_class(0, &class).unwrap();
+
+    const BURST: usize = 48;
+    let rows = request_rows(BURST);
+    for (i, z0) in rows.iter().enumerate() {
+        cl.submit(i as u64, 0, z0).unwrap();
+    }
+    let mut resp = ResponseFrame::default();
+    let mut backoff = Backoff::new(
+        Duration::from_micros(200),
+        Duration::from_millis(20),
+        7,
+    );
+    let mut served = vec![false; BURST];
+    let mut done = 0usize;
+    let mut retries = 0u64;
+    while done < BURST {
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => {
+                let i = resp.req_id as usize;
+                assert!(!served[i], "req {i} answered twice");
+                served[i] = true;
+                assert!(resp.n_accepted > 0);
+                done += 1;
+            }
+            ClientEvent::Retry {
+                req_id,
+                backoff: hint,
+                draining,
+            } => {
+                assert!(!draining);
+                retries += 1;
+                std::thread::sleep(backoff.next_delay(hint));
+                cl.submit(req_id, 0, &rows[req_id as usize]).unwrap();
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(retries > 0, "burst of {BURST} into a 4-deep queue must shed");
+
+    // exact accounting: client-observed == transport-sent == queue sheds
+    let health = cl.health(9).unwrap();
+    assert_eq!(health.queue_capacity, 4);
+    assert!(health.queue_depth <= health.queue_capacity);
+    assert_eq!(health.retries_sent, retries, "transport RETRY ledger");
+    assert_eq!(health.shed_total, retries, "every RETRY was a queue shed");
+    assert_eq!(front.retries_sent(), retries);
+    assert_eq!(server.shed_count(), retries);
+
+    cl.goodbye().unwrap();
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// Graceful drain: accepted in-flight work completes and is flushed,
+/// new submits are refused with RETRY(draining), the listener stops.
+#[test]
+fn graceful_drain_completes_accepted_work() {
+    let server = start(16, 1, 4);
+    let front = front_for(&server, TransportConfig::default());
+    let addr = front.local_addr();
+    let mut cl = TcpClient::connect(addr).unwrap();
+    // ~50ms of work per request so both are genuinely in flight when
+    // the drain begins
+    let class = class_with(StepMode::Fixed { h: 2e-5 }, ObsGrid::none());
+    cl.open_class(0, &class).unwrap();
+    let rows = request_rows(2);
+    cl.submit(1, 0, &rows[0]).unwrap();
+    cl.submit(2, 0, &rows[1]).unwrap();
+
+    front.begin_drain();
+    // a submit after the drain flag flips is refused, tagged draining
+    cl.submit(3, 0, &rows[0]).unwrap();
+    let mut resp = ResponseFrame::default();
+    let mut drain_retry = false;
+    let mut served = 0;
+    for _ in 0..3 {
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Retry {
+                req_id, draining, ..
+            } => {
+                assert_eq!(req_id, 3);
+                assert!(draining, "drain refusals must carry the draining flag");
+                drain_retry = true;
+            }
+            ClientEvent::Response => {
+                assert!(resp.req_id == 1 || resp.req_id == 2);
+                assert!(resp.n_accepted > 0);
+                served += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(drain_retry);
+    assert_eq!(served, 2, "accepted in-flight requests completed through the drain");
+
+    let outcome = front.shutdown(Duration::from_secs(10));
+    assert!(outcome.flushed, "drain must flush all accepted work");
+    // the listener is gone: a fresh client cannot complete a handshake
+    let refused = match TcpClient::connect(addr) {
+        Err(_) => true,
+        Ok(mut late) => late.health(1).is_err(),
+    };
+    assert!(refused, "post-drain connections must be refused");
+}
+
+/// Protocol robustness: oversized length prefixes and unknown frame
+/// types close the connection; a submit naming an unopened class gets a
+/// REQ_ERR while the connection (and server) keep working.
+#[test]
+fn malformed_input_is_contained() {
+    let server = start(16, 1, 4);
+    let front = front_for(
+        &server,
+        TransportConfig {
+            max_frame: 1 << 12,
+            ..TransportConfig::default()
+        },
+    );
+    let addr = front.local_addr();
+
+    // oversized length prefix: closed before any allocation matches it
+    // (the length slot plus a type byte completes the 5-byte header the
+    // reader validates against max_frame)
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"MALI\x01\x00\x00\x00").unwrap();
+    raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    raw.write_all(&[0x02]).unwrap();
+    let mut buf = [0u8; 8];
+    assert_eq!(raw.read(&mut buf).unwrap_or(0), 0, "oversized frame must close");
+
+    // unknown frame type: same fate
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"MALI\x01\x00\x00\x00").unwrap();
+    raw.write_all(&2u32.to_le_bytes()).unwrap();
+    raw.write_all(&[0x7f, 0x00]).unwrap();
+    assert_eq!(raw.read(&mut buf).unwrap_or(0), 0, "unknown frame must close");
+
+    // unopened class: in-band REQ_ERR, connection stays usable
+    let mut cl = TcpClient::connect(addr).unwrap();
+    let z0 = vec![1.0f32; N_Z];
+    cl.submit(7, 5, &z0).unwrap();
+    let mut resp = ResponseFrame::default();
+    match cl.next_event(&mut resp).unwrap() {
+        ClientEvent::ReqErr { req_id, msg } => {
+            assert_eq!(req_id, 7);
+            assert!(msg.contains("unopened class"), "{msg}");
+        }
+        other => panic!("expected REQ_ERR, got {other:?}"),
+    }
+    // ...and a real request on the same connection still round-trips
+    let class = class_with(StepMode::Fixed { h: 0.01 }, ObsGrid::none());
+    cl.open_class(0, &class).unwrap();
+    let mut backoff = Backoff::new(Duration::from_micros(100), Duration::from_millis(5), 3);
+    let attempts = cl
+        .submit_with_retry(8, 0, &z0, &mut resp, &mut backoff)
+        .unwrap();
+    assert_eq!(attempts, 1);
+    assert_eq!(resp.n_accepted, 100);
+    let direct = server.submit(&class, &z0).unwrap().wait().unwrap();
+    assert_eq!(resp.z_final, direct.z_final);
+
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// `wait_timeout` on the in-process handle: times out while a slow
+/// request is in flight, then delivers the same response object.
+#[test]
+fn response_handle_wait_timeout() {
+    let server = start(16, 1, 4);
+    let class = class_with(StepMode::Fixed { h: 2e-5 }, ObsGrid::none());
+    let z0 = vec![1.0f32; N_Z];
+    let handle = server.submit(&class, &z0).unwrap();
+    // 50k steps won't finish in 1ms
+    assert!(handle.wait_timeout(Duration::from_millis(1)).is_none());
+    let resp = handle
+        .wait_timeout(Duration::from_secs(30))
+        .expect("must deliver well before 30s")
+        .unwrap();
+    assert_eq!(resp.n_accepted, 50_000);
+}
