@@ -100,6 +100,10 @@ COMMANDS:
     serve-client-bench         drive a running serve-tcp (E13): --addr/--port-file,
                                --clients/--requests/--window/--churn, --overload
                                [--assert-shed] for exact shed accounting, --shutdown
+    finetune-serve             continual fine-tuning under live session traffic (E14):
+                               hot_swap publishes new θ without draining while loopback
+                               TCP sessions stream (--updates N, --sessions S, --events E);
+                               asserts version pinning + exact admission accounting
     smoke                      load + execute every artifact once (runtime check)
     help                       show this message
 

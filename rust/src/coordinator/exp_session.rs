@@ -1,0 +1,463 @@
+//! E14 — streaming sessions + hot-swap under load.
+//!
+//! Two entry points:
+//!
+//! * [`serve_session_bench`] (`mali run serve_session`) — the cost of
+//!   *incremental* streaming inference.  S sessions each receive E
+//!   irregular observation events; the **oneshot** strategy re-solves
+//!   `[t0, t_now]` from scratch at every event (what a session-less
+//!   server must do — quadratic in the stream length), the **session**
+//!   strategy advances warm per-session state through
+//!   [`Server::session_step`] (linear).  The two are asserted
+//!   bitwise-equal on final states, and the session step totals must
+//!   equal the final one-shot solve's — the serve-layer face of the
+//!   equivalence `tests/session.rs` pins at the solver layer.
+//!
+//! * [`finetune_serve_cmd`] (`mali finetune-serve`) — continual
+//!   fine-tuning while serving: loopback TCP session traffic runs
+//!   against a model that a training loop keeps re-publishing through
+//!   [`ModelRegistry::hot_swap`](crate::serve::ModelRegistry::hot_swap).
+//!   Asserts the CoW pinning contract (a version snapshot held across N
+//!   swaps never changes θ), zero failures, and exact admission/shed
+//!   accounting on the transport.
+
+use super::exp_serve::{client_z0, standard_registry, N_Z};
+use super::Scale;
+use crate::cli::Args;
+use crate::serve::{RequestClass, Server, ServerConfig};
+use crate::solvers::integrate::{ObsGrid, StepMode};
+use crate::util::bench::{quantile, Table};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic event time j of the standard stream (strictly
+/// increasing, irregular): every strategy, process and test sees the
+/// same grid.
+fn event_time(j: usize) -> f64 {
+    // irregular but reproducible: base spacing 0.06 with a ±40% wobble
+    (0..=j).map(|i| 0.06 * (1.0 + 0.4 * ((i * 2654435761) % 100) as f64 / 100.0)).sum()
+}
+
+fn server(workers: usize) -> Server {
+    Server::start(
+        Arc::new(standard_registry()),
+        ServerConfig {
+            queue_capacity: 1024,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            workers,
+            shards: 1,
+        },
+    )
+}
+
+struct CellResult {
+    latencies_s: Vec<f64>,
+    wall_s: f64,
+    /// Accepted solver steps (summed per-response, not from metrics, so
+    /// the two strategies are compared on identical accounting).
+    steps: u64,
+    /// Final state per session, for the cross-strategy bitwise check.
+    finals: Vec<Vec<f32>>,
+}
+
+/// One-shot re-solve baseline: at each event the full prefix grid is
+/// solved again from `t0` through a fresh request class.
+fn run_oneshot(mode: &StepMode, sessions: usize, events: usize, seed: u64) -> Result<CellResult> {
+    let server = server(pool::num_threads().clamp(1, 2));
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..sessions).map(|i| root.fork(i as u64)).collect();
+    let t0 = Instant::now();
+    let per_session: Vec<Result<(Vec<f64>, u64, Vec<f32>)>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let z0 = client_z0(&mut rng);
+        let mut lats = Vec::with_capacity(events);
+        let mut last_steps = 0u64;
+        let mut final_z = Vec::new();
+        let mut grid_times = Vec::with_capacity(events);
+        for j in 0..events {
+            grid_times.push(event_time(j));
+            let class = Arc::new(RequestClass::new(
+                "lin8",
+                "alf",
+                N_Z,
+                0.0,
+                *grid_times.last().unwrap(),
+                mode.clone(),
+                ObsGrid::new(grid_times.clone())?,
+            )?);
+            let t = Instant::now();
+            let resp = server.submit(&class, &z0).map_err(|e| anyhow::anyhow!("{e}"))?.wait()?;
+            lats.push(t.elapsed().as_secs_f64());
+            // only the last solve's counts matter: it covers the whole
+            // stream, which is what the session strategy integrates once
+            last_steps = resp.n_accepted as u64;
+            final_z = resp.z_final;
+        }
+        Ok((lats, last_steps, final_z))
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+    let mut out = CellResult {
+        latencies_s: Vec::new(),
+        wall_s,
+        steps: 0,
+        finals: Vec::new(),
+    };
+    for r in per_session {
+        let (lats, steps, final_z) = r?;
+        out.latencies_s.extend(lats);
+        out.steps += steps;
+        out.finals.push(final_z);
+    }
+    Ok(out)
+}
+
+/// Streaming strategy: one warm session per stream, one incremental
+/// [`Server::session_step`] per event.
+fn run_session(mode: &StepMode, sessions: usize, events: usize, seed: u64) -> Result<CellResult> {
+    let server = server(pool::num_threads().clamp(1, 2));
+    let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..sessions).map(|i| root.fork(i as u64)).collect();
+    let t0 = Instant::now();
+    let per_session: Vec<Result<(Vec<f64>, u64, Vec<f32>)>> = pool::par_map(&rngs, |rng| {
+        let mut rng = rng.clone();
+        let z0 = client_z0(&mut rng);
+        let sid = server
+            .open_session("lin8", "alf", N_Z, 0.0, mode.clone(), &z0)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut lats = Vec::with_capacity(events);
+        let mut steps = 0u64;
+        let mut final_z = Vec::new();
+        for j in 0..events {
+            let t = Instant::now();
+            let resp = server
+                .session_step(sid, &[event_time(j)])
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .wait()?;
+            lats.push(t.elapsed().as_secs_f64());
+            steps += resp.n_accepted as u64;
+            final_z = resp.z_final;
+        }
+        ensure!(server.close_session(sid), "session {sid} vanished");
+        Ok((lats, steps, final_z))
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    ensure!(server.session_count() == 0, "sessions leaked past close");
+    let metrics = server.shutdown();
+    ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+    ensure!(
+        metrics.session_steps == (sessions * events) as u64,
+        "served {} session steps, expected {}",
+        metrics.session_steps,
+        sessions * events
+    );
+    let mut out = CellResult {
+        latencies_s: Vec::new(),
+        wall_s,
+        steps: 0,
+        finals: Vec::new(),
+    };
+    for r in per_session {
+        let (lats, steps, final_z) = r?;
+        out.latencies_s.extend(lats);
+        out.steps += steps;
+        out.finals.push(final_z);
+    }
+    Ok(out)
+}
+
+/// E14 runner: incremental session serving vs one-shot re-solve, fixed
+/// and adaptive stepping.  Writes `runs/serve_session.json`.
+pub fn serve_session_bench(scale: Scale, seed: u64) -> Result<Json> {
+    let sessions = scale.pick(4, 8);
+    let events = scale.pick(12, 96);
+    let mut table = Table::new(
+        "E14: streaming sessions — incremental advance vs one-shot re-solve (bitwise-equal states)",
+        &["config", "events/s", "steps", "p50 ms", "p99 ms", "wall s"],
+    );
+    let mut rows = Vec::new();
+    for adaptive in [false, true] {
+        let mode = if adaptive {
+            StepMode::adaptive(1e-4, 1e-6)
+        } else {
+            StepMode::Fixed { h: 0.01 }
+        };
+        let mode_name = if adaptive { "adaptive" } else { "fixed" };
+        let oneshot = run_oneshot(&mode, sessions, events, seed)?;
+        let session = run_session(&mode, sessions, events, seed)?;
+        // the whole point: the cheap path must be the *same computation*
+        ensure!(
+            session.finals == oneshot.finals,
+            "incremental sessions diverged from the one-shot re-solve ({mode_name})"
+        );
+        ensure!(
+            session.steps == oneshot.steps,
+            "session step totals {} ≠ final one-shot totals {} ({mode_name})",
+            session.steps,
+            oneshot.steps
+        );
+        for (strategy, cell) in [("oneshot", &oneshot), ("session", &session)] {
+            let n = cell.latencies_s.len();
+            let p50 = quantile(&cell.latencies_s, 0.50) * 1e3;
+            let p99 = quantile(&cell.latencies_s, 0.99) * 1e3;
+            let eps = n as f64 / cell.wall_s.max(1e-12);
+            let config = format!("{mode_name}/{strategy}");
+            table.row(&[
+                config.clone(),
+                format!("{eps:.0}"),
+                cell.steps.to_string(),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{:.2}", cell.wall_s),
+            ]);
+            rows.push(Json::obj(vec![
+                ("config", Json::Str(config)),
+                ("mode", Json::Str(mode_name.into())),
+                ("strategy", Json::Str(strategy.into())),
+                ("events", Json::Num(n as f64)),
+                ("wall_s", Json::Num(cell.wall_s)),
+                ("p50_ms", Json::Num(p50)),
+                ("p99_ms", Json::Num(p99)),
+                ("events_per_sec", Json::Num(eps)),
+                ("steps", Json::Num(cell.steps as f64)),
+            ]));
+        }
+    }
+    table.print();
+    Ok(crate::coordinator::report::summary(
+        rows,
+        vec![
+            ("bench", Json::Str("serve_session".into())),
+            ("seed", Json::Num(seed as f64)),
+            ("sessions", Json::Num(sessions as f64)),
+            ("events_per_session", Json::Num(events as f64)),
+            ("n_z", Json::Num(N_Z as f64)),
+        ],
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// mali finetune-serve — continual fine-tuning against live session traffic
+// ---------------------------------------------------------------------------
+
+/// `mali finetune-serve [--updates N] [--sessions S] [--events E]`:
+/// loopback TCP session streams against a model being continually
+/// fine-tuned and re-published with `hot_swap`.  Asserts version
+/// pinning, zero failures, and exact admission accounting; exits
+/// non-zero on any violation (the E14 CI smoke leg).
+pub fn finetune_serve_cmd(args: &Args) -> Result<()> {
+    use crate::grad::{IvpSpec, ObsSquareLoss};
+    use crate::serve::transport::{
+        Bridge, ClientEvent, ResponseFrame, TcpClient, TcpFront, TransportConfig,
+    };
+    use crate::serve::ModelRegistry;
+    use crate::solvers::batch::BatchSpec;
+    use crate::solvers::dynamics::MlpDynamics;
+    use crate::util::mem::MemTracker;
+
+    let updates = args.usize_opt("updates", 8);
+    let sessions = args.usize_opt("sessions", 4);
+    let events = args.usize_opt("events", 16);
+    let d = 4usize;
+
+    let mut registry = ModelRegistry::new();
+    registry.register("mlp", Box::new(MlpDynamics::new(d, 8, &mut Rng::new(17))));
+    let registry = Arc::new(registry);
+    let server = Arc::new(Server::start(
+        registry.clone(),
+        ServerConfig {
+            queue_capacity: 256,
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            workers: pool::num_threads().clamp(1, 2),
+            shards: 1,
+        },
+    ));
+    let front = TcpFront::bind(
+        "127.0.0.1:0",
+        server.clone() as Arc<dyn Bridge>,
+        TransportConfig::default(),
+    )?;
+    let addr = front.local_addr();
+
+    // pin the pre-training version: after every swap below, this exact θ
+    // must still be readable through the held Arc
+    let id = registry.resolve("mlp").context("mlp just registered")?;
+    let pinned = registry.snapshot(id).context("mlp snapshot")?;
+    let theta0 = pinned.dynamics().params().to_vec();
+    ensure!(pinned.version() == 1, "fresh model must be version 1");
+
+    // loopback session clients: one stream each, one step in flight
+    let mode = StepMode::Fixed { h: 0.05 };
+    let clients: Vec<std::thread::JoinHandle<Result<u64>>> = (0..sessions)
+        .map(|i| {
+            let mode = mode.clone();
+            std::thread::spawn(move || -> Result<u64> {
+                let mut rng = Rng::new(100 + i as u64);
+                let z0: Vec<f32> = (0..d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+                let mut cl = TcpClient::connect(addr)?;
+                let sid = cl.open_session(i as u64 + 1, "mlp", "alf", 0.0, &mode, &z0)?;
+                let mut resp = ResponseFrame::default();
+                let mut served = 0u64;
+                for j in 0..events {
+                    let req_id = (i * events + j) as u64 + 1;
+                    cl.session_step(req_id, sid, &[event_time(j)])?;
+                    match cl.next_event(&mut resp)? {
+                        ClientEvent::Response => {
+                            ensure!(resp.req_id == req_id, "out-of-order session response");
+                            ensure!(resp.z_final.len() == d, "malformed step response");
+                            served += 1;
+                        }
+                        other => anyhow::bail!("session step {req_id} got {other:?}"),
+                    }
+                }
+                cl.close_session(sid)?;
+                cl.goodbye()?;
+                Ok(served)
+            })
+        })
+        .collect();
+
+    // the fine-tuning loop: gradient on the *current* version, publish
+    // with hot_swap — never draining, never touching in-flight batches
+    let method = crate::grad::by_name("mali")?;
+    let solver = crate::solvers::by_name("alf")?;
+    let spec = IvpSpec::fixed(0.0, 1.0, 0.1);
+    let grid = ObsGrid::new(vec![0.5, 1.0])?;
+    let head = ObsSquareLoss { weights: vec![1.0, 1.0] };
+    let bspec = BatchSpec::new(4, d);
+    let mut train_rng = Rng::new(7);
+    let mut z0b = vec![0.0f32; bspec.flat_len()];
+    let mut losses = Vec::with_capacity(updates);
+    for u in 0..updates {
+        for z in z0b.iter_mut() {
+            *z = train_rng.range(-1.0, 1.0) as f32;
+        }
+        let current = registry.snapshot(id).context("mlp vanished")?;
+        let res = crate::grad::batch_driver::grad_obs_batched(
+            &*method,
+            current.dynamics(),
+            &*solver,
+            &spec,
+            &grid,
+            &z0b,
+            &bspec,
+            &head,
+            MemTracker::new(),
+        )?;
+        let lr = 0.02f32;
+        let theta: Vec<f32> = current
+            .dynamics()
+            .params()
+            .iter()
+            .zip(&res.grad_theta)
+            .map(|(p, g)| p - lr * g)
+            .collect();
+        let v = registry.hot_swap("mlp", &theta)?;
+        ensure!(v == u as u64 + 2, "hot_swap published version {v}, expected {}", u + 2);
+        // the pinning contract, checked after every single swap
+        ensure!(
+            pinned.dynamics().params() == &theta0[..],
+            "hot_swap mutated a pinned version's θ (update {u})"
+        );
+        losses.push(res.loss);
+    }
+
+    let mut served_total = 0u64;
+    for c in clients {
+        served_total += c.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    let expect = (sessions * events) as u64;
+    ensure!(served_total == expect, "served {served_total} of {expect} session steps");
+
+    // exact accounting: everything admitted completed, nothing shed, and
+    // HEALTH's pre-divided shed rate agrees
+    let admitted = front.admitted();
+    let health = front.health_snapshot();
+    ensure!(admitted == expect, "admitted {admitted}, expected {expect}");
+    ensure!(health.sessions == 0, "sessions leaked: {}", health.sessions);
+    ensure!(health.shed_total == 0, "unexpected shed under closed-loop load");
+    ensure!(health.shed_rate == 0.0, "shed rate must be exactly 0.0");
+    let drain = front.shutdown(Duration::from_secs(10));
+    ensure!(drain.flushed, "drain left unflushed responses");
+    // connection threads can hold a bridge reference for a beat after
+    // the drain returns; bound the wait rather than racing it
+    let mut server = server;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let metrics = loop {
+        match Arc::try_unwrap(server) {
+            Ok(s) => break s.shutdown(),
+            Err(arc) => {
+                ensure!(Instant::now() < deadline, "server still referenced at shutdown");
+                server = arc;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    };
+    ensure!(metrics.failed == 0, "{} serve failures", metrics.failed);
+    ensure!(
+        metrics.session_steps == expect,
+        "metrics counted {} session steps, expected {expect}",
+        metrics.session_steps
+    );
+
+    println!(
+        "finetune-serve OK: {updates} hot-swaps (final version {}), {served_total} session steps, \
+         loss {:.4} → {:.4}, pinned θ intact",
+        updates as u64 + 1,
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_times_are_strictly_increasing() {
+        let ts: Vec<f64> = (0..64).map(event_time).collect();
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+        assert!(ts[0] > 0.0);
+    }
+
+    /// The E14 grid at test scale: incremental ≡ one-shot, both modes.
+    #[test]
+    fn session_bench_smoke() {
+        for adaptive in [false, true] {
+            let mode = if adaptive {
+                StepMode::adaptive(1e-4, 1e-6)
+            } else {
+                StepMode::Fixed { h: 0.02 }
+            };
+            let oneshot = run_oneshot(&mode, 2, 5, 11).unwrap();
+            let session = run_session(&mode, 2, 5, 11).unwrap();
+            assert_eq!(session.finals, oneshot.finals, "adaptive={adaptive}");
+            assert_eq!(session.steps, oneshot.steps, "adaptive={adaptive}");
+            assert_eq!(session.latencies_s.len(), 10);
+        }
+    }
+
+    /// The full continual-fine-tuning loop over loopback TCP, tiny scale.
+    #[test]
+    fn finetune_serve_smoke() {
+        let args = Args::parse(&[
+            "finetune-serve".into(),
+            "--updates".into(),
+            "2".into(),
+            "--sessions".into(),
+            "2".into(),
+            "--events".into(),
+            "3".into(),
+        ])
+        .unwrap();
+        finetune_serve_cmd(&args).unwrap();
+    }
+}

@@ -10,6 +10,7 @@ pub mod exp_flows;
 pub mod exp_images;
 pub mod exp_serve;
 pub mod exp_serve_tcp;
+pub mod exp_session;
 pub mod exp_series;
 pub mod exp_toy;
 pub mod report;
@@ -64,6 +65,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table6", "Table 6 FFJORD BPD + RealNVP", exp_flows::table6 as Runner),
         ("serve", "E12 online micro-batching serve bench (latency/throughput)", exp_serve::serve_bench as Runner),
         ("serve_tcp", "E13 TCP front-end serve bench (client-observed latency vs in-process)", exp_serve_tcp::serve_tcp_bench as Runner),
+        ("serve_session", "E14 streaming sessions: incremental advance vs one-shot re-solve (bitwise-checked)", exp_session::serve_session_bench as Runner),
     ]
 }
 
@@ -126,6 +128,10 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         // client sends SHUTDOWN, and the load generator that drives it
         "serve-tcp" => exp_serve_tcp::serve_tcp_cmd(&args)?,
         "serve-client-bench" => exp_serve_tcp::client_bench_cmd(&args)?,
+        // E14: continual fine-tuning (hot_swap) against live streaming
+        // session traffic over loopback TCP — asserts version pinning,
+        // zero failures and exact admission accounting
+        "finetune-serve" => exp_session::finetune_serve_cmd(&args)?,
         "toy" => {
             exp_toy::fig4(Scale::Quick, seed)?;
         }

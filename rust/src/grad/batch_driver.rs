@@ -36,7 +36,7 @@ use super::{
     GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
 };
 use crate::solvers::batch::BatchSpec;
-use crate::solvers::dynamics::Dynamics;
+use crate::solvers::dynamics::{Dynamics, ScopedDynamics};
 use crate::solvers::Solver;
 use crate::util::mem::MemTracker;
 use crate::util::pool;
@@ -230,9 +230,11 @@ pub fn grad_batched(
 /// count) — the training-throughput path for host-only dynamics.
 ///
 /// Requires a separable (per-row) loss head.  Aggregate `f`/vjp counts
-/// are measured around the whole pooled pass (the per-shard deltas of a
-/// shared dynamics interleave, so `stats.fwd.f_evals` is folded into the
-/// global `stats.f_evals` rather than split per phase).
+/// are measured on a call-local [`ScopedDynamics`] window around the
+/// whole pooled pass — exact even when other threads share `dynamics` —
+/// but the per-shard split of a pass is not separable, so
+/// `stats.fwd.f_evals` is folded into the global `stats.f_evals` rather
+/// than split per phase.
 #[allow(clippy::too_many_arguments)]
 pub fn grad_batched_pooled(
     method: &(dyn GradMethod + Sync),
@@ -264,9 +266,12 @@ pub fn grad_batched_pooled(
     let shards: Vec<(usize, usize)> = pool::shard_ranges(bspec.batch, workers)
         .filter(|(s, e)| e > s)
         .collect();
-    let c = dynamics.counters();
-    let f0 = c.f_evals.get();
-    let v0 = c.vjp_evals.get();
+    // scoped counter window: this pass's evaluations are counted on a
+    // call-local scope, so a concurrent serve worker (or a second
+    // fine-tune loop) sharing `dynamics` never bleeds into these stats —
+    // the inner counters still accrue for registry-wide accounting
+    let scoped = ScopedDynamics::new(dynamics);
+    let dynamics: &(dyn Dynamics + Sync) = &scoped;
     let results: Vec<Result<BatchGradResult>> = pool::par_map(&shards, |&(s, e)| {
         let sub = BatchSpec::new(e - s, bspec.n_z);
         method.grad_batch(
@@ -303,11 +308,10 @@ pub fn grad_batched_pooled(
         out.per_sample_fwd.extend(part.per_sample_fwd);
     }
     out.batch = bspec.batch;
-    // exact totals from the global counter deltas (shard-local deltas
-    // interleave under concurrency; saturating in case a third-party
-    // method's grad_batch resets the counters mid-flight)
-    out.stats.f_evals = c.f_evals.get().saturating_sub(f0);
-    out.stats.vjp_evals = c.vjp_evals.get().saturating_sub(v0);
+    // exact totals from the scoped counters (shard-local deltas
+    // interleave under concurrency; the scope sums them atomically)
+    out.stats.f_evals = scoped.counters().f_evals.get();
+    out.stats.vjp_evals = scoped.counters().vjp_evals.get();
     out.stats.fwd.f_evals = 0;
     out.stats.peak_mem_bytes = tracker.peak_bytes();
     Ok(out)
@@ -408,9 +412,9 @@ pub fn grad_obs_batched_pooled(
     let shards: Vec<(usize, usize)> = pool::shard_ranges(bspec.batch, workers)
         .filter(|(s, e)| e > s)
         .collect();
-    let c = dynamics.counters();
-    let f0 = c.f_evals.get();
-    let v0 = c.vjp_evals.get();
+    // scoped counter window — see grad_batched_pooled
+    let scoped = ScopedDynamics::new(dynamics);
+    let dynamics: &(dyn Dynamics + Sync) = &scoped;
     let results: Vec<Result<BatchObsGradResult>> = pool::par_map(&shards, |&(s, e)| {
         let sub = BatchSpec::new(e - s, bspec.n_z);
         method.grad_obs_batch(
@@ -450,9 +454,9 @@ pub fn grad_obs_batched_pooled(
         out.per_sample_fwd.extend(part.per_sample_fwd);
     }
     out.batch = bspec.batch;
-    // exact totals from the global counter deltas (see grad_batched_pooled)
-    out.stats.f_evals = c.f_evals.get().saturating_sub(f0);
-    out.stats.vjp_evals = c.vjp_evals.get().saturating_sub(v0);
+    // exact totals from the scoped counters (see grad_batched_pooled)
+    out.stats.f_evals = scoped.counters().f_evals.get();
+    out.stats.vjp_evals = scoped.counters().vjp_evals.get();
     out.stats.fwd.f_evals = 0;
     out.stats.peak_mem_bytes = tracker.peak_bytes();
     Ok(out)

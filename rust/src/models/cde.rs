@@ -73,35 +73,7 @@ impl NeuralCde {
         times: &[f64],
         values: &[f32],
     ) -> (Vec<f32>, Vec<f32>) {
-        let knots: Vec<f64> = (0..=self.pieces)
-            .map(|k| self.t_total * k as f64 / self.pieces as f64)
-            .collect();
-        let mut coeffs = Vec::with_capacity(self.channels * self.pieces * 4);
-        let mut x0 = Vec::with_capacity(self.channels);
-        for c in 0..self.channels {
-            let mut ys: Vec<f64> = (0..times.len())
-                .map(|k| values[k * self.channels + c] as f64)
-                .collect();
-            // Standardize feature channels (time channel c = 0 stays raw):
-            // the spline is differentiated by the CDE, so the channel
-            // *scale* directly multiplies dz/dt — unnormalized log-energies
-            // over a unit interval make Ẋ ~ O(40) and blow the state up.
-            if c > 0 {
-                let mean = ys.iter().sum::<f64>() / ys.len() as f64;
-                let var = ys.iter().map(|y| (y - mean).powi(2)).sum::<f64>()
-                    / ys.len() as f64;
-                let scale = 0.15 / var.sqrt().max(1e-6);
-                for y in &mut ys {
-                    *y = (*y - mean) * scale;
-                }
-            }
-            let irregular = CubicSpline::fit(times, &ys);
-            let uniform_ys: Vec<f64> = knots.iter().map(|&t| irregular.eval(t)).collect();
-            let uniform = CubicSpline::fit(&knots, &uniform_ys);
-            coeffs.extend_from_slice(&uniform.coeffs_flat());
-            x0.push(uniform_ys[0] as f32);
-        }
-        (coeffs, x0)
+        fit_uniform_ctx(times, values, self.channels, self.pieces, self.t_total)
     }
 
     /// Build the batched ctx tensor + initial observations for examples
@@ -230,12 +202,161 @@ impl NeuralCde {
     }
 }
 
+/// The host-side control-path fit shared by [`NeuralCde::fit_example`]
+/// and [`StreamingPath`]: interpolate the irregular observations by a
+/// natural spline on their own knots, then re-fit on the uniform grid
+/// the device graph indexes.  Feature channels (`c > 0`) are
+/// standardized — the spline is differentiated by the CDE, so channel
+/// *scale* directly multiplies `dz/dt`.  Returns
+/// `(uniform-grid coefficients [channels × pieces × 4], X(0) [channels])`.
+pub fn fit_uniform_ctx(
+    times: &[f64],
+    values: &[f32],
+    channels: usize,
+    pieces: usize,
+    t_total: f64,
+) -> (Vec<f32>, Vec<f32>) {
+    let knots: Vec<f64> = (0..=pieces)
+        .map(|k| t_total * k as f64 / pieces as f64)
+        .collect();
+    let mut coeffs = Vec::with_capacity(channels * pieces * 4);
+    let mut x0 = Vec::with_capacity(channels);
+    for c in 0..channels {
+        let mut ys: Vec<f64> = (0..times.len())
+            .map(|k| values[k * channels + c] as f64)
+            .collect();
+        // time channel c = 0 stays raw; see the doc comment for why the
+        // feature channels are standardized
+        if c > 0 {
+            let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+            let var = ys.iter().map(|y| (y - mean).powi(2)).sum::<f64>()
+                / ys.len() as f64;
+            let scale = 0.15 / var.sqrt().max(1e-6);
+            for y in &mut ys {
+                *y = (*y - mean) * scale;
+            }
+        }
+        let irregular = CubicSpline::fit(times, &ys);
+        let uniform_ys: Vec<f64> = knots.iter().map(|&t| irregular.eval(t)).collect();
+        let uniform = CubicSpline::fit(&knots, &uniform_ys);
+        coeffs.extend_from_slice(&uniform.coeffs_flat());
+        x0.push(uniform_ys[0] as f32);
+    }
+    (coeffs, x0)
+}
+
+/// Incremental control-path builder for streaming CDE inference: buffer
+/// irregular observation rows as they arrive over a session, then fit
+/// the same uniform-grid coefficient tensor the batch path builds — the
+/// streaming client never needs the whole sequence up front, and
+/// [`StreamingPath::fit_ctx`] over incrementally pushed rows is
+/// identical to a one-shot [`fit_uniform_ctx`] over the full arrays
+/// (pinned by the tests).
+#[derive(Debug, Clone)]
+pub struct StreamingPath {
+    channels: usize,
+    times: Vec<f64>,
+    /// Row-major `[k × channels]`, matching `SequenceDataset::values`.
+    values: Vec<f32>,
+}
+
+impl StreamingPath {
+    pub fn new(channels: usize) -> StreamingPath {
+        assert!(channels > 0, "a control path needs at least one channel");
+        StreamingPath {
+            channels,
+            times: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Append one observation row at time `t` (strictly after the last).
+    pub fn push(&mut self, t: f64, x: &[f32]) -> Result<()> {
+        anyhow::ensure!(t.is_finite(), "observation time {t} is not finite");
+        anyhow::ensure!(
+            x.len() == self.channels,
+            "observation row has {} channels, path has {}",
+            x.len(),
+            self.channels
+        );
+        if let Some(&last) = self.times.last() {
+            anyhow::ensure!(
+                t > last,
+                "observation times must be strictly increasing ({t} after {last})"
+            );
+        }
+        self.times.push(t);
+        self.values.extend_from_slice(x);
+        Ok(())
+    }
+
+    /// Observation rows buffered so far.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// The buffered observation times.
+    pub fn times(&self) -> &[f64] {
+        &self.times
+    }
+
+    /// Fit the uniform-grid coefficients over everything pushed so far —
+    /// bit-identical to [`fit_uniform_ctx`] on the same data.  Needs at
+    /// least two rows (a spline through fewer is underdetermined).
+    pub fn fit_ctx(&self, pieces: usize, t_total: f64) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            self.times.len() >= 2,
+            "control-path fit needs ≥ 2 observations, have {}",
+            self.times.len()
+        );
+        Ok(fit_uniform_ctx(
+            &self.times,
+            &self.values,
+            self.channels,
+            pieces,
+            t_total,
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::speech::{self, SpeechSpec};
     use crate::grad::IvpSpec;
     use crate::solvers::by_name;
+
+    #[test]
+    fn streaming_path_matches_one_shot_fit() {
+        // tier-1 (no engine): rows pushed one at a time must fit to the
+        // exact coefficients of the one-shot batch-path fit
+        let channels = 3;
+        let times: Vec<f64> = vec![0.0, 0.13, 0.31, 0.48, 0.77, 1.0];
+        let mut values = Vec::new();
+        for (k, &t) in times.iter().enumerate() {
+            values.push(t as f32); // time channel
+            values.push((1.7 * t).sin() as f32 + 0.1 * k as f32);
+            values.push((0.9 * t).cos() as f32 - 0.05 * k as f32);
+        }
+        let mut path = StreamingPath::new(channels);
+        for (k, &t) in times.iter().enumerate() {
+            path.push(t, &values[k * channels..(k + 1) * channels]).unwrap();
+        }
+        assert_eq!(path.len(), times.len());
+        let (inc_ctx, inc_x0) = path.fit_ctx(8, 1.0).unwrap();
+        let (one_ctx, one_x0) = fit_uniform_ctx(&times, &values, channels, 8, 1.0);
+        assert_eq!(inc_ctx, one_ctx, "coefficients must be bit-identical");
+        assert_eq!(inc_x0, one_x0);
+
+        // ordering and shape violations are refused
+        assert!(path.clone().push(0.5, &[0.0; 3]).is_err(), "non-increasing t");
+        assert!(path.clone().push(1.5, &[0.0; 2]).is_err(), "wrong width");
+        assert!(StreamingPath::new(2).fit_ctx(4, 1.0).is_err(), "underdetermined");
+    }
 
     fn engine() -> Option<Rc<Engine>> {
         Engine::from_env_or_skip("model test")

@@ -274,6 +274,101 @@ impl LatentOde {
     }
 }
 
+/// Streaming latent filter: the host-side, embeddable face of the serve
+/// layer's session machinery (DESIGN.md §12).  Holds a warm
+/// [`ResumeState`](crate::solvers::integrate::ResumeState) +
+/// [`SolverWorkspace`](crate::solvers::workspace::SolverWorkspace) over
+/// any [`Dynamics`] and advances the latent trajectory **incrementally**
+/// as irregular observation events arrive — each [`LatentFilter::advance`]
+/// integrates only `(t_last, t_new]`, never re-solving from `t0`, and the
+/// concatenated result is bitwise-identical to a one-shot
+/// `integrate_obs` over all event times.
+///
+/// This is what a `mali serve` session does per connection, without the
+/// server: use it to embed streaming filtering in a training loop, a
+/// simulator, or a test.
+pub struct LatentFilter<'a> {
+    dynamics: &'a dyn Dynamics,
+    solver: Box<dyn crate::solvers::Solver + Send + Sync>,
+    mode: crate::solvers::integrate::StepMode,
+    resume: crate::solvers::integrate::ResumeState,
+    ws: crate::solvers::workspace::SolverWorkspace,
+    stats: crate::solvers::integrate::IntStats,
+}
+
+impl<'a> LatentFilter<'a> {
+    /// A fresh filter at `(t0, z0)`.  `solver` is a registry name
+    /// (`"alf"`, `"rk4"`, …); the solver's augmented state is built
+    /// lazily at the first advance.
+    pub fn new(
+        dynamics: &'a dyn Dynamics,
+        solver: &str,
+        t0: f64,
+        z0: Vec<f32>,
+        mode: crate::solvers::integrate::StepMode,
+    ) -> Result<LatentFilter<'a>> {
+        anyhow::ensure!(
+            z0.len() == dynamics.dim(),
+            "z0 has {} elements, dynamics is {}-dimensional",
+            z0.len(),
+            dynamics.dim()
+        );
+        Ok(LatentFilter {
+            dynamics,
+            solver: crate::solvers::by_name(solver)?,
+            mode,
+            resume: crate::solvers::integrate::ResumeState::new(t0, z0),
+            ws: crate::solvers::workspace::SolverWorkspace::new(),
+            stats: crate::solvers::integrate::IntStats::default(),
+        })
+    }
+
+    /// Advance to each event time in `times` (strictly beyond the
+    /// current barrier, in the session's integration direction),
+    /// appending the `dim`-wide state at each event to `frames`.  After
+    /// the first call, an advance allocates nothing beyond what `frames`
+    /// itself grows.  On error the carried state stays at the last
+    /// successful barrier and the filter is still usable.
+    pub fn advance(&mut self, times: &[f64], frames: &mut Vec<f32>) -> Result<()> {
+        struct Append<'b>(&'b mut Vec<f32>);
+        impl StepObserver for Append<'_> {
+            fn on_observation(&mut self, _k: usize, _t: f64, state: &State) {
+                self.0.extend_from_slice(&state.z);
+            }
+        }
+        let mut obs = Append(frames);
+        let s = crate::solvers::integrate::integrate_obs_resume_ws(
+            self.solver.as_ref(),
+            self.dynamics,
+            &mut self.resume,
+            times,
+            &self.mode,
+            &crate::solvers::integrate::ErrorNorm::Full,
+            &mut obs,
+            &mut self.ws,
+        )?;
+        self.stats.n_accepted += s.n_accepted;
+        self.stats.n_trials += s.n_trials;
+        self.stats.f_evals += s.f_evals;
+        Ok(())
+    }
+
+    /// Current barrier time (the last delivered event, or `t0`).
+    pub fn t(&self) -> f64 {
+        self.resume.t()
+    }
+
+    /// Current state `z(t)`.
+    pub fn z(&self) -> &[f32] {
+        self.resume.z()
+    }
+
+    /// Cumulative integration stats across every advance.
+    pub fn stats(&self) -> &crate::solvers::integrate::IntStats {
+        &self.stats
+    }
+}
+
 /// RNN / GRU sequence baselines (Table 4): one fused loss+grad executable.
 pub struct SeqBaseline {
     engine: Rc<Engine>,
@@ -398,6 +493,61 @@ mod tests {
         assert_eq!(p.len(), tgt.len());
         let mse = LatentOde::mse(&p, &tgt);
         assert!(mse.is_finite() && mse > 0.0);
+    }
+
+    #[test]
+    fn latent_filter_matches_one_shot_bitwise() {
+        // tier-1 (no engine): the streaming filter over chunked event
+        // times must reproduce the one-shot observation solve bitwise —
+        // frames, final state, and step/trial counts
+        use crate::solvers::dynamics::MlpDynamics;
+        use crate::solvers::integrate::{
+            integrate_obs, ErrorNorm, ObsGrid, StepMode,
+        };
+        let mut rng = Rng::new(11);
+        let dynamics = MlpDynamics::new(4, 8, &mut rng);
+        let z0: Vec<f32> = (0..4).map(|i| 0.3 + 0.1 * i as f32).collect();
+        let times = [0.15, 0.4, 0.55, 0.9, 1.3];
+        for mode in [
+            StepMode::Fixed { h: 0.1 },
+            StepMode::adaptive(1e-5, 1e-7),
+        ] {
+            let mut filter =
+                LatentFilter::new(&dynamics, "alf", 0.0, z0.clone(), mode.clone()).unwrap();
+            let mut frames = Vec::new();
+            filter.advance(&times[..2], &mut frames).unwrap();
+            filter.advance(&times[2..3], &mut frames).unwrap();
+            filter.advance(&times[3..], &mut frames).unwrap();
+            assert_eq!(frames.len(), times.len() * 4);
+
+            struct Frames(Vec<f32>);
+            impl StepObserver for Frames {
+                fn on_observation(&mut self, _k: usize, _t: f64, state: &State) {
+                    self.0.extend_from_slice(&state.z);
+                }
+            }
+            let solver = by_name("alf").unwrap();
+            let grid = ObsGrid::new(times.to_vec()).unwrap();
+            let s0 = solver.init(&dynamics, 0.0, &z0);
+            let mut one_shot = Frames(Vec::new());
+            let (s_end, stats) = integrate_obs(
+                solver.as_ref(),
+                &dynamics,
+                0.0,
+                *times.last().unwrap(),
+                s0,
+                &mode,
+                &ErrorNorm::Full,
+                &grid,
+                &mut one_shot,
+            )
+            .unwrap();
+            assert_eq!(frames, one_shot.0, "per-event frames ({mode:?})");
+            assert_eq!(filter.z(), &s_end.z[..], "final state ({mode:?})");
+            assert_eq!(filter.t(), *times.last().unwrap());
+            assert_eq!(filter.stats().n_accepted, stats.n_accepted, "{mode:?}");
+            assert_eq!(filter.stats().n_trials, stats.n_trials, "{mode:?}");
+        }
     }
 
     #[test]

@@ -44,9 +44,13 @@ pub fn fill_next_batch(
     let Some(head) = queue.pop_wait() else {
         return false;
     };
+    // session steps (`session_id != 0`) never coalesce: two steps of one
+    // session share the class Arc but are sequentially dependent, so each
+    // is served solo (the head barrier below plus this early return)
+    let head_is_session = head.session_id != 0;
     let class = head.class.clone();
     out.push(head);
-    if cfg.max_batch <= 1 {
+    if cfg.max_batch <= 1 || head_is_session {
         return true;
     }
     let deadline = Instant::now() + cfg.max_wait;
@@ -57,9 +61,11 @@ pub fn fill_next_batch(
         // Arc identity first (the documented build-once-share-the-Arc
         // pattern makes the common case one pointer compare under the
         // producers' lock); the key compare covers separately built but
-        // identical classes.
+        // identical classes.  Session steps are barred from joining any
+        // batch (and from seeding one — see the head check above).
         let compatible = |p: &Pending| {
-            Arc::ptr_eq(&p.class, &class) || p.class.key() == class.key()
+            p.session_id == 0
+                && (Arc::ptr_eq(&p.class, &class) || p.class.key() == class.key())
         };
         let gen = queue.push_generation();
         queue.pop_matching_into(&compatible, cfg.max_batch - out.len(), out);

@@ -142,14 +142,21 @@ pub struct ServeMetrics {
     /// Controller trials across all requests.
     pub trials: u64,
     /// Dynamics `f` evaluations (per-sample units).  Worker-local values
-    /// are per-batch counter deltas on a possibly *shared* model, so they
-    /// can include concurrent workers' evaluations; `Server::shutdown`
-    /// overwrites the merged value with the exact registry-wide
-    /// serving-window delta ([`ModelRegistry::total_f_evals`]).  Exact as
-    /// recorded only for a single direct-driven worker.
+    /// are exact: each batch (and each session step) counts on a
+    /// worker-local [`ScopedDynamics`] window, so concurrent workers
+    /// sharing one model never bleed into each other's counts.
+    /// `Server::shutdown` still overwrites the merged value with the
+    /// registry-wide serving-window delta
+    /// ([`ModelRegistry::total_f_evals`]) — the two agree, but the
+    /// registry delta also covers work outside any worker (paranoia, not
+    /// correction).
     ///
+    /// [`ScopedDynamics`]: crate::solvers::dynamics::ScopedDynamics
     /// [`ModelRegistry::total_f_evals`]: crate::serve::ModelRegistry::total_f_evals
     pub f_evals: u64,
+    /// Session steps served (each is one solo "batch"; also counted in
+    /// `requests`/`batches`/`batch_rows`).
+    pub session_steps: u64,
     /// Requests failed (integration error surfaced to the caller).
     pub failed: u64,
     /// Submissions shed at the bounded queue.  Workers cannot observe
@@ -206,6 +213,7 @@ impl ServeMetrics {
         self.steps += other.steps;
         self.trials += other.trials;
         self.f_evals += other.f_evals;
+        self.session_steps += other.session_steps;
         self.failed += other.failed;
         self.shed += other.shed;
         self.queue_wait.merge(&other.queue_wait);
@@ -242,6 +250,7 @@ impl ServeMetrics {
             ("steps", Json::Num(self.steps as f64)),
             ("trials", Json::Num(self.trials as f64)),
             ("f_evals", Json::Num(self.f_evals as f64)),
+            ("session_steps", Json::Num(self.session_steps as f64)),
             ("elapsed_s", Json::Num(el)),
             ("requests_per_sec", Json::Num(rate(self.requests))),
             ("steps_per_sec", Json::Num(rate(self.steps))),

@@ -35,7 +35,16 @@
 //!   sockets.  Request envelopes are pooled per connection and responses
 //!   travel back through [`CompletionSink`], keeping the warmed
 //!   read → submit → respond loop at zero heap allocations
-//!   (`tests/alloc_serve.rs`).
+//!   (`tests/alloc_serve.rs`);
+//! * [`session`] — streaming online inference (DESIGN.md §12): long-lived
+//!   sessions hold warm per-session solver state
+//!   ([`ResumeState`](crate::solvers::integrate::ResumeState)) and
+//!   integrate **incrementally** to each new irregular event, bitwise
+//!   identical to a one-shot solve over the concatenated grid
+//!   (`tests/session.rs`); the registry is **versioned** —
+//!   [`ModelRegistry::hot_swap`] publishes copy-on-write θ snapshots
+//!   without draining, while in-flight batches and open sessions keep the
+//!   version they pinned at dispatch.
 //!
 //! # Example
 //!
@@ -77,12 +86,14 @@
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
+pub mod session;
 pub mod transport;
 pub mod worker;
 
 pub use batcher::BatcherCfg;
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use queue::{BoundedQueue, PushError};
+pub use session::{SessionEntry, SessionTable};
 pub use worker::ServeWorker;
 
 use crate::solvers::dynamics::Dynamics;
@@ -437,6 +448,16 @@ pub struct Pending {
     /// Caller correlation id (the transport's pipelining key; echoed
     /// back verbatim, unused by in-process delivery).
     pub req_id: u64,
+    /// `0` for one-shot requests; a [`session::SessionTable`] id for an
+    /// incremental session step.  A non-zero id is a batcher coalescing
+    /// barrier — session steps always run solo (they are sequentially
+    /// dependent on the session's carried state).
+    pub session_id: u64,
+    /// Event times of a session step (empty for one-shot requests): the
+    /// advance integrates to each and snapshots the state there, into
+    /// `obs` rows `[k, n_z]`; `z_final` receives the state at the last
+    /// event.  Pooled like the other buffers.
+    pub times: Vec<f64>,
     /// Raw [`ModelId`] for transport quota bookkeeping (set at submit by
     /// the connection; meaningless for in-process submissions).
     pub(crate) model_raw: u32,
@@ -466,6 +487,8 @@ impl Pending {
             n_accepted: 0,
             n_trials: 0,
             req_id: 0,
+            session_id: 0,
+            times: Vec::new(),
             model_raw: 0,
             queue_wait_s: 0.0,
             service_s: 0.0,
@@ -493,10 +516,15 @@ impl Pending {
     /// Re-arm counters/timing for reuse under a new correlation id; the
     /// transport decodes the next frame's `z0` directly into the kept
     /// buffer, so unlike [`Pending::reset`] no state copy happens here.
+    /// Session routing is cleared (the session path re-stamps it after
+    /// re-arming) so a pooled envelope can alternate between one-shot and
+    /// session traffic.
     pub fn rearm(&mut self, req_id: u64) {
         self.req_id = req_id;
         self.n_accepted = 0;
         self.n_trials = 0;
+        self.session_id = 0;
+        self.times.clear();
         self.queue_wait_s = 0.0;
         self.service_s = 0.0;
         self.enqueued = Instant::now();
@@ -513,6 +541,8 @@ impl Pending {
             n_accepted: 0,
             n_trials: 0,
             req_id: 0,
+            session_id: 0,
+            times: Vec::new(),
             model_raw: 0,
             queue_wait_s: 0.0,
             service_s: 0.0,
@@ -558,16 +588,78 @@ impl ModelId {
 /// same address.
 static REGISTRY_TAG: AtomicU64 = AtomicU64::new(1);
 
-/// Name → dynamics table the workers serve from.  Registered once before
-/// [`Server::start`]; serving never mutates models (inference reads
-/// parameters only), so one instance is shared by every worker thread.
-/// Names are interned: [`ModelRegistry::resolve`] turns a name into a
-/// dense [`ModelId`] once (handshake / class construction) and
-/// [`ModelRegistry::get_by_id`] is then an index into a `Vec` — no
-/// per-request string hashing.
+/// One immutable published version of a model: the dynamics plus a
+/// monotone version number.  Workers pin a version per batch
+/// ([`ModelRegistry::snapshot`]) and sessions pin one at open — an
+/// `Arc<ModelVersion>` held across a solve is the **version-pinning
+/// rule**: [`ModelRegistry::hot_swap`] can publish new parameters at any
+/// time without changing the θ an already-dispatched batch sees.
+pub struct ModelVersion {
+    /// Monotone per-slot version (1 for the initially registered model).
+    version: u64,
+    dynamics: Box<dyn Dynamics + Send + Sync>,
+}
+
+impl ModelVersion {
+    /// The monotone version number of this snapshot.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The pinned dynamics.
+    pub fn dynamics(&self) -> &(dyn Dynamics + Send + Sync) {
+        self.dynamics.as_ref()
+    }
+}
+
+impl std::ops::Deref for ModelVersion {
+    type Target = dyn Dynamics + Send + Sync;
+
+    fn deref(&self) -> &Self::Target {
+        self.dynamics.as_ref()
+    }
+}
+
+impl fmt::Debug for ModelVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ModelVersion")
+            .field("version", &self.version)
+            .finish_non_exhaustive()
+    }
+}
+
+/// One registered name: the current published version plus the retired
+/// versions still pinned by in-flight work.
+struct ModelSlot {
+    name: String,
+    /// The version new pins get; swapped wholesale by
+    /// [`ModelRegistry::hot_swap`] (copy-on-write, never in place).
+    current: Mutex<Arc<ModelVersion>>,
+    /// Retired versions still referenced by in-flight batches/sessions —
+    /// kept so [`ModelRegistry::total_f_evals`] stays exact and monotone
+    /// while old-θ work drains.  Pruned inside `hot_swap` once the last
+    /// pin drops, so growth is bounded by concurrently in-flight work.
+    retired: Mutex<Vec<Arc<ModelVersion>>>,
+    /// `f`-eval counts of fully-drained retired versions, folded in at
+    /// prune time.
+    retired_f: AtomicU64,
+}
+
+/// Name → dynamics table the workers serve from.  Names are interned:
+/// [`ModelRegistry::resolve`] turns a name into a dense [`ModelId`] once
+/// (handshake / class construction) and [`ModelRegistry::snapshot`] is
+/// then an index + `Arc` clone — no per-request string hashing.
+///
+/// The registry is **versioned**: each name holds a current
+/// [`ModelVersion`] behind copy-on-write.  Serving pins a version per
+/// batch (and per session); [`ModelRegistry::hot_swap`] clones the
+/// current dynamics ([`Dynamics::clone_box`]), installs new parameters
+/// on the clone and publishes it as `version + 1` — in-flight work keeps
+/// the version it pinned, so parameter updates never block or corrupt
+/// inference traffic (ADR-007).
 pub struct ModelRegistry {
-    /// Dense id → (name, dynamics); ids are indices, never reused.
-    models: Vec<(String, Box<dyn Dynamics + Send + Sync>)>,
+    /// Dense id → slot; ids are indices, never reused.
+    models: Vec<ModelSlot>,
     /// Name → dense id (interning map; touched at registration and
     /// handshake only).
     index: BTreeMap<String, u32>,
@@ -591,17 +683,85 @@ impl ModelRegistry {
     }
 
     /// Register `dynamics` under `name`.  Replacing an existing name
-    /// keeps its [`ModelId`] (ids are stable), a new name gets the next
-    /// dense id.
+    /// keeps its [`ModelId`] (ids are stable) and bumps the slot's
+    /// version; a new name gets the next dense id at version 1.
     pub fn register(&mut self, name: &str, dynamics: Box<dyn Dynamics + Send + Sync>) {
         match self.index.get(name) {
-            Some(&id) => self.models[id as usize].1 = dynamics,
+            Some(&id) => {
+                let slot = &mut self.models[id as usize];
+                let current = slot.current.get_mut().expect("registry poisoned");
+                let version = current.version + 1;
+                let old = std::mem::replace(current, Arc::new(ModelVersion { version, dynamics }));
+                Self::retire(slot, old);
+            }
             None => {
                 let id = u32::try_from(self.models.len()).expect("registry overflow");
-                self.models.push((name.to_string(), dynamics));
+                self.models.push(ModelSlot {
+                    name: name.to_string(),
+                    current: Mutex::new(Arc::new(ModelVersion { version: 1, dynamics })),
+                    retired: Mutex::new(Vec::new()),
+                    retired_f: AtomicU64::new(0),
+                });
                 self.index.insert(name.to_string(), id);
             }
         }
+    }
+
+    /// Park a replaced version on the slot's retired list and prune every
+    /// retired version whose last pin has dropped (folding its counters
+    /// into the slot base, keeping [`ModelRegistry::total_f_evals`]
+    /// exact and monotone).
+    fn retire(slot: &ModelSlot, old: Arc<ModelVersion>) {
+        let mut retired = slot.retired.lock().expect("registry poisoned");
+        retired.push(old);
+        retired.retain(|r| {
+            if Arc::strong_count(r) == 1 {
+                slot.retired_f
+                    .fetch_add(r.dynamics.counters().f_evals.get(), Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Publish new parameters for `name` without draining: clone the
+    /// current version ([`Dynamics::clone_box`]), install `params` on the
+    /// clone, and swap it in as the next version.  In-flight batches and
+    /// open sessions keep the version they pinned — the swap changes only
+    /// what *future* pins see.  Returns the new version number.
+    ///
+    /// Fails for unknown names, models without a host-side clone
+    /// (`clone_box() == None`), and parameter-length mismatches.
+    pub fn hot_swap(&self, name: &str, params: &[f32]) -> Result<u64> {
+        let Some(id) = self.resolve(name) else {
+            anyhow::bail!("unknown model '{name}' (registered: {:?})", self.names());
+        };
+        let slot = &self.models[id.0 as usize];
+        let mut current = slot.current.lock().expect("registry poisoned");
+        ensure!(
+            params.len() == current.dynamics.param_dim(),
+            "hot_swap('{name}'): got {} parameters, model has param_dim {}",
+            params.len(),
+            current.dynamics.param_dim()
+        );
+        let Some(mut fresh) = current.dynamics.clone_box() else {
+            anyhow::bail!(
+                "model '{name}' is not hot-swappable (no host-side clone); \
+                 re-register it instead"
+            );
+        };
+        fresh.set_params(params);
+        let version = current.version + 1;
+        let old = std::mem::replace(
+            &mut *current,
+            Arc::new(ModelVersion {
+                version,
+                dynamics: fresh,
+            }),
+        );
+        Self::retire(slot, old);
+        Ok(version)
     }
 
     /// Intern a model name: the one string lookup, done at handshake or
@@ -610,23 +770,34 @@ impl ModelRegistry {
         self.index.get(name).copied().map(ModelId)
     }
 
-    /// Look up a model by name (one-shot convenience; request paths
-    /// should [`ModelRegistry::resolve`] once and use
-    /// [`ModelRegistry::get_by_id`]).
-    pub fn get(&self, name: &str) -> Option<&(dyn Dynamics + Send + Sync)> {
-        self.resolve(name).and_then(|id| self.get_by_id(id))
+    /// Look up the current version by name (one-shot convenience; request
+    /// paths should [`ModelRegistry::resolve`] once and use
+    /// [`ModelRegistry::snapshot`]).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
+        self.resolve(name).and_then(|id| self.snapshot(id))
     }
 
-    /// Id-keyed lookup: a bounds-checked `Vec` index, the per-request
-    /// fast path.  `None` only for an id minted by a *different*
-    /// registry (larger than this one's table).
-    pub fn get_by_id(&self, id: ModelId) -> Option<&(dyn Dynamics + Send + Sync)> {
-        self.models.get(id.0 as usize).map(|(_, d)| d.as_ref())
+    /// Pin the current version of a model: a bounds-checked `Vec` index
+    /// plus an `Arc` clone, the per-batch fast path.  The returned
+    /// snapshot's θ never changes — see [`ModelRegistry::hot_swap`].
+    /// `None` only for an id minted by a *different* registry (larger
+    /// than this one's table).
+    pub fn snapshot(&self, id: ModelId) -> Option<Arc<ModelVersion>> {
+        self.models
+            .get(id.0 as usize)
+            .map(|slot| slot.current.lock().expect("registry poisoned").clone())
+    }
+
+    /// The current version number of a model.
+    pub fn version_of(&self, id: ModelId) -> Option<u64> {
+        self.models
+            .get(id.0 as usize)
+            .map(|slot| slot.current.lock().expect("registry poisoned").version)
     }
 
     /// The name an id was interned from.
     pub fn name_of(&self, id: ModelId) -> Option<&str> {
-        self.models.get(id.0 as usize).map(|(n, _)| n.as_str())
+        self.models.get(id.0 as usize).map(|s| s.name.as_str())
     }
 
     /// Resolve `class.model` against this registry, memoizing the id on
@@ -663,14 +834,30 @@ impl ModelRegistry {
     }
 
     /// Sum of the `f`-evaluation counters across every registered model
-    /// (per-sample units).  A snapshot pair around a serving window gives
-    /// the **exact** evaluation count even when several workers hit the
-    /// same model concurrently — unlike per-batch counter deltas, which
-    /// interleave (see [`ServeMetrics::f_evals`]).
+    /// (per-sample units), **including** retired versions — folded bases
+    /// for drained versions, live counters for versions still pinned by
+    /// in-flight work — so the total stays exact and monotone across
+    /// [`ModelRegistry::hot_swap`].  A snapshot pair around a serving
+    /// window gives the exact evaluation count even when several workers
+    /// hit the same model concurrently.
     pub fn total_f_evals(&self) -> u64 {
         self.models
             .iter()
-            .map(|(_, m)| m.counters().f_evals.get())
+            .map(|slot| {
+                let mut sum = slot.retired_f.load(Ordering::Relaxed);
+                sum += slot
+                    .current
+                    .lock()
+                    .expect("registry poisoned")
+                    .dynamics
+                    .counters()
+                    .f_evals
+                    .get();
+                for r in slot.retired.lock().expect("registry poisoned").iter() {
+                    sum += r.dynamics.counters().f_evals.get();
+                }
+                sum
+            })
             .sum()
     }
 }
@@ -749,6 +936,7 @@ impl Default for ServerConfig {
 pub struct Server {
     queue: Arc<BoundedQueue<Pending>>,
     registry: Arc<ModelRegistry>,
+    sessions: Arc<SessionTable>,
     workers: Vec<JoinHandle<ServeMetrics>>,
     cfg: ServerConfig,
     /// Registry-wide `f`-eval counter total at startup; shutdown reports
@@ -761,6 +949,7 @@ impl Server {
     /// the handle requests are submitted through.
     pub fn start(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Server {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let sessions = Arc::new(SessionTable::new());
         let bcfg = BatcherCfg {
             max_batch: cfg.max_batch.max(1),
             max_wait: cfg.max_wait,
@@ -774,10 +963,11 @@ impl Server {
             .map(|i| {
                 let queue = queue.clone();
                 let registry = registry.clone();
+                let sessions = sessions.clone();
                 let bcfg = bcfg.clone();
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{i}"))
-                    .spawn(move || worker::worker_loop(&queue, &registry, &bcfg, shards))
+                    .spawn(move || worker::worker_loop(&queue, &registry, &sessions, &bcfg, shards))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -785,6 +975,7 @@ impl Server {
         Server {
             queue,
             registry,
+            sessions,
             workers,
             cfg,
             f_evals_at_start,
@@ -816,6 +1007,9 @@ impl Server {
     /// Delivery follows `pending.delivery`; the queue-wait clock is
     /// restamped here.
     pub fn submit_pooled(&self, mut pending: Pending) -> Result<(), (SubmitError, Pending)> {
+        if pending.session_id != 0 {
+            return self.submit_session_pooled(pending);
+        }
         let class = &pending.class;
         if pending.z0.len() != class.n_z {
             let e = SubmitError::BadRequest(format!(
@@ -837,7 +1031,7 @@ impl Server {
         let Some(model) = self
             .registry
             .resolve_cached(class)
-            .and_then(|id| self.registry.get_by_id(id))
+            .and_then(|id| self.registry.snapshot(id))
         else {
             let e = SubmitError::BadRequest(format!(
                 "unknown model '{}' (registered: {:?})",
@@ -876,6 +1070,114 @@ impl Server {
             )),
             Err(PushError::Closed(p)) => Err((SubmitError::Closed, p)),
         }
+    }
+
+    /// Admission for a session step envelope (`session_id != 0`): the
+    /// session must be live and idle.  z0 is ignored — the worker
+    /// integrates from the session's carried state — so the one-shot z0
+    /// shape checks do not apply; `times` carries the event grid instead.
+    fn submit_session_pooled(&self, mut pending: Pending) -> Result<(), (SubmitError, Pending)> {
+        let Some(entry) = self.sessions.entry(pending.session_id) else {
+            let e = SubmitError::BadRequest(format!(
+                "unknown session id {}",
+                pending.session_id
+            ));
+            return Err((e, pending));
+        };
+        if pending.times.is_empty() {
+            let e = SubmitError::BadRequest("session step carries no event times".to_string());
+            return Err((e, pending));
+        }
+        if pending.times.iter().any(|t| !t.is_finite()) {
+            let e = SubmitError::BadRequest(
+                "session step times contain non-finite values".to_string(),
+            );
+            return Err((e, pending));
+        }
+        // One outstanding step per session: steps are sequentially
+        // dependent, so a concurrent second step is a protocol error —
+        // refused as BadRequest, not Overloaded, to keep shed accounting
+        // exact (nothing was admitted then dropped).
+        if entry
+            .busy
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            let e = SubmitError::BadRequest(format!(
+                "session {} already has a step in flight",
+                pending.session_id
+            ));
+            return Err((e, pending));
+        }
+        pending.enqueued = Instant::now();
+        match self.queue.try_push(pending) {
+            Ok(()) => Ok(()),
+            Err(PushError::Full(p)) => {
+                entry.busy.store(false, Ordering::Release);
+                Err((
+                    SubmitError::Overloaded {
+                        capacity: self.queue.capacity(),
+                    },
+                    p,
+                ))
+            }
+            Err(PushError::Closed(p)) => {
+                entry.busy.store(false, Ordering::Release);
+                Err((SubmitError::Closed, p))
+            }
+        }
+    }
+
+    /// Open a streaming session (see [`session`]): pins the current
+    /// version of `model` and seeds the carried state at `(t0, z0)`.
+    pub fn open_session(
+        &self,
+        model: &str,
+        solver: &str,
+        n_z: usize,
+        t0: f64,
+        mode: StepMode,
+        z0: &[f32],
+    ) -> Result<u64, SubmitError> {
+        self.sessions
+            .open(&self.registry, model, solver, n_z, t0, mode, z0)
+    }
+
+    /// Advance a session through `times` (strictly monotone event times;
+    /// the first may coincide with the session's current barrier).  The
+    /// response carries one observation row per event plus the final
+    /// state, exactly as a one-shot request with that grid would.
+    pub fn session_step(&self, sid: u64, times: &[f64]) -> Result<ResponseHandle, SubmitError> {
+        let Some(class) = self.sessions.class_of(sid) else {
+            return Err(SubmitError::BadRequest(format!("unknown session id {sid}")));
+        };
+        let slot = Arc::new(ResponseSlot::default());
+        let mut pending = Pending::new(class, Vec::new());
+        pending.session_id = sid;
+        pending.times.extend_from_slice(times);
+        pending.delivery = Delivery::Slot(slot.clone());
+        match self.submit_pooled(pending) {
+            Ok(()) => Ok(ResponseHandle(slot)),
+            Err((e, _)) => Err(e),
+        }
+    }
+
+    /// Close a session (idempotent).  A step already in flight completes
+    /// normally — the worker holds its own reference — after which the
+    /// warm state and the pinned model version drop.
+    pub fn close_session(&self, sid: u64) -> bool {
+        self.sessions.close(sid)
+    }
+
+    /// Live session count.
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// The shared session table (transports hold this to open/close
+    /// sessions on behalf of connections).
+    pub fn sessions(&self) -> &Arc<SessionTable> {
+        &self.sessions
     }
 
     /// The model registry this server serves from (transports intern
@@ -1014,14 +1316,74 @@ mod tests {
         let idb = reg.resolve("b").unwrap();
         assert_ne!(ida, idb);
         assert!(reg.resolve("absent").is_none());
-        assert_eq!(reg.get_by_id(ida).unwrap().dim(), 3);
+        assert_eq!(reg.snapshot(ida).unwrap().dim(), 3);
         assert_eq!(reg.name_of(idb), Some("b"));
-        // replacing a name keeps its id; ids from elsewhere miss cleanly
+        // replacing a name keeps its id and bumps the version; ids from
+        // elsewhere miss cleanly
+        assert_eq!(reg.version_of(ida), Some(1));
         reg.register("a", Box::new(LinearToy::new(-0.3, 7)));
         assert_eq!(reg.resolve("a").unwrap(), ida);
-        assert_eq!(reg.get_by_id(ida).unwrap().dim(), 7);
-        assert!(reg.get_by_id(ModelId(99)).is_none());
+        assert_eq!(reg.snapshot(ida).unwrap().dim(), 7);
+        assert_eq!(reg.version_of(ida), Some(2));
+        assert!(reg.snapshot(ModelId(99)).is_none());
         assert_eq!(reg.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn hot_swap_pins_inflight_snapshots_and_bumps_version() {
+        use crate::solvers::dynamics::MlpDynamics;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let mut reg = ModelRegistry::new();
+        reg.register("mlp", Box::new(MlpDynamics::new(3, 4, &mut rng)));
+        let id = reg.resolve("mlp").unwrap();
+        let pinned = reg.snapshot(id).unwrap();
+        assert_eq!(pinned.version(), 1);
+        let theta_before = pinned.params().to_vec();
+
+        // publish new parameters while `pinned` is still held
+        let new_theta = vec![0.125_f32; pinned.param_dim()];
+        let v = reg.hot_swap("mlp", &new_theta).expect("swap succeeds");
+        assert_eq!(v, 2);
+        assert_eq!(reg.version_of(id), Some(2));
+
+        // the in-flight snapshot still sees the θ it started with...
+        assert_eq!(pinned.params(), &theta_before[..], "pinned θ unchanged by hot_swap");
+        // ...while new lookups see the published version
+        let fresh = reg.snapshot(id).unwrap();
+        assert_eq!(fresh.version(), 2);
+        assert_eq!(fresh.params(), &new_theta[..]);
+
+        // bad swaps are refused cleanly
+        assert!(reg.hot_swap("absent", &new_theta).is_err(), "unknown name");
+        assert!(reg.hot_swap("mlp", &new_theta[1..]).is_err(), "wrong width");
+    }
+
+    #[test]
+    fn total_f_evals_is_monotone_across_swaps() {
+        use crate::solvers::dynamics::MlpDynamics;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let mut reg = ModelRegistry::new();
+        reg.register("mlp", Box::new(MlpDynamics::new(2, 3, &mut rng)));
+        let id = reg.resolve("mlp").unwrap();
+        let v1 = reg.snapshot(id).unwrap();
+        let _ = v1.f(0.0, &[1.0, -1.0]);
+        let _ = v1.f(0.0, &[1.0, -1.0]);
+        assert_eq!(reg.total_f_evals(), 2);
+
+        let theta = v1.params().to_vec();
+        reg.hot_swap("mlp", &theta).unwrap();
+        // the retired version is still referenced; its counters still count
+        assert_eq!(reg.total_f_evals(), 2);
+        let _ = v1.f(0.0, &[1.0, -1.0]);
+        assert_eq!(reg.total_f_evals(), 3);
+        drop(v1);
+        // dropping the last reference folds the retired counters in
+        reg.hot_swap("mlp", &theta).unwrap();
+        let fresh = reg.snapshot(id).unwrap();
+        let _ = fresh.f(0.0, &[1.0, -1.0]);
+        assert_eq!(reg.total_f_evals(), 4, "counters survive retirement");
     }
 
     #[test]

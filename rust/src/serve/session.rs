@@ -1,0 +1,217 @@
+//! Long-lived streaming sessions: warm per-session solver state in the
+//! worker pool (DESIGN.md §12).
+//!
+//! A session pins a model version and a solver instance at open time and
+//! carries a [`ResumeState`] — the last accepted `(t, z, v)` plus the
+//! step-size controller's memory — between requests.  Each `SESSION_STEP`
+//! advances the trajectory **incrementally** to the new irregular event
+//! times via
+//! [`integrate_obs_resume_ws`](crate::solvers::integrate::integrate_obs_resume_ws),
+//! instead of re-solving `[t0, t_now]` per request; `tests/session.rs`
+//! pins that the incremental path is bitwise-identical to the one-shot
+//! solve over the concatenated grid.
+//!
+//! Concurrency model:
+//!
+//! * the table maps `session id → Arc<SessionEntry>`; openers and closers
+//!   take the table lock, steppers clone the `Arc` out and never hold it;
+//! * a session admits **one step in flight at a time** (`busy` CAS at
+//!   submit, cleared by the worker after delivery) — steps of one session
+//!   are sequentially dependent by construction, so a second concurrent
+//!   step is a protocol error, not a queueing problem;
+//! * session steps never coalesce with anything in the batcher
+//!   (`Pending::session_id != 0` is a coalescing barrier): two steps of
+//!   one session share the class `Arc` and would otherwise be batched
+//!   together, breaking the sequential dependency;
+//! * closing a session (explicitly, or when its connection dies) removes
+//!   it from the table; a worker mid-step keeps its own `Arc` alive until
+//!   delivery, after which the warm state drops.  The pinned model
+//!   version drops with it, letting
+//!   [`ModelRegistry::hot_swap`](super::ModelRegistry::hot_swap) fold the
+//!   retired version's counters.
+
+use super::{ModelRegistry, ModelVersion, RequestClass, SubmitError};
+use crate::solvers::integrate::{IntStats, ObsGrid, ResumeState, StepMode};
+use crate::solvers::workspace::SolverWorkspace;
+use crate::solvers::Solver;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Everything one session's worker-side step needs, behind one lock:
+/// the resumable integration state, the session's own warm solver +
+/// workspace, and the θ snapshot pinned at open.
+pub struct SessionCore {
+    /// Synthetic request class the session's step envelopes ride (model /
+    /// solver / n_z / mode are real; the span is a placeholder — session
+    /// steps carry their own event times and never coalesce).
+    pub(crate) class: Arc<RequestClass>,
+    /// The model version pinned at `SESSION_OPEN`: every step of this
+    /// session sees the same θ, whatever `hot_swap` publishes meanwhile —
+    /// the one-shot-equivalence guarantee needs a single θ.
+    pub(crate) model: Arc<ModelVersion>,
+    /// The session's own solver instance (warm, never shared).
+    pub(crate) solver: Box<dyn Solver + Send + Sync>,
+    /// Carried integration state (see [`ResumeState`]).
+    pub(crate) resume: ResumeState,
+    /// Warm per-session workspace: after the first step, an incremental
+    /// advance allocates nothing (`tests/alloc_serve.rs`).
+    pub(crate) ws: SolverWorkspace,
+    /// Cumulative integration stats across every step so far.
+    pub(crate) stats: IntStats,
+    /// Steps served.
+    pub(crate) steps: u64,
+    /// Set when a step failed mid-advance: the carried state may sit at a
+    /// non-barrier point, so every later step is refused.
+    pub(crate) poisoned: bool,
+}
+
+/// One live session: the lockable core plus the single-step-in-flight
+/// admission flag.
+pub struct SessionEntry {
+    pub(crate) core: Mutex<SessionCore>,
+    /// One outstanding step per session: set by CAS at submit, cleared by
+    /// the worker after delivery (or by a failed enqueue).
+    pub(crate) busy: AtomicBool,
+}
+
+impl SessionEntry {
+    /// The model version this session pinned at open.
+    pub fn pinned_version(&self) -> u64 {
+        self.core.lock().expect("session poisoned").model.version()
+    }
+
+    /// Current barrier time of the carried trajectory.
+    pub fn t(&self) -> f64 {
+        self.core.lock().expect("session poisoned").resume.t()
+    }
+}
+
+/// The shared session table: one per server, shared by every worker and
+/// the transport layer.
+#[derive(Default)]
+pub struct SessionTable {
+    slots: Mutex<BTreeMap<u64, Arc<SessionEntry>>>,
+    /// Session ids are minted here; `0` is reserved as "no session"
+    /// ([`Pending::session_id`](super::Pending::session_id)).
+    next_id: AtomicU64,
+}
+
+impl SessionTable {
+    pub fn new() -> SessionTable {
+        SessionTable::default()
+    }
+
+    /// Open a session: validate the shape against `registry`, pin the
+    /// current model version, build the session's solver, and insert the
+    /// warm state.  Returns the new session id (> 0).
+    pub fn open(
+        &self,
+        registry: &ModelRegistry,
+        model: &str,
+        solver: &str,
+        n_z: usize,
+        t0: f64,
+        mode: StepMode,
+        z0: &[f32],
+    ) -> Result<u64, SubmitError> {
+        if z0.len() != n_z {
+            return Err(SubmitError::BadRequest(format!(
+                "z0 has {} elements, session expects n_z = {n_z}",
+                z0.len()
+            )));
+        }
+        if z0.iter().any(|v| !v.is_finite()) {
+            return Err(SubmitError::BadRequest(
+                "z0 contains non-finite components".to_string(),
+            ));
+        }
+        if !t0.is_finite() {
+            return Err(SubmitError::BadRequest(format!(
+                "session t0 = {t0} is not finite"
+            )));
+        }
+        // The synthetic class validates solver name + mode parameters and
+        // gives the session's step envelopes a real class to ride through
+        // the queue/batcher machinery.  The span is a placeholder: steps
+        // carry their own event times.
+        let class = RequestClass::new(model, solver, n_z, t0, t0 + 1.0, mode, ObsGrid::none())
+            .map_err(|e| SubmitError::BadRequest(e.to_string()))?;
+        let Some(snapshot) = registry.resolve(model).and_then(|id| registry.snapshot(id)) else {
+            return Err(SubmitError::BadRequest(format!(
+                "unknown model '{model}' (registered: {:?})",
+                registry.names()
+            )));
+        };
+        if snapshot.dynamics().is_device_batched() {
+            return Err(SubmitError::BadRequest(format!(
+                "model '{model}' is device-batched and cannot hold per-session host state"
+            )));
+        }
+        if snapshot.dynamics().dim() != n_z {
+            return Err(SubmitError::BadRequest(format!(
+                "model '{model}' has state width {}, session expects n_z = {n_z}",
+                snapshot.dynamics().dim()
+            )));
+        }
+        let solver = crate::solvers::by_name(solver)
+            .map_err(|e| SubmitError::BadRequest(e.to_string()))?;
+        let core = SessionCore {
+            class: Arc::new(class),
+            model: snapshot,
+            solver,
+            resume: ResumeState::new(t0, z0.to_vec()),
+            ws: SolverWorkspace::new(),
+            stats: IntStats::default(),
+            steps: 0,
+            poisoned: false,
+        };
+        let sid = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.slots
+            .lock()
+            .expect("session table poisoned")
+            .insert(sid, Arc::new(SessionEntry {
+                core: Mutex::new(core),
+                busy: AtomicBool::new(false),
+            }));
+        Ok(sid)
+    }
+
+    /// Look up a live session (an `Arc` clone; the table lock is not
+    /// held across the step).
+    pub fn entry(&self, sid: u64) -> Option<Arc<SessionEntry>> {
+        self.slots
+            .lock()
+            .expect("session table poisoned")
+            .get(&sid)
+            .cloned()
+    }
+
+    /// The synthetic request class of a live session — transports retarget
+    /// pooled step envelopes onto it.
+    pub fn class_of(&self, sid: u64) -> Option<Arc<RequestClass>> {
+        self.entry(sid)
+            .map(|e| e.core.lock().expect("session poisoned").class.clone())
+    }
+
+    /// Close a session: remove it from the table (its warm state drops
+    /// when the last worker reference does).  Returns whether it existed.
+    /// Idempotent — double closes and closes of unknown ids are no-ops.
+    pub fn close(&self, sid: u64) -> bool {
+        self.slots
+            .lock()
+            .expect("session table poisoned")
+            .remove(&sid)
+            .is_some()
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.slots.lock().expect("session table poisoned").len()
+    }
+
+    /// True when no session is live.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -38,6 +38,11 @@ pub enum ClientEvent {
     },
     /// The request was rejected or failed while being served.
     ReqErr { req_id: u64, msg: String },
+    /// A session was opened (`token` echoes the SESSION_OPEN) or closed
+    /// (`token` is 0 — close acks carry no open token).
+    SessionOk { token: u64, sid: u64 },
+    /// A SESSION_OPEN or SESSION_CLOSE was refused.
+    SessionErr { token: u64, msg: String },
     /// Health/readiness report (answer to a HEALTH probe).
     Health(HealthFrame),
     /// Acknowledgement of GOODBYE or SHUTDOWN.
@@ -105,6 +110,58 @@ impl TcpClient {
         self.wbuf.clear();
         frame::submit(&mut self.wbuf, req_id, class_id, z0);
         (&self.stream).write_all(&self.wbuf).context("send SUBMIT")
+    }
+
+    /// Open a streaming session seeded at `(t0, z0)` and block for the
+    /// server-assigned session id.  Handshake-style: call with no
+    /// submits outstanding on this connection (any other frame arriving
+    /// first is an error).
+    pub fn open_session(
+        &mut self,
+        token: u64,
+        model: &str,
+        solver: &str,
+        t0: f64,
+        mode: &crate::solvers::integrate::StepMode,
+        z0: &[f32],
+    ) -> Result<u64> {
+        self.wbuf.clear();
+        frame::session_open(&mut self.wbuf, token, model, solver, t0, mode, z0);
+        (&self.stream).write_all(&self.wbuf).context("send SESSION_OPEN")?;
+        let mut scratch = ResponseFrame::default();
+        match self.next_event(&mut scratch)? {
+            ClientEvent::SessionOk { token: t, sid } if t == token => Ok(sid),
+            ClientEvent::SessionErr { token: t, msg } if t == token => {
+                bail!("server refused session open: {msg}")
+            }
+            other => bail!("unexpected frame {other:?} while opening a session"),
+        }
+    }
+
+    /// Fire-and-forget incremental step: integrate session `sid` through
+    /// the (strictly advancing) event `times`.  At most one step may be
+    /// in flight per session; the response's `obs` holds the state at
+    /// each event time and `z_final` the state at the last.
+    pub fn session_step(&mut self, req_id: u64, sid: u64, times: &[f64]) -> Result<()> {
+        self.wbuf.clear();
+        frame::session_step(&mut self.wbuf, req_id, sid, times);
+        (&self.stream).write_all(&self.wbuf).context("send SESSION_STEP")
+    }
+
+    /// Close a session and block for the ack.  Call with no steps
+    /// outstanding on the session.
+    pub fn close_session(&mut self, sid: u64) -> Result<()> {
+        self.wbuf.clear();
+        frame::session_close(&mut self.wbuf, sid);
+        (&self.stream).write_all(&self.wbuf).context("send SESSION_CLOSE")?;
+        let mut scratch = ResponseFrame::default();
+        match self.next_event(&mut scratch)? {
+            ClientEvent::SessionOk { token: 0, sid: s } if s == sid => Ok(()),
+            ClientEvent::SessionErr { token: 0, msg } => {
+                bail!("server refused session close: {msg}")
+            }
+            other => bail!("unexpected frame {other:?} while closing session {sid}"),
+        }
     }
 
     /// Block until the next server frame and decode it.  RESPONSE
@@ -270,6 +327,14 @@ fn decode_event(ftype: u8, body: &[u8], resp: &mut ResponseFrame) -> Result<Clie
             c.done()?;
             Ok(ClientEvent::ReqErr { req_id, msg })
         }
+        frame::T_SESSION_OK => {
+            let (token, sid) = frame::parse_session_ok(body)?;
+            Ok(ClientEvent::SessionOk { token, sid })
+        }
+        frame::T_SESSION_ERR => {
+            let (token, msg) = frame::parse_session_err(body)?;
+            Ok(ClientEvent::SessionErr { token, msg })
+        }
         frame::T_HEALTH_OK => Ok(ClientEvent::Health(frame::parse_health_ok(body)?)),
         frame::T_GOODBYE_OK => {
             frame::Cursor::new(body).done()?;
@@ -337,7 +402,10 @@ mod tests {
         let cap = Duration::from_millis(64);
         let mut b = Backoff::new(base, cap, 7);
         let mut prev_ceiling = Duration::ZERO;
-        for n in 0..12 {
+        // run well past attempt 32: the exponent must saturate instead
+        // of overflowing the `1u32 << shift` (a u32 shift by ≥ 32 would
+        // panic in debug and wrap in release)
+        for n in 0..40u32 {
             let d = b.next_delay(Duration::ZERO);
             // ceiling for attempt n is min(cap, base * 2^n); jitter keeps
             // the draw within [ceiling/2, ceiling]
@@ -346,13 +414,19 @@ mod tests {
             assert!(d >= ceiling / 2, "attempt {n}: {d:?} < {:?}", ceiling / 2);
             assert!(ceiling >= prev_ceiling, "ceiling must be monotone");
             prev_ceiling = ceiling;
+            if n >= 6 {
+                // base·2^6 = 64 ms ≥ cap: every later draw saturates at it
+                assert_eq!(ceiling, cap, "attempt {n} must be capped");
+            }
         }
-        assert_eq!(b.attempts(), 12);
+        assert_eq!(b.attempts(), 40);
 
-        // the server hint is a hard floor even early in the sequence
+        // the server hint is a hard floor even early in the sequence and
+        // deep into a saturated one
+        let hint = Duration::from_millis(500);
+        assert_eq!(b.next_delay(hint), hint, "hint floors a saturated sequence");
         b.reset();
         assert_eq!(b.attempts(), 0);
-        let hint = Duration::from_millis(500);
         assert_eq!(b.next_delay(hint), hint);
     }
 

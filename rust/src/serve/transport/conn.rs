@@ -28,7 +28,7 @@ use super::frame::{self, FrameReader, HealthFrame, ReadOutcome};
 use super::{Bridge, TransportConfig};
 use crate::serve::{Completion, CompletionSink, Delivery, Pending, RequestClass, SubmitError};
 use crate::solvers::integrate::ObsGrid;
-use crate::solvers::workspace::ensure;
+use crate::solvers::workspace::{ensure, ensure_f64};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
@@ -63,6 +63,10 @@ struct Shared {
     shutdown_req: AtomicBool,
     /// Requests admitted through this transport, not yet completed.
     inflight: AtomicUsize,
+    /// Requests admitted through this transport since bind (one-shot
+    /// submits + session steps); with the bridge's shed count this gives
+    /// the exact, well-defined shed rate HEALTH reports.
+    admitted: AtomicU64,
     /// Per-model in-flight counts, indexed by raw model id (sized at
     /// bind; admission quota + health reporting).
     model_inflight: Vec<AtomicUsize>,
@@ -92,6 +96,8 @@ enum OutMsg {
     ClassErr { class_id: u32, msg: String },
     Retry { req_id: u64, hint_us: u32, draining: bool },
     ReqErr { req_id: u64, msg: String },
+    SessionOk { token: u64, sid: u64 },
+    SessionErr { token: u64, msg: String },
     Health(HealthFrame),
     GoodbyeOk,
 }
@@ -206,6 +212,7 @@ impl TcpFront {
             draining: AtomicBool::new(false),
             shutdown_req: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
             model_inflight,
             retries_sent: AtomicU64::new(0),
             conn_count: AtomicUsize::new(0),
@@ -236,6 +243,12 @@ impl TcpFront {
     /// Requests admitted via this transport and not yet completed.
     pub fn inflight(&self) -> usize {
         self.shared.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Requests admitted via this transport since bind (one-shot submits
+    /// + session steps) — the denominator of the HEALTH shed rate.
+    pub fn admitted(&self) -> u64 {
+        self.shared.admitted.load(Ordering::SeqCst)
     }
 
     /// Live connections.
@@ -351,13 +364,20 @@ impl Drop for TcpFront {
 
 fn health_snapshot(shared: &Shared, probe_id: u64) -> HealthFrame {
     let draining = shared.draining.load(Ordering::SeqCst);
+    let shed_total = shared.bridge.shed_count();
+    let admitted = shared.admitted.load(Ordering::SeqCst);
     HealthFrame {
         probe_id,
         queue_depth: shared.bridge.queue_depth() as u32,
         queue_capacity: shared.bridge.queue_capacity() as u32,
-        shed_total: shared.bridge.shed_count(),
+        shed_total,
         retries_sent: shared.retries_sent.load(Ordering::SeqCst),
         inflight: shared.inflight.load(Ordering::SeqCst) as u32,
+        admitted,
+        sessions: shared.bridge.session_count() as u32,
+        // pre-divided server-side so a zero-traffic probe reads an exact
+        // 0.0 rather than 0/0
+        shed_rate: HealthFrame::shed_rate_of(admitted, shed_total),
         draining,
         ready: !draining,
     }
@@ -473,6 +493,25 @@ fn read_preamble(stream: &TcpStream, deadline_in: Duration) -> Result<()> {
 }
 
 fn reader_loop(stream: &TcpStream, shared: &Arc<Shared>, conn: &Arc<ConnShared>) -> Result<()> {
+    let mut sessions: BTreeMap<u64, Arc<RequestClass>> = BTreeMap::new();
+    let result = pump_frames(stream, shared, conn, &mut sessions);
+    // however the connection ended (clean GOODBYE, peer death, protocol
+    // violation), release every session it opened: the warm per-session
+    // solver state must not outlive its only client.  In-flight steps
+    // keep the session entry alive (Arc) until the worker finishes, then
+    // everything drops.
+    for sid in sessions.keys() {
+        shared.bridge.close_session(*sid);
+    }
+    result
+}
+
+fn pump_frames(
+    stream: &TcpStream,
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    sessions: &mut BTreeMap<u64, Arc<RequestClass>>,
+) -> Result<()> {
     let cfg = &shared.cfg;
     let mut fr = FrameReader::new(cfg.max_frame);
     let mut classes: Vec<Option<ConnClass>> = Vec::new();
@@ -488,7 +527,15 @@ fn reader_loop(stream: &TcpStream, shared: &Arc<Shared>, conn: &Arc<ConnShared>)
             Ok(ReadOutcome::Frame) => {
                 last_progress = Instant::now();
                 prev_buffered = 0;
-                handle_frame(fr.frame_type(), fr.body(), shared, conn, &mut classes, &sink)?;
+                handle_frame(
+                    fr.frame_type(),
+                    fr.body(),
+                    shared,
+                    conn,
+                    &mut classes,
+                    sessions,
+                    &sink,
+                )?;
                 fr.reset();
             }
             Ok(ReadOutcome::Idle) => {
@@ -514,11 +561,15 @@ fn handle_frame(
     shared: &Arc<Shared>,
     conn: &Arc<ConnShared>,
     classes: &mut Vec<Option<ConnClass>>,
+    sessions: &mut BTreeMap<u64, Arc<RequestClass>>,
     sink: &Arc<dyn CompletionSink>,
 ) -> Result<()> {
     match ftype {
         frame::T_SUBMIT => handle_submit(body, shared, conn, classes, sink),
         frame::T_OPEN_CLASS => handle_open_class(body, shared, conn, classes),
+        frame::T_SESSION_OPEN => handle_session_open(body, shared, conn, sessions),
+        frame::T_SESSION_STEP => handle_session_step(body, shared, conn, sessions, sink),
+        frame::T_SESSION_CLOSE => handle_session_close(body, shared, conn, sessions),
         frame::T_HEALTH => {
             let mut c = frame::Cursor::new(body);
             let probe_id = c.u64()?;
@@ -655,7 +706,10 @@ fn handle_submit(
         slot.fetch_add(1, Ordering::SeqCst);
     }
     match shared.bridge.submit(env) {
-        Ok(()) => Ok(()),
+        Ok(()) => {
+            shared.admitted.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
         Err((e, mut env)) => {
             conn.inflight.fetch_sub(1, Ordering::SeqCst);
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -673,6 +727,129 @@ fn handle_submit(
                 }
             }
         }
+    }
+}
+
+/// SESSION_OPEN: validate through the bridge (model + solver exist,
+/// width matches, version pinned), record the session as owned by this
+/// connection, ack with the server-assigned id.  Semantic refusals are
+/// in-band SESSION_ERR; only a malformed body kills the connection.
+fn handle_session_open(
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    sessions: &mut BTreeMap<u64, Arc<RequestClass>>,
+) -> Result<()> {
+    let so = frame::parse_session_open(body)?;
+    let token = so.token;
+    if shared.draining.load(Ordering::SeqCst) {
+        let msg = "server is draining".to_string();
+        return enqueue_ctl(shared, conn, OutMsg::SessionErr { token, msg });
+    }
+    if sessions.len() >= shared.cfg.max_sessions {
+        let msg = format!(
+            "per-connection session cap {} reached",
+            shared.cfg.max_sessions
+        );
+        return enqueue_ctl(shared, conn, OutMsg::SessionErr { token, msg });
+    }
+    match shared
+        .bridge
+        .open_session(&so.model, &so.solver, so.n_z, so.t0, &so.mode, &so.z0)
+    {
+        Ok((sid, class)) => {
+            sessions.insert(sid, class);
+            enqueue_ctl(shared, conn, OutMsg::SessionOk { token, sid })
+        }
+        Err(msg) => enqueue_ctl(shared, conn, OutMsg::SessionErr { token, msg }),
+    }
+}
+
+/// SESSION_STEP: the streaming hot path.  Same pooled-envelope
+/// discipline as SUBMIT — the event times are decoded straight into the
+/// envelope's pooled `times` buffer, so a warmed session stream performs
+/// no allocation between the socket and the solver.  A sid this
+/// connection did not open is refused (sessions are connection-scoped
+/// capabilities, not guessable global handles).
+fn handle_session_step(
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    sessions: &mut BTreeMap<u64, Arc<RequestClass>>,
+    sink: &Arc<dyn CompletionSink>,
+) -> Result<()> {
+    let cfg = &shared.cfg;
+    let (req_id, sid, k, mut c) = frame::parse_session_step_header(body)?;
+    let Some(class) = sessions.get(&sid) else {
+        let msg = format!("SESSION_STEP names session {sid} not opened on this connection");
+        return enqueue_ctl(shared, conn, OutMsg::ReqErr { req_id, msg });
+    };
+    if shared.draining.load(Ordering::SeqCst) {
+        return send_retry(shared, conn, req_id, true);
+    }
+    if conn.inflight.load(Ordering::SeqCst) >= cfg.max_inflight {
+        return send_retry(shared, conn, req_id, false);
+    }
+    let mut env = {
+        let mut pool = conn.pool.lock().expect("pool poisoned");
+        pool.pop()
+            .unwrap_or_else(|| Pending::new(class.clone(), Vec::new()))
+    };
+    if !Arc::ptr_eq(&env.class, class) {
+        env.class = class.clone();
+    }
+    env.rearm(req_id);
+    env.session_id = sid;
+    // sentinel outside the model table: session steps are admission-
+    // bounded by their one-step-in-flight rule, not the per-model quota,
+    // and the completion-side decrement skips the same way
+    env.model_raw = u32::MAX;
+    ensure_f64(&mut env.times, k);
+    c.f64s_into(&mut env.times)?;
+    c.done()?;
+    env.set_sink(sink.clone());
+    conn.inflight.fetch_add(1, Ordering::SeqCst);
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    match shared.bridge.submit(env) {
+        Ok(()) => {
+            shared.admitted.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+        Err((e, mut env)) => {
+            conn.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            env.delivery = Delivery::None;
+            conn.pool.lock().expect("pool poisoned").push(env);
+            match e {
+                SubmitError::Overloaded { .. } => send_retry(shared, conn, req_id, false),
+                SubmitError::Closed => send_retry(shared, conn, req_id, true),
+                // includes the busy refusal (a step already in flight on
+                // this session): a protocol misuse, not an overload — it
+                // must not read as shed
+                SubmitError::BadRequest(msg) => {
+                    enqueue_ctl(shared, conn, OutMsg::ReqErr { req_id, msg })
+                }
+            }
+        }
+    }
+}
+
+/// SESSION_CLOSE: idempotent at the server; scoped to sessions this
+/// connection opened.  Acked with SESSION_OK (token 0 — closes carry no
+/// open token).
+fn handle_session_close(
+    body: &[u8],
+    shared: &Arc<Shared>,
+    conn: &Arc<ConnShared>,
+    sessions: &mut BTreeMap<u64, Arc<RequestClass>>,
+) -> Result<()> {
+    let sid = frame::parse_session_close(body)?;
+    if sessions.remove(&sid).is_some() {
+        shared.bridge.close_session(sid);
+        enqueue_ctl(shared, conn, OutMsg::SessionOk { token: 0, sid })
+    } else {
+        let msg = format!("session {sid} is not open on this connection");
+        enqueue_ctl(shared, conn, OutMsg::SessionErr { token: 0, msg })
     }
 }
 
@@ -767,6 +944,8 @@ fn encode_msg(wbuf: &mut Vec<u8>, msg: OutMsg, recycle: &mut Vec<Pending>) {
             draining,
         } => frame::retry(wbuf, req_id, hint_us, draining),
         OutMsg::ReqErr { req_id, msg } => frame::req_err(wbuf, req_id, &msg),
+        OutMsg::SessionOk { token, sid } => frame::session_ok(wbuf, token, sid),
+        OutMsg::SessionErr { token, msg } => frame::session_err(wbuf, token, &msg),
         OutMsg::Health(h) => frame::health_ok(wbuf, &h),
         OutMsg::GoodbyeOk => frame::goodbye_ok(wbuf),
     }
@@ -816,6 +995,10 @@ mod tests {
         assert_eq!(h.queue_depth, 3);
         assert_eq!(h.queue_capacity, 7);
         assert_eq!(h.shed_total, 11);
+        assert_eq!(h.admitted, 0);
+        assert_eq!(h.sessions, 0);
+        // nothing admitted, 11 shed → the whole observed traffic was shed
+        assert_eq!(h.shed_rate, 1.0);
         assert!(h.ready);
 
         let class = Arc::new(

@@ -36,8 +36,10 @@ use std::io::{self, ErrorKind, Read};
 /// Connection preamble magic.
 pub const MAGIC: [u8; 4] = *b"MALI";
 /// Protocol version (bumped on any incompatible grammar change;
-/// docs/adr/006 records the versioning policy).
-pub const VERSION: u16 = 1;
+/// docs/adr/006 records the versioning policy).  v2 added the
+/// `SESSION_*` frames and extended the HEALTH_OK body with admission
+/// totals and the pre-divided shed rate (docs/adr/007).
+pub const VERSION: u16 = 2;
 /// Preamble length: magic + version `u16` + flags `u16`.
 pub const PREAMBLE_LEN: usize = 8;
 
@@ -53,6 +55,16 @@ pub const T_GOODBYE: u8 = 0x04;
 /// Client → server: ask the server process to drain and exit (the
 /// multi-process harness's remote off-switch).
 pub const T_SHUTDOWN: u8 = 0x05;
+/// Client → server: open a streaming session (pins the current model
+/// version, seeds the carried state at `(t0, z0)`).
+pub const T_SESSION_OPEN: u8 = 0x06;
+/// Client → server: advance a session through new event times
+/// (`req_id`, `sid`, `times`); answered with RESPONSE / REQ_ERR / RETRY
+/// like a SUBMIT.
+pub const T_SESSION_STEP: u8 = 0x07;
+/// Client → server: close a session (idempotent; acked with SESSION_OK
+/// carrying token 0).
+pub const T_SESSION_CLOSE: u8 = 0x08;
 
 /// Server → client: class accepted; carries the interned model id.
 pub const T_CLASS_OK: u8 = 0x81;
@@ -68,6 +80,12 @@ pub const T_RETRY: u8 = 0x85;
 pub const T_HEALTH_OK: u8 = 0x86;
 /// Server → client: goodbye/shutdown acknowledged.
 pub const T_GOODBYE_OK: u8 = 0x87;
+/// Server → client: session opened (echoes the open token + new session
+/// id) or closed (token 0 + the closed id).
+pub const T_SESSION_OK: u8 = 0x88;
+/// Server → client: session open/close refused (echoes the token, or 0
+/// for a close; carries the reason).
+pub const T_SESSION_ERR: u8 = 0x89;
 
 /// Step-mode tag inside OPEN_CLASS: `StepMode::Fixed`.
 pub const MODE_FIXED: u8 = 0;
@@ -216,6 +234,16 @@ impl<'a> Cursor<'a> {
         }
         Ok(())
     }
+
+    /// Copy exactly `dst.len()` `f64`s out of the body (SESSION_STEP's
+    /// event times, straight into a pooled buffer).
+    pub fn f64s_into(&mut self, dst: &mut [f64]) -> Result<()> {
+        let raw = self.take(dst.len() * 8)?;
+        for (d, c) in dst.iter_mut().zip(raw.chunks_exact(8)) {
+            *d = f64::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -245,18 +273,10 @@ pub fn check_preamble(b: &[u8; PREAMBLE_LEN]) -> Result<()> {
 // Typed frame encoders
 // ---------------------------------------------------------------------------
 
-/// OPEN_CLASS: the whole validated class description travels once at
-/// handshake; every later SUBMIT names it by `class_id` (no per-request
-/// strings on the wire, mirroring the interned registry lookup).
-pub fn open_class(buf: &mut Vec<u8>, class_id: u32, class: &RequestClass) {
-    let at = begin_frame(buf, T_OPEN_CLASS);
-    put_u32(buf, class_id);
-    put_str16(buf, &class.model);
-    put_str16(buf, &class.solver);
-    put_u32(buf, class.n_z as u32);
-    put_f64(buf, class.t0);
-    put_f64(buf, class.t1);
-    match class.mode {
+/// Encode a [`StepMode`] (tag byte + parameters) — shared by OPEN_CLASS
+/// and SESSION_OPEN.
+pub fn put_mode(buf: &mut Vec<u8>, mode: &StepMode) {
+    match *mode {
         StepMode::Fixed { h } => {
             put_u8(buf, MODE_FIXED);
             put_f64(buf, h);
@@ -276,6 +296,35 @@ pub fn open_class(buf: &mut Vec<u8>, class_id: u32, class: &RequestClass) {
             put_f64(buf, h_max);
         }
     }
+}
+
+/// Decode a [`StepMode`] written by [`put_mode`].
+pub fn parse_mode(c: &mut Cursor<'_>) -> Result<StepMode> {
+    Ok(match c.u8()? {
+        MODE_FIXED => StepMode::Fixed { h: c.f64()? },
+        MODE_ADAPTIVE => StepMode::Adaptive {
+            rtol: c.f64()?,
+            atol: c.f64()?,
+            h_init: c.f64()?,
+            h_min: c.f64()?,
+            h_max: c.f64()?,
+        },
+        other => bail!("unknown step-mode tag {other}"),
+    })
+}
+
+/// OPEN_CLASS: the whole validated class description travels once at
+/// handshake; every later SUBMIT names it by `class_id` (no per-request
+/// strings on the wire, mirroring the interned registry lookup).
+pub fn open_class(buf: &mut Vec<u8>, class_id: u32, class: &RequestClass) {
+    let at = begin_frame(buf, T_OPEN_CLASS);
+    put_u32(buf, class_id);
+    put_str16(buf, &class.model);
+    put_str16(buf, &class.solver);
+    put_u32(buf, class.n_z as u32);
+    put_f64(buf, class.t0);
+    put_f64(buf, class.t1);
+    put_mode(buf, &class.mode);
     let times = class.grid.times();
     put_u32(buf, times.len() as u32);
     for t in times {
@@ -306,17 +355,7 @@ pub fn parse_open_class(body: &[u8]) -> Result<OpenClassFrame> {
     let n_z = c.u32()? as usize;
     let t0 = c.f64()?;
     let t1 = c.f64()?;
-    let mode = match c.u8()? {
-        MODE_FIXED => StepMode::Fixed { h: c.f64()? },
-        MODE_ADAPTIVE => StepMode::Adaptive {
-            rtol: c.f64()?,
-            atol: c.f64()?,
-            h_init: c.f64()?,
-            h_min: c.f64()?,
-            h_max: c.f64()?,
-        },
-        other => bail!("unknown step-mode tag {other}"),
-    };
+    let mode = parse_mode(&mut c)?;
     let k = c.u32()? as usize;
     ensure!(
         c.remaining() == k * 8,
@@ -363,11 +402,159 @@ pub fn submit(buf: &mut Vec<u8>, req_id: u64, class_id: u32, z0: &[f32]) {
     end_frame(buf, at);
 }
 
+/// SESSION_OPEN: the session's whole description travels once (like
+/// OPEN_CLASS); `token` is a client-chosen correlation id echoed by the
+/// SESSION_OK / SESSION_ERR answer.
+pub fn session_open(
+    buf: &mut Vec<u8>,
+    token: u64,
+    model: &str,
+    solver: &str,
+    t0: f64,
+    mode: &StepMode,
+    z0: &[f32],
+) {
+    let at = begin_frame(buf, T_SESSION_OPEN);
+    put_u64(buf, token);
+    put_str16(buf, model);
+    put_str16(buf, solver);
+    put_u32(buf, z0.len() as u32);
+    put_f64(buf, t0);
+    put_mode(buf, mode);
+    put_f32s(buf, z0);
+    end_frame(buf, at);
+}
+
+/// A parsed SESSION_OPEN body (server side; allocation is fine — opens
+/// are the handshake of a long-lived session, not the step path).
+#[derive(Debug)]
+pub struct SessionOpenFrame {
+    pub token: u64,
+    pub model: String,
+    pub solver: String,
+    pub n_z: usize,
+    pub t0: f64,
+    pub mode: StepMode,
+    pub z0: Vec<f32>,
+}
+
+pub fn parse_session_open(body: &[u8]) -> Result<SessionOpenFrame> {
+    let mut c = Cursor::new(body);
+    let token = c.u64()?;
+    let model = c.str16()?.to_string();
+    let solver = c.str16()?.to_string();
+    let n_z = c.u32()? as usize;
+    let t0 = c.f64()?;
+    let mode = parse_mode(&mut c)?;
+    ensure!(
+        c.remaining() == n_z * 4,
+        "SESSION_OPEN z0 length mismatch: {} bytes for n_z = {n_z}",
+        c.remaining()
+    );
+    let mut z0 = vec![0.0f32; n_z];
+    c.f32s_into(&mut z0)?;
+    c.done()?;
+    Ok(SessionOpenFrame {
+        token,
+        model,
+        solver,
+        n_z,
+        t0,
+        mode,
+        z0,
+    })
+}
+
+/// SESSION_STEP: correlation id + session id + the new event times
+/// (strictly monotone; the first may coincide with the session's current
+/// barrier).  Answered like a SUBMIT: RESPONSE / REQ_ERR / RETRY.
+pub fn session_step(buf: &mut Vec<u8>, req_id: u64, sid: u64, times: &[f64]) {
+    let at = begin_frame(buf, T_SESSION_STEP);
+    put_u64(buf, req_id);
+    put_u64(buf, sid);
+    put_u32(buf, times.len() as u32);
+    for t in times {
+        put_f64(buf, *t);
+    }
+    end_frame(buf, at);
+}
+
+/// Parse a SESSION_STEP header, leaving the cursor at the times run so
+/// the connection loop can size a pooled buffer and bulk-copy
+/// ([`Cursor::f64s_into`]) without allocating.  Returns
+/// `(req_id, sid, k)` and the positioned cursor.
+pub fn parse_session_step_header<'a>(body: &'a [u8]) -> Result<(u64, u64, usize, Cursor<'a>)> {
+    let mut c = Cursor::new(body);
+    let req_id = c.u64()?;
+    let sid = c.u64()?;
+    let k = c.u32()? as usize;
+    ensure!(
+        c.remaining() == k * 8,
+        "SESSION_STEP times length mismatch: {} bytes for k = {k}",
+        c.remaining()
+    );
+    Ok((req_id, sid, k, c))
+}
+
+/// SESSION_CLOSE: close a session (idempotent).
+pub fn session_close(buf: &mut Vec<u8>, sid: u64) {
+    let at = begin_frame(buf, T_SESSION_CLOSE);
+    put_u64(buf, sid);
+    end_frame(buf, at);
+}
+
+pub fn parse_session_close(body: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(body);
+    let sid = c.u64()?;
+    c.done()?;
+    Ok(sid)
+}
+
+/// SESSION_OK: acks an open (echoing its token, carrying the new id) or
+/// a close (token 0, the closed id).
+pub fn session_ok(buf: &mut Vec<u8>, token: u64, sid: u64) {
+    let at = begin_frame(buf, T_SESSION_OK);
+    put_u64(buf, token);
+    put_u64(buf, sid);
+    end_frame(buf, at);
+}
+
+pub fn parse_session_ok(body: &[u8]) -> Result<(u64, u64)> {
+    let mut c = Cursor::new(body);
+    let token = c.u64()?;
+    let sid = c.u64()?;
+    c.done()?;
+    Ok((token, sid))
+}
+
+/// SESSION_ERR: an open/close refusal with the reason.
+pub fn session_err(buf: &mut Vec<u8>, token: u64, msg: &str) {
+    let at = begin_frame(buf, T_SESSION_ERR);
+    put_u64(buf, token);
+    put_str16(buf, msg);
+    end_frame(buf, at);
+}
+
+pub fn parse_session_err(body: &[u8]) -> Result<(u64, String)> {
+    let mut c = Cursor::new(body);
+    let token = c.u64()?;
+    let msg = c.str16()?.to_string();
+    c.done()?;
+    Ok((token, msg))
+}
+
 /// RESPONSE, encoded straight from the served envelope (self-describing
 /// widths so the client needs no side table to size the payload).
+/// Session step envelopes carry their observation count in `times`
+/// (their class grid is a placeholder); one-shot envelopes use the
+/// class grid.
 pub fn response(buf: &mut Vec<u8>, p: &Pending) {
     let n_z = p.class.n_z;
-    let k = p.class.grid.len();
+    let k = if p.session_id != 0 {
+        p.times.len()
+    } else {
+        p.class.grid.len()
+    };
     let at = begin_frame(buf, T_RESPONSE);
     put_u64(buf, p.req_id);
     put_u32(buf, p.n_accepted as u32);
@@ -458,10 +645,31 @@ pub struct HealthFrame {
     pub retries_sent: u64,
     /// Requests admitted via this transport and not yet completed.
     pub inflight: u32,
+    /// Requests admitted via this transport since bind (v2).
+    pub admitted: u64,
+    /// Live streaming sessions (v2).
+    pub sessions: u32,
+    /// Shed fraction `shed / (admitted + shed)` since bind, pre-divided
+    /// server-side so a zero-traffic snapshot reports an exact `0.0`
+    /// instead of `0/0` (v2).
+    pub shed_rate: f64,
     /// Nonzero once graceful drain has begun.
     pub draining: bool,
     /// Readiness: accepting work (not draining, queue not closed).
     pub ready: bool,
+}
+
+impl HealthFrame {
+    /// The well-defined shed fraction: `shed / (admitted + shed)`, and
+    /// exactly `0.0` when nothing has been observed (no `0/0 = NaN`).
+    pub fn shed_rate_of(admitted: u64, shed: u64) -> f64 {
+        let total = admitted + shed;
+        if total == 0 {
+            0.0
+        } else {
+            shed as f64 / total as f64
+        }
+    }
 }
 
 pub fn health_ok(buf: &mut Vec<u8>, h: &HealthFrame) {
@@ -472,6 +680,9 @@ pub fn health_ok(buf: &mut Vec<u8>, h: &HealthFrame) {
     put_u64(buf, h.shed_total);
     put_u64(buf, h.retries_sent);
     put_u32(buf, h.inflight);
+    put_u64(buf, h.admitted);
+    put_u32(buf, h.sessions);
+    put_f64(buf, h.shed_rate);
     put_u8(buf, h.draining as u8);
     put_u8(buf, h.ready as u8);
     end_frame(buf, at);
@@ -486,6 +697,9 @@ pub fn parse_health_ok(body: &[u8]) -> Result<HealthFrame> {
         shed_total: c.u64()?,
         retries_sent: c.u64()?,
         inflight: c.u32()?,
+        admitted: c.u64()?,
+        sessions: c.u32()?,
+        shed_rate: c.f64()?,
         draining: c.u8()? != 0,
         ready: c.u8()? != 0,
     };
@@ -727,6 +941,9 @@ mod tests {
             shed_total: 21,
             retries_sent: 34,
             inflight: 2,
+            admitted: 55,
+            sessions: 3,
+            shed_rate: HealthFrame::shed_rate_of(55, 21),
             draining: true,
             ready: false,
         };
@@ -734,6 +951,83 @@ mod tests {
         health_ok(&mut buf, &h);
         assert_eq!(buf[4], T_HEALTH_OK);
         assert_eq!(parse_health_ok(&buf[5..]).unwrap(), h);
+    }
+
+    #[test]
+    fn shed_rate_is_defined_at_zero_traffic() {
+        assert_eq!(HealthFrame::shed_rate_of(0, 0), 0.0);
+        assert_eq!(HealthFrame::shed_rate_of(10, 0), 0.0);
+        assert_eq!(HealthFrame::shed_rate_of(0, 10), 1.0);
+        assert_eq!(HealthFrame::shed_rate_of(3, 1), 0.25);
+    }
+
+    #[test]
+    fn session_frames_round_trip() {
+        // OPEN
+        let mut buf = Vec::new();
+        let mode = StepMode::adaptive(1e-4, 1e-6);
+        session_open(&mut buf, 17, "toy", "alf", 0.5, &mode, &[1.0, -2.0, 3.0]);
+        assert_eq!(buf[4], T_SESSION_OPEN);
+        let open = parse_session_open(&buf[5..]).unwrap();
+        assert_eq!(open.token, 17);
+        assert_eq!(open.model, "toy");
+        assert_eq!(open.solver, "alf");
+        assert_eq!(open.n_z, 3);
+        assert_eq!(open.t0, 0.5);
+        assert_eq!(open.mode, mode);
+        assert_eq!(open.z0, vec![1.0, -2.0, 3.0]);
+
+        // STEP: header parse leaves the cursor at the times run so the
+        // connection layer can bulk-copy into a pooled f64 buffer
+        buf.clear();
+        session_step(&mut buf, 42, 9, &[0.75, 1.0, 1.5]);
+        assert_eq!(buf[4], T_SESSION_STEP);
+        let (req_id, sid, k, mut c) = parse_session_step_header(&buf[5..]).unwrap();
+        assert_eq!((req_id, sid, k), (42, 9, 3));
+        let mut times = vec![0.0f64; k];
+        c.f64s_into(&mut times).unwrap();
+        c.done().unwrap();
+        assert_eq!(times, vec![0.75, 1.0, 1.5]);
+
+        // CLOSE
+        buf.clear();
+        session_close(&mut buf, 9);
+        assert_eq!(buf[4], T_SESSION_CLOSE);
+        assert_eq!(parse_session_close(&buf[5..]).unwrap(), 9);
+
+        // OK / ERR acks
+        buf.clear();
+        session_ok(&mut buf, 17, 9);
+        assert_eq!(buf[4], T_SESSION_OK);
+        assert_eq!(parse_session_ok(&buf[5..]).unwrap(), (17, 9));
+        buf.clear();
+        session_err(&mut buf, 17, "no such model");
+        assert_eq!(buf[4], T_SESSION_ERR);
+        let (tok, msg) = parse_session_err(&buf[5..]).unwrap();
+        assert_eq!(tok, 17);
+        assert_eq!(msg, "no such model");
+    }
+
+    #[test]
+    fn session_step_response_sizes_obs_by_times_not_class_grid() {
+        use std::sync::Arc;
+        // session classes carry an empty grid; the response must size the
+        // observation block from the step's own `times`
+        let class = Arc::new(toy_class(ObsGrid::none()));
+        let mut p = Pending::new(class, vec![1.0, 2.0, 3.0]);
+        p.req_id = 7;
+        p.session_id = 5;
+        p.times.extend_from_slice(&[0.25, 0.5]);
+        p.obs.resize(2 * 3, 0.0);
+        p.obs.copy_from_slice(&[1., 2., 3., 4., 5., 6.]);
+        p.z_final.copy_from_slice(&[4.0, 5.0, 6.0]);
+        let mut buf = Vec::new();
+        response(&mut buf, &p);
+        let mut out = ResponseFrame::default();
+        parse_response_into(&buf[5..], &mut out).unwrap();
+        assert_eq!(out.req_id, 7);
+        assert_eq!(out.obs, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(out.z_final, vec![4.0, 5.0, 6.0]);
     }
 
     #[test]

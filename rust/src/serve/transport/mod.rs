@@ -70,6 +70,34 @@ pub trait Bridge: Send + Sync + 'static {
     /// Requests shed at the queue since server start (health reporting
     /// and exact shed accounting in the overload tests).
     fn shed_count(&self) -> u64;
+
+    /// Open a streaming session (SESSION_OPEN): validate + pin the model
+    /// version, seed the carried state at `(t0, z0)`, and return the new
+    /// session id plus the synthetic class its step envelopes ride.
+    /// Default: sessions unsupported (test bridges stay minimal).
+    #[allow(clippy::too_many_arguments)]
+    fn open_session(
+        &self,
+        _model: &str,
+        _solver: &str,
+        _n_z: usize,
+        _t0: f64,
+        _mode: &crate::solvers::integrate::StepMode,
+        _z0: &[f32],
+    ) -> Result<(u64, Arc<RequestClass>), String> {
+        Err("this bridge does not support sessions".to_string())
+    }
+
+    /// Close a session (idempotent; connection teardown calls this for
+    /// every session the connection opened).
+    fn close_session(&self, _sid: u64) -> bool {
+        false
+    }
+
+    /// Live session count (health reporting).
+    fn session_count(&self) -> usize {
+        0
+    }
 }
 
 impl Bridge for Server {
@@ -82,7 +110,7 @@ impl Bridge for Server {
                 reg.names()
             ));
         };
-        let model = reg.get_by_id(id).expect("freshly resolved id");
+        let model = reg.snapshot(id).expect("freshly resolved id");
         if model.is_device_batched() {
             return Err(format!(
                 "model '{}' is device-batched and cannot be dynamically micro-batched",
@@ -119,6 +147,33 @@ impl Bridge for Server {
     fn shed_count(&self) -> u64 {
         self.shed_count()
     }
+
+    fn open_session(
+        &self,
+        model: &str,
+        solver: &str,
+        n_z: usize,
+        t0: f64,
+        mode: &crate::solvers::integrate::StepMode,
+        z0: &[f32],
+    ) -> Result<(u64, Arc<RequestClass>), String> {
+        let sid = self
+            .open_session(model, solver, n_z, t0, mode.clone(), z0)
+            .map_err(|e| e.to_string())?;
+        let class = self
+            .sessions()
+            .class_of(sid)
+            .expect("freshly opened session");
+        Ok((sid, class))
+    }
+
+    fn close_session(&self, sid: u64) -> bool {
+        self.close_session(sid)
+    }
+
+    fn session_count(&self) -> usize {
+        self.session_count()
+    }
 }
 
 /// Connection-layer knobs (defaults are production-shaped; tests tighten
@@ -147,6 +202,10 @@ pub struct TransportConfig {
     /// Per-connection request-class table cap (class ids must be below
     /// this).
     pub max_classes: usize,
+    /// Per-connection live-session cap; SESSION_OPEN beyond it is
+    /// refused with SESSION_ERR.  Bounds the warm solver state one
+    /// connection can pin in the worker pool.
+    pub max_sessions: usize,
 }
 
 impl Default for TransportConfig {
@@ -159,6 +218,7 @@ impl Default for TransportConfig {
             model_quota: 0,
             backoff_hint: Duration::from_millis(1),
             max_classes: 64,
+            max_sessions: 16,
         }
     }
 }

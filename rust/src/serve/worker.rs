@@ -29,11 +29,13 @@
 use super::batcher::{fill_next_batch, BatcherCfg};
 use super::metrics::ServeMetrics;
 use super::queue::BoundedQueue;
+use super::session::{SessionEntry, SessionTable};
 use super::{Completion, Delivery, ModelRegistry, Pending, RequestClass, ServeResponse};
 use crate::solvers::batch::{BatchSpec, BatchState};
+use crate::solvers::dynamics::ScopedDynamics;
 use crate::solvers::integrate::{
-    integrate_batch_obs_stats_sharded, integrate_batch_obs_stats_ws, BatchShards,
-    BatchStepObserver, ErrorNorm, IntStats,
+    integrate_batch_obs_stats_sharded, integrate_batch_obs_stats_ws, integrate_obs_resume_ws,
+    BatchShards, BatchStepObserver, ErrorNorm, IntStats, State, StepObserver,
 };
 use crate::solvers::workspace::{ensure, BatchWorkspace};
 use crate::solvers::{by_name as solver_by_name, Solver};
@@ -41,6 +43,7 @@ use crate::tensor::Tensor;
 use crate::util::pool::{self, DisjointRowsMut, WorkerPool};
 use anyhow::{anyhow, ensure as ensure_that, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -59,12 +62,39 @@ impl BatchStepObserver for ObsCapture<'_> {
     }
 }
 
+/// Single-trajectory twin of [`ObsCapture`] for the session step path:
+/// streams each event's state into the step envelope's `[K, n_z]`
+/// response buffer as the resumable loop lands on the event times.
+struct SessionObsCapture<'a> {
+    obs: &'a mut [f32],
+    n_z: usize,
+}
+
+impl StepObserver for SessionObsCapture<'_> {
+    fn on_observation(&mut self, k: usize, _t: f64, state: &State) {
+        self.obs[k * self.n_z..(k + 1) * self.n_z].copy_from_slice(&state.z);
+    }
+}
+
+/// Clears a session's one-step-in-flight flag on scope exit — including
+/// the unwind path, so a panicking solve cannot wedge the session busy.
+struct BusyClear<'a>(&'a SessionEntry);
+
+impl Drop for BusyClear<'_> {
+    fn drop(&mut self) {
+        self.0.busy.store(false, Ordering::Release);
+    }
+}
+
 /// Per-thread serving state (see the module docs).  Drive it through
 /// [`worker_loop`] (the threaded server) or call
 /// [`ServeWorker::process`] directly with a homogeneous batch (tests,
 /// benches, embedding).
 pub struct ServeWorker {
     registry: Arc<ModelRegistry>,
+    /// Session table for streaming steps (`Pending::session_id != 0`);
+    /// absent on direct-drive workers that never see session envelopes.
+    sessions: Option<Arc<SessionTable>>,
     solvers: BTreeMap<String, Box<dyn Solver + Send + Sync>>,
     ws: BatchWorkspace,
     init: BatchState,
@@ -114,6 +144,7 @@ impl ServeWorker {
         };
         ServeWorker {
             registry,
+            sessions: None,
             solvers: BTreeMap::new(),
             ws: BatchWorkspace::new(),
             init: BatchState {
@@ -135,6 +166,12 @@ impl ServeWorker {
     /// The worker's intra-batch shard count.
     pub fn shard_count(&self) -> usize {
         self.n_shards
+    }
+
+    /// Attach the server's session table so this worker can serve
+    /// session step envelopes.
+    pub fn attach_sessions(&mut self, sessions: Arc<SessionTable>) {
+        self.sessions = Some(sessions);
     }
 
     /// Serving counters accumulated so far.
@@ -168,6 +205,9 @@ impl ServeWorker {
     pub fn process(&mut self, batch: &mut [Pending]) -> Result<()> {
         if batch.is_empty() {
             return Ok(());
+        }
+        if batch[0].session_id != 0 {
+            return self.serve_session(batch);
         }
         let t_start = Instant::now();
         self.metrics.note_activity(t_start);
@@ -203,6 +243,112 @@ impl ServeWorker {
                 Err(e)
             }
         }
+    }
+
+    /// Serve one session step envelope: look up the warm session, run
+    /// the resumable integrator from the carried `(t, z, v)` through the
+    /// envelope's event times, and deliver exactly like a one-shot row.
+    /// Session steps are served solo — the batcher never coalesces them
+    /// ([`Pending::session_id`] is a coalescing barrier) because two
+    /// steps of one session are sequentially dependent.
+    ///
+    /// Failures (unknown/closed session, bad event times, a diverging
+    /// solve) are delivered in-band on the row; an integration error
+    /// additionally **poisons** the session — its carried state may sit
+    /// at a non-event point, so every later step is refused until the
+    /// client closes and reopens.
+    fn serve_session(&mut self, batch: &mut [Pending]) -> Result<()> {
+        let t_start = Instant::now();
+        self.metrics.note_activity(t_start);
+        if batch.len() != 1 {
+            let e = anyhow!("session steps are served solo (batcher contract violated)");
+            self.fail_rows(batch, &e);
+            return Err(e);
+        }
+        let sid = batch[0].session_id;
+        let entry = match self.sessions.as_ref().and_then(|t| t.entry(sid)) {
+            Some(entry) => entry,
+            None => {
+                let e = anyhow!("session {sid} is unknown or already closed");
+                self.fail_rows(batch, &e);
+                return Err(e);
+            }
+        };
+        // cleared on every exit path, including unwind: a panicking solve
+        // must not wedge the session busy forever
+        let _busy = BusyClear(&entry);
+        match Self::run_session_step(&entry, &mut batch[0]) {
+            Ok(f_evals) => {
+                self.metrics.session_steps += 1;
+                self.deliver_rows(batch, t_start, f_evals);
+                Ok(())
+            }
+            Err(e) => {
+                self.fail_rows(batch, &e);
+                Err(e)
+            }
+        }
+    }
+
+    /// The session-step core: under the session's own lock, advance the
+    /// carried state through `p.times` with the session's pinned model
+    /// version, warm solver and workspace.  Observation rows stream into
+    /// `p.obs`; the final state lands in `p.z_final`.  Returns this
+    /// step's exact `f`-evaluation count (scoped counters — other
+    /// workers sharing the model never bleed in).
+    fn run_session_step(entry: &SessionEntry, p: &mut Pending) -> Result<u64> {
+        let mut guard = entry
+            .core
+            .lock()
+            .map_err(|_| anyhow!("session {} core poisoned by a panic", p.session_id))?;
+        let core = &mut *guard;
+        ensure_that!(
+            !core.poisoned,
+            "session {} was poisoned by an earlier failed step; close and reopen it",
+            p.session_id
+        );
+        ensure_that!(
+            !p.times.is_empty(),
+            "session {} step carries no event times",
+            p.session_id
+        );
+        let n_z = core.class.n_z;
+        let k = p.times.len();
+        // response buffers are sized by the transport/submit path;
+        // re-shape defensively for direct-drive envelopes
+        ensure(&mut p.z_final, n_z);
+        ensure(&mut p.obs, k * n_z);
+        // per-step scoped counter window (exact f_evals under sharing);
+        // the inner counters still accrue for registry-wide accounting
+        let scoped = ScopedDynamics::new(core.model.dynamics());
+        let mut cap = SessionObsCapture {
+            obs: &mut p.obs,
+            n_z,
+        };
+        let stats = match integrate_obs_resume_ws(
+            core.solver.as_ref(),
+            &scoped,
+            &mut core.resume,
+            &p.times,
+            &core.class.mode,
+            &ErrorNorm::Full,
+            &mut cap,
+            &mut core.ws,
+        ) {
+            Ok(stats) => stats,
+            Err(e) => {
+                core.poisoned = true;
+                return Err(e);
+            }
+        };
+        p.z_final.copy_from_slice(core.resume.z());
+        p.n_accepted = stats.n_accepted;
+        p.n_trials = stats.n_trials;
+        core.stats.n_accepted += stats.n_accepted;
+        core.stats.n_trials += stats.n_trials;
+        core.stats.f_evals += stats.f_evals;
+        core.steps += 1;
+        Ok(stats.f_evals)
     }
 
     /// Record metrics for a successfully solved batch (or solo retry)
@@ -272,11 +418,13 @@ impl ServeWorker {
     fn run_batch(&mut self, class: &RequestClass, batch: &mut [Pending]) -> Result<u64> {
         // interned lookup: one tag compare after the class's first batch
         // on this registry (ModelRegistry::resolve_cached) — the serve
-        // loop never hashes the model string
-        let dynamics = self
+        // loop never hashes the model string.  The snapshot pins the
+        // model *version* for the whole batch: a hot_swap landing
+        // mid-solve changes what future batches see, never this one.
+        let model = self
             .registry
             .resolve_cached(class)
-            .and_then(|id| self.registry.get_by_id(id))
+            .and_then(|id| self.registry.snapshot(id))
             .ok_or_else(|| {
                 anyhow!(
                     "unknown model '{}' (registered: {:?})",
@@ -287,18 +435,24 @@ impl ServeWorker {
         // direct drivers bypass Server::submit, so re-check the shape
         // contract here (cheap scalar compares; an error, not a panic)
         ensure_that!(
-            !dynamics.is_device_batched(),
+            !model.is_device_batched(),
             "model '{}' is device-batched (fixed [B, n_z] baked into its executable) \
              and cannot be dynamically micro-batched",
             class.model
         );
         ensure_that!(
-            dynamics.dim() == class.n_z,
+            model.dim() == class.n_z,
             "model '{}' has state width {}, request class expects n_z = {}",
             class.model,
-            dynamics.dim(),
+            model.dim(),
             class.n_z
         );
+        // per-batch scoped counter window: two workers sharing one
+        // dynamics no longer interleave their deltas — this batch's
+        // f_evals are counted on a worker-local scope, while the inner
+        // counters still accrue for registry-wide accounting
+        let dynamics = ScopedDynamics::new(model.dynamics());
+        let dynamics = &dynamics;
         if !self.solvers.contains_key(&class.solver) {
             // cold path: first batch of this solver name on this worker
             let s = solver_by_name(&class.solver)?;
@@ -326,9 +480,8 @@ impl ServeWorker {
             ensure(&mut p.z_final, n_z);
             ensure(&mut p.obs, k * n_z);
         }
-        // delta spans init + integrate, so the batch's f_evals includes
-        // ALF's v₀ = f(z₀) evaluations
-        let f0 = dynamics.counters().f_evals.get();
+        // the scope spans init + integrate, so the batch's f_evals
+        // includes ALF's v₀ = f(z₀) evaluations
         solver.init_batch_into(dynamics, class.t0, &self.z0_flat, &spec, &mut self.init, &mut self.ws);
         if self.n_shards > 1 && nb > 1 {
             // Sharded path: the batch's rows are integrated as contiguous
@@ -379,7 +532,7 @@ impl ServeWorker {
                 &mut self.ws,
             )?;
         }
-        let f_evals = dynamics.counters().f_evals.get().saturating_sub(f0);
+        let f_evals = dynamics.counters().f_evals.get();
         let out = self.ws.output();
         for (b, p) in batch.iter_mut().enumerate() {
             out.copy_row_into(b, &mut p.z_final, None);
@@ -402,10 +555,12 @@ impl ServeWorker {
 pub fn worker_loop(
     queue: &BoundedQueue<Pending>,
     registry: &Arc<ModelRegistry>,
+    sessions: &Arc<SessionTable>,
     cfg: &BatcherCfg,
     shards: usize,
 ) -> ServeMetrics {
     let mut worker = ServeWorker::with_shards(registry.clone(), shards);
+    worker.attach_sessions(sessions.clone());
     let mut batch: Vec<Pending> = Vec::new();
     while fill_next_batch(queue, cfg, &mut batch) {
         worker.note_queue_depth(queue.len() + batch.len());

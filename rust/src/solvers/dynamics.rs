@@ -451,6 +451,383 @@ pub trait Dynamics {
     ) -> bool {
         false
     }
+
+    /// Clone this dynamics into a fresh boxed instance with **zeroed
+    /// counters** — the copy-on-write hook behind
+    /// `serve::ModelRegistry::hot_swap`.  Returns `None` (the default)
+    /// when the model cannot be duplicated host-side (e.g. a
+    /// device-compiled `HloDynamics` whose executable is not cloneable),
+    /// in which case the registry refuses the swap instead of draining.
+    fn clone_box(&self) -> Option<Box<dyn Dynamics + Send + Sync>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scoped counter view
+// ---------------------------------------------------------------------------
+
+/// A forwarding view over a shared dynamics with its **own** evaluation
+/// counters.
+///
+/// The serve worker and the pooled gradient drivers used to cost a batch
+/// by the delta of the *shared* registry counters around the call — exact
+/// for a single writer, silently interleaved the moment two workers (or a
+/// fine-tune loop and an inference session) drive the same model
+/// concurrently.  Wrapping the shared `&dyn Dynamics` in a
+/// `ScopedDynamics` gives each pass a private window: every forwarded
+/// call still increments the inner (global) counters — registry-wide
+/// totals and shutdown accounting are unchanged — while the scope mirrors
+/// the same per-sample units locally, so `scoped.counters()` reads an
+/// exact, interleaving-free count for this pass alone.
+///
+/// Mirroring is by the documented counting convention (per-sample units
+/// for host dynamics, one unit per device execute), *not* by inner-counter
+/// deltas — deltas would re-introduce exactly the race this type removes.
+pub struct ScopedDynamics<'a> {
+    inner: &'a (dyn Dynamics + Sync),
+    scope: EvalCounters,
+}
+
+impl<'a> ScopedDynamics<'a> {
+    /// Wrap a shared dynamics; the scope counters start at zero.
+    pub fn new(inner: &'a (dyn Dynamics + Sync)) -> Self {
+        ScopedDynamics {
+            inner,
+            scope: EvalCounters::default(),
+        }
+    }
+
+    /// Counting unit for a batched call: `B` per-sample units for host
+    /// dynamics, one per execute for device-batched graphs (matching the
+    /// [`EvalCounters`] convention).
+    fn batch_units(&self, spec: &BatchSpec) -> u64 {
+        if self.inner.is_device_batched() {
+            1
+        } else {
+            spec.batch as u64
+        }
+    }
+}
+
+impl std::fmt::Debug for ScopedDynamics<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScopedDynamics")
+            .field("scope", &self.scope)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Dynamics for ScopedDynamics<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn param_dim(&self) -> usize {
+        self.inner.param_dim()
+    }
+
+    fn f(&self, t: f64, z: &[f32]) -> Vec<f32> {
+        self.scope.f_evals.add(1);
+        self.inner.f(t, z)
+    }
+
+    fn f_vjp(&self, t: f64, z: &[f32], a: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.scope.vjp_evals.add(1);
+        self.inner.f_vjp(t, z, a)
+    }
+
+    fn params(&self) -> &[f32] {
+        self.inner.params()
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {
+        // The scope borrows the model shared; parameter updates go through
+        // `ModelRegistry::hot_swap` on a fresh clone, never through a view.
+        panic!("ScopedDynamics is a read-only view; set_params is not supported");
+    }
+
+    fn counters(&self) -> &EvalCounters {
+        &self.scope
+    }
+
+    fn depth_nf(&self) -> usize {
+        self.inner.depth_nf()
+    }
+
+    fn is_device_batched(&self) -> bool {
+        self.inner.is_device_batched()
+    }
+
+    fn f_batch(&self, ts: &[f64], z: &[f32], spec: &BatchSpec) -> Vec<f32> {
+        self.scope.f_evals.add(self.batch_units(spec));
+        self.inner.f_batch(ts, z, spec)
+    }
+
+    fn f_vjp_batch(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        self.scope.vjp_evals.add(self.batch_units(spec));
+        self.inner.f_vjp_batch(ts, z, a, spec)
+    }
+
+    fn f_vjp_batch_rows(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+    ) -> (Vec<f32>, Vec<f32>) {
+        self.scope.vjp_evals.add(self.batch_units(spec));
+        self.inner.f_vjp_batch_rows(ts, z, a, spec)
+    }
+
+    fn f_into(&self, t: f64, z: &[f32], out: &mut [f32]) {
+        self.scope.f_evals.add(1);
+        self.inner.f_into(t, z, out);
+    }
+
+    fn f_vjp_into(&self, t: f64, z: &[f32], a: &[f32], az_out: &mut [f32], ath_acc: &mut [f32]) {
+        self.scope.vjp_evals.add(1);
+        self.inner.f_vjp_into(t, z, a, az_out, ath_acc);
+    }
+
+    fn f_batch_into(&self, ts: &[f64], z: &[f32], spec: &BatchSpec, out: &mut [f32]) {
+        self.scope.f_evals.add(self.batch_units(spec));
+        self.inner.f_batch_into(ts, z, spec, out);
+    }
+
+    fn f_vjp_batch_into(
+        &self,
+        ts: &[f64],
+        z: &[f32],
+        a: &[f32],
+        spec: &BatchSpec,
+        az_out: &mut [f32],
+        ath_acc: &mut [f32],
+    ) {
+        self.scope.vjp_evals.add(self.batch_units(spec));
+        self.inner.f_vjp_batch_into(ts, z, a, spec, az_out, ath_acc);
+    }
+
+    fn fused_alf(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let out = self.inner.fused_alf(z, v, t, h, eta);
+        if out.is_some() {
+            self.scope.f_evals.add(1);
+        }
+        out
+    }
+
+    fn fused_alf_inv(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        let out = self.inner.fused_alf_inv(z, v, t_out, h, eta);
+        if out.is_some() {
+            self.scope.f_evals.add(1);
+        }
+        out
+    }
+
+    fn fused_alf_vjp(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let out = self.inner.fused_alf_vjp(z, v, t, h, eta, az_out, av_out);
+        if out.is_some() {
+            self.scope.vjp_evals.add(1);
+        }
+        out
+    }
+
+    fn fused_alf_bwd(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+    ) -> Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let out = self
+            .inner
+            .fused_alf_bwd(z_out, v_out, t_out, h, eta, az_out, av_out);
+        if out.is_some() {
+            self.scope.f_evals.add(1);
+            self.scope.vjp_evals.add(1);
+        }
+        out
+    }
+
+    fn fused_alf_into(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        z_out: &mut [f32],
+        v_out: &mut [f32],
+        err_out: &mut [f32],
+    ) -> bool {
+        let ran = self.inner.fused_alf_into(z, v, t, h, eta, z_out, v_out, err_out);
+        if ran {
+            self.scope.f_evals.add(1);
+        }
+        ran
+    }
+
+    fn fused_alf_inv_into(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+    ) -> bool {
+        let ran = self
+            .inner
+            .fused_alf_inv_into(z_out, v_out, t_out, h, eta, z_in, v_in);
+        if ran {
+            self.scope.f_evals.add(1);
+        }
+        ran
+    }
+
+    fn fused_alf_vjp_into(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        t: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+    ) -> bool {
+        let ran = self
+            .inner
+            .fused_alf_vjp_into(z, v, t, h, eta, az_out, av_out, az_in, av_in, ath_acc);
+        if ran {
+            self.scope.vjp_evals.add(1);
+        }
+        ran
+    }
+
+    fn fused_alf_bwd_into(
+        &self,
+        z_out: &[f32],
+        v_out: &[f32],
+        t_out: f64,
+        h: f64,
+        eta: f64,
+        az_out: &[f32],
+        av_out: &[f32],
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+    ) -> bool {
+        let ran = self.inner.fused_alf_bwd_into(
+            z_out, v_out, t_out, h, eta, az_out, av_out, z_in, v_in, az_in, av_in, ath_acc,
+        );
+        if ran {
+            self.scope.f_evals.add(1);
+            self.scope.vjp_evals.add(1);
+        }
+        ran
+    }
+
+    fn fused_alf_batch_into(
+        &self,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        eta: f64,
+        spec: &BatchSpec,
+        z_out: &mut [f32],
+        v_out: &mut [f32],
+        err_out: &mut [f32],
+    ) -> bool {
+        let ran = self
+            .inner
+            .fused_alf_batch_into(ts, hs, z, v, eta, spec, z_out, v_out, err_out);
+        if ran {
+            self.scope.f_evals.add(self.batch_units(spec));
+        }
+        ran
+    }
+
+    fn fused_alf_inv_batch_into(
+        &self,
+        ts_out: &[f64],
+        hs: &[f64],
+        z_out: &[f32],
+        v_out: &[f32],
+        eta: f64,
+        spec: &BatchSpec,
+        z_in: &mut [f32],
+        v_in: &mut [f32],
+    ) -> bool {
+        let ran = self
+            .inner
+            .fused_alf_inv_batch_into(ts_out, hs, z_out, v_out, eta, spec, z_in, v_in);
+        if ran {
+            self.scope.f_evals.add(self.batch_units(spec));
+        }
+        ran
+    }
+
+    fn fused_alf_vjp_batch_into(
+        &self,
+        ts: &[f64],
+        hs: &[f64],
+        z: &[f32],
+        v: &[f32],
+        eta: f64,
+        spec: &BatchSpec,
+        az_out: &[f32],
+        av_out: &[f32],
+        az_in: &mut [f32],
+        av_in: &mut [f32],
+        ath_acc: &mut [f32],
+    ) -> bool {
+        let ran = self.inner.fused_alf_vjp_batch_into(
+            ts, hs, z, v, eta, spec, az_out, av_out, az_in, av_in, ath_acc,
+        );
+        if ran {
+            self.scope.vjp_evals.add(self.batch_units(spec));
+        }
+        ran
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -661,6 +1038,14 @@ impl Dynamics for LinearToy {
     fn counters(&self) -> &EvalCounters {
         &self.counters
     }
+
+    fn clone_box(&self) -> Option<Box<dyn Dynamics + Send + Sync>> {
+        Some(Box::new(LinearToy {
+            alpha: self.alpha.clone(),
+            n: self.n,
+            counters: EvalCounters::default(),
+        }))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -797,6 +1182,15 @@ impl Dynamics for MlpDynamics {
     fn depth_nf(&self) -> usize {
         2
     }
+
+    fn clone_box(&self) -> Option<Box<dyn Dynamics + Send + Sync>> {
+        Some(Box::new(MlpDynamics {
+            d: self.d,
+            hidden: self.hidden,
+            theta: self.theta.clone(),
+            counters: EvalCounters::default(),
+        }))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -866,6 +1260,14 @@ impl Dynamics for ComplexEigenDynamics {
 
     fn counters(&self) -> &EvalCounters {
         &self.counters
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn Dynamics + Send + Sync>> {
+        Some(Box::new(ComplexEigenDynamics {
+            eigs: self.eigs.clone(),
+            counters: EvalCounters::default(),
+            empty: Vec::new(),
+        }))
     }
 }
 

@@ -496,6 +496,371 @@ pub fn integrate_obs_ws(
 }
 
 // ---------------------------------------------------------------------------
+// Resumable integration: warm per-session state across incremental advances.
+// ---------------------------------------------------------------------------
+
+/// Warm, resumable integration state: everything the stepping loop carries
+/// between accepted steps, frozen at an observation barrier so the next
+/// [`integrate_obs_resume_ws`] call continues **bitwise** where a one-shot
+/// [`integrate_obs_ws`] over the concatenated grid would be.
+///
+/// Carried across advances: the barrier time `t`, the solver state (`z`,
+/// and `v` for ALF — computed once at the first advance, never
+/// re-initialized), the step-size controller's signed step `h` (including
+/// the pre-clamp restore after a barrier landing, so controller memory
+/// survives the advance boundary exactly as it survives an observation
+/// inside one solve), and the integration direction.
+///
+/// ### Resume-boundary semantics
+///
+/// A one-shot [`ObsGrid`] lives in the half-open span `(t0, t1]` — an
+/// observation bitwise-equal to `t0` is rejected by
+/// [`ObsGrid::validate_for`], and a naive "re-solve from the barrier"
+/// session would either silently drop such an event or deliver the
+/// barrier observation twice.  A resumed advance instead admits a
+/// **leading** event time bitwise-equal to the resume point `t`:
+///
+/// * if nothing has been delivered at `t` yet (a fresh session at `t0`),
+///   it fires immediately with the current state — exactly once;
+/// * if the previous advance already delivered an observation at `t`
+///   (every successful advance ends on its final observation), a leading
+///   duplicate is an **error**, never a silent skip or a double fire.
+///
+/// Every successful advance ends at its last event time, which is always
+/// an observation — so the concatenation of the per-advance event lists
+/// (without boundary duplicates) is exactly the one-shot grid, and final
+/// state, per-observation snapshots and step/trial counts are
+/// bitwise-identical to the one-shot solve.  The only divergence is where
+/// the one-shot loop *errors*: its termination test can strand an
+/// unclamped landing within `eps` of the final observation, while the
+/// resumable loop terminates on observation delivery and has no such
+/// failure mode.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Last accepted time — the previous advance's final observation
+    /// barrier (or `t0` before the first advance).
+    t: f64,
+    /// Carried solver state at `t` (plain `z` until the first advance
+    /// initializes the solver, then augmented per the solver).
+    state: State,
+    /// The step-size controller's signed next step; `0.0` until the first
+    /// adaptive advance seeds it from `h_init`.
+    h: f64,
+    /// Integration direction (`±1.0`); `0.0` until the first advance with
+    /// a target beyond `t` fixes it.
+    dir: f64,
+    /// Whether `Solver::init` has run (lazily, at the first advance).
+    started: bool,
+    /// Whether an observation has already been delivered at exactly `t` —
+    /// the resume-boundary bookkeeping described above.
+    fired_at_t: bool,
+}
+
+impl ResumeState {
+    /// A fresh session at `t0` with initial state `z0`.  The solver's
+    /// augmented state (ALF's `v₀ = f(z₀)`) is built lazily by the first
+    /// advance, so constructing a session costs nothing.
+    pub fn new(t0: f64, z0: Vec<f32>) -> ResumeState {
+        ResumeState {
+            t: t0,
+            state: State::from_z(z0),
+            h: 0.0,
+            dir: 0.0,
+            started: false,
+            fired_at_t: false,
+        }
+    }
+
+    /// Current barrier time.
+    pub fn t(&self) -> f64 {
+        self.t
+    }
+
+    /// Current state `z(t)`.
+    pub fn z(&self) -> &[f32] {
+        &self.state.z
+    }
+
+    /// Current (possibly augmented) solver state.
+    pub fn state(&self) -> &State {
+        &self.state
+    }
+
+    /// Whether an observation has already been delivered at exactly
+    /// [`ResumeState::t`].
+    pub fn fired_at_t(&self) -> bool {
+        self.fired_at_t
+    }
+}
+
+/// Advance a resumable integration to each event time in `times`, firing
+/// [`StepObserver::on_observation`] at every one (indexed by position in
+/// `times`) — the incremental form of [`integrate_obs_ws`].
+///
+/// `times` must be finite, strictly monotone along the session's
+/// integration direction, and strictly beyond the resume point — except
+/// that a *leading* time bitwise-equal to `rs.t()` is delivered as a
+/// snapshot of the current state (see [`ResumeState`] for the boundary
+/// rule).  The advance always ends at the last event time.
+///
+/// Callers must pass the same `solver`, `dynamics`, `mode` and `norm` on
+/// every advance of one session; the loop's per-step decisions are then
+/// bitwise-identical to a one-shot solve over the concatenated grid.
+/// On error the carried state is left at the last successful barrier and
+/// the advance's partial observations must be discarded by the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_obs_resume_ws(
+    solver: &dyn Solver,
+    dynamics: &dyn Dynamics,
+    rs: &mut ResumeState,
+    times: &[f64],
+    mode: &StepMode,
+    norm: &ErrorNorm,
+    obs: &mut dyn StepObserver,
+    ws: &mut SolverWorkspace,
+) -> Result<IntStats> {
+    ensure!(!times.is_empty(), "resumed advance needs at least one event time");
+    for (k, &tk) in times.iter().enumerate() {
+        ensure!(tk.is_finite(), "event time t[{k}] = {tk} is not finite");
+    }
+
+    // Resume-boundary rule: a leading event at exactly the barrier is a
+    // snapshot request, valid only if the barrier observation has not been
+    // delivered yet.
+    let lead = if times[0] == rs.t {
+        ensure!(
+            !rs.fired_at_t,
+            "observation at t = {} was already delivered at the resume barrier; \
+             event times must be strictly beyond the last delivered observation",
+            rs.t
+        );
+        1
+    } else {
+        0
+    };
+
+    // Direction and strict monotonicity beyond the resume point.
+    let mut dir = rs.dir;
+    if lead < times.len() {
+        let d = (times[lead] - rs.t).signum();
+        ensure!(
+            d != 0.0,
+            "event time t[{lead}] = {} duplicates the resume point {}",
+            times[lead],
+            rs.t
+        );
+        if dir == 0.0 {
+            dir = d;
+        }
+        ensure!(
+            d == dir,
+            "event time t[{lead}] = {} runs against the session's integration \
+             direction (resume point {}, dir {dir})",
+            times[lead],
+            rs.t
+        );
+        if let Some(w) = times[lead..].windows(2).find(|w| (w[1] - w[0]) * dir <= 0.0) {
+            bail!(
+                "event times {w:?} not strictly ordered in the integration \
+                 direction (dir {dir})"
+            );
+        }
+    }
+
+    // Lazy solver init: build the augmented state (ALF's v₀ = f(z₀)) once,
+    // exactly as a one-shot caller does before integrating.
+    if !rs.started {
+        let z0 = std::mem::take(&mut rs.state.z);
+        rs.state = solver.init(dynamics, rs.t, &z0);
+        rs.started = true;
+    }
+
+    // Deliver the leading barrier snapshot (exactly once per session).
+    if lead == 1 {
+        obs.on_observation(0, rs.t, &rs.state);
+        rs.fired_at_t = true;
+        if times.len() == 1 {
+            return Ok(IntStats::default());
+        }
+    }
+
+    let f0 = dynamics.counters().f_evals.get();
+    let mut stats = IntStats::default();
+    let mut state = ws.take_state_copy(&rs.state);
+    let mut next = ws.take_state(&rs.state);
+    let mut err = ws.take_err();
+    let mut t = rs.t;
+    let k_total = times.len();
+    let mut h_carry = rs.h;
+
+    match *mode {
+        StepMode::Fixed { h } => {
+            if h <= 0.0 {
+                bail!("fixed step size must be positive, got {h}");
+            }
+            // Identical segment arithmetic to the one-shot fixed loop: the
+            // span is split at the event times and each segment takes n
+            // equal steps of |h'| ≤ h — segment decisions depend only on
+            // the segment endpoints, so resuming at a barrier is exact.
+            let mut t_seg = t;
+            for seg in lead..k_total {
+                let seg_end = times[seg];
+                let n = ((seg_end - t_seg).abs() / h).ceil().max(1.0) as usize;
+                let hs = (seg_end - t_seg) / n as f64;
+                for i in 0..n {
+                    let _ = solver.step_into(dynamics, t, hs, &state, &mut next, &mut err, ws);
+                    obs.on_trial(t, hs, next.bytes(), true);
+                    let t_end = if i + 1 == n { seg_end } else { t + hs };
+                    obs.on_accept(&AcceptedStep {
+                        index: stats.n_accepted,
+                        t,
+                        h: hs,
+                        t_end,
+                        before: &state,
+                        after: &next,
+                        trials: 1,
+                    });
+                    std::mem::swap(&mut state, &mut next);
+                    t = t_end;
+                    stats.n_accepted += 1;
+                    stats.n_trials += 1;
+                }
+                t_seg = seg_end;
+                obs.on_observation(seg, t, &state);
+            }
+        }
+        StepMode::Adaptive {
+            rtol,
+            atol,
+            h_init,
+            h_min,
+            h_max,
+        } => {
+            if !solver.has_error_estimate() {
+                bail!(
+                    "solver '{}' has no embedded error estimate; use StepMode::Fixed",
+                    solver.name()
+                );
+            }
+            let p = solver.order() as f64;
+            // Controller memory: first advance seeds from h_init exactly
+            // like the one-shot loop; later advances continue with the
+            // carried step, which is what the one-shot loop would hold
+            // after its barrier landing at this t.
+            let mut h = if h_carry == 0.0 {
+                h_init.abs().min(h_max).max(h_min) * dir
+            } else {
+                h_carry
+            };
+            let mut next_obs = lead;
+            // Terminate on observation delivery instead of the one-shot's
+            // eps test against t1: every advance ends at its final event
+            // time, and all earlier decisions are target-relative, so the
+            // two loops take bitwise-identical steps.
+            while next_obs < k_total {
+                // fire observations the previous step happened to end on
+                // exactly (without having been clamped to them)
+                while next_obs < k_total && times[next_obs] == t {
+                    obs.on_observation(next_obs, t, &state);
+                    next_obs += 1;
+                }
+                if next_obs >= k_total {
+                    break;
+                }
+                let target = times[next_obs];
+                let mut aimed = false;
+                let h_free = h;
+                if (t + h - target) * dir > 0.0 {
+                    h = target - t;
+                    aimed = true;
+                }
+                let mut trials = 0usize;
+                loop {
+                    trials += 1;
+                    stats.n_trials += 1;
+                    let has_err =
+                        solver.step_into(dynamics, t, h, &state, &mut next, &mut err, ws);
+                    let en = norm.eval(
+                        if has_err { &err } else { &[] },
+                        &state.z,
+                        &next.z,
+                        rtol,
+                        atol,
+                    );
+                    obs.on_trial(t, h, next.bytes(), en <= 1.0);
+                    let at_floor = h.abs() <= h_min * 1.0000001;
+                    if en <= 1.0 || at_floor {
+                        // accept; a step that aimed at a barrier lands on
+                        // it bitwise
+                        let t_end = if aimed { target } else { t + h };
+                        obs.on_accept(&AcceptedStep {
+                            index: stats.n_accepted,
+                            t,
+                            h,
+                            t_end,
+                            before: &state,
+                            after: &next,
+                            trials,
+                        });
+                        std::mem::swap(&mut state, &mut next);
+                        t = t_end;
+                        stats.n_accepted += 1;
+                        if aimed && next_obs < k_total {
+                            obs.on_observation(next_obs, t, &state);
+                            next_obs += 1;
+                        }
+                        // grow for the next step (Hairer's controller)
+                        let factor = if en > 0.0 {
+                            (0.9 * en.powf(-1.0 / p)).clamp(0.2, 10.0)
+                        } else {
+                            10.0
+                        };
+                        h = (h.abs() * factor).clamp(h_min, h_max) * dir;
+                        // restore the controller's pre-clamp step across a
+                        // barrier landing (same output-point handling as
+                        // the one-shot loop)
+                        if aimed && h_free.abs() > h.abs() {
+                            h = h_free;
+                        }
+                        break;
+                    }
+                    // reject: shrink; a shrunken step no longer lands on
+                    // the barrier
+                    let factor = (0.9 * en.powf(-1.0 / p)).clamp(0.2, 0.9);
+                    h = (h.abs() * factor).max(h_min) * dir;
+                    aimed = false;
+                    if trials > 60 {
+                        bail!(
+                            "step-size search did not converge at t={t} (h={h}, err={en})"
+                        );
+                    }
+                }
+            }
+            h_carry = h;
+        }
+    }
+
+    stats.f_evals = dynamics.counters().f_evals.get() - f0;
+    // Commit: the advance ended on its final observation barrier.
+    rs.t = t;
+    rs.dir = dir;
+    rs.h = h_carry;
+    rs.fired_at_t = true;
+    rs.state.z.copy_from_slice(&state.z);
+    match (&mut rs.state.v, &state.v) {
+        (Some(dst), Some(src)) => dst.copy_from_slice(src),
+        (None, None) => {}
+        // unreachable in practice (the loop buffers share rs.state's
+        // v-ness), but stay value-correct rather than assert
+        (dst, src) => *dst = src.clone(),
+    }
+    ws.put_state(state);
+    ws.put_state(next);
+    ws.put_err(err);
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
 // Batch-first integration: per-sample step control with an active mask.
 // ---------------------------------------------------------------------------
 

@@ -16,7 +16,12 @@
 //!   serve path — per-shard staging, concurrent dispatch on the
 //!   worker's persistent shard pool, observation scatter through
 //!   per-shard observers, merge — must hold the same zero-allocation
-//!   bar once its per-shard workspaces are warm.
+//!   bar once its per-shard workspaces are warm,
+//! * a **warmed session step** (`SessionTable` + `session_id` envelope):
+//!   each incremental advance runs in the session's warm solver
+//!   workspace and the envelope's pooled buffers, and
+//! * the full **TCP loopback** round trip (client encode → pooled
+//!   envelope decode → solve → coalesced writer → client parse).
 //!
 //! The per-request envelope (`Pending` + its response buffers) is
 //! allocated once at submit time and recycled here via
@@ -29,7 +34,9 @@
 use mali_ode::serve::transport::{
     Bridge, ClientEvent, ResponseFrame, TcpClient, TcpFront, TransportConfig,
 };
-use mali_ode::serve::{ModelRegistry, Pending, RequestClass, Server, ServerConfig, ServeWorker};
+use mali_ode::serve::{
+    ModelRegistry, Pending, RequestClass, Server, ServerConfig, ServeWorker, SessionTable,
+};
 use mali_ode::solvers::dynamics::LinearToy;
 use mali_ode::solvers::integrate::{ObsGrid, StepMode};
 use std::sync::Arc;
@@ -156,6 +163,47 @@ fn warmed_serve_loop_is_allocation_free() {
         .collect();
     assert_zero_alloc_steady(&mut sharded, &mut batch, &adaptive_rows, "sharded adaptive");
     assert_eq!(sharded.metrics().failed, 0);
+
+    // ---- warmed session step: incremental advance allocates nothing ------
+    // a session envelope is served solo (sequentially dependent on the
+    // carried state); after one sizing pass each advance must run
+    // entirely in the session's warm solver workspace plus the
+    // envelope's pooled buffers
+    let sessions = Arc::new(SessionTable::new());
+    let sid = sessions
+        .open(&registry, "toy", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.01 }, &row)
+        .unwrap();
+    let mut session_worker = ServeWorker::with_shards(registry.clone(), 1);
+    session_worker.attach_sessions(sessions.clone());
+    let class = sessions.class_of(sid).unwrap();
+    let mut env = vec![Pending::new(class, Vec::new())];
+    env[0].session_id = sid;
+    let mut t = 0.0f64;
+    for pass in 0..3 {
+        // two fresh events per advance, strictly past the barrier
+        env[0].times.clear();
+        t += 0.05;
+        env[0].times.push(t);
+        t += 0.05;
+        env[0].times.push(t);
+        if pass == 2 {
+            let a0 = allocs();
+            session_worker.process(&mut env).unwrap();
+            let delta = allocs() - a0;
+            assert_eq!(
+                delta, 0,
+                "warmed session step allocated {delta} times over {} accepted steps",
+                env[0].n_accepted
+            );
+        } else {
+            session_worker.process(&mut env).unwrap();
+        }
+        assert!(env[0].n_accepted > 0, "session advance integrated nothing");
+        assert_eq!(env[0].obs.len(), 2 * N_Z, "one snapshot row per event");
+    }
+    assert_eq!(session_worker.metrics().session_steps, 3);
+    assert_eq!(session_worker.metrics().failed, 0);
+    assert!(sessions.close(sid));
 
     // ---- TCP transport: the warmed read → submit → respond loop ----------
     // the full loopback stack in one measured window — client frame

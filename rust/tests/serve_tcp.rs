@@ -291,7 +291,7 @@ fn malformed_input_is_contained() {
     // (the length slot plus a type byte completes the 5-byte header the
     // reader validates against max_frame)
     let mut raw = TcpStream::connect(addr).unwrap();
-    raw.write_all(b"MALI\x01\x00\x00\x00").unwrap();
+    raw.write_all(b"MALI\x02\x00\x00\x00").unwrap();
     raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
     raw.write_all(&[0x02]).unwrap();
     let mut buf = [0u8; 8];
@@ -299,7 +299,7 @@ fn malformed_input_is_contained() {
 
     // unknown frame type: same fate
     let mut raw = TcpStream::connect(addr).unwrap();
-    raw.write_all(b"MALI\x01\x00\x00\x00").unwrap();
+    raw.write_all(b"MALI\x02\x00\x00\x00").unwrap();
     raw.write_all(&2u32.to_le_bytes()).unwrap();
     raw.write_all(&[0x7f, 0x00]).unwrap();
     assert_eq!(raw.read(&mut buf).unwrap_or(0), 0, "unknown frame must close");
@@ -328,6 +328,149 @@ fn malformed_input_is_contained() {
     let direct = server.submit(&class, &z0).unwrap().wait().unwrap();
     assert_eq!(resp.z_final, direct.z_final);
 
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// Session transparency: a session streamed over TCP is bitwise an
+/// in-process session fed the same events — every step's snapshots,
+/// final state and step/trial counts — and HEALTH sees the live
+/// session and the admitted steps.
+#[test]
+fn tcp_sessions_are_bitwise_in_process() {
+    let server = start(64, 2, 8);
+    let front = front_for(&server, TransportConfig::default());
+    let mut cl = TcpClient::connect(front.local_addr()).unwrap();
+
+    let mode = StepMode::adaptive(1e-4, 1e-6);
+    let z0 = request_rows(1).remove(0);
+    let chunks: [&[f64]; 3] = [&[0.15], &[0.3, 0.45, 0.5], &[0.8, 1.4]];
+
+    let tcp_sid = cl.open_session(1, "toy", "alf", 0.0, &mode, &z0).unwrap();
+    let ref_sid = server
+        .open_session("toy", "alf", N_Z, 0.0, mode.clone(), &z0)
+        .unwrap();
+
+    let mut resp = ResponseFrame::default();
+    for (j, chunk) in chunks.iter().enumerate() {
+        cl.session_step(10 + j as u64, tcp_sid, chunk).unwrap();
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => assert_eq!(resp.req_id, 10 + j as u64),
+            other => panic!("step {j}: unexpected event {other:?}"),
+        }
+        let direct = server.session_step(ref_sid, chunk).unwrap().wait().unwrap();
+        assert_eq!(resp.z_final, direct.z_final, "step {j} final state bitwise");
+        assert_eq!(resp.obs, direct.obs, "step {j} snapshots bitwise");
+        assert_eq!(resp.n_accepted, direct.n_accepted, "step {j} steps");
+        assert_eq!(resp.n_trials, direct.n_trials, "step {j} trials");
+    }
+
+    let health = cl.health(5).unwrap();
+    assert_eq!(health.sessions, 2, "both sessions are live");
+    assert_eq!(health.admitted, chunks.len() as u64, "each TCP step was admitted");
+    assert_eq!(health.shed_rate, 0.0);
+
+    cl.close_session(tcp_sid).unwrap();
+    assert!(server.close_session(ref_sid));
+    assert_eq!(server.session_count(), 0);
+    cl.goodbye().unwrap();
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// A connection that dies mid-stream (no SESSION_CLOSE, no GOODBYE)
+/// must release its warm sessions server-side — the slots, not just the
+/// socket — and leave the front fully usable for new clients.
+#[test]
+fn dying_connection_releases_its_sessions() {
+    let server = start(16, 1, 4);
+    let front = front_for(&server, TransportConfig::default());
+    let addr = front.local_addr();
+
+    let mode = StepMode::Fixed { h: 0.05 };
+    let z0 = request_rows(1).remove(0);
+    {
+        let mut cl = TcpClient::connect(addr).unwrap();
+        let a = cl.open_session(1, "toy", "alf", 0.0, &mode, &z0).unwrap();
+        let _b = cl.open_session(2, "toy", "alf", 0.5, &mode, &z0).unwrap();
+        assert_eq!(server.session_count(), 2);
+        // one warm step so session `a` holds genuinely live solver state
+        cl.session_step(7, a, &[0.25]).unwrap();
+        let mut resp = ResponseFrame::default();
+        match cl.next_event(&mut resp).unwrap() {
+            ClientEvent::Response => assert_eq!(resp.req_id, 7),
+            other => panic!("unexpected event {other:?}"),
+        }
+        // drop without close/goodbye: the socket just vanishes
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.session_count() > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "connection teardown leaked {} warm sessions",
+            server.session_count()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the front is unharmed: a new client opens and streams normally
+    let mut cl = TcpClient::connect(addr).unwrap();
+    let sid = cl.open_session(3, "toy", "alf", 0.0, &mode, &z0).unwrap();
+    cl.session_step(1, sid, &[0.5]).unwrap();
+    let mut resp = ResponseFrame::default();
+    assert!(matches!(cl.next_event(&mut resp).unwrap(), ClientEvent::Response));
+    cl.close_session(sid).unwrap();
+    cl.goodbye().unwrap();
+    assert_eq!(server.session_count(), 0);
+    assert!(front.shutdown(Duration::from_secs(10)).flushed);
+}
+
+/// Session refusals are in-band and connection-scoped: unknown models
+/// fail the open, a sid from another connection is refused, and the
+/// per-connection session cap holds.
+#[test]
+fn session_refusals_are_contained() {
+    let server = start(16, 1, 4);
+    let front = front_for(
+        &server,
+        TransportConfig {
+            max_sessions: 1,
+            ..TransportConfig::default()
+        },
+    );
+    let addr = front.local_addr();
+    let mode = StepMode::Fixed { h: 0.05 };
+    let z0 = request_rows(1).remove(0);
+
+    let mut cl = TcpClient::connect(addr).unwrap();
+    assert!(
+        cl.open_session(1, "nope", "alf", 0.0, &mode, &z0).is_err(),
+        "unknown model must refuse the open"
+    );
+    let sid = cl.open_session(2, "toy", "alf", 0.0, &mode, &z0).unwrap();
+    assert!(
+        cl.open_session(3, "toy", "alf", 0.0, &mode, &z0).is_err(),
+        "second open must trip the per-connection cap"
+    );
+
+    // a different connection cannot step this connection's session
+    let mut intruder = TcpClient::connect(addr).unwrap();
+    intruder.session_step(9, sid, &[0.5]).unwrap();
+    let mut resp = ResponseFrame::default();
+    match intruder.next_event(&mut resp).unwrap() {
+        ClientEvent::ReqErr { req_id, msg } => {
+            assert_eq!(req_id, 9);
+            assert!(msg.contains("not opened on this connection"), "{msg}");
+        }
+        other => panic!("expected REQ_ERR, got {other:?}"),
+    }
+    // ...and the owner still streams on it untouched
+    cl.session_step(4, sid, &[0.5]).unwrap();
+    match cl.next_event(&mut resp).unwrap() {
+        ClientEvent::Response => assert_eq!(resp.req_id, 4),
+        other => panic!("unexpected event {other:?}"),
+    }
+    cl.close_session(sid).unwrap();
+    cl.goodbye().unwrap();
+    intruder.goodbye().unwrap();
     assert!(front.shutdown(Duration::from_secs(10)).flushed);
 }
 

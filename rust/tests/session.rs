@@ -1,0 +1,325 @@
+//! Acceptance suite for streaming sessions (DESIGN.md §12): the serve
+//! layer's incremental-inference contract.
+//!
+//! * **incremental ≡ one-shot** — a session advanced through K event
+//!   batches produces **bitwise** the same per-observation snapshots,
+//!   final state and step/trial counts as one one-shot request whose
+//!   grid is the concatenation of all the batches.  Warm state is an
+//!   optimization, never a different computation — fixed and adaptive
+//!   stepping alike (the adaptive controller's `h` is carried across
+//!   steps exactly as it evolves inside the one-shot solve).
+//! * **resume-boundary semantics** — a leading event time bitwise-equal
+//!   to the session's barrier fires exactly once (the open-time barrier
+//!   snapshot is the seed state); firing the same barrier twice is an
+//!   error, never a silent duplicate, and the failed session is
+//!   poisoned until closed.
+//! * **hot-swap pinning** — `ModelRegistry::hot_swap` publishes new θ
+//!   for *future* pins only: an open session (and any held version
+//!   snapshot) keeps the exact parameters it pinned, while fresh
+//!   requests see the new version.
+//! * **lifecycle** — one step in flight per session (`BadRequest`, not
+//!   a shed), idempotent close, unknown/closed ids refused, open-time
+//!   validation.
+
+use mali_ode::serve::{ModelRegistry, RequestClass, Server, ServerConfig, SubmitError};
+use mali_ode::solvers::dynamics::{LinearToy, MlpDynamics};
+use mali_ode::solvers::integrate::{ObsGrid, StepMode};
+use mali_ode::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N_Z: usize = 4;
+
+fn registry() -> Arc<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    reg.register("lin", Box::new(LinearToy::new(-0.35, N_Z)));
+    reg.register("mlp", Box::new(MlpDynamics::new(N_Z, 8, &mut Rng::new(23))));
+    Arc::new(reg)
+}
+
+fn start(registry: Arc<ModelRegistry>, workers: usize) -> Server {
+    Server::start(
+        registry,
+        ServerConfig {
+            queue_capacity: 64,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            workers,
+            shards: 1,
+        },
+    )
+}
+
+fn z0() -> Vec<f32> {
+    (0..N_Z).map(|i| 0.3 + 0.1 * i as f32).collect()
+}
+
+/// The standard irregular event stream, chunked as a client would
+/// deliver it: single events and multi-event bursts interleaved.
+fn chunks() -> Vec<Vec<f64>> {
+    vec![
+        vec![0.15],
+        vec![0.3, 0.45, 0.5],
+        vec![0.8],
+        vec![0.95, 1.4],
+    ]
+}
+
+fn one_shot(server: &Server, model: &str, mode: &StepMode, times: &[f64], z0: &[f32]) -> mali_ode::serve::ServeResponse {
+    let class = Arc::new(
+        RequestClass::new(
+            model,
+            "alf",
+            N_Z,
+            0.0,
+            *times.last().unwrap(),
+            mode.clone(),
+            ObsGrid::new(times.to_vec()).unwrap(),
+        )
+        .unwrap(),
+    );
+    server.submit(&class, z0).unwrap().wait().unwrap()
+}
+
+/// The tentpole: incremental session advance is bitwise the one-shot
+/// solve over the concatenated grid — snapshots, final state and
+/// step/trial counts — for both stepping modes and both a linear and a
+/// nonlinear (MLP) model.
+#[test]
+fn incremental_session_is_bitwise_one_shot() {
+    for mode in [StepMode::Fixed { h: 0.05 }, StepMode::adaptive(1e-5, 1e-7)] {
+        for model in ["lin", "mlp"] {
+            let server = start(registry(), 2);
+            let z0 = z0();
+            let all: Vec<f64> = chunks().concat();
+            let reference = one_shot(&server, model, &mode, &all, &z0);
+
+            let sid = server
+                .open_session(model, "alf", N_Z, 0.0, mode.clone(), &z0)
+                .unwrap();
+            let mut obs = Vec::new();
+            let mut n_accepted = 0usize;
+            let mut n_trials = 0usize;
+            let mut z_final = Vec::new();
+            for chunk in chunks() {
+                let r = server.session_step(sid, &chunk).unwrap().wait().unwrap();
+                assert_eq!(r.obs.len(), chunk.len() * N_Z, "one row per event");
+                assert_eq!(&r.obs[(chunk.len() - 1) * N_Z..], &r.z_final[..]);
+                obs.extend_from_slice(&r.obs);
+                n_accepted += r.n_accepted;
+                n_trials += r.n_trials;
+                z_final = r.z_final;
+            }
+            assert!(server.close_session(sid));
+
+            assert_eq!(obs, reference.obs, "{model}/{mode:?}: snapshots");
+            assert_eq!(z_final, reference.z_final, "{model}/{mode:?}: final state");
+            assert_eq!(n_accepted, reference.n_accepted, "{model}/{mode:?}: steps");
+            assert_eq!(n_trials, reference.n_trials, "{model}/{mode:?}: trials");
+
+            let metrics = server.shutdown();
+            assert_eq!(metrics.failed, 0);
+            assert_eq!(metrics.session_steps, chunks().len() as u64);
+        }
+    }
+}
+
+/// Resume-boundary rule, positive half: a session opened at `t0` fires
+/// the barrier snapshot (the seed state, bitwise) exactly once when the
+/// first step leads with `t0`, and the remaining events match the
+/// one-shot solve over the strictly-interior grid.
+#[test]
+fn barrier_event_fires_exactly_once() {
+    let server = start(registry(), 1);
+    let z0 = z0();
+    let t0 = 0.2f64;
+    let interior = [0.6, 0.9];
+
+    let sid = server
+        .open_session("mlp", "alf", N_Z, t0, StepMode::Fixed { h: 0.05 }, &z0)
+        .unwrap();
+    let r = server
+        .session_step(sid, &[t0, interior[0], interior[1]])
+        .unwrap()
+        .wait()
+        .unwrap();
+    // row 0 is the seed state itself — observed, not re-integrated
+    assert_eq!(&r.obs[..N_Z], &z0[..], "barrier snapshot is the seed state");
+
+    // the interior rows are the plain resumed solve from (t0, z0)
+    let class = Arc::new(
+        RequestClass::new(
+            "mlp",
+            "alf",
+            N_Z,
+            t0,
+            interior[1],
+            StepMode::Fixed { h: 0.05 },
+            ObsGrid::new(interior.to_vec()).unwrap(),
+        )
+        .unwrap(),
+    );
+    let reference = server.submit(&class, &z0).unwrap().wait().unwrap();
+    assert_eq!(&r.obs[N_Z..], &reference.obs[..], "interior snapshots");
+    assert_eq!(r.z_final, reference.z_final);
+    assert!(server.close_session(sid));
+    server.shutdown();
+}
+
+/// Resume-boundary rule, negative half: re-firing an already-fired
+/// barrier is an explicit error (never a silent duplicate row), the
+/// failed session is poisoned against further steps, and close still
+/// releases it.
+#[test]
+fn duplicate_barrier_is_an_error_and_poisons() {
+    let server = start(registry(), 1);
+    let z0 = z0();
+    let sid = server
+        .open_session("lin", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.05 }, &z0)
+        .unwrap();
+    let r = server.session_step(sid, &[0.3, 0.5]).unwrap().wait().unwrap();
+    assert_eq!(r.obs.len(), 2 * N_Z);
+
+    // 0.5 was observed by the previous step: leading with it again must
+    // fail loudly instead of emitting the row twice
+    let err = server
+        .session_step(sid, &[0.5, 0.7])
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("already") || msg.contains("fired") || msg.contains("duplicate"),
+        "unexpected duplicate-barrier error: {msg}"
+    );
+
+    // the session is poisoned: even a well-formed step is refused...
+    let err = server
+        .session_step(sid, &[0.9])
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("poisoned"),
+        "expected poisoned-session refusal, got: {err:#}"
+    );
+    // ...but the slot is not leaked
+    assert!(server.close_session(sid));
+    assert_eq!(server.session_count(), 0);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.failed, 2, "exactly the two refused steps failed");
+}
+
+/// Hot-swap pinning: an open session and a held version snapshot keep
+/// the θ they pinned across `hot_swap`; only new pins see the new
+/// parameters.
+#[test]
+fn hot_swap_never_changes_a_pinned_session() {
+    let registry = registry();
+    let server = start(registry.clone(), 1);
+    let z0 = z0();
+    let mode = StepMode::Fixed { h: 0.05 };
+    let all: Vec<f64> = chunks().concat();
+
+    // pre-swap ground truth + a held version snapshot
+    let old_reference = one_shot(&server, "mlp", &mode, &all, &z0);
+    let id = registry.resolve("mlp").unwrap();
+    let pinned = registry.snapshot(id).unwrap();
+    assert_eq!(pinned.version(), 1);
+    let theta0 = pinned.dynamics().params().to_vec();
+
+    // open before the swap: the session pins version 1
+    let sid = server.open_session("mlp", "alf", N_Z, 0.0, mode.clone(), &z0).unwrap();
+
+    // publish new parameters mid-stream — no drain, no rebuild
+    let theta1: Vec<f32> = theta0.iter().map(|p| p * 1.25 + 0.01).collect();
+    let v = registry.hot_swap("mlp", &theta1).unwrap();
+    assert_eq!(v, 2);
+    assert_eq!(registry.snapshot(id).unwrap().version(), 2);
+
+    // the held snapshot still reads the exact old θ
+    assert_eq!(pinned.dynamics().params(), &theta0[..]);
+
+    // the open session still serves the exact old model...
+    let mut obs = Vec::new();
+    let mut z_final = Vec::new();
+    for chunk in chunks() {
+        let r = server.session_step(sid, &chunk).unwrap().wait().unwrap();
+        obs.extend_from_slice(&r.obs);
+        z_final = r.z_final;
+    }
+    assert_eq!(obs, old_reference.obs, "session θ changed under hot_swap");
+    assert_eq!(z_final, old_reference.z_final);
+    assert!(server.close_session(sid));
+
+    // ...while fresh work (one-shot or a new session) pins version 2
+    let new_reference = one_shot(&server, "mlp", &mode, &all, &z0);
+    assert_ne!(new_reference.z_final, old_reference.z_final, "swap must be visible to new pins");
+    let sid2 = server.open_session("mlp", "alf", N_Z, 0.0, mode.clone(), &z0).unwrap();
+    let mut obs2 = Vec::new();
+    for chunk in chunks() {
+        obs2.extend_from_slice(&server.session_step(sid2, &chunk).unwrap().wait().unwrap().obs);
+    }
+    assert_eq!(obs2, new_reference.obs, "new session must pin the new version");
+    assert!(server.close_session(sid2));
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.failed, 0);
+}
+
+/// One step in flight per session: the second concurrent step is a
+/// `BadRequest` (a client protocol violation), not a shed — it must not
+/// touch the overload accounting.
+#[test]
+fn concurrent_step_is_bad_request_not_shed() {
+    // paused server (no workers): the first step stays queued for sure
+    let server = start(registry(), 0);
+    let sid = server
+        .open_session("lin", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.1 }, &z0())
+        .unwrap();
+    let first = server.session_step(sid, &[0.5]).unwrap();
+    match server.session_step(sid, &[0.7]) {
+        Err(SubmitError::BadRequest(msg)) => {
+            assert!(msg.contains("in flight"), "unexpected refusal: {msg}")
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    assert_eq!(server.shed_count(), 0, "busy refusal must not count as a shed");
+    let metrics = server.shutdown();
+    // the queued step was failed by shutdown, not lost
+    assert!(first.wait().is_err());
+    assert_eq!(metrics.shed, 0);
+}
+
+/// Lifecycle edges: open-time validation, idempotent close, and refusal
+/// of unknown / closed session ids.
+#[test]
+fn lifecycle_validation_and_idempotent_close() {
+    let server = start(registry(), 1);
+
+    // open-time validation: unknown model / unknown solver / bad width
+    assert!(server.open_session("nope", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.1 }, &z0()).is_err());
+    assert!(server.open_session("lin", "not-a-solver", N_Z, 0.0, StepMode::Fixed { h: 0.1 }, &z0()).is_err());
+    assert!(server.open_session("lin", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.1 }, &[1.0]).is_err());
+    assert!(server
+        .open_session("lin", "alf", N_Z, f64::NAN, StepMode::Fixed { h: 0.1 }, &z0())
+        .is_err());
+    assert_eq!(server.session_count(), 0, "failed opens must not leak slots");
+
+    // unknown sid is refused before touching the queue
+    match server.session_step(999, &[0.5]) {
+        Err(SubmitError::BadRequest(msg)) => assert!(msg.contains("999")),
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+
+    let sid = server
+        .open_session("lin", "alf", N_Z, 0.0, StepMode::Fixed { h: 0.1 }, &z0())
+        .unwrap();
+    assert_eq!(server.session_count(), 1);
+    assert!(server.close_session(sid));
+    assert!(!server.close_session(sid), "close is idempotent");
+    assert_eq!(server.session_count(), 0);
+    assert!(server.session_step(sid, &[0.5]).is_err(), "stepping a closed session");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.failed, 0);
+}
