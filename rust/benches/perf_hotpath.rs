@@ -12,7 +12,10 @@
 //!   workspace `step_into`/`invert_and_vjp_into` path.  Identical
 //!   arithmetic (the wrappers delegate to the `_into` kernels), so the
 //!   ratio isolates pure allocator cost; the acceptance bar is ≥ 2× on
-//!   the small-`N_z` solo fixed-grid config.
+//!   the small-`N_z` solo fixed-grid config.  A third row runs the same
+//!   workspace round trip on the reversible-4 composition (three ψ
+//!   sub-steps, 3 f-evals per step, 4th order), recording what the
+//!   higher order costs per step at the same step count.
 //! * **tensor kernels** — elements/sec for the flat-buffer kernels
 //!   (`axpy_rows`, `add_scaled_rows_into`, `lincomb_into`,
 //!   `matmul_into`) through the chunked dispatch path vs the frozen
@@ -30,8 +33,8 @@
 //!   with the speedup over the 1-shard run.
 //! * **end-to-end grads** — steps/sec, heap allocations/step and heap
 //!   bytes/step (via a counting global allocator) for
-//!   solo/batch × fixed/adaptive × all four gradient methods on the E1
-//!   toy dynamics.
+//!   solo/batch × fixed/adaptive × all five gradient protocols on the
+//!   E1 toy dynamics.
 //!
 //! Run: `cargo bench --bench perf_hotpath` (append `-- --smoke` for the
 //! short CI windows; `MALI_BENCH_OUT` overrides the JSON path).
@@ -261,11 +264,27 @@ fn main() {
         roundtrip_ws(&*solver, &toy, &z0, h, n, &mut ws, &mut bufs);
         let after = alloc_snapshot();
 
+        // reversible-4 on the same workspace round trip: what 4th order
+        // (three chained ψ sub-steps) costs per step vs plain ALF
+        let rev4 = solver_by_name("reversible4").unwrap();
+        let mut ws_r = SolverWorkspace::new();
+        let mut bufs_r = [
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+            State { z: Vec::new(), v: None },
+        ];
+        let t_rev4 = time_until(budget, || {
+            std::hint::black_box(roundtrip_ws(&*rev4, &toy, &z0, h, n, &mut ws_r, &mut bufs_r));
+        });
+
         // 2n micro-steps per round trip (n forward + n reverse)
         let steps = 2.0 * n as f64;
         let sps_alloc = steps / t_alloc.min_s;
         let sps_ws = steps / t_ws.min_s;
+        let sps_rev4 = steps / t_rev4.min_s;
         let speedup = sps_ws / sps_alloc;
+        let alf_vs_rev4 = sps_ws / sps_rev4;
         table.row(&[
             format!("kernel.{label}.alloc"),
             format!("{sps_alloc:.0}"),
@@ -278,13 +297,25 @@ fn main() {
             format!("{:.2}", (after.0 - before.0) as f64 / steps),
             format!("{:.1}", (after.1 - before.1) as f64 / steps),
         ]);
+        table.row(&[
+            format!("kernel.{label}.rev4_ws"),
+            format!("{sps_rev4:.0}"),
+            "-".into(),
+            "-".into(),
+        ]);
         println!("kernel {label}: workspace vs allocating speedup = {speedup:.2}x");
+        println!(
+            "kernel {label}: reversible-4 {sps_rev4:.0} steps/s \
+             (ALF is {alf_vs_rev4:.2}x faster per step at the same grid)"
+        );
         speedups.push((
             label.to_string(),
             Json::obj(vec![
                 ("steps_per_sec_alloc", Json::Num(sps_alloc)),
                 ("steps_per_sec_ws", Json::Num(sps_ws)),
                 ("speedup_ws_vs_alloc", Json::Num(speedup)),
+                ("steps_per_sec_rev4_ws", Json::Num(sps_rev4)),
+                ("alf_vs_rev4_ws", Json::Num(alf_vs_rev4)),
                 (
                     "ws_allocs_per_step",
                     Json::Num((after.0 - before.0) as f64 / steps),
@@ -583,7 +614,7 @@ fn main() {
     let batch = 32usize;
     let t_end = 2.0;
     for &(mode_label, fixed) in &[("fixed", true), ("adaptive", false)] {
-        for method_name in ["mali", "aca", "naive", "adjoint"] {
+        for method_name in ["mali", "aca", "naive", "adjoint", "symplectic"] {
             let method = grad_by_name(method_name).unwrap();
             let solver = if method_name == "adjoint" {
                 solver_by_name("heun-euler").unwrap()

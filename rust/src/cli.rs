@@ -88,7 +88,9 @@ COMMANDS:
     list                       list registered experiments
     run <experiment>           run an experiment from configs/<experiment>.json
                                (fig5-native / table4-native run the fused
-                               native-dynamics E2 / E8 — no artifacts needed)
+                               native-dynamics E2 / E8 — no artifacts needed;
+                               fig4 / table1 also report the method grid:
+                               five gradient protocols × three solvers)
     train <config.json>        train a model from an explicit config path
     toy                        quick toy-ODE gradient-accuracy demo (Fig. 4)
     stability                  print damped-ALF A-stability region areas (App. Fig. 1)

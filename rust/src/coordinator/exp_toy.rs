@@ -21,15 +21,26 @@ use crate::util::json::Json;
 use crate::util::mem::{fmt_bytes, MemTracker};
 use anyhow::Result;
 
-pub const METHODS: [&str; 4] = ["naive", "adjoint", "aca", "mali"];
+pub const METHODS: [&str; 5] = ["naive", "adjoint", "aca", "mali", "symplectic"];
 
-/// Solver each gradient method uses on the toy problem: MALI needs ALF;
+/// The solver axis of the method-comparison grid: an adaptive RK pair, the
+/// paper's ALF, and the 4th-order reversible composition.
+pub const GRID_SOLVERS: [&str; 3] = ["heun-euler", "alf", "reversible4"];
+
+/// Solver each gradient method uses on the toy problem: MALI needs ALF
+/// (the symplectic adjoint also gets its symplectic reverse sweep there);
 /// the others use the paper's default adaptive RK (Dopri5 via torchdiffeq).
 fn solver_for(method: &str) -> &'static str {
     match method {
-        "mali" => "alf",
+        "mali" | "symplectic" => "alf",
         _ => "dopri5",
     }
+}
+
+/// Whether a `GradMethod` × `Solver` pair is runnable: MALI reconstructs
+/// the trajectory through ψ⁻¹, so it needs an invertible solver.
+pub fn supports(method: &str, solver: &str) -> bool {
+    method != "mali" || matches!(solver, "alf" | "reversible4")
 }
 
 /// Fig. 4 (a,b,c).  Returns the summary rows for `runs/fig4.json`.
@@ -132,6 +143,57 @@ pub fn fig4(scale: Scale, _seed: u64) -> Result<Json> {
         &mem_series,
     );
 
+    // ---- method-comparison grid: five protocols × three solvers ----------
+    //
+    // One T on the toy problem per supported (method, solver) pair — the
+    // convergence/memory-law result the source paper doesn't have.  Rows
+    // carry a "solver" key, so the canonical per-method rows above stay
+    // first for the figure filters.
+    let t_grid = 5.0;
+    let mut grid_table = Table::new(
+        "Fig 4 grid: gradient error by method × solver (T = 5)",
+        &["method", "solver", "err_dz0", "err_dalpha"],
+    );
+    for method in METHODS {
+        for sname in GRID_SOLVERS {
+            if !supports(method, sname) {
+                continue;
+            }
+            let m = grad_by_name(method)?;
+            let solver = solver_by_name(sname)?;
+            let toy = LinearToy::new(alpha, 1);
+            let (gz_ref, ga_ref) = toy.analytic_grads(&z0, t_grid);
+            let spec = IvpSpec::adaptive(0.0, t_grid, rtol, atol);
+            let bspec = BatchSpec::new(z0.len(), 1);
+            let tracker = MemTracker::new();
+            let res =
+                grad_batched(&*m, &toy, &*solver, &spec, &z0, &bspec, &SquareLoss, tracker)?;
+            let ref_norm: f64 = gz_ref.iter().map(|&g| (g as f64).abs()).sum();
+            let e_z: f64 = res
+                .grad_z0
+                .iter()
+                .zip(&gz_ref)
+                .map(|(a, b)| ((a - b) as f64).abs())
+                .sum::<f64>()
+                / ref_norm.max(1e-30);
+            let e_a = (res.grad_theta[0] as f64 - ga_ref).abs() / ga_ref.abs().max(1e-30);
+            grid_table.row(&[
+                method.to_string(),
+                sname.to_string(),
+                format!("{e_z:.3e}"),
+                format!("{e_a:.3e}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("method", Json::Str(method.into())),
+                ("solver", Json::Str(sname.into())),
+                ("T", Json::Num(t_grid)),
+                ("err_dz0", Json::Num(e_z)),
+                ("err_dalpha", Json::Num(e_a)),
+            ]));
+        }
+    }
+    grid_table.print();
+
     // Headline checks the paper's figure makes visually:
     let mali_idx = METHODS.iter().position(|&m| m == "mali").unwrap();
     let adj_idx = METHODS.iter().position(|&m| m == "adjoint").unwrap();
@@ -206,6 +268,47 @@ pub fn table1(scale: Scale, seed: u64) -> Result<Json> {
         ]));
     }
     table.print();
+
+    // ---- method-comparison grid: the same accounting per solver ---------
+    //
+    // Rows carry a "solver" key so the canonical per-method rows above stay
+    // first for the ordering filters.
+    let mut grid_table = Table::new(
+        "Table 1 grid: accounting by method × solver",
+        &["method", "solver", "f evals", "vjp evals", "N_t", "peak mem"],
+    );
+    for method in METHODS {
+        for sname in GRID_SOLVERS {
+            if !supports(method, sname) {
+                continue;
+            }
+            let m = grad_by_name(method)?;
+            let solver = solver_by_name(sname)?;
+            let tracker = MemTracker::new();
+            let res =
+                grad_batched(&*m, &mlp, &*solver, &spec, &z0, &bspec, &SquareLoss, tracker)?;
+            let s = &res.stats;
+            grid_table.row(&[
+                method.to_string(),
+                sname.to_string(),
+                s.f_evals.to_string(),
+                s.vjp_evals.to_string(),
+                s.fwd.n_accepted.to_string(),
+                fmt_bytes(s.peak_mem_bytes),
+            ]);
+            rows.push(Json::obj(vec![
+                ("method", Json::Str(method.into())),
+                ("solver", Json::Str(sname.into())),
+                ("f_evals", Json::Num(s.f_evals as f64)),
+                ("vjp_evals", Json::Num(s.vjp_evals as f64)),
+                ("n_t", Json::Num(s.fwd.n_accepted as f64)),
+                ("m", Json::Num(s.fwd.m())),
+                ("peak_mem_bytes", Json::Num(s.peak_mem_bytes as f64)),
+                ("graph_depth", Json::Num(s.graph_depth as f64)),
+            ]));
+        }
+    }
+    grid_table.print();
     // The paper's ordering: naive ≥ ACA > MALI ≈ adjoint in memory.
     println!(
         "ordering check (naive ≥ aca > mali, adjoint ≤ mali): {}",
@@ -296,6 +399,34 @@ mod tests {
         let naive = mems("naive");
         assert_eq!(mali.first(), mali.last(), "MALI memory not constant: {mali:?}");
         assert!(naive.last() > naive.first(), "naive memory flat: {naive:?}");
+
+        // method grid: every supported protocol × solver pair reported
+        let grid: Vec<_> = rows
+            .iter()
+            .filter(|r| !r.get("solver").is_null())
+            .collect();
+        assert_eq!(grid.len(), 14, "5 methods × 3 solvers − mali×heun-euler");
+        for r in &grid {
+            let e = r.get("err_dz0").as_f64().unwrap();
+            assert!(e.is_finite() && e < 1.0, "grid row diverged: {e}");
+        }
+        let grid_err = |method: &str, solver: &str| -> f64 {
+            grid.iter()
+                .find(|r| {
+                    r.get("method").as_str() == Some(method)
+                        && r.get("solver").as_str() == Some(solver)
+                })
+                .and_then(|r| r.get("err_dz0").as_f64())
+                .unwrap()
+        };
+        // the exact protocols track the analytic gradient on every solver
+        for m in ["mali", "aca", "naive", "symplectic"] {
+            for s in GRID_SOLVERS {
+                if supports(m, s) {
+                    assert!(grid_err(m, s) < 1e-2, "{m}×{s}: {}", grid_err(m, s));
+                }
+            }
+        }
     }
 
     #[test]
@@ -311,6 +442,14 @@ mod tests {
         assert!(peak("naive") >= peak("aca"));
         assert!(peak("aca") > peak("mali"));
         assert!(peak("adjoint") <= peak("mali"));
+        // symplectic holds the same checkpoint store as ACA at its peak
+        assert!(peak("symplectic") <= peak("aca"));
+        // method grid present for every supported pair
+        let grid = rows
+            .iter()
+            .filter(|r| !r.get("solver").is_null())
+            .count();
+        assert_eq!(grid, 14, "5 methods × 3 solvers − mali×heun-euler");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! | naive    | [`naive`]    | full tape incl. rejected trials| `N_z·N_f·N_t·m`       |
 //! | adjoint  | [`adjoint`]  | re-solved reverse-time IVP     | `N_z·N_f`             |
 //! | ACA      | [`aca`]      | checkpoints of accepted steps  | `N_z(N_f + N_t)`      |
+//! | symplectic | [`symplectic`] | checkpoints, released as consumed | `N_z·N_t + stage` |
 //! | **MALI** | [`mali`]     | ψ⁻¹-reconstructed (exact)      | `N_z(N_f + 1)`        |
 //!
 //! All four share the [`Solver`]/[`Dynamics`] abstractions, report
@@ -40,6 +41,7 @@ pub mod adjoint;
 pub mod batch_driver;
 pub mod mali;
 pub mod naive;
+pub mod symplectic;
 
 use crate::solvers::batch::BatchSpec;
 use crate::solvers::dynamics::Dynamics;
@@ -517,6 +519,7 @@ pub fn by_name(name: &str) -> Result<Box<dyn GradMethod + Send + Sync>> {
         "naive" => Box::new(naive::Naive),
         "adjoint" => Box::new(adjoint::Adjoint::default()),
         "adjoint-seminorm" | "seminorm" => Box::new(adjoint::Adjoint { seminorm: true }),
+        "symplectic" => Box::new(symplectic::SymplecticAdjoint),
         other => anyhow::bail!("unknown gradient method '{other}'"),
     })
 }
@@ -581,7 +584,7 @@ mod tests {
 
     #[test]
     fn factory_covers_methods() {
-        for m in ["mali", "aca", "naive", "adjoint", "seminorm"] {
+        for m in ["mali", "aca", "naive", "adjoint", "seminorm", "symplectic"] {
             assert!(by_name(m).is_ok(), "{m}");
         }
         assert!(by_name("bogus").is_err());

@@ -1,0 +1,439 @@
+//! Symplectic adjoint — Matsubara et al. (NeurIPS 2021), the fifth
+//! gradient protocol.
+//!
+//! Forward: checkpoint the accepted trajectory exactly like ACA.
+//! Backward: integrate the adjoint system *in reverse* through the same
+//! discrete map the forward used — `step_vjp` of one forward step is one
+//! reverse step of the discrete adjoint system, and when the solver is
+//! symplectic/time-symmetric (ALF at η = 1, or the reversible-4
+//! composition) that reverse sweep is itself a symplectic integration of
+//! the continuous adjoint flow, which is Matsubara et al.'s observation.
+//! For a non-symmetric solver (RK) the method degrades gracefully to a
+//! checkpointed discrete adjoint — still *exact* to roundoff, just
+//! without the symplectic-conjugacy structure.
+//!
+//! The memory law is the part that differs from ACA: each checkpoint is
+//! **consumed** by the backward sweep (popped and released the moment its
+//! local vjp has been taken), so live checkpoint memory *decreases*
+//! linearly during the reverse pass instead of staying flat until the
+//! end.  The peak is still the full checkpoint store `N_z·N_t` plus one
+//! step's stage scratch — Matsubara's `O(N_z·N_t + stage)` bound, sitting
+//! between ACA (`N_z(N_f + N_t)`, holds all local graphs' inputs AND the
+//! tape) and MALI (`N_z(N_f + 1)`, constant in steps).  The MemTracker
+//! assertions in `tests/grad_methods.rs` pin peak ≤ the ACA bound and the
+//! monotone release.
+//!
+//! Gradients are bit-for-bit the ACA sequence (same `step_vjp` chain over
+//! the same accepted steps), so this method joins the
+//! `mali ≡ aca ≡ naive ≡ symplectic` exact-agreement set in
+//! `tests/prop_grad.rs`.
+
+use super::aca::{
+    init_hop_batch, replay_backward_batch, replay_backward_batch_obs, replay_backward_obs,
+};
+use super::{
+    BatchGradResult, BatchLossHead, BatchObsGradResult, BatchObsLossHead, GradMethod, GradResult,
+    GradStats, IvpSpec, LossHead, ObsGrid, ObsGradResult, ObsLossHead,
+};
+use crate::solvers::batch::{BatchSpec, BatchState};
+use crate::solvers::dynamics::Dynamics;
+use crate::solvers::integrate::{
+    integrate, integrate_batch, integrate_batch_obs, integrate_obs, AcceptedStep,
+    BatchAcceptedStep, BatchStepObserver, StepObserver,
+};
+use crate::solvers::workspace::{BatchWorkspace, SolverWorkspace};
+use crate::solvers::{Solver, State};
+use crate::tensor::axpy;
+use crate::util::mem::{MemTracker, TrackedBuf};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+pub struct SymplecticAdjoint;
+
+/// Checkpoint tape: `(t, h, state-before)` per accepted step plus the
+/// observation marks, with the tracked byte accounting kept *per step* so
+/// the backward sweep can release each checkpoint as it consumes it.
+struct Tape {
+    tracker: Arc<MemTracker>,
+    steps: Vec<(f64, f64, State)>,
+    marks: Vec<(usize, usize)>,
+    bufs: Vec<TrackedBuf>,
+}
+
+impl Tape {
+    fn new(tracker: Arc<MemTracker>) -> Self {
+        Tape {
+            tracker,
+            steps: Vec::new(),
+            marks: Vec::new(),
+            bufs: Vec::new(),
+        }
+    }
+
+    /// Release the tracked bytes of the most recent still-held checkpoint
+    /// (z and, for augmented states, v).
+    fn release_last(&mut self, had_v: bool) {
+        self.bufs.pop();
+        if had_v {
+            self.bufs.pop();
+        }
+    }
+}
+
+impl StepObserver for Tape {
+    fn on_accept(&mut self, step: &AcceptedStep) {
+        self.bufs.push(TrackedBuf::new(
+            step.before.z.clone(),
+            self.tracker.clone(),
+        ));
+        if let Some(v) = &step.before.v {
+            self.bufs
+                .push(TrackedBuf::new(v.clone(), self.tracker.clone()));
+        }
+        self.steps.push((step.t, step.h, step.before.clone()));
+    }
+
+    fn on_observation(&mut self, k: usize, _t: f64, _state: &State) {
+        self.marks.push((k, self.steps.len()));
+    }
+}
+
+/// Batched tape: one step list per sample (the lockstep replay shared
+/// with ACA walks them), tracked bytes held until the replay finishes.
+struct BatchTape {
+    tracker: Arc<MemTracker>,
+    steps: Vec<Vec<(f64, f64, State)>>,
+    marks: Vec<Vec<(usize, usize)>>,
+    bufs: Vec<TrackedBuf>,
+}
+
+impl BatchTape {
+    fn new(tracker: Arc<MemTracker>, batch: usize) -> Self {
+        BatchTape {
+            tracker,
+            steps: vec![Vec::new(); batch],
+            marks: vec![Vec::new(); batch],
+            bufs: Vec::new(),
+        }
+    }
+}
+
+impl BatchStepObserver for BatchTape {
+    fn on_accept(&mut self, step: &BatchAcceptedStep) {
+        let before = step.before_state();
+        self.bufs
+            .push(TrackedBuf::new(before.z.clone(), self.tracker.clone()));
+        if let Some(v) = &before.v {
+            self.bufs
+                .push(TrackedBuf::new(v.clone(), self.tracker.clone()));
+        }
+        self.steps[step.sample].push((step.t, step.h, before));
+    }
+
+    fn on_observation(&mut self, sample: usize, k: usize, _t: f64, _z: &[f32], _v: Option<&[f32]>) {
+        self.marks[sample].push((k, self.steps[sample].len()));
+    }
+}
+
+impl GradMethod for SymplecticAdjoint {
+    fn name(&self) -> &'static str {
+        "symplectic"
+    }
+
+    fn grad(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        loss: &dyn LossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<GradResult> {
+        let c = dynamics.counters();
+        c.reset();
+
+        // ---- forward with checkpointing ---------------------------------
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut tape = Tape::new(tracker.clone());
+        let (s_end, fwd) = integrate(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
+        )?;
+        let (loss_val, dl_dz) = loss.loss_grad(&s_end.z);
+        let n = tape.steps.len();
+
+        // ---- backward: reverse adjoint sweep, consuming the tape --------
+        let mut ws = SolverWorkspace::new();
+        let mut a = State {
+            z: dl_dz,
+            v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
+        };
+        let mut a_prev = ws.take_state(&a);
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        while let Some((t, h, before)) = tape.steps.pop() {
+            solver.step_vjp_into(dynamics, t, h, &before, &a, &mut a_prev, &mut grad_theta, &mut ws);
+            std::mem::swap(&mut a, &mut a_prev);
+            // the checkpoint has served its one local vjp — release it
+            tape.release_last(before.v.is_some());
+        }
+        ws.put_state(a_prev);
+        // initialisation hop (the tape is drained, but the first step's
+        // stored input state *is* z₀, so evaluating at z₀ is exact)
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let (gz, gth) = dynamics.f_vjp(spec.t0, z0, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let stats = GradStats {
+            bwd_steps: n,
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n.max(1),
+            fwd,
+        };
+        Ok(GradResult {
+            loss: loss_val,
+            z_final: s_end.z,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+        })
+    }
+
+    /// Batched symplectic adjoint: per-sample tapes, then the lockstep
+    /// reverse sweep shared with ACA (rows in the lockstep replay consume
+    /// their checkpoints at different rates, so the per-step release is
+    /// deferred to the end of the sweep — the peak is identical either
+    /// way, since the peak is at the start of the backward pass).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchGradResult> {
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut tape = BatchTape::new(tracker.clone(), bspec.batch);
+        let (s_end, fwd) = integrate_batch(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, &mut tape,
+        )?;
+        let (losses, dl_dz) = loss.loss_grad_batch(&s_end.z.data, bspec);
+
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::new(dl_dz, vec![bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut ws = BatchWorkspace::new();
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        replay_backward_batch(dynamics, solver, &tape.steps, &mut a, &mut grad_theta, &mut ws);
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = tape.steps.iter().map(|s| s.len()).sum();
+        let n_max: usize = tape.steps.iter().map(|s| s.len()).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: losses.iter().sum(),
+            losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+
+    /// Multi-observation symplectic adjoint: checkpointed forward over the
+    /// exact-hit grid, then the shared injection replay (observation
+    /// cotangents join the adjoint state as it sweeps past their marks —
+    /// for a symplectic solver these are the impulse terms of the adjoint
+    /// flow).
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        loss: &dyn ObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<ObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad() for a terminal loss"
+        );
+        let c = dynamics.counters();
+        c.reset();
+
+        let s0 = solver.init(dynamics, spec.t0, z0);
+        let mut tape = Tape::new(tracker.clone());
+        let (s_end, fwd) = integrate_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut tape,
+        )?;
+
+        let mut a = State {
+            z: vec![0.0f32; s_end.z.len()],
+            v: s_end.v.as_ref().map(|v| vec![0.0f32; v.len()]),
+        };
+        let mut ws = SolverWorkspace::new();
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_obs(
+            dynamics,
+            solver,
+            &tape.steps,
+            &tape.marks,
+            grid,
+            &s_end.z,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+            &mut ws,
+        );
+        let mut grad_z0 = a.z.clone();
+        if let Some(av0) = &a.v {
+            if av0.iter().any(|&x| x != 0.0) {
+                let first_z = tape
+                    .steps
+                    .first()
+                    .map(|(_, _, s)| s.z.as_slice())
+                    .unwrap_or(z0);
+                let (gz, gth) = dynamics.f_vjp(spec.t0, first_z, av0);
+                axpy(1.0, &gz, &mut grad_z0);
+                axpy(1.0, &gth, &mut grad_theta);
+            }
+        }
+
+        let n = tape.steps.len();
+        let stats = GradStats {
+            bwd_steps: n,
+            f_evals: c.f_evals.get(),
+            vjp_evals: c.vjp_evals.get(),
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n.max(1),
+            fwd,
+        };
+        Ok(ObsGradResult {
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: s_end.z,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+        })
+    }
+
+    /// Batched multi-observation symplectic adjoint: per-sample tapes +
+    /// marks into the shared lockstep injection replay.
+    #[allow(clippy::too_many_arguments)]
+    fn grad_obs_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        solver: &dyn Solver,
+        spec: &IvpSpec,
+        grid: &ObsGrid,
+        z0: &[f32],
+        bspec: &BatchSpec,
+        loss: &dyn BatchObsLossHead,
+        tracker: Arc<MemTracker>,
+    ) -> Result<BatchObsGradResult> {
+        ensure!(
+            !grid.is_empty(),
+            "empty observation grid; use grad_batch() for a terminal loss"
+        );
+        ensure!(
+            loss.separable(),
+            "batched native injection evaluates the head per row; a fused \
+             head must go through batch_driver::grad_obs_batched"
+        );
+        let c = dynamics.counters();
+        let f0 = c.f_evals.get();
+        let v0 = c.vjp_evals.get();
+
+        let s0 = solver.init_batch(dynamics, spec.t0, z0, bspec);
+        let mut tape = BatchTape::new(tracker.clone(), bspec.batch);
+        let (s_end, fwd) = integrate_batch_obs(
+            solver, dynamics, spec.t0, spec.t1, s0, &spec.mode, &spec.norm, grid, &mut tape,
+        )?;
+
+        let mut a = BatchState {
+            z: crate::tensor::Tensor::zeros(&[bspec.batch, bspec.n_z]),
+            v: s_end
+                .v
+                .as_ref()
+                .map(|v| crate::tensor::Tensor::zeros(&v.shape)),
+        };
+        let mut ws = BatchWorkspace::new();
+        let mut grad_theta = vec![0.0f32; dynamics.param_dim()];
+        let mut obs_losses = vec![0.0f64; grid.len()];
+        replay_backward_batch_obs(
+            dynamics,
+            solver,
+            &tape.steps,
+            &tape.marks,
+            grid,
+            &s_end.z.data,
+            loss,
+            &mut a,
+            &mut grad_theta,
+            &mut obs_losses,
+            &mut ws,
+        );
+
+        let mut grad_z0 = a.z.data.clone();
+        init_hop_batch(dynamics, spec.t0, z0, bspec, &a, &mut grad_z0, &mut grad_theta);
+
+        let n_total: usize = tape.steps.iter().map(|s| s.len()).sum();
+        let n_max: usize = tape.steps.iter().map(|s| s.len()).max().unwrap_or(0);
+        let stats = GradStats {
+            bwd_steps: n_total,
+            f_evals: c.f_evals.get() - f0,
+            vjp_evals: c.vjp_evals.get() - v0,
+            peak_mem_bytes: tracker.peak_bytes(),
+            graph_depth: dynamics.depth_nf() * n_max.max(1),
+            fwd: fwd.aggregate(),
+        };
+        Ok(BatchObsGradResult {
+            batch: bspec.batch,
+            n_z: bspec.n_z,
+            loss: obs_losses.iter().sum(),
+            obs_losses,
+            z_final: s_end.z.data,
+            grad_theta,
+            grad_z0,
+            reconstructed_z0: None,
+            stats,
+            per_sample_fwd: fwd.per_sample,
+        })
+    }
+}

@@ -6,6 +6,7 @@ pub mod alf;
 pub mod batch;
 pub mod dynamics;
 pub mod integrate;
+pub mod reversible;
 pub mod rk;
 pub mod stability;
 pub mod workspace;
@@ -467,6 +468,7 @@ pub fn by_name_eta(name: &str, eta: f64) -> anyhow::Result<Box<dyn Solver + Send
     use rk::{RkSolver, Tableau};
     Ok(match name {
         "alf" | "mali" => Box::new(alf::AlfSolver::new(eta)),
+        "reversible4" | "reversible-4" | "rev4" => Box::new(reversible::Reversible4::new(eta)),
         "euler" => Box::new(RkSolver::new(Tableau::euler())),
         "midpoint" | "rk2" => Box::new(RkSolver::new(Tableau::midpoint())),
         "rk4" => Box::new(RkSolver::new(Tableau::rk4())),
@@ -484,7 +486,17 @@ mod tests {
 
     #[test]
     fn factory_knows_all_solvers() {
-        for name in ["alf", "euler", "rk2", "rk4", "heun-euler", "rk23", "dopri5"] {
+        for name in [
+            "alf",
+            "reversible4",
+            "rev4",
+            "euler",
+            "rk2",
+            "rk4",
+            "heun-euler",
+            "rk23",
+            "dopri5",
+        ] {
             let s = by_name(name).unwrap();
             assert!(!s.name().is_empty());
         }

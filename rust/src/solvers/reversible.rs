@@ -1,0 +1,1134 @@
+//! Reversible-4: a 4th-order algebraically invertible solver built as a
+//! Yoshida/Suzuki triple-jump composition of ALF steps.
+//!
+//! One composed step over `h` applies three ALF sub-steps with sizes
+//! `γ₁h, γ₂h, γ₃h` where
+//!
+//! ```text
+//! γ₁ = γ₃ = 1 / (2 − 2^{1/3})          ≈  1.3512
+//! γ₂     = −2^{1/3} / (2 − 2^{1/3})    ≈ −1.7024,      γ₁ + γ₂ + γ₃ = 1
+//! ```
+//!
+//! — the classical coefficients that cancel the `h³` term of a
+//! time-symmetric second-order base map (Yoshida 1990; Hairer–Lubich–
+//! Wanner III.4).  ALF at η = 1 is exactly time-symmetric
+//! (`ψ₋ₕ∘ψₕ = id`), so the composition is globally 4th order on
+//! consistent data `v₀ = f(z₀, t₀)`; damped η < 1 breaks the symmetry
+//! and degrades the order (the factory still honors η for the damped
+//! stability experiments — see `docs/adr/008-method-grid.md`).
+//!
+//! Because each sub-step is an ALF step, the composed map inherits ALF's
+//! **exact algebraic inverse**: `Ψ⁻¹ = ψ⁻¹_{γ₁h} ∘ ψ⁻¹_{γ₂h} ∘ ψ⁻¹_{γ₃h}`
+//! (the sub-inverses applied in reverse order), so MALI-style
+//! constant-memory reverse sweeps, ψ-vjp backward chains, and the serve
+//! layer all work unchanged — this solver exists to prove the
+//! `Solver`/`GradMethod` surface generalizes beyond the single ALF
+//! implementor.  The middle sub-step has `γ₂ < 0` (a backward-in-time
+//! ALF step), which is fine algebraically: ψ and ψ⁻¹ are defined for
+//! either sign of `h`.
+//!
+//! Error estimate: the absolute values of the three embedded ALF
+//! sub-step errors, summed.  That signal scales as `O(h²)` — deliberately
+//! *conservative* for a 4th-order method (the controller over-resolves
+//! rather than under-resolves); the magnitude sum avoids sign
+//! cancellation across the `γ₂ < 0` sub-step.
+//!
+//! Everything is composed from [`AlfSolver`]'s public ψ-kernel `_into`
+//! entry points, so the fused native-dynamics hooks ride along
+//! automatically and per-row batch arithmetic stays bitwise identical to
+//! the solo methods (pinned in `tests/prop_solver.rs`).
+
+use super::alf::AlfSolver;
+use super::batch::{BatchSpec, BatchState};
+use super::dynamics::Dynamics;
+use super::workspace::{ensure, ensure_f64, fill_stage_times, BatchWorkspace, SolverWorkspace};
+use super::{Solver, State};
+use crate::tensor::Tensor;
+
+/// `2^{1/3}` to f64 precision (written out so the triple-jump constants
+/// are plain consts; `cbrt` is not a const fn).
+const CBRT2: f64 = 1.259_921_049_894_873_2;
+/// Outer sub-step weight `γ₁ = γ₃`.
+const GAMMA1: f64 = 1.0 / (2.0 - CBRT2);
+/// Middle (negative) sub-step weight `γ₂`.
+const GAMMA2: f64 = -CBRT2 / (2.0 - CBRT2);
+/// Sub-step sizes in units of the composed step `h`.
+const GAMMAS: [f64; 3] = [GAMMA1, GAMMA2, GAMMA1];
+/// Sub-step *start* times in units of `h` from the composed step's start.
+const OFFSETS: [f64; 3] = [0.0, GAMMA1, GAMMA1 + GAMMA2];
+/// Sub-step *end* times in units of `h` from the composed step's end
+/// (`t_out + h·END_OFFSETS[i]` is where sub-step `i`'s output sits —
+/// the anchor times of the reverse ψ⁻¹ chain).
+const END_OFFSETS: [f64; 3] = [-(GAMMA2 + GAMMA1), -GAMMA1, 0.0];
+
+/// Per-row sub-step sizes `h_b·γ` — the batched mirror of the solo
+/// `h * GAMMAS[i]` arithmetic (same expression, so rows stay bitwise
+/// equal to solo sub-steps).
+fn fill_sub_hs(hs: &[f64], gamma: f64, out: &mut Vec<f64>) {
+    ensure_f64(out, hs.len());
+    for (o, &h) in out.iter_mut().zip(hs) {
+        *o = h * gamma;
+    }
+}
+
+/// The 4th-order reversible composition solver.  Wraps an [`AlfSolver`]
+/// whose ψ/ψ⁻¹/ψ-vjp kernels perform every sub-step (and carry the fused
+/// dynamics dispatch).
+#[derive(Debug, Clone, Copy)]
+pub struct Reversible4 {
+    /// The ALF base map; `inner.eta == 1` for the 4th-order guarantee.
+    pub inner: AlfSolver,
+}
+
+impl Reversible4 {
+    pub fn new(eta: f64) -> Self {
+        Reversible4 {
+            inner: AlfSolver::new(eta),
+        }
+    }
+}
+
+fn empty_state() -> State {
+    State {
+        z: Vec::new(),
+        v: None,
+    }
+}
+
+fn empty_batch_state() -> BatchState {
+    BatchState {
+        z: Tensor::new(Vec::new(), vec![0, 0]),
+        v: None,
+    }
+}
+
+impl Solver for Reversible4 {
+    fn name(&self) -> &'static str {
+        if self.inner.eta == 1.0 {
+            "reversible4"
+        } else {
+            "reversible4-damped"
+        }
+    }
+
+    fn order(&self) -> usize {
+        4
+    }
+
+    fn has_error_estimate(&self) -> bool {
+        true
+    }
+
+    fn is_invertible(&self) -> bool {
+        true
+    }
+
+    fn init(&self, dynamics: &dyn Dynamics, t0: f64, z0: &[f32]) -> State {
+        // Same augmented initialisation as ALF: v₀ = f(z₀, t₀).
+        self.inner.init(dynamics, t0, z0)
+    }
+
+    fn step(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+    ) -> (State, Option<Vec<f32>>) {
+        let mut ws = SolverWorkspace::new();
+        let mut out = empty_state();
+        let mut err = Vec::new();
+        self.step_into(dynamics, t, h, s, &mut out, &mut err, &mut ws);
+        (out, Some(err))
+    }
+
+    fn step_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+    ) -> (State, Vec<f32>) {
+        let mut ws = SolverWorkspace::new();
+        let mut a_in = empty_state();
+        let mut ath = vec![0.0f32; dynamics.param_dim()];
+        self.step_vjp_into(dynamics, t, h, s_in, a_out, &mut a_in, &mut ath, &mut ws);
+        (a_in, ath)
+    }
+
+    fn invert(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+    ) -> Option<State> {
+        let mut ws = SolverWorkspace::new();
+        let mut out = empty_state();
+        self.invert_into(dynamics, t_out, h, s_out, &mut out, &mut ws);
+        Some(out)
+    }
+
+    fn invert_and_vjp(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+    ) -> Option<(State, State, Vec<f32>)> {
+        let mut ws = SolverWorkspace::new();
+        let mut s_in = empty_state();
+        let mut a_in = empty_state();
+        let mut ath = vec![0.0f32; dynamics.param_dim()];
+        self.invert_and_vjp_into(
+            dynamics, t_out, h, s_out, a_out, &mut s_in, &mut a_in, &mut ath, &mut ws,
+        );
+        Some((s_in, a_in, ath))
+    }
+
+    // ---- workspace path --------------------------------------------------
+
+    fn step_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s: &State,
+        out: &mut State,
+        err: &mut Vec<f32>,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let v = s.v.as_ref().expect("reversible-4 needs augmented state (z, v)");
+        let n = s.z.len();
+        super::workspace::shape_state_n(out, n, true);
+        ensure(err, n);
+        let mut sa = ws.take_state(s);
+        let mut sb = ws.take_state(s);
+        let mut e = ws.take_err();
+        ensure(&mut e, n);
+        {
+            let State { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("shaped from augmented template");
+            self.inner.psi_into(
+                dynamics,
+                t + h * OFFSETS[0],
+                h * GAMMAS[0],
+                &s.z,
+                v,
+                az,
+                av,
+                err,
+                ws,
+            );
+        }
+        for x in err.iter_mut() {
+            *x = x.abs();
+        }
+        {
+            let sav = sa.v.as_deref().expect("shaped from augmented template");
+            let State { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("shaped from augmented template");
+            self.inner.psi_into(
+                dynamics,
+                t + h * OFFSETS[1],
+                h * GAMMAS[1],
+                &sa.z,
+                sav,
+                bz,
+                bv,
+                &mut e,
+                ws,
+            );
+        }
+        for (o, x) in err.iter_mut().zip(&e) {
+            *o += x.abs();
+        }
+        {
+            let sbv = sb.v.as_deref().expect("shaped from augmented template");
+            let State { z: oz, v: ov } = out;
+            let ov = ov.as_mut().expect("just shaped");
+            self.inner.psi_into(
+                dynamics,
+                t + h * OFFSETS[2],
+                h * GAMMAS[2],
+                &sb.z,
+                sbv,
+                oz,
+                ov,
+                &mut e,
+                ws,
+            );
+        }
+        for (o, x) in err.iter_mut().zip(&e) {
+            *o += x.abs();
+        }
+        ws.put_state(sa);
+        ws.put_state(sb);
+        ws.put_err(e);
+        true
+    }
+
+    fn step_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t: f64,
+        h: f64,
+        s_in: &State,
+        a_out: &State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) {
+        let v = s_in.v.as_ref().expect("reversible-4 needs augmented state");
+        let n = s_in.z.len();
+        super::workspace::shape_state_n(a_in, n, true);
+        // recompute the two interior sub-states from the stored input
+        let mut sa = ws.take_state(s_in);
+        let mut sb = ws.take_state(s_in);
+        let mut e = ws.take_err();
+        ensure(&mut e, n);
+        {
+            let State { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("shaped from augmented template");
+            self.inner.psi_into(
+                dynamics,
+                t + h * OFFSETS[0],
+                h * GAMMAS[0],
+                &s_in.z,
+                v,
+                az,
+                av,
+                &mut e,
+                ws,
+            );
+        }
+        {
+            let sav = sa.v.as_deref().expect("shaped from augmented template");
+            let State { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("shaped from augmented template");
+            self.inner.psi_into(
+                dynamics,
+                t + h * OFFSETS[1],
+                h * GAMMAS[1],
+                &sa.z,
+                sav,
+                bz,
+                bv,
+                &mut e,
+                ws,
+            );
+        }
+        // a_v(T) may be absent: substitute the workspace's zero cotangent
+        let mut zero_buf = std::mem::take(&mut ws.zero);
+        if a_out.v.is_none() {
+            ensure(&mut zero_buf, n);
+        }
+        let av_out: &[f32] = match &a_out.v {
+            Some(av) => av,
+            None => &zero_buf,
+        };
+        // chain the sub-step vjps in reverse (3 → 2 → 1)
+        let mut ac = ws.take_state(s_in);
+        let mut ap = ws.take_state(s_in);
+        {
+            let sbv = sb.v.as_deref().expect("shaped from augmented template");
+            let State { z: cz, v: cv } = &mut ac;
+            let cv = cv.as_mut().expect("shaped from augmented template");
+            self.inner.psi_vjp_into(
+                dynamics,
+                t + h * OFFSETS[2],
+                h * GAMMAS[2],
+                &sb.z,
+                sbv,
+                &a_out.z,
+                av_out,
+                cz,
+                cv,
+                ath_acc,
+                ws,
+            );
+        }
+        {
+            let sav = sa.v.as_deref().expect("shaped from augmented template");
+            let acv = ac.v.as_deref().expect("shaped from augmented template");
+            let State { z: pz, v: pv } = &mut ap;
+            let pv = pv.as_mut().expect("shaped from augmented template");
+            self.inner.psi_vjp_into(
+                dynamics,
+                t + h * OFFSETS[1],
+                h * GAMMAS[1],
+                &sa.z,
+                sav,
+                &ac.z,
+                acv,
+                pz,
+                pv,
+                ath_acc,
+                ws,
+            );
+        }
+        {
+            let apv = ap.v.as_deref().expect("shaped from augmented template");
+            let State { z: iz, v: iv } = a_in;
+            let iv = iv.as_mut().expect("just shaped");
+            self.inner.psi_vjp_into(
+                dynamics,
+                t + h * OFFSETS[0],
+                h * GAMMAS[0],
+                &s_in.z,
+                v,
+                &ap.z,
+                apv,
+                iz,
+                iv,
+                ath_acc,
+                ws,
+            );
+        }
+        ws.zero = zero_buf;
+        ws.put_state(sa);
+        ws.put_state(sb);
+        ws.put_state(ac);
+        ws.put_state(ap);
+        ws.put_err(e);
+    }
+
+    fn invert_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        out: &mut State,
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        let v = s_out.v.as_ref().expect("reversible-4 needs augmented state");
+        let n = s_out.z.len();
+        super::workspace::shape_state_n(out, n, true);
+        let mut sb = ws.take_state(s_out);
+        let mut sa = ws.take_state(s_out);
+        {
+            let State { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("shaped from augmented template");
+            self.inner.psi_inv_into(
+                dynamics,
+                t_out + h * END_OFFSETS[2],
+                h * GAMMAS[2],
+                &s_out.z,
+                v,
+                bz,
+                bv,
+                ws,
+            );
+        }
+        {
+            let sbv = sb.v.as_deref().expect("shaped from augmented template");
+            let State { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("shaped from augmented template");
+            self.inner.psi_inv_into(
+                dynamics,
+                t_out + h * END_OFFSETS[1],
+                h * GAMMAS[1],
+                &sb.z,
+                sbv,
+                az,
+                av,
+                ws,
+            );
+        }
+        {
+            let sav = sa.v.as_deref().expect("shaped from augmented template");
+            let State { z: oz, v: ov } = out;
+            let ov = ov.as_mut().expect("just shaped");
+            self.inner.psi_inv_into(
+                dynamics,
+                t_out + h * END_OFFSETS[0],
+                h * GAMMAS[0],
+                &sa.z,
+                sav,
+                oz,
+                ov,
+                ws,
+            );
+        }
+        ws.put_state(sb);
+        ws.put_state(sa);
+        true
+    }
+
+    fn invert_and_vjp_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t_out: f64,
+        h: f64,
+        s_out: &State,
+        a_out: &State,
+        s_in: &mut State,
+        a_in: &mut State,
+        ath_acc: &mut [f32],
+        ws: &mut SolverWorkspace,
+    ) -> bool {
+        // Per-sub-step ψ⁻¹+vjp micro-steps, chained backward — each rides
+        // the inner solver's fused bwd hook when the dynamics has one.
+        let mut s1 = ws.take_state(s_out);
+        let mut a1 = ws.take_state(s_out);
+        let mut s2 = ws.take_state(s_out);
+        let mut a2 = ws.take_state(s_out);
+        self.inner.invert_and_vjp_into(
+            dynamics,
+            t_out + h * END_OFFSETS[2],
+            h * GAMMAS[2],
+            s_out,
+            a_out,
+            &mut s1,
+            &mut a1,
+            ath_acc,
+            ws,
+        );
+        self.inner.invert_and_vjp_into(
+            dynamics,
+            t_out + h * END_OFFSETS[1],
+            h * GAMMAS[1],
+            &s1,
+            &a1,
+            &mut s2,
+            &mut a2,
+            ath_acc,
+            ws,
+        );
+        self.inner.invert_and_vjp_into(
+            dynamics,
+            t_out + h * END_OFFSETS[0],
+            h * GAMMAS[0],
+            &s2,
+            &a2,
+            s_in,
+            a_in,
+            ath_acc,
+            ws,
+        );
+        ws.put_state(s1);
+        ws.put_state(a1);
+        ws.put_state(s2);
+        ws.put_state(a2);
+        true
+    }
+
+    // ---- batched path ---------------------------------------------------
+
+    fn init_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+    ) -> BatchState {
+        self.inner.init_batch(dynamics, t0, z0, spec)
+    }
+
+    fn init_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        t0: f64,
+        z0: &[f32],
+        spec: &BatchSpec,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) {
+        self.inner.init_batch_into(dynamics, t0, z0, spec, out, ws);
+    }
+
+    fn step_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+    ) -> (BatchState, Option<Vec<f32>>) {
+        let mut ws = BatchWorkspace::new();
+        let mut out = empty_batch_state();
+        let mut err = Vec::new();
+        self.step_batch_into(dynamics, ts, hs, s, &mut out, &mut err, &mut ws);
+        (out, Some(err))
+    }
+
+    fn step_vjp_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+    ) -> (BatchState, Vec<f32>) {
+        let mut ws = BatchWorkspace::new();
+        let mut a_in = empty_batch_state();
+        let mut ath = vec![0.0f32; dynamics.param_dim()];
+        self.step_vjp_batch_into(dynamics, ts, hs, s_in, a_out, &mut a_in, &mut ath, &mut ws);
+        (a_in, ath)
+    }
+
+    fn invert_batch(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+    ) -> Option<BatchState> {
+        let mut ws = BatchWorkspace::new();
+        let mut out = empty_batch_state();
+        self.invert_batch_into(dynamics, ts_out, hs, s_out, &mut out, &mut ws);
+        Some(out)
+    }
+
+    // ---- batched workspace path -----------------------------------------
+
+    fn step_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s: &BatchState,
+        out: &mut BatchState,
+        err: &mut Vec<f32>,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let spec = s.spec();
+        let v = s.v.as_ref().expect("reversible-4 needs augmented state (z, v)");
+        super::workspace::shape_batch_state(out, spec.batch, spec.n_z, true);
+        ensure(err, spec.flat_len());
+        let mut sub_ts = std::mem::take(&mut ws.sub_ts);
+        let mut sub_hs = std::mem::take(&mut ws.sub_hs);
+        let mut sa = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut sb = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut e = ws.take_err();
+        ensure(&mut e, spec.flat_len());
+        fill_stage_times(ts, hs, OFFSETS[0], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[0], &mut sub_hs);
+        {
+            let BatchState { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("just shaped");
+            self.inner.psi_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &s.z.data,
+                &v.data,
+                &spec,
+                &mut az.data,
+                &mut av.data,
+                err,
+                ws,
+            );
+        }
+        for x in err.iter_mut() {
+            *x = x.abs();
+        }
+        fill_stage_times(ts, hs, OFFSETS[1], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[1], &mut sub_hs);
+        {
+            let sav = sa.v.as_ref().expect("just shaped");
+            let BatchState { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("just shaped");
+            self.inner.psi_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sa.z.data,
+                &sav.data,
+                &spec,
+                &mut bz.data,
+                &mut bv.data,
+                &mut e,
+                ws,
+            );
+        }
+        for (o, x) in err.iter_mut().zip(&e) {
+            *o += x.abs();
+        }
+        fill_stage_times(ts, hs, OFFSETS[2], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[2], &mut sub_hs);
+        {
+            let sbv = sb.v.as_ref().expect("just shaped");
+            let BatchState { z: oz, v: ov } = out;
+            let ov = ov.as_mut().expect("just shaped");
+            self.inner.psi_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sb.z.data,
+                &sbv.data,
+                &spec,
+                &mut oz.data,
+                &mut ov.data,
+                &mut e,
+                ws,
+            );
+        }
+        for (o, x) in err.iter_mut().zip(&e) {
+            *o += x.abs();
+        }
+        ws.sub_ts = sub_ts;
+        ws.sub_hs = sub_hs;
+        ws.put_batch(sa);
+        ws.put_batch(sb);
+        ws.put_err(e);
+        true
+    }
+
+    fn step_vjp_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts: &[f64],
+        hs: &[f64],
+        s_in: &BatchState,
+        a_out: &BatchState,
+        a_in: &mut BatchState,
+        ath_acc: &mut [f32],
+        ws: &mut BatchWorkspace,
+    ) {
+        let spec = s_in.spec();
+        let v = s_in.v.as_ref().expect("reversible-4 needs augmented state");
+        super::workspace::shape_batch_state(a_in, spec.batch, spec.n_z, true);
+        let mut sub_ts = std::mem::take(&mut ws.sub_ts);
+        let mut sub_hs = std::mem::take(&mut ws.sub_hs);
+        // recompute the two interior sub-states
+        let mut sa = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut sb = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut e = ws.take_err();
+        ensure(&mut e, spec.flat_len());
+        fill_stage_times(ts, hs, OFFSETS[0], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[0], &mut sub_hs);
+        {
+            let BatchState { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("just shaped");
+            self.inner.psi_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &s_in.z.data,
+                &v.data,
+                &spec,
+                &mut az.data,
+                &mut av.data,
+                &mut e,
+                ws,
+            );
+        }
+        fill_stage_times(ts, hs, OFFSETS[1], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[1], &mut sub_hs);
+        {
+            let sav = sa.v.as_ref().expect("just shaped");
+            let BatchState { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("just shaped");
+            self.inner.psi_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sa.z.data,
+                &sav.data,
+                &spec,
+                &mut bz.data,
+                &mut bv.data,
+                &mut e,
+                ws,
+            );
+        }
+        // a_v(T) may be absent: substitute the zero cotangent
+        let mut zero_buf = std::mem::take(&mut ws.zero);
+        if a_out.v.is_none() {
+            ensure(&mut zero_buf, spec.flat_len());
+        }
+        let av_out: &[f32] = match &a_out.v {
+            Some(av) => &av.data,
+            None => &zero_buf,
+        };
+        // chain the sub-step vjps in reverse (3 → 2 → 1)
+        let mut ac = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut ap = ws.take_batch(spec.batch, spec.n_z, true);
+        fill_stage_times(ts, hs, OFFSETS[2], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[2], &mut sub_hs);
+        {
+            let sbv = sb.v.as_ref().expect("just shaped");
+            let BatchState { z: cz, v: cv } = &mut ac;
+            let cv = cv.as_mut().expect("just shaped");
+            self.inner.psi_vjp_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sb.z.data,
+                &sbv.data,
+                &a_out.z.data,
+                av_out,
+                &spec,
+                &mut cz.data,
+                &mut cv.data,
+                ath_acc,
+                ws,
+            );
+        }
+        fill_stage_times(ts, hs, OFFSETS[1], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[1], &mut sub_hs);
+        {
+            let sav = sa.v.as_ref().expect("just shaped");
+            let acv = ac.v.as_ref().expect("just shaped");
+            let BatchState { z: pz, v: pv } = &mut ap;
+            let pv = pv.as_mut().expect("just shaped");
+            self.inner.psi_vjp_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sa.z.data,
+                &sav.data,
+                &ac.z.data,
+                &acv.data,
+                &spec,
+                &mut pz.data,
+                &mut pv.data,
+                ath_acc,
+                ws,
+            );
+        }
+        fill_stage_times(ts, hs, OFFSETS[0], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[0], &mut sub_hs);
+        {
+            let apv = ap.v.as_ref().expect("just shaped");
+            let BatchState { z: iz, v: iv } = a_in;
+            let iv = iv.as_mut().expect("just shaped");
+            self.inner.psi_vjp_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &s_in.z.data,
+                &v.data,
+                &ap.z.data,
+                &apv.data,
+                &spec,
+                &mut iz.data,
+                &mut iv.data,
+                ath_acc,
+                ws,
+            );
+        }
+        ws.zero = zero_buf;
+        ws.sub_ts = sub_ts;
+        ws.sub_hs = sub_hs;
+        ws.put_batch(sa);
+        ws.put_batch(sb);
+        ws.put_batch(ac);
+        ws.put_batch(ap);
+        ws.put_err(e);
+    }
+
+    fn invert_batch_into(
+        &self,
+        dynamics: &dyn Dynamics,
+        ts_out: &[f64],
+        hs: &[f64],
+        s_out: &BatchState,
+        out: &mut BatchState,
+        ws: &mut BatchWorkspace,
+    ) -> bool {
+        let spec = s_out.spec();
+        let v = s_out.v.as_ref().expect("reversible-4 needs augmented state");
+        super::workspace::shape_batch_state(out, spec.batch, spec.n_z, true);
+        let mut sub_ts = std::mem::take(&mut ws.sub_ts);
+        let mut sub_hs = std::mem::take(&mut ws.sub_hs);
+        let mut sb = ws.take_batch(spec.batch, spec.n_z, true);
+        let mut sa = ws.take_batch(spec.batch, spec.n_z, true);
+        fill_stage_times(ts_out, hs, END_OFFSETS[2], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[2], &mut sub_hs);
+        {
+            let BatchState { z: bz, v: bv } = &mut sb;
+            let bv = bv.as_mut().expect("just shaped");
+            self.inner.psi_inv_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &s_out.z.data,
+                &v.data,
+                &spec,
+                &mut bz.data,
+                &mut bv.data,
+                ws,
+            );
+        }
+        fill_stage_times(ts_out, hs, END_OFFSETS[1], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[1], &mut sub_hs);
+        {
+            let sbv = sb.v.as_ref().expect("just shaped");
+            let BatchState { z: az, v: av } = &mut sa;
+            let av = av.as_mut().expect("just shaped");
+            self.inner.psi_inv_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sb.z.data,
+                &sbv.data,
+                &spec,
+                &mut az.data,
+                &mut av.data,
+                ws,
+            );
+        }
+        fill_stage_times(ts_out, hs, END_OFFSETS[0], &mut sub_ts);
+        fill_sub_hs(hs, GAMMAS[0], &mut sub_hs);
+        {
+            let sav = sa.v.as_ref().expect("just shaped");
+            let BatchState { z: oz, v: ov } = out;
+            let ov = ov.as_mut().expect("just shaped");
+            self.inner.psi_inv_batch_into(
+                dynamics,
+                &sub_ts,
+                &sub_hs,
+                &sa.z.data,
+                &sav.data,
+                &spec,
+                &mut oz.data,
+                &mut ov.data,
+                ws,
+            );
+        }
+        ws.sub_ts = sub_ts;
+        ws.sub_hs = sub_hs;
+        ws.put_batch(sb);
+        ws.put_batch(sa);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::dynamics::{LinearToy, MlpDynamics};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn triple_jump_coefficients_sum_to_one() {
+        let sum: f64 = GAMMAS.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-14, "{sum}");
+        // the sub-step start/end offsets agree: the last sub-step ends at h
+        assert!((OFFSETS[2] + GAMMAS[2] - 1.0).abs() < 1e-14);
+        for i in 0..3 {
+            assert!(
+                (OFFSETS[i] + GAMMAS[i] - (1.0 + END_OFFSETS[i])).abs() < 1e-14,
+                "sub-step {i} start+size must equal its end offset"
+            );
+        }
+    }
+
+    /// One composed step beats ALF's O(h³) local error decisively: halving
+    /// h cuts the one-step error by ≳2⁴ (the dominant local term is O(h⁴)
+    /// from the v-channel; successive steps cancel it telescopically,
+    /// which is where the global 4th order comes from — pinned in
+    /// `tests/solver_properties.rs`).
+    #[test]
+    fn local_truncation_beats_alf() {
+        let toy = LinearToy::new(1.0, 1);
+        let solver = Reversible4::new(1.0);
+        let z0 = [1.0f32];
+        let mut errs = Vec::new();
+        for &h in &[0.4f64, 0.2, 0.1] {
+            let s0 = solver.init(&toy, 0.0, &z0);
+            let (s1, _) = solver.step(&toy, 0.0, h, &s0);
+            let exact = h.exp() as f32;
+            errs.push(((s1.z[0] - exact).abs()) as f64);
+        }
+        for w in errs.windows(2) {
+            let ratio = w[0] / w[1].max(1e-300);
+            assert!(ratio > 12.0, "expected ≳16x decay, got {ratio} ({errs:?})");
+        }
+    }
+
+    /// Ψ⁻¹(Ψ(x)) = x to float roundoff — the exact algebraic inverse the
+    /// constant-memory reverse sweep rests on, inherited sub-step by
+    /// sub-step from ALF.
+    #[test]
+    fn composed_inverse_roundtrip() {
+        let mut rng = Rng::new(11);
+        let dynamics = MlpDynamics::new(6, 8, &mut rng);
+        for &eta in &[1.0, 0.9] {
+            let solver = Reversible4::new(eta);
+            let z: Vec<f32> = (0..6).map(|i| 0.2 * i as f32 - 0.5).collect();
+            let s0 = solver.init(&dynamics, 0.3, &z);
+            let (s1, _) = solver.step(&dynamics, 0.3, 0.17, &s0);
+            let s0b = solver.invert(&dynamics, 0.3 + 0.17, 0.17, &s1).unwrap();
+            let v0 = s0.v.as_ref().unwrap();
+            let v0b = s0b.v.as_ref().unwrap();
+            for i in 0..6 {
+                assert!(
+                    (s0b.z[i] - s0.z[i]).abs() < 1e-4,
+                    "eta {eta} z[{i}]: {} vs {}",
+                    s0b.z[i],
+                    s0.z[i]
+                );
+                assert!((v0b[i] - v0[i]).abs() < 1e-4, "eta {eta} v[{i}]");
+            }
+        }
+    }
+
+    /// vjp of the composed step matches central finite differences on
+    /// (z, v, θ) — the chained sub-step vjps are the true adjoint of the
+    /// chained sub-steps.
+    #[test]
+    fn composed_vjp_matches_finite_differences() {
+        let mut rng = Rng::new(13);
+        let mut dynamics = MlpDynamics::new(3, 5, &mut rng);
+        let solver = Reversible4::new(1.0);
+        let (t, h) = (0.1, 0.2);
+        let z: Vec<f32> = vec![0.3, -0.2, 0.5];
+        let v = crate::solvers::dynamics::Dynamics::f(&dynamics, t, &z);
+        let az_out: Vec<f32> = vec![1.0, -0.5, 0.25];
+        let av_out: Vec<f32> = vec![0.2, 0.4, -0.3];
+        let s_in = State {
+            z: z.clone(),
+            v: Some(v.clone()),
+        };
+        let a_out = State {
+            z: az_out.clone(),
+            v: Some(av_out.clone()),
+        };
+        let (a_in, a_th) = solver.step_vjp(&dynamics, t, h, &s_in, &a_out);
+        let a_z = &a_in.z;
+        let a_v = a_in.v.as_ref().unwrap();
+
+        let scalar = |zz: &[f32], vv: &[f32], d: &MlpDynamics| -> f64 {
+            let s = State {
+                z: zz.to_vec(),
+                v: Some(vv.to_vec()),
+            };
+            let (s1, _) = solver.step(d, t, h, &s);
+            s1.z
+                .iter()
+                .zip(&az_out)
+                .chain(s1.v.as_ref().unwrap().iter().zip(&av_out))
+                .map(|(&x, &c)| x as f64 * c as f64)
+                .sum()
+        };
+        let eps = 1e-3;
+        for j in 0..z.len() {
+            let mut zp = z.clone();
+            zp[j] += eps as f32;
+            let mut zm = z.clone();
+            zm[j] -= eps as f32;
+            let fd = (scalar(&zp, &v, &dynamics) - scalar(&zm, &v, &dynamics)) / (2.0 * eps);
+            assert!(
+                (fd - a_z[j] as f64).abs() < 1e-2,
+                "a_z[{j}]: {fd} vs {}",
+                a_z[j]
+            );
+        }
+        for j in 0..v.len() {
+            let mut vp = v.clone();
+            vp[j] += eps as f32;
+            let mut vm = v.clone();
+            vm[j] -= eps as f32;
+            let fd = (scalar(&z, &vp, &dynamics) - scalar(&z, &vm, &dynamics)) / (2.0 * eps);
+            assert!(
+                (fd - a_v[j] as f64).abs() < 1e-2,
+                "a_v[{j}]: {fd} vs {}",
+                a_v[j]
+            );
+        }
+        let theta0 = dynamics.params().to_vec();
+        for &k in &[0usize, 7, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[k] += eps as f32;
+            dynamics.set_params(&tp);
+            let fp = scalar(&z, &v, &dynamics);
+            let mut tm = theta0.clone();
+            tm[k] -= eps as f32;
+            dynamics.set_params(&tm);
+            let fm = scalar(&z, &v, &dynamics);
+            dynamics.set_params(&theta0);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - a_th[k] as f64).abs() < 1e-2,
+                "a_θ[{k}]: {fd} vs {}",
+                a_th[k]
+            );
+        }
+    }
+
+    /// Batched composed step/vjp/inverse with desynchronized per-row
+    /// `(t, h)` equals the single-sample methods row-for-row (bitwise) —
+    /// the same invariant ALF pins, now through the composition layer.
+    #[test]
+    fn batched_composition_matches_rows_exactly() {
+        let mut rng = Rng::new(17);
+        let dynamics = MlpDynamics::new(3, 5, &mut rng);
+        let solver = Reversible4::new(1.0);
+        let spec = BatchSpec::new(3, 3);
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_normal(&mut z, 0.5);
+        let ts = [0.0, 0.3, 0.7];
+        let hs = [0.1, 0.25, 0.05];
+        let v = dynamics.f_batch(&ts, &z, &spec);
+        let s = BatchState::from_flat_zv(z.clone(), v.clone(), spec);
+
+        let (s_next, err) = solver.step_batch(&dynamics, &ts, &hs, &s);
+        let err = err.expect("reversible-4 has an error estimate");
+        for b in 0..3 {
+            let row = State {
+                z: spec.row(&z, b).to_vec(),
+                v: Some(spec.row(&v, b).to_vec()),
+            };
+            let (rs, re) = solver.step(&dynamics, ts[b], hs[b], &row);
+            assert_eq!(spec.row(&s_next.z.data, b), rs.z.as_slice(), "z row {b}");
+            assert_eq!(
+                spec.row(&s_next.v.as_ref().unwrap().data, b),
+                rs.v.as_ref().unwrap().as_slice(),
+                "v row {b}"
+            );
+            assert_eq!(spec.row(&err, b), re.unwrap().as_slice(), "err row {b}");
+        }
+
+        // batched inverse row-equality + roundtrip
+        let ts_out: Vec<f64> = ts.iter().zip(&hs).map(|(&t, &h)| t + h).collect();
+        let s_back = solver
+            .invert_batch(&dynamics, &ts_out, &hs, &s_next)
+            .expect("reversible-4 is invertible");
+        for b in 0..3 {
+            let row = State {
+                z: spec.row(&s_next.z.data, b).to_vec(),
+                v: Some(spec.row(&s_next.v.as_ref().unwrap().data, b).to_vec()),
+            };
+            let rs = solver.invert(&dynamics, ts_out[b], hs[b], &row).unwrap();
+            assert_eq!(spec.row(&s_back.z.data, b), rs.z.as_slice(), "inv z row {b}");
+        }
+        for i in 0..spec.flat_len() {
+            assert!((s_back.z.data[i] - z[i]).abs() < 1e-4, "roundtrip z[{i}]");
+        }
+
+        // batched vjp row-equality (θ sums over rows)
+        let mut az = vec![0.0f32; spec.flat_len()];
+        let mut av = vec![0.0f32; spec.flat_len()];
+        rng.fill_normal(&mut az, 1.0);
+        rng.fill_normal(&mut av, 1.0);
+        let a_out = BatchState::from_flat_zv(az.clone(), av.clone(), spec);
+        let (a_in, ath) = solver.step_vjp_batch(&dynamics, &ts, &hs, &s, &a_out);
+        let mut ath_sum = vec![0.0f32; dynamics.param_dim()];
+        for b in 0..3 {
+            let row_s = State {
+                z: spec.row(&z, b).to_vec(),
+                v: Some(spec.row(&v, b).to_vec()),
+            };
+            let row_a = State {
+                z: spec.row(&az, b).to_vec(),
+                v: Some(spec.row(&av, b).to_vec()),
+            };
+            let (ra, rth) = solver.step_vjp(&dynamics, ts[b], hs[b], &row_s, &row_a);
+            assert_eq!(spec.row(&a_in.z.data, b), ra.z.as_slice(), "a_z row {b}");
+            assert_eq!(
+                spec.row(&a_in.v.as_ref().unwrap().data, b),
+                ra.v.as_ref().unwrap().as_slice(),
+                "a_v row {b}"
+            );
+            crate::tensor::axpy(1.0, &rth, &mut ath_sum);
+        }
+        for (k, (&got, &want)) in ath.iter().zip(&ath_sum).enumerate() {
+            assert!((got - want).abs() < 1e-4, "a_θ[{k}]: {got} vs {want}");
+        }
+    }
+}

@@ -272,6 +272,13 @@ pub struct BatchWorkspace {
     pub(crate) coeffs: Vec<f32>,
     pub(crate) s1s: Vec<f64>,
     pub(crate) ts_in: Vec<f64>,
+    // ---- reversible-4 per-row sub-step scratch --------------------------
+    //
+    // The composed solver re-parameterizes each row's `(t, h)` into three
+    // ALF sub-steps; these hold the per-row sub-step times/sizes and cross
+    // the `&mut ws` boundary via the usual take/restore rule.
+    pub(crate) sub_ts: Vec<f64>,
+    pub(crate) sub_hs: Vec<f64>,
     // ---- batched-loop per-sample controller scratch ---------------------
     //
     // The `integrate_batch_obs_stats_ws` loop keeps one step-size
@@ -325,6 +332,8 @@ impl BatchWorkspace {
             coeffs: Vec::new(),
             s1s: Vec::new(),
             ts_in: Vec::new(),
+            sub_ts: Vec::new(),
+            sub_hs: Vec::new(),
             ts_row: Vec::new(),
             hs_row: Vec::new(),
             t_cur: Vec::new(),

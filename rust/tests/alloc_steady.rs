@@ -18,9 +18,17 @@
 //!   batched `f_into`/`f_vjp_into`, the whole fixed fused-ψ solve, the
 //!   fused ψ-vjp step, the fused ψ⁻¹+vjp reverse sweep, and the sharded
 //!   batched driver over the native MLP;
-//! * `MemTracker` peaks are unchanged by the refactor: MALI still
-//!   retains exactly the augmented end state (`N_z(N_f + 1)` — 2·N_z·4
-//!   bytes) and the adjoint exactly `z(T)` (N_z·4 bytes).
+//! * the reversible-4 composition honors the same contracts: warmed
+//!   fixed + adaptive `integrate_ws`, the composed Ψ⁻¹+vjp reverse
+//!   sweep, and the sharded batched driver are all allocation-free;
+//! * the symplectic-adjoint reverse replay (`step_vjp_into` over stored
+//!   checkpoints) is allocation-free once the workspace is warm — the
+//!   tape itself is the method's only O(N_t) cost;
+//! * `MemTracker` peaks obey the Table-1 memory laws: MALI retains
+//!   exactly the augmented end state (`N_z(N_f + 1)` — 2·N_z·4 bytes)
+//!   on ALF **and** on reversible-4 (constant in step count), the
+//!   adjoint exactly `z(T)` (N_z·4 bytes), and the symplectic adjoint
+//!   peaks exactly at ACA's checkpoint bound (`N_z(N_f + N_t)`).
 //!
 //! The whole file is a single `#[test]` so no sibling test thread can
 //! allocate concurrently inside a measured region (the shard pool's
@@ -156,6 +164,97 @@ fn zero_allocations_in_steady_state_hot_paths() {
         assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "ψ⁻¹ reconstruction");
     }
 
+    // ---- reversible-4: same zero-allocation contracts -------------------
+    // The triple-jump composition chains three ALF ψ kernels through
+    // pooled temporaries; once the pools are sized the fixed AND adaptive
+    // solves and the composed Ψ⁻¹+vjp reverse sweep never allocate.
+    let rev4 = solver_by_name("reversible4").unwrap();
+    let s0_r = rev4.init(&toy, 0.0, &z0);
+    integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &fixed, &norm, &mut (), &mut ws).unwrap();
+    integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &fixed, &norm, &mut (), &mut ws).unwrap();
+    let a0 = allocs();
+    let stats = integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &fixed, &norm, &mut (), &mut ws)
+        .unwrap();
+    let delta = allocs() - a0;
+    assert_eq!(stats.n_accepted, 100, "expected 100 fixed reversible-4 steps");
+    assert_eq!(
+        delta, 0,
+        "steady-state fixed reversible-4 integrate allocated {delta} times"
+    );
+
+    integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &adaptive, &norm, &mut (), &mut ws).unwrap();
+    let a0 = allocs();
+    let stats = integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &adaptive, &norm, &mut (), &mut ws)
+        .unwrap();
+    let delta = allocs() - a0;
+    assert!(stats.n_accepted > 0);
+    assert_eq!(
+        delta, 0,
+        "steady-state adaptive reversible-4 integrate allocated {delta} times"
+    );
+
+    // `mali_sweep` is solver-generic, so the same four ping-pong buffers
+    // drive the composed reverse chain
+    let mut rec_r = GridRecorder::new(0.0);
+    integrate_ws(&*rev4, &toy, 0.0, 1.0, &s0_r, &fixed, &norm, &mut rec_r, &mut ws).unwrap();
+    let s_end_r = ws.take_output();
+    let dl_dz_r: Vec<f32> = s_end_r.z.iter().map(|&z| 2.0 * z).collect();
+    let mut bufs_r = [shaped(), shaped(), shaped(), shaped()];
+    mali_sweep(
+        &*rev4, &toy, rec_r.times(), &s_end_r, &dl_dz_r, &mut bufs_r, &mut grad_theta, &mut ws,
+    );
+    grad_theta[0] = 0.0;
+    let a0 = allocs();
+    mali_sweep(
+        &*rev4, &toy, rec_r.times(), &s_end_r, &dl_dz_r, &mut bufs_r, &mut grad_theta, &mut ws,
+    );
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta,
+        0,
+        "steady-state reversible-4 reverse sweep allocated {delta} times over {} steps",
+        rec_r.times().len() - 1
+    );
+    for (r, z) in bufs_r[0].z.iter().zip(&z0) {
+        assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "composed Ψ⁻¹ reconstruction");
+    }
+
+    // ---- symplectic-adjoint reverse replay ------------------------------
+    // The method's backward pass is `step_vjp_into` over the recorded
+    // checkpoints (released as consumed); with a warm workspace the
+    // replay itself never allocates — the tape is its only O(N_t) cost.
+    struct TapeRec {
+        steps: Vec<(f64, f64, State)>,
+    }
+    impl mali_ode::solvers::integrate::StepObserver for TapeRec {
+        fn on_accept(&mut self, s: &mali_ode::solvers::integrate::AcceptedStep) {
+            self.steps.push((s.t, s.h, s.before.clone()));
+        }
+    }
+    let mut tape = TapeRec { steps: Vec::new() };
+    integrate_ws(&*solver, &toy, 0.0, 1.0, &s0, &fixed, &norm, &mut tape, &mut ws).unwrap();
+    let mut a_sym = shaped();
+    let mut a_sym_prev = shaped();
+    let mut replay = |a: &mut State, a_prev: &mut State, th: &mut [f32], ws: &mut SolverWorkspace| {
+        a.z.copy_from_slice(&dl_dz);
+        a.v.as_mut().expect("shaped").fill(0.0);
+        for (t, h, before) in tape.steps.iter().rev() {
+            solver.step_vjp_into(&toy, *t, *h, before, a, a_prev, th, ws);
+            std::mem::swap(a, a_prev);
+        }
+    };
+    replay(&mut a_sym, &mut a_sym_prev, &mut grad_theta, &mut ws);
+    grad_theta[0] = 0.0;
+    let a0 = allocs();
+    replay(&mut a_sym, &mut a_sym_prev, &mut grad_theta, &mut ws);
+    let delta = allocs() - a0;
+    assert_eq!(
+        delta,
+        0,
+        "warmed symplectic reverse replay allocated {delta} times over {} steps",
+        tape.steps.len()
+    );
+
     // ---- sharded batched integrate --------------------------------------
     // Zero-allocation contract on the intra-batch sharded driver: after
     // two warming calls (sizing pass + pool-cycling pass) a sharded
@@ -202,6 +301,43 @@ fn zero_allocations_in_steady_state_hot_paths() {
         assert_eq!(
             delta, 0,
             "sharded {label}: warmed sharded integrate allocated {delta} times"
+        );
+    }
+
+    // same driver on the composed solver: the per-sub-step stage times
+    // and sizes live in the shard workspaces, so the identical two-warm-up
+    // contract holds
+    for (pool, label) in [(None, "sequential"), (Some(WorkerPool::new(1)), "pooled")] {
+        let mut shards = BatchShards::new(2);
+        let mut bws = BatchWorkspace::new();
+        let mut per = Vec::new();
+        let mut run = || {
+            integrate_batch_obs_stats_sharded(
+                &*rev4,
+                &toy,
+                0.0,
+                1.0,
+                &state0,
+                &fixed,
+                &norm,
+                &grid,
+                |_, _| (),
+                &mut per,
+                &mut shards,
+                &mut bws,
+                pool.as_ref(),
+            )
+            .unwrap()
+        };
+        run();
+        run();
+        let a0 = allocs();
+        let f_evals = run();
+        let delta = allocs() - a0;
+        assert!(f_evals > 0, "sharded reversible-4 {label}: nothing integrated");
+        assert_eq!(
+            delta, 0,
+            "sharded reversible-4 {label}: warmed sharded integrate allocated {delta} times"
         );
     }
 
@@ -379,5 +515,55 @@ fn zero_allocations_in_steady_state_hot_paths() {
         tracker.peak_bytes(),
         n_z * 4,
         "adjoint retains exactly z(T)"
+    );
+
+    // MALI's N_z(N_f + 1) law transfers unchanged to the reversible-4
+    // solver: the composition inverts exactly, so the method still
+    // retains only the augmented end state regardless of step count.
+    let tracker = MemTracker::new();
+    grad_by_name("mali")
+        .unwrap()
+        .grad(
+            &toy,
+            &*rev4,
+            &IvpSpec::fixed(0.0, 1.0, 0.01),
+            &z0,
+            &SquareLoss,
+            tracker.clone(),
+        )
+        .unwrap();
+    assert_eq!(
+        tracker.peak_bytes(),
+        2 * n_z * 4,
+        "MALI retains exactly the augmented end state on reversible-4"
+    );
+
+    // The symplectic adjoint checkpoints like ACA and only releases on
+    // the way back, so its peak (end of forward, tape fully populated)
+    // must coincide with ACA's N_z(N_f + N_t) bound exactly — and both
+    // must dominate MALI's constant end-state footprint.
+    let peak = |method: &str| {
+        let tracker = MemTracker::new();
+        grad_by_name(method)
+            .unwrap()
+            .grad(
+                &toy,
+                &*solver,
+                &IvpSpec::fixed(0.0, 1.0, 0.01),
+                &z0,
+                &SquareLoss,
+                tracker.clone(),
+            )
+            .unwrap();
+        tracker.peak_bytes()
+    };
+    let (sym_peak, aca_peak) = (peak("symplectic"), peak("aca"));
+    assert_eq!(
+        sym_peak, aca_peak,
+        "symplectic peak must equal ACA's checkpoint bound"
+    );
+    assert!(
+        sym_peak > 2 * n_z * 4,
+        "checkpointing must cost more than MALI's retained end state"
     );
 }

@@ -1,0 +1,93 @@
+//! Shared method-registry fixture: the single place the integration
+//! suites enumerate gradient protocols and solvers, so a new
+//! `GradMethod` or `Solver` auto-enrolls in FD fuzz, exact-agreement
+//! cross-checks, batch ≡ solo, and obs-grid injection coverage by being
+//! added to these tables (and nowhere else).
+//!
+//! Included via `#[path = "common/methods.rs"] mod methods;` — the inner
+//! `allow(dead_code)` keeps suites that use only a slice of the fixture
+//! warning-free.
+#![allow(dead_code)]
+
+use mali_ode::grad::{by_name, GradMethod, ObsGrid};
+use mali_ode::solvers::{by_name as solver_by_name, Solver};
+use mali_ode::util::rng::Rng;
+
+/// Every registered gradient protocol (Table 1 order + the symplectic
+/// adjoint extension).
+pub const METHODS: [&str; 5] = ["mali", "aca", "naive", "adjoint", "symplectic"];
+
+/// Protocols whose gradients are exact to roundoff on the *same* solve —
+/// index 0 (MALI) is the agreement anchor the suites compare against.
+/// The adjoint method is excluded: it re-solves the trajectory backwards,
+/// so it only agrees up to the reverse-solve tolerance.
+pub const EXACT_METHODS: [&str; 4] = ["mali", "aca", "naive", "symplectic"];
+
+/// The solver axis of the method grid: an adaptive RK pair, the paper's
+/// ALF, and the 4th-order reversible composition.
+pub const SOLVERS: [&str; 3] = ["heun-euler", "alf", "reversible4"];
+
+/// Default solver per method (the pairing fig4/table1 report): the
+/// reconstruction- and checkpoint-based protocols ride ALF; the adjoint
+/// method uses a plain RK pair, as in the paper's baselines.
+pub fn solver_for(method: &str) -> &'static str {
+    match method {
+        "adjoint" => "heun-euler",
+        _ => "alf",
+    }
+}
+
+/// Whether a `GradMethod` × `Solver` pair is runnable: MALI reconstructs
+/// the trajectory through ψ⁻¹, so it needs an invertible solver.
+pub fn supports(method: &str, solver: &str) -> bool {
+    method != "mali" || matches!(solver, "alf" | "reversible4")
+}
+
+/// All supported `(method, solver)` pairs of the grid —
+/// `METHODS × SOLVERS` minus the pairs [`supports`] rejects.
+pub fn pairs() -> Vec<(&'static str, &'static str)> {
+    let mut out = Vec::new();
+    for m in METHODS {
+        for s in SOLVERS {
+            if supports(m, s) {
+                out.push((m, s));
+            }
+        }
+    }
+    out
+}
+
+pub fn method(name: &str) -> Box<dyn GradMethod + Send + Sync> {
+    by_name(name).unwrap()
+}
+
+pub fn solver(name: &str) -> Box<dyn Solver + Send + Sync> {
+    solver_by_name(name).unwrap()
+}
+
+pub fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Random observation grid: 1–3 strictly increasing times inside
+/// `(0, t1]`, sometimes ending exactly at `t1`.
+pub fn random_grid(rng: &mut Rng, t1: f64) -> ObsGrid {
+    let k = 1 + rng.below(3);
+    let mut times: Vec<f64> = Vec::with_capacity(k);
+    let mut lo = 0.15 * t1;
+    for i in 0..k {
+        let hi = t1 * (i as f64 + 1.0) / k as f64;
+        let t = if i + 1 == k && rng.below(2) == 0 {
+            t1
+        } else {
+            rng.range(lo, hi.max(lo + 1e-3))
+        };
+        times.push(t.min(t1));
+        lo = times[i] + 1e-3;
+    }
+    ObsGrid::new(times).unwrap()
+}

@@ -1,7 +1,10 @@
-//! Integration tests over the four gradient protocols — the empirical heart
-//! of the reproduction: MALI must agree with ACA/naive to roundoff and with
-//! finite differences, while the adjoint method carries reverse-trajectory
-//! error; MALI/adjoint memory must be constant in N_t while ACA/naive grow.
+//! Integration tests over the gradient protocols — the empirical heart
+//! of the reproduction: the exact set (MALI/ACA/naive/symplectic) must
+//! agree to roundoff and with finite differences, while the adjoint
+//! method carries reverse-trajectory error; MALI/adjoint memory must be
+//! constant in N_t while ACA/naive grow and the symplectic adjoint stays
+//! within the checkpoint bound.  The method and solver lists come from
+//! the shared registry fixture in `tests/common/methods.rs`.
 
 use mali_ode::grad::{by_name, forward_loss, FnLoss, IvpSpec, SquareLoss};
 use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
@@ -9,13 +12,10 @@ use mali_ode::solvers::{by_name as solver_by_name, by_name_eta};
 use mali_ode::util::mem::MemTracker;
 use mali_ode::util::rng::Rng;
 
-fn l2(a: &[f32], b: &[f32]) -> f64 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| ((x - y) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt()
-}
+#[path = "common/methods.rs"]
+mod methods;
+
+use methods::{l2, EXACT_METHODS, METHODS};
 
 /// Paper Eq. 6/7: every method should recover the analytic gradients of the
 /// toy problem.
@@ -27,7 +27,7 @@ fn toy_analytic_gradients() {
     let (dz0_true, dalpha_true) = toy.analytic_grads(&z0, t_end);
 
     let mut errs = std::collections::BTreeMap::new();
-    for method in ["mali", "aca", "naive", "adjoint"] {
+    for method in METHODS {
         let solver = if method == "adjoint" {
             solver_by_name("dopri5").unwrap()
         } else {
@@ -50,8 +50,9 @@ fn toy_analytic_gradients() {
     }
 }
 
-/// MALI == ACA == naive to float roundoff on the same ALF solve: all three
-/// backprop through the same accepted steps with exact states.
+/// MALI == ACA == naive == symplectic to float roundoff on the same ALF
+/// solve: the whole exact set backprops through the same accepted steps
+/// with exact states.
 #[test]
 fn mali_aca_naive_agree_exactly() {
     let mut rng = Rng::new(42);
@@ -60,7 +61,7 @@ fn mali_aca_naive_agree_exactly() {
     let solver = solver_by_name("alf").unwrap();
     let spec = IvpSpec::adaptive(0.0, 1.0, 1e-3, 1e-5);
 
-    let results: Vec<_> = ["mali", "aca", "naive"]
+    let results: Vec<_> = EXACT_METHODS
         .iter()
         .map(|m| {
             by_name(m)
@@ -89,7 +90,7 @@ fn all_methods_match_finite_differences() {
     let z0 = vec![0.4f32, -0.3, 0.2];
     let spec = IvpSpec::fixed(0.0, 0.8, 0.1);
 
-    for method in ["mali", "aca", "naive", "adjoint"] {
+    for method in METHODS {
         let solver = if method == "adjoint" {
             solver_by_name("rk4").unwrap()
         } else {
@@ -177,6 +178,52 @@ fn memory_scaling_matches_table1() {
     let (n, a, m) = (peak("naive", 0.1), peak("aca", 0.1), peak("mali", 0.1));
     assert!(n >= a, "naive {n} < aca {a}");
     assert!(a > m, "aca {a} <= mali {m}");
+
+    // symplectic adjoint (Matsubara): the checkpoint tape grows with the
+    // step count like ACA's...
+    let s_few = peak("symplectic", 0.5);
+    let s_many = peak("symplectic", 0.05);
+    assert!(
+        s_many as f64 > s_few as f64 * 5.0,
+        "symplectic: expected ~10x tape growth, got {s_few} -> {s_many}"
+    );
+    // ...but its peak never exceeds the ACA checkpoint bound (it holds
+    // only the tape, releasing each checkpoint as the sweep consumes it)
+    let s = peak("symplectic", 0.1);
+    assert!(s <= a, "symplectic peak {s} exceeds ACA bound {a}");
+    assert!(s > m, "symplectic peak {s} should exceed MALI's constant {m}");
+}
+
+/// The memory laws transfer to the reversible-4 composition: MALI's
+/// ψ⁻¹-reconstruction stays constant in the step count on it, while the
+/// symplectic adjoint's tape grows — the laws are properties of the
+/// *protocol*, not of ALF.
+#[test]
+fn reversible4_memory_laws() {
+    let toy = LinearToy::new(1.0, 64);
+    let z0 = vec![1.0f32; 64];
+    let peak = |method: &str, h: f64| -> usize {
+        let solver = solver_by_name("reversible4").unwrap();
+        let spec = IvpSpec::fixed(0.0, 4.0, h);
+        let tracker = MemTracker::new();
+        by_name(method)
+            .unwrap()
+            .grad(&toy, &*solver, &spec, &z0, &SquareLoss, tracker.clone())
+            .unwrap();
+        tracker.peak_bytes()
+    };
+    let few = peak("mali", 0.5);
+    let many = peak("mali", 0.05);
+    assert!(
+        many <= few + 2048,
+        "mali×reversible4: memory grew {few} -> {many} with 10x steps"
+    );
+    let s_few = peak("symplectic", 0.5);
+    let s_many = peak("symplectic", 0.05);
+    assert!(
+        s_many as f64 > s_few as f64 * 5.0,
+        "symplectic×reversible4: expected tape growth, got {s_few} -> {s_many}"
+    );
 }
 
 /// The adjoint's reverse-time trajectory drifts from the true initial state

@@ -1,12 +1,13 @@
 //! Multi-observation gradient tests — the contract of the observation-grid
-//! refactor:
+//! refactor, enumerated through the shared `tests/common/methods.rs`
+//! registry so new protocols auto-enroll:
 //!
 //! * `grad_obs` matches central finite differences of `forward_loss_obs`
-//!   for **all four** methods;
-//! * MALI's continuous ψ⁻¹ injection sweep agrees with ACA/naive replay
-//!   to roundoff on the same ALF solve, and its retained memory (via
-//!   `MemTracker`) is constant in both the solver step count and the
-//!   number of observations K;
+//!   for **every** registered method;
+//! * MALI's continuous ψ⁻¹ injection sweep agrees with the ACA, naive,
+//!   and symplectic replays to roundoff on the same ALF solve, and its
+//!   retained memory (via `MemTracker`) is constant in both the solver
+//!   step count and the number of observations K;
 //! * the centralized path reproduces the legacy segment-wise latent-ODE
 //!   loop (loss, `dL/dθ`, `dL/dz₀`) within tolerance in fixed and
 //!   adaptive modes while spending strictly fewer `f` evaluations;
@@ -30,23 +31,10 @@ use mali_ode::util::mem::MemTracker;
 use mali_ode::util::rng::Rng;
 use std::cell::RefCell;
 
-const METHODS: [&str; 4] = ["mali", "aca", "naive", "adjoint"];
+#[path = "common/methods.rs"]
+mod methods;
 
-/// MALI needs ψ⁻¹ (ALF); the adjoint reverse solve runs the RK pairing.
-fn solver_for(method: &str) -> &'static str {
-    match method {
-        "adjoint" => "heun-euler",
-        _ => "alf",
-    }
-}
-
-fn l2(a: &[f32], b: &[f32]) -> f64 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| ((x - y) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt()
-}
+use methods::{l2, solver_for, EXACT_METHODS, METHODS};
 
 /// max |a - b| / max(1, max |b|)
 fn rel(a: &[f32], b: &[f32]) -> f64 {
@@ -124,48 +112,51 @@ fn grad_obs_matches_finite_differences_all_methods() {
     }
 }
 
-/// MALI's continuous injection sweep == ACA == naive to roundoff on the
-/// same ALF solve (all three backprop through the same accepted steps
-/// with exact states), in fixed and adaptive modes.
+/// MALI's continuous injection sweep == ACA == naive == symplectic to
+/// roundoff on the same solve (the exact set backprops through the same
+/// accepted steps with exact states), in fixed and adaptive modes — on
+/// ALF and on the reversible-4 composition.
 #[test]
 fn mali_aca_naive_obs_agree() {
     let mut rng = Rng::new(42);
     let dynamics = MlpDynamics::new(5, 7, &mut rng);
     let z0: Vec<f32> = (0..5).map(|i| 0.25 * i as f32 - 0.5).collect();
-    let solver = solver_by_name("alf").unwrap();
     let grid = ObsGrid::new(vec![0.3, 0.55, 0.8]).unwrap();
     let head = ObsSquareLoss {
         weights: vec![1.0, 0.5, 2.0],
     };
-    for spec in [
-        IvpSpec::fixed(0.0, 0.8, 0.1),
-        IvpSpec::adaptive(0.0, 0.8, 1e-3, 1e-5),
-    ] {
-        let results: Vec<ObsGradResult> = ["mali", "aca", "naive"]
-            .iter()
-            .map(|m| {
-                by_name(m)
-                    .unwrap()
-                    .grad_obs(&dynamics, &*solver, &spec, &grid, &z0, &head, MemTracker::new())
-                    .unwrap()
-            })
-            .collect();
-        for r in &results[1..] {
-            assert!((r.loss - results[0].loss).abs() < 1e-6);
-            for k in 0..grid.len() {
-                assert!((r.obs_losses[k] - results[0].obs_losses[k]).abs() < 1e-6);
+    for sname in ["alf", "reversible4"] {
+        let solver = solver_by_name(sname).unwrap();
+        for spec in [
+            IvpSpec::fixed(0.0, 0.8, 0.1),
+            IvpSpec::adaptive(0.0, 0.8, 1e-3, 1e-5),
+        ] {
+            let results: Vec<ObsGradResult> = EXACT_METHODS
+                .iter()
+                .map(|m| {
+                    by_name(m)
+                        .unwrap()
+                        .grad_obs(&dynamics, &*solver, &spec, &grid, &z0, &head, MemTracker::new())
+                        .unwrap()
+                })
+                .collect();
+            for r in &results[1..] {
+                assert!((r.loss - results[0].loss).abs() < 1e-6, "{sname}");
+                for k in 0..grid.len() {
+                    assert!((r.obs_losses[k] - results[0].obs_losses[k]).abs() < 1e-6);
+                }
+                assert!(
+                    l2(&r.grad_theta, &results[0].grad_theta) < 1e-4,
+                    "{sname} θ mismatch {}",
+                    l2(&r.grad_theta, &results[0].grad_theta)
+                );
+                assert!(l2(&r.grad_z0, &results[0].grad_z0) < 1e-4, "{sname}");
             }
-            assert!(
-                l2(&r.grad_theta, &results[0].grad_theta) < 1e-4,
-                "θ mismatch {}",
-                l2(&r.grad_theta, &results[0].grad_theta)
-            );
-            assert!(l2(&r.grad_z0, &results[0].grad_z0) < 1e-4);
-        }
-        // MALI reconstructs z₀ through the whole multi-observation span
-        let rec = results[0].reconstructed_z0.as_ref().unwrap();
-        for (r, z) in rec.iter().zip(&z0) {
-            assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "ψ⁻¹ recon");
+            // MALI reconstructs z₀ through the whole multi-observation span
+            let rec = results[0].reconstructed_z0.as_ref().unwrap();
+            for (r, z) in rec.iter().zip(&z0) {
+                assert!((r - z).abs() < 1e-3 * (1.0 + z.abs()), "{sname} ψ⁻¹ recon");
+            }
         }
     }
 }

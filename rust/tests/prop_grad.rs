@@ -1,15 +1,18 @@
-//! FD fuzz harness for the gradient protocols after the workspace
-//! refactor: seeded-random `LinearToy`-family dynamics × all four
-//! gradient methods × {fixed, adaptive} stepping × {empty, random}
-//! observation grids, cross-checked against
+//! FD fuzz harness for the gradient protocols: seeded-random
+//! `LinearToy`-family dynamics × every registered `GradMethod` ×
+//! {fixed, adaptive} stepping × {empty, random} observation grids —
+//! enumerated through the shared `tests/common/methods.rs` registry, so
+//! a new protocol or solver auto-enrolls — cross-checked against
 //!
 //! * the toy problem's **analytic** gradients (paper Eq. 7) — the
-//!   tightest anchor, valid in both stepping modes;
+//!   tightest anchor, valid in both stepping modes, checked over every
+//!   supported method × solver pair of the grid;
 //! * **central finite differences** of the end-to-end loss on fixed
 //!   grids (perturbed runs share the discretization, so FD measures the
 //!   discrete gradient the methods actually compute);
-//! * cross-method agreement: MALI ≡ ACA ≡ naive to roundoff (≲ 1e-4
-//!   relative) on the same ALF solve, in every fuzzed configuration.
+//! * cross-method agreement: the exact set (MALI ≡ ACA ≡ naive ≡
+//!   symplectic) to roundoff (≲ 1e-4 relative) on the same ALF solve,
+//!   in every fuzzed configuration.
 //!
 //! Tolerances follow the envelopes validated in `tests/grad_methods.rs`
 //! and `tests/obs_grid.rs` (FD ≲ 2e-2·(1+|fd|) at ε = 1e-2 on f32
@@ -17,55 +20,23 @@
 //!
 //! The native fused-dynamics backend (`dynamics_native::MlpDynamics`)
 //! gets the same treatment: random depths/widths × all three time
-//! conditioning modes × all four methods × {fixed, adaptive} × random
+//! conditioning modes × every method × {fixed, adaptive} × random
 //! observation grids, FD-checked on the shared fixed discretization.
 
-use mali_ode::grad::{
-    by_name, forward_loss, forward_loss_obs, IvpSpec, ObsGrid, ObsSquareLoss, SquareLoss,
-};
+use mali_ode::grad::{by_name, forward_loss, forward_loss_obs, IvpSpec, ObsSquareLoss, SquareLoss};
 use mali_ode::solvers::by_name as solver_by_name;
 use mali_ode::solvers::dynamics::{Dynamics, LinearToy, MlpDynamics};
 use mali_ode::util::mem::MemTracker;
 use mali_ode::util::rng::Rng;
 
-const METHODS: [&str; 4] = ["mali", "aca", "naive", "adjoint"];
+#[path = "common/methods.rs"]
+mod methods;
 
-fn solver_for(method: &str) -> &'static str {
-    match method {
-        "adjoint" => "heun-euler",
-        _ => "alf",
-    }
-}
+use methods::{l2, random_grid, solver_for, EXACT_METHODS, METHODS};
 
-fn l2(a: &[f32], b: &[f32]) -> f64 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| ((x - y) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt()
-}
-
-/// Random observation grid: 1–3 strictly increasing times inside
-/// `(0, t1]`, sometimes ending exactly at `t1`.
-fn random_grid(rng: &mut Rng, t1: f64) -> ObsGrid {
-    let k = 1 + rng.below(3);
-    let mut times: Vec<f64> = Vec::with_capacity(k);
-    let mut lo = 0.15 * t1;
-    for i in 0..k {
-        let hi = t1 * (i as f64 + 1.0) / k as f64;
-        let t = if i + 1 == k && rng.below(2) == 0 {
-            t1
-        } else {
-            rng.range(lo, hi.max(lo + 1e-3))
-        };
-        times.push(t.min(t1));
-        lo = times[i] + 1e-3;
-    }
-    ObsGrid::new(times).unwrap()
-}
-
-/// Terminal-loss fuzz on the toy family: every method recovers the
-/// analytic gradients (Eq. 7) in both stepping modes.
+/// Terminal-loss fuzz on the toy family: every supported method × solver
+/// pair of the registry grid recovers the analytic gradients (Eq. 7) in
+/// both stepping modes.
 #[test]
 fn fuzz_toy_terminal_gradients_match_analytic() {
     let mut rng = Rng::new(7001);
@@ -84,8 +55,8 @@ fn fuzz_toy_terminal_gradients_match_analytic() {
         let z0_scale = 1.0 + dz0_true.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max);
         let a_scale = 1.0 + dalpha_true.abs();
 
-        for (mi, method) in METHODS.iter().enumerate() {
-            let solver = solver_by_name(solver_for(method)).unwrap();
+        for (mi, &(method, sname)) in methods::pairs().iter().enumerate() {
+            let solver = solver_by_name(sname).unwrap();
             let mode_fixed = (trial + mi) % 2 == 0;
             let spec = if mode_fixed {
                 IvpSpec::fixed(0.0, t_end, 0.02)
@@ -98,12 +69,12 @@ fn fuzz_toy_terminal_gradients_match_analytic() {
                 .unwrap();
             assert!(
                 (r.grad_theta[0] as f64 - dalpha_true).abs() < 0.05 * a_scale,
-                "trial {trial} {method}: dα {} vs analytic {dalpha_true}",
+                "trial {trial} {method}×{sname}: dα {} vs analytic {dalpha_true}",
                 r.grad_theta[0]
             );
             assert!(
                 l2(&r.grad_z0, &dz0_true) < 0.05 * z0_scale,
-                "trial {trial} {method}: dz₀ err {}",
+                "trial {trial} {method}×{sname}: dz₀ err {}",
                 l2(&r.grad_z0, &dz0_true)
             );
         }
@@ -152,7 +123,11 @@ fn fuzz_toy_obs_gradients() {
             let max_abs = |xs: &[f32]| {
                 1.0 + xs.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max)
             };
-            for (method, r) in &results[1..3] {
+            for (method, r) in results
+                .iter()
+                .skip(1)
+                .filter(|(m, _)| EXACT_METHODS.contains(m))
+            {
                 assert!(
                     l2(&r.grad_theta, &mali.grad_theta) < 1e-4 * max_abs(&mali.grad_theta),
                     "trial {trial} {label} {method} vs mali θ"
@@ -326,7 +301,11 @@ fn fuzz_native_mlp_obs_gradients() {
             let max_abs = |xs: &[f32]| {
                 1.0 + xs.iter().map(|&x| (x as f64).abs()).fold(0.0, f64::max)
             };
-            for (method, r) in &results[1..3] {
+            for (method, r) in results
+                .iter()
+                .skip(1)
+                .filter(|(m, _)| EXACT_METHODS.contains(m))
+            {
                 assert!(
                     l2(&r.grad_theta, &mali.grad_theta) < 1e-3 * max_abs(&mali.grad_theta),
                     "trial {trial} {label} {method} vs mali θ"

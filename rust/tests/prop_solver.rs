@@ -9,7 +9,9 @@
 //!   bitwise, in fixed and adaptive mode, with and without observation
 //!   grids;
 //! * ALF's ψ∘ψ⁻¹ round trip stays exact to float roundoff across random
-//!   configurations;
+//!   configurations, and the reversible-4 composition Ψ = ψ∘ψ∘ψ inherits
+//!   it (Ψ⁻¹∘Ψ = id within a roundoff envelope, every `_into` entry
+//!   point bitwise equal to its allocating wrapper under dirty reuse);
 //! * batched adaptive integration stays decision-identical to solo runs
 //!   row for row on random batches.
 
@@ -22,6 +24,7 @@ use mali_ode::solvers::integrate::{
     integrate, integrate_batch, integrate_batch_ws, integrate_obs, integrate_obs_ws,
     BatchGridRecorder, ErrorNorm, GridRecorder, ObsGrid, StepMode,
 };
+use mali_ode::solvers::reversible::Reversible4;
 use mali_ode::solvers::rk::{RkSolver, Tableau};
 use mali_ode::solvers::workspace::{BatchWorkspace, SolverWorkspace};
 use mali_ode::solvers::{Solver, State};
@@ -338,6 +341,186 @@ fn alf_psi_roundtrip_random_configs() {
         solver.psi_inv_into(&dynamics, t + h, h, &z1, &v1, &mut z0_ws, &mut v0_ws, &mut ws);
         assert_eq!(z0_ws, z0, "trial {trial}");
         assert_eq!(v0_ws, v0, "trial {trial}");
+    }
+}
+
+/// Every reversible-4 entry point: `_into` output bitwise equal to the
+/// allocating wrapper, across random dims / times / steps / damping, with
+/// a deliberately dirty reused workspace and dirty output buffers — the
+/// triple-jump composition must honor the same take/restore workspace
+/// contract as the ALF kernels it chains.
+#[test]
+fn reversible4_workspace_bitwise_equals_allocating() {
+    let mut rng = Rng::new(909);
+    let mut ws = SolverWorkspace::new(); // deliberately reused (dirty) across trials
+    for trial in 0..24 {
+        let n = 1 + rng.below(6);
+        let eta = [1.0, 1.0, 0.95, 0.9][rng.below(4)];
+        let solver = Reversible4::new(eta);
+        let dynamics: Box<dyn Dynamics> = if trial % 2 == 0 {
+            Box::new(LinearToy::new(rng.range(-1.0, 1.0), n))
+        } else {
+            Box::new(MlpDynamics::new(n, 2 + rng.below(5), &mut rng))
+        };
+        let d = &*dynamics;
+        let t = rng.range(-1.0, 1.0);
+        let h = rng.range(0.01, 0.4);
+        let s = {
+            let mut z = vec![0.0f32; n];
+            rng.fill_uniform_sym(&mut z, 1.0);
+            let v = d.f(t, &z);
+            State { z, v: Some(v) }
+        };
+        let a_out = rand_state(&mut rng, n, trial % 3 != 0);
+
+        // step (Ψ = ψ∘ψ∘ψ)
+        let (want, want_err) = solver.step(d, t, h, &s);
+        let mut out = rand_state(&mut rng, n, false); // dirty output buffer
+        let mut err = vec![7.0f32; 1];
+        let has_err = solver.step_into(d, t, h, &s, &mut out, &mut err, &mut ws);
+        assert!(has_err, "trial {trial}");
+        assert_eq!(out, want, "step trial {trial}");
+        assert_eq!(Some(err.clone()), want_err, "step err trial {trial}");
+
+        // step_vjp (θ-accumulation starts from zero on both paths)
+        let (want_a, want_th) = solver.step_vjp(d, t, h, &s, &a_out);
+        let mut a_in = rand_state(&mut rng, n, false);
+        let mut th = vec![0.0f32; d.param_dim()];
+        solver.step_vjp_into(d, t, h, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "step_vjp trial {trial}");
+        assert_eq!(th, want_th, "step_vjp θ trial {trial}");
+
+        // invert (Ψ⁻¹ = ψ⁻¹∘ψ⁻¹∘ψ⁻¹, reversed sub-step order)
+        let want_inv = solver.invert(d, t + h, h, &s).unwrap();
+        let mut inv = rand_state(&mut rng, n, false);
+        assert!(solver.invert_into(d, t + h, h, &s, &mut inv, &mut ws));
+        assert_eq!(inv, want_inv, "invert trial {trial}");
+
+        // invert_and_vjp (MALI backward micro-step on the composition)
+        let (want_s, want_a, want_th) = solver.invert_and_vjp(d, t + h, h, &s, &a_out).unwrap();
+        let mut s_in = rand_state(&mut rng, n, false);
+        let mut a_in = rand_state(&mut rng, n, false);
+        let mut th = vec![0.0f32; d.param_dim()];
+        let ok = solver.invert_and_vjp_into(
+            d, t + h, h, &s, &a_out, &mut s_in, &mut a_in, &mut th, &mut ws,
+        );
+        assert!(ok);
+        assert_eq!(s_in, want_s, "invert_and_vjp s trial {trial}");
+        assert_eq!(a_in, want_a, "invert_and_vjp a trial {trial}");
+        assert_eq!(th, want_th, "invert_and_vjp θ trial {trial}");
+    }
+}
+
+/// Batched reversible-4 entry points: `_into` bitwise equal to the
+/// allocating batch wrappers under desynchronized per-row `(t, h)` with a
+/// dirty reused workspace, including the composed
+/// `invert_and_vjp_batch` (which routes both paths through the same
+/// batched sub-step kernels).
+#[test]
+fn reversible4_batch_workspace_bitwise_equals_allocating() {
+    let mut rng = Rng::new(1001);
+    let mut ws = BatchWorkspace::new();
+    for trial in 0..12 {
+        let b = 1 + rng.below(4);
+        let n_z = 1 + rng.below(4);
+        let spec = BatchSpec::new(b, n_z);
+        let dynamics: Box<dyn Dynamics> = if trial % 2 == 0 {
+            Box::new(LinearToy::new(rng.range(-1.0, 1.0), n_z))
+        } else {
+            Box::new(MlpDynamics::new(n_z, 2 + rng.below(4), &mut rng))
+        };
+        let d = &*dynamics;
+        let solver = Reversible4::new([1.0, 0.9][trial % 2]);
+        let ts: Vec<f64> = (0..b).map(|_| rng.range(-1.0, 1.0)).collect();
+        let hs: Vec<f64> = (0..b).map(|_| rng.range(0.02, 0.3)).collect();
+        let mut z = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut z, 1.0);
+        let v = d.f_batch(&ts, &z, &spec);
+        let s = BatchState::from_flat_zv(z.clone(), v, spec);
+        let mut az = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut az, 1.0);
+        let mut av = vec![0.0f32; spec.flat_len()];
+        rng.fill_uniform_sym(&mut av, 1.0);
+        let a_out = BatchState::from_flat_zv(az, av, spec);
+
+        let (want, want_err) = solver.step_batch(d, &ts, &hs, &s);
+        let mut out = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut err = vec![7.0f32; 2]; // dirty, wrong-sized error buffer
+        assert!(solver.step_batch_into(d, &ts, &hs, &s, &mut out, &mut err, &mut ws));
+        assert_eq!(out, want, "step_batch trial {trial}");
+        assert_eq!(Some(err.clone()), want_err, "step_batch err {trial}");
+
+        let (want_a, want_th) = solver.step_vjp_batch(d, &ts, &hs, &s, &a_out);
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th = vec![0.0f32; d.param_dim()];
+        solver.step_vjp_batch_into(d, &ts, &hs, &s, &a_out, &mut a_in, &mut th, &mut ws);
+        assert_eq!(a_in, want_a, "step_vjp_batch {trial}");
+        assert_eq!(th, want_th, "step_vjp_batch θ {trial}");
+
+        let ts_out: Vec<f64> = ts.iter().zip(&hs).map(|(&t, &h)| t + h).collect();
+        let want_inv = solver.invert_batch(d, &ts_out, &hs, &s).unwrap();
+        let mut inv = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        assert!(solver.invert_batch_into(d, &ts_out, &hs, &s, &mut inv, &mut ws));
+        assert_eq!(inv, want_inv, "invert_batch {trial}");
+
+        let (want_s, want_a, want_th) = solver
+            .invert_and_vjp_batch(d, &ts_out, &hs, &s, &a_out)
+            .unwrap();
+        let mut s_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut a_in = BatchState::from_flat(vec![0.0f32; spec.flat_len()], spec);
+        let mut th = vec![0.0f32; d.param_dim()];
+        assert!(solver.invert_and_vjp_batch_into(
+            d, &ts_out, &hs, &s, &a_out, &mut s_in, &mut a_in, &mut th, &mut ws
+        ));
+        assert_eq!(s_in, want_s, "invert_and_vjp_batch s {trial}");
+        assert_eq!(a_in, want_a, "invert_and_vjp_batch a {trial}");
+        assert_eq!(th, want_th, "invert_and_vjp_batch θ {trial}");
+    }
+}
+
+/// The composed inverse undoes the composed step across random
+/// configurations: Ψ⁻¹(Ψ(z, v)) = (z, v) within the same roundoff
+/// envelope ALF's single-step roundtrip satisfies — the invariant that
+/// lets MALI run its constant-memory reconstruction on the 4th-order
+/// solver unchanged.
+#[test]
+fn reversible4_roundtrip_random_configs() {
+    let mut rng = Rng::new(1102);
+    let mut ws = SolverWorkspace::new();
+    for trial in 0..20 {
+        let n = 1 + rng.below(6);
+        let eta = [1.0, 1.0, 0.9, 0.8][rng.below(4)];
+        let solver = Reversible4::new(eta);
+        let dynamics = MlpDynamics::new(n, 2 + rng.below(6), &mut rng);
+        let t = rng.range(-1.0, 1.0);
+        let h = rng.range(0.01, 0.3);
+        let s = {
+            let mut z = vec![0.0f32; n];
+            rng.fill_uniform_sym(&mut z, 1.0);
+            let v = dynamics.f(t, &z);
+            State { z, v: Some(v) }
+        };
+
+        let mut out = rand_state(&mut rng, n, false);
+        let mut err = vec![0.0f32; 1];
+        solver.step_into(&dynamics, t, h, &s, &mut out, &mut err, &mut ws);
+        let mut back = rand_state(&mut rng, n, false);
+        assert!(solver.invert_into(&dynamics, t + h, h, &out, &mut back, &mut ws));
+        let (sv, bv) = (s.v.as_ref().unwrap(), back.v.as_ref().unwrap());
+        for i in 0..n {
+            assert!(
+                (back.z[i] - s.z[i]).abs() < 1e-4 * (1.0 + s.z[i].abs()),
+                "trial {trial} z[{i}]: {} vs {}",
+                back.z[i],
+                s.z[i]
+            );
+            assert!(
+                (bv[i] - sv[i]).abs() < 1e-4 * (1.0 + sv[i].abs()),
+                "trial {trial} v[{i}]: {} vs {}",
+                bv[i],
+                sv[i]
+            );
+        }
     }
 }
 
